@@ -1,0 +1,47 @@
+//! Bucket-size sweep (Table 3 in miniature): accuracy of ORQ-3 vs
+//! TernGrad as the bucket size d grows — ORQ should degrade more slowly.
+//!
+//! Run: `cargo run --release --example bucket_sweep -- [--steps N]`
+
+use orq::bench::print_rows;
+use orq::cli::Args;
+use orq::config::TrainConfig;
+use orq::coordinator::trainer::{native_backend_factory, Trainer};
+use orq::data::synth::{ClassDataset, DatasetSpec};
+
+fn main() -> orq::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let steps = args.get_parse::<usize>("steps")?.unwrap_or(250);
+
+    let ds = ClassDataset::generate(DatasetSpec::cifar10_like(64));
+    let buckets = [128usize, 512, 2048, 8192, 32768];
+    let mut rows = Vec::new();
+    for method in ["terngrad", "orq-3"] {
+        let mut row = vec![method.to_string()];
+        for &d in &buckets {
+            let cfg = TrainConfig {
+                model: "mlp:64-192-192-10".into(),
+                dataset: "cifar10".into(),
+                method: method.into(),
+                steps,
+                batch: 64,
+                bucket_size: d,
+                eval_every: 0,
+                lr: 0.08,
+                lr_decay_steps: vec![steps / 2, steps * 3 / 4],
+                ..TrainConfig::default()
+            };
+            let factory = native_backend_factory(&cfg.model)?;
+            let out = Trainer::new(cfg, &ds)?.run(factory)?;
+            row.push(format!("{:.2}", out.summary.test_top1 * 100.0));
+        }
+        rows.push(row);
+        println!("{method}: swept {} bucket sizes", buckets.len());
+    }
+    let labels: Vec<String> = buckets.iter().map(|b| b.to_string()).collect();
+    let mut header = vec!["method"];
+    header.extend(labels.iter().map(|s| s.as_str()));
+    print_rows("bucket_sweep — CIFAR-10(-like) top-1 (%) vs bucket size d", &header, &rows);
+    println!("\nSmaller buckets → finer level tables → higher accuracy; ORQ-3 is more resilient to large d (Table 3).");
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Figure-1-style gradient histograms: quantize one real mid-training
+//! gradient with every method and dump the normalized distributions.
+//!
+//! Run: `cargo run --release --example grad_histogram -- [--out DIR]`
+
+use orq::cli::Args;
+use orq::config::TrainConfig;
+use orq::coordinator::trainer::{native_backend_factory, Trainer};
+use orq::data::synth::{ClassDataset, DatasetSpec};
+use orq::metrics::histogram::Histogram;
+use orq::quant::bucket::BucketQuantizer;
+use orq::tensor::rng::Rng;
+
+fn main() -> orq::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let outdir = args.get_or("out", "artifacts/results").to_string();
+
+    // Warm up a model so the gradient has realistic (non-init) structure.
+    let ds = ClassDataset::generate(DatasetSpec::cifar100_like(64));
+    let cfg = TrainConfig {
+        model: "mlp:64-192-192-100".into(),
+        method: "fp".into(),
+        steps: 80,
+        batch: 64,
+        eval_every: 0,
+        lr_decay_steps: vec![],
+        ..TrainConfig::default()
+    };
+    let factory = native_backend_factory(&cfg.model)?;
+    let out = Trainer::new(cfg, &ds)?.run(&factory)?;
+
+    let mut backend = factory(0);
+    let mut grad = vec![0.0f32; out.params.len()];
+    let mut rng = Rng::seed_from(5);
+    let batch = ds.train_batch(64, &mut rng);
+    backend.loss_grad(&out.params, &batch, &mut grad);
+
+    std::fs::create_dir_all(&outdir)?;
+    let h_fp = Histogram::sigma_range(&grad, 2.5, 81);
+    h_fp.write_csv(&format!("{outdir}/hist_fp.csv"))?;
+    println!("FP gradient: {} elements, histogram → {outdir}/hist_fp.csv", grad.len());
+
+    let bq = BucketQuantizer::new(2048);
+    for method in ["qsgd-9", "orq-9", "linear-9", "bingrad-pb", "bingrad-b", "terngrad"] {
+        let q = orq::quant::from_name(method)?;
+        let qg = bq.quantize(&grad, q.as_ref(), &mut rng);
+        let mut h = Histogram::new(h_fp.lo, h_fp.hi, 81);
+        h.fill(&qg.dequantize());
+        h.write_csv(&format!("{outdir}/hist_{method}.csv"))?;
+        let e = orq::quant::error::measure(&grad, &qg);
+        println!(
+            "{method:<11} relMSE={:.5}  cosine={:.5}  hist occupancy={:.1}%",
+            e.rel_mse,
+            e.cosine,
+            h.occupancy() * 100.0
+        );
+    }
+    println!("\nPlot the CSVs (center vs normalized) to reproduce Figure 1.");
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Quickstart: train a small classifier with ORQ-quantized gradients and
+//! compare against full-precision — the 60-second tour of the public API.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use orq::bench::print_rows;
+use orq::config::TrainConfig;
+use orq::coordinator::trainer::{native_backend_factory, Trainer};
+use orq::data::synth::{ClassDataset, DatasetSpec};
+
+fn main() -> orq::Result<()> {
+    // 1. A synthetic 100-class task (CIFAR-100 stand-in, DESIGN.md §3).
+    let ds = ClassDataset::generate(DatasetSpec::cifar100_like(64));
+
+    // 2. One config per method; everything else identical.
+    let mut rows = Vec::new();
+    for method in ["fp", "terngrad", "orq-3", "qsgd-5", "orq-5"] {
+        let cfg = TrainConfig {
+            model: "mlp:64-128-128-100".into(),
+            method: method.into(),
+            steps: 200,
+            batch: 64,
+            lr: 0.08,
+            lr_decay_steps: vec![120, 170],
+            eval_every: 0,
+            ..TrainConfig::default()
+        };
+        // 3. Train through the full coordinator: quantize → encode →
+        //    simulated 10 Gbps wire → decode → average → SGD.
+        let factory = native_backend_factory(&cfg.model)?;
+        let out = Trainer::new(cfg, &ds)?.run(factory)?;
+        let s = out.summary;
+        rows.push(vec![
+            method.to_string(),
+            format!("×{:.1}", s.compression_ratio),
+            format!("{:.2}%", s.test_top1 * 100.0),
+            format!("{:.4}", s.mean_quant_rel_mse),
+            orq::util::fmt::bytes(s.total_wire_bytes),
+        ]);
+    }
+    print_rows(
+        "quickstart — 200 steps, 1 worker, d=2048",
+        &["method", "compression", "top-1", "quant relMSE", "wire bytes"],
+        &rows,
+    );
+    println!("\nNote the ordering: orq-s ≥ qsgd-s/terngrad at equal compression — Theorem 1 at work.");
+    Ok(())
+}

@@ -1,0 +1,106 @@
+"""AOT export: lower every requested model to HLO *text* + a meta manifest.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+re-assigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per model ``<name>``:
+  artifacts/<name>.grad.hlo.txt   (flat_params, *batch) -> (loss, flat_grad)
+  artifacts/<name>.fwd.hlo.txt    (flat_params, x|tokens) -> (logits,)
+  artifacts/meta.json             manifest consumed by rust/src/runtime
+
+Run via ``make artifacts`` (no-op when inputs are unchanged). Python never
+runs again after this step — the Rust binary is self-contained.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import param_count, registry
+
+DEFAULT_MODELS = ["mlp_s", "transformer_s"]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_model(name: str, outdir: str) -> dict:
+    mdef = registry()[name]()
+    p = param_count(mdef.sections)
+    flat = jax.ShapeDtypeStruct((p,), jax.numpy.float32)
+
+    grad_path = os.path.join(outdir, f"{name}.grad.hlo.txt")
+    fwd_path = os.path.join(outdir, f"{name}.fwd.hlo.txt")
+
+    print(f"[aot] {name}: lowering grad ({p:,} params) ...", flush=True)
+    grad_hlo = to_hlo_text(jax.jit(mdef.grad_fn).lower(flat, *mdef.grad_args))
+    with open(grad_path, "w") as f:
+        f.write(grad_hlo)
+
+    print(f"[aot] {name}: lowering fwd ...", flush=True)
+    fwd_hlo = to_hlo_text(jax.jit(mdef.predict_fn).lower(flat, *mdef.predict_args))
+    with open(fwd_path, "w") as f:
+        f.write(fwd_hlo)
+
+    def arg_desc(s):
+        return {"shape": list(s.shape), "dtype": s.dtype.name}
+
+    return {
+        "name": name,
+        "kind": mdef.kind,
+        "param_count": p,
+        "grad_hlo": os.path.basename(grad_path),
+        "fwd_hlo": os.path.basename(fwd_path),
+        "grad_args": [arg_desc(s) for s in mdef.grad_args],
+        "predict_args": [arg_desc(s) for s in mdef.predict_args],
+        "sections": [
+            {
+                "name": s.name,
+                "shape": list(s.shape),
+                "init": s.init,
+                "fan_in": s.fan_in,
+                "size": s.size,
+            }
+            for s in mdef.sections
+        ],
+        "config": mdef.meta,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/meta.json",
+                    help="path of the meta manifest; HLO files go next to it")
+    ap.add_argument("--models", default=",".join(DEFAULT_MODELS),
+                    help="comma-separated model names from the registry")
+    args = ap.parse_args(argv)
+
+    outdir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(outdir, exist_ok=True)
+    names = [n for n in args.models.split(",") if n]
+    unknown = sorted(set(names) - set(registry()))
+    if unknown:
+        print(f"[aot] unknown models: {unknown}; known: {sorted(registry())}")
+        return 2
+
+    manifest = {"models": [export_model(n, outdir) for n in names]}
+    with open(args.out, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote {args.out} ({len(names)} models)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels for the ORQ/BinGrad stack.
+
+All kernels are authored with ``interpret=True`` so the lowered HLO contains
+plain ops runnable on any PJRT backend (the Rust CPU client in particular).
+Each kernel has a pure-jnp oracle in :mod:`compile.kernels.ref`; the pytest
+suite asserts elementwise agreement across shapes and dtypes.
+"""
+
+from .dense import dense, matmul_pallas
+from .quant_stats import bucket_stats
+from .quantize import stochastic_quantize
+
+__all__ = ["dense", "matmul_pallas", "bucket_stats", "stochastic_quantize"]

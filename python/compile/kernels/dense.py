@@ -1,0 +1,203 @@
+"""Fused dense layer (matmul + bias + activation) as a Pallas kernel.
+
+This is the model's compute hot spot: every MLP layer and every transformer
+projection routes through :func:`dense`.  The kernel is tile-blocked the way
+a TPU implementation would be:
+
+* grid ``(M/bm, N/bn, K/bk)`` — the K axis is the innermost (fastest) grid
+  dimension so the f32 accumulator block stays resident in VMEM across the
+  K loop (output ``BlockSpec`` maps every k step to the same (i, j) block);
+* block sizes are chosen as the largest divisors ≤ 128 of each dim, i.e.
+  MXU-shaped (128, 128) tiles whenever the model dims allow it;
+* bias add + activation are fused into the final K step, so the activation
+  never round-trips through HBM.
+
+``interpret=True`` keeps the lowering CPU-runnable (plain HLO, no Mosaic
+custom-call); the BlockSpec structure is what we cost for the TPU estimate
+in DESIGN.md §Hardware-Adaptation.
+
+``jax.grad`` cannot differentiate through ``pallas_call``, so :func:`dense`
+carries a ``custom_vjp`` whose backward pass reuses the same Pallas matmul
+kernel for ``dx = dz @ W^T`` and ``dW = x^T @ dz``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Activations supported by the fused kernel. "linear" is identity.
+ACTIVATIONS = ("linear", "relu", "gelu", "tanh")
+
+
+def _act(z, activation):
+    if activation == "linear":
+        return z
+    if activation == "relu":
+        return jnp.maximum(z, 0.0)
+    if activation == "gelu":
+        # tanh-approximation GELU (same formula in ref.py and in the Rust
+        # native backend so all three agree bit-for-bit-ish).
+        c = jnp.sqrt(2.0 / jnp.pi).astype(z.dtype)
+        return 0.5 * z * (1.0 + jnp.tanh(c * (z + 0.044715 * z**3)))
+    if activation == "tanh":
+        return jnp.tanh(z)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def _act_grad(z, activation):
+    """d activation / d z evaluated at pre-activation z."""
+    if activation == "linear":
+        return jnp.ones_like(z)
+    if activation == "relu":
+        return (z > 0.0).astype(z.dtype)
+    if activation == "gelu":
+        c = jnp.sqrt(2.0 / jnp.pi).astype(z.dtype)
+        u = c * (z + 0.044715 * z**3)
+        t = jnp.tanh(u)
+        du = c * (1.0 + 3 * 0.044715 * z**2)
+        return 0.5 * (1.0 + t) + 0.5 * z * (1.0 - t**2) * du
+    if activation == "tanh":
+        return 1.0 - jnp.tanh(z) ** 2
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def _block(dim: int, target: int = 128) -> int:
+    """Largest divisor of ``dim`` that is ≤ target (MXU-tile shaped)."""
+    if dim <= target:
+        return dim
+    for b in range(target, 0, -1):
+        if dim % b == 0:
+            return b
+    return dim
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk):
+    """Blocked matmul with VMEM-resident accumulation over the K grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+    del nk  # epilogue handled by the fused variant
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, nk, activation):
+    """Matmul + fused bias/activation epilogue on the last K step."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = _act(o_ref[...] + b_ref[...], activation)
+
+
+def _matmul_impl(x, w):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"matmul shape mismatch {x.shape} @ {w.shape}"
+    bm, bn, bk = _block(m), _block(n), _block(k)
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+@jax.custom_vjp
+def matmul_pallas(x, w):
+    """Pallas blocked matmul ``x @ w`` (no bias, no activation).
+
+    Differentiable: ``pallas_call`` has no JVP rule, so the VJP is supplied
+    explicitly — both cotangent matmuls reuse the same Pallas kernel.
+    Shapes must be 2-D; any dims work because blocks are chosen as divisors.
+    """
+    return _matmul_impl(x, w)
+
+
+def _matmul_vjp_fwd(x, w):
+    return _matmul_impl(x, w), (x, w)
+
+
+def _matmul_vjp_bwd(res, dy):
+    x, w = res
+    return _matmul_impl(dy, w.T), _matmul_impl(x.T, dy)
+
+
+matmul_pallas.defvjp(_matmul_vjp_fwd, _matmul_vjp_bwd)
+
+
+def _dense_fwd_impl(x, w, b, activation):
+    m, k = x.shape
+    _, n = w.shape
+    bm, bn, bk = _block(m), _block(n), _block(k)
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_dense_kernel, nk=nk, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, b.reshape(1, n))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x, w, b, activation="relu"):
+    """Fused ``activation(x @ w + b)`` with a Pallas forward and backward.
+
+    Args:
+      x: ``f32[M, K]`` input activations.
+      w: ``f32[K, N]`` weights.
+      b: ``f32[N]`` bias.
+      activation: one of :data:`ACTIVATIONS`.
+
+    Returns:
+      ``f32[M, N]``.
+    """
+    return _dense_fwd_impl(x, w, b, activation)
+
+
+def _dense_vjp_fwd(x, w, b, activation):
+    # Save the pre-activation z for the activation gradient; recomputing it
+    # with a second Pallas matmul would double the FLOPs of the hot layer.
+    z = _dense_fwd_impl(x, w, b, "linear")
+    y = _act(z, activation)
+    return y, (x, w, z)
+
+
+def _dense_vjp_bwd(activation, res, dy):
+    x, w, z = res
+    dz = dy * _act_grad(z, activation)
+    dx = matmul_pallas(dz, w.T)
+    dw = matmul_pallas(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_vjp_fwd, _dense_vjp_bwd)

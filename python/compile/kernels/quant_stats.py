@@ -1,0 +1,48 @@
+"""Per-bucket gradient statistics as a single-pass Pallas kernel.
+
+Every level solver in the paper consumes bucket statistics before placing
+levels: TernGrad needs ``max|v|``, QSGD the bucket range, the 2.5σ clip of
+Eq. (TernGrad) needs σ, BinGrad-b's Eq. (17) fixed point starts from the
+mean, and ORQ's Algorithm 1 needs the support endpoints (Corollary 1.1).
+
+On a GPU the paper computes these with framework reductions; the TPU-shaped
+version is one HBM→VMEM sweep per bucket producing all five moments at once
+(min, max, Σv, Σv², Σ|v|), i.e. the bucket row is read exactly once.
+
+Grid: one program per bucket row; the bucket (length d = 512…32768 floats,
+2 KiB…128 KiB) fits VMEM comfortably, matching the (8, 128) VPU lane tiling.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stats_kernel(g_ref, min_ref, max_ref, sum_ref, sumsq_ref, l1_ref):
+    row = g_ref[...]
+    min_ref[...] = jnp.min(row, axis=-1, keepdims=True)
+    max_ref[...] = jnp.max(row, axis=-1, keepdims=True)
+    sum_ref[...] = jnp.sum(row, axis=-1, keepdims=True)
+    sumsq_ref[...] = jnp.sum(row * row, axis=-1, keepdims=True)
+    l1_ref[...] = jnp.sum(jnp.abs(row), axis=-1, keepdims=True)
+
+
+def bucket_stats(g):
+    """Fused per-bucket stats.
+
+    Args:
+      g: ``f32[num_buckets, d]`` bucketed flat gradient.
+
+    Returns:
+      Tuple ``(min, max, sum, sumsq, l1)``, each ``f32[num_buckets, 1]``.
+    """
+    nb, d = g.shape
+    out = jax.ShapeDtypeStruct((nb, 1), g.dtype)
+    return pl.pallas_call(
+        _stats_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, d), lambda i: (i, 0))],
+        out_specs=tuple(pl.BlockSpec((1, 1), lambda i: (i, 0)) for _ in range(5)),
+        out_shape=(out,) * 5,
+        interpret=True,
+    )(g)

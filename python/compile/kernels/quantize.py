@@ -1,0 +1,87 @@
+"""Stochastic-rounding quantization against a per-bucket level table (Pallas).
+
+This is the on-device half of the wire path: given sorted quantization
+levels ``b_{-(s-1)/2} … b_{(s-1)/2}`` per bucket (produced by any of the
+solvers — evenly spaced for TernGrad/QSGD, CDF quantiles for Linear,
+Eq. (11) optimal for ORQ), emit the random-rounding level *index* of every
+element per Eq. (7):
+
+    Q(v) = b_{k-1}  with prob (b_k - v)/(b_k - b_{k-1})
+           b_k      with prob (v - b_{k-1})/(b_k - b_{k-1})
+
+The kernel is branch-free: with s ≤ 16 levels the bracketing index is a
+broadcast compare-and-sum (``Σ_k 1[v ≥ b_k] - 1``) rather than a search —
+exactly the vectorization a TPU VPU wants (and what the Rust hot path
+mirrors with its LUT variant). Values outside the level range clamp to the
+extreme levels, which realizes the clipping semantics of BinGrad-pb
+(Eq. 14) when called with s = 2.
+
+Output is ``int32`` indices; dequantization is a gather from the level
+table (``levels[bucket, idx]``), done here for the model-side check and in
+Rust for the wire decode.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quantize_kernel(g_ref, levels_ref, u_ref, idx_ref):
+    v = g_ref[...]            # (1, d)
+    lv = levels_ref[...]      # (1, s)
+    u = u_ref[...]            # (1, d) iid U[0,1)
+
+    # Bracketing lower index: number of levels <= v, minus one, clamped so
+    # that v below b_min rounds "up" from the bottom bracket and v above
+    # b_max clamps into the top bracket.
+    s = lv.shape[-1]
+    ge = v[..., None] >= lv[:, None, :]  # (1, d, s) broadcast compare
+    lower = jnp.sum(ge.astype(jnp.int32), axis=-1) - 1
+    lower = jnp.clip(lower, 0, s - 2)
+
+    b_lo = jnp.take_along_axis(
+        jnp.broadcast_to(lv[:, None, :], ge.shape), lower[..., None], axis=-1
+    )[..., 0]
+    b_hi = jnp.take_along_axis(
+        jnp.broadcast_to(lv[:, None, :], ge.shape), lower[..., None] + 1, axis=-1
+    )[..., 0]
+
+    width = b_hi - b_lo
+    # p = prob of rounding UP to b_hi; clamp handles v outside [b_lo, b_hi]
+    # (p saturates to 0/1) and zero-width intervals.
+    p = jnp.where(width > 0, (v - b_lo) / jnp.where(width > 0, width, 1.0), 0.0)
+    p = jnp.clip(p, 0.0, 1.0)
+    idx_ref[...] = lower + (u < p).astype(jnp.int32)
+
+
+def stochastic_quantize(g, levels, u):
+    """Random-rounding quantization to per-bucket levels.
+
+    Args:
+      g: ``f32[num_buckets, d]`` bucketed gradient.
+      levels: ``f32[num_buckets, s]`` sorted levels per bucket.
+      u: ``f32[num_buckets, d]`` iid uniforms in [0, 1).
+
+    Returns:
+      ``int32[num_buckets, d]`` level indices (dequantize by gathering
+      ``levels`` at these indices).
+    """
+    nb, d = g.shape
+    _, s = levels.shape
+    return pl.pallas_call(
+        _quantize_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, s), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, d), jnp.int32),
+        interpret=True,
+    )(g, levels, u)
+
+
+def dequantize(levels, idx):
+    """Gather levels back out of the index tensor (pure jnp)."""
+    return jnp.take_along_axis(levels, idx, axis=-1)

@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+The pytest suite (``python/tests/``) asserts the Pallas kernels agree with
+these to float tolerance across hypothesis-generated shapes and dtypes.
+These are also the semantics the Rust hot path re-implements, so agreement
+here transitively pins the whole stack to one definition.
+"""
+
+import jax.numpy as jnp
+
+
+def act_ref(z, activation):
+    if activation == "linear":
+        return z
+    if activation == "relu":
+        return jnp.maximum(z, 0.0)
+    if activation == "gelu":
+        c = jnp.sqrt(2.0 / jnp.pi).astype(z.dtype)
+        return 0.5 * z * (1.0 + jnp.tanh(c * (z + 0.044715 * z**3)))
+    if activation == "tanh":
+        return jnp.tanh(z)
+    raise ValueError(activation)
+
+
+def dense_ref(x, w, b, activation="relu"):
+    """activation(x @ w + b) in plain jnp."""
+    return act_ref(x @ w + b[None, :], activation)
+
+
+def matmul_ref(x, w):
+    return x @ w
+
+
+def bucket_stats_ref(g):
+    """(min, max, sum, sumsq, l1) per bucket row, each f32[nb, 1]."""
+    return (
+        jnp.min(g, axis=-1, keepdims=True),
+        jnp.max(g, axis=-1, keepdims=True),
+        jnp.sum(g, axis=-1, keepdims=True),
+        jnp.sum(g * g, axis=-1, keepdims=True),
+        jnp.sum(jnp.abs(g), axis=-1, keepdims=True),
+    )
+
+
+def stochastic_quantize_ref(g, levels, u):
+    """Eq. (7) random rounding, vectorized jnp reference.
+
+    Identical math to the Pallas kernel: bracket via count-of-levels-≤-v,
+    round up with probability (v - b_lo)/(b_hi - b_lo), clamp outside the
+    level range.
+    """
+    nb, d = g.shape
+    s = levels.shape[-1]
+    ge = g[..., None] >= levels[:, None, :]
+    lower = jnp.clip(jnp.sum(ge.astype(jnp.int32), axis=-1) - 1, 0, s - 2)
+    b_lo = jnp.take_along_axis(levels, lower, axis=-1)
+    b_hi = jnp.take_along_axis(levels, lower + 1, axis=-1)
+    width = b_hi - b_lo
+    p = jnp.where(width > 0, (g - b_lo) / jnp.where(width > 0, width, 1.0), 0.0)
+    p = jnp.clip(p, 0.0, 1.0)
+    return lower + (u < p).astype(jnp.int32)
+
+
+def quantize_expectation_ref(g, levels):
+    """E[dequant(Q(v))] under Eq. (7) — used for unbiasedness tests.
+
+    For v inside [b_min, b_max] this equals v exactly; outside it clamps.
+    """
+    s = levels.shape[-1]
+    ge = g[..., None] >= levels[:, None, :]
+    lower = jnp.clip(jnp.sum(ge.astype(jnp.int32), axis=-1) - 1, 0, s - 2)
+    b_lo = jnp.take_along_axis(levels, lower, axis=-1)
+    b_hi = jnp.take_along_axis(levels, lower + 1, axis=-1)
+    width = b_hi - b_lo
+    p = jnp.where(width > 0, (g - b_lo) / jnp.where(width > 0, width, 1.0), 0.0)
+    p = jnp.clip(p, 0.0, 1.0)
+    return b_lo + p * width

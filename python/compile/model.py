@@ -1,0 +1,307 @@
+"""Layer-2 JAX models: forward + loss + backward over ONE flat parameter vector.
+
+The Rust coordinator owns the optimizer and the quantized-communication
+path, so every model here exposes exactly two jittable entry points:
+
+* ``grad_fn(flat_params, *batch) -> (loss, flat_grad)`` — what a worker
+  executes per step (lowered to ``artifacts/<name>.grad.hlo.txt``);
+* ``predict_fn(flat_params, x) -> logits`` — evaluation
+  (``artifacts/<name>.fwd.hlo.txt``).
+
+Parameters live in a single ``f32[P]`` vector (concatenation of the named
+sections listed in the model's :class:`ParamSpec`), because the paper's
+quantizers operate on the *flattened* gradient bucketed into fixed-size
+buckets — the Rust side never needs to know the tree structure, only P and
+the init recipe per section (exported to ``artifacts/meta.json``).
+
+All matmuls route through the Layer-1 Pallas ``dense``/``matmul_pallas``
+kernels so the hot spot lowers into the same HLO module.
+"""
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.dense import dense, matmul_pallas
+
+
+@dataclasses.dataclass(frozen=True)
+class Section:
+    """One named parameter tensor inside the flat vector."""
+
+    name: str
+    shape: Tuple[int, ...]
+    init: str  # "he" | "xavier" | "normal02" | "zeros" | "ones"
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+    @property
+    def fan_in(self) -> int:
+        return int(self.shape[0]) if len(self.shape) >= 2 else self.size
+
+
+def param_count(sections: Sequence[Section]) -> int:
+    return sum(s.size for s in sections)
+
+
+def unflatten(flat: jnp.ndarray, sections: Sequence[Section]) -> Dict[str, jnp.ndarray]:
+    """Slice the flat vector into named tensors (static offsets → fusable)."""
+    out, off = {}, 0
+    for s in sections:
+        out[s.name] = jax.lax.dynamic_slice(flat, (off,), (s.size,)).reshape(s.shape)
+        off += s.size
+    return out
+
+
+def init_flat(sections: Sequence[Section], key) -> jnp.ndarray:
+    """Reference initializer (tests only — Rust does its own, same recipe)."""
+    chunks = []
+    for s in sections:
+        key, sub = jax.random.split(key)
+        if s.init == "he":
+            std = math.sqrt(2.0 / s.fan_in)
+            chunks.append(jax.random.normal(sub, s.shape) * std)
+        elif s.init == "xavier":
+            std = math.sqrt(1.0 / s.fan_in)
+            chunks.append(jax.random.normal(sub, s.shape) * std)
+        elif s.init == "normal02":
+            chunks.append(jax.random.normal(sub, s.shape) * 0.02)
+        elif s.init == "zeros":
+            chunks.append(jnp.zeros(s.shape))
+        elif s.init == "ones":
+            chunks.append(jnp.ones(s.shape))
+        else:
+            raise ValueError(s.init)
+    return jnp.concatenate([c.reshape(-1) for c in chunks]).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# MLP classifier (the CIFAR-substitute model family)
+# --------------------------------------------------------------------------
+
+
+def mlp_sections(in_dim: int, hidden: Sequence[int], classes: int) -> List[Section]:
+    dims = [in_dim, *hidden, classes]
+    secs: List[Section] = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        secs.append(Section(f"w{i}", (a, b), "he"))
+        secs.append(Section(f"b{i}", (b,), "zeros"))
+    return secs
+
+
+def mlp_logits(flat, x, sections, n_layers):
+    p = unflatten(flat, sections)
+    h = x
+    for i in range(n_layers):
+        act = "relu" if i < n_layers - 1 else "linear"
+        h = dense(h, p[f"w{i}"], p[f"b{i}"], act)
+    return h
+
+
+def softmax_xent(logits, labels):
+    """Mean softmax cross-entropy; labels are int32 class ids."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - picked)
+
+
+def make_mlp(in_dim: int, hidden: Sequence[int], classes: int):
+    sections = mlp_sections(in_dim, hidden, classes)
+    n_layers = len(hidden) + 1
+
+    def predict(flat, x):
+        return (mlp_logits(flat, x, sections, n_layers),)
+
+    def loss(flat, x, y):
+        return softmax_xent(mlp_logits(flat, x, sections, n_layers), y)
+
+    def grad(flat, x, y):
+        l, g = jax.value_and_grad(loss)(flat, x, y)
+        return (l, g)
+
+    return sections, predict, grad
+
+
+# --------------------------------------------------------------------------
+# Transformer LM (the e2e-validation model; 100M config provided)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerCfg:
+    vocab: int
+    d_model: int
+    n_heads: int
+    n_layers: int
+    seq_len: int  # number of *predicted* positions; inputs are seq_len + 1 tokens
+    d_ff: int
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def transformer_sections(cfg: TransformerCfg) -> List[Section]:
+    d, f = cfg.d_model, cfg.d_ff
+    secs = [
+        Section("embed", (cfg.vocab, d), "normal02"),
+        Section("pos", (cfg.seq_len, d), "normal02"),
+    ]
+    for i in range(cfg.n_layers):
+        pre = f"l{i}."
+        secs += [
+            Section(pre + "ln1.g", (d,), "ones"),
+            Section(pre + "ln1.b", (d,), "zeros"),
+            Section(pre + "wq", (d, d), "xavier"),
+            Section(pre + "wk", (d, d), "xavier"),
+            Section(pre + "wv", (d, d), "xavier"),
+            Section(pre + "wo", (d, d), "xavier"),
+            Section(pre + "bo", (d,), "zeros"),
+            Section(pre + "ln2.g", (d,), "ones"),
+            Section(pre + "ln2.b", (d,), "zeros"),
+            Section(pre + "w1", (d, f), "he"),
+            Section(pre + "b1", (f,), "zeros"),
+            Section(pre + "w2", (f, d), "xavier"),
+            Section(pre + "b2", (d,), "zeros"),
+        ]
+    secs += [
+        Section("lnf.g", (d,), "ones"),
+        Section("lnf.b", (d,), "zeros"),
+        Section("unembed", (d, cfg.vocab), "xavier"),
+    ]
+    return secs
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(x, p, pre, cfg: TransformerCfg):
+    b, t, d = x.shape
+    x2 = x.reshape(b * t, d)
+    q = matmul_pallas(x2, p[pre + "wq"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+    k = matmul_pallas(x2, p[pre + "wk"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+    v = matmul_pallas(x2, p[pre + "wv"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(cfg.head_dim)
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b * t, d)
+    return dense(ctx, p[pre + "wo"], p[pre + "bo"], "linear").reshape(b, t, d)
+
+
+def transformer_logits(flat, tokens, cfg: TransformerCfg, sections):
+    """tokens: int32[B, T]; returns logits f32[B, T, vocab]."""
+    p = unflatten(flat, sections)
+    b, t = tokens.shape
+    h = jnp.take(p["embed"], tokens, axis=0) + p["pos"][None, :t]
+    for i in range(cfg.n_layers):
+        pre = f"l{i}."
+        h = h + _attention(_layernorm(h, p[pre + "ln1.g"], p[pre + "ln1.b"]), p, pre, cfg)
+        z = _layernorm(h, p[pre + "ln2.g"], p[pre + "ln2.b"]).reshape(b * t, cfg.d_model)
+        z = dense(z, p[pre + "w1"], p[pre + "b1"], "gelu")
+        z = dense(z, p[pre + "w2"], p[pre + "b2"], "linear")
+        h = h + z.reshape(b, t, cfg.d_model)
+    h = _layernorm(h, p["lnf.g"], p["lnf.b"]).reshape(b * t, cfg.d_model)
+    return matmul_pallas(h, p["unembed"]).reshape(b, t, cfg.vocab)
+
+
+def make_transformer(cfg: TransformerCfg):
+    sections = transformer_sections(cfg)
+
+    def predict(flat, tokens):
+        return (transformer_logits(flat, tokens, cfg, sections),)
+
+    def loss(flat, tokens):
+        # tokens: int32[B, T+1]; predict position i+1 from prefix ≤ i.
+        inp, tgt = tokens[:, :-1], tokens[:, 1:]
+        logits = transformer_logits(flat, inp, cfg, sections)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+        return jnp.mean(logz - picked)
+
+    def grad(flat, tokens):
+        l, g = jax.value_and_grad(loss)(flat, tokens)
+        return (l, g)
+
+    return sections, predict, grad
+
+
+# --------------------------------------------------------------------------
+# Registry — every config the Rust side can ask for by name
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    name: str
+    kind: str  # "classifier" | "lm"
+    sections: List[Section]
+    grad_fn: Callable
+    predict_fn: Callable
+    grad_args: tuple  # ShapeDtypeStructs (excluding flat params)
+    predict_args: tuple
+    meta: dict
+
+
+def _classifier_def(name, in_dim, hidden, classes, batch) -> ModelDef:
+    sections, predict, grad = make_mlp(in_dim, hidden, classes)
+    x = jax.ShapeDtypeStruct((batch, in_dim), jnp.float32)
+    y = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return ModelDef(
+        name, "classifier", sections, grad, predict, (x, y), (x,),
+        {"in_dim": in_dim, "hidden": list(hidden), "classes": classes, "batch": batch},
+    )
+
+
+def _lm_def(name, cfg: TransformerCfg, batch) -> ModelDef:
+    sections, predict, grad = make_transformer(cfg)
+    tok = jax.ShapeDtypeStruct((batch, cfg.seq_len + 1), jnp.int32)
+    inp = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+    return ModelDef(
+        name, "lm", sections, grad, predict, (tok,), (inp,),
+        {
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers, "seq_len": cfg.seq_len, "d_ff": cfg.d_ff,
+            "batch": batch,
+        },
+    )
+
+
+def registry() -> Dict[str, Callable[[], ModelDef]]:
+    """Lazy registry: building a ModelDef is cheap, lowering is not."""
+    return {
+        # CIFAR-substitute classifier family (paper Table 2 columns).
+        "mlp_s": lambda: _classifier_def("mlp_s", 256, [512, 512], 100, 64),
+        "mlp_m": lambda: _classifier_def("mlp_m", 256, [1024, 1024, 1024], 100, 64),
+        "mlp_l": lambda: _classifier_def("mlp_l", 512, [2048, 2048, 2048], 200, 64),
+        # e2e-validation LM (~0.9M) — trained for a few hundred steps in
+        # examples/e2e_transformer.rs.
+        "transformer_s": lambda: _lm_def(
+            "transformer_s",
+            TransformerCfg(vocab=256, d_model=128, n_heads=4, n_layers=2,
+                           seq_len=64, d_ff=512),
+            batch=8,
+        ),
+        # ~26M — ResNet-50-scale parameter count for distributed runs.
+        "transformer_m": lambda: _lm_def(
+            "transformer_m",
+            TransformerCfg(vocab=4096, d_model=512, n_heads=8, n_layers=6,
+                           seq_len=128, d_ff=2048),
+            batch=8,
+        ),
+        # ~110M — the paper-scale config (compile-heavy; build on demand).
+        "transformer_100m": lambda: _lm_def(
+            "transformer_100m",
+            TransformerCfg(vocab=32768, d_model=768, n_heads=12, n_layers=12,
+                           seq_len=256, d_ff=3072),
+            batch=4,
+        ),
+    }

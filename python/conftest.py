@@ -1,0 +1,7 @@
+"""Make `import compile.*` work regardless of pytest invocation directory
+(repo root `pytest python/tests/` or `cd python && pytest tests/`)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,93 @@
+"""AOT export checks: HLO text well-formedness + manifest consistency.
+
+These validate the artifacts the Rust runtime consumes without needing the
+Rust side (which has its own integration test through PJRT).
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import to_hlo_text, export_model
+from compile.model import registry, param_count, init_flat
+
+jax.config.update("jax_platform_name", "cpu")
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_simple_fn():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "HloModule" in text
+    assert "f32[2,2]" in text
+    # text (not proto) is the interchange contract
+    assert text.lstrip().startswith("HloModule")
+
+
+def test_export_model_writes_files(tmp_path):
+    entry = export_model("mlp_s", str(tmp_path))
+    grad = tmp_path / entry["grad_hlo"]
+    fwd = tmp_path / entry["fwd_hlo"]
+    assert grad.exists() and fwd.exists()
+    text = grad.read_text()
+    assert text.startswith("HloModule")
+    p = entry["param_count"]
+    assert f"f32[{p}]" in text, "flat grad output must appear in the HLO"
+    assert entry["kind"] == "classifier"
+    assert sum(s["size"] for s in entry["sections"]) == p
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "meta.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+class TestBuiltArtifacts:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "meta.json")) as f:
+            return json.load(f)
+
+    def test_manifest_models_exist(self, manifest):
+        for m in manifest["models"]:
+            assert os.path.exists(os.path.join(ART, m["grad_hlo"]))
+            assert os.path.exists(os.path.join(ART, m["fwd_hlo"]))
+
+    def test_manifest_matches_registry(self, manifest):
+        reg = registry()
+        for m in manifest["models"]:
+            md = reg[m["name"]]()
+            assert m["param_count"] == param_count(md.sections)
+            assert [s["name"] for s in m["sections"]] == [s.name for s in md.sections]
+
+    def test_hlo_entry_signature(self, manifest):
+        """The HLO ENTRY must take flat params first, then the batch args."""
+        for m in manifest["models"]:
+            text = open(os.path.join(ART, m["grad_hlo"])).read()
+            p = m["param_count"]
+            assert f"f32[{p}]" in text
+            entry_lines = [l for l in text.splitlines() if "ENTRY" in l]
+            assert entry_lines, "no ENTRY computation found"
+
+
+def test_hlo_numerics_roundtrip_via_jax_runtime():
+    """Execute the lowered grad through jax itself and compare with eager.
+
+    This is the python-side equivalent of the Rust PJRT integration test:
+    lowering must not change numerics.
+    """
+    md = registry()["mlp_s"]()
+    flat = init_flat(md.sections, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 256))
+    y = jax.random.randint(jax.random.PRNGKey(2), (64,), 0, 100)
+
+    eager_loss, eager_grad = md.grad_fn(flat, x, y)
+    compiled = jax.jit(md.grad_fn).lower(flat, x, y).compile()
+    jit_loss, jit_grad = compiled(flat, x, y)
+    np.testing.assert_allclose(float(eager_loss), float(jit_loss), rtol=1e-5)
+    np.testing.assert_allclose(eager_grad, jit_grad, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,210 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; this is the core correctness signal for
+the whole stack — Rust re-implements the ref.py semantics, so kernel==ref
+pins all three layers to one definition.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense, matmul_pallas, bucket_stats, stochastic_quantize
+from compile.kernels.dense import ACTIVATIONS, _block
+from compile.kernels.quantize import dequantize
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = st.sampled_from([1, 2, 3, 7, 16, 32, 64, 100, 128, 200, 256])
+SMALL_DIMS = st.sampled_from([1, 2, 5, 8, 16, 33, 64])
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------- dense ---
+
+
+class TestBlockChoice:
+    def test_block_divides(self):
+        for d in [1, 2, 7, 100, 128, 129, 256, 300, 2048, 4096]:
+            b = _block(d)
+            assert d % b == 0
+            assert b <= 128 or b == d
+
+    def test_block_is_maximal(self):
+        assert _block(256) == 128
+        assert _block(100) == 100
+        assert _block(300) == 100  # largest divisor of 300 that is <= 128
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=SMALL_DIMS, k=DIMS, n=DIMS, act=st.sampled_from(ACTIVATIONS),
+       seed=st.integers(0, 2**16))
+def test_dense_matches_ref(m, k, n, act, seed):
+    x = rand(seed, (m, k))
+    w = rand(seed + 1, (k, n), 0.1)
+    b = rand(seed + 2, (n,), 0.1)
+    got = dense(x, w, b, act)
+    want = ref.dense_ref(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=SMALL_DIMS, k=SMALL_DIMS, n=SMALL_DIMS, seed=st.integers(0, 2**16))
+def test_matmul_matches_ref(m, k, n, seed):
+    x = rand(seed, (m, k))
+    w = rand(seed + 1, (k, n))
+    np.testing.assert_allclose(matmul_pallas(x, w), ref.matmul_ref(x, w),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(act=st.sampled_from(ACTIVATIONS), seed=st.integers(0, 2**16))
+def test_dense_grad_matches_ref(act, seed):
+    x = rand(seed, (16, 32))
+    w = rand(seed + 1, (32, 24), 0.2)
+    b = rand(seed + 2, (24,), 0.1)
+
+    def f_pallas(x, w, b):
+        return jnp.sum(jnp.sin(dense(x, w, b, act)))
+
+    def f_ref(x, w, b):
+        return jnp.sum(jnp.sin(ref.dense_ref(x, w, b, act)))
+
+    g = jax.grad(f_pallas, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(g, gr):
+        np.testing.assert_allclose(a, e, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_grad_matches_ref():
+    x = rand(7, (8, 16))
+    w = rand(8, (16, 8))
+    g = jax.grad(lambda x, w: jnp.sum(matmul_pallas(x, w) ** 2), argnums=(0, 1))(x, w)
+    gr = jax.grad(lambda x, w: jnp.sum((x @ w) ** 2), argnums=(0, 1))(x, w)
+    for a, e in zip(g, gr):
+        np.testing.assert_allclose(a, e, rtol=1e-4, atol=1e-4)
+
+
+def test_dense_jit_compiles():
+    x, w, b = rand(0, (64, 128)), rand(1, (128, 128), 0.1), rand(2, (128,), 0.1)
+    out = jax.jit(lambda x, w, b: dense(x, w, b, "relu"))(x, w, b)
+    np.testing.assert_allclose(out, ref.dense_ref(x, w, b, "relu"),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------- stats ---
+
+
+@settings(max_examples=15, deadline=None)
+@given(nb=st.integers(1, 8),
+       d=st.sampled_from([4, 32, 512, 2048]),
+       seed=st.integers(0, 2**16),
+       scale=st.floats(1e-4, 1e3))
+def test_bucket_stats_matches_ref(nb, d, seed, scale):
+    g = rand(seed, (nb, d), scale)
+    got = bucket_stats(g)
+    want = ref.bucket_stats_ref(g)
+    for a, e in zip(got, want):
+        np.testing.assert_allclose(a, e, rtol=1e-5, atol=1e-6 * scale * d)
+
+
+def test_bucket_stats_constant_bucket():
+    g = jnp.full((3, 64), 2.5)
+    mn, mx, s, ss, l1 = bucket_stats(g)
+    np.testing.assert_allclose(mn, 2.5)
+    np.testing.assert_allclose(mx, 2.5)
+    np.testing.assert_allclose(s, 2.5 * 64)
+    np.testing.assert_allclose(ss, 2.5 * 2.5 * 64, rtol=1e-6)
+    np.testing.assert_allclose(l1, 2.5 * 64)
+
+
+def test_bucket_stats_signs():
+    g = jnp.array([[-1.0, 2.0, -3.0, 4.0]])
+    mn, mx, s, ss, l1 = bucket_stats(g)
+    assert float(mn[0, 0]) == -3.0 and float(mx[0, 0]) == 4.0
+    assert float(s[0, 0]) == 2.0 and float(l1[0, 0]) == 10.0
+
+
+# ------------------------------------------------------------ quantize ---
+
+
+def sorted_levels(key, nb, s, spread=1.0):
+    lv = jax.random.normal(jax.random.PRNGKey(key), (nb, s)) * spread
+    return jnp.sort(lv, axis=-1)
+
+
+@settings(max_examples=15, deadline=None)
+@given(nb=st.integers(1, 6), d=st.sampled_from([8, 64, 512]),
+       s=st.sampled_from([2, 3, 5, 9]), seed=st.integers(0, 2**16))
+def test_quantize_matches_ref(nb, d, s, seed):
+    g = rand(seed, (nb, d))
+    lv = sorted_levels(seed + 1, nb, s)
+    u = jax.random.uniform(jax.random.PRNGKey(seed + 2), (nb, d))
+    got = stochastic_quantize(g, lv, u)
+    want = ref.stochastic_quantize_ref(g, lv, u)
+    assert jnp.array_equal(got, want)
+    assert int(jnp.min(got)) >= 0 and int(jnp.max(got)) <= s - 1
+
+
+def test_quantize_exact_on_levels():
+    lv = jnp.array([[-1.0, 0.0, 1.0]])
+    g = jnp.array([[-1.0, 0.0, 1.0, 0.5]])
+    u = jnp.zeros_like(g)
+    idx = stochastic_quantize(g, lv, u)
+    # v exactly on a level rounds to it; 0.5 with u=0 < p=0.5 rounds UP.
+    assert idx.tolist() == [[0, 1, 2, 2]]
+
+
+def test_quantize_clamps_outside_range():
+    lv = jnp.array([[-1.0, 1.0]])
+    g = jnp.array([[-5.0, 5.0]])
+    for uval in (0.0, 0.5, 0.999):
+        u = jnp.full_like(g, uval)
+        idx = stochastic_quantize(g, lv, u)
+        assert idx.tolist() == [[0, 1]]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), s=st.sampled_from([3, 5, 9]))
+def test_quantize_unbiased_in_expectation(seed, s):
+    """E[dequant(Q(v))] == v for v inside the level range (Eq. 7 property)."""
+    nb, d = 2, 256
+    lv = jnp.sort(jax.random.uniform(jax.random.PRNGKey(seed), (nb, s),
+                                     minval=-2.0, maxval=2.0), axis=-1)
+    lo = lv[:, :1] + 1e-3
+    hi = lv[:, -1:] - 1e-3
+    mid = jax.random.uniform(jax.random.PRNGKey(seed + 1), (nb, d))
+    g = lo + mid * jnp.maximum(hi - lo, 0.0)
+
+    exp = ref.quantize_expectation_ref(g, lv)
+    np.testing.assert_allclose(exp, g, rtol=1e-4, atol=1e-5)
+
+
+def test_quantize_sampler_monte_carlo_unbiased():
+    """The actual sampler's mean converges to v (Eq. 7 unbiasedness)."""
+    nb, d, s, n_mc = 1, 128, 5, 400
+    lv = jnp.sort(jax.random.uniform(jax.random.PRNGKey(0), (nb, s),
+                                     minval=-2.0, maxval=2.0), axis=-1)
+    lo, hi = lv[:, :1] + 1e-3, lv[:, -1:] - 1e-3
+    mid = jax.random.uniform(jax.random.PRNGKey(1), (nb, d))
+    g = lo + mid * (hi - lo)
+    keys = jax.random.split(jax.random.PRNGKey(2), n_mc)
+    acc = jnp.zeros_like(g)
+    for k in keys:
+        u = jax.random.uniform(k, (nb, d))
+        acc = acc + dequantize(lv, stochastic_quantize(g, lv, u))
+    mc = acc / n_mc
+    width = float(jnp.max(lv[:, 1:] - lv[:, :-1]))
+    np.testing.assert_allclose(mc, g, atol=width * 4 / np.sqrt(n_mc))
+
+
+def test_dequantize_gathers():
+    lv = jnp.array([[0.0, 1.0, 2.0]])
+    idx = jnp.array([[2, 0, 1, 1]])
+    assert dequantize(lv, idx).tolist() == [[2.0, 0.0, 1.0, 1.0]]

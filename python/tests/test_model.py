@@ -1,0 +1,195 @@
+"""L2 correctness: model shapes, flat-param bookkeeping, gradient checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import (
+    Section,
+    TransformerCfg,
+    init_flat,
+    make_mlp,
+    make_transformer,
+    mlp_sections,
+    param_count,
+    registry,
+    softmax_xent,
+    transformer_sections,
+    unflatten,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# -------------------------------------------------------- flat params ---
+
+
+def test_unflatten_roundtrip_order():
+    secs = [Section("a", (2, 3), "he"), Section("b", (4,), "zeros"),
+            Section("c", (1, 2, 2), "ones")]
+    flat = jnp.arange(param_count(secs), dtype=jnp.float32)
+    p = unflatten(flat, secs)
+    assert p["a"].shape == (2, 3)
+    np.testing.assert_array_equal(p["a"].reshape(-1), np.arange(6))
+    np.testing.assert_array_equal(p["b"], np.arange(6, 10))
+    np.testing.assert_array_equal(p["c"].reshape(-1), np.arange(10, 14))
+
+
+def test_param_count_mlp():
+    secs = mlp_sections(256, [512, 512], 100)
+    expect = 256 * 512 + 512 + 512 * 512 + 512 + 512 * 100 + 100
+    assert param_count(secs) == expect
+
+
+def test_init_flat_statistics():
+    secs = [Section("w", (1000, 100), "he"), Section("b", (100,), "zeros"),
+            Section("g", (100,), "ones")]
+    flat = init_flat(secs, jax.random.PRNGKey(0))
+    w = flat[: 100000]
+    std = float(jnp.std(w))
+    assert abs(std - np.sqrt(2.0 / 1000)) < 0.005
+    np.testing.assert_array_equal(flat[100000:100100], 0.0)
+    np.testing.assert_array_equal(flat[100100:], 1.0)
+
+
+# ---------------------------------------------------------------- MLP ---
+
+
+@pytest.fixture(scope="module")
+def small_mlp():
+    sections, predict, grad = make_mlp(16, [32, 32], 10)
+    flat = init_flat(sections, jax.random.PRNGKey(0))
+    return sections, predict, grad, flat
+
+
+def test_mlp_logit_shape(small_mlp):
+    sections, predict, grad, flat = small_mlp
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 16))
+    (logits,) = predict(flat, x)
+    assert logits.shape == (8, 10)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_mlp_loss_at_init_near_log_c(small_mlp):
+    sections, predict, grad, flat = small_mlp
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+    y = jax.random.randint(jax.random.PRNGKey(2), (64,), 0, 10)
+    loss, g = grad(flat, x, y)
+    assert abs(float(loss) - np.log(10)) < 1.5
+    assert g.shape == flat.shape
+
+
+def test_mlp_grad_descends(small_mlp):
+    sections, predict, grad, flat = small_mlp
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+    y = jax.random.randint(jax.random.PRNGKey(2), (64,), 0, 10)
+    l0, g = grad(flat, x, y)
+    l1, _ = grad(flat - 0.1 * g, x, y)
+    assert float(l1) < float(l0)
+
+
+def test_mlp_grad_finite_difference(small_mlp):
+    """Directional finite-difference check of the full flat gradient."""
+    sections, predict, grad, flat = small_mlp
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 16))
+    y = jax.random.randint(jax.random.PRNGKey(2), (16,), 0, 10)
+    loss, g = grad(flat, x, y)
+    v = jax.random.normal(jax.random.PRNGKey(3), flat.shape)
+    v = v / jnp.linalg.norm(v)
+    eps = 1e-3
+    lp, _ = grad(flat + eps * v, x, y)
+    lm, _ = grad(flat - eps * v, x, y)
+    fd = (float(lp) - float(lm)) / (2 * eps)
+    an = float(jnp.dot(g, v))
+    assert abs(fd - an) < 5e-3 * max(1.0, abs(an))
+
+
+def test_softmax_xent_perfect_prediction():
+    logits = jnp.array([[100.0, 0.0], [0.0, 100.0]])
+    labels = jnp.array([0, 1], dtype=jnp.int32)
+    assert float(softmax_xent(logits, labels)) < 1e-6
+
+
+def test_softmax_xent_uniform():
+    logits = jnp.zeros((4, 7))
+    labels = jnp.array([0, 1, 2, 3], dtype=jnp.int32)
+    np.testing.assert_allclose(float(softmax_xent(logits, labels)),
+                               np.log(7), rtol=1e-6)
+
+
+# -------------------------------------------------------- transformer ---
+
+
+CFG = TransformerCfg(vocab=64, d_model=32, n_heads=2, n_layers=2,
+                     seq_len=16, d_ff=64)
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    sections, predict, grad = make_transformer(CFG)
+    flat = init_flat(sections, jax.random.PRNGKey(0))
+    return sections, predict, grad, flat
+
+
+def test_lm_logit_shape(small_lm):
+    sections, predict, grad, flat = small_lm
+    tok = jax.random.randint(jax.random.PRNGKey(1), (4, CFG.seq_len), 0, CFG.vocab)
+    (logits,) = predict(flat, tok)
+    assert logits.shape == (4, CFG.seq_len, CFG.vocab)
+
+
+def test_lm_loss_at_init(small_lm):
+    sections, predict, grad, flat = small_lm
+    tok = jax.random.randint(jax.random.PRNGKey(1), (4, CFG.seq_len + 1), 0, CFG.vocab)
+    loss, g = grad(flat, tok)
+    assert abs(float(loss) - np.log(CFG.vocab)) < 1.0
+    assert g.shape == flat.shape and bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_lm_causality(small_lm):
+    """Changing a future token must not change past logits."""
+    sections, predict, grad, flat = small_lm
+    tok = jax.random.randint(jax.random.PRNGKey(1), (1, CFG.seq_len), 0, CFG.vocab)
+    (l0,) = predict(flat, tok)
+    tok2 = tok.at[0, -1].set((tok[0, -1] + 1) % CFG.vocab)
+    (l1,) = predict(flat, tok2)
+    np.testing.assert_allclose(l0[0, : CFG.seq_len - 1], l1[0, : CFG.seq_len - 1],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lm_grad_descends(small_lm):
+    sections, predict, grad, flat = small_lm
+    tok = jax.random.randint(jax.random.PRNGKey(1), (8, CFG.seq_len + 1), 0, CFG.vocab)
+    l0, g = grad(flat, tok)
+    l1, _ = grad(flat - 0.5 * g, tok)
+    assert float(l1) < float(l0)
+
+
+def test_transformer_sections_count():
+    secs = transformer_sections(CFG)
+    # embed + pos + 13 per layer + 3 final
+    assert len(secs) == 2 + 13 * CFG.n_layers + 3
+    names = [s.name for s in secs]
+    assert len(set(names)) == len(names), "section names must be unique"
+
+
+# ------------------------------------------------------------ registry ---
+
+
+def test_registry_all_models_build():
+    for name, thunk in registry().items():
+        md = thunk()
+        assert md.name == name
+        assert md.kind in ("classifier", "lm")
+        assert param_count(md.sections) > 0
+
+
+def test_registry_param_counts():
+    r = registry()
+    assert param_count(r["mlp_s"]().sections) == 445_540
+    p100 = param_count(r["transformer_100m"]().sections)
+    assert 90e6 < p100 < 140e6, f"100M config is {p100:,}"
+    pm = param_count(r["transformer_m"]().sections)
+    assert 15e6 < pm < 40e6, f"transformer_m is {pm:,}"

@@ -1,0 +1,89 @@
+//! Hot-path throughput: per-method quantization rate (level solve +
+//! random rounding) on a 4M-element gradient, plus the ORQ ablations —
+//! greedy vs refined solver, and solve-vs-round cost split. This is the
+//! §Perf workhorse bench (EXPERIMENTS.md §Perf).
+
+use orq::bench::{print_table, Bench};
+use orq::quant::bucket::BucketQuantizer;
+use orq::quant::orq::OrqQuantizer;
+use orq::quant::{self, Quantizer};
+use orq::tensor::rng::Rng;
+
+fn main() {
+    let n: usize = if std::env::var("ORQ_BENCH_FAST").as_deref() == Ok("1") {
+        1 << 20
+    } else {
+        1 << 22
+    };
+    let mut rng = Rng::seed_from(1);
+    let mut g = vec![0.0f32; n];
+    rng.fill_gaussian(&mut g, 1e-3);
+    let bench = Bench::from_env();
+
+    // --- per-method end-to-end quantize (d = 2048) ---
+    let bq = BucketQuantizer::new(2048);
+    let mut rows = Vec::new();
+    for method in quant::paper_methods() {
+        if method == "fp" {
+            continue;
+        }
+        let q = quant::from_name(method).unwrap();
+        let mut qrng = Rng::seed_from(2);
+        rows.push(bench.measure(&format!("quantize {method} (d=2048)"), Some(n as u64), || {
+            let qg = bq.quantize(&g, q.as_ref(), &mut qrng);
+            std::hint::black_box(qg.buckets.len());
+        }));
+    }
+    print_table("Quantize throughput — level solve + rounding, 4M-elt gradient", &rows);
+
+    // --- bucket-size sensitivity for ORQ-3 ---
+    let q3 = quant::from_name("orq-3").unwrap();
+    let mut rows = Vec::new();
+    for d in [128usize, 512, 2048, 8192, 32768] {
+        let bqd = BucketQuantizer::new(d);
+        let mut qrng = Rng::seed_from(3);
+        rows.push(bench.measure(&format!("orq-3 d={d}"), Some(n as u64), || {
+            let qg = bqd.quantize(&g, q3.as_ref(), &mut qrng);
+            std::hint::black_box(qg.buckets.len());
+        }));
+    }
+    print_table("ORQ-3 throughput vs bucket size (sort cost dominates large d)", &rows);
+
+    // --- ablation: greedy Algorithm 1 vs refined (future-work variant) ---
+    let bucket: Vec<f32> = g[..4096].to_vec();
+    let mut sorted = bucket.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut rows = Vec::new();
+    for (name, sweeps) in [("greedy (paper Alg.1)", 0usize), ("refine×4", 4), ("refine×16", 16)] {
+        let solver = OrqQuantizer::with_refinement(9, sweeps);
+        rows.push(bench.measure(
+            &format!("orq-9 solve {name}"),
+            Some(4096),
+            || {
+                std::hint::black_box(solver.levels_for(&bucket));
+            },
+        ));
+    }
+    print_table("Ablation — ORQ level-solver variants (one 4096-elt bucket)", &rows);
+    // quality side of the ablation
+    use orq::quant::error::expected_rr_mse;
+    for (name, sweeps) in [("greedy", 0usize), ("refine×4", 4), ("refine×16", 16)] {
+        let lv = OrqQuantizer::with_refinement(9, sweeps).levels_for(&bucket);
+        println!("  {name}: expected RR-MSE = {:.6e}", expected_rr_mse(&sorted, &lv));
+    }
+
+    // --- solve-vs-round split for orq-9 ---
+    let solver = OrqQuantizer::new(9);
+    let mut rows = Vec::new();
+    rows.push(bench.measure("orq-9 solve only (per 2048-bucket)", Some(2048), || {
+        std::hint::black_box(solver.levels_for(&g[..2048]));
+    }));
+    let levels = solver.levels_for(&g[..2048]);
+    let mut qrng = Rng::seed_from(4);
+    let mut idx = Vec::new();
+    rows.push(bench.measure("round only (per 2048-bucket)", Some(2048), || {
+        quant::random_round(&g[..2048], &levels, &mut qrng, &mut idx);
+        std::hint::black_box(idx.len());
+    }));
+    print_table("ORQ-9 cost split — solve vs round", &rows);
+}

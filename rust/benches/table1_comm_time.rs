@@ -1,0 +1,85 @@
+//! Table 1: #parameters and communication time of one gradient at
+//! 10 Gbps for the paper's model zoo — extended with the wire sizes and
+//! times of every quantization scheme (exact codec accounting), plus the
+//! ring-all-reduce comparison the paper mentions in §4.
+
+use orq::bench::print_rows;
+use orq::codec::{wire_size, Packing};
+use orq::comm::link::Link;
+use orq::comm::ring;
+use orq::util::fmt;
+
+const ZOO: [(&str, u64); 5] = [
+    ("AlexNet", 61_100_000),
+    ("VGG-19", 143_700_000),
+    ("DenseNet-161", 28_700_000),
+    ("GoogLeNet", 13_000_000),
+    ("ResNet-50", 25_600_000),
+];
+
+fn main() {
+    let link = Link::ten_gbps();
+    let d = 512; // the paper's ImageNet bucket size
+
+    // --- the paper's exact table: FP32 comm time ---
+    let mut rows = Vec::new();
+    for (name, params) in ZOO {
+        let bytes = params as usize * 4;
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.1} M", params as f64 / 1e6),
+            fmt::duration(link.transfer_time(bytes)),
+        ]);
+    }
+    print_rows(
+        "Table 1 — #Parameter and FP32 comm time @ 10 Gbps (paper rows)",
+        &["model", "#parameter", "comm time"],
+        &rows,
+    );
+
+    // --- extension: per-scheme wire size and comm time (exact codec) ---
+    let schemes: [(&str, usize); 5] = [
+        ("fp", 0),
+        ("bingrad-b", 2),
+        ("terngrad", 3),
+        ("orq-5", 5),
+        ("orq-9", 9),
+    ];
+    let mut rows = Vec::new();
+    for (name, params) in ZOO {
+        for (scheme, s) in schemes {
+            let bytes = wire_size(params as usize, d, s, Packing::BaseS, scheme);
+            rows.push(vec![
+                name.to_string(),
+                scheme.to_string(),
+                fmt::bytes(bytes as u64),
+                format!("×{:.1}", (params as f64 * 4.0) / bytes as f64),
+                fmt::duration(link.transfer_time(bytes)),
+            ]);
+        }
+    }
+    print_rows(
+        "Table 1 (extended) — quantized wire size & comm time, d=512, base-s packing",
+        &["model", "scheme", "wire size", "ratio", "comm time"],
+        &rows,
+    );
+
+    // --- topology ablation: PS vs ring all-reduce for ResNet-50 ---
+    let bytes_fp = 25_600_000usize * 4;
+    let bytes_q3 = wire_size(25_600_000, d, 3, Packing::BaseS, "terngrad");
+    let mut rows = Vec::new();
+    for n in [2usize, 4, 8, 16] {
+        rows.push(vec![
+            format!("{n} workers"),
+            fmt::duration(ring::ps_time(&link, n, bytes_fp, bytes_fp)),
+            fmt::duration(ring::allreduce_time(&link, n, bytes_fp)),
+            fmt::duration(ring::ps_time(&link, n, bytes_q3, bytes_fp)),
+            fmt::duration(ring::quantized_ring_time(&link, n, bytes_q3)),
+        ]);
+    }
+    print_rows(
+        "Topology ablation (ResNet-50): PS vs ring, FP vs 3-level",
+        &["cluster", "PS fp32", "ring fp32", "PS 3-level up", "ring 3-level"],
+        &rows,
+    );
+}

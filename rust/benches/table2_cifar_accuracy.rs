@@ -1,0 +1,55 @@
+//! Table 2: CIFAR-100 single-worker test accuracy across all 12 methods
+//! × 3 model columns (d = 2048, no clipping — §5.1.1).
+//!
+//! Fast mode (default) uses shrunk stand-in models; `ORQ_BENCH_FULL=1`
+//! runs the paper-scale MLP-S/M/L. The *shape* to check against the
+//! paper: ORQ-s beats QSGD-s/TernGrad at every s, Linear-s trails, and
+//! BinGrad-b leads the ×32 group.
+
+use orq::bench::{print_rows, suite};
+use orq::util::csv::CsvWriter;
+
+fn main() {
+    let steps = suite::cifar_steps();
+    let methods = orq::quant::paper_methods();
+    let mut rows = Vec::new();
+    let mut csv = CsvWriter::create(
+        "artifacts/results/table2.csv",
+        &["model", "method", "compression", "top1", "rel_mse"],
+    )
+    .expect("csv");
+
+    for (col, model, in_dim) in suite::table2_models() {
+        let ds = suite::cifar100_ds(in_dim);
+        for method in &methods {
+            let cfg = suite::cifar_cfg(method, &model, steps);
+            let out = suite::run_native(cfg, &ds).expect("run");
+            let s = out.summary;
+            rows.push(vec![
+                col.to_string(),
+                method.to_string(),
+                format!("×{:.1}", s.compression_ratio),
+                format!("{:.2}%", s.test_top1 * 100.0),
+                format!("{:.4}", s.mean_quant_rel_mse),
+            ]);
+            csv.row_str(&[
+                col.to_string(),
+                method.to_string(),
+                format!("{:.2}", s.compression_ratio),
+                format!("{:.4}", s.test_top1),
+                format!("{:.6}", s.mean_quant_rel_mse),
+            ])
+            .ok();
+            eprintln!("  [{col}] {method}: top1={:.2}%", s.test_top1 * 100.0);
+        }
+    }
+    csv.flush().ok();
+    print_rows(
+        "Table 2 — CIFAR-100(-like) single-worker test accuracy (d=2048, no clip)",
+        &["model", "method", "ratio", "top-1", "quant relMSE"],
+        &rows,
+    );
+    println!("\nCSV: artifacts/results/table2.csv");
+    println!("Expected shape (paper): ORQ-s > QSGD-s/TernGrad at equal s; Linear-s worst;");
+    println!("BinGrad-b best of the 1-bit group; all below FP.");
+}

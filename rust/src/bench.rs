@@ -1,0 +1,278 @@
+//! Measurement harness for the `rust/benches/*` binaries (criterion is
+//! not vendorable offline — DESIGN.md §3): warmup, timed iterations,
+//! mean/σ/p50/p99 and throughput, plus an aligned table printer.
+
+use std::time::Instant;
+
+use crate::tensor::stats::percentile_sorted;
+use crate::util::fmt;
+
+/// Result of one measured benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    /// Optional elements-processed-per-iteration for throughput reporting.
+    pub elements: Option<u64>,
+}
+
+impl Measurement {
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements.map(|e| e as f64 / self.mean_s)
+    }
+
+    pub fn row(&self) -> Vec<String> {
+        let mut r = vec![
+            self.name.clone(),
+            fmt::duration(self.mean_s),
+            format!("±{}", fmt::duration(self.std_s)),
+            fmt::duration(self.p50_s),
+            fmt::duration(self.p99_s),
+        ];
+        r.push(match self.throughput() {
+            Some(t) if t >= 1e9 => format!("{:.2} Gelem/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("{:.2} Melem/s", t / 1e6),
+            Some(t) => format!("{t:.0} elem/s"),
+            None => "-".into(),
+        });
+        r
+    }
+}
+
+/// Bench runner configuration.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub iters: usize,
+    /// Hard cap on measured wall time; iterations stop early past this.
+    pub max_seconds: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 3, iters: 30, max_seconds: 10.0 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { warmup_iters: 1, iters: 10, max_seconds: 5.0 }
+    }
+
+    /// Honor `ORQ_BENCH_FAST=1` (CI / smoke runs).
+    pub fn from_env() -> Self {
+        if std::env::var("ORQ_BENCH_FAST").as_deref() == Ok("1") {
+            Bench::quick()
+        } else {
+            Bench::default()
+        }
+    }
+
+    /// Measure `f`, which performs ONE iteration of the workload per call.
+    pub fn measure<F: FnMut()>(&self, name: &str, elements: Option<u64>, mut f: F) -> Measurement {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        let start_all = Instant::now();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+            if start_all.elapsed().as_secs_f64() > self.max_seconds {
+                break;
+            }
+        }
+        summarize(name, &samples, elements)
+    }
+}
+
+fn summarize(name: &str, samples: &[f64], elements: Option<u64>) -> Measurement {
+    let n = samples.len().max(1) as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / n;
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Measurement {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: mean,
+        std_s: var.sqrt(),
+        min_s: sorted.first().copied().unwrap_or(0.0),
+        p50_s: percentile_sorted(&sorted, 0.5),
+        p99_s: percentile_sorted(&sorted, 0.99),
+        elements,
+    }
+}
+
+/// Print a measurement table with the standard header.
+pub fn print_table(title: &str, rows: &[Measurement]) {
+    println!("\n== {title} ==");
+    let mut table = vec![vec![
+        "bench".to_string(),
+        "mean".to_string(),
+        "std".to_string(),
+        "p50".to_string(),
+        "p99".to_string(),
+        "throughput".to_string(),
+    ]];
+    table.extend(rows.iter().map(|m| m.row()));
+    print!("{}", fmt::table(&table));
+}
+
+/// Print an arbitrary results table (for accuracy tables rather than
+/// timing benches).
+pub fn print_rows(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut table = vec![header.iter().map(|s| s.to_string()).collect::<Vec<_>>()];
+    table.extend(rows.iter().cloned());
+    print!("{}", fmt::table(&table));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iterations() {
+        let b = Bench { warmup_iters: 1, iters: 5, max_seconds: 30.0 };
+        let mut count = 0;
+        let m = b.measure("noop", Some(100), || count += 1);
+        assert_eq!(count, 6); // warmup + 5
+        assert_eq!(m.iters, 5);
+        assert!(m.mean_s >= 0.0);
+        assert!(m.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn stats_ordering() {
+        let m = summarize("x", &[1.0, 2.0, 3.0], None);
+        assert_eq!(m.mean_s, 2.0);
+        assert_eq!(m.min_s, 1.0);
+        assert_eq!(m.p50_s, 2.0);
+        assert!(m.p99_s <= 3.0 && m.p99_s >= 2.9);
+        assert!(m.throughput().is_none());
+    }
+
+    #[test]
+    fn time_cap_stops_early() {
+        let b = Bench { warmup_iters: 0, iters: 1000, max_seconds: 0.05 };
+        let m = b.measure("sleepy", None, || std::thread::sleep(std::time::Duration::from_millis(20)));
+        assert!(m.iters < 1000, "cap must kick in, ran {}", m.iters);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared experiment helpers used by `rust/benches/*` and `examples/*`.
+// ---------------------------------------------------------------------
+
+/// Paper-table experiment scale. `ORQ_BENCH_FULL=1` switches every bench
+/// from the fast CI models to the paper-scale MLPs (Table 2 sizes).
+pub mod suite {
+    use crate::config::TrainConfig;
+    use crate::coordinator::trainer::{native_backend_factory, Trainer, TrainOutput};
+    use crate::data::synth::{ClassDataset, DatasetSpec};
+    use crate::error::Result;
+
+    /// True when the paper-scale (slow) configuration is requested.
+    pub fn full_scale() -> bool {
+        std::env::var("ORQ_BENCH_FULL").as_deref() == Ok("1")
+    }
+
+    /// The three Table-2 model columns: (column name, model spec, in_dim).
+    /// Fast mode uses shrunk stand-ins with identical depth ordering.
+    pub fn table2_models() -> Vec<(&'static str, String, usize)> {
+        if full_scale() {
+            vec![
+                ("ResNet-56→MLP-S", "mlp_s".into(), 256),
+                ("ResNet-110→MLP-M", "mlp_m".into(), 256),
+                ("GoogLeNet→MLP-L", "mlp_l".into(), 512),
+            ]
+        } else {
+            vec![
+                ("ResNet-56→MLP-S", "mlp:64-128-128-100".into(), 64),
+                ("ResNet-110→MLP-M", "mlp:64-192-192-192-100".into(), 64),
+                ("GoogLeNet→MLP-L", "mlp:128-256-256-100".into(), 128),
+            ]
+        }
+    }
+
+    /// Steps for a "200-epoch CIFAR" style run at the current scale.
+    pub fn cifar_steps() -> usize {
+        if full_scale() {
+            2000
+        } else {
+            250
+        }
+    }
+
+    pub fn imagenet_steps() -> usize {
+        if full_scale() {
+            1500
+        } else {
+            200
+        }
+    }
+
+    /// A CIFAR-100-like training config for one method/model column.
+    pub fn cifar_cfg(method: &str, model: &str, steps: usize) -> TrainConfig {
+        TrainConfig {
+            model: model.into(),
+            dataset: "cifar100".into(),
+            method: method.into(),
+            workers: 1,
+            batch: 64,
+            steps,
+            lr: 0.08,
+            momentum: 0.9,
+            weight_decay: 5e-4,
+            lr_decay_steps: vec![steps / 2, steps * 3 / 4],
+            lr_decay: 0.1,
+            warmup_steps: 0,
+            bucket_size: 2048,
+            clip_factor: None,
+            seed: 42,
+            eval_every: 0,
+            quantize_downlink: false,
+        }
+    }
+
+    /// Dataset matching a model's input dim at the current scale.
+    pub fn cifar100_ds(in_dim: usize) -> ClassDataset {
+        let mut spec = DatasetSpec::cifar100_like(in_dim);
+        if !full_scale() {
+            spec.train_n = 8192;
+            spec.test_n = 2048;
+        }
+        ClassDataset::generate(spec)
+    }
+
+    pub fn cifar10_ds(in_dim: usize) -> ClassDataset {
+        let mut spec = DatasetSpec::cifar10_like(in_dim);
+        if !full_scale() {
+            spec.train_n = 4096;
+            spec.test_n = 1024;
+        }
+        ClassDataset::generate(spec)
+    }
+
+    pub fn imagenet_ds(in_dim: usize) -> ClassDataset {
+        let mut spec = DatasetSpec::imagenet_like(in_dim);
+        if !full_scale() {
+            spec.train_n = 8192;
+            spec.test_n = 2048;
+            spec.classes = 100;
+        }
+        ClassDataset::generate(spec)
+    }
+
+    /// Run one native-backend training config against a dataset.
+    pub fn run_native(cfg: TrainConfig, ds: &ClassDataset) -> Result<TrainOutput> {
+        let factory = native_backend_factory(&cfg.model)?;
+        Trainer::new(cfg, ds)?.run(factory)
+    }
+}

@@ -1,0 +1,154 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `orq <subcommand> [--key value | --flag]...`
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut it = args.into_iter().peekable();
+        let subcommand = if it.peek().map(|a| a.starts_with("--")).unwrap_or(false) {
+            String::new() // options-only invocation (examples/benches)
+        } else {
+            it.next().unwrap_or_default()
+        };
+        let mut out = Args { subcommand, ..Default::default() };
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| Error::InvalidArg(format!("expected --option, got {a:?}")))?
+                .to_string();
+            if key.is_empty() {
+                return Err(Error::InvalidArg("empty option name".into()));
+            }
+            // `--key=value` or `--key value` or bare flag
+            if let Some((k, v)) = key.split_once('=') {
+                out.opts.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                out.opts.insert(key, it.next().unwrap());
+            } else {
+                out.flags.push(key);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| Error::InvalidArg(format!("--{key}: cannot parse {s:?}"))),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Unknown-option guard: every provided option must be in `known`.
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.opts.keys().chain(self.flags.iter()) {
+            if !known.contains(&k.as_str()) {
+                return Err(Error::InvalidArg(format!(
+                    "unknown option --{k} (known: {})",
+                    known.join(", ")
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+pub const USAGE: &str = "\
+orq — optimal gradient quantization for distributed training (ORQ/BinGrad)
+
+USAGE:
+  orq train [--config FILE] [--model M] [--method Q] [--workers N]
+            [--steps N] [--batch N] [--dataset D] [--bucket N] [--clip C]
+            [--backend native|pjrt] [--artifacts DIR] [--out DIR] [--seed N]
+  orq info  [--artifacts DIR]          inspect the AOT artifact manifest
+  orq demo  [--method Q] [--n N]       quantize a synthetic gradient, show stats
+  orq help
+
+METHODS: fp, signsgd, bingrad-pb, bingrad-b, terngrad, qsgd-S, linear-S, orq-S
+MODELS (native): mlp_s, mlp_m, mlp_l, mlp:d0-d1-...  (pjrt): names from meta.json
+DATASETS: cifar10, cifar100, imagenet
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("train --model mlp_s --steps 100 --verbose");
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.get("model"), Some("mlp_s"));
+        assert_eq!(a.get_parse::<usize>("steps").unwrap(), Some(100));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("train --method=orq-9 --lr=0.05");
+        assert_eq!(a.get("method"), Some("orq-9"));
+        assert_eq!(a.get_parse::<f32>("lr").unwrap(), Some(0.05));
+    }
+
+    #[test]
+    fn defaults_and_missing() {
+        let a = parse("info");
+        assert_eq!(a.get_or("artifacts", "artifacts"), "artifacts");
+        assert_eq!(a.get_parse::<usize>("steps").unwrap(), None);
+    }
+
+    #[test]
+    fn bad_parse_errors() {
+        let a = parse("train --steps abc");
+        assert!(a.get_parse::<usize>("steps").is_err());
+        assert!(Args::parse(["train".into(), "loose".into()]).is_err());
+    }
+
+    #[test]
+    fn unknown_option_guard() {
+        let a = parse("train --model mlp_s --typo 1");
+        assert!(a.check_known(&["model"]).is_err());
+        assert!(a.check_known(&["model", "typo"]).is_ok());
+    }
+
+    #[test]
+    fn empty_args() {
+        let a = Args::parse(std::iter::empty::<String>()).unwrap();
+        assert_eq!(a.subcommand, "");
+    }
+}

@@ -1,0 +1,169 @@
+//! Index packing: fixed-width bit packing and base-s ("entropy-ideal")
+//! packing.
+//!
+//! Fixed-width spends `ceil(log2 s)` bits/element (2 bits for s=3). The
+//! paper's reported compression ratios (×20.2 for 3 levels, ×13.8 for 5,
+//! ×10.1 for 9) correspond to the *ideal* `log2(s)` bits/element; base-s
+//! packing reaches that asymptotically by radix-encoding groups of digits
+//! into u64 words (40 trits / 27 pentits / 20 nonits per word).
+
+/// Pack `indices` (< 2^bits each) at `bits` per element.
+pub fn pack_fixed(indices: &[u8], bits: u32) -> Vec<u8> {
+    assert!((1..=8).contains(&bits));
+    let total_bits = indices.len() * bits as usize;
+    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    let mut bitpos = 0usize;
+    for &idx in indices {
+        debug_assert!((idx as u32) < (1 << bits));
+        let byte = bitpos / 8;
+        let off = (bitpos % 8) as u32;
+        out[byte] |= idx << off;
+        if off + bits > 8 {
+            out[byte + 1] |= idx >> (8 - off);
+        }
+        bitpos += bits as usize;
+    }
+    out
+}
+
+/// Unpack `n` elements at `bits` per element.
+pub fn unpack_fixed(bytes: &[u8], n: usize, bits: u32) -> Vec<u8> {
+    assert!((1..=8).contains(&bits));
+    let mask = ((1u16 << bits) - 1) as u8;
+    let mut out = Vec::with_capacity(n);
+    let mut bitpos = 0usize;
+    for _ in 0..n {
+        let byte = bitpos / 8;
+        let off = (bitpos % 8) as u32;
+        let mut v = bytes[byte] >> off;
+        if off + bits > 8 {
+            v |= bytes[byte + 1] << (8 - off);
+        }
+        out.push(v & mask);
+        bitpos += bits as usize;
+    }
+    out
+}
+
+/// Max digits of radix `s` that fit a u64: largest g with s^g ≤ 2^64.
+pub fn digits_per_word(s: usize) -> usize {
+    debug_assert!(s >= 2);
+    let mut g = 0usize;
+    let mut acc: u128 = 1;
+    loop {
+        acc *= s as u128;
+        if acc > u128::from(u64::MAX) + 1 {
+            return g;
+        }
+        g += 1;
+    }
+}
+
+/// Radix-encode indices (< s each) into u64 words, little-endian digits.
+pub fn pack_base_s(indices: &[u8], s: usize) -> Vec<u8> {
+    let g = digits_per_word(s);
+    let mut out = Vec::with_capacity(indices.len().div_ceil(g) * 8);
+    for chunk in indices.chunks(g) {
+        let mut word: u64 = 0;
+        for &d in chunk.iter().rev() {
+            debug_assert!((d as usize) < s);
+            word = word * s as u64 + d as u64;
+        }
+        out.extend_from_slice(&word.to_le_bytes());
+    }
+    out
+}
+
+/// Decode `n` radix-s digits from packed u64 words.
+pub fn unpack_base_s(bytes: &[u8], n: usize, s: usize) -> Vec<u8> {
+    let g = digits_per_word(s);
+    let mut out = Vec::with_capacity(n);
+    for chunk in bytes.chunks(8) {
+        let mut word = u64::from_le_bytes(chunk.try_into().expect("word-aligned payload"));
+        for _ in 0..g {
+            if out.len() == n {
+                break;
+            }
+            out.push((word % s as u64) as u8);
+            word /= s as u64;
+        }
+        if out.len() == n {
+            break;
+        }
+    }
+    assert_eq!(out.len(), n, "payload too short");
+    out
+}
+
+/// Effective bits/element of base-s packing (asymptotic, exact per word).
+pub fn base_s_bits_per_element(s: usize) -> f64 {
+    64.0 / digits_per_word(s) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    fn rand_indices(n: usize, s: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Rng::seed_from(seed);
+        (0..n).map(|_| rng.below(s as u64) as u8).collect()
+    }
+
+    #[test]
+    fn fixed_roundtrip_all_widths() {
+        for bits in 1..=8u32 {
+            let s = 1usize << bits;
+            for n in [0usize, 1, 7, 8, 9, 63, 64, 65, 1000] {
+                let idx = rand_indices(n, s, bits as u64 * 100 + n as u64);
+                let packed = pack_fixed(&idx, bits);
+                assert_eq!(packed.len(), (n * bits as usize).div_ceil(8));
+                assert_eq!(unpack_fixed(&packed, n, bits), idx, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn digits_per_word_known_values() {
+        assert_eq!(digits_per_word(2), 64);
+        assert_eq!(digits_per_word(3), 40); // 3^40 < 2^64 < 3^41
+        assert_eq!(digits_per_word(5), 27);
+        assert_eq!(digits_per_word(9), 20);
+        assert_eq!(digits_per_word(16), 16);
+        assert_eq!(digits_per_word(256), 8);
+    }
+
+    #[test]
+    fn base_s_roundtrip() {
+        for s in [2usize, 3, 5, 9, 17] {
+            for n in [0usize, 1, 19, 20, 21, 40, 1000] {
+                let idx = rand_indices(n, s, s as u64 * 1000 + n as u64);
+                let packed = pack_base_s(&idx, s);
+                assert_eq!(unpack_base_s(&packed, n, s), idx, "s={s} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn base_s_beats_fixed_for_non_powers() {
+        // 3 levels: fixed = 2 bits, base-3 = 1.6 bits.
+        assert!(base_s_bits_per_element(3) < 2.0);
+        assert!((base_s_bits_per_element(3) - 1.6).abs() < 1e-9);
+        // 9 levels: fixed = 4, base-9 = 3.2
+        assert!((base_s_bits_per_element(9) - 3.2).abs() < 1e-9);
+        // powers of two identical
+        assert_eq!(base_s_bits_per_element(2), 1.0);
+    }
+
+    #[test]
+    fn paper_compression_ratios() {
+        // Paper Table 2: ×20.2 (3 lvls), ×13.8 (5 lvls), ×10.1 (9 lvls).
+        // 32 / bits-per-element with base-s packing should land close.
+        let r3 = 32.0 / base_s_bits_per_element(3);
+        let r5 = 32.0 / base_s_bits_per_element(5);
+        let r9 = 32.0 / base_s_bits_per_element(9);
+        assert!((r3 - 20.0).abs() < 0.5, "r3={r3}");
+        assert!((r5 - 13.5).abs() < 0.5, "r5={r5}");
+        assert!((r9 - 10.0).abs() < 0.5, "r9={r9}");
+    }
+}

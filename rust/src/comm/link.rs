@@ -1,0 +1,106 @@
+//! Link model: `time = latency + bytes / bandwidth` with exact byte
+//! accounting — the substrate behind Table 1's "Comm Time" column.
+
+/// A simulated network link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Link {
+    /// Bandwidth in bits per second (paper: 10 Gbps).
+    pub bandwidth_bps: f64,
+    /// One-way latency in seconds.
+    pub latency_s: f64,
+}
+
+impl Link {
+    /// The paper's Table 1 testbed: 10 Gbps, zero modeled latency.
+    pub fn ten_gbps() -> Self {
+        Link { bandwidth_bps: 10e9, latency_s: 0.0 }
+    }
+
+    /// A federated-edge-like uplink (25 Mbps, 20 ms) for the motivation
+    /// scenarios in §1.
+    pub fn edge_uplink() -> Self {
+        Link { bandwidth_bps: 25e6, latency_s: 0.020 }
+    }
+
+    pub fn new(bandwidth_bps: f64, latency_s: f64) -> Self {
+        assert!(bandwidth_bps > 0.0);
+        Link { bandwidth_bps, latency_s }
+    }
+
+    /// Time to push `bytes` through this link, seconds.
+    pub fn transfer_time(&self, bytes: usize) -> f64 {
+        self.latency_s + (bytes as f64 * 8.0) / self.bandwidth_bps
+    }
+}
+
+/// Running account of simulated traffic over one link.
+#[derive(Debug, Clone, Default)]
+pub struct TrafficMeter {
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    pub time_s: f64,
+    pub messages: u64,
+}
+
+impl TrafficMeter {
+    pub fn record_up(&mut self, link: &Link, bytes: usize) {
+        self.bytes_up += bytes as u64;
+        self.time_s += link.transfer_time(bytes);
+        self.messages += 1;
+    }
+
+    pub fn record_down(&mut self, link: &Link, bytes: usize) {
+        self.bytes_down += bytes as u64;
+        self.time_s += link.transfer_time(bytes);
+        self.messages += 1;
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_up + self.bytes_down
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table1_comm_times() {
+        // Table 1: time to transmit one FP32 gradient at 10 Gbps.
+        // AlexNet 61.1M -> 195 ms; ResNet-50 25.6M -> 82 ms, etc.
+        let link = Link::ten_gbps();
+        let cases: [(f64, f64); 5] = [
+            (61.1e6, 0.195),  // AlexNet
+            (143.7e6, 0.460), // VGG-19
+            (28.7e6, 0.092),  // DenseNet-161
+            (13.0e6, 0.044),  // GoogLeNet
+            (25.6e6, 0.082),  // ResNet-50
+        ];
+        for (params, expect_s) in cases {
+            let t = link.transfer_time((params * 4.0) as usize);
+            assert!(
+                (t - expect_s).abs() / expect_s < 0.07,
+                "params={params}: {t}s vs paper {expect_s}s"
+            );
+        }
+    }
+
+    #[test]
+    fn latency_additive() {
+        let link = Link::new(1e9, 0.010);
+        assert!((link.transfer_time(0) - 0.010).abs() < 1e-12);
+        let t = link.transfer_time(1_000_000); // 8 Mbit / 1 Gbps = 8 ms
+        assert!((t - 0.018).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn meter_accumulates() {
+        let link = Link::ten_gbps();
+        let mut m = TrafficMeter::default();
+        m.record_up(&link, 1000);
+        m.record_down(&link, 500);
+        assert_eq!(m.total_bytes(), 1500);
+        assert_eq!(m.messages, 2);
+        assert!(m.time_s > 0.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Communication substrate: bandwidth/latency link model, simulated
+//! parameter-server topology over real channels, and a ring all-reduce
+//! cost model.
+//!
+//! The paper's Table 1 costs gradients at 10 Gbps; all transfer *times*
+//! here come from [`Link::transfer_time`] (a simulated clock — nothing
+//! sleeps), while the *bytes* come from the exact wire accounting in
+//! [`crate::codec`]. The parameter-server exchange itself runs over real
+//! `std::sync::mpsc` channels between worker threads and the server
+//! (Algorithm 2 of the paper).
+
+pub mod link;
+pub mod ps;
+pub mod ring;
+
+pub use link::Link;
+pub use ps::{ParameterServer, WorkerHandle};

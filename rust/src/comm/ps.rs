@@ -1,0 +1,187 @@
+//! Synchronous parameter-server exchange (paper Algorithm 2) over real
+//! `std::sync::mpsc` channels, with simulated-time accounting.
+//!
+//! Topology: L workers ⇄ 1 server. Each round every worker uploads its
+//! encoded gradient; the server aggregates and broadcasts one message to
+//! every worker. Wall-clock never sleeps — the round's *simulated* time is
+//! `max_l(uplink_l) + broadcast` (synchronous SGD critical path).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use super::link::{Link, TrafficMeter};
+use crate::error::{Error, Result};
+
+/// Message from a worker: (worker id, encoded gradient bytes).
+type Upload = (usize, Vec<u8>);
+
+/// The server's end of the topology.
+pub struct ParameterServer {
+    link: Link,
+    uplink_rx: Receiver<Upload>,
+    downlinks: Vec<Sender<Vec<u8>>>,
+    pub meter: TrafficMeter,
+    /// Simulated seconds spent in communication so far.
+    pub sim_time_s: f64,
+}
+
+/// A worker's end of the topology.
+pub struct WorkerHandle {
+    pub id: usize,
+    uplink_tx: Sender<Upload>,
+    downlink_rx: Receiver<Vec<u8>>,
+}
+
+impl ParameterServer {
+    /// Build the star topology; returns the server and the L worker handles.
+    pub fn new(num_workers: usize, link: Link) -> (ParameterServer, Vec<WorkerHandle>) {
+        assert!(num_workers > 0);
+        let (uplink_tx, uplink_rx) = channel::<Upload>();
+        let mut downlinks = Vec::with_capacity(num_workers);
+        let mut handles = Vec::with_capacity(num_workers);
+        for id in 0..num_workers {
+            let (dtx, drx) = channel::<Vec<u8>>();
+            downlinks.push(dtx);
+            handles.push(WorkerHandle { id, uplink_tx: uplink_tx.clone(), downlink_rx: drx });
+        }
+        (
+            ParameterServer {
+                link,
+                uplink_rx,
+                downlinks,
+                meter: TrafficMeter::default(),
+                sim_time_s: 0.0,
+            },
+            handles,
+        )
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.downlinks.len()
+    }
+
+    /// Collect exactly one upload from every worker (any arrival order).
+    /// Advances simulated time by the slowest uplink (synchronous barrier).
+    pub fn gather(&mut self) -> Result<Vec<Vec<u8>>> {
+        let n = self.num_workers();
+        let mut slots: Vec<Option<Vec<u8>>> = (0..n).map(|_| None).collect();
+        let mut max_uplink = 0.0f64;
+        for _ in 0..n {
+            let (id, bytes) = self
+                .uplink_rx
+                .recv()
+                .map_err(|_| Error::Comm("worker channel closed mid-round".into()))?;
+            if id >= n {
+                return Err(Error::Comm(format!("unknown worker id {id}")));
+            }
+            if slots[id].is_some() {
+                return Err(Error::Comm(format!("duplicate upload from worker {id}")));
+            }
+            max_uplink = max_uplink.max(self.link.transfer_time(bytes.len()));
+            self.meter.record_up(&self.link, bytes.len());
+            slots[id] = Some(bytes);
+        }
+        self.sim_time_s += max_uplink;
+        Ok(slots.into_iter().map(|s| s.unwrap()).collect())
+    }
+
+    /// Broadcast one message to every worker. Advances simulated time by a
+    /// single transfer (tree/multicast assumption, same as the paper's
+    /// "broadcast" step).
+    pub fn broadcast(&mut self, bytes: &[u8]) -> Result<()> {
+        for tx in &self.downlinks {
+            tx.send(bytes.to_vec())
+                .map_err(|_| Error::Comm("worker hung up before broadcast".into()))?;
+        }
+        self.meter.record_down(&self.link, bytes.len());
+        self.sim_time_s += self.link.transfer_time(bytes.len());
+        Ok(())
+    }
+}
+
+impl WorkerHandle {
+    /// Upload this round's encoded gradient.
+    pub fn send_grad(&self, bytes: Vec<u8>) -> Result<()> {
+        self.uplink_tx
+            .send((self.id, bytes))
+            .map_err(|_| Error::Comm("server hung up".into()))
+    }
+
+    /// Block for the server's broadcast.
+    pub fn recv_broadcast(&self) -> Result<Vec<u8>> {
+        self.downlink_rx
+            .recv()
+            .map_err(|_| Error::Comm("server hung up before broadcast".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_round_in_process() {
+        let (mut srv, workers) = ParameterServer::new(3, Link::ten_gbps());
+        for w in &workers {
+            w.send_grad(vec![w.id as u8; 100]).unwrap();
+        }
+        let uploads = srv.gather().unwrap();
+        assert_eq!(uploads.len(), 3);
+        for (i, u) in uploads.iter().enumerate() {
+            assert_eq!(u[0] as usize, i, "uploads ordered by worker id");
+        }
+        srv.broadcast(&[9, 9]).unwrap();
+        for w in &workers {
+            assert_eq!(w.recv_broadcast().unwrap(), vec![9, 9]);
+        }
+        assert_eq!(srv.meter.messages, 4);
+        assert_eq!(srv.meter.bytes_up, 300);
+        assert_eq!(srv.meter.bytes_down, 2);
+    }
+
+    #[test]
+    fn multi_threaded_round() {
+        let (mut srv, workers) = ParameterServer::new(4, Link::ten_gbps());
+        let threads: Vec<_> = workers
+            .into_iter()
+            .map(|w| {
+                std::thread::spawn(move || {
+                    w.send_grad(vec![w.id as u8; 10 * (w.id + 1)]).unwrap();
+                    w.recv_broadcast().unwrap()
+                })
+            })
+            .collect();
+        let uploads = srv.gather().unwrap();
+        assert_eq!(uploads[3].len(), 40);
+        srv.broadcast(&[7]).unwrap();
+        for t in threads {
+            assert_eq!(t.join().unwrap(), vec![7]);
+        }
+    }
+
+    #[test]
+    fn sim_time_is_critical_path() {
+        let link = Link::new(8e6, 0.0); // 1 MB/s
+        let (mut srv, workers) = ParameterServer::new(2, link);
+        workers[0].send_grad(vec![0; 1_000_000]).unwrap(); // 1 s
+        workers[1].send_grad(vec![0; 500_000]).unwrap(); // 0.5 s
+        srv.gather().unwrap();
+        assert!((srv.sim_time_s - 1.0).abs() < 1e-9, "slowest uplink wins");
+        srv.broadcast(&vec![0; 2_000_000]).unwrap(); // +2 s
+        assert!((srv.sim_time_s - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn duplicate_upload_rejected() {
+        let (mut srv, workers) = ParameterServer::new(2, Link::ten_gbps());
+        workers[0].send_grad(vec![1]).unwrap();
+        workers[0].send_grad(vec![2]).unwrap();
+        assert!(srv.gather().is_err());
+    }
+
+    #[test]
+    fn closed_channel_errors() {
+        let (mut srv, workers) = ParameterServer::new(1, Link::ten_gbps());
+        drop(workers);
+        assert!(srv.gather().is_err());
+    }
+}

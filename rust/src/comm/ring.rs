@@ -1,0 +1,80 @@
+//! Ring all-reduce cost model — the decentralized alternative the paper
+//! mentions ("on commercial clusters it can be conducted in a
+//! decentralized ring-based all-reduce manner without the server").
+//!
+//! Classic bandwidth-optimal ring: each of the L nodes sends 2·(L−1)/L of
+//! the buffer over its link, in 2·(L−1) serialized steps of b/L bytes.
+//! Quantized gradients complicate ring reduce-scatter (sums of quantized
+//! values are no longer in the codebook), so — like the paper — we use the
+//! ring only as a *cost model* for FP and for decode-reduce-requantize
+//! variants, to compare topologies in the Table 1 bench.
+
+use super::link::Link;
+
+/// Time for a ring all-reduce of `bytes` over `n` nodes.
+pub fn allreduce_time(link: &Link, n: usize, bytes: usize) -> f64 {
+    assert!(n > 0);
+    if n == 1 {
+        return 0.0;
+    }
+    let steps = 2 * (n - 1);
+    let chunk = bytes as f64 / n as f64;
+    steps as f64 * (link.latency_s + chunk * 8.0 / link.bandwidth_bps)
+}
+
+/// Time for the parameter-server exchange of the same buffer:
+/// slowest-of-L uplinks (all equal here) + one broadcast.
+pub fn ps_time(link: &Link, _n: usize, up_bytes: usize, down_bytes: usize) -> f64 {
+    link.transfer_time(up_bytes) + link.transfer_time(down_bytes)
+}
+
+/// Decode-reduce-requantize ring step count: every hop pays a decode and a
+/// requantize, so the *message* stays small but the effective bytes per
+/// hop equal the quantized size (modeled; used by the ablation bench).
+pub fn quantized_ring_time(link: &Link, n: usize, quant_bytes: usize) -> f64 {
+    allreduce_time(link, n, quant_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_node_free() {
+        assert_eq!(allreduce_time(&Link::ten_gbps(), 1, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn ring_asymptotically_bandwidth_optimal() {
+        // As n grows, total time approaches 2 * b / bandwidth.
+        let link = Link::new(1e9, 0.0);
+        let b = 10_000_000usize;
+        let t2 = allreduce_time(&link, 2, b);
+        let t64 = allreduce_time(&link, 64, b);
+        let optimal = 2.0 * (b as f64) * 8.0 / 1e9;
+        assert!((t2 - optimal * 0.5).abs() < 1e-9); // 2 nodes: (2·1/2)·b
+        assert!((t64 - optimal).abs() / optimal < 0.05, "t64={t64} opt={optimal}");
+    }
+
+    #[test]
+    fn latency_scales_with_steps() {
+        let link = Link::new(1e12, 0.001); // latency-dominated
+        let t4 = allreduce_time(&link, 4, 1000);
+        let t8 = allreduce_time(&link, 8, 1000);
+        assert!((t4 - 0.006).abs() < 1e-6);
+        assert!((t8 - 0.014).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ps_vs_ring_crossover() {
+        // Small clusters: PS (2 transfers of full buffer) ≈ ring; the ring
+        // wins on latency-free links for large n because each node only
+        // moves 2(n-1)/n of the buffer — but PS with multicast broadcast
+        // moves 2 full buffers regardless of n.
+        let link = Link::new(1e9, 0.0);
+        let b = 1_000_000usize;
+        let ring = allreduce_time(&link, 16, b);
+        let ps = ps_time(&link, 16, b, b);
+        assert!(ring < ps * 1.05, "ring {ring} should not lose badly to ps {ps}");
+    }
+}

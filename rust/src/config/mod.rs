@@ -1,0 +1,366 @@
+//! Experiment configuration: typed configs + a TOML-subset parser
+//! (serde is unavailable offline — DESIGN.md §3).
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string
+//! (`"x"`), bool, integer, float and flat arrays (`[1, 2, 3]`), `#`
+//! comments. Exactly what experiment files need, nothing more.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// `section.key` -> value map.
+pub type ConfigMap = BTreeMap<String, Value>;
+
+/// Parse TOML-subset text into a flat `section.key` map.
+pub fn parse(text: &str) -> Result<ConfigMap> {
+    let mut out = ConfigMap::new();
+    let mut section = String::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| Error::Config(format!("line {}: unterminated section", ln + 1)))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or_else(|| Error::Config(format!("line {}: expected key = value", ln + 1)))?;
+        let full_key = if section.is_empty() {
+            key.trim().to_string()
+        } else {
+            format!("{section}.{}", key.trim())
+        };
+        out.insert(full_key, parse_value(val.trim(), ln + 1)?);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, ln: usize) -> Result<Value> {
+    let err = |m: &str| Error::Config(format!("line {ln}: {m}: {s:?}"));
+    if s.is_empty() {
+        return Err(err("empty value"));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or_else(|| err("unterminated string"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or_else(|| err("unterminated array"))?;
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part, ln)?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err("unrecognized value"))
+}
+
+/// Full training-run configuration (defaults follow the paper's §5 setup,
+/// scaled to the synthetic substrate).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    /// Model: `mlp_s`/`mlp_m`/`mlp_l` (native) or a `meta.json` model name
+    /// prefixed with `pjrt:` (e.g. `pjrt:mlp_s`).
+    pub model: String,
+    /// Dataset preset: `cifar10` | `cifar100` | `imagenet`.
+    pub dataset: String,
+    /// Quantizer name (see `quant::from_name`).
+    pub method: String,
+    pub workers: usize,
+    /// Global batch size, split evenly across workers (paper §5.2).
+    pub batch: usize,
+    pub steps: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    /// Steps at which lr is multiplied by `lr_decay` (paper: epochs 100/150
+    /// of 200 → fractions 0.5/0.75 of total steps).
+    pub lr_decay_steps: Vec<usize>,
+    pub lr_decay: f32,
+    /// Linear warmup steps from lr/10 (paper: 5 epochs when clipping).
+    pub warmup_steps: usize,
+    pub bucket_size: usize,
+    pub clip_factor: Option<f32>,
+    pub seed: u64,
+    pub eval_every: usize,
+    /// Quantize the server->worker broadcast too (paper §4 option (b)).
+    pub quantize_downlink: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "mlp_s".into(),
+            dataset: "cifar100".into(),
+            method: "fp".into(),
+            workers: 1,
+            batch: 128,
+            steps: 600,
+            lr: 0.1,
+            momentum: 0.9,
+            weight_decay: 5e-4,
+            lr_decay_steps: vec![300, 450],
+            lr_decay: 0.1,
+            warmup_steps: 0,
+            bucket_size: 2048,
+            clip_factor: None,
+            seed: 42,
+            eval_every: 100,
+            quantize_downlink: false,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Read overrides from a parsed `[train]` section.
+    pub fn from_map(map: &ConfigMap) -> Result<Self> {
+        let mut c = TrainConfig::default();
+        let get = |k: &str| map.get(&format!("train.{k}")).or_else(|| map.get(k));
+        macro_rules! set {
+            ($field:ident, $conv:ident, $name:expr) => {
+                if let Some(v) = get($name) {
+                    c.$field = v.$conv().ok_or_else(|| {
+                        Error::Config(format!("bad type for {}", $name))
+                    })? as _;
+                }
+            };
+        }
+        if let Some(v) = get("model") {
+            c.model = v.as_str().ok_or_else(|| Error::Config("model".into()))?.to_string();
+        }
+        if let Some(v) = get("dataset") {
+            c.dataset = v.as_str().ok_or_else(|| Error::Config("dataset".into()))?.to_string();
+        }
+        if let Some(v) = get("method") {
+            c.method = v.as_str().ok_or_else(|| Error::Config("method".into()))?.to_string();
+        }
+        set!(workers, as_i64, "workers");
+        set!(batch, as_i64, "batch");
+        set!(steps, as_i64, "steps");
+        set!(lr, as_f64, "lr");
+        set!(momentum, as_f64, "momentum");
+        set!(weight_decay, as_f64, "weight_decay");
+        set!(lr_decay, as_f64, "lr_decay");
+        set!(warmup_steps, as_i64, "warmup_steps");
+        set!(bucket_size, as_i64, "bucket_size");
+        set!(seed, as_i64, "seed");
+        set!(eval_every, as_i64, "eval_every");
+        if let Some(v) = get("quantize_downlink") {
+            c.quantize_downlink =
+                v.as_bool().ok_or_else(|| Error::Config("quantize_downlink".into()))?;
+        }
+        if let Some(v) = get("clip_factor") {
+            c.clip_factor = Some(
+                v.as_f64().ok_or_else(|| Error::Config("clip_factor".into()))? as f32
+            );
+        }
+        if let Some(v) = get("lr_decay_steps") {
+            match v {
+                Value::Arr(items) => {
+                    c.lr_decay_steps = items
+                        .iter()
+                        .map(|i| {
+                            i.as_i64().map(|x| x as usize).ok_or_else(|| {
+                                Error::Config("lr_decay_steps must be ints".into())
+                            })
+                        })
+                        .collect::<Result<_>>()?;
+                }
+                _ => return Err(Error::Config("lr_decay_steps must be an array".into())),
+            }
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            return Err(Error::Config("workers must be >= 1".into()));
+        }
+        if self.batch == 0 || self.batch % self.workers != 0 {
+            return Err(Error::Config(format!(
+                "batch {} must be a positive multiple of workers {}",
+                self.batch, self.workers
+            )));
+        }
+        if self.bucket_size == 0 {
+            return Err(Error::Config("bucket_size must be >= 1".into()));
+        }
+        if !(0.0..1.0).contains(&(self.momentum as f64)) {
+            return Err(Error::Config("momentum must be in [0,1)".into()));
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_map(&parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars_and_sections() {
+        let m = parse(
+            r#"
+            # experiment
+            top = 1
+            [train]
+            model = "mlp_m"
+            lr = 0.05
+            workers = 4
+            clip = true
+            decay = [300, 450]  # comment
+            "#,
+        )
+        .unwrap();
+        assert_eq!(m["top"], Value::Int(1));
+        assert_eq!(m["train.model"], Value::Str("mlp_m".into()));
+        assert_eq!(m["train.lr"], Value::Float(0.05));
+        assert_eq!(m["train.clip"], Value::Bool(true));
+        assert_eq!(
+            m["train.decay"],
+            Value::Arr(vec![Value::Int(300), Value::Int(450)])
+        );
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse("novalue =").is_err());
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("x = \"unterminated").is_err());
+        assert!(parse("bare line").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_ok() {
+        let m = parse("x = \"a#b\"").unwrap();
+        assert_eq!(m["x"], Value::Str("a#b".into()));
+    }
+
+    #[test]
+    fn train_config_from_map() {
+        let m = parse(
+            r#"
+            [train]
+            model = "mlp_l"
+            method = "orq-9"
+            workers = 4
+            batch = 256
+            clip_factor = 2.5
+            lr_decay_steps = [100, 200]
+            quantize_downlink = true
+            "#,
+        )
+        .unwrap();
+        let c = TrainConfig::from_map(&m).unwrap();
+        assert_eq!(c.model, "mlp_l");
+        assert_eq!(c.method, "orq-9");
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.clip_factor, Some(2.5));
+        assert_eq!(c.lr_decay_steps, vec![100, 200]);
+        assert!(c.quantize_downlink);
+        // defaults preserved
+        assert_eq!(c.momentum, 0.9);
+    }
+
+    #[test]
+    fn validation_catches_bad_combos() {
+        let mut c = TrainConfig::default();
+        c.workers = 3;
+        c.batch = 128; // not a multiple of 3
+        assert!(c.validate().is_err());
+        c.batch = 129;
+        assert!(c.validate().is_ok());
+        c.workers = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn default_matches_paper_setup() {
+        let c = TrainConfig::default();
+        assert_eq!(c.momentum, 0.9);
+        assert_eq!(c.lr, 0.1);
+        assert_eq!(c.bucket_size, 2048);
+        assert_eq!(c.lr_decay, 0.1);
+        assert!(c.clip_factor.is_none(), "CIFAR default: no clipping (§5.1)");
+    }
+}

@@ -1,0 +1,17 @@
+//! The training coordinator — paper Algorithm 2 as a runtime.
+//!
+//! [`trainer::Trainer`] runs synchronous data-parallel SGD: L worker
+//! threads each compute a local gradient (native backend or PJRT),
+//! solve the quantization levels at runtime, quantize + encode, and ship
+//! bytes to the server over the [`crate::comm::ps`] star; the server
+//! decodes, averages, (optionally re-quantizes) and broadcasts; every
+//! node applies the identical [`optimizer::SgdMomentum`] update so
+//! parameters never need to move after initialization.
+
+pub mod optimizer;
+pub mod schedule;
+pub mod trainer;
+
+pub use optimizer::SgdMomentum;
+pub use schedule::LrSchedule;
+pub use trainer::{Trainer, TrainOutput};

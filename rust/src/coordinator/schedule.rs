@@ -1,0 +1,72 @@
+//! Learning-rate schedule: linear warmup from lr/10 (the paper applies a
+//! 5-epoch warmup when clipping is enabled) followed by step decay ×0.1
+//! at the configured boundaries (paper: epochs 100/150 of 200 on CIFAR,
+//! 30/60 of 90 on ImageNet).
+
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub base_lr: f32,
+    pub warmup_steps: usize,
+    pub decay_steps: Vec<usize>,
+    pub decay: f32,
+}
+
+impl LrSchedule {
+    pub fn new(base_lr: f32, warmup_steps: usize, decay_steps: Vec<usize>, decay: f32) -> Self {
+        let mut ds = decay_steps;
+        ds.sort_unstable();
+        LrSchedule { base_lr, warmup_steps, decay_steps: ds, decay }
+    }
+
+    /// Learning rate at step `t` (0-based).
+    pub fn lr_at(&self, t: usize) -> f32 {
+        if self.warmup_steps > 0 && t < self.warmup_steps {
+            // linear from base/10 to base across warmup
+            let frac = t as f32 / self.warmup_steps as f32;
+            return self.base_lr * (0.1 + 0.9 * frac);
+        }
+        let decays = self.decay_steps.iter().filter(|&&d| t >= d).count();
+        self.base_lr * self.decay.powi(decays as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_warmup_step_decay() {
+        let s = LrSchedule::new(0.1, 0, vec![100, 200], 0.1);
+        assert_eq!(s.lr_at(0), 0.1);
+        assert_eq!(s.lr_at(99), 0.1);
+        assert!((s.lr_at(100) - 0.01).abs() < 1e-9);
+        assert!((s.lr_at(250) - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn warmup_starts_at_tenth() {
+        let s = LrSchedule::new(1.0, 10, vec![], 0.1);
+        assert!((s.lr_at(0) - 0.1).abs() < 1e-6);
+        assert!(s.lr_at(5) > 0.5 && s.lr_at(5) < 0.6);
+        assert_eq!(s.lr_at(10), 1.0);
+        assert_eq!(s.lr_at(999), 1.0);
+    }
+
+    #[test]
+    fn warmup_monotone_nondecreasing() {
+        let s = LrSchedule::new(0.1, 50, vec![500], 0.1);
+        let mut prev = 0.0f32;
+        for t in 0..100 {
+            let lr = s.lr_at(t);
+            assert!(lr >= prev - 1e-9, "t={t}");
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn unsorted_decay_steps_are_sorted() {
+        let s = LrSchedule::new(0.1, 0, vec![200, 100], 0.5);
+        assert!((s.lr_at(150) - 0.05).abs() < 1e-9);
+        assert!((s.lr_at(200) - 0.025).abs() < 1e-9);
+    }
+}

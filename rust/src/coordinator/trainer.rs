@@ -1,0 +1,415 @@
+//! Synchronous parameter-server trainer — paper Algorithm 2, threaded.
+//!
+//! Every worker runs in its own thread with its own [`Backend`] instance,
+//! data shard, quantizer RNG stream and optimizer replica. Parameters are
+//! initialized identically everywhere (same seed), and because every node
+//! applies the identical optimizer update on the identical decoded
+//! broadcast Ḡ_t, parameters stay bit-identical across nodes without ever
+//! being transmitted — exactly the structure of the paper's Algorithm 2.
+//!
+//! The server (main thread) gathers the L encoded gradients, decodes and
+//! averages them, optionally re-quantizes the downlink (§4 option b), and
+//! broadcasts. Wire bytes and simulated comm time come from
+//! [`crate::comm`]'s exact accounting.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use crate::codec::{self, Packing};
+use crate::comm::link::Link;
+use crate::comm::ps::ParameterServer;
+use crate::config::TrainConfig;
+use crate::coordinator::optimizer::SgdMomentum;
+use crate::coordinator::schedule::LrSchedule;
+use crate::data::synth::ClassDataset;
+use crate::error::{Error, Result};
+use crate::metrics::series::SeriesLogger;
+use crate::metrics::{RunSummary, StepMetrics};
+use crate::model::{topk_accuracy, Backend};
+use crate::quant::bucket::BucketQuantizer;
+use crate::quant;
+use crate::tensor::rng::Rng;
+
+/// Per-step report from one worker (side channel next to the wire path).
+struct WorkerReport {
+    step: usize,
+    loss: f64,
+    rel_mse: f64,
+    cosine: f64,
+}
+
+/// Everything a finished run produces.
+pub struct TrainOutput {
+    pub summary: RunSummary,
+    pub series: SeriesLogger,
+    /// Final server-side parameters (identical to every worker's).
+    pub params: Vec<f32>,
+}
+
+/// The coordinator.
+pub struct Trainer<'a> {
+    pub cfg: TrainConfig,
+    pub link: Link,
+    ds: &'a ClassDataset,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(cfg: TrainConfig, ds: &'a ClassDataset) -> Result<Self> {
+        cfg.validate()?;
+        if ds.spec.classes < 5 && cfg.eval_every > 0 {
+            // top-5 would be trivially 1.0; allowed, but tables expect ≥5.
+        }
+        Ok(Trainer { cfg, link: Link::ten_gbps(), ds })
+    }
+
+    pub fn with_link(mut self, link: Link) -> Self {
+        self.link = link;
+        self
+    }
+
+    /// Run Algorithm 2 with one backend per node from `make_backend`
+    /// (called with worker id 0..L for workers and L for the server's
+    /// eval replica).
+    pub fn run<F>(&self, make_backend: F) -> Result<TrainOutput>
+    where
+        F: Fn(usize) -> Box<dyn Backend> + Sync,
+    {
+        let cfg = &self.cfg;
+        let l = cfg.workers;
+        let quantizer = quant::from_name(&cfg.method)?;
+        let is_fp = quantizer.num_levels() == 0;
+        let bucketq = match cfg.clip_factor {
+            Some(c) => BucketQuantizer::with_clip(cfg.bucket_size, c),
+            None => BucketQuantizer::new(cfg.bucket_size),
+        };
+        let schedule = LrSchedule::new(
+            cfg.lr,
+            cfg.warmup_steps,
+            cfg.lr_decay_steps.clone(),
+            cfg.lr_decay,
+        );
+        let (mut ps, handles) = ParameterServer::new(l, self.link);
+        let (report_tx, report_rx): (Sender<WorkerReport>, Receiver<WorkerReport>) = channel();
+
+        let mut server_backend = make_backend(l);
+        let param_count = server_backend.param_count();
+        let classes = server_backend.num_classes();
+        if classes < self.ds.spec.classes {
+            return Err(Error::Shape(format!(
+                "model {} has {classes} outputs but dataset has {} classes",
+                cfg.model, self.ds.spec.classes
+            )));
+        }
+        let mut server_params = server_backend.init_params(&mut Rng::seed_from(cfg.seed));
+        let mut server_opt = SgdMomentum::new(param_count, cfg.momentum, cfg.weight_decay);
+        let mut series = SeriesLogger::new();
+        let mut out: Result<TrainOutput> = Err(Error::Comm("trainer did not run".into()));
+
+        std::thread::scope(|scope| {
+            // ---------------- workers ----------------
+            for handle in handles {
+                let w = handle.id;
+                let cfg = cfg.clone();
+                let ds = self.ds;
+                let bucketq = bucketq.clone();
+                let report_tx = report_tx.clone();
+                let make = &make_backend;
+                let schedule = schedule.clone();
+                scope.spawn(move || {
+                    let mut backend = make(w);
+                    let quantizer = quant::from_name(&cfg.method).expect("validated");
+                    let is_fp = quantizer.num_levels() == 0;
+                    let mut params = backend.init_params(&mut Rng::seed_from(cfg.seed));
+                    let mut opt =
+                        SgdMomentum::new(params.len(), cfg.momentum, cfg.weight_decay);
+                    let mut grad = vec![0.0f32; params.len()];
+                    let mut rng_data = Rng::stream(cfg.seed, 1_000 + w as u64);
+                    let mut rng_q = Rng::stream(cfg.seed, 2_000 + w as u64);
+                    let per_worker_batch = cfg.batch / cfg.workers;
+                    for t in 0..cfg.steps {
+                        let batch = ds.worker_batch(w, cfg.workers, per_worker_batch, &mut rng_data);
+                        let loss = backend.loss_grad(&params, &batch, &mut grad);
+                        let (bytes, rel_mse, cosine) = if is_fp {
+                            (codec::encode_fp(&grad), 0.0, 1.0)
+                        } else {
+                            let qg = bucketq.quantize(&grad, quantizer.as_ref(), &mut rng_q);
+                            let e = crate::quant::error::measure(&grad, &qg);
+                            (codec::encode(&qg, &cfg.method, Packing::BaseS), e.rel_mse, e.cosine)
+                        };
+                        report_tx
+                            .send(WorkerReport { step: t, loss: loss as f64, rel_mse, cosine })
+                            .expect("server alive");
+                        handle.send_grad(bytes).expect("server alive");
+                        let bcast = handle.recv_broadcast().expect("server alive");
+                        let avg = codec::decode(&bcast).expect("valid broadcast").to_flat();
+                        opt.step(&mut params, &avg, schedule.lr_at(t));
+                    }
+                });
+            }
+            drop(report_tx);
+
+            // ---------------- server ----------------
+            let run_server = || -> Result<TrainOutput> {
+                let mut avg = vec![0.0f64; param_count];
+                let mut avg32 = vec![0.0f32; param_count];
+                let mut rng_down = Rng::stream(cfg.seed, 3_000);
+                for t in 0..cfg.steps {
+                    let bytes_before = ps.meter.total_bytes();
+                    let time_before = ps.sim_time_s;
+                    let uploads = ps.gather()?;
+                    avg.fill(0.0);
+                    for u in &uploads {
+                        let flat = codec::decode(u)?.to_flat();
+                        if flat.len() != param_count {
+                            return Err(Error::Shape(format!(
+                                "worker gradient has {} elements, expected {param_count}",
+                                flat.len()
+                            )));
+                        }
+                        for (a, v) in avg.iter_mut().zip(flat) {
+                            *a += v as f64;
+                        }
+                    }
+                    let inv = 1.0 / l as f64;
+                    for (a32, a) in avg32.iter_mut().zip(&avg) {
+                        *a32 = (*a * inv) as f32;
+                    }
+                    let bcast = if cfg.quantize_downlink && !is_fp {
+                        let qg = bucketq.quantize(&avg32, quantizer.as_ref(), &mut rng_down);
+                        codec::encode(&qg, &cfg.method, Packing::BaseS)
+                    } else {
+                        codec::encode_fp(&avg32)
+                    };
+                    ps.broadcast(&bcast)?;
+                    // the server applies the decoded broadcast too
+                    let applied = codec::decode(&bcast)?.to_flat();
+                    server_opt.step(&mut server_params, &applied, schedule.lr_at(t));
+
+                    // drain the L reports for this step
+                    let mut loss = 0.0;
+                    let mut rel = 0.0;
+                    let mut cos = 0.0;
+                    for _ in 0..l {
+                        let r = report_rx
+                            .recv()
+                            .map_err(|_| Error::Comm("worker died mid-step".into()))?;
+                        debug_assert_eq!(r.step, t);
+                        loss += r.loss;
+                        rel += r.rel_mse;
+                        cos += r.cosine;
+                    }
+                    series.push(StepMetrics {
+                        step: t,
+                        train_loss: loss * inv,
+                        quant_rel_mse: rel * inv,
+                        quant_cosine: cos * inv,
+                        wire_bytes: ps.meter.total_bytes() - bytes_before,
+                        comm_time_s: ps.sim_time_s - time_before,
+                    });
+
+                    if cfg.eval_every > 0 && (t + 1) % cfg.eval_every == 0 {
+                        let (t1, t5) =
+                            evaluate(server_backend.as_mut(), &server_params, self.ds, classes);
+                        series.push_eval(t + 1, t1, t5);
+                    }
+                }
+                let (top1, top5) = evaluate(server_backend.as_mut(), &server_params, self.ds, classes);
+                series.push_eval(cfg.steps, top1, top5);
+                let ratio = if is_fp {
+                    1.0
+                } else {
+                    codec::compression_ratio(
+                        param_count,
+                        cfg.bucket_size,
+                        quantizer.num_levels(),
+                        Packing::BaseS,
+                        &cfg.method,
+                    )
+                };
+                let summary = RunSummary {
+                    method: cfg.method.clone(),
+                    model: cfg.model.clone(),
+                    steps: cfg.steps,
+                    final_train_loss: series.tail_loss(20),
+                    test_top1: top1,
+                    test_top5: top5,
+                    mean_quant_rel_mse: series.mean_rel_mse(),
+                    total_wire_bytes: series.total_wire_bytes(),
+                    total_comm_time_s: series.total_comm_time(),
+                    compression_ratio: ratio,
+                };
+                Ok(TrainOutput { summary, series, params: server_params })
+            };
+            out = run_server();
+        });
+        // Move the fields back out: run_server consumed them via closure.
+        out
+    }
+}
+
+/// Top-1/top-5 accuracy of `params` on the dataset's test split.
+pub fn evaluate(
+    backend: &mut dyn Backend,
+    params: &[f32],
+    ds: &ClassDataset,
+    classes: usize,
+) -> (f64, f64) {
+    let mut top1 = 0.0;
+    let mut top5 = 0.0;
+    let mut total = 0.0;
+    for b in ds.test_batches(64) {
+        let logits = backend.logits(params, &b);
+        top1 += topk_accuracy(&logits, &b.y, classes, 1) * b.batch as f64;
+        top5 += topk_accuracy(&logits, &b.y, classes, 5.min(classes)) * b.batch as f64;
+        total += b.batch as f64;
+    }
+    (top1 / total.max(1.0), top5 / total.max(1.0))
+}
+
+/// Convenience: build the native backend named by the config.
+pub fn native_backend_factory(model: &str) -> Result<impl Fn(usize) -> Box<dyn Backend> + Sync> {
+    use crate::model::native::NativeMlp;
+    let dims: Vec<usize> = match model {
+        "mlp_s" => vec![256, 512, 512, 100],
+        "mlp_m" => vec![256, 1024, 1024, 1024, 100],
+        "mlp_l" => vec![512, 2048, 2048, 2048, 200],
+        _ if model.starts_with("mlp:") => {
+            // "mlp:16-32-4" → custom dims
+            let dims: Vec<usize> = model[4..]
+                .split('-')
+                .map(|p| p.parse().map_err(|_| Error::Config(format!("bad dims {model:?}"))))
+                .collect::<Result<_>>()?;
+            if dims.len() < 2 {
+                return Err(Error::Config("mlp: needs at least 2 dims".into()));
+            }
+            dims
+        }
+        _ => {
+            return Err(Error::Config(format!(
+                "unknown native model {model:?} (use mlp_s/mlp_m/mlp_l or mlp:d0-d1-...)"
+            )))
+        }
+    };
+    Ok(move |_id: usize| Box::new(NativeMlp::new(dims.clone())) as Box<dyn Backend>)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::DatasetSpec;
+
+    fn tiny_ds() -> ClassDataset {
+        ClassDataset::generate(DatasetSpec {
+            in_dim: 16,
+            classes: 8,
+            train_n: 512,
+            test_n: 256,
+            margin: 3.0,
+            noise: 0.6,
+            label_noise: 0.0,
+            seed: 11,
+        })
+    }
+
+    fn tiny_cfg(method: &str, workers: usize) -> TrainConfig {
+        TrainConfig {
+            model: "mlp:16-32-8".into(),
+            dataset: "tiny".into(),
+            method: method.into(),
+            workers,
+            batch: 32 * workers,
+            steps: 120,
+            lr: 0.1,
+            momentum: 0.9,
+            weight_decay: 1e-4,
+            lr_decay_steps: vec![80],
+            lr_decay: 0.1,
+            warmup_steps: 0,
+            bucket_size: 256,
+            clip_factor: None,
+            seed: 3,
+            eval_every: 0,
+            quantize_downlink: false,
+        }
+    }
+
+    fn run(method: &str, workers: usize) -> TrainOutput {
+        let ds = tiny_ds();
+        let cfg = tiny_cfg(method, workers);
+        let factory = native_backend_factory(&cfg.model).unwrap();
+        Trainer::new(cfg, &ds).unwrap().run(factory).unwrap()
+    }
+
+    #[test]
+    fn fp_learns_single_worker() {
+        let out = run("fp", 1);
+        assert!(out.summary.test_top1 > 0.85, "top1={}", out.summary.test_top1);
+        assert!(out.summary.final_train_loss < 0.7, "loss={}", out.summary.final_train_loss);
+        assert_eq!(out.summary.compression_ratio, 1.0);
+    }
+
+    #[test]
+    fn orq_learns_and_reports_compression() {
+        let out = run("orq-5", 1);
+        assert!(out.summary.test_top1 > 0.8, "top1={}", out.summary.test_top1);
+        // tiny 808-param model pays heavy per-bucket level-table overhead;
+        // large models reach the paper's ×13.8 (see codec tests).
+        assert!(out.summary.compression_ratio > 7.0, "{}", out.summary.compression_ratio);
+        assert!(out.summary.mean_quant_rel_mse > 0.0);
+        assert!(out.summary.total_wire_bytes > 0);
+    }
+
+    #[test]
+    fn distributed_matches_structure() {
+        let out = run("terngrad", 4);
+        assert_eq!(out.series.steps.len(), 120);
+        assert!(out.summary.test_top1 > 0.6, "top1={}", out.summary.test_top1);
+        // 4 uplinks + 1 broadcast per step: bytes > single-worker run
+        let single = run("terngrad", 1);
+        assert!(out.summary.total_wire_bytes > single.summary.total_wire_bytes);
+    }
+
+    #[test]
+    fn quantized_uplink_much_smaller_than_fp() {
+        let fp = run("fp", 2);
+        let q = run("terngrad", 2);
+        // FP broadcast dominates the remaining bytes (downlink still FP);
+        // with quantize_downlink the gap widens further (separate test).
+        assert!(
+            (q.summary.total_wire_bytes as f64) < (fp.summary.total_wire_bytes as f64) * 0.5,
+            "q={} fp={}",
+            q.summary.total_wire_bytes,
+            fp.summary.total_wire_bytes
+        );
+    }
+
+    #[test]
+    fn downlink_quantization_shrinks_broadcast() {
+        let ds = tiny_ds();
+        let mut cfg = tiny_cfg("orq-3", 2);
+        cfg.quantize_downlink = true;
+        let factory = native_backend_factory(&cfg.model).unwrap();
+        let out = Trainer::new(cfg, &ds).unwrap().run(factory).unwrap();
+        let mut cfg2 = tiny_cfg("orq-3", 2);
+        cfg2.quantize_downlink = false;
+        let factory2 = native_backend_factory(&cfg2.model).unwrap();
+        let out2 = Trainer::new(cfg2, &ds).unwrap().run(factory2).unwrap();
+        assert!(out.summary.total_wire_bytes < out2.summary.total_wire_bytes);
+        assert!(out.summary.test_top1 > 0.5);
+    }
+
+    #[test]
+    fn determinism_same_seed_same_result() {
+        let a = run("orq-3", 2);
+        let b = run("orq-3", 2);
+        assert_eq!(a.params, b.params);
+        assert_eq!(a.summary.test_top1, b.summary.test_top1);
+    }
+
+    #[test]
+    fn rejects_bad_config() {
+        let ds = tiny_ds();
+        let mut cfg = tiny_cfg("fp", 3);
+        cfg.batch = 32; // not a multiple of 3
+        assert!(Trainer::new(cfg, &ds).is_err());
+    }
+}

@@ -1,0 +1,122 @@
+//! Synthetic character corpus for the transformer LM: a low-entropy
+//! order-1 Markov chain over a byte vocabulary. Learnable structure
+//! (per-state preferred successors) gives the LM a loss floor well below
+//! `ln(vocab)`, so a training curve visibly descends.
+
+use crate::tensor::rng::Rng;
+
+pub struct MarkovCorpus {
+    pub vocab: usize,
+    tokens: Vec<i32>,
+}
+
+impl MarkovCorpus {
+    /// Generate `len` tokens from a random sparse transition structure:
+    /// every state has `branch` preferred successors taking 90% of the
+    /// probability mass.
+    pub fn generate(vocab: usize, len: usize, branch: usize, seed: u64) -> Self {
+        assert!(vocab >= 2 && branch >= 1 && branch < vocab);
+        let mut rng = Rng::seed_from(seed);
+        // preferred successors per state
+        let succ: Vec<Vec<u32>> = (0..vocab)
+            .map(|_| (0..branch).map(|_| rng.below(vocab as u64) as u32).collect())
+            .collect();
+        let mut tokens = Vec::with_capacity(len);
+        let mut state = rng.below(vocab as u64) as u32;
+        for _ in 0..len {
+            tokens.push(state as i32);
+            state = if rng.f32() < 0.9 {
+                succ[state as usize][rng.below(branch as u64) as usize]
+            } else {
+                rng.below(vocab as u64) as u32
+            };
+        }
+        MarkovCorpus { vocab, tokens }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// A `[batch, seq+1]` window batch (flat row-major), random offsets.
+    pub fn batch(&self, batch: usize, seq: usize, rng: &mut Rng) -> Vec<i32> {
+        let window = seq + 1;
+        assert!(self.tokens.len() > window, "corpus shorter than one window");
+        let mut out = Vec::with_capacity(batch * window);
+        for _ in 0..batch {
+            let start = rng.below((self.tokens.len() - window) as u64) as usize;
+            out.extend_from_slice(&self.tokens[start..start + window]);
+        }
+        out
+    }
+
+    /// Entropy rate estimate of the generating process (nats/token):
+    /// H = 0.9·ln(branch/0.9-ish) mix — we just empirically measure the
+    /// conditional distribution from the corpus itself.
+    pub fn empirical_bigram_entropy(&self) -> f64 {
+        let v = self.vocab;
+        let mut counts = vec![0u32; v * v];
+        let mut row_tot = vec![0u32; v];
+        for w in self.tokens.windows(2) {
+            counts[w[0] as usize * v + w[1] as usize] += 1;
+            row_tot[w[0] as usize] += 1;
+        }
+        let n: f64 = (self.tokens.len() - 1) as f64;
+        let mut h = 0.0;
+        for a in 0..v {
+            if row_tot[a] == 0 {
+                continue;
+            }
+            let pa = row_tot[a] as f64 / n;
+            for b in 0..v {
+                let c = counts[a * v + b];
+                if c > 0 {
+                    let p = c as f64 / row_tot[a] as f64;
+                    h -= pa * p * p.ln();
+                }
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_length() {
+        let c = MarkovCorpus::generate(64, 10_000, 3, 1);
+        assert_eq!(c.len(), 10_000);
+        assert!(c.tokens.iter().all(|&t| (0..64).contains(&t)));
+    }
+
+    #[test]
+    fn batch_shape_and_range() {
+        let c = MarkovCorpus::generate(32, 5_000, 2, 2);
+        let b = c.batch(8, 64, &mut Rng::seed_from(0));
+        assert_eq!(b.len(), 8 * 65);
+        assert!(b.iter().all(|&t| (0..32).contains(&t)));
+    }
+
+    #[test]
+    fn entropy_below_uniform() {
+        // Structure must exist: bigram entropy well below ln(vocab).
+        let c = MarkovCorpus::generate(64, 100_000, 3, 3);
+        let h = c.empirical_bigram_entropy();
+        let uniform = (64f64).ln();
+        assert!(h < uniform * 0.7, "H={h} vs uniform {uniform}");
+        assert!(h > 0.5, "chain should not be deterministic: H={h}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = MarkovCorpus::generate(16, 1000, 2, 7);
+        let b = MarkovCorpus::generate(16, 1000, 2, 7);
+        assert_eq!(a.tokens, b.tokens);
+    }
+}

@@ -1,0 +1,14 @@
+//! Synthetic datasets — the CIFAR/ImageNet substitutes (DESIGN.md §3).
+//!
+//! Quantizer quality only interacts with the *gradient distribution*, so
+//! a Gaussian-mixture classification task with controllable margin/noise
+//! reproduces the phenomena the paper measures: bell-shaped heavy-tailed
+//! gradients, per-layer scale differences, and accuracy that degrades as
+//! quantization coarsens. A Markov-chain character corpus plays the same
+//! role for the transformer LM.
+
+pub mod corpus;
+pub mod synth;
+
+pub use corpus::MarkovCorpus;
+pub use synth::{Batch, ClassDataset, DatasetSpec};

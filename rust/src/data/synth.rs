@@ -1,0 +1,313 @@
+//! Gaussian-mixture classification datasets (cifar10/100-like,
+//! imagenet-like presets).
+
+use crate::tensor::rng::Rng;
+
+/// One minibatch, row-major features + integer labels.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub batch: usize,
+    pub in_dim: usize,
+}
+
+/// Dataset generation parameters.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub in_dim: usize,
+    pub classes: usize,
+    pub train_n: usize,
+    pub test_n: usize,
+    /// Distance of class means from the origin (signal strength).
+    pub margin: f32,
+    /// Per-feature noise std.
+    pub noise: f32,
+    /// Probability of replacing a label with a uniform random one.
+    pub label_noise: f32,
+    pub seed: u64,
+}
+
+impl DatasetSpec {
+    /// CIFAR-10 stand-in: 10 classes, separable but noisy.
+    pub fn cifar10_like(in_dim: usize) -> Self {
+        DatasetSpec {
+            in_dim,
+            classes: 10,
+            train_n: 8192,
+            test_n: 2048,
+            margin: 2.2,
+            noise: 1.0,
+            label_noise: 0.02,
+            seed: 1234,
+        }
+    }
+
+    /// CIFAR-100 stand-in: 100 classes, tighter margins (harder task, so
+    /// quantization differences show up as they do in the paper's Table 2).
+    pub fn cifar100_like(in_dim: usize) -> Self {
+        DatasetSpec {
+            in_dim,
+            classes: 100,
+            train_n: 16384,
+            test_n: 4096,
+            margin: 2.6,
+            noise: 1.0,
+            label_noise: 0.02,
+            seed: 4321,
+        }
+    }
+
+    /// ImageNet stand-in: 200 classes (1000 available via `classes`),
+    /// larger corpus for the distributed runs of Table 5.
+    pub fn imagenet_like(in_dim: usize) -> Self {
+        DatasetSpec {
+            in_dim,
+            classes: 200,
+            train_n: 32768,
+            test_n: 8192,
+            margin: 3.0,
+            noise: 1.0,
+            label_noise: 0.01,
+            seed: 777,
+        }
+    }
+}
+
+/// A materialized classification dataset.
+pub struct ClassDataset {
+    pub spec: DatasetSpec,
+    /// Class means, `classes × in_dim` row-major.
+    means: Vec<f32>,
+    train_x: Vec<f32>,
+    train_y: Vec<i32>,
+    test_x: Vec<f32>,
+    test_y: Vec<i32>,
+}
+
+impl ClassDataset {
+    pub fn generate(spec: DatasetSpec) -> Self {
+        let mut rng = Rng::seed_from(spec.seed);
+        // Random unit-vector means scaled by margin.
+        let mut means = vec![0.0f32; spec.classes * spec.in_dim];
+        for c in 0..spec.classes {
+            let row = &mut means[c * spec.in_dim..(c + 1) * spec.in_dim];
+            rng.fill_gaussian(row, 1.0);
+            let n = crate::tensor::norm2(row).max(1e-9);
+            for v in row.iter_mut() {
+                *v = *v / n * spec.margin;
+            }
+        }
+        let mut ds = ClassDataset {
+            means,
+            train_x: Vec::new(),
+            train_y: Vec::new(),
+            test_x: Vec::new(),
+            test_y: Vec::new(),
+            spec,
+        };
+        let (tx, ty) = ds.sample_split(ds.spec.train_n, &mut rng, true);
+        let (ex, ey) = ds.sample_split(ds.spec.test_n, &mut rng, false);
+        ds.train_x = tx;
+        ds.train_y = ty;
+        ds.test_x = ex;
+        ds.test_y = ey;
+        ds
+    }
+
+    fn sample_split(&self, n: usize, rng: &mut Rng, with_label_noise: bool) -> (Vec<f32>, Vec<i32>) {
+        let d = self.spec.in_dim;
+        let mut x = vec![0.0f32; n * d];
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = rng.below(self.spec.classes as u64) as usize;
+            let row = &mut x[i * d..(i + 1) * d];
+            rng.fill_gaussian(row, self.spec.noise);
+            for (v, m) in row.iter_mut().zip(&self.means[c * d..(c + 1) * d]) {
+                *v += m;
+            }
+            let label = if with_label_noise && rng.f32() < self.spec.label_noise {
+                rng.below(self.spec.classes as u64) as i32
+            } else {
+                c as i32
+            };
+            y.push(label);
+        }
+        (x, y)
+    }
+
+    pub fn train_len(&self) -> usize {
+        self.train_y.len()
+    }
+
+    pub fn test_len(&self) -> usize {
+        self.test_y.len()
+    }
+
+    /// Deterministic random minibatch from the training split.
+    pub fn train_batch(&self, batch: usize, rng: &mut Rng) -> Batch {
+        self.batch_from(&self.train_x, &self.train_y, batch, rng)
+    }
+
+    /// Sequential test batches for evaluation, final one may be short.
+    pub fn test_batches(&self, batch: usize) -> Vec<Batch> {
+        let d = self.spec.in_dim;
+        let mut out = Vec::new();
+        let n = self.test_len();
+        let mut i = 0;
+        while i < n {
+            let b = batch.min(n - i);
+            out.push(Batch {
+                x: self.test_x[i * d..(i + b) * d].to_vec(),
+                y: self.test_y[i..i + b].to_vec(),
+                batch: b,
+                in_dim: d,
+            });
+            i += b;
+        }
+        out
+    }
+
+    fn batch_from(&self, xs: &[f32], ys: &[i32], batch: usize, rng: &mut Rng) -> Batch {
+        let d = self.spec.in_dim;
+        let n = ys.len();
+        let mut x = Vec::with_capacity(batch * d);
+        let mut y = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let i = rng.below(n as u64) as usize;
+            x.extend_from_slice(&xs[i * d..(i + 1) * d]);
+            y.push(ys[i]);
+        }
+        Batch { x, y, batch, in_dim: d }
+    }
+
+    /// Shard the training set across `n_workers` (for distributed runs):
+    /// worker `w` draws only from its contiguous slice, like the paper's
+    /// per-worker minibatch split.
+    pub fn worker_batch(&self, worker: usize, n_workers: usize, batch: usize, rng: &mut Rng) -> Batch {
+        let n = self.train_len();
+        let shard = n / n_workers;
+        let start = worker * shard;
+        let end = if worker + 1 == n_workers { n } else { start + shard };
+        let d = self.spec.in_dim;
+        let mut x = Vec::with_capacity(batch * d);
+        let mut y = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let i = start + rng.below((end - start) as u64) as usize;
+            x.extend_from_slice(&self.train_x[i * d..(i + 1) * d]);
+            y.push(self.train_y[i]);
+        }
+        Batch { x, y, batch, in_dim: d }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> DatasetSpec {
+        DatasetSpec {
+            in_dim: 16,
+            classes: 4,
+            train_n: 400,
+            test_n: 100,
+            margin: 3.0,
+            noise: 0.5,
+            label_noise: 0.0,
+            seed: 9,
+        }
+    }
+
+    #[test]
+    fn shapes_and_label_ranges() {
+        let ds = ClassDataset::generate(tiny_spec());
+        assert_eq!(ds.train_len(), 400);
+        assert_eq!(ds.test_len(), 100);
+        let mut rng = Rng::seed_from(0);
+        let b = ds.train_batch(32, &mut rng);
+        assert_eq!(b.x.len(), 32 * 16);
+        assert_eq!(b.y.len(), 32);
+        assert!(b.y.iter().all(|&y| (0..4).contains(&y)));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = ClassDataset::generate(tiny_spec());
+        let b = ClassDataset::generate(tiny_spec());
+        assert_eq!(a.train_x, b.train_x);
+        assert_eq!(a.test_y, b.test_y);
+    }
+
+    #[test]
+    fn classes_are_separable_at_high_margin() {
+        // Nearest-mean classifier should do well at margin 3, noise 0.5.
+        let ds = ClassDataset::generate(tiny_spec());
+        let d = ds.spec.in_dim;
+        let mut correct = 0usize;
+        for (i, &y) in ds.test_y.iter().enumerate() {
+            let x = &ds.test_x[i * d..(i + 1) * d];
+            let mut best = (f32::INFINITY, 0usize);
+            for c in 0..ds.spec.classes {
+                let m = &ds.means[c * d..(c + 1) * d];
+                let dist: f32 = x.iter().zip(m).map(|(a, b)| (a - b) * (a - b)).sum();
+                if dist < best.0 {
+                    best = (dist, c);
+                }
+            }
+            if best.1 as i32 == y {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / ds.test_len() as f64;
+        assert!(acc > 0.95, "nearest-mean acc {acc}");
+    }
+
+    #[test]
+    fn test_batches_cover_everything() {
+        let ds = ClassDataset::generate(tiny_spec());
+        let batches = ds.test_batches(32);
+        let total: usize = batches.iter().map(|b| b.batch).sum();
+        assert_eq!(total, 100);
+        assert_eq!(batches.last().unwrap().batch, 100 % 32);
+    }
+
+    #[test]
+    fn worker_shards_disjoint() {
+        let ds = ClassDataset::generate(tiny_spec());
+        // Worker batches draw from disjoint index ranges; with distinct
+        // class means per sample we can't check exact disjointness of
+        // values, but determinism per worker stream must hold.
+        let b0 = ds.worker_batch(0, 4, 16, &mut Rng::stream(5, 0));
+        let b0b = ds.worker_batch(0, 4, 16, &mut Rng::stream(5, 0));
+        assert_eq!(b0.x, b0b.x);
+        let b1 = ds.worker_batch(1, 4, 16, &mut Rng::stream(5, 1));
+        assert_ne!(b0.x, b1.x);
+    }
+
+    #[test]
+    fn label_noise_applied() {
+        let mut spec = tiny_spec();
+        spec.label_noise = 1.0; // every label resampled uniformly
+        spec.margin = 10.0;
+        let ds = ClassDataset::generate(spec);
+        // with full label noise, nearest-mean accuracy collapses to ~1/4
+        let d = ds.spec.in_dim;
+        let mut correct = 0usize;
+        for (i, &y) in ds.train_y.iter().enumerate() {
+            let x = &ds.train_x[i * d..(i + 1) * d];
+            let mut best = (f32::INFINITY, 0usize);
+            for c in 0..ds.spec.classes {
+                let m = &ds.means[c * d..(c + 1) * d];
+                let dist: f32 = x.iter().zip(m).map(|(a, b)| (a - b) * (a - b)).sum();
+                if dist < best.0 {
+                    best = (dist, c);
+                }
+            }
+            if best.1 as i32 == y {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / ds.train_len() as f64;
+        assert!(acc < 0.45, "label noise should break the signal, acc={acc}");
+    }
+}

@@ -1,0 +1,40 @@
+//! Crate-wide error type.
+
+/// Unified error for every layer of the stack.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("xla/pjrt error: {0}")]
+    Xla(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("json parse error at byte {offset}: {msg}")]
+    Json { offset: usize, msg: String },
+
+    #[error("codec error: {0}")]
+    Codec(String),
+
+    #[error("artifact error: {0} (run `make artifacts`)")]
+    Artifact(String),
+
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    #[error("communication error: {0}")]
+    Comm(String),
+
+    #[error("invalid argument: {0}")]
+    InvalidArg(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

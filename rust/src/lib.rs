@@ -1,0 +1,45 @@
+//! # orq — Optimal Gradient Quantization for Communication-Efficient Distributed Training
+//!
+//! Production-shaped reproduction of *"Optimal Gradient Quantization
+//! Condition for Communication-Efficient Distributed Training"* (An Xu,
+//! Zhouyuan Huo, Heng Huang, 2020): the ORQ multi-level quantizer
+//! (Theorem 1 / Algorithm 1), the BinGrad-pb/BinGrad-b binary quantizers
+//! (Eqs. 15/17), and the baselines they are evaluated against (TernGrad,
+//! QSGD-s, Linear-s, scaled SignSGD), embedded in a synchronous
+//! parameter-server training runtime.
+//!
+//! Three layers (see DESIGN.md):
+//! * **L3 (this crate)** — coordinator: quantize → encode → simulated wire
+//!   → decode → average → SGD, plus every substrate (codec, comm model,
+//!   datasets, metrics, config, CLI, bench harness).
+//! * **L2/L1 (`python/`, build-time only)** — JAX model + Pallas kernels,
+//!   AOT-lowered to HLO text executed here through [`runtime`] (PJRT).
+//!
+//! Quick taste (single bucket):
+//! ```
+//! use orq::quant::{Quantizer, orq::OrqQuantizer};
+//! use orq::tensor::rng::Rng;
+//! let q = OrqQuantizer::new(9);
+//! let g: Vec<f32> = (0..512).map(|i| ((i * 37 % 101) as f32 - 50.0) / 50.0).collect();
+//! let mut rng = Rng::seed_from(7);
+//! let qb = q.quantize_bucket(&g, &mut rng);
+//! assert_eq!(qb.levels.len(), 9);
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod codec;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod metrics;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod testutil;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,209 @@
+//! `orq` binary — leader entrypoint: train / info / demo subcommands.
+
+use orq::cli::{Args, USAGE};
+use orq::codec::Packing;
+use orq::config::TrainConfig;
+use orq::coordinator::trainer::{native_backend_factory, Trainer};
+use orq::data::synth::{ClassDataset, DatasetSpec};
+use orq::error::{Error, Result};
+use orq::model::Backend;
+use orq::quant;
+use orq::quant::bucket::BucketQuantizer;
+use orq::tensor::rng::Rng;
+use orq::util::fmt;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_str() {
+        "train" => run(cmd_train(&args)),
+        "info" => run(cmd_info(&args)),
+        "demo" => run(cmd_demo(&args)),
+        "help" | "" => {
+            print!("{USAGE}");
+            0
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n\n{USAGE}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(r: Result<()>) -> i32 {
+    match r {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn dataset_for(cfg: &TrainConfig) -> Result<ClassDataset> {
+    let in_dim = match cfg.model.as_str() {
+        "mlp_l" => 512,
+        m if m.starts_with("mlp:") => m[4..]
+            .split('-')
+            .next()
+            .and_then(|d| d.parse().ok())
+            .ok_or_else(|| Error::Config(format!("bad model dims {m:?}")))?,
+        _ => 256,
+    };
+    let spec = match cfg.dataset.as_str() {
+        "cifar10" => DatasetSpec::cifar10_like(in_dim),
+        "cifar100" => DatasetSpec::cifar100_like(in_dim),
+        "imagenet" => DatasetSpec::imagenet_like(in_dim),
+        other => return Err(Error::Config(format!("unknown dataset {other:?}"))),
+    };
+    Ok(ClassDataset::generate(spec))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "config", "model", "method", "workers", "steps", "batch", "dataset", "bucket",
+        "clip", "backend", "artifacts", "out", "seed", "lr", "eval-every",
+    ])?;
+    let mut cfg = match args.get("config") {
+        Some(path) => TrainConfig::load(path)?,
+        None => TrainConfig::default(),
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(m) = args.get("method") {
+        cfg.method = m.to_string();
+    }
+    if let Some(d) = args.get("dataset") {
+        cfg.dataset = d.to_string();
+    }
+    if let Some(s) = args.get_parse::<usize>("steps")? {
+        cfg.steps = s;
+        cfg.lr_decay_steps = vec![s / 2, s * 3 / 4];
+    }
+    if let Some(b) = args.get_parse::<usize>("batch")? {
+        cfg.batch = b;
+    }
+    if let Some(w) = args.get_parse::<usize>("workers")? {
+        cfg.workers = w;
+        if cfg.batch % w != 0 {
+            cfg.batch = (cfg.batch / w).max(1) * w;
+        }
+    }
+    if let Some(b) = args.get_parse::<usize>("bucket")? {
+        cfg.bucket_size = b;
+    }
+    if let Some(c) = args.get_parse::<f32>("clip")? {
+        cfg.clip_factor = Some(c);
+        cfg.warmup_steps = cfg.steps / 40; // the paper's 5-of-200-epoch warmup
+    }
+    if let Some(s) = args.get_parse::<u64>("seed")? {
+        cfg.seed = s;
+    }
+    if let Some(lr) = args.get_parse::<f32>("lr")? {
+        cfg.lr = lr;
+    }
+    if let Some(e) = args.get_parse::<usize>("eval-every")? {
+        cfg.eval_every = e;
+    }
+    cfg.validate()?;
+
+    let ds = dataset_for(&cfg)?;
+    let backend_kind = args.get_or("backend", "native");
+    println!(
+        "training {} / {} with {} on {} ({} workers, {} steps, d={})",
+        cfg.model, backend_kind, cfg.method, cfg.dataset, cfg.workers, cfg.steps, cfg.bucket_size
+    );
+    let out = match backend_kind {
+        "native" => {
+            let factory = native_backend_factory(&cfg.model)?;
+            Trainer::new(cfg.clone(), &ds)?.run(factory)?
+        }
+        "pjrt" => {
+            let artifacts = args.get_or("artifacts", "artifacts");
+            let backend = orq::runtime::PjrtBackend::load(artifacts, &cfg.model)?;
+            let factory = move |_id: usize| Box::new(backend.clone()) as Box<dyn Backend>;
+            Trainer::new(cfg.clone(), &ds)?.run(factory)?
+        }
+        other => return Err(Error::InvalidArg(format!("unknown backend {other:?}"))),
+    };
+
+    let s = &out.summary;
+    println!("\nmethod      : {}", s.method);
+    println!("top-1 acc   : {:.2}%", s.test_top1 * 100.0);
+    println!("top-5 acc   : {:.2}%", s.test_top5 * 100.0);
+    println!("final loss  : {:.4}", s.final_train_loss);
+    println!("quant relMSE: {:.4}", s.mean_quant_rel_mse);
+    println!("wire bytes  : {}", fmt::bytes(s.total_wire_bytes));
+    println!("comm time   : {} (simulated @10Gbps)", fmt::duration(s.total_comm_time_s));
+    println!("compression : ×{:.1}", s.compression_ratio);
+
+    if let Some(dir) = args.get("out") {
+        std::fs::create_dir_all(dir)?;
+        out.series.write_csv(&format!("{dir}/{}_{}_series.csv", s.model, s.method))?;
+        out.series.write_eval_csv(&format!("{dir}/{}_{}_eval.csv", s.model, s.method))?;
+        println!("series written to {dir}/");
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    args.check_known(&["artifacts"])?;
+    let dir = args.get_or("artifacts", "artifacts");
+    let manifest = orq::runtime::meta::Manifest::load(dir)?;
+    println!("artifacts at {dir}:");
+    for m in &manifest.models {
+        println!(
+            "  {} ({:?}) — {} params, batch {}, {} sections, grad={}, fwd={}",
+            m.name,
+            m.kind,
+            fmt::commas(m.param_count as u64),
+            m.batch,
+            m.sections.len(),
+            m.grad_hlo,
+            m.fwd_hlo
+        );
+    }
+    Ok(())
+}
+
+fn cmd_demo(args: &Args) -> Result<()> {
+    args.check_known(&["method", "n", "bucket", "seed"])?;
+    let method = args.get_or("method", "orq-9");
+    let n = args.get_parse::<usize>("n")?.unwrap_or(1 << 20);
+    let bucket = args.get_parse::<usize>("bucket")?.unwrap_or(2048);
+    let seed = args.get_parse::<u64>("seed")?.unwrap_or(42);
+
+    let q = quant::from_name(method)?;
+    let mut rng = Rng::seed_from(seed);
+    let mut g = vec![0.0f32; n];
+    rng.fill_gaussian(&mut g, 1e-3);
+    let bq = BucketQuantizer::new(bucket);
+    let t0 = std::time::Instant::now();
+    let qg = bq.quantize(&g, q.as_ref(), &mut rng);
+    let quant_t = t0.elapsed().as_secs_f64();
+    let bytes = orq::codec::encode(&qg, method, Packing::BaseS);
+    let err = quant::error::measure(&g, &qg);
+    println!("method        : {method} (s={}, unbiased={})", q.num_levels(), q.is_unbiased());
+    println!("elements      : {}", fmt::commas(n as u64));
+    println!(
+        "quantize time : {} ({:.1} Melem/s)",
+        fmt::duration(quant_t),
+        n as f64 / quant_t / 1e6
+    );
+    println!(
+        "wire size     : {} (fp32: {})",
+        fmt::bytes(bytes.len() as u64),
+        fmt::bytes(4 * n as u64)
+    );
+    println!("compression   : ×{:.1}", 4.0 * n as f64 / bytes.len() as f64);
+    println!("rel MSE       : {:.6}", err.rel_mse);
+    println!("cosine        : {:.6}", err.cosine);
+    Ok(())
+}

@@ -1,0 +1,135 @@
+//! Fixed-bin histogram — the data behind Figure 1's gradient-distribution
+//! plots (frequency normalized by the max bin, exactly as the paper
+//! renders them).
+
+use crate::error::Result;
+use crate::util::csv::CsvWriter;
+
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins], underflow: 0, overflow: 0 }
+    }
+
+    /// Range = ±c·σ of the data (paper clips Figure 1's FP plot to 2.5σ).
+    pub fn sigma_range(data: &[f32], c: f64, bins: usize) -> Self {
+        let stats = crate::tensor::stats::SliceStats::compute(data);
+        let s = stats.std().max(1e-12);
+        let mut h = Histogram::new(-c * s, c * s, bins);
+        h.fill(data);
+        h
+    }
+
+    pub fn fill(&mut self, data: &[f32]) {
+        for &v in data {
+            self.push(v as f64);
+        }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        if v < self.lo {
+            self.underflow += 1;
+        } else if v >= self.hi {
+            self.overflow += 1;
+        } else {
+            let bins = self.counts.len();
+            let idx = ((v - self.lo) / (self.hi - self.lo) * bins as f64) as usize;
+            self.counts[idx.min(bins - 1)] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    /// Frequencies normalized by the max bin (the paper's y-axis).
+    pub fn normalized(&self) -> Vec<f64> {
+        let max = self.counts.iter().copied().max().unwrap_or(0).max(1) as f64;
+        self.counts.iter().map(|&c| c as f64 / max).collect()
+    }
+
+    pub fn bin_centers(&self) -> Vec<f64> {
+        let n = self.counts.len();
+        let w = (self.hi - self.lo) / n as f64;
+        (0..n).map(|i| self.lo + (i as f64 + 0.5) * w).collect()
+    }
+
+    /// Dump `center,count,normalized` rows.
+    pub fn write_csv(&self, path: &str) -> Result<()> {
+        let mut w = CsvWriter::create(path, &["center", "count", "normalized"])?;
+        let norm = self.normalized();
+        for ((c, &cnt), nv) in self.bin_centers().iter().zip(&self.counts).zip(norm) {
+            w.row(&[*c, cnt as f64, nv])?;
+        }
+        w.flush()
+    }
+
+    /// Fraction of non-empty bins — the "utilization of quantization
+    /// levels" criterion of §5.1.2 when filled with dequantized values.
+    pub fn occupancy(&self) -> f64 {
+        let used = self.counts.iter().filter(|&&c| c > 0).count();
+        used as f64 / self.counts.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    #[test]
+    fn bins_and_flows() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for v in [0.0, 0.5, 9.99, -1.0, 10.0, 5.0] {
+            h.push(v);
+        }
+        assert_eq!(h.counts[0], 2);
+        assert_eq!(h.counts[9], 1);
+        assert_eq!(h.counts[5], 1);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.total(), 6);
+    }
+
+    #[test]
+    fn normalized_max_is_one() {
+        let mut h = Histogram::new(-1.0, 1.0, 4);
+        h.fill(&[-0.9, -0.9, -0.9, 0.1, 0.9]);
+        let n = h.normalized();
+        assert_eq!(n[0], 1.0);
+        assert!(n.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn gaussian_is_bell_shaped() {
+        let mut rng = Rng::seed_from(1);
+        let g: Vec<f32> = (0..100_000).map(|_| rng.gaussian_f32()).collect();
+        let h = Histogram::sigma_range(&g, 2.5, 21);
+        let n = h.normalized();
+        // center bin is the mode; edges much smaller
+        assert_eq!(n[10], 1.0);
+        assert!(n[0] < 0.2 && n[20] < 0.2);
+    }
+
+    #[test]
+    fn occupancy_counts_used_bins() {
+        let mut h = Histogram::new(0.0, 4.0, 4);
+        h.fill(&[0.5, 2.5]);
+        assert_eq!(h.occupancy(), 0.5);
+    }
+
+    #[test]
+    fn centers_are_midpoints() {
+        let h = Histogram::new(0.0, 4.0, 4);
+        assert_eq!(h.bin_centers(), vec![0.5, 1.5, 2.5, 3.5]);
+    }
+}

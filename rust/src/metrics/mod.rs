@@ -1,0 +1,38 @@
+//! Training metrics: step series (Fig 2/3), histograms (Fig 1),
+//! and the per-run summary the tables report.
+
+pub mod histogram;
+pub mod series;
+
+pub use histogram::Histogram;
+pub use series::SeriesLogger;
+
+/// Per-step record of a training run (one row of a Fig 2/3 series CSV).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepMetrics {
+    pub step: usize,
+    pub train_loss: f64,
+    /// Relative quantization MSE ‖Q(G)−G‖²/(‖G‖²/D) averaged over workers.
+    pub quant_rel_mse: f64,
+    /// Cosine similarity between averaged quantized and FP gradient.
+    pub quant_cosine: f64,
+    /// Exact wire bytes sent this step (all uplinks + broadcast).
+    pub wire_bytes: u64,
+    /// Simulated communication seconds this step.
+    pub comm_time_s: f64,
+}
+
+/// End-of-run summary — one table row.
+#[derive(Debug, Clone, Default)]
+pub struct RunSummary {
+    pub method: String,
+    pub model: String,
+    pub steps: usize,
+    pub final_train_loss: f64,
+    pub test_top1: f64,
+    pub test_top5: f64,
+    pub mean_quant_rel_mse: f64,
+    pub total_wire_bytes: u64,
+    pub total_comm_time_s: f64,
+    pub compression_ratio: f64,
+}

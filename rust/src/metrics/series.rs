@@ -1,0 +1,125 @@
+//! Step-series logger: accumulates [`StepMetrics`] and writes the
+//! Fig 2/Fig 3 CSVs (`step,train_loss,test_top1,quant_rel_mse,...`).
+
+use super::StepMetrics;
+use crate::error::Result;
+use crate::util::csv::CsvWriter;
+
+#[derive(Debug, Default)]
+pub struct SeriesLogger {
+    pub steps: Vec<StepMetrics>,
+    /// Sparse eval points: (step, top1, top5).
+    pub evals: Vec<(usize, f64, f64)>,
+}
+
+impl SeriesLogger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, m: StepMetrics) {
+        self.steps.push(m);
+    }
+
+    pub fn push_eval(&mut self, step: usize, top1: f64, top5: f64) {
+        self.evals.push((step, top1, top5));
+    }
+
+    pub fn mean_rel_mse(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.steps.iter().map(|m| m.quant_rel_mse).sum::<f64>() / self.steps.len() as f64
+    }
+
+    pub fn total_wire_bytes(&self) -> u64 {
+        self.steps.iter().map(|m| m.wire_bytes).sum()
+    }
+
+    pub fn total_comm_time(&self) -> f64 {
+        self.steps.iter().map(|m| m.comm_time_s).sum()
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.steps.last().map(|m| m.train_loss).unwrap_or(f64::NAN)
+    }
+
+    /// Smoothed training loss over the last `window` steps.
+    pub fn tail_loss(&self, window: usize) -> f64 {
+        if self.steps.is_empty() {
+            return f64::NAN;
+        }
+        let take = window.min(self.steps.len());
+        let tail = &self.steps[self.steps.len() - take..];
+        tail.iter().map(|m| m.train_loss).sum::<f64>() / take as f64
+    }
+
+    pub fn write_csv(&self, path: &str) -> Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &["step", "train_loss", "quant_rel_mse", "quant_cosine", "wire_bytes", "comm_time_s"],
+        )?;
+        for m in &self.steps {
+            w.row(&[
+                m.step as f64,
+                m.train_loss,
+                m.quant_rel_mse,
+                m.quant_cosine,
+                m.wire_bytes as f64,
+                m.comm_time_s,
+            ])?;
+        }
+        w.flush()
+    }
+
+    pub fn write_eval_csv(&self, path: &str) -> Result<()> {
+        let mut w = CsvWriter::create(path, &["step", "top1", "top5"])?;
+        for (s, t1, t5) in &self.evals {
+            w.row(&[*s as f64, *t1, *t5])?;
+        }
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(step: usize, loss: f64) -> StepMetrics {
+        StepMetrics { step, train_loss: loss, wire_bytes: 10, ..Default::default() }
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut s = SeriesLogger::new();
+        s.push(m(0, 4.0));
+        s.push(m(1, 2.0));
+        s.push(m(2, 1.0));
+        assert_eq!(s.final_loss(), 1.0);
+        assert_eq!(s.tail_loss(2), 1.5);
+        assert_eq!(s.tail_loss(100), 7.0 / 3.0);
+        assert_eq!(s.total_wire_bytes(), 30);
+    }
+
+    #[test]
+    fn empty_series() {
+        let s = SeriesLogger::new();
+        assert!(s.final_loss().is_nan());
+        assert_eq!(s.mean_rel_mse(), 0.0);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("orq_series_test");
+        let path = dir.join("series.csv");
+        let mut s = SeriesLogger::new();
+        s.push(m(0, 1.0));
+        s.push_eval(0, 0.5, 0.9);
+        s.write_csv(path.to_str().unwrap()).unwrap();
+        s.write_eval_csv(dir.join("eval.csv").to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("step,train_loss"));
+        assert_eq!(text.lines().count(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,90 @@
+//! Parameter initialization from section specs — the Rust mirror of
+//! `python/compile/model.py::init_flat` (same recipes, own PRNG).
+
+use crate::tensor::rng::Rng;
+
+/// One named parameter tensor inside the flat vector (mirrors the
+/// `sections` entries of `artifacts/meta.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Section {
+    pub name: String,
+    pub size: usize,
+    pub fan_in: usize,
+    pub init: Init,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Init {
+    He,
+    Xavier,
+    Normal02,
+    Zeros,
+    Ones,
+}
+
+impl Init {
+    pub fn parse(s: &str) -> Option<Init> {
+        Some(match s {
+            "he" => Init::He,
+            "xavier" => Init::Xavier,
+            "normal02" => Init::Normal02,
+            "zeros" => Init::Zeros,
+            "ones" => Init::Ones,
+            _ => return None,
+        })
+    }
+}
+
+/// Materialize the flat parameter vector.
+pub fn init_flat(sections: &[Section], rng: &mut Rng) -> Vec<f32> {
+    let total: usize = sections.iter().map(|s| s.size).sum();
+    let mut out = Vec::with_capacity(total);
+    for s in sections {
+        match s.init {
+            Init::He => {
+                let std = (2.0 / s.fan_in.max(1) as f64).sqrt() as f32;
+                out.extend((0..s.size).map(|_| rng.gaussian_f32() * std));
+            }
+            Init::Xavier => {
+                let std = (1.0 / s.fan_in.max(1) as f64).sqrt() as f32;
+                out.extend((0..s.size).map(|_| rng.gaussian_f32() * std));
+            }
+            Init::Normal02 => out.extend((0..s.size).map(|_| rng.gaussian_f32() * 0.02)),
+            Init::Zeros => out.extend(std::iter::repeat(0.0f32).take(s.size)),
+            Init::Ones => out.extend(std::iter::repeat(1.0f32).take(s.size)),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recipe_statistics() {
+        let secs = vec![
+            Section { name: "w".into(), size: 100_000, fan_in: 1000, init: Init::He },
+            Section { name: "b".into(), size: 100, fan_in: 100, init: Init::Zeros },
+            Section { name: "g".into(), size: 100, fan_in: 100, init: Init::Ones },
+        ];
+        let flat = init_flat(&secs, &mut Rng::seed_from(1));
+        assert_eq!(flat.len(), 100_200);
+        let w = &flat[..100_000];
+        let mean = w.iter().map(|&v| v as f64).sum::<f64>() / 1e5;
+        let std =
+            (w.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / 1e5).sqrt();
+        let expect = (2.0f64 / 1000.0).sqrt();
+        assert!(mean.abs() < 0.001);
+        assert!((std - expect).abs() < expect * 0.05, "std={std} expect={expect}");
+        assert!(flat[100_000..100_100].iter().all(|&v| v == 0.0));
+        assert!(flat[100_100..].iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn init_parse() {
+        assert_eq!(Init::parse("he"), Some(Init::He));
+        assert_eq!(Init::parse("xavier"), Some(Init::Xavier));
+        assert_eq!(Init::parse("nope"), None);
+    }
+}

@@ -1,0 +1,77 @@
+//! Model backends.
+//!
+//! [`Backend`] is what a worker calls per step: loss + flat gradient for a
+//! minibatch. Two implementations:
+//! * [`native::NativeMlp`] — pure-Rust MLP with manual backprop, exactly
+//!   the same math as the JAX `mlp_*` models (same section layout, same
+//!   He/zeros init recipe). Used by the table benches (fast sweeps, no
+//!   artifacts needed) and as the cross-check oracle for the PJRT path.
+//! * [`crate::runtime::PjrtBackend`] — executes the AOT-lowered JAX/Pallas
+//!   HLO through the PJRT CPU client (the production path).
+
+pub mod init;
+pub mod native;
+
+use crate::data::Batch;
+use crate::tensor::rng::Rng;
+
+/// A gradient-producing model.
+pub trait Backend: Send {
+    fn name(&self) -> String;
+
+    fn param_count(&self) -> usize;
+
+    /// Number of output classes (for accuracy metrics).
+    fn num_classes(&self) -> usize;
+
+    /// Fresh flat parameter vector per the model's init recipe.
+    fn init_params(&self, rng: &mut Rng) -> Vec<f32>;
+
+    /// Compute loss and write the flat gradient into `grad_out`.
+    fn loss_grad(&mut self, params: &[f32], batch: &Batch, grad_out: &mut [f32]) -> f32;
+
+    /// Logits for evaluation, `batch × classes` row-major.
+    fn logits(&mut self, params: &[f32], batch: &Batch) -> Vec<f32>;
+}
+
+/// Top-k accuracy from row-major logits.
+pub fn topk_accuracy(logits: &[f32], labels: &[i32], classes: usize, k: usize) -> f64 {
+    if labels.is_empty() {
+        return 0.0;
+    }
+    debug_assert_eq!(logits.len(), labels.len() * classes);
+    let mut hits = 0usize;
+    for (i, &y) in labels.iter().enumerate() {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let target = row[y as usize];
+        // count strictly-greater entries; ties resolve in our favor
+        let greater = row.iter().filter(|&&v| v > target).count();
+        if greater < k {
+            hits += 1;
+        }
+    }
+    hits as f64 / labels.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_basics() {
+        let logits = [0.1f32, 0.9, 0.0, /* row2 */ 0.5, 0.2, 0.3];
+        let labels = [1, 0];
+        assert_eq!(topk_accuracy(&logits, &labels, 3, 1), 1.0);
+        let labels_wrong = [0, 2];
+        assert_eq!(topk_accuracy(&logits, &labels_wrong, 3, 1), 0.0);
+        assert_eq!(topk_accuracy(&logits, &labels_wrong, 3, 2), 1.0);
+        let labels_worst = [2, 1];
+        assert_eq!(topk_accuracy(&logits, &labels_worst, 3, 2), 0.0);
+        assert_eq!(topk_accuracy(&logits, &labels_worst, 3, 3), 1.0);
+    }
+
+    #[test]
+    fn topk_empty() {
+        assert_eq!(topk_accuracy(&[], &[], 5, 1), 0.0);
+    }
+}

@@ -1,0 +1,399 @@
+//! Pure-Rust MLP with manual backprop — same math as the JAX `mlp_*`
+//! family (ReLU hidden layers, linear head, mean softmax cross-entropy,
+//! parameters flattened as `w0, b0, w1, b1, …`).
+//!
+//! Exists so the Table 2-4 sweeps can run hundreds of configurations
+//! without PJRT compile cost, and as a numerics cross-check for the PJRT
+//! path (integration test `pjrt_matches_native`).
+
+use super::init::{Init, Section};
+use super::Backend;
+use crate::data::Batch;
+use crate::tensor::rng::Rng;
+
+pub struct NativeMlp {
+    pub dims: Vec<usize>, // [in, h1, ..., classes]
+    scratch: Scratch,
+}
+
+#[derive(Default)]
+struct Scratch {
+    /// Activations per layer (a[0] = input copy .. a[L] = logits).
+    acts: Vec<Vec<f32>>,
+    /// Pre-activation ReLU masks for hidden layers.
+    masks: Vec<Vec<bool>>,
+    /// Backprop delta buffers.
+    delta: Vec<f32>,
+    delta_next: Vec<f32>,
+    probs: Vec<f32>,
+}
+
+impl NativeMlp {
+    pub fn new(dims: Vec<usize>) -> Self {
+        assert!(dims.len() >= 2, "need at least input and output dims");
+        NativeMlp { dims, scratch: Scratch::default() }
+    }
+
+    /// The three CIFAR-substitute architectures of Table 2.
+    pub fn mlp_s() -> Self {
+        NativeMlp::new(vec![256, 512, 512, 100])
+    }
+
+    pub fn mlp_m() -> Self {
+        NativeMlp::new(vec![256, 1024, 1024, 1024, 100])
+    }
+
+    pub fn mlp_l() -> Self {
+        NativeMlp::new(vec![512, 2048, 2048, 2048, 200])
+    }
+
+    pub fn layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    pub fn sections(&self) -> Vec<Section> {
+        let mut out = Vec::new();
+        for l in 0..self.layers() {
+            let (a, b) = (self.dims[l], self.dims[l + 1]);
+            out.push(Section { name: format!("w{l}"), size: a * b, fan_in: a, init: Init::He });
+            out.push(Section { name: format!("b{l}"), size: b, fan_in: b, init: Init::Zeros });
+        }
+        out
+    }
+
+    fn layer_offsets(&self) -> Vec<(usize, usize)> {
+        // (w_offset, b_offset) per layer
+        let mut out = Vec::with_capacity(self.layers());
+        let mut off = 0;
+        for l in 0..self.layers() {
+            let (a, b) = (self.dims[l], self.dims[l + 1]);
+            out.push((off, off + a * b));
+            off += a * b + b;
+        }
+        out
+    }
+
+    /// Forward pass; fills scratch activations/masks. Returns nothing —
+    /// logits live in `scratch.acts[L]`.
+    fn forward(&mut self, params: &[f32], batch: &Batch) {
+        let layers = self.layers();
+        let b = batch.batch;
+        let offsets = self.layer_offsets();
+        let s = &mut self.scratch;
+        s.acts.resize(layers + 1, Vec::new());
+        s.masks.resize(layers.saturating_sub(1), Vec::new());
+        s.acts[0].clear();
+        s.acts[0].extend_from_slice(&batch.x);
+        for l in 0..layers {
+            let (din, dout) = (self.dims[l], self.dims[l + 1]);
+            let (wo, bo) = offsets[l];
+            let w = &params[wo..wo + din * dout];
+            let bias = &params[bo..bo + dout];
+            let (inp, out) = {
+                // activations[l] -> activations[l+1]
+                let (left, right) = s.acts.split_at_mut(l + 1);
+                (&left[l], &mut right[0])
+            };
+            out.clear();
+            out.resize(b * dout, 0.0);
+            matmul_bias(inp, w, bias, out, b, din, dout);
+            if l + 1 < layers {
+                let mask = &mut s.masks[l];
+                mask.clear();
+                mask.reserve(out.len());
+                for v in out.iter_mut() {
+                    let on = *v > 0.0;
+                    mask.push(on);
+                    if !on {
+                        *v = 0.0;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Softmax probabilities of current logits into `scratch.probs`;
+    /// returns mean CE loss for `labels`.
+    fn softmax_loss(&mut self, labels: &[i32]) -> f32 {
+        let layers = self.layers();
+        let classes = *self.dims.last().unwrap();
+        let logits = &self.scratch.acts[layers];
+        let b = labels.len();
+        let probs = &mut self.scratch.probs;
+        probs.clear();
+        probs.extend_from_slice(logits);
+        let mut loss = 0.0f64;
+        for (i, &y) in labels.iter().enumerate() {
+            let row = &mut probs[i * classes..(i + 1) * classes];
+            let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f64;
+            for v in row.iter_mut() {
+                *v = (*v - max).exp();
+                z += *v as f64;
+            }
+            for v in row.iter_mut() {
+                *v = (*v as f64 / z) as f32;
+            }
+            loss -= (row[y as usize].max(1e-30) as f64).ln();
+        }
+        (loss / b as f64) as f32
+    }
+}
+
+impl Backend for NativeMlp {
+    fn name(&self) -> String {
+        format!("native-mlp{:?}", self.dims)
+    }
+
+    fn param_count(&self) -> usize {
+        self.sections().iter().map(|s| s.size).sum()
+    }
+
+    fn num_classes(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+
+    fn init_params(&self, rng: &mut Rng) -> Vec<f32> {
+        super::init::init_flat(&self.sections(), rng)
+    }
+
+    fn loss_grad(&mut self, params: &[f32], batch: &Batch, grad_out: &mut [f32]) -> f32 {
+        assert_eq!(params.len(), self.param_count(), "param length");
+        assert_eq!(grad_out.len(), params.len(), "grad length");
+        assert_eq!(batch.in_dim, self.dims[0], "input dim");
+        let layers = self.layers();
+        let b = batch.batch;
+        let offsets = self.layer_offsets();
+
+        self.forward(params, batch);
+        let loss = self.softmax_loss(&batch.y);
+
+        grad_out.fill(0.0);
+        // delta at output: (softmax - onehot) / B
+        let classes = *self.dims.last().unwrap();
+        {
+            let s = &mut self.scratch;
+            s.delta.clear();
+            s.delta.extend_from_slice(&s.probs);
+            for (i, &y) in batch.y.iter().enumerate() {
+                s.delta[i * classes + y as usize] -= 1.0;
+            }
+            let inv = 1.0 / b as f32;
+            for v in s.delta.iter_mut() {
+                *v *= inv;
+            }
+        }
+
+        for l in (0..layers).rev() {
+            let (din, dout) = (self.dims[l], self.dims[l + 1]);
+            let (wo, bo) = offsets[l];
+            // dW = a[l]^T · delta ; db = Σ_rows delta
+            {
+                let a = &self.scratch.acts[l];
+                let delta = &self.scratch.delta;
+                let dw = &mut grad_out[wo..wo + din * dout];
+                for r in 0..b {
+                    let arow = &a[r * din..(r + 1) * din];
+                    let drow = &delta[r * dout..(r + 1) * dout];
+                    for (i, &ai) in arow.iter().enumerate() {
+                        if ai != 0.0 {
+                            let dst = &mut dw[i * dout..(i + 1) * dout];
+                            for (d, &dj) in dst.iter_mut().zip(drow) {
+                                *d += ai * dj;
+                            }
+                        }
+                    }
+                }
+            }
+            {
+                let delta = &self.scratch.delta;
+                let db = &mut grad_out[bo..bo + dout];
+                for r in 0..b {
+                    for (d, &dj) in db.iter_mut().zip(&delta[r * dout..(r + 1) * dout]) {
+                        *d += dj;
+                    }
+                }
+            }
+            if l > 0 {
+                // delta_prev = (delta · W^T) ⊙ relu'(z[l-1])
+                let w = &params[wo..wo + din * dout];
+                let s = &mut self.scratch;
+                s.delta_next.clear();
+                s.delta_next.resize(b * din, 0.0);
+                for r in 0..b {
+                    let drow = &s.delta[r * dout..(r + 1) * dout];
+                    let prev = &mut s.delta_next[r * din..(r + 1) * din];
+                    for i in 0..din {
+                        let wrow = &w[i * dout..(i + 1) * dout];
+                        let mut acc = 0.0f32;
+                        for (wj, dj) in wrow.iter().zip(drow) {
+                            acc += wj * dj;
+                        }
+                        prev[i] = acc;
+                    }
+                }
+                let mask = &s.masks[l - 1];
+                for (v, &m) in s.delta_next.iter_mut().zip(mask) {
+                    if !m {
+                        *v = 0.0;
+                    }
+                }
+                std::mem::swap(&mut s.delta, &mut s.delta_next);
+            }
+        }
+        loss
+    }
+
+    fn logits(&mut self, params: &[f32], batch: &Batch) -> Vec<f32> {
+        self.forward(params, batch);
+        self.scratch.acts[self.layers()].clone()
+    }
+}
+
+/// `out[b,n] = inp[b,k] · w[k,n] + bias[n]` (row-major, k-inner blocked).
+fn matmul_bias(inp: &[f32], w: &[f32], bias: &[f32], out: &mut [f32], b: usize, k: usize, n: usize) {
+    debug_assert_eq!(inp.len(), b * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), b * n);
+    for r in 0..b {
+        let orow = &mut out[r * n..(r + 1) * n];
+        orow.copy_from_slice(bias);
+        let irow = &inp[r * k..(r + 1) * k];
+        for (i, &x) in irow.iter().enumerate() {
+            if x == 0.0 {
+                continue; // ReLU sparsity
+            }
+            let wrow = &w[i * n..(i + 1) * n];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += x * wv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{ClassDataset, DatasetSpec};
+
+    fn tiny_model_and_batch() -> (NativeMlp, Vec<f32>, Batch) {
+        let mut m = NativeMlp::new(vec![8, 16, 4]);
+        let params = m.init_params(&mut Rng::seed_from(1));
+        let mut rng = Rng::seed_from(2);
+        let mut x = vec![0.0f32; 16 * 8];
+        rng.fill_gaussian(&mut x, 1.0);
+        let y: Vec<i32> = (0..16).map(|_| rng.below(4) as i32).collect();
+        let batch = Batch { x, y, batch: 16, in_dim: 8 };
+        (m, params, batch)
+    }
+
+    #[test]
+    fn param_count_matches_formula() {
+        let m = NativeMlp::new(vec![256, 512, 512, 100]);
+        assert_eq!(m.param_count(), 256 * 512 + 512 + 512 * 512 + 512 + 512 * 100 + 100);
+        // same as python registry's mlp_s
+        assert_eq!(m.param_count(), 445_540);
+    }
+
+    #[test]
+    fn loss_at_init_near_log_c() {
+        let (mut m, params, batch) = tiny_model_and_batch();
+        let mut g = vec![0.0f32; m.param_count()];
+        let loss = m.loss_grad(&params, &batch, &mut g);
+        assert!((loss - (4.0f32).ln()).abs() < 1.0, "loss={loss}");
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let (mut m, params, batch) = tiny_model_and_batch();
+        let p = m.param_count();
+        let mut g = vec![0.0f32; p];
+        m.loss_grad(&params, &batch, &mut g);
+        // directional FD along a random direction
+        let mut rng = Rng::seed_from(3);
+        let mut v = vec![0.0f32; p];
+        rng.fill_gaussian(&mut v, 1.0);
+        let norm = crate::tensor::norm2(&v);
+        for x in v.iter_mut() {
+            *x /= norm;
+        }
+        let eps = 1e-3f32;
+        let mut scratch = vec![0.0f32; p];
+        let plus: Vec<f32> = params.iter().zip(&v).map(|(p, d)| p + eps * d).collect();
+        let minus: Vec<f32> = params.iter().zip(&v).map(|(p, d)| p - eps * d).collect();
+        let lp = m.loss_grad(&plus, &batch, &mut scratch);
+        let lm = m.loss_grad(&minus, &batch, &mut scratch);
+        let fd = (lp - lm) / (2.0 * eps);
+        let analytic = crate::tensor::dot(&g, &v);
+        assert!(
+            (fd - analytic).abs() < 2e-3 * analytic.abs().max(1.0),
+            "fd={fd} analytic={analytic}"
+        );
+    }
+
+    #[test]
+    fn per_coordinate_fd_spot_check() {
+        let (mut m, mut params, batch) = tiny_model_and_batch();
+        let p = m.param_count();
+        let mut g = vec![0.0f32; p];
+        m.loss_grad(&params, &batch, &mut g);
+        let mut scratch = vec![0.0f32; p];
+        for idx in [0usize, 7, p / 2, p - 1] {
+            let eps = 1e-2f32;
+            let orig = params[idx];
+            params[idx] = orig + eps;
+            let lp = m.loss_grad(&params, &batch, &mut scratch);
+            params[idx] = orig - eps;
+            let lm = m.loss_grad(&params, &batch, &mut scratch);
+            params[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - g[idx]).abs() < 1e-2 * g[idx].abs().max(0.1),
+                "coord {idx}: fd={fd} g={}",
+                g[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_learns_separable_task() {
+        let spec = DatasetSpec {
+            in_dim: 16,
+            classes: 4,
+            train_n: 512,
+            test_n: 256,
+            margin: 3.0,
+            noise: 0.6,
+            label_noise: 0.0,
+            seed: 5,
+        };
+        let ds = ClassDataset::generate(spec);
+        let mut m = NativeMlp::new(vec![16, 32, 4]);
+        let mut params = m.init_params(&mut Rng::seed_from(6));
+        let mut g = vec![0.0f32; m.param_count()];
+        let mut rng = Rng::seed_from(7);
+        for _ in 0..300 {
+            let b = ds.train_batch(32, &mut rng);
+            m.loss_grad(&params, &b, &mut g);
+            crate::tensor::axpy(-0.1, &g, &mut params);
+        }
+        // evaluate
+        let mut correct = 0.0;
+        let mut total = 0.0;
+        for b in ds.test_batches(64) {
+            let logits = m.logits(&params, &b);
+            correct += super::super::topk_accuracy(&logits, &b.y, 4, 1) * b.batch as f64;
+            total += b.batch as f64;
+        }
+        let acc = correct / total;
+        assert!(acc > 0.9, "trained accuracy {acc}");
+    }
+
+    #[test]
+    fn logits_shape() {
+        let (mut m, params, batch) = tiny_model_and_batch();
+        let logits = m.logits(&params, &batch);
+        assert_eq!(logits.len(), 16 * 4);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+}

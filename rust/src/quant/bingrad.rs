@@ -1,0 +1,353 @@
+//! BinGrad — the paper's two binary (1-bit) quantizers.
+//!
+//! * **BinGrad-pb** (partially biased, Eq. 14/15): symmetric levels ±b₁
+//!   where b₁ solves `b₁ ∫₀^∞ p(v)dv = ∫_{b₁}^∞ v p(v)dv` for zero-mean
+//!   symmetric p. Values inside (−b₁, b₁) use unbiased random rounding;
+//!   values outside clamp (that clamping is the only bias — hence
+//!   "partially biased"). Smaller quantization *range* resilience to
+//!   outliers, larger error than BinGrad-b.
+//! * **BinGrad-b** (fully biased, Eq. 16/17): deterministic threshold
+//!   quantization. Optimal levels for any p are the conditional means:
+//!   `b₋₁ = E[v | v < b₀]`, `b₁ = E[v | v ≥ b₀]`, `b₀ = (b₋₁+b₁)/2` — a
+//!   1-D 2-means fixed point. Minimum quantization error, some bias: the
+//!   bias/variance trade-off of §3.2.
+
+use super::{QuantizedBucket, Quantizer};
+use crate::tensor::rng::Rng;
+
+/// BinGrad-pb: Eq. (15) level solve + Eq. (14) partially biased rounding.
+pub struct BinGradPb;
+
+impl BinGradPb {
+    pub fn new() -> Self {
+        BinGradPb
+    }
+
+    /// Solve Eq. (15) on the empirical distribution.
+    ///
+    /// Discrete LHS(b) = b · |{v ≥ 0}| / N (∫₀^∞ p under symmetry) and
+    /// RHS(b) = Σ_{v ≥ b} v / N. LHS is increasing in b, RHS decreasing,
+    /// so the minimizer of |LHS − RHS| is found at the crossing with one
+    /// sorted pass + suffix sums, then refined by interpolation.
+    pub fn solve_b1(g: &[f32]) -> f32 {
+        if g.is_empty() {
+            return 0.0;
+        }
+        let n = g.len() as f64;
+        let n_pos = g.iter().filter(|&&v| v >= 0.0).count() as f64;
+        let p0 = n_pos / n; // ∫₀^∞ p(v) dv
+        if p0 == 0.0 {
+            // No positive mass: fall back to mean |v| so ±b1 still brackets.
+            return (g.iter().map(|v| v.abs() as f64).sum::<f64>() / n) as f32;
+        }
+
+        let mut sorted: Vec<f32> = g.to_vec();
+        sorted.sort_unstable_by(f32::total_cmp);
+        // suffix[i] = Σ sorted[i..] (f64)
+        let mut suffix = vec![0.0f64; sorted.len() + 1];
+        for i in (0..sorted.len()).rev() {
+            suffix[i] = suffix[i + 1] + sorted[i] as f64;
+        }
+
+        // f(b) = LHS - RHS = b·p0 − (1/N)·Σ_{v ≥ b} v, increasing in b.
+        let f = |b: f64, idx: usize| -> f64 { b * p0 - suffix[idx] / n };
+        // Walk candidate b = sorted[i] (only positive candidates matter).
+        let mut best = (f64::INFINITY, sorted[sorted.len() - 1] as f64);
+        let mut prev: Option<(f64, f64)> = None; // (b, f(b))
+        for i in 0..sorted.len() {
+            let b = sorted[i] as f64;
+            if b < 0.0 {
+                continue;
+            }
+            let fb = f(b, i);
+            if fb.abs() < best.0 {
+                best = (fb.abs(), b);
+            }
+            if let Some((pb, pf)) = prev {
+                if pf < 0.0 && fb >= 0.0 && fb != pf {
+                    // Crossing between pb and b: linear interpolation.
+                    let t = -pf / (fb - pf);
+                    let bx = pb + t * (b - pb);
+                    // Residual at bx (same suffix index as b — piecewise).
+                    let fx = f(bx, i);
+                    if fx.abs() < best.0 {
+                        best = (fx.abs(), bx);
+                    }
+                }
+            }
+            prev = Some((b, fb));
+        }
+        (best.1.max(0.0)) as f32
+    }
+}
+
+impl Default for BinGradPb {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Quantizer for BinGradPb {
+    fn name(&self) -> String {
+        "bingrad-pb".into()
+    }
+
+    fn num_levels(&self) -> usize {
+        2
+    }
+
+    /// Partially biased: unbiased inside (−b₁, b₁), biased clamp outside.
+    fn is_unbiased(&self) -> bool {
+        false
+    }
+
+    fn quantize_bucket(&self, g: &[f32], rng: &mut Rng) -> QuantizedBucket {
+        let b1 = Self::solve_b1(g);
+        let b1 = if b1 > 0.0 { b1 } else { 1e-12 };
+        let levels = vec![-b1, b1];
+        // Eq. (14): clamp outside ±b1, random-round inside.
+        let mut indices = Vec::with_capacity(g.len());
+        let width = 2.0 * b1;
+        for &v in g {
+            let idx = if v < -b1 {
+                0
+            } else if v >= b1 {
+                1
+            } else {
+                let p = (v + b1) / width;
+                (rng.f32() < p) as u8
+            };
+            indices.push(idx);
+        }
+        QuantizedBucket { levels, indices }
+    }
+}
+
+/// BinGrad-b: Eq. (17) conditional-mean levels + Eq. (16) deterministic
+/// threshold quantization.
+pub struct BinGradB {
+    /// Fixed-point iterations (paper: "can set b₀ to the mean for ease of
+    /// implementation" — that is iteration 1; more sweeps reach the exact
+    /// 2-means optimum).
+    pub iters: usize,
+}
+
+impl BinGradB {
+    pub fn new() -> Self {
+        BinGradB { iters: 8 }
+    }
+
+    pub fn with_iters(iters: usize) -> Self {
+        BinGradB { iters: iters.max(1) }
+    }
+
+    /// Run the Eq. (17) fixed point: returns (b₋₁, b₀, b₁).
+    pub fn solve_levels(&self, g: &[f32]) -> (f32, f32, f32) {
+        if g.is_empty() {
+            return (-1e-12, 0.0, 1e-12);
+        }
+        let n = g.len() as f64;
+        let mean = g.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let mut b0 = mean;
+        let (mut lo, mut hi) = (b0, b0);
+        for _ in 0..self.iters {
+            let (mut sl, mut nl, mut sh, mut nh) = (0.0f64, 0usize, 0.0f64, 0usize);
+            for &v in g {
+                if (v as f64) < b0 {
+                    sl += v as f64;
+                    nl += 1;
+                } else {
+                    sh += v as f64;
+                    nh += 1;
+                }
+            }
+            // One side empty: threshold outside the data — stop moving.
+            if nl == 0 || nh == 0 {
+                let m = mean;
+                lo = m;
+                hi = m;
+                break;
+            }
+            lo = sl / nl as f64;
+            hi = sh / nh as f64;
+            let next = 0.5 * (lo + hi);
+            if (next - b0).abs() < 1e-12 {
+                b0 = next;
+                break;
+            }
+            b0 = next;
+        }
+        if hi <= lo {
+            hi = lo + (lo.abs() * 1e-6).max(1e-12);
+        }
+        (lo as f32, b0 as f32, hi as f32)
+    }
+}
+
+impl Default for BinGradB {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Quantizer for BinGradB {
+    fn name(&self) -> String {
+        "bingrad-b".into()
+    }
+
+    fn num_levels(&self) -> usize {
+        2
+    }
+
+    fn is_unbiased(&self) -> bool {
+        false
+    }
+
+    fn quantize_bucket(&self, g: &[f32], _rng: &mut Rng) -> QuantizedBucket {
+        let (lo, b0, hi) = self.solve_levels(g);
+        let levels = vec![lo, hi];
+        let indices = g.iter().map(|&v| (v >= b0) as u8).collect();
+        QuantizedBucket { levels, indices }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::mse;
+
+    fn gaussian(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from(seed);
+        (0..n).map(|_| rng.gaussian_f32()).collect()
+    }
+
+    // ----------------------------------------------------------- pb ---
+
+    #[test]
+    fn pb_b1_on_standard_gaussian() {
+        // For N(0,1): b₁·(1/2) = ∫_{b₁}^∞ v φ(v) dv = φ(b₁)
+        // ⇒ b₁/2 = exp(−b₁²/2)/√(2π) ⇒ b₁ ≈ 0.6466 (numerically).
+        let g = gaussian(200_000, 1);
+        let b1 = BinGradPb::solve_b1(&g);
+        assert!((b1 - 0.6466).abs() < 0.02, "b1={b1}");
+    }
+
+    #[test]
+    fn pb_monotone_under_scaling() {
+        let g = gaussian(50_000, 2);
+        let b1 = BinGradPb::solve_b1(&g);
+        let g2: Vec<f32> = g.iter().map(|v| v * 3.0).collect();
+        let b1_scaled = BinGradPb::solve_b1(&g2);
+        assert!((b1_scaled / b1 - 3.0).abs() < 0.05, "scale equivariance");
+    }
+
+    #[test]
+    fn pb_clamps_outliers() {
+        let mut g = vec![0.01f32; 1000];
+        g.push(100.0); // outlier
+        let q = BinGradPb::new();
+        let qb = q.quantize_bucket(&g, &mut Rng::seed_from(3));
+        // the outlier is clamped to +b1, which is far below 100
+        let b1 = qb.levels[1];
+        assert!(b1 < 10.0, "b1 should ignore the outlier, got {b1}");
+        assert_eq!(qb.indices[1000], 1);
+    }
+
+    #[test]
+    fn pb_unbiased_inside_range() {
+        // A value inside (−b1, b1) must be unbiased under random rounding.
+        let g = gaussian(20_000, 4);
+        let q = BinGradPb::new();
+        let b1 = BinGradPb::solve_b1(&g);
+        let v = b1 * 0.3;
+        let probe: Vec<f32> = std::iter::repeat(v).take(20_000).chain(g.iter().copied()).collect();
+        let qb = q.quantize_bucket(&probe, &mut Rng::seed_from(5));
+        let deq = qb.dequantize();
+        let mean = deq[..20_000].iter().map(|&x| x as f64).sum::<f64>() / 20_000.0;
+        let b1p = qb.levels[1] as f64;
+        assert!((mean - v as f64).abs() < b1p * 0.05, "mean={mean} v={v}");
+    }
+
+    // ------------------------------------------------------------ b ---
+
+    #[test]
+    fn b_levels_are_conditional_means() {
+        let g = gaussian(100_000, 6);
+        let (lo, b0, hi) = BinGradB::new().solve_levels(&g);
+        // brute-force conditional means at the returned threshold
+        let below: Vec<f32> = g.iter().copied().filter(|&v| v < b0).collect();
+        let above: Vec<f32> = g.iter().copied().filter(|&v| v >= b0).collect();
+        let m_below = below.iter().map(|&v| v as f64).sum::<f64>() / below.len() as f64;
+        let m_above = above.iter().map(|&v| v as f64).sum::<f64>() / above.len() as f64;
+        assert!((lo as f64 - m_below).abs() < 1e-3, "lo={lo} cond-mean={m_below}");
+        assert!((hi as f64 - m_above).abs() < 1e-3, "hi={hi} cond-mean={m_above}");
+        assert!((b0 as f64 - 0.5 * (m_below + m_above)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn b_gaussian_levels_near_pm_0_8() {
+        // 2-means on N(0,1): threshold 0, levels ±E[|v|] = ±√(2/π) ≈ ±0.7979.
+        let g = gaussian(200_000, 7);
+        let (lo, b0, hi) = BinGradB::new().solve_levels(&g);
+        assert!(b0.abs() < 0.02, "b0={b0}");
+        assert!((hi - 0.7979).abs() < 0.02, "hi={hi}");
+        assert!((lo + 0.7979).abs() < 0.02, "lo={lo}");
+    }
+
+    #[test]
+    fn b_beats_pb_on_quantization_error() {
+        // §3.2: BinGrad-b achieves minimum quantization error (variance),
+        // BinGrad-pb trades error for reduced bias.
+        let g = gaussian(20_000, 8);
+        let eb = mse(&g, &BinGradB::new().quantize_bucket(&g, &mut Rng::seed_from(9)).dequantize());
+        let epb =
+            mse(&g, &BinGradPb::new().quantize_bucket(&g, &mut Rng::seed_from(9)).dequantize());
+        assert!(eb < epb, "BinGrad-b {eb} should beat pb {epb}");
+    }
+
+    #[test]
+    fn b_optimal_vs_brute_force_2means() {
+        // On a small bucket, compare against exhaustive threshold search.
+        let g = gaussian(512, 10);
+        let (lo, _b0, hi) = BinGradB::with_iters(64).solve_levels(&g);
+        let ours = {
+            let qb = BinGradB::with_iters(64).quantize_bucket(&g, &mut Rng::seed_from(0));
+            mse(&g, &qb.dequantize())
+        };
+        // brute force over every possible split of the sorted bucket
+        let mut sorted = g.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut best = f64::INFINITY;
+        for split in 1..sorted.len() {
+            let (a, b) = sorted.split_at(split);
+            let ma = a.iter().map(|&v| v as f64).sum::<f64>() / a.len() as f64;
+            let mb = b.iter().map(|&v| v as f64).sum::<f64>() / b.len() as f64;
+            let e = (a.iter().map(|&v| (v as f64 - ma).powi(2)).sum::<f64>()
+                + b.iter().map(|&v| (v as f64 - mb).powi(2)).sum::<f64>())
+                / sorted.len() as f64;
+            best = best.min(e);
+        }
+        assert!(
+            ours <= best * 1.05,
+            "fixed point {ours} should be near brute-force optimum {best} (lo={lo} hi={hi})"
+        );
+    }
+
+    #[test]
+    fn b_constant_bucket() {
+        let g = vec![3.0f32; 64];
+        let qb = BinGradB::new().quantize_bucket(&g, &mut Rng::seed_from(0));
+        let deq = qb.dequantize();
+        for v in deq {
+            assert!((v - 3.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn empty_buckets_do_not_panic() {
+        let qb = BinGradB::new().quantize_bucket(&[], &mut Rng::seed_from(0));
+        assert!(qb.indices.is_empty());
+        let qb = BinGradPb::new().quantize_bucket(&[], &mut Rng::seed_from(0));
+        assert!(qb.indices.is_empty());
+    }
+}

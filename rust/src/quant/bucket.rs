@@ -1,0 +1,151 @@
+//! Bucketing: the paper's experiments split the flat gradient into
+//! fixed-size buckets of length d (default 2048 on CIFAR, 512 on
+//! ImageNet) and quantize each independently (§5). The final bucket may
+//! be shorter.
+
+use super::{QuantizedBucket, Quantizer};
+use crate::quant::clip::clip_sigma_inplace;
+use crate::tensor::rng::Rng;
+
+/// A whole-gradient quantization result: one [`QuantizedBucket`] per bucket.
+#[derive(Debug, Clone)]
+pub struct QuantizedGrad {
+    pub bucket_size: usize,
+    pub total_len: usize,
+    pub buckets: Vec<QuantizedBucket>,
+}
+
+impl QuantizedGrad {
+    /// Dequantize the full gradient back to a flat vector.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.total_len];
+        self.dequantize_into(&mut out);
+        out
+    }
+
+    pub fn dequantize_into(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.total_len);
+        for (b, chunk) in self.buckets.iter().zip(out.chunks_mut(self.bucket_size)) {
+            b.dequantize_into(chunk);
+        }
+    }
+}
+
+/// Configuration for whole-gradient quantization.
+#[derive(Debug, Clone)]
+pub struct BucketQuantizer {
+    pub bucket_size: usize,
+    /// `Some(c)` applies ±c·σ clipping per bucket before level selection.
+    pub clip_factor: Option<f32>,
+}
+
+impl BucketQuantizer {
+    pub fn new(bucket_size: usize) -> Self {
+        assert!(bucket_size > 0);
+        BucketQuantizer { bucket_size, clip_factor: None }
+    }
+
+    pub fn with_clip(bucket_size: usize, c: f32) -> Self {
+        BucketQuantizer { bucket_size, clip_factor: Some(c) }
+    }
+
+    pub fn num_buckets(&self, total_len: usize) -> usize {
+        total_len.div_ceil(self.bucket_size)
+    }
+
+    /// Quantize a full flat gradient bucket-by-bucket.
+    ///
+    /// A scratch buffer is reused across buckets when clipping is enabled
+    /// so the hot path does not allocate per bucket.
+    pub fn quantize(&self, g: &[f32], q: &dyn Quantizer, rng: &mut Rng) -> QuantizedGrad {
+        let mut buckets = Vec::with_capacity(self.num_buckets(g.len()));
+        let mut scratch: Vec<f32> = Vec::new();
+        for chunk in g.chunks(self.bucket_size) {
+            let qb = match self.clip_factor {
+                Some(c) => {
+                    scratch.clear();
+                    scratch.extend_from_slice(chunk);
+                    clip_sigma_inplace(&mut scratch, c);
+                    q.quantize_bucket(&scratch, rng)
+                }
+                None => q.quantize_bucket(chunk, rng),
+            };
+            buckets.push(qb);
+        }
+        QuantizedGrad { bucket_size: self.bucket_size, total_len: g.len(), buckets }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::from_name;
+
+    #[test]
+    fn bucket_count_and_ragged_tail() {
+        let bq = BucketQuantizer::new(100);
+        assert_eq!(bq.num_buckets(1000), 10);
+        assert_eq!(bq.num_buckets(1001), 11);
+        assert_eq!(bq.num_buckets(99), 1);
+        assert_eq!(bq.num_buckets(0), 0);
+    }
+
+    #[test]
+    fn quantize_roundtrip_shape() {
+        let mut rng = Rng::seed_from(1);
+        let g: Vec<f32> = (0..1000).map(|_| rng.gaussian_f32()).collect();
+        let q = from_name("orq-5").unwrap();
+        let qg = BucketQuantizer::new(128).quantize(&g, q.as_ref(), &mut rng);
+        assert_eq!(qg.buckets.len(), 8); // ceil(1000/128)
+        assert_eq!(qg.buckets.last().unwrap().indices.len(), 1000 - 7 * 128);
+        let deq = qg.dequantize();
+        assert_eq!(deq.len(), 1000);
+    }
+
+    #[test]
+    fn per_bucket_levels_differ() {
+        // Buckets with different scales must get different level tables —
+        // the reason bucketing exists.
+        let mut g = vec![0.0f32; 256];
+        let mut rng = Rng::seed_from(2);
+        for v in g[..128].iter_mut() {
+            *v = rng.gaussian_f32() * 0.01;
+        }
+        for v in g[128..].iter_mut() {
+            *v = rng.gaussian_f32() * 10.0;
+        }
+        let q = from_name("terngrad").unwrap();
+        let qg = BucketQuantizer::new(128).quantize(&g, q.as_ref(), &mut rng);
+        let m0 = qg.buckets[0].levels[2];
+        let m1 = qg.buckets[1].levels[2];
+        assert!(m1 > m0 * 100.0, "scales must separate: {m0} vs {m1}");
+    }
+
+    #[test]
+    fn clipping_reduces_range() {
+        let mut rng = Rng::seed_from(3);
+        let mut g: Vec<f32> = (0..2048).map(|_| rng.gaussian_f32()).collect();
+        g[7] = 100.0;
+        let q = from_name("terngrad").unwrap();
+        let unclipped = BucketQuantizer::new(2048).quantize(&g, q.as_ref(), &mut rng);
+        let clipped = BucketQuantizer::with_clip(2048, 2.5).quantize(&g, q.as_ref(), &mut rng);
+        assert!(clipped.buckets[0].levels[2] < unclipped.buckets[0].levels[2] / 10.0);
+    }
+
+    #[test]
+    fn clipping_does_not_mutate_input() {
+        let g = vec![1.0f32, -50.0, 2.0, 3.0];
+        let orig = g.clone();
+        let q = from_name("terngrad").unwrap();
+        let _ = BucketQuantizer::with_clip(4, 1.0).quantize(&g, q.as_ref(), &mut Rng::seed_from(0));
+        assert_eq!(g, orig);
+    }
+
+    #[test]
+    fn empty_gradient() {
+        let q = from_name("orq-3").unwrap();
+        let qg = BucketQuantizer::new(64).quantize(&[], q.as_ref(), &mut Rng::seed_from(0));
+        assert!(qg.buckets.is_empty());
+        assert!(qg.dequantize().is_empty());
+    }
+}

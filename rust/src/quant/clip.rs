@@ -1,0 +1,83 @@
+//! TernGrad-style gradient clipping: `clip(v) = sign(v)·min(|v|, c·σ)`
+//! applied *before* quantization to shrink the quantization range by
+//! removing outliers (paper §5, empirically c = 2.5; Table 4 sweeps
+//! c ∈ {1.7, 2.5}).
+
+use crate::tensor::stats::SliceStats;
+
+/// Clip a slice in place to ±c·σ, where σ is the slice's own std.
+/// Returns the clip threshold actually used.
+pub fn clip_sigma_inplace(g: &mut [f32], c: f32) -> f32 {
+    let sigma = SliceStats::compute(g).std() as f32;
+    let thr = c * sigma;
+    if thr <= 0.0 {
+        return 0.0;
+    }
+    for v in g.iter_mut() {
+        if *v > thr {
+            *v = thr;
+        } else if *v < -thr {
+            *v = -thr;
+        }
+    }
+    thr
+}
+
+/// Fraction of elements that a threshold of ±c·σ would clip (diagnostic).
+pub fn clipped_fraction(g: &[f32], c: f32) -> f64 {
+    let sigma = SliceStats::compute(g).std() as f32;
+    let thr = c * sigma;
+    if thr <= 0.0 || g.is_empty() {
+        return 0.0;
+    }
+    g.iter().filter(|v| v.abs() > thr).count() as f64 / g.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    #[test]
+    fn clips_to_threshold() {
+        let mut g = vec![0.1f32, -0.1, 5.0, -5.0, 0.0];
+        let thr = clip_sigma_inplace(&mut g, 1.0);
+        assert!(thr > 0.0);
+        for v in &g {
+            assert!(v.abs() <= thr + 1e-6);
+        }
+        // small values untouched
+        assert_eq!(g[0], 0.1);
+        assert_eq!(g[1], -0.1);
+    }
+
+    #[test]
+    fn gaussian_clip_fraction_matches_theory() {
+        // P(|N(0,1)| > 2.5) ≈ 0.0124.
+        let mut rng = Rng::seed_from(1);
+        let g: Vec<f32> = (0..200_000).map(|_| rng.gaussian_f32()).collect();
+        let frac = clipped_fraction(&g, 2.5);
+        assert!((frac - 0.0124).abs() < 0.002, "frac={frac}");
+        // and c=1.7: P ≈ 0.0891
+        let frac17 = clipped_fraction(&g, 1.7);
+        assert!((frac17 - 0.0891).abs() < 0.005, "frac={frac17}");
+    }
+
+    #[test]
+    fn zero_slice_noop() {
+        let mut g = vec![0.0f32; 8];
+        assert_eq!(clip_sigma_inplace(&mut g, 2.5), 0.0);
+        assert!(g.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn clipping_shrinks_range_not_center() {
+        let mut rng = Rng::seed_from(2);
+        let mut g: Vec<f32> = (0..10_000).map(|_| rng.gaussian_f32()).collect();
+        g[0] = 50.0; // gross outlier
+        let before_max = g.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        clip_sigma_inplace(&mut g, 2.5);
+        let after_max = g.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        assert!(after_max < before_max / 4.0, "outlier must be removed");
+    }
+}

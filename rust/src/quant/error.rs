@@ -1,0 +1,119 @@
+//! Quantization-error metrics: the quantities Figures 1-2 track.
+
+use super::bucket::QuantizedGrad;
+use crate::tensor::{cosine, mse, norm2};
+
+/// Expected random-rounding MSE of the given levels on a bucket — the
+/// objective D of Eq. (9): `E(v − Q(v))² = Σ (v − b_lo)(b_hi − v)` for the
+/// bracket of each v (zero outside the level range where clamping applies,
+/// which contributes `(v − b_edge)²` instead).
+pub fn expected_rr_mse(g: &[f32], levels: &[f32]) -> f64 {
+    debug_assert!(levels.len() >= 2);
+    if g.is_empty() {
+        return 0.0;
+    }
+    let s = levels.len();
+    let mut acc = 0.0f64;
+    for &v in g {
+        let mut lower = match levels.binary_search_by(|b| b.partial_cmp(&v).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.wrapping_sub(1),
+        };
+        if lower == usize::MAX {
+            lower = 0;
+        }
+        lower = lower.min(s - 2);
+        let b_lo = levels[lower] as f64;
+        let b_hi = levels[lower + 1] as f64;
+        let vd = v as f64;
+        if vd < b_lo {
+            acc += (vd - b_lo) * (vd - b_lo); // clamped below
+        } else if vd > b_hi {
+            acc += (vd - b_hi) * (vd - b_hi); // clamped above
+        } else {
+            acc += (vd - b_lo) * (b_hi - vd); // Eq. (9) integrand
+        }
+    }
+    acc / g.len() as f64
+}
+
+/// Realized quantization error of one quantized gradient vs the original:
+/// relative MSE `‖Q(G) − G‖² / ‖G‖²` plus cosine similarity.
+#[derive(Debug, Clone, Copy)]
+pub struct QuantError {
+    pub mse: f64,
+    pub rel_mse: f64,
+    pub cosine: f64,
+}
+
+pub fn measure(original: &[f32], quantized: &QuantizedGrad) -> QuantError {
+    let deq = quantized.dequantize();
+    let m = mse(original, &deq);
+    let n2 = norm2(original) as f64;
+    let denom = if n2 > 0.0 { n2 * n2 / original.len().max(1) as f64 } else { 1.0 };
+    QuantError { mse: m, rel_mse: m / denom, cosine: cosine(original, &deq) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::bucket::BucketQuantizer;
+    use crate::quant::from_name;
+    use crate::tensor::rng::Rng;
+
+    #[test]
+    fn expected_mse_zero_on_levels() {
+        let levels = [-1.0f32, 0.0, 1.0];
+        assert_eq!(expected_rr_mse(&[-1.0, 0.0, 1.0], &levels), 0.0);
+    }
+
+    #[test]
+    fn expected_mse_peak_at_midpoint() {
+        let levels = [0.0f32, 1.0];
+        // E(v-Q)² at v=0.5 is 0.25 (Bernoulli variance at p=1/2)
+        assert!((expected_rr_mse(&[0.5], &levels) - 0.25).abs() < 1e-9);
+        // at v=0.25: 0.25*0.75 = 0.1875
+        assert!((expected_rr_mse(&[0.25], &levels) - 0.1875).abs() < 1e-9);
+    }
+
+    #[test]
+    fn expected_mse_clamp_penalty() {
+        let levels = [-1.0f32, 1.0];
+        assert!((expected_rr_mse(&[3.0], &levels) - 4.0).abs() < 1e-9);
+        assert!((expected_rr_mse(&[-2.0], &levels) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn expected_matches_monte_carlo() {
+        let mut rng = Rng::seed_from(1);
+        let g: Vec<f32> = (0..256).map(|_| rng.gaussian_f32()).collect();
+        let q = from_name("qsgd-5").unwrap();
+        let bq = BucketQuantizer::new(256);
+        // analytic expectation uses the actual per-bucket levels
+        let levels = bq.quantize(&g, q.as_ref(), &mut Rng::seed_from(0)).buckets[0]
+            .levels
+            .clone();
+        let analytic = expected_rr_mse(&g, &levels);
+        let n = 400;
+        let mut acc = 0.0;
+        for t in 0..n {
+            let qg = bq.quantize(&g, q.as_ref(), &mut Rng::seed_from(100 + t));
+            acc += mse(&g, &qg.dequantize());
+        }
+        let mc = acc / n as f64;
+        assert!(
+            (mc - analytic).abs() < analytic * 0.15 + 1e-6,
+            "MC {mc} vs analytic {analytic}"
+        );
+    }
+
+    #[test]
+    fn measure_perfect_roundtrip() {
+        let g = vec![1.0f32, -1.0, 1.0, -1.0];
+        let q = from_name("signsgd").unwrap();
+        let qg = BucketQuantizer::new(4).quantize(&g, q.as_ref(), &mut Rng::seed_from(0));
+        let e = measure(&g, &qg);
+        assert!(e.mse < 1e-12);
+        assert!((e.cosine - 1.0).abs() < 1e-9);
+    }
+}

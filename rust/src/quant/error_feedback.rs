@@ -1,0 +1,166 @@
+//! Error feedback (EF) — the compensation technique of the paper's
+//! related-work §2 ([24] DGC, [34] ECQ-SGD, [17] EF-SignSGD): each worker
+//! keeps a residual memory `m`, quantizes `g + m` instead of `g`, and
+//! stores back the quantization error:
+//!
+//! ```text
+//! q_t = Q(g_t + m_t);   m_{t+1} = (g_t + m_t) − q_t
+//! ```
+//!
+//! The paper deliberately excludes EF from its experiments ("without the
+//! interference of other compensational methods", §2) but names it as a
+//! composable reinforcement — so it ships here as an opt-in wrapper any
+//! [`Quantizer`] can be lifted into, with an ablation showing it rescues
+//! the *biased* schemes (SignSGD/BinGrad-b) most, exactly as [17] proves.
+
+use super::bucket::{BucketQuantizer, QuantizedGrad};
+use super::Quantizer;
+use crate::tensor::rng::Rng;
+
+/// Per-worker error-feedback state wrapping a bucketed quantizer.
+pub struct ErrorFeedback {
+    bucketq: BucketQuantizer,
+    /// Residual memory, lazily sized to the first gradient.
+    memory: Vec<f32>,
+    /// Scratch for g + m.
+    compensated: Vec<f32>,
+}
+
+impl ErrorFeedback {
+    pub fn new(bucketq: BucketQuantizer) -> Self {
+        ErrorFeedback { bucketq, memory: Vec::new(), compensated: Vec::new() }
+    }
+
+    /// Residual ℓ₂ norm (diagnostic; bounded for contractive quantizers).
+    pub fn memory_norm(&self) -> f32 {
+        crate::tensor::norm2(&self.memory)
+    }
+
+    /// Quantize `g + memory`, update memory with the new residual.
+    pub fn quantize(&mut self, g: &[f32], q: &dyn Quantizer, rng: &mut Rng) -> QuantizedGrad {
+        if self.memory.len() != g.len() {
+            self.memory = vec![0.0; g.len()];
+        }
+        self.compensated.clear();
+        self.compensated.extend(g.iter().zip(&self.memory).map(|(a, b)| a + b));
+        let qg = self.bucketq.quantize(&self.compensated, q, rng);
+        // m ← (g + m) − Q(g + m), computed bucket-wise without allocating
+        // the full dequantized vector.
+        for (bi, chunk) in self
+            .memory
+            .chunks_mut(self.bucketq.bucket_size)
+            .enumerate()
+        {
+            let qb = &qg.buckets[bi];
+            let base = bi * self.bucketq.bucket_size;
+            for (j, m) in chunk.iter_mut().enumerate() {
+                *m = self.compensated[base + j] - qb.levels[qb.indices[j] as usize];
+            }
+        }
+        qg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::from_name;
+    use crate::tensor::{dot, norm2};
+
+    fn grad(seed: u64, n: usize) -> Vec<f32> {
+        let mut rng = Rng::seed_from(seed);
+        let mut g = vec![0.0; n];
+        rng.fill_gaussian(&mut g, 1.0);
+        g
+    }
+
+    #[test]
+    fn memory_tracks_residual_exactly() {
+        let q = from_name("signsgd").unwrap();
+        let mut ef = ErrorFeedback::new(BucketQuantizer::new(64));
+        let g = grad(1, 256);
+        let mut rng = Rng::seed_from(2);
+        let qg = ef.quantize(&g, q.as_ref(), &mut rng);
+        let deq = qg.dequantize();
+        // after the first step: m = g − Q(g)
+        for i in 0..g.len() {
+            let expect = g[i] - deq[i];
+            assert!((ef.memory[i] - expect).abs() < 1e-6, "i={i}");
+        }
+    }
+
+    #[test]
+    fn residual_memory_stays_bounded() {
+        // For a contractive compressor, ‖m‖ stays bounded across steps.
+        let q = from_name("bingrad-b").unwrap();
+        let mut ef = ErrorFeedback::new(BucketQuantizer::new(128));
+        let mut rng = Rng::seed_from(3);
+        let mut norms = Vec::new();
+        for t in 0..50 {
+            let g = grad(100 + t, 1024);
+            ef.quantize(&g, q.as_ref(), &mut rng);
+            norms.push(ef.memory_norm());
+        }
+        let tail_max = norms[25..].iter().cloned().fold(0.0f32, f32::max);
+        let g_norm = norm2(&grad(0, 1024));
+        assert!(tail_max < 3.0 * g_norm, "memory must not blow up: {tail_max}");
+    }
+
+    #[test]
+    fn ef_recovers_direction_over_time() {
+        // Feed the SAME gradient repeatedly through a coarse biased
+        // quantizer: the cumulative transmitted sum with EF converges to
+        // the true direction much better than without EF.
+        let q = from_name("signsgd").unwrap();
+        let g = grad(7, 512);
+        let steps = 30;
+
+        let mut ef = ErrorFeedback::new(BucketQuantizer::new(512));
+        let mut rng = Rng::seed_from(8);
+        let mut sum_ef = vec![0.0f32; g.len()];
+        for _ in 0..steps {
+            let qg = ef.quantize(&g, q.as_ref(), &mut rng);
+            for (s, v) in sum_ef.iter_mut().zip(qg.dequantize()) {
+                *s += v;
+            }
+        }
+        let bq = BucketQuantizer::new(512);
+        let mut sum_plain = vec![0.0f32; g.len()];
+        for _ in 0..steps {
+            let qg = bq.quantize(&g, q.as_ref(), &mut Rng::seed_from(9));
+            for (s, v) in sum_plain.iter_mut().zip(qg.dequantize()) {
+                *s += v;
+            }
+        }
+        let cos = |a: &[f32]| dot(a, &g) as f64 / (norm2(a) as f64 * norm2(&g) as f64);
+        let c_ef = cos(&sum_ef);
+        let c_plain = cos(&sum_plain);
+        assert!(
+            c_ef > c_plain + 0.05,
+            "EF should recover the direction: ef={c_ef:.4} plain={c_plain:.4}"
+        );
+        assert!(c_ef > 0.95, "cumulative EF signal should approach g: {c_ef:.4}");
+    }
+
+    #[test]
+    fn ef_with_unbiased_quantizer_is_harmless() {
+        let q = from_name("orq-9").unwrap();
+        let mut ef = ErrorFeedback::new(BucketQuantizer::new(256));
+        let g = grad(11, 1024);
+        let mut rng = Rng::seed_from(12);
+        let qg = ef.quantize(&g, q.as_ref(), &mut rng);
+        let e = crate::quant::error::measure(&g, &qg);
+        assert!(e.cosine > 0.9, "first EF step ≈ plain quantization");
+    }
+
+    #[test]
+    fn gradient_length_change_resets_memory() {
+        let q = from_name("terngrad").unwrap();
+        let mut ef = ErrorFeedback::new(BucketQuantizer::new(64));
+        let mut rng = Rng::seed_from(13);
+        ef.quantize(&grad(1, 128), q.as_ref(), &mut rng);
+        assert_eq!(ef.memory.len(), 128);
+        ef.quantize(&grad(2, 256), q.as_ref(), &mut rng);
+        assert_eq!(ef.memory.len(), 256);
+    }
+}

@@ -1,0 +1,49 @@
+//! Full-precision pass-through (the ×1 baseline row of every table).
+
+use super::{QuantizedBucket, Quantizer};
+use crate::tensor::rng::Rng;
+
+/// Identity quantizer. The codec recognizes `num_levels() == 0` and ships
+/// raw f32, so `quantize_bucket` is only used by the error-metric paths.
+pub struct FpQuantizer;
+
+impl Quantizer for FpQuantizer {
+    fn name(&self) -> String {
+        "fp".into()
+    }
+
+    fn num_levels(&self) -> usize {
+        0
+    }
+
+    fn is_unbiased(&self) -> bool {
+        true
+    }
+
+    fn quantize_bucket(&self, g: &[f32], _rng: &mut Rng) -> QuantizedBucket {
+        // Degenerate exact representation: every element is its own level.
+        // Only used in metric paths on small buckets; the wire path skips it.
+        QuantizedBucket {
+            levels: g.to_vec(),
+            indices: (0..g.len()).map(|i| i as u8).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_on_small_bucket() {
+        let g = [0.5f32, -1.0, 2.0];
+        let qb = FpQuantizer.quantize_bucket(&g, &mut Rng::seed_from(0));
+        assert_eq!(qb.dequantize(), g.to_vec());
+    }
+
+    #[test]
+    fn reports_fp_bits() {
+        assert_eq!(FpQuantizer.bits_per_element(), 32);
+        assert!(FpQuantizer.is_unbiased());
+    }
+}

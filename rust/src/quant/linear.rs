@@ -1,0 +1,133 @@
+//! Linear-s: the paper's naive baseline — levels at equal-mass quantiles
+//! of the empirical CDF ("linearly dividing the gradient cumulative
+//! distribution", §5), random rounding.
+//!
+//! The paper shows this *loses* to evenly spaced levels because all the
+//! levels crowd into the high-density region around zero and the gradient
+//! shape information is destroyed (Fig. 1 discussion).
+
+use super::{random_round, QuantizedBucket, Quantizer};
+use crate::tensor::rng::Rng;
+
+pub struct LinearQuantizer {
+    s: usize,
+}
+
+impl LinearQuantizer {
+    pub fn new(s: usize) -> Self {
+        assert!(s >= 2);
+        LinearQuantizer { s }
+    }
+
+    /// Levels at quantiles k/(s-1) of the sorted bucket, deduplicated with
+    /// a strictly-increasing nudge so `random_round`'s invariant holds.
+    pub fn quantile_levels(sorted: &[f32], s: usize) -> Vec<f32> {
+        debug_assert!(!sorted.is_empty());
+        let n = sorted.len();
+        let mut levels: Vec<f32> = (0..s)
+            .map(|k| {
+                let pos = (k as f64 / (s - 1) as f64) * (n - 1) as f64;
+                let lo = pos.floor() as usize;
+                let hi = pos.ceil() as usize;
+                if lo == hi {
+                    sorted[lo]
+                } else {
+                    let w = (pos - lo as f64) as f32;
+                    sorted[lo] * (1.0 - w) + sorted[hi] * w
+                }
+            })
+            .collect();
+        // Strictly increasing: duplicate quantiles (heavy mass at one value)
+        // get an epsilon ladder so binary search stays well-defined.
+        for i in 1..levels.len() {
+            if levels[i] <= levels[i - 1] {
+                let eps = (levels[i - 1].abs() * 1e-6).max(1e-12);
+                levels[i] = levels[i - 1] + eps;
+            }
+        }
+        levels
+    }
+}
+
+impl Quantizer for LinearQuantizer {
+    fn name(&self) -> String {
+        format!("linear-{}", self.s)
+    }
+
+    fn num_levels(&self) -> usize {
+        self.s
+    }
+
+    fn is_unbiased(&self) -> bool {
+        true
+    }
+
+    fn quantize_bucket(&self, g: &[f32], rng: &mut Rng) -> QuantizedBucket {
+        let mut sorted = g.to_vec();
+        sorted.sort_unstable_by(f32::total_cmp);
+        let levels = Self::quantile_levels(&sorted, self.s);
+        let mut indices = Vec::new();
+        random_round(g, &levels, rng, &mut indices);
+        QuantizedBucket { levels, indices }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_of_uniform_grid() {
+        let sorted: Vec<f32> = (0..=100).map(|i| i as f32).collect();
+        let lv = LinearQuantizer::quantile_levels(&sorted, 5);
+        assert_eq!(lv, vec![0.0, 25.0, 50.0, 75.0, 100.0]);
+    }
+
+    #[test]
+    fn endpoints_are_min_max() {
+        let mut sorted = vec![-3.0f32, -1.0, 0.0, 0.1, 7.5];
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let lv = LinearQuantizer::quantile_levels(&sorted, 3);
+        assert_eq!(lv[0], -3.0);
+        assert_eq!(*lv.last().unwrap(), 7.5);
+    }
+
+    #[test]
+    fn handles_mass_at_zero() {
+        // 90% zeros: naive quantiles would collapse; we require strictly
+        // increasing output.
+        let mut g = vec![0.0f32; 90];
+        g.extend((1..=10).map(|i| i as f32));
+        g.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let lv = LinearQuantizer::quantile_levels(&g, 9);
+        for w in lv.windows(2) {
+            assert!(w[1] > w[0], "levels must be strictly increasing: {lv:?}");
+        }
+    }
+
+    #[test]
+    fn levels_crowd_high_density_region() {
+        // Gaussian bucket: linear quantile levels should be denser near 0
+        // than near the tails — the failure mode the paper describes.
+        let mut rng = Rng::seed_from(11);
+        let mut g: Vec<f32> = (0..8192).map(|_| rng.gaussian_f32()).collect();
+        g.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let lv = LinearQuantizer::quantile_levels(&g, 9);
+        let central_gap = lv[5] - lv[4];
+        let tail_gap = lv[1] - lv[0];
+        assert!(
+            central_gap < tail_gap,
+            "central {central_gap} should be tighter than tail {tail_gap}"
+        );
+    }
+
+    #[test]
+    fn quantize_bucket_valid_indices() {
+        let mut rng = Rng::seed_from(12);
+        let g: Vec<f32> = (0..512).map(|_| rng.gaussian_f32()).collect();
+        let q = LinearQuantizer::new(5).quantize_bucket(&g, &mut rng);
+        assert_eq!(q.levels.len(), 5);
+        assert!(q.indices.iter().all(|&i| (i as usize) < 5));
+        assert_eq!(q.indices.len(), g.len());
+    }
+}

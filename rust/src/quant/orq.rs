@@ -1,0 +1,377 @@
+//! ORQ — Optimized Random Quantization (the paper's multi-level method).
+//!
+//! Theorem 1 gives the stationarity condition for the levels `{b_k}` that
+//! minimize the expected random-rounding MSE under *any* distribution
+//! p(v); Remark 1.2 / Eq. (12) is its empirical (discrete) form:
+//!
+//! ```text
+//! |{ b_k ≤ v ≤ b_{k+1} }|  =  Σ_{b_{k-1} ≤ v ≤ b_{k+1}} (v − b_{k−1})
+//!                             ─────────────────────────────────────────
+//!                                        b_{k+1} − b_{k−1}
+//! ```
+//!
+//! Algorithm 1 solves it greedily and recursively for s = 2^K + 1 levels:
+//! pin the extreme levels to the support endpoints (Corollary 1.1), solve
+//! the midpoint level from Eq. (12) with the endpoints as neighbors, then
+//! recurse into each half. On a sorted bucket with prefix sums, each
+//! midpoint solve is O(log d) (two binary searches), so level selection is
+//! O(d log d) overall — dominated by the sort, matching the paper's
+//! "trivial O(D) compared with training" claim.
+//!
+//! [`OrqQuantizer::with_refinement`] optionally post-processes the greedy
+//! solution with coordinate-descent sweeps of the *exact* condition
+//! (Eq. 12 applied to every interior level with its true neighbors) — the
+//! "future work" improvement the paper's conclusion hints at; the ablation
+//! bench (`quant_throughput --ablation`) quantifies what it buys.
+
+use super::{random_round, QuantizedBucket, Quantizer};
+use crate::tensor::rng::Rng;
+
+pub struct OrqQuantizer {
+    s: usize,
+    refine_sweeps: usize,
+}
+
+impl OrqQuantizer {
+    /// `s` must be ≥ 2. Paper uses s = 2^K + 1 (3, 5, 9); other s are
+    /// supported by splitting the largest interval first (see
+    /// [`solve_levels`]).
+    pub fn new(s: usize) -> Self {
+        assert!(s >= 2, "ORQ needs at least 2 levels");
+        OrqQuantizer { s, refine_sweeps: 0 }
+    }
+
+    /// Greedy solution + `sweeps` coordinate-descent refinement passes.
+    pub fn with_refinement(s: usize, sweeps: usize) -> Self {
+        OrqQuantizer { s, refine_sweeps: sweeps }
+    }
+
+    /// Solve the optimal levels for a bucket. Exposed for the figure
+    /// benches and the property tests.
+    pub fn levels_for(&self, g: &[f32]) -> Vec<f32> {
+        let mut sorted = g.to_vec();
+        sorted.sort_unstable_by(f32::total_cmp);
+        let mut levels = solve_levels(&sorted, self.s);
+        for _ in 0..self.refine_sweeps {
+            if !refine_once(&sorted, &mut levels) {
+                break;
+            }
+        }
+        levels
+    }
+}
+
+impl Quantizer for OrqQuantizer {
+    fn name(&self) -> String {
+        format!("orq-{}", self.s)
+    }
+
+    fn num_levels(&self) -> usize {
+        self.s
+    }
+
+    fn is_unbiased(&self) -> bool {
+        true
+    }
+
+    fn quantize_bucket(&self, g: &[f32], rng: &mut Rng) -> QuantizedBucket {
+        let levels = self.levels_for(g);
+        let mut indices = Vec::new();
+        random_round(g, &levels, rng, &mut indices);
+        QuantizedBucket { levels, indices }
+    }
+}
+
+/// Prefix sums of a sorted bucket: `prefix[i] = Σ sorted[..i]` (f64).
+fn prefix_sums(sorted: &[f32]) -> Vec<f64> {
+    let mut p = Vec::with_capacity(sorted.len() + 1);
+    p.push(0.0);
+    let mut acc = 0.0f64;
+    for &v in sorted {
+        acc += v as f64;
+        p.push(acc);
+    }
+    p
+}
+
+/// First index with `sorted[i] >= x`.
+fn lower_bound(sorted: &[f32], x: f32) -> usize {
+    sorted.partition_point(|&v| v < x)
+}
+
+/// Solve Eq. (12) for the midpoint level given neighbors `(l, r)`:
+/// find b with  count{v ∈ [b, r]} = Σ_{v ∈ [l, r]} (v − l) / (r − l),
+/// restricted to the sorted index range `[i0, i1)` (the values in [l, r]).
+/// Fractional counts are resolved by linear interpolation between order
+/// statistics, which makes the solution continuous in the data.
+fn solve_mid(sorted: &[f32], prefix: &[f64], i0: usize, i1: usize, l: f32, r: f32) -> f32 {
+    let n = i1.saturating_sub(i0);
+    if n == 0 || r <= l {
+        return 0.5 * (l + r);
+    }
+    let sum = prefix[i1] - prefix[i0];
+    // Target count of elements that should sit in the upper interval [b, r].
+    let t = (sum - (l as f64) * n as f64) / ((r - l) as f64);
+    let t = t.clamp(0.0, n as f64);
+    // b sits at fractional order-statistic position j* = i1 - t.
+    let jf = i1 as f64 - t;
+    let j0 = jf.floor() as usize;
+    let frac = (jf - j0 as f64) as f32;
+    let at = |j: usize| -> f32 {
+        if j < i0 {
+            l
+        } else if j >= i1 {
+            r
+        } else {
+            sorted[j]
+        }
+    };
+    let b = at(j0.max(i0).min(i1.saturating_sub(1)));
+    let b_next = at((j0 + 1).min(i1.saturating_sub(1)).max(i0));
+    let mid = b * (1.0 - frac) + b_next * frac;
+    mid.clamp(l, r)
+}
+
+/// Algorithm 1: greedy recursive level placement on the sorted bucket.
+///
+/// For s = 2^K + 1 this is exactly the paper's recursion. For other s the
+/// recursion splits the interval containing the most remaining splits
+/// first, which degenerates to the same thing for powers of two.
+pub fn solve_levels(sorted: &[f32], s: usize) -> Vec<f32> {
+    assert!(s >= 2);
+    let n = sorted.len();
+    if n == 0 {
+        // Degenerate: synthesize a strictly increasing ladder around 0.
+        return (0..s).map(|k| k as f32 * 1e-12).collect();
+    }
+    let lo = sorted[0];
+    let hi = sorted[n - 1];
+    if hi - lo <= 0.0 {
+        // Constant bucket: ladder of epsilons above the single value so the
+        // level vector stays strictly sorted; everything quantizes to lo.
+        let eps = (lo.abs() * 1e-6).max(1e-12);
+        return (0..s).map(|k| lo + k as f32 * eps).collect();
+    }
+    let prefix = prefix_sums(sorted);
+
+    // Recursive subdivision: (level_index_l, level_index_r, value_l, value_r).
+    let mut levels = vec![0.0f32; s];
+    levels[0] = lo;
+    levels[s - 1] = hi;
+    let mut stack = vec![(0usize, s - 1, lo, hi)];
+    while let Some((kl, kr, vl, vr)) = stack.pop() {
+        if kr - kl < 2 {
+            continue;
+        }
+        let km = (kl + kr) / 2;
+        let i0 = lower_bound(sorted, vl);
+        let i1 = lower_bound(sorted, nextafter_up(vr));
+        let vm = solve_mid(sorted, &prefix, i0, i1, vl, vr);
+        levels[km] = vm;
+        stack.push((kl, km, vl, vm));
+        stack.push((km, kr, vm, vr));
+    }
+    enforce_increasing(&mut levels);
+    levels
+}
+
+/// One coordinate-descent sweep of the exact optimality condition over the
+/// interior levels. Returns true if any level moved materially.
+fn refine_once(sorted: &[f32], levels: &mut [f32]) -> bool {
+    let prefix = prefix_sums(sorted);
+    let mut moved = false;
+    for k in 1..levels.len() - 1 {
+        let l = levels[k - 1];
+        let r = levels[k + 1];
+        let i0 = lower_bound(sorted, l);
+        let i1 = lower_bound(sorted, nextafter_up(r));
+        let new = solve_mid(sorted, &prefix, i0, i1, l, r);
+        if (new - levels[k]).abs() > 1e-7 * (r - l).abs().max(1e-12) {
+            moved = true;
+        }
+        levels[k] = new;
+    }
+    enforce_increasing(levels);
+    moved
+}
+
+/// Residual of the discrete optimal condition Eq. (12) at each interior
+/// level, normalized by the in-range count (0 = exactly optimal). Used by
+/// the property tests and the ablation bench.
+pub fn condition_residual(sorted: &[f32], levels: &[f32]) -> Vec<f64> {
+    let prefix = prefix_sums(sorted);
+    let mut out = Vec::with_capacity(levels.len().saturating_sub(2));
+    for k in 1..levels.len().saturating_sub(1) {
+        let l = levels[k - 1];
+        let b = levels[k];
+        let r = levels[k + 1];
+        let i0 = lower_bound(sorted, l);
+        let ib = lower_bound(sorted, b);
+        let i1 = lower_bound(sorted, nextafter_up(r));
+        let n_range = (i1 - i0) as f64;
+        if n_range == 0.0 || r <= l {
+            out.push(0.0);
+            continue;
+        }
+        let lhs = (i1 - ib) as f64; // |{b ≤ v ≤ r}|
+        let sum = prefix[i1] - prefix[i0];
+        let rhs = (sum - l as f64 * n_range) / ((r - l) as f64);
+        out.push((lhs - rhs).abs() / n_range.max(1.0));
+    }
+    out
+}
+
+fn enforce_increasing(levels: &mut [f32]) {
+    for i in 1..levels.len() {
+        if levels[i] <= levels[i - 1] {
+            let eps = (levels[i - 1].abs() * 1e-6).max(1e-12);
+            levels[i] = levels[i - 1] + eps;
+        }
+    }
+}
+
+/// Smallest f32 strictly greater than x (for inclusive upper bounds).
+fn nextafter_up(x: f32) -> f32 {
+    if x.is_nan() || x == f32::INFINITY {
+        return x;
+    }
+    let bits = x.to_bits();
+    let next = if x >= 0.0 { bits + 1 } else { bits - 1 };
+    f32::from_bits(if x == 0.0 { 1 } else { next })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::error::expected_rr_mse;
+    use crate::quant::linear::LinearQuantizer;
+    use crate::quant::qsgd::QsgdQuantizer;
+
+    fn sorted_gaussian(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from(seed);
+        let mut g: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        g.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        g
+    }
+
+    #[test]
+    fn endpoints_pinned_to_support() {
+        // Corollary 1.1: extreme levels == min/max of the bucket.
+        let g = sorted_gaussian(2048, 1);
+        for s in [3, 5, 9] {
+            let lv = solve_levels(&g, s);
+            assert_eq!(lv[0], g[0]);
+            assert_eq!(*lv.last().unwrap(), *g.last().unwrap());
+            assert!(lv.windows(2).all(|w| w[1] > w[0]), "strictly increasing");
+        }
+    }
+
+    #[test]
+    fn uniform_distribution_gives_even_grid() {
+        // Remark 1.1: for uniform p the optimal condition collapses to the
+        // midpoint rule, i.e. evenly spaced levels.
+        let g: Vec<f32> = (0..4097).map(|i| i as f32 / 4096.0).collect();
+        let lv = solve_levels(&g, 5);
+        for (k, &b) in lv.iter().enumerate() {
+            let expect = k as f32 / 4.0;
+            assert!((b - expect).abs() < 0.01, "level {k}: {b} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn condition_residual_small_at_solution() {
+        let g = sorted_gaussian(8192, 2);
+        // Greedy Algorithm 1 is approximate (condition holds w.r.t. the
+        // recursion's neighbors, not the final ones) — loose bound.
+        let lv = solve_levels(&g, 9);
+        for (k, r) in condition_residual(&g, &lv).iter().enumerate() {
+            assert!(*r < 0.15, "greedy interior level {k} residual {r}");
+        }
+        // After coordinate-descent refinement the exact Eq. (12) condition
+        // must hold tightly at every interior level.
+        let refined = OrqQuantizer::with_refinement(9, 32).levels_for(&g);
+        for (k, r) in condition_residual(&g, &refined).iter().enumerate() {
+            assert!(*r < 0.01, "refined interior level {k} residual {r}");
+        }
+    }
+
+    #[test]
+    fn orq_beats_qsgd_and_linear_on_gaussian() {
+        // The headline property: expected random-rounding MSE of the ORQ
+        // levels ≤ evenly spaced (QSGD) and quantile (Linear) levels.
+        let g = sorted_gaussian(4096, 3);
+        for s in [3usize, 5, 9] {
+            let orq_lv = solve_levels(&g, s);
+            let m = g.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            let qsgd_lv = QsgdQuantizer::grid(s, m);
+            let lin_lv = LinearQuantizer::quantile_levels(&g, s);
+            let e_orq = expected_rr_mse(&g, &orq_lv);
+            let e_qsgd = expected_rr_mse(&g, &qsgd_lv);
+            let e_lin = expected_rr_mse(&g, &lin_lv);
+            assert!(e_orq <= e_qsgd * 1.001, "s={s}: orq={e_orq} qsgd={e_qsgd}");
+            assert!(e_orq <= e_lin * 1.001, "s={s}: orq={e_orq} linear={e_lin}");
+        }
+    }
+
+    #[test]
+    fn refinement_does_not_hurt() {
+        let g = sorted_gaussian(4096, 4);
+        for s in [5usize, 9] {
+            let greedy = OrqQuantizer::new(s).levels_for(&g);
+            let refined = OrqQuantizer::with_refinement(s, 8).levels_for(&g);
+            let e_g = expected_rr_mse(&g, &greedy);
+            let e_r = expected_rr_mse(&g, &refined);
+            assert!(e_r <= e_g * 1.01, "s={s}: refined {e_r} vs greedy {e_g}");
+        }
+    }
+
+    #[test]
+    fn constant_and_empty_buckets() {
+        let lv = solve_levels(&[], 3);
+        assert_eq!(lv.len(), 3);
+        let lv = solve_levels(&[2.0; 64], 5);
+        assert_eq!(lv.len(), 5);
+        assert!(lv.windows(2).all(|w| w[1] > w[0]));
+        assert!((lv[0] - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn two_level_solution_is_support() {
+        let g = sorted_gaussian(512, 5);
+        let lv = solve_levels(&g, 2);
+        assert_eq!(lv, vec![g[0], *g.last().unwrap()]);
+    }
+
+    #[test]
+    fn bimodal_distribution_levels_track_modes() {
+        // Two tight clusters at ±1: with s=3 the optimal interior level
+        // must sit between them, and the expected MSE should be far below
+        // what an evenly spaced grid with the same endpoints... (equal
+        // here) — instead check MSE is near zero for s=5 (two levels per
+        // mode + midpoint).
+        let mut rng = Rng::seed_from(6);
+        let mut g: Vec<f32> = (0..2048)
+            .map(|i| if i % 2 == 0 { -1.0 } else { 1.0 } + rng.gaussian_f32() * 0.01)
+            .collect();
+        g.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let lv = solve_levels(&g, 5);
+        let e = expected_rr_mse(&g, &lv);
+        let m = g.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let e_even = expected_rr_mse(&g, &QsgdQuantizer::grid(5, m));
+        assert!(e < e_even * 0.25, "bimodal: orq={e} even={e_even}");
+    }
+
+    #[test]
+    fn quantize_bucket_end_to_end() {
+        let mut rng = Rng::seed_from(7);
+        let g: Vec<f32> = (0..2048).map(|_| rng.gaussian_f32()).collect();
+        let q = OrqQuantizer::new(9);
+        let qb = q.quantize_bucket(&g, &mut rng);
+        assert_eq!(qb.levels.len(), 9);
+        assert_eq!(qb.indices.len(), g.len());
+        assert!(qb.indices.iter().all(|&i| (i as usize) < 9));
+        let deq = qb.dequantize();
+        let mse = crate::tensor::mse(&g, &deq);
+        assert!(mse < 0.1, "9-level quantization of N(0,1) should be tight: {mse}");
+    }
+}

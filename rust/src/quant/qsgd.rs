@@ -1,0 +1,131 @@
+//! QSGD-s (Alistarh et al., NeurIPS 2017) as evaluated in the paper:
+//! s evenly spaced levels spanning [−max|v|, max|v|], random rounding.
+//!
+//! (The original QSGD normalizes by the bucket ℓ₂ norm and ships
+//! sign+magnitude; the paper's figures place both baselines on the same
+//! "evenly spaced levels" footing — "in both QSGD and TernGrad, {b_k} are
+//! evenly spaced" (§3.1) — which is what we implement. QSGD-3 ≈ TernGrad.)
+
+use super::{random_round, QuantizedBucket, Quantizer};
+use crate::tensor::rng::Rng;
+use crate::tensor::stats::SliceStats;
+
+pub struct QsgdQuantizer {
+    s: usize,
+}
+
+impl QsgdQuantizer {
+    pub fn new(s: usize) -> Self {
+        assert!(s >= 2, "QSGD needs at least 2 levels");
+        QsgdQuantizer { s }
+    }
+
+    /// The evenly spaced level grid for a given max-abs. The fraction is
+    /// computed first so the grid stays finite up to m = f32::MAX/2
+    /// (found by the adversarial-bucket test).
+    pub fn grid(s: usize, m: f32) -> Vec<f32> {
+        let m = if m > 0.0 { m } else { 1.0 };
+        (0..s)
+            .map(|k| -m + 2.0 * m * (k as f32 / (s - 1) as f32))
+            .collect()
+    }
+}
+
+impl Quantizer for QsgdQuantizer {
+    fn name(&self) -> String {
+        format!("qsgd-{}", self.s)
+    }
+
+    fn num_levels(&self) -> usize {
+        self.s
+    }
+
+    fn is_unbiased(&self) -> bool {
+        true
+    }
+
+    fn quantize_bucket(&self, g: &[f32], rng: &mut Rng) -> QuantizedBucket {
+        let m = SliceStats::compute(g).max_abs();
+        let levels = Self::grid(self.s, m);
+        let mut indices = Vec::new();
+        random_round(g, &levels, rng, &mut indices);
+        QuantizedBucket { levels, indices }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::mse;
+
+    #[test]
+    fn grid_even_and_symmetric() {
+        let lv = QsgdQuantizer::grid(5, 2.0);
+        assert_eq!(lv, vec![-2.0, -1.0, 0.0, 1.0, 2.0]);
+        let lv9 = QsgdQuantizer::grid(9, 1.0);
+        assert_eq!(lv9.len(), 9);
+        for (a, b) in lv9.iter().zip(lv9.iter().rev()) {
+            assert!((a + b).abs() < 1e-6, "grid must be symmetric");
+        }
+    }
+
+    #[test]
+    fn qsgd3_matches_terngrad_levels() {
+        let g = [0.4f32, -1.5, 0.9];
+        let q = QsgdQuantizer::new(3).quantize_bucket(&g, &mut Rng::seed_from(0));
+        assert_eq!(q.levels, vec![-1.5, 0.0, 1.5]);
+    }
+
+    #[test]
+    fn finer_grid_lower_error() {
+        let mut rng = Rng::seed_from(7);
+        let g: Vec<f32> = (0..4096).map(|_| rng.gaussian_f32()).collect();
+        let e3 = mse(
+            &g,
+            &QsgdQuantizer::new(3).quantize_bucket(&g, &mut Rng::seed_from(1)).dequantize(),
+        );
+        let e9 = mse(
+            &g,
+            &QsgdQuantizer::new(9).quantize_bucket(&g, &mut Rng::seed_from(1)).dequantize(),
+        );
+        let e17 = mse(
+            &g,
+            &QsgdQuantizer::new(17).quantize_bucket(&g, &mut Rng::seed_from(1)).dequantize(),
+        );
+        assert!(e9 < e3, "e9={e9} e3={e3}");
+        assert!(e17 < e9, "e17={e17} e9={e9}");
+    }
+
+    #[test]
+    fn unbiased_in_expectation() {
+        // Average many independent quantizations of the same bucket.
+        let mut rng = Rng::seed_from(8);
+        let g: Vec<f32> = (0..64).map(|_| rng.gaussian_f32()).collect();
+        let q = QsgdQuantizer::new(5);
+        let n = 2000;
+        let mut acc = vec![0.0f64; g.len()];
+        for t in 0..n {
+            let qb = q.quantize_bucket(&g, &mut Rng::seed_from(1000 + t));
+            for (a, v) in acc.iter_mut().zip(qb.dequantize()) {
+                *a += v as f64;
+            }
+        }
+        let max_width = {
+            let lv = &q.quantize_bucket(&g, &mut Rng::seed_from(0)).levels;
+            lv.windows(2).map(|w| (w[1] - w[0]) as f64).fold(0.0, f64::max)
+        };
+        for (a, v) in acc.iter().zip(&g) {
+            let mean = a / n as f64;
+            let tol = 4.0 * max_width / (n as f64).sqrt() + 1e-4;
+            assert!((mean - *v as f64).abs() < tol, "E[Q(v)]={mean} v={v}");
+        }
+    }
+
+    #[test]
+    fn constant_bucket() {
+        let g = vec![0.7f32; 128];
+        let q = QsgdQuantizer::new(5).quantize_bucket(&g, &mut Rng::seed_from(9));
+        // max == 0.7 -> top level is exactly 0.7
+        assert!(q.dequantize().iter().all(|&v| v == 0.7));
+    }
+}

@@ -1,0 +1,74 @@
+//! Scaled SignSGD (Bernstein et al. 2018), Eq. (13) of the paper:
+//! `Q(G) = (‖G‖₁ / dim(G)) · sign(G)` — deterministic, biased, 1 bit.
+
+use super::{QuantizedBucket, Quantizer};
+use crate::tensor::rng::Rng;
+
+pub struct SignSgdQuantizer;
+
+impl Quantizer for SignSgdQuantizer {
+    fn name(&self) -> String {
+        "signsgd".into()
+    }
+
+    fn num_levels(&self) -> usize {
+        2
+    }
+
+    fn is_unbiased(&self) -> bool {
+        false
+    }
+
+    fn quantize_bucket(&self, g: &[f32], _rng: &mut Rng) -> QuantizedBucket {
+        let n = g.len().max(1) as f64;
+        let scale = (g.iter().map(|v| v.abs() as f64).sum::<f64>() / n) as f32;
+        let scale = if scale > 0.0 { scale } else { 1e-12 };
+        QuantizedBucket {
+            levels: vec![-scale, scale],
+            indices: g.iter().map(|&v| (v >= 0.0) as u8).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_is_mean_abs() {
+        let g = [1.0f32, -2.0, 3.0, -4.0];
+        let qb = SignSgdQuantizer.quantize_bucket(&g, &mut Rng::seed_from(0));
+        assert_eq!(qb.levels, vec![-2.5, 2.5]);
+        assert_eq!(qb.indices, vec![1, 0, 1, 0]);
+        assert_eq!(qb.dequantize(), vec![2.5, -2.5, 2.5, -2.5]);
+    }
+
+    #[test]
+    fn preserves_sign_everywhere() {
+        let mut rng = Rng::seed_from(1);
+        let g: Vec<f32> = (0..1024).map(|_| rng.gaussian_f32()).collect();
+        let qb = SignSgdQuantizer.quantize_bucket(&g, &mut rng);
+        for (v, d) in g.iter().zip(qb.dequantize()) {
+            if *v != 0.0 {
+                assert_eq!(v.signum(), d.signum());
+            }
+        }
+    }
+
+    #[test]
+    fn l1_norm_preserved() {
+        // ‖Q(G)‖₁ = ‖G‖₁ by construction.
+        let mut rng = Rng::seed_from(2);
+        let g: Vec<f32> = (0..512).map(|_| rng.gaussian_f32() * 3.0).collect();
+        let qb = SignSgdQuantizer.quantize_bucket(&g, &mut rng);
+        let l1_orig: f64 = g.iter().map(|v| v.abs() as f64).sum();
+        let l1_quant: f64 = qb.dequantize().iter().map(|v| v.abs() as f64).sum();
+        assert!((l1_orig - l1_quant).abs() / l1_orig < 1e-4);
+    }
+
+    #[test]
+    fn zero_bucket() {
+        let qb = SignSgdQuantizer.quantize_bucket(&[0.0; 16], &mut Rng::seed_from(0));
+        assert!(qb.dequantize().iter().all(|v| v.abs() < 1e-6));
+    }
+}

@@ -1,0 +1,82 @@
+//! TernGrad (Wen et al., NeurIPS 2017): 3 levels {−m, 0, +m}, m = max|v|.
+//!
+//! The paper's primary 3-level baseline ("TernGrad-noclip" when run
+//! without the 2.5σ clipping of [`crate::quant::clip`]).
+
+use super::{random_round, QuantizedBucket, Quantizer};
+use crate::tensor::rng::Rng;
+use crate::tensor::stats::SliceStats;
+
+pub struct TernGradQuantizer;
+
+impl Quantizer for TernGradQuantizer {
+    fn name(&self) -> String {
+        "terngrad".into()
+    }
+
+    fn num_levels(&self) -> usize {
+        3
+    }
+
+    fn is_unbiased(&self) -> bool {
+        true
+    }
+
+    fn quantize_bucket(&self, g: &[f32], rng: &mut Rng) -> QuantizedBucket {
+        let m = SliceStats::compute(g).max_abs();
+        // Degenerate all-zero bucket: keep a tiny symmetric range so the
+        // level vector stays strictly sorted (everything maps to level 0).
+        let m = if m > 0.0 { m } else { 1.0 };
+        let levels = vec![-m, 0.0, m];
+        let mut indices = Vec::new();
+        random_round(g, &levels, rng, &mut indices);
+        QuantizedBucket { levels, indices }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::mse;
+
+    #[test]
+    fn levels_at_max_abs() {
+        let g = [0.5f32, -2.0, 1.0, 0.0];
+        let qb = TernGradQuantizer.quantize_bucket(&g, &mut Rng::seed_from(1));
+        assert_eq!(qb.levels, vec![-2.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn unbiased_in_expectation() {
+        let g = vec![0.5f32; 20_000]; // halfway between 0 and max=0.5? max=0.5 -> exact level
+        let qb = TernGradQuantizer.quantize_bucket(&g, &mut Rng::seed_from(2));
+        // 0.5 == max so it should hit the top level exactly
+        assert!(qb.dequantize().iter().all(|&v| v == 0.5));
+
+        // Now a value strictly inside (0, max): mean of dequant ≈ v.
+        let mut g2 = vec![0.3f32; 20_000];
+        g2.push(1.0); // sets max
+        let qb2 = TernGradQuantizer.quantize_bucket(&g2, &mut Rng::seed_from(3));
+        let deq = qb2.dequantize();
+        let mean = deq[..20_000].iter().map(|&v| v as f64).sum::<f64>() / 20_000.0;
+        assert!((mean - 0.3).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn zero_bucket_stays_zero() {
+        let g = vec![0.0f32; 64];
+        let qb = TernGradQuantizer.quantize_bucket(&g, &mut Rng::seed_from(4));
+        assert!(qb.dequantize().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn error_below_range_square() {
+        // Quantization error per element is bounded by the bracket width².
+        let mut rng = Rng::seed_from(5);
+        let g: Vec<f32> = (0..2048).map(|_| rng.gaussian_f32()).collect();
+        let qb = TernGradQuantizer.quantize_bucket(&g, &mut rng);
+        let err = mse(&g, &qb.dequantize());
+        let m = qb.levels[2] as f64;
+        assert!(err <= m * m, "err={err} m²={}", m * m);
+    }
+}

@@ -1,0 +1,209 @@
+//! `artifacts/meta.json` manifest — the contract between `python/compile/
+//! aot.py` and the Rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::model::init::{Init, Section};
+use crate::util::json::Json;
+
+/// What kind of model an artifact is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    Classifier,
+    Lm,
+}
+
+/// One model entry of the manifest.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub kind: ModelKind,
+    pub param_count: usize,
+    pub grad_hlo: String,
+    pub fwd_hlo: String,
+    pub sections: Vec<Section>,
+    /// classifier: (in_dim, classes); lm: (vocab, seq_len)
+    pub in_dim: usize,
+    pub classes: usize,
+    pub batch: usize,
+}
+
+/// The whole manifest plus its directory (HLO paths are relative).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ModelMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/meta.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!("cannot read {}: {e}", path.display()))
+        })?;
+        let json = Json::parse(&text)?;
+        let models = json
+            .req("models")?
+            .as_arr()
+            .ok_or_else(|| Error::Artifact("models must be an array".into()))?
+            .iter()
+            .map(parse_model)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { dir, models })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ModelMeta> {
+        self.models.iter().find(|m| m.name == name).ok_or_else(|| {
+            Error::Artifact(format!(
+                "model {name:?} not in manifest (have: {:?}); rebuild with `make artifacts MODELS=...`",
+                self.models.iter().map(|m| m.name.as_str()).collect::<Vec<_>>()
+            ))
+        })
+    }
+
+    pub fn hlo_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+fn parse_model(j: &Json) -> Result<ModelMeta> {
+    let str_field = |k: &str| -> Result<String> {
+        Ok(j.req(k)?
+            .as_str()
+            .ok_or_else(|| Error::Artifact(format!("{k} must be a string")))?
+            .to_string())
+    };
+    let kind = match str_field("kind")?.as_str() {
+        "classifier" => ModelKind::Classifier,
+        "lm" => ModelKind::Lm,
+        other => return Err(Error::Artifact(format!("unknown kind {other:?}"))),
+    };
+    let cfg = j.req("config")?;
+    let cfg_usize = |k: &str| -> Result<usize> {
+        cfg.req(k)?
+            .as_usize()
+            .ok_or_else(|| Error::Artifact(format!("config.{k} must be a number")))
+    };
+    let (in_dim, classes) = match kind {
+        ModelKind::Classifier => (cfg_usize("in_dim")?, cfg_usize("classes")?),
+        ModelKind::Lm => (cfg_usize("seq_len")?, cfg_usize("vocab")?),
+    };
+    let sections = j
+        .req("sections")?
+        .as_arr()
+        .ok_or_else(|| Error::Artifact("sections must be an array".into()))?
+        .iter()
+        .map(|s| -> Result<Section> {
+            let name = s
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| Error::Artifact("section name".into()))?
+                .to_string();
+            let size = s
+                .req("size")?
+                .as_usize()
+                .ok_or_else(|| Error::Artifact("section size".into()))?;
+            let fan_in = s
+                .req("fan_in")?
+                .as_usize()
+                .ok_or_else(|| Error::Artifact("section fan_in".into()))?;
+            let init_s = s
+                .req("init")?
+                .as_str()
+                .ok_or_else(|| Error::Artifact("section init".into()))?;
+            let init = Init::parse(init_s)
+                .ok_or_else(|| Error::Artifact(format!("unknown init {init_s:?}")))?;
+            Ok(Section { name, size, fan_in, init })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let param_count = j
+        .req("param_count")?
+        .as_usize()
+        .ok_or_else(|| Error::Artifact("param_count".into()))?;
+    let section_total: usize = sections.iter().map(|s| s.size).sum();
+    if section_total != param_count {
+        return Err(Error::Artifact(format!(
+            "sections sum to {section_total} but param_count is {param_count}"
+        )));
+    }
+    Ok(ModelMeta {
+        name: str_field("name")?,
+        kind,
+        param_count,
+        grad_hlo: str_field("grad_hlo")?,
+        fwd_hlo: str_field("fwd_hlo")?,
+        sections,
+        in_dim,
+        classes,
+        batch: cfg_usize("batch")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "models": [{
+        "name": "m", "kind": "classifier", "param_count": 10,
+        "grad_hlo": "m.grad.hlo.txt", "fwd_hlo": "m.fwd.hlo.txt",
+        "sections": [
+          {"name": "w0", "shape": [2, 3], "init": "he", "fan_in": 2, "size": 6},
+          {"name": "b0", "shape": [4], "init": "zeros", "fan_in": 4, "size": 4}
+        ],
+        "config": {"in_dim": 2, "classes": 4, "batch": 8, "hidden": [3]}
+      }]
+    }"#;
+
+    fn write_manifest(text: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("orq_meta_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("meta.json"), text).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_sample() {
+        let dir = write_manifest(SAMPLE);
+        let m = Manifest::load(&dir).unwrap();
+        let model = m.find("m").unwrap();
+        assert_eq!(model.kind, ModelKind::Classifier);
+        assert_eq!(model.param_count, 10);
+        assert_eq!(model.sections.len(), 2);
+        assert_eq!(model.sections[0].init, Init::He);
+        assert_eq!(model.in_dim, 2);
+        assert_eq!(model.classes, 4);
+        assert_eq!(model.batch, 8);
+        assert!(m.find("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_inconsistent_param_count() {
+        let bad = SAMPLE.replace("\"param_count\": 10", "\"param_count\": 11");
+        let dir = write_manifest(&bad);
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_artifact_error() {
+        let err = Manifest::load("/nonexistent/path").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // When `make artifacts` has run, the real manifest must parse.
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if std::path::Path::new(&format!("{dir}/meta.json")).exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert!(!m.models.is_empty());
+            let mlp = m.find("mlp_s").unwrap();
+            assert_eq!(mlp.param_count, 445_540);
+        }
+    }
+}

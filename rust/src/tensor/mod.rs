@@ -1,0 +1,98 @@
+//! Flat-tensor substrate: PRNG, running statistics, vector helpers.
+//!
+//! Everything in the hot path operates on flat `&[f32]` slices — the
+//! paper's quantizers are defined on the flattened gradient, so there is
+//! deliberately no ndarray machinery here.
+
+pub mod rng;
+pub mod stats;
+
+/// `y += alpha * x` (axpy).
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `y *= alpha`.
+pub fn scale(alpha: f32, y: &mut [f32]) {
+    for yi in y.iter_mut() {
+        *yi *= alpha;
+    }
+}
+
+/// Euclidean norm.
+pub fn norm2(x: &[f32]) -> f32 {
+    x.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt() as f32
+}
+
+/// L1 norm.
+pub fn norm1(x: &[f32]) -> f32 {
+    x.iter().map(|v| v.abs() as f64).sum::<f64>() as f32
+}
+
+/// Dot product (f64 accumulation).
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum::<f64>() as f32
+}
+
+/// Mean squared error between two vectors (f64 accumulation).
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x as f64) - (*y as f64);
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Cosine similarity; 0 when either vector is ~zero.
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let na = norm2(a) as f64;
+    let nb = norm2(b) as f64;
+    if na < 1e-20 || nb < 1e-20 {
+        return 0.0;
+    }
+    dot(a, b) as f64 / (na * nb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_scale_dot() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [1.0, 1.0, 1.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [3.0, 5.0, 7.0]);
+        scale(0.5, &mut y);
+        assert_eq!(y, [1.5, 2.5, 3.5]);
+        assert!((dot(&x, &x) - 14.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn norms() {
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+        assert!((norm1(&[-3.0, 4.0]) - 7.0).abs() < 1e-6);
+        assert_eq!(norm2(&[]), 0.0);
+    }
+
+    #[test]
+    fn mse_cosine() {
+        let a = [1.0, 0.0];
+        let b = [0.0, 1.0];
+        assert!((mse(&a, &b) - 1.0).abs() < 1e-9);
+        assert!(cosine(&a, &b).abs() < 1e-9);
+        assert!((cosine(&a, &a) - 1.0).abs() < 1e-9);
+        assert_eq!(cosine(&[0.0, 0.0], &a), 0.0);
+    }
+}

@@ -1,0 +1,182 @@
+//! Single-pass statistics over flat slices — the Rust mirror of the
+//! Pallas `bucket_stats` kernel (one sweep produces all moments).
+
+/// Moments of one bucket/slice, computed in a single pass.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SliceStats {
+    pub n: usize,
+    pub min: f32,
+    pub max: f32,
+    pub sum: f64,
+    pub sumsq: f64,
+    pub l1: f64,
+}
+
+impl SliceStats {
+    /// One pass over the data: min/max/Σ/Σ²/Σ|·| — mirrors
+    /// `python/compile/kernels/quant_stats.py`.
+    pub fn compute(xs: &[f32]) -> SliceStats {
+        let mut s = SliceStats {
+            n: xs.len(),
+            min: f32::INFINITY,
+            max: f32::NEG_INFINITY,
+            sum: 0.0,
+            sumsq: 0.0,
+            l1: 0.0,
+        };
+        for &v in xs {
+            s.min = s.min.min(v);
+            s.max = s.max.max(v);
+            let vd = v as f64;
+            s.sum += vd;
+            s.sumsq += vd * vd;
+            s.l1 += vd.abs();
+        }
+        if xs.is_empty() {
+            s.min = 0.0;
+            s.max = 0.0;
+        }
+        s
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// Population variance.
+    pub fn var(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.sumsq / self.n as f64 - m * m).max(0.0)
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// Largest absolute value.
+    pub fn max_abs(&self) -> f32 {
+        self.min.abs().max(self.max.abs())
+    }
+}
+
+/// Running mean/var accumulator (Welford) for streaming metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1); 0 for fewer than 2 samples.
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Percentile of a *sorted* slice with linear interpolation, q in [0,1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = pos - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_stats_basic() {
+        let s = SliceStats::compute(&[-1.0, 2.0, -3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, -3.0);
+        assert_eq!(s.max, 4.0);
+        assert_eq!(s.sum, 2.0);
+        assert_eq!(s.l1, 10.0);
+        assert_eq!(s.max_abs(), 4.0);
+        assert!((s.mean() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slice_stats_var_matches_two_pass() {
+        let xs: Vec<f32> = (0..1000).map(|i| ((i * 31 % 97) as f32) / 10.0).collect();
+        let s = SliceStats::compute(&xs);
+        let m = xs.iter().map(|v| *v as f64).sum::<f64>() / xs.len() as f64;
+        let var =
+            xs.iter().map(|v| (*v as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!((s.var() - var).abs() < 1e-9, "{} vs {}", s.var(), var);
+    }
+
+    #[test]
+    fn slice_stats_empty() {
+        let s = SliceStats::compute(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.var(), 0.0);
+        assert_eq!(s.min, 0.0);
+    }
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::default();
+        for x in xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / 5.0;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / 4.0;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.var() - var).abs() < 1e-12);
+        assert_eq!(w.count(), 5);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (0..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile_sorted(&xs, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&xs, 0.5), 50.0);
+        assert_eq!(percentile_sorted(&xs, 1.0), 100.0);
+        assert!((percentile_sorted(&xs, 0.995) - 99.5).abs() < 1e-9);
+        assert_eq!(percentile_sorted(&[], 0.5), 0.0);
+        assert_eq!(percentile_sorted(&[7.0], 0.99), 7.0);
+    }
+}

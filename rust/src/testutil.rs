@@ -1,0 +1,103 @@
+//! Generative-testing helpers: the gradient-distribution families the
+//! property tests sweep (proptest is unavailable offline; these generators
+//! + seed loops play its role for the quantizer invariants).
+
+use crate::tensor::rng::Rng;
+
+/// Distribution families seen in real gradients (and adversarial ones).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GradDist {
+    Gaussian,
+    /// Laplace via difference of exponentials — heavier tails.
+    Laplace,
+    /// N(±1, 0.1) mixture — bimodal.
+    Bimodal,
+    /// 95% exact zeros + Gaussian spikes — post-ReLU sparsity.
+    Sparse,
+    Uniform,
+    /// Student-t-ish heavy tail (ratio of gaussian to sqrt uniform).
+    HeavyTail,
+}
+
+pub const ALL_DISTS: [GradDist; 6] = [
+    GradDist::Gaussian,
+    GradDist::Laplace,
+    GradDist::Bimodal,
+    GradDist::Sparse,
+    GradDist::Uniform,
+    GradDist::HeavyTail,
+];
+
+/// Sample a bucket of `n` values from the family, scaled by `scale`.
+pub fn sample(dist: GradDist, n: usize, scale: f32, rng: &mut Rng) -> Vec<f32> {
+    (0..n)
+        .map(|_| {
+            let v = match dist {
+                GradDist::Gaussian => rng.gaussian_f32(),
+                GradDist::Laplace => {
+                    let e1 = -rng.f64().max(1e-12).ln();
+                    let e2 = -rng.f64().max(1e-12).ln();
+                    (e1 - e2) as f32
+                }
+                GradDist::Bimodal => {
+                    let center = if rng.f32() < 0.5 { -1.0 } else { 1.0 };
+                    center + rng.gaussian_f32() * 0.1
+                }
+                GradDist::Sparse => {
+                    if rng.f32() < 0.95 {
+                        0.0
+                    } else {
+                        rng.gaussian_f32() * 3.0
+                    }
+                }
+                GradDist::Uniform => rng.f32() * 2.0 - 1.0,
+                GradDist::HeavyTail => {
+                    let g = rng.gaussian_f32();
+                    let u = rng.f32().max(1e-3);
+                    g / u.sqrt()
+                }
+            };
+            v * scale
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::stats::SliceStats;
+
+    #[test]
+    fn all_families_produce_finite_values() {
+        let mut rng = Rng::seed_from(1);
+        for d in ALL_DISTS {
+            let xs = sample(d, 4096, 1.0, &mut rng);
+            assert_eq!(xs.len(), 4096);
+            assert!(xs.iter().all(|v| v.is_finite()), "{d:?}");
+        }
+    }
+
+    #[test]
+    fn sparse_is_mostly_zero() {
+        let mut rng = Rng::seed_from(2);
+        let xs = sample(GradDist::Sparse, 10_000, 1.0, &mut rng);
+        let zeros = xs.iter().filter(|&&v| v == 0.0).count();
+        assert!(zeros > 9_000, "zeros={zeros}");
+    }
+
+    #[test]
+    fn heavy_tail_has_outliers() {
+        let mut rng = Rng::seed_from(3);
+        let xs = sample(GradDist::HeavyTail, 10_000, 1.0, &mut rng);
+        let s = SliceStats::compute(&xs);
+        assert!(s.max_abs() > 6.0 * s.std() as f32, "tail should dominate σ");
+    }
+
+    #[test]
+    fn scale_applies() {
+        let mut rng = Rng::seed_from(4);
+        let xs = sample(GradDist::Gaussian, 10_000, 10.0, &mut rng);
+        let s = SliceStats::compute(&xs);
+        assert!((s.std() - 10.0).abs() < 0.5, "std={}", s.std());
+    }
+}

@@ -1,0 +1,85 @@
+//! Tiny CSV writer for metric series and figure data.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::error::Result;
+
+/// Buffered CSV writer with a fixed header.
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(CsvWriter { w, cols: header.len() })
+    }
+
+    /// Write one row of f64 cells (formatted compactly).
+    pub fn row(&mut self, cells: &[f64]) -> Result<()> {
+        debug_assert_eq!(cells.len(), self.cols, "csv row width mismatch");
+        let mut line = String::with_capacity(cells.len() * 12);
+        for (i, c) in cells.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            line.push_str(&format_cell(*c));
+        }
+        writeln!(self.w, "{line}")?;
+        Ok(())
+    }
+
+    /// Write one row of mixed string cells.
+    pub fn row_str(&mut self, cells: &[String]) -> Result<()> {
+        debug_assert_eq!(cells.len(), self.cols, "csv row width mismatch");
+        writeln!(self.w, "{}", cells.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+fn format_cell(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.6}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("orq_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["step", "loss"]).unwrap();
+            w.row(&[0.0, 2.5]).unwrap();
+            w.row(&[1.0, 2.25]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "step,loss\n0,2.500000\n1,2.250000\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn integer_cells_compact() {
+        assert_eq!(format_cell(3.0), "3");
+        assert_eq!(format_cell(-2.0), "-2");
+        assert_eq!(format_cell(0.5), "0.500000");
+    }
+}

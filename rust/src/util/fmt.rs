@@ -1,0 +1,117 @@
+//! Human-readable formatting helpers (sizes, durations, counts, tables).
+
+/// `1234567` -> `"1,234,567"`.
+pub fn commas(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Bytes with binary-ish pragmatic units (paper uses decimal for bandwidth).
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Seconds -> adaptive ms/s formatting.
+pub fn duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.1} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.1} ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{secs:.2} s")
+    } else {
+        format!("{:.1} min", secs / 60.0)
+    }
+}
+
+/// Render an aligned text table (first row is the header).
+pub fn table(rows: &[Vec<String>]) -> String {
+    if rows.is_empty() {
+        return String::new();
+    }
+    let cols = rows.iter().map(|r| r.len()).max().unwrap();
+    let mut widths = vec![0usize; cols];
+    for r in rows {
+        for (i, c) in r.iter().enumerate() {
+            widths[i] = widths[i].max(c.chars().count());
+        }
+    }
+    let mut out = String::new();
+    for (ri, r) in rows.iter().enumerate() {
+        for (i, c) in r.iter().enumerate() {
+            out.push_str(c);
+            if i + 1 < r.len() {
+                for _ in 0..widths[i].saturating_sub(c.chars().count()) + 2 {
+                    out.push(' ');
+                }
+            }
+        }
+        out.push('\n');
+        if ri == 0 {
+            let total: usize = widths.iter().sum::<usize>() + 2 * (cols - 1);
+            out.push_str(&"-".repeat(total));
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn commas_groups() {
+        assert_eq!(commas(0), "0");
+        assert_eq!(commas(999), "999");
+        assert_eq!(commas(1000), "1,000");
+        assert_eq!(commas(61_100_000), "61,100,000");
+    }
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(12), "12 B");
+        assert_eq!(bytes(2048), "2.00 KiB");
+        assert!(bytes(25_600_000 * 4).contains("MiB"));
+    }
+
+    #[test]
+    fn duration_units() {
+        assert_eq!(duration(0.000_000_5), "500.0 ns");
+        assert_eq!(duration(0.000_5), "500.0 µs");
+        assert_eq!(duration(0.5), "500.0 ms");
+        assert_eq!(duration(1.5), "1.50 s");
+        assert!(duration(600.0).contains("min"));
+    }
+
+    #[test]
+    fn table_aligns() {
+        let t = table(&[
+            vec!["a".into(), "long-col".into()],
+            vec!["xxxx".into(), "y".into()],
+        ]);
+        let lines: Vec<_> = t.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[1].starts_with("---"));
+    }
+}

@@ -1,0 +1,5 @@
+//! Small shared substrates: JSON parsing, CSV writing, formatting helpers.
+
+pub mod csv;
+pub mod fmt;
+pub mod json;

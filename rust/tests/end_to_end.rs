@@ -1,0 +1,129 @@
+//! End-to-end coordinator tests: the paper's qualitative orderings must
+//! emerge from full training runs on the synthetic substrate.
+
+use orq::config::TrainConfig;
+use orq::coordinator::trainer::{native_backend_factory, Trainer};
+use orq::data::synth::{ClassDataset, DatasetSpec};
+
+fn ds() -> ClassDataset {
+    ClassDataset::generate(DatasetSpec {
+        in_dim: 32,
+        classes: 16,
+        train_n: 2048,
+        test_n: 1024,
+        margin: 3.0,
+        noise: 1.0,
+        label_noise: 0.02,
+        seed: 77,
+    })
+}
+
+fn cfg(method: &str) -> TrainConfig {
+    TrainConfig {
+        model: "mlp:32-64-64-16".into(),
+        dataset: "test".into(),
+        method: method.into(),
+        workers: 1,
+        batch: 64,
+        steps: 250,
+        lr: 0.08,
+        momentum: 0.9,
+        weight_decay: 1e-4,
+        lr_decay_steps: vec![150, 210],
+        lr_decay: 0.1,
+        warmup_steps: 0,
+        bucket_size: 512,
+        clip_factor: None,
+        seed: 5,
+        eval_every: 0,
+        quantize_downlink: false,
+    }
+}
+
+fn run(method: &str) -> (f64, f64) {
+    let data = ds();
+    let c = cfg(method);
+    let factory = native_backend_factory(&c.model).unwrap();
+    let out = Trainer::new(c, &data).unwrap().run(factory).unwrap();
+    (out.summary.test_top1, out.summary.mean_quant_rel_mse)
+}
+
+/// Table 2's qualitative ordering at s=9: FP ≥ ORQ-9 ≥ Linear-9 on
+/// accuracy, with ORQ-9 close to FP.
+#[test]
+fn ordering_fp_orq_linear() {
+    let (acc_fp, _) = run("fp");
+    let (acc_orq, mse_orq) = run("orq-9");
+    let (acc_lin, mse_lin) = run("linear-9");
+    assert!(acc_fp > 0.75, "fp acc {acc_fp}");
+    // ORQ within a few points of FP
+    assert!(acc_orq > acc_fp - 0.08, "orq {acc_orq} vs fp {acc_fp}");
+    // ORQ's quantization error strictly below Linear's (Fig 2 ordering)
+    assert!(mse_orq < mse_lin, "mse orq {mse_orq} vs linear {mse_lin}");
+    // and Linear shouldn't beat ORQ on accuracy by any real margin
+    assert!(acc_orq > acc_lin - 0.02, "orq {acc_orq} vs linear {acc_lin}");
+}
+
+/// Fig 2's quantization-error ordering at equal s: ORQ < QSGD.
+#[test]
+fn quant_error_ordering_orq_vs_qsgd() {
+    let (_, mse_orq3) = run("orq-3");
+    let (_, mse_tern) = run("terngrad");
+    assert!(
+        mse_orq3 < mse_tern,
+        "orq-3 rel-mse {mse_orq3} should beat terngrad {mse_tern}"
+    );
+    let (_, mse_orq9) = run("orq-9");
+    let (_, mse_qsgd9) = run("qsgd-9");
+    assert!(
+        mse_orq9 < mse_qsgd9,
+        "orq-9 rel-mse {mse_orq9} should beat qsgd-9 {mse_qsgd9}"
+    );
+}
+
+/// More levels → higher accuracy for ORQ (Table 5's compression trend).
+#[test]
+fn more_levels_more_accuracy() {
+    let (a3, m3) = run("orq-3");
+    let (a9, m9) = run("orq-9");
+    assert!(m9 < m3, "rel-mse must shrink with levels: {m9} vs {m3}");
+    assert!(a9 > a3 - 0.03, "acc should not degrade with more levels: {a9} vs {a3}");
+}
+
+/// Distributed run (4 workers) preserves learning and the variance
+/// averaging effect: gradient averaging across workers must not hurt.
+#[test]
+fn four_workers_learn() {
+    let data = ds();
+    let mut c = cfg("terngrad");
+    c.workers = 4;
+    c.batch = 64; // 16 per worker
+    let factory = native_backend_factory(&c.model).unwrap();
+    let out = Trainer::new(c, &data).unwrap().run(factory).unwrap();
+    assert!(out.summary.test_top1 > 0.5, "4-worker top1 {}", out.summary.test_top1);
+    // all four uplinks accounted每step
+    let per_step = &out.series.steps[0];
+    assert!(per_step.wire_bytes > 0);
+}
+
+/// Clipping helps the 3-level scheme (Table 4 direction): with clip 2.5σ
+/// the realized quantization error drops vs no clip.
+#[test]
+fn clipping_reduces_quant_error() {
+    let data = ds();
+    let mut c_noclip = cfg("terngrad");
+    c_noclip.steps = 120;
+    let mut c_clip = c_noclip.clone();
+    c_clip.clip_factor = Some(2.5);
+    c_clip.warmup_steps = 10;
+    let f1 = native_backend_factory(&c_noclip.model).unwrap();
+    let f2 = native_backend_factory(&c_clip.model).unwrap();
+    let no = Trainer::new(c_noclip, &data).unwrap().run(f1).unwrap();
+    let yes = Trainer::new(c_clip, &data).unwrap().run(f2).unwrap();
+    assert!(
+        yes.summary.mean_quant_rel_mse < no.summary.mean_quant_rel_mse,
+        "clip {} vs noclip {}",
+        yes.summary.mean_quant_rel_mse,
+        no.summary.mean_quant_rel_mse
+    );
+}

@@ -1,0 +1,198 @@
+//! Failure injection: malformed wire bytes, adversarial configs, and
+//! degenerate training shapes must produce clean errors — never panics,
+//! never silent corruption.
+
+use orq::codec::{self, Packing};
+use orq::config::TrainConfig;
+use orq::coordinator::trainer::{native_backend_factory, Trainer};
+use orq::data::synth::{ClassDataset, DatasetSpec};
+use orq::quant::bucket::BucketQuantizer;
+use orq::quant::{self};
+use orq::tensor::rng::Rng;
+
+/// Fuzz the decoder with random single-byte corruptions of valid
+/// messages: every outcome must be Ok (harmless flip, e.g. inside a level
+/// float) or Err — never a panic, and Ok results must keep the element
+/// count.
+#[test]
+fn decoder_survives_byte_corruption() {
+    let mut rng = Rng::seed_from(1);
+    let mut g = vec![0.0f32; 3000];
+    rng.fill_gaussian(&mut g, 0.01);
+    let q = quant::from_name("orq-5").unwrap();
+    let qg = BucketQuantizer::new(512).quantize(&g, q.as_ref(), &mut rng);
+    for packing in [Packing::Fixed, Packing::BaseS] {
+        let clean = codec::encode(&qg, "orq-5", packing);
+        for trial in 0..400 {
+            let mut bytes = clean.clone();
+            let pos = rng.below(bytes.len() as u64) as usize;
+            let bit = 1u8 << rng.below(8);
+            bytes[pos] ^= bit;
+            match codec::decode(&bytes) {
+                Ok(dec) => {
+                    // element count must never silently change
+                    assert!(
+                        dec.len() == 3000,
+                        "trial {trial}: corrupted length {}",
+                        dec.len()
+                    );
+                }
+                Err(_) => {} // clean rejection is fine
+            }
+        }
+    }
+}
+
+/// Truncation at every prefix length: must be Err (or Ok only for the
+/// full message).
+#[test]
+fn decoder_survives_truncation() {
+    let mut rng = Rng::seed_from(2);
+    let mut g = vec![0.0f32; 700];
+    rng.fill_gaussian(&mut g, 1.0);
+    let q = quant::from_name("terngrad").unwrap();
+    let qg = BucketQuantizer::new(256).quantize(&g, q.as_ref(), &mut rng);
+    let bytes = codec::encode(&qg, "terngrad", Packing::BaseS);
+    for n in 0..bytes.len() {
+        assert!(
+            codec::decode(&bytes[..n]).is_err(),
+            "prefix of {n} bytes must not decode"
+        );
+    }
+    assert!(codec::decode(&bytes).is_ok());
+}
+
+/// Random garbage never decodes to Ok with a bogus huge allocation and
+/// never panics.
+#[test]
+fn decoder_survives_garbage() {
+    let mut rng = Rng::seed_from(3);
+    for _ in 0..500 {
+        let len = rng.below(200) as usize;
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let _ = codec::decode(&bytes); // must not panic
+    }
+}
+
+/// A header that claims a huge total length against a short payload must
+/// error, not OOM or panic.
+#[test]
+fn decoder_rejects_length_lies() {
+    let g = vec![1.0f32; 64];
+    let mut bytes = codec::encode_fp(&g);
+    // total u64 lives at offset 12..20
+    bytes[12..20].copy_from_slice(&(u32::MAX as u64).to_le_bytes());
+    assert!(codec::decode(&bytes).is_err());
+}
+
+fn tiny_ds(classes: usize) -> ClassDataset {
+    ClassDataset::generate(DatasetSpec {
+        in_dim: 8,
+        classes,
+        train_n: 128,
+        test_n: 64,
+        margin: 3.0,
+        noise: 0.5,
+        label_noise: 0.0,
+        seed: 4,
+    })
+}
+
+#[test]
+fn trainer_degenerate_shapes() {
+    let ds = tiny_ds(8);
+    // steps = 1, eval_every larger than steps, bucket larger than params
+    let cfg = TrainConfig {
+        model: "mlp:8-16-8".into(),
+        method: "orq-3".into(),
+        workers: 2,
+        batch: 4,
+        steps: 1,
+        eval_every: 100,
+        bucket_size: 1 << 20,
+        lr_decay_steps: vec![],
+        ..TrainConfig::default()
+    };
+    let factory = native_backend_factory(&cfg.model).unwrap();
+    let out = Trainer::new(cfg, &ds).unwrap().run(factory).unwrap();
+    assert_eq!(out.series.steps.len(), 1);
+    // final eval still recorded
+    assert!(!out.series.evals.is_empty());
+}
+
+#[test]
+fn trainer_bucket_size_one() {
+    // d=1: every element its own bucket — worst-case overhead but must
+    // still be numerically exact for 2-level schemes (each bucket is a
+    // constant).
+    let ds = tiny_ds(8);
+    let cfg = TrainConfig {
+        model: "mlp:8-16-8".into(),
+        method: "bingrad-b".into(),
+        workers: 1,
+        batch: 8,
+        steps: 3,
+        eval_every: 0,
+        bucket_size: 1,
+        lr_decay_steps: vec![],
+        ..TrainConfig::default()
+    };
+    let factory = native_backend_factory(&cfg.model).unwrap();
+    let out = Trainer::new(cfg, &ds).unwrap().run(factory).unwrap();
+    // single-element buckets quantize exactly -> zero quantization error
+    assert!(
+        out.summary.mean_quant_rel_mse < 1e-9,
+        "d=1 must be lossless, got {}",
+        out.summary.mean_quant_rel_mse
+    );
+}
+
+#[test]
+fn trainer_rejects_unknown_method_and_model() {
+    let ds = tiny_ds(8);
+    let mut cfg = TrainConfig {
+        model: "mlp:8-16-8".into(),
+        method: "definitely-not-a-method".into(),
+        workers: 1,
+        batch: 8,
+        steps: 1,
+        ..TrainConfig::default()
+    };
+    let factory = native_backend_factory(&cfg.model).unwrap();
+    assert!(Trainer::new(cfg.clone(), &ds).unwrap().run(factory).is_err());
+    cfg.method = "fp".into();
+    assert!(native_backend_factory("not-a-model").is_err());
+    assert!(native_backend_factory("mlp:64").is_err()); // single dim
+    assert!(native_backend_factory("mlp:a-b").is_err()); // non-numeric
+}
+
+#[test]
+fn quantizers_survive_adversarial_buckets() {
+    // NaN-free but nasty inputs: all-zero, single element, constant,
+    // max-magnitude floats, denormals.
+    let nasty: Vec<Vec<f32>> = vec![
+        vec![0.0; 97],
+        vec![42.0],
+        vec![-1e30, 1e30],
+        vec![f32::MIN_POSITIVE; 33],
+        vec![1e-40; 8], // subnormal
+        (0..64).map(|i| if i % 2 == 0 { 3.4e37 } else { -3.4e37 }).collect(),
+    ];
+    let mut rng = Rng::seed_from(5);
+    for g in &nasty {
+        for name in quant::paper_methods() {
+            if name == "fp" {
+                continue;
+            }
+            let q = quant::from_name(name).unwrap();
+            let qb = q.quantize_bucket(g, &mut rng);
+            assert_eq!(qb.indices.len(), g.len(), "{name}");
+            assert!(qb.levels.iter().all(|v| v.is_finite()), "{name} on {g:?}");
+            // roundtrip through the codec too
+            let qg = BucketQuantizer::new(64).quantize(g, q.as_ref(), &mut rng);
+            let bytes = codec::encode(&qg, name, Packing::BaseS);
+            let dec = codec::decode(&bytes).unwrap();
+            assert_eq!(dec.len(), g.len(), "{name}");
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Integration: the PJRT runtime executing the AOT JAX/Pallas artifacts,
+//! cross-checked against the pure-Rust native backend.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use orq::coordinator::trainer::Trainer;
+use orq::config::TrainConfig;
+use orq::data::synth::{Batch, ClassDataset, DatasetSpec};
+use orq::model::native::NativeMlp;
+use orq::model::Backend;
+use orq::runtime::meta::Manifest;
+use orq::runtime::{Engine, PjrtBackend};
+use orq::tensor::rng::Rng;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if std::path::Path::new(&format!("{dir}/meta.json")).exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping PJRT integration test: run `make artifacts` first");
+        None
+    }
+}
+
+fn random_batch(b: usize, in_dim: usize, classes: usize, seed: u64) -> Batch {
+    let mut rng = Rng::seed_from(seed);
+    let mut x = vec![0.0f32; b * in_dim];
+    rng.fill_gaussian(&mut x, 1.0);
+    let y: Vec<i32> = (0..b).map(|_| rng.below(classes as u64) as i32).collect();
+    Batch { x, y, batch: b, in_dim }
+}
+
+#[test]
+fn pjrt_grad_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtBackend::load(&dir, "mlp_s").expect("load mlp_s");
+    let mut native = NativeMlp::mlp_s();
+    assert_eq!(pjrt.param_count(), native.param_count());
+
+    // identical params into both backends
+    let params = native.init_params(&mut Rng::seed_from(7));
+    let batch = random_batch(64, 256, 100, 8);
+
+    let mut g_native = vec![0.0f32; native.param_count()];
+    let loss_native = native.loss_grad(&params, &batch, &mut g_native);
+    let mut g_pjrt = vec![0.0f32; pjrt.param_count()];
+    let loss_pjrt = pjrt.loss_grad(&params, &batch, &mut g_pjrt);
+
+    assert!(
+        (loss_native - loss_pjrt).abs() < 1e-3 * loss_native.abs().max(1.0),
+        "loss: native {loss_native} vs pjrt {loss_pjrt}"
+    );
+    // cosine + relative L2 of the full 445k-element gradient
+    let cos = orq::tensor::cosine(&g_native, &g_pjrt);
+    assert!(cos > 0.9999, "gradient cosine {cos}");
+    let num = orq::tensor::norm2(
+        &g_native.iter().zip(&g_pjrt).map(|(a, b)| a - b).collect::<Vec<_>>(),
+    );
+    let den = orq::tensor::norm2(&g_native).max(1e-12);
+    assert!(num / den < 2e-3, "relative grad error {}", num / den);
+}
+
+#[test]
+fn pjrt_logits_match_native_and_padding_works() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtBackend::load(&dir, "mlp_s").expect("load");
+    let mut native = NativeMlp::mlp_s();
+    let params = native.init_params(&mut Rng::seed_from(3));
+
+    // short batch (< compiled 64) exercises the padding path
+    let batch = random_batch(17, 256, 100, 4);
+    let lp = pjrt.logits(&params, &batch);
+    let ln = native.logits(&params, &batch);
+    assert_eq!(lp.len(), 17 * 100);
+    let cos = orq::tensor::cosine(&lp, &ln);
+    assert!(cos > 0.9999, "logits cosine {cos}");
+}
+
+#[test]
+fn pjrt_trains_through_full_coordinator() {
+    let Some(dir) = artifacts_dir() else { return };
+    let backend = PjrtBackend::load(&dir, "mlp_s").expect("load");
+    let ds = ClassDataset::generate(DatasetSpec {
+        train_n: 2048,
+        test_n: 512,
+        ..DatasetSpec::cifar100_like(256)
+    });
+    let cfg = TrainConfig {
+        model: "pjrt:mlp_s".into(),
+        method: "orq-5".into(),
+        workers: 1,
+        batch: 64, // must equal the compiled batch
+        steps: 30,
+        eval_every: 0,
+        lr_decay_steps: vec![],
+        ..TrainConfig::default()
+    };
+    let factory = move |_id: usize| Box::new(backend.clone()) as Box<dyn Backend>;
+    let out = Trainer::new(cfg, &ds).unwrap().run(factory).unwrap();
+    // 30 steps is enough for the loss to move down from ln(100) ≈ 4.6
+    let first = out.series.steps.first().unwrap().train_loss;
+    let last = out.summary.final_train_loss;
+    assert!(last < first, "loss should descend: {first} -> {last}");
+    assert!(out.summary.total_wire_bytes > 0);
+}
+
+#[test]
+fn lm_grad_loss_near_uniform_entropy() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let model = engine.load_model(&manifest, "transformer_s").expect("load lm");
+    let meta = model.meta.clone();
+    assert_eq!(meta.classes, 256); // vocab
+
+    let sections = meta.sections.clone();
+    let params = orq::model::init::init_flat(&sections, &mut Rng::seed_from(1));
+    let mut rng = Rng::seed_from(2);
+    let tokens: Vec<i32> = (0..meta.batch * (meta.in_dim + 1))
+        .map(|_| rng.below(256) as i32)
+        .collect();
+    let (loss, grad) = model.lm_grad(&params, &tokens).expect("lm grad");
+    let uniform = (256f32).ln();
+    assert!(
+        (loss - uniform).abs() < 1.5,
+        "init loss {loss} should be near ln(256)={uniform}"
+    );
+    assert_eq!(grad.len(), meta.param_count);
+    assert!(grad.iter().all(|v| v.is_finite()));
+    let gnorm = orq::tensor::norm2(&grad);
+    assert!(gnorm > 0.0 && gnorm < 1e3, "grad norm {gnorm}");
+}
+
+#[test]
+fn manifest_mismatch_is_clean_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let msg = match PjrtBackend::load(&dir, "not_a_model") {
+        Ok(_) => panic!("loading a missing model must fail"),
+        Err(e) => e.to_string(),
+    };
+    assert!(msg.contains("not_a_model"), "{msg}");
+}
