@@ -40,6 +40,7 @@ fn main() -> orq::Result<()> {
         seed: 7,
         eval_every: (steps / 10).max(1),
         quantize_downlink: false,
+        topology: orq::comm::Topology::Ps,
     };
     println!("imagenet_distributed: {method}, 4 workers, d=512, clip 2.5σ, {steps} steps");
     let factory = native_backend_factory(&cfg.model)?;

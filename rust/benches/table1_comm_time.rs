@@ -1,12 +1,15 @@
 //! Table 1: #parameters and communication time of one gradient at
 //! 10 Gbps for the paper's model zoo — extended with the wire sizes and
 //! times of every quantization scheme (exact codec accounting), plus the
-//! ring-all-reduce comparison the paper mentions in §4.
+//! ring-all-reduce comparison the paper mentions in §4: the closed-form
+//! model AND a measured round over the real executable topologies
+//! (`comm::run_once`), side by side.
 
 use orq::bench::print_rows;
 use orq::codec::{wire_size, Packing};
 use orq::comm::link::Link;
-use orq::comm::ring;
+use orq::comm::{ring, run_once, Topology, WireSpec};
+use orq::tensor::rng::Rng;
 use orq::util::fmt;
 
 const ZOO: [(&str, u64); 5] = [
@@ -64,7 +67,7 @@ fn main() {
         &rows,
     );
 
-    // --- topology ablation: PS vs ring all-reduce for ResNet-50 ---
+    // --- topology ablation (modeled): PS vs ring for ResNet-50 ---
     let bytes_fp = 25_600_000usize * 4;
     let bytes_q3 = wire_size(25_600_000, d, 3, Packing::BaseS, "terngrad");
     let mut rows = Vec::new();
@@ -78,8 +81,45 @@ fn main() {
         ]);
     }
     print_rows(
-        "Topology ablation (ResNet-50): PS vs ring, FP vs 3-level",
+        "Topology ablation (ResNet-50, modeled): PS vs ring, FP vs 3-level",
         &["cluster", "PS fp32", "ring fp32", "PS 3-level up", "ring 3-level"],
+        &rows,
+    );
+
+    // --- topology ablation (measured): one round over the REAL executable
+    // collectives (mpsc channels, per-hop decode-reduce-requantize),
+    // scaled-down gradient so the bench stays fast. The "model" column is
+    // the closed-form prediction for the same per-node byte volume; the
+    // measured ring pays per-chunk headers + level tables on top.
+    let n_elems = 1usize << 21; // 2.1M elements ≈ 8.4 MB fp32
+    let mut rows = Vec::new();
+    for workers in [2usize, 4, 8] {
+        let mut rng = Rng::seed_from(42);
+        let grads: Vec<Vec<f32>> = (0..workers)
+            .map(|_| {
+                let mut g = vec![0.0f32; n_elems];
+                rng.fill_gaussian(&mut g, 1e-3);
+                g
+            })
+            .collect();
+        for (scheme, s) in [("fp", 0usize), ("terngrad", 3)] {
+            let spec = WireSpec { seed: 7, ..WireSpec::new(scheme, d) };
+            let (_, ps) = run_once(Topology::Ps, link, &spec, false, &grads).expect("ps round");
+            let (_, rg) = run_once(Topology::Ring, link, &spec, false, &grads).expect("ring round");
+            let one = wire_size(n_elems, d, s, Packing::BaseS, scheme);
+            rows.push(vec![
+                format!("{workers} workers"),
+                scheme.to_string(),
+                fmt::duration(ps.sim_time_s),
+                fmt::duration(rg.sim_time_s),
+                fmt::duration(ring::allreduce_time(&link, workers, one)),
+                fmt::bytes(rg.wire_bytes),
+            ]);
+        }
+    }
+    print_rows(
+        "Topology (measured, 2.1M elements over real channels): PS vs ring vs ring model",
+        &["cluster", "scheme", "PS measured", "ring measured", "ring model", "ring bytes"],
         &rows,
     );
 }

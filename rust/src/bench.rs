@@ -238,6 +238,7 @@ pub mod suite {
             seed: 42,
             eval_every: 0,
             quantize_downlink: false,
+            topology: crate::comm::Topology::Ps,
         }
     }
 

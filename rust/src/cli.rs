@@ -90,7 +90,8 @@ orq — optimal gradient quantization for distributed training (ORQ/BinGrad)
 USAGE:
   orq train [--config FILE] [--model M] [--method Q] [--workers N]
             [--steps N] [--batch N] [--dataset D] [--bucket N] [--clip C]
-            [--backend native|pjrt] [--artifacts DIR] [--out DIR] [--seed N]
+            [--topology ps|ring] [--backend native|pjrt]
+            [--artifacts DIR] [--out DIR] [--seed N]
   orq info  [--artifacts DIR]          inspect the AOT artifact manifest
   orq demo  [--method Q] [--n N]       quantize a synthetic gradient, show stats
   orq help
@@ -98,6 +99,7 @@ USAGE:
 METHODS: fp, signsgd, bingrad-pb, bingrad-b, terngrad, qsgd-S, linear-S, orq-S
 MODELS (native): mlp_s, mlp_m, mlp_l, mlp:d0-d1-...  (pjrt): names from meta.json
 DATASETS: cifar10, cifar100, imagenet
+TOPOLOGIES: ps (parameter-server star), ring (decode-reduce-requantize all-reduce)
 ";
 
 #[cfg(test)]

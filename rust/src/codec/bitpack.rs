@@ -6,31 +6,45 @@
 //! ×10.1 for 9) correspond to the *ideal* `log2(s)` bits/element; base-s
 //! packing reaches that asymptotically by radix-encoding groups of digits
 //! into u64 words (40 trits / 27 pentits / 20 nonits per word).
+//!
+//! Each packer has an `_into` form that appends to (or refills) a caller
+//! buffer — the exchange hot path uses those so per-bucket work never
+//! allocates.
 
-/// Pack `indices` (< 2^bits each) at `bits` per element.
-pub fn pack_fixed(indices: &[u8], bits: u32) -> Vec<u8> {
+/// Append `indices` (< 2^bits each) at `bits` per element to `out`.
+pub fn pack_fixed_into(indices: &[u8], bits: u32, out: &mut Vec<u8>) {
     assert!((1..=8).contains(&bits));
+    let start = out.len();
     let total_bits = indices.len() * bits as usize;
-    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    out.resize(start + total_bits.div_ceil(8), 0);
+    let buf = &mut out[start..];
     let mut bitpos = 0usize;
     for &idx in indices {
         debug_assert!((idx as u32) < (1 << bits));
         let byte = bitpos / 8;
         let off = (bitpos % 8) as u32;
-        out[byte] |= idx << off;
+        buf[byte] |= idx << off;
         if off + bits > 8 {
-            out[byte + 1] |= idx >> (8 - off);
+            buf[byte + 1] |= idx >> (8 - off);
         }
         bitpos += bits as usize;
     }
+}
+
+/// Pack `indices` (< 2^bits each) at `bits` per element.
+pub fn pack_fixed(indices: &[u8], bits: u32) -> Vec<u8> {
+    let mut out = Vec::new();
+    pack_fixed_into(indices, bits, &mut out);
     out
 }
 
-/// Unpack `n` elements at `bits` per element.
-pub fn unpack_fixed(bytes: &[u8], n: usize, bits: u32) -> Vec<u8> {
+/// Unpack `n` elements at `bits` per element into a reused buffer
+/// (cleared first).
+pub fn unpack_fixed_into(bytes: &[u8], n: usize, bits: u32, out: &mut Vec<u8>) {
     assert!((1..=8).contains(&bits));
     let mask = ((1u16 << bits) - 1) as u8;
-    let mut out = Vec::with_capacity(n);
+    out.clear();
+    out.reserve(n);
     let mut bitpos = 0usize;
     for _ in 0..n {
         let byte = bitpos / 8;
@@ -42,6 +56,12 @@ pub fn unpack_fixed(bytes: &[u8], n: usize, bits: u32) -> Vec<u8> {
         out.push(v & mask);
         bitpos += bits as usize;
     }
+}
+
+/// Unpack `n` elements at `bits` per element.
+pub fn unpack_fixed(bytes: &[u8], n: usize, bits: u32) -> Vec<u8> {
+    let mut out = Vec::new();
+    unpack_fixed_into(bytes, n, bits, &mut out);
     out
 }
 
@@ -59,10 +79,11 @@ pub fn digits_per_word(s: usize) -> usize {
     }
 }
 
-/// Radix-encode indices (< s each) into u64 words, little-endian digits.
-pub fn pack_base_s(indices: &[u8], s: usize) -> Vec<u8> {
+/// Append radix-s-encoded indices (< s each) as u64 words, little-endian
+/// digits, to `out`.
+pub fn pack_base_s_into(indices: &[u8], s: usize, out: &mut Vec<u8>) {
     let g = digits_per_word(s);
-    let mut out = Vec::with_capacity(indices.len().div_ceil(g) * 8);
+    out.reserve(indices.len().div_ceil(g) * 8);
     for chunk in indices.chunks(g) {
         let mut word: u64 = 0;
         for &d in chunk.iter().rev() {
@@ -71,13 +92,21 @@ pub fn pack_base_s(indices: &[u8], s: usize) -> Vec<u8> {
         }
         out.extend_from_slice(&word.to_le_bytes());
     }
+}
+
+/// Radix-encode indices (< s each) into u64 words, little-endian digits.
+pub fn pack_base_s(indices: &[u8], s: usize) -> Vec<u8> {
+    let mut out = Vec::new();
+    pack_base_s_into(indices, s, &mut out);
     out
 }
 
-/// Decode `n` radix-s digits from packed u64 words.
-pub fn unpack_base_s(bytes: &[u8], n: usize, s: usize) -> Vec<u8> {
+/// Decode `n` radix-s digits from packed u64 words into a reused buffer
+/// (cleared first).
+pub fn unpack_base_s_into(bytes: &[u8], n: usize, s: usize, out: &mut Vec<u8>) {
     let g = digits_per_word(s);
-    let mut out = Vec::with_capacity(n);
+    out.clear();
+    out.reserve(n);
     for chunk in bytes.chunks(8) {
         let mut word = u64::from_le_bytes(chunk.try_into().expect("word-aligned payload"));
         for _ in 0..g {
@@ -92,6 +121,12 @@ pub fn unpack_base_s(bytes: &[u8], n: usize, s: usize) -> Vec<u8> {
         }
     }
     assert_eq!(out.len(), n, "payload too short");
+}
+
+/// Decode `n` radix-s digits from packed u64 words.
+pub fn unpack_base_s(bytes: &[u8], n: usize, s: usize) -> Vec<u8> {
+    let mut out = Vec::new();
+    unpack_base_s_into(bytes, n, s, &mut out);
     out
 }
 
@@ -142,6 +177,28 @@ mod tests {
                 assert_eq!(unpack_base_s(&packed, n, s), idx, "s={s} n={n}");
             }
         }
+    }
+
+    #[test]
+    fn into_variants_append_and_reuse() {
+        let idx = rand_indices(100, 5, 1);
+        // append semantics for packers
+        let mut out = vec![0xAAu8; 3];
+        pack_base_s_into(&idx, 5, &mut out);
+        assert_eq!(&out[..3], &[0xAA; 3]);
+        assert_eq!(&out[3..], pack_base_s(&idx, 5).as_slice());
+        let mut out2 = vec![0x55u8; 2];
+        pack_fixed_into(&idx, 3, &mut out2);
+        assert_eq!(&out2[..2], &[0x55; 2]);
+        assert_eq!(&out2[2..], pack_fixed(&idx, 3).as_slice());
+        // clear semantics for unpackers
+        let packed = pack_base_s(&idx, 5);
+        let mut scratch = vec![9u8; 7];
+        unpack_base_s_into(&packed, idx.len(), 5, &mut scratch);
+        assert_eq!(scratch, idx);
+        let packed_f = pack_fixed(&idx, 3);
+        unpack_fixed_into(&packed_f, idx.len(), 3, &mut scratch);
+        assert_eq!(scratch, idx);
     }
 
     #[test]

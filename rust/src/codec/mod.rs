@@ -17,6 +17,14 @@
 //! The per-bucket f32 level table is exactly the "sending floating-point
 //! to represent quantization levels" overhead the paper discusses for
 //! bucket-size selection (Table 3).
+//!
+//! Hot-path entry points: every encoder has an `_into` form writing into a
+//! reused buffer, [`decode_flat_into`] dequantizes straight into a flat
+//! f32 buffer through a [`DecodeScratch`] (no `QuantizedGrad`
+//! materialization, no per-bucket allocation), and
+//! [`slice_elements_into`] cuts a bucket-aligned element range out of an
+//! encoded message as a standalone message — the ring all-reduce uses it
+//! to ship each node's original quantized chunks without requantizing.
 
 pub mod bitpack;
 
@@ -38,32 +46,46 @@ pub enum Packing {
     BaseS,
 }
 
-/// Encode a full-precision gradient (the ×1 baseline wire format).
-pub fn encode_fp(g: &[f32]) -> Vec<u8> {
-    let mut out = header(FLAG_FP, 0, "fp", g.len() as u64, g.len().max(1) as u32);
+/// Encode a full-precision gradient into a reused buffer (cleared first).
+pub fn encode_fp_into(g: &[f32], out: &mut Vec<u8>) {
+    out.clear();
+    write_header(out, FLAG_FP, 0, "fp", g.len() as u64, g.len().max(1) as u32);
     out.reserve(g.len() * 4);
     for v in g {
         out.extend_from_slice(&v.to_le_bytes());
     }
+}
+
+/// Encode a full-precision gradient (the ×1 baseline wire format).
+pub fn encode_fp(g: &[f32]) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_fp_into(g, &mut out);
     out
 }
 
-/// Encode a quantized gradient.
-pub fn encode(qg: &QuantizedGrad, scheme: &str, packing: Packing) -> Vec<u8> {
+/// Encode a quantized gradient into a reused buffer (cleared first).
+/// The hot path: no per-bucket allocation.
+pub fn encode_into(qg: &QuantizedGrad, scheme: &str, packing: Packing, out: &mut Vec<u8>) {
     let s = qg.buckets.first().map(|b| b.levels.len()).unwrap_or(0);
     let flags = if packing == Packing::BaseS { FLAG_BASE_S } else { 0 };
-    let mut out = header(flags, s as u8, scheme, qg.total_len as u64, qg.bucket_size as u32);
+    out.clear();
+    write_header(out, flags, s as u8, scheme, qg.total_len as u64, qg.bucket_size as u32);
     for b in &qg.buckets {
         debug_assert_eq!(b.levels.len(), s, "all buckets must share s");
         for lv in &b.levels {
             out.extend_from_slice(&lv.to_le_bytes());
         }
-        let packed = match packing {
-            Packing::Fixed => bitpack::pack_fixed(&b.indices, bits_for(s)),
-            Packing::BaseS => bitpack::pack_base_s(&b.indices, s),
-        };
-        out.extend_from_slice(&packed);
+        match packing {
+            Packing::Fixed => bitpack::pack_fixed_into(&b.indices, bits_for(s), out),
+            Packing::BaseS => bitpack::pack_base_s_into(&b.indices, s, out),
+        }
     }
+}
+
+/// Encode a quantized gradient.
+pub fn encode(qg: &QuantizedGrad, scheme: &str, packing: Packing) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_into(qg, scheme, packing, &mut out);
     out
 }
 
@@ -95,8 +117,33 @@ impl Decoded {
     }
 }
 
-/// Decode a wire message.
-pub fn decode(bytes: &[u8]) -> Result<Decoded> {
+/// Validated view of an encoded message: header fields + payload slice.
+/// Every byte-level check (magic, version, exact payload length against
+/// the closed-form [`wire_size`]) happens here, shared by all decoders.
+struct Wire<'a> {
+    flags: u8,
+    s: usize,
+    bucket: usize,
+    total: usize,
+    scheme: &'a str,
+    payload: &'a [u8],
+}
+
+impl<'a> Wire<'a> {
+    fn is_fp(&self) -> bool {
+        self.flags & FLAG_FP != 0
+    }
+
+    fn packing(&self) -> Packing {
+        if self.flags & FLAG_BASE_S != 0 {
+            Packing::BaseS
+        } else {
+            Packing::Fixed
+        }
+    }
+}
+
+fn parse(bytes: &[u8]) -> Result<Wire<'_>> {
     let mut r = Reader { bytes, pos: 0 };
     let magic = r.u32()?;
     if magic != MAGIC {
@@ -112,7 +159,7 @@ pub fn decode(bytes: &[u8]) -> Result<Decoded> {
     let bucket = r.u32()? as usize;
     let total = r.u64()? as usize;
     let name_bytes = r.take(name_len)?;
-    let scheme = String::from_utf8(name_bytes.to_vec())
+    let scheme = std::str::from_utf8(name_bytes)
         .map_err(|_| Error::Codec("non-utf8 scheme name".into()))?;
 
     // Guard against length lies in corrupted headers: the exact payload
@@ -128,11 +175,7 @@ pub fn decode(bytes: &[u8]) -> Result<Decoded> {
                 "fp payload is {remaining} bytes, header claims {need}"
             )));
         }
-        let mut out = Vec::with_capacity(total);
-        for _ in 0..total {
-            out.push(f32::from_le_bytes(r.take(4)?.try_into().unwrap()));
-        }
-        return Ok(Decoded::Fp(out));
+        return Ok(Wire { flags, s, bucket, total, scheme, payload: &bytes[r.pos..] });
     }
     if s < 2 {
         return Err(Error::Codec(format!("quantized message with s={s}")));
@@ -140,8 +183,7 @@ pub fn decode(bytes: &[u8]) -> Result<Decoded> {
     if bucket == 0 {
         return Err(Error::Codec("bucket size 0".into()));
     }
-    let base_s = flags & FLAG_BASE_S != 0;
-    let packing = if base_s { Packing::BaseS } else { Packing::Fixed };
+    let packing = if flags & FLAG_BASE_S != 0 { Packing::BaseS } else { Packing::Fixed };
     // Coarse bound first: ≥1 bit per element, so total can never exceed
     // 8× the payload bytes — rejects absurd headers before the exact
     // (multiplication-bearing) computation below can overflow.
@@ -150,7 +192,7 @@ pub fn decode(bytes: &[u8]) -> Result<Decoded> {
             "header claims {total} elements for a {remaining}-byte payload"
         )));
     }
-    let expected = wire_size(total, bucket, s, packing, &scheme)
+    let expected = wire_size(total, bucket, s, packing, scheme)
         .checked_sub(r.pos)
         .ok_or_else(|| Error::Codec("header size underflow".into()))?;
     if expected != remaining {
@@ -158,19 +200,40 @@ pub fn decode(bytes: &[u8]) -> Result<Decoded> {
             "payload is {remaining} bytes, header claims {expected}"
         )));
     }
-    let n_buckets = total.div_ceil(bucket);
+    Ok(Wire { flags, s, bucket, total, scheme, payload: &bytes[r.pos..] })
+}
+
+/// Length of the final (possibly ragged) bucket.
+fn tail_len(total: usize, bucket: usize) -> usize {
+    if total % bucket == 0 {
+        bucket
+    } else {
+        total % bucket
+    }
+}
+
+/// Decode a wire message.
+pub fn decode(bytes: &[u8]) -> Result<Decoded> {
+    let w = parse(bytes)?;
+    let mut r = Reader { bytes: w.payload, pos: 0 };
+    if w.is_fp() {
+        let mut out = Vec::with_capacity(w.total);
+        for _ in 0..w.total {
+            out.push(f32::from_le_bytes(r.take(4)?.try_into().unwrap()));
+        }
+        return Ok(Decoded::Fp(out));
+    }
+    let s = w.s;
+    let base_s = w.packing() == Packing::BaseS;
+    let n_buckets = w.total.div_ceil(w.bucket);
     let mut buckets = Vec::with_capacity(n_buckets);
     for bi in 0..n_buckets {
-        let len = if bi + 1 == n_buckets && total % bucket != 0 { total % bucket } else { bucket };
+        let len = if bi + 1 == n_buckets { tail_len(w.total, w.bucket) } else { w.bucket };
         let mut levels = Vec::with_capacity(s);
         for _ in 0..s {
             levels.push(f32::from_le_bytes(r.take(4)?.try_into().unwrap()));
         }
-        let payload_len = if base_s {
-            len.div_ceil(bitpack::digits_per_word(s)) * 8
-        } else {
-            (len * bits_for(s) as usize).div_ceil(8)
-        };
+        let payload_len = packed_len(len, s, w.packing());
         let payload = r.take(payload_len)?;
         let indices = if base_s {
             bitpack::unpack_base_s(payload, len, s)
@@ -183,9 +246,118 @@ pub fn decode(bytes: &[u8]) -> Result<Decoded> {
         buckets.push(QuantizedBucket { levels, indices });
     }
     Ok(Decoded::Quantized {
-        grad: QuantizedGrad { bucket_size: bucket, total_len: total, buckets },
-        scheme,
+        grad: QuantizedGrad { bucket_size: w.bucket, total_len: w.total, buckets },
+        scheme: w.scheme.to_string(),
     })
+}
+
+/// Reusable decoder scratch: one level table + one index buffer, recycled
+/// across buckets and rounds.
+#[derive(Debug, Default)]
+pub struct DecodeScratch {
+    levels: Vec<f32>,
+    indices: Vec<u8>,
+}
+
+/// Decode a wire message straight into a flat f32 buffer (cleared and
+/// refilled) — the exchange hot path. Performs the same validation as
+/// [`decode`] but never materializes per-bucket vectors: level tables and
+/// unpacked indices live in `scratch`.
+pub fn decode_flat_into(bytes: &[u8], out: &mut Vec<f32>, scratch: &mut DecodeScratch) -> Result<()> {
+    let w = parse(bytes)?;
+    out.clear();
+    out.reserve(w.total);
+    if w.is_fp() {
+        for chunk in w.payload.chunks_exact(4) {
+            out.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        return Ok(());
+    }
+    let s = w.s;
+    let base_s = w.packing() == Packing::BaseS;
+    let n_buckets = w.total.div_ceil(w.bucket);
+    let mut pos = 0usize;
+    for bi in 0..n_buckets {
+        let len = if bi + 1 == n_buckets { tail_len(w.total, w.bucket) } else { w.bucket };
+        scratch.levels.clear();
+        for _ in 0..s {
+            // parse() validated the exact payload length, so these reads
+            // cannot run past the end.
+            scratch
+                .levels
+                .push(f32::from_le_bytes(w.payload[pos..pos + 4].try_into().unwrap()));
+            pos += 4;
+        }
+        let payload_len = packed_len(len, s, w.packing());
+        let packed = &w.payload[pos..pos + payload_len];
+        pos += payload_len;
+        if base_s {
+            bitpack::unpack_base_s_into(packed, len, s, &mut scratch.indices);
+        } else {
+            bitpack::unpack_fixed_into(packed, len, bits_for(s), &mut scratch.indices);
+        }
+        for &i in &scratch.indices {
+            let lv = scratch
+                .levels
+                .get(i as usize)
+                .ok_or_else(|| Error::Codec("index out of level range".into()))?;
+            out.push(*lv);
+        }
+    }
+    Ok(())
+}
+
+/// Cut elements `[e0, e1)` out of an encoded message as a standalone
+/// message with the same scheme, flags and bucket size — a pure payload
+/// byte copy, no requantization. For quantized messages the cut must be
+/// aligned to the message's bucket grid (`e % bucket == 0` or `e ==
+/// total` at both ends); FP messages slice at any element boundary.
+pub fn slice_elements_into(bytes: &[u8], e0: usize, e1: usize, out: &mut Vec<u8>) -> Result<()> {
+    let w = parse(bytes)?;
+    if e0 > e1 || e1 > w.total {
+        return Err(Error::Codec(format!(
+            "slice {e0}..{e1} out of range for {} elements",
+            w.total
+        )));
+    }
+    let n = e1 - e0;
+    out.clear();
+    if w.is_fp() {
+        write_header(out, w.flags, 0, w.scheme, n as u64, n.max(1) as u32);
+        out.extend_from_slice(&w.payload[e0 * 4..e1 * 4]);
+        return Ok(());
+    }
+    let d = w.bucket;
+    let aligned = |e: usize| e % d == 0 || e == w.total;
+    if !aligned(e0) || !aligned(e1) {
+        return Err(Error::Codec(format!(
+            "slice {e0}..{e1} not aligned to bucket size {d}"
+        )));
+    }
+    let pb_full = per_bucket_bytes(d, w.s, w.packing());
+    let offset = |e: usize| -> usize {
+        if e == w.total {
+            w.payload.len()
+        } else {
+            (e / d) * pb_full
+        }
+    };
+    write_header(out, w.flags, w.s as u8, w.scheme, n as u64, d as u32);
+    out.extend_from_slice(&w.payload[offset(e0)..offset(e1)]);
+    Ok(())
+}
+
+/// Packed index bytes for one bucket of `len` elements.
+fn packed_len(len: usize, s: usize, packing: Packing) -> usize {
+    match packing {
+        Packing::Fixed => (len * bits_for(s) as usize).div_ceil(8),
+        Packing::BaseS => len.div_ceil(bitpack::digits_per_word(s)) * 8,
+    }
+}
+
+/// On-wire bytes of one bucket: level table + packed indices.
+fn per_bucket_bytes(len: usize, s: usize, packing: Packing) -> usize {
+    s * 4 + packed_len(len, s, packing)
 }
 
 /// Exact wire size in bytes without materializing the message (closed
@@ -195,19 +367,12 @@ pub fn wire_size(total: usize, bucket: usize, s: usize, packing: Packing, scheme
     if s == 0 {
         return hdr + total * 4;
     }
-    let per_bucket = |len: usize| -> usize {
-        s * 4
-            + match packing {
-                Packing::Fixed => (len * bits_for(s) as usize).div_ceil(8),
-                Packing::BaseS => len.div_ceil(bitpack::digits_per_word(s)) * 8,
-            }
-    };
     let n_buckets = total.div_ceil(bucket);
     if n_buckets == 0 {
         return hdr;
     }
-    let tail_len = if total % bucket == 0 { bucket } else { total % bucket };
-    hdr + (n_buckets - 1) * per_bucket(bucket) + per_bucket(tail_len)
+    hdr + (n_buckets - 1) * per_bucket_bytes(bucket, s, packing)
+        + per_bucket_bytes(tail_len(total, bucket), s, packing)
 }
 
 /// Compression ratio vs 32-bit FP for a gradient of `total` elements.
@@ -227,8 +392,8 @@ fn bits_for(s: usize) -> u32 {
     (usize::BITS - (s - 1).leading_zeros()).max(1)
 }
 
-fn header(flags: u8, s: u8, name: &str, total: u64, bucket: u32) -> Vec<u8> {
-    let mut out = Vec::with_capacity(20 + name.len());
+fn write_header(out: &mut Vec<u8>, flags: u8, s: u8, name: &str, total: u64, bucket: u32) {
+    out.reserve(20 + name.len());
     out.extend_from_slice(&MAGIC.to_le_bytes());
     out.push(VERSION);
     out.push(flags);
@@ -237,7 +402,6 @@ fn header(flags: u8, s: u8, name: &str, total: u64, bucket: u32) -> Vec<u8> {
     out.extend_from_slice(&bucket.to_le_bytes());
     out.extend_from_slice(&total.to_le_bytes());
     out.extend_from_slice(name.as_bytes());
-    out
 }
 
 struct Reader<'a> {
@@ -322,6 +486,86 @@ mod tests {
     }
 
     #[test]
+    fn flat_decode_matches_decode() {
+        let g = sample_grad(1301, 3);
+        let mut scratch = DecodeScratch::default();
+        let mut flat = Vec::new();
+        // FP path
+        let bytes = encode_fp(&g);
+        decode_flat_into(&bytes, &mut flat, &mut scratch).unwrap();
+        assert_eq!(flat, g);
+        // Quantized path, both packings, reusing the same scratch
+        for scheme in ["terngrad", "orq-5", "bingrad-b"] {
+            let q = from_name(scheme).unwrap();
+            let qg = BucketQuantizer::new(256).quantize(&g, q.as_ref(), &mut Rng::seed_from(4));
+            for packing in [Packing::Fixed, Packing::BaseS] {
+                let bytes = encode(&qg, scheme, packing);
+                decode_flat_into(&bytes, &mut flat, &mut scratch).unwrap();
+                assert_eq!(flat, decode(&bytes).unwrap().to_flat(), "{scheme} {packing:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn flat_decode_rejects_what_decode_rejects() {
+        let g = sample_grad(400, 5);
+        let q = from_name("terngrad").unwrap();
+        let qg = BucketQuantizer::new(128).quantize(&g, q.as_ref(), &mut Rng::seed_from(6));
+        let bytes = encode(&qg, "terngrad", Packing::BaseS);
+        let mut scratch = DecodeScratch::default();
+        let mut flat = Vec::new();
+        for n in 0..bytes.len() {
+            assert!(
+                decode_flat_into(&bytes[..n], &mut flat, &mut scratch).is_err(),
+                "prefix {n} must not flat-decode"
+            );
+        }
+        assert!(decode_flat_into(&bytes, &mut flat, &mut scratch).is_ok());
+    }
+
+    #[test]
+    fn slice_fp_any_range() {
+        let g = sample_grad(100, 7);
+        let bytes = encode_fp(&g);
+        let mut out = Vec::new();
+        slice_elements_into(&bytes, 13, 77, &mut out).unwrap();
+        match decode(&out).unwrap() {
+            Decoded::Fp(v) => assert_eq!(v, &g[13..77]),
+            _ => panic!("expected FP"),
+        }
+        // empty slice decodes to nothing
+        slice_elements_into(&bytes, 100, 100, &mut out).unwrap();
+        assert!(decode(&out).unwrap().is_empty());
+    }
+
+    #[test]
+    fn slice_quantized_bucket_aligned() {
+        let g = sample_grad(1000, 8); // d=128 → 8 buckets, ragged tail of 104
+        let q = from_name("orq-5").unwrap();
+        let qg = BucketQuantizer::new(128).quantize(&g, q.as_ref(), &mut Rng::seed_from(9));
+        let full = qg.dequantize();
+        for packing in [Packing::Fixed, Packing::BaseS] {
+            let bytes = encode(&qg, "orq-5", packing);
+            let mut out = Vec::new();
+            // interior chunk, tail chunk, empty chunk
+            for (e0, e1) in [(0usize, 256usize), (256, 1000), (1000, 1000), (0, 1000)] {
+                slice_elements_into(&bytes, e0, e1, &mut out).unwrap();
+                let dec = decode(&out).unwrap();
+                assert_eq!(dec.to_flat(), &full[e0..e1], "{packing:?} {e0}..{e1}");
+                // sliced size matches the closed form for an independent message
+                assert_eq!(
+                    out.len(),
+                    wire_size(e1 - e0, 128, 5, packing, "orq-5"),
+                    "{packing:?} {e0}..{e1} size"
+                );
+            }
+            // misaligned cut is rejected
+            assert!(slice_elements_into(&bytes, 64, 256, &mut out).is_err());
+            assert!(slice_elements_into(&bytes, 0, 999, &mut out).is_err());
+        }
+    }
+
+    #[test]
     fn ragged_tail_roundtrip() {
         let g = sample_grad(1001, 4);
         let q = from_name("orq-9").unwrap();
@@ -380,5 +624,17 @@ mod tests {
         let small = wire_size(n, 128, 9, Packing::BaseS, "orq-9");
         let large = wire_size(n, 8192, 9, Packing::BaseS, "orq-9");
         assert!(large < small, "level-table overhead shrinks with bucket size");
+    }
+
+    #[test]
+    fn encode_into_reuses_buffer() {
+        let g = sample_grad(600, 10);
+        let q = from_name("terngrad").unwrap();
+        let qg = BucketQuantizer::new(200).quantize(&g, q.as_ref(), &mut Rng::seed_from(11));
+        let mut buf = vec![0xFFu8; 3]; // stale contents must be cleared
+        encode_into(&qg, "terngrad", Packing::BaseS, &mut buf);
+        assert_eq!(buf, encode(&qg, "terngrad", Packing::BaseS));
+        encode_fp_into(&g, &mut buf);
+        assert_eq!(buf, encode_fp(&g));
     }
 }

@@ -1,0 +1,342 @@
+//! The `Collective` abstraction: one synchronous gradient exchange per
+//! round, independent of topology.
+//!
+//! A topology has two ends:
+//! * [`WorkerExchange`] — one per worker thread. The worker hands in its
+//!   *encoded* gradient and blocks until the round's decoded mean
+//!   gradient is available. Every worker receives the bit-identical mean,
+//!   which is what keeps parameter replicas in sync without ever shipping
+//!   parameters (paper Algorithm 2).
+//! * [`Collective`] — the coordinator end, driven by the trainer's main
+//!   thread. It performs whatever central work the topology needs (the
+//!   parameter-server aggregation; for the ring, only bookkeeping),
+//!   returns the same decoded mean, and owns the exact wire-byte and
+//!   simulated-time accounting ([`CommStats`]).
+//!
+//! Two real implementations exist, both over `std::sync::mpsc` channels:
+//! the star in [`super::ps`] and the decode-reduce-requantize ring in
+//! [`super::ring`]. [`build_topology`] constructs either from a
+//! [`Topology`] tag, and [`run_once`] drives a single round with scoped
+//! threads — the entry point the Table 1 bench and the equivalence tests
+//! use.
+
+use crate::codec::{self, Packing};
+use crate::error::{Error, Result};
+use crate::quant::bucket::{BucketQuantizer, QuantizedGrad};
+use crate::quant::{self, Quantizer};
+use crate::tensor::rng::Rng;
+
+use super::link::Link;
+use super::ps::PsCollective;
+use super::ring::RingAllReduce;
+
+/// Which gradient-exchange topology to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Topology {
+    /// L workers ⇄ 1 server star (paper Algorithm 2).
+    #[default]
+    Ps,
+    /// Decentralized ring all-reduce: reduce-scatter + all-gather with
+    /// decode → partial-reduce → requantize at every hop.
+    Ring,
+}
+
+impl Topology {
+    pub fn parse(s: &str) -> Result<Topology> {
+        match s {
+            "ps" | "star" => Ok(Topology::Ps),
+            "ring" => Ok(Topology::Ring),
+            other => Err(Error::InvalidArg(format!(
+                "unknown topology {other:?} (use ps or ring)"
+            ))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Topology::Ps => "ps",
+            Topology::Ring => "ring",
+        }
+    }
+}
+
+impl std::fmt::Display for Topology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Topology {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Topology> {
+        Topology::parse(s)
+    }
+}
+
+/// Cumulative exchange accounting: exact wire bytes, simulated
+/// communication seconds on the critical path, and message count.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CommStats {
+    pub wire_bytes: u64,
+    pub sim_time_s: f64,
+    pub messages: u64,
+}
+
+/// Everything a topology needs to know about the wire format: how
+/// gradients are quantized and packed, and the seed its internal RNG
+/// streams derive from (downlink requantization, ring hop requantization).
+#[derive(Debug, Clone)]
+pub struct WireSpec {
+    /// Quantizer name (see [`quant::from_name`]); `"fp"` disables
+    /// quantization.
+    pub method: String,
+    /// Bucket size d; also the ring's chunk-alignment grid.
+    pub bucket_size: usize,
+    /// `Some(c)` applies ±c·σ clipping before level selection.
+    pub clip_factor: Option<f32>,
+    pub packing: Packing,
+    pub seed: u64,
+}
+
+impl WireSpec {
+    pub fn new(method: &str, bucket_size: usize) -> WireSpec {
+        WireSpec {
+            method: method.to_string(),
+            bucket_size,
+            clip_factor: None,
+            packing: Packing::BaseS,
+            seed: 0,
+        }
+    }
+}
+
+/// A [`WireSpec`] instantiated into a working encoder: quantizer + bucket
+/// splitter + packing. Owned per node so encoding is lock-free.
+pub struct GradCodec {
+    method: String,
+    packing: Packing,
+    quantizer: Box<dyn Quantizer>,
+    bucketq: BucketQuantizer,
+    is_fp: bool,
+}
+
+impl GradCodec {
+    pub fn new(spec: &WireSpec) -> Result<GradCodec> {
+        let quantizer = quant::from_name(&spec.method)?;
+        let is_fp = quantizer.num_levels() == 0;
+        let bucketq = match spec.clip_factor {
+            Some(c) => BucketQuantizer::with_clip(spec.bucket_size, c),
+            None => BucketQuantizer::new(spec.bucket_size),
+        };
+        Ok(GradCodec {
+            method: spec.method.clone(),
+            packing: spec.packing,
+            quantizer,
+            bucketq,
+            is_fp,
+        })
+    }
+
+    pub fn is_fp(&self) -> bool {
+        self.is_fp
+    }
+
+    pub fn bucket_size(&self) -> usize {
+        self.bucketq.bucket_size
+    }
+
+    /// Quantize (unless FP or empty) and encode `g` into a reused message
+    /// buffer. `qg` is the reusable quantization scratch — steady-state
+    /// calls perform no per-bucket allocation.
+    pub fn encode_into(
+        &self,
+        g: &[f32],
+        rng: &mut Rng,
+        qg: &mut QuantizedGrad,
+        msg: &mut Vec<u8>,
+    ) {
+        if self.is_fp || g.is_empty() {
+            codec::encode_fp_into(g, msg);
+        } else {
+            self.bucketq.quantize_into(g, self.quantizer.as_ref(), rng, qg);
+            codec::encode_into(qg, &self.method, self.packing, msg);
+        }
+    }
+}
+
+/// Coordinator end of a topology (lives on the trainer's main thread).
+pub trait Collective: Send {
+    fn num_workers(&self) -> usize;
+
+    /// Serve one synchronous exchange round and write the round's decoded
+    /// mean gradient — bit-identical to what every worker's
+    /// [`WorkerExchange::exchange`] returned — into `mean_out`.
+    fn round(&mut self, mean_out: &mut Vec<f32>) -> Result<()>;
+
+    /// Cumulative totals since construction. Per-round figures are deltas
+    /// between consecutive calls.
+    fn stats(&self) -> CommStats;
+}
+
+/// Worker end of a topology (one per worker thread).
+pub trait WorkerExchange: Send {
+    fn id(&self) -> usize;
+
+    /// Contribute this round's encoded gradient (the implementation may
+    /// take the buffer), block for the exchange, and write the decoded
+    /// mean gradient into `mean_out`.
+    fn exchange(&mut self, encoded: &mut Vec<u8>, mean_out: &mut Vec<f32>) -> Result<()>;
+}
+
+/// The two ends of a built topology: the coordinator and one worker end
+/// per worker thread.
+pub type TopologyEnds = (Box<dyn Collective>, Vec<Box<dyn WorkerExchange>>);
+
+/// Construct a topology's two ends.
+pub fn build_topology(
+    topology: Topology,
+    workers: usize,
+    link: Link,
+    spec: &WireSpec,
+    quantize_downlink: bool,
+) -> Result<TopologyEnds> {
+    match topology {
+        Topology::Ps => {
+            let (coord, ends) = PsCollective::new(workers, link, spec, quantize_downlink)?;
+            Ok((
+                Box::new(coord),
+                ends.into_iter().map(|e| Box::new(e) as Box<dyn WorkerExchange>).collect(),
+            ))
+        }
+        Topology::Ring => {
+            if quantize_downlink {
+                // Refuse rather than silently no-op: the flag is a PS
+                // downlink option; the ring requantizes at every hop by
+                // construction, so there is no broadcast to quantize.
+                return Err(Error::InvalidArg(
+                    "quantize_downlink applies to the parameter-server broadcast; \
+                     the ring topology has no downlink (drop the flag or use --topology ps)"
+                        .into(),
+                ));
+            }
+            let (coord, ends) = RingAllReduce::new(workers, link, spec)?;
+            Ok((
+                Box::new(coord),
+                ends.into_iter().map(|e| Box::new(e) as Box<dyn WorkerExchange>).collect(),
+            ))
+        }
+    }
+}
+
+/// Drive one full exchange round over `grads` (one per worker) with
+/// scoped worker threads: encode with the spec's quantizer, exchange,
+/// return the decoded mean and the round's stats. Used by the Table 1
+/// bench ("measured" columns) and the topology-equivalence tests.
+pub fn run_once(
+    topology: Topology,
+    link: Link,
+    spec: &WireSpec,
+    quantize_downlink: bool,
+    grads: &[Vec<f32>],
+) -> Result<(Vec<f32>, CommStats)> {
+    let (mut coll, ends) = build_topology(topology, grads.len(), link, spec, quantize_downlink)?;
+    let mut mean = Vec::new();
+    let res: Result<CommStats> = std::thread::scope(|scope| {
+        for (w, mut wx) in ends.into_iter().enumerate() {
+            let g: &[f32] = &grads[w];
+            let spec = spec.clone();
+            scope.spawn(move || {
+                let gc = GradCodec::new(&spec).expect("spec validated by build_topology");
+                let mut rng = Rng::stream(spec.seed, 2_000 + w as u64);
+                let mut qg = QuantizedGrad::default();
+                let mut msg = Vec::new();
+                gc.encode_into(g, &mut rng, &mut qg, &mut msg);
+                let mut mean = Vec::new();
+                // On channel death the coordinator's round() surfaces the
+                // real error; a panic here would only mask it.
+                let _ = wx.exchange(&mut msg, &mut mean);
+            });
+        }
+        let round = coll.round(&mut mean);
+        let stats = coll.stats();
+        // Tear the coordinator down before the scope joins: if round()
+        // erred mid-exchange (e.g. mismatched upload shapes), workers
+        // still blocked on its channels must see them close and exit
+        // instead of deadlocking the join.
+        drop(coll);
+        round.map(|()| stats)
+    });
+    let stats = res?;
+    Ok((mean, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_parse_roundtrip() {
+        assert_eq!(Topology::parse("ps").unwrap(), Topology::Ps);
+        assert_eq!(Topology::parse("star").unwrap(), Topology::Ps);
+        assert_eq!(Topology::parse("ring").unwrap(), Topology::Ring);
+        assert!(Topology::parse("mesh").is_err());
+        assert_eq!(Topology::Ring.to_string(), "ring");
+        assert_eq!("ps".parse::<Topology>().unwrap(), Topology::Ps);
+        assert_eq!(Topology::default(), Topology::Ps);
+    }
+
+    #[test]
+    fn grad_codec_fp_and_quantized() {
+        let g: Vec<f32> = (0..300).map(|i| (i as f32 - 150.0) / 50.0).collect();
+        let mut rng = Rng::seed_from(1);
+        let mut qg = QuantizedGrad::default();
+        let mut msg = Vec::new();
+
+        let fp = GradCodec::new(&WireSpec::new("fp", 128)).unwrap();
+        assert!(fp.is_fp());
+        fp.encode_into(&g, &mut rng, &mut qg, &mut msg);
+        assert_eq!(msg, codec::encode_fp(&g));
+
+        let tg = GradCodec::new(&WireSpec::new("terngrad", 128)).unwrap();
+        assert!(!tg.is_fp());
+        assert_eq!(tg.bucket_size(), 128);
+        tg.encode_into(&g, &mut rng, &mut qg, &mut msg);
+        assert_eq!(
+            msg.len(),
+            codec::wire_size(300, 128, 3, Packing::BaseS, "terngrad")
+        );
+        // empty gradients fall back to the FP framing (a quantized message
+        // cannot represent s levels with zero buckets)
+        tg.encode_into(&[], &mut rng, &mut qg, &mut msg);
+        assert!(codec::decode(&msg).unwrap().is_empty());
+
+        assert!(GradCodec::new(&WireSpec::new("bogus", 128)).is_err());
+    }
+
+    #[test]
+    fn build_topology_rejects_bad_method() {
+        let spec = WireSpec::new("not-a-method", 64);
+        assert!(build_topology(Topology::Ps, 2, Link::ten_gbps(), &spec, false).is_err());
+        assert!(build_topology(Topology::Ring, 2, Link::ten_gbps(), &spec, false).is_err());
+    }
+
+    #[test]
+    fn ring_rejects_downlink_quantization() {
+        let spec = WireSpec::new("terngrad", 64);
+        assert!(build_topology(Topology::Ring, 2, Link::ten_gbps(), &spec, true).is_err());
+        assert!(build_topology(Topology::Ring, 2, Link::ten_gbps(), &spec, false).is_ok());
+        assert!(build_topology(Topology::Ps, 2, Link::ten_gbps(), &spec, true).is_ok());
+    }
+
+    /// A coordinator-side error (mismatched upload shapes) must surface as
+    /// Err, not deadlock the scoped join (regression: workers used to stay
+    /// blocked on the still-open broadcast channels).
+    #[test]
+    fn run_once_surfaces_shape_errors_instead_of_hanging() {
+        let spec = WireSpec::new("fp", 64);
+        let grads = vec![vec![0.5f32; 128], vec![0.5f32; 256]];
+        let err = run_once(Topology::Ps, Link::ten_gbps(), &spec, false, &grads);
+        assert!(err.is_err(), "mismatched gradient lengths must error");
+    }
+}

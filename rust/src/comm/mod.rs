@@ -1,17 +1,45 @@
-//! Communication substrate: bandwidth/latency link model, simulated
-//! parameter-server topology over real channels, and a ring all-reduce
-//! cost model.
+//! Communication substrate: link model, the topology-agnostic
+//! [`Collective`] abstraction, and two real implementations of it.
 //!
 //! The paper's Table 1 costs gradients at 10 Gbps; all transfer *times*
 //! here come from [`Link::transfer_time`] (a simulated clock — nothing
 //! sleeps), while the *bytes* come from the exact wire accounting in
-//! [`crate::codec`]. The parameter-server exchange itself runs over real
-//! `std::sync::mpsc` channels between worker threads and the server
-//! (Algorithm 2 of the paper).
+//! [`crate::codec`]. Both topologies exchange real bytes over real
+//! `std::sync::mpsc` channels between worker threads:
+//!
+//! * **Parameter server** ([`ps`], `--topology ps`) — L workers ⇄ 1
+//!   server star (paper Algorithm 2). Round time is the synchronous
+//!   critical path `max_l(uplink_l) + broadcast`; the server decodes,
+//!   averages in f64, optionally requantizes the downlink (§4 option b),
+//!   and broadcasts.
+//! * **Ring all-reduce** ([`ring`], `--topology ring`) — the
+//!   decentralized alternative the paper mentions. A round is
+//!   reduce-scatter + all-gather over per-hop channels, `2·(L−1)` steps;
+//!   each reduce-scatter hop performs **decode → partial-reduce →
+//!   requantize** (quantized codebooks are not closed under addition),
+//!   while all-gather forwards the final encoded chunks unchanged so
+//!   every node decodes a bit-identical mean. Chunks align to the
+//!   quantization bucket grid; step time is `max` over the L concurrent
+//!   transmissions, summed over steps. [`ring`] also keeps the
+//!   closed-form cost model ([`ring::allreduce_time`]) that the Table 1
+//!   bench prints next to the measured numbers.
+//!
+//! Pick a topology from the CLI (`orq train --topology ps|ring`), a
+//! config file (`topology = "ring"` under `[train]`), or directly via
+//! [`TrainConfig::topology`](crate::config::TrainConfig). The trainer is
+//! generic over [`Collective`]/[`WorkerExchange`]; [`build_topology`]
+//! constructs either end set from a [`Topology`] tag and [`run_once`]
+//! drives a single standalone round (benches/tests).
 
+pub mod collective;
 pub mod link;
 pub mod ps;
 pub mod ring;
 
+pub use collective::{
+    build_topology, run_once, Collective, CommStats, GradCodec, Topology, WireSpec,
+    WorkerExchange,
+};
 pub use link::Link;
-pub use ps::{ParameterServer, WorkerHandle};
+pub use ps::{ParameterServer, PsCollective, PsWorker, WorkerHandle};
+pub use ring::{RingAllReduce, RingWorker};

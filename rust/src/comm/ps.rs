@@ -5,11 +5,19 @@
 //! encoded gradient; the server aggregates and broadcasts one message to
 //! every worker. Wall-clock never sleeps — the round's *simulated* time is
 //! `max_l(uplink_l) + broadcast` (synchronous SGD critical path).
+//!
+//! [`ParameterServer`]/[`WorkerHandle`] are the raw channel star;
+//! [`PsCollective`]/[`PsWorker`] wrap them into the topology-agnostic
+//! [`Collective`]/[`WorkerExchange`] interface the trainer runs on.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 
+use super::collective::{Collective, CommStats, GradCodec, WireSpec, WorkerExchange};
 use super::link::{Link, TrafficMeter};
+use crate::codec::{self, DecodeScratch};
 use crate::error::{Error, Result};
+use crate::quant::bucket::QuantizedGrad;
+use crate::tensor::rng::Rng;
 
 /// Message from a worker: (worker id, encoded gradient bytes).
 type Upload = (usize, Vec<u8>);
@@ -111,6 +119,135 @@ impl WorkerHandle {
         self.downlink_rx
             .recv()
             .map_err(|_| Error::Comm("server hung up before broadcast".into()))
+    }
+}
+
+/// [`Collective`] over the parameter-server star: gather L encoded
+/// uploads, decode + average in f64, optionally requantize the downlink
+/// (paper §4 option b), broadcast. All decode/aggregate scratch is reused
+/// across rounds — the aggregation loop performs no per-bucket allocation.
+pub struct PsCollective {
+    server: ParameterServer,
+    codec: GradCodec,
+    quantize_downlink: bool,
+    rng_down: Rng,
+    acc: Vec<f64>,
+    flat: Vec<f32>,
+    msg: Vec<u8>,
+    qg: QuantizedGrad,
+    dscratch: DecodeScratch,
+}
+
+impl PsCollective {
+    pub fn new(
+        workers: usize,
+        link: Link,
+        spec: &WireSpec,
+        quantize_downlink: bool,
+    ) -> Result<(PsCollective, Vec<PsWorker>)> {
+        if workers == 0 {
+            // Same contract as RingAllReduce::new — Err, not the raw
+            // ParameterServer::new assert.
+            return Err(Error::InvalidArg("parameter server needs at least 1 worker".into()));
+        }
+        let codec = GradCodec::new(spec)?;
+        let (server, handles) = ParameterServer::new(workers, link);
+        let ends = handles
+            .into_iter()
+            .map(|handle| PsWorker { handle, scratch: DecodeScratch::default() })
+            .collect();
+        Ok((
+            PsCollective {
+                server,
+                codec,
+                quantize_downlink,
+                rng_down: Rng::stream(spec.seed, 3_000),
+                acc: Vec::new(),
+                flat: Vec::new(),
+                msg: Vec::new(),
+                qg: QuantizedGrad::default(),
+                dscratch: DecodeScratch::default(),
+            },
+            ends,
+        ))
+    }
+}
+
+impl Collective for PsCollective {
+    fn num_workers(&self) -> usize {
+        self.server.num_workers()
+    }
+
+    fn round(&mut self, mean_out: &mut Vec<f32>) -> Result<()> {
+        let uploads = self.server.gather()?;
+        self.acc.clear();
+        let mut expect: Option<usize> = None;
+        for u in &uploads {
+            codec::decode_flat_into(u, &mut self.flat, &mut self.dscratch)?;
+            match expect {
+                None => {
+                    expect = Some(self.flat.len());
+                    self.acc.resize(self.flat.len(), 0.0);
+                }
+                Some(n) if n != self.flat.len() => {
+                    return Err(Error::Shape(format!(
+                        "worker gradient has {} elements, expected {n}",
+                        self.flat.len()
+                    )))
+                }
+                Some(_) => {}
+            }
+            for (a, v) in self.acc.iter_mut().zip(&self.flat) {
+                *a += *v as f64;
+            }
+        }
+        let inv = 1.0 / uploads.len() as f64;
+        mean_out.clear();
+        mean_out.extend(self.acc.iter().map(|a| (*a * inv) as f32));
+        if self.quantize_downlink && !self.codec.is_fp() {
+            // Lossy downlink: every node (this coordinator included) must
+            // apply the *decoded broadcast*, not the exact mean, to stay
+            // bit-identical with the workers.
+            self.codec.encode_into(mean_out, &mut self.rng_down, &mut self.qg, &mut self.msg);
+            self.server.broadcast(&self.msg)?;
+            codec::decode_flat_into(&self.msg, mean_out, &mut self.dscratch)?;
+        } else {
+            codec::encode_fp_into(mean_out, &mut self.msg);
+            self.server.broadcast(&self.msg)?;
+        }
+        Ok(())
+    }
+
+    fn stats(&self) -> CommStats {
+        CommStats {
+            wire_bytes: self.server.meter.total_bytes(),
+            sim_time_s: self.server.sim_time_s,
+            messages: self.server.meter.messages,
+        }
+    }
+}
+
+/// Worker end of [`PsCollective`]: upload, block for the broadcast,
+/// decode it through a reused scratch.
+pub struct PsWorker {
+    handle: WorkerHandle,
+    scratch: DecodeScratch,
+}
+
+impl WorkerExchange for PsWorker {
+    fn id(&self) -> usize {
+        self.handle.id
+    }
+
+    fn exchange(&mut self, encoded: &mut Vec<u8>, mean_out: &mut Vec<f32>) -> Result<()> {
+        self.handle.send_grad(std::mem::take(encoded))?;
+        let bcast = self.handle.recv_broadcast()?;
+        codec::decode_flat_into(&bcast, mean_out, &mut self.scratch)?;
+        // Recycle the broadcast allocation as the caller's next encode
+        // buffer (the upload Vec was handed to the channel above) — keeps
+        // the PS round free of full-gradient reallocations, like the ring.
+        *encoded = bcast;
+        Ok(())
     }
 }
 

@@ -1,15 +1,53 @@
-//! Ring all-reduce cost model — the decentralized alternative the paper
-//! mentions ("on commercial clusters it can be conducted in a
-//! decentralized ring-based all-reduce manner without the server").
+//! Ring all-reduce — the decentralized alternative the paper mentions
+//! ("on commercial clusters it can be conducted in a decentralized
+//! ring-based all-reduce manner without the server").
 //!
-//! Classic bandwidth-optimal ring: each of the L nodes sends 2·(L−1)/L of
-//! the buffer over its link, in 2·(L−1) serialized steps of b/L bytes.
-//! Quantized gradients complicate ring reduce-scatter (sums of quantized
-//! values are no longer in the codebook), so — like the paper — we use the
-//! ring only as a *cost model* for FP and for decode-reduce-requantize
-//! variants, to compare topologies in the Table 1 bench.
+//! Two layers live here:
+//!
+//! * **Closed-form cost model** ([`allreduce_time`], [`ps_time`],
+//!   [`quantized_ring_time`]) — the classic bandwidth-optimal figures the
+//!   Table 1 bench prints next to the measured numbers.
+//! * **Executable topology** ([`RingAllReduce`]/[`RingWorker`]) — a real
+//!   ring over per-hop `std::sync::mpsc` channels implementing the
+//!   [`Collective`]/[`WorkerExchange`] interface. Each node owns one edge
+//!   to its successor; a round is the standard reduce-scatter +
+//!   all-gather, `2·(L−1)` serialized steps of one chunk each.
+//!
+//! **Decode-reduce-requantize semantics.** Quantized partial sums are not
+//! closed under addition (sums of codebook values leave the codebook), so
+//! every reduce-scatter hop decodes the incoming chunk, adds its own
+//! decoded contribution, requantizes the partial sum with its own RNG
+//! stream, and forwards the re-encoded bytes. Chunks are aligned to the
+//! bucket grid so each node's *first* transmission is a byte slice of its
+//! original encoded gradient ([`crate::codec::slice_elements_into`]) —
+//! no spurious extra quantization before the first reduction. All-gather
+//! then forwards the final encoded chunks unchanged, which is what makes
+//! the decoded mean bit-identical on every node (the property the trainer
+//! relies on to keep parameter replicas in sync). FP gradients take the
+//! same path losslessly.
+//!
+//! **Accounting.** Wire bytes are the exact encoded sizes of every hop
+//! message (they match [`crate::codec::wire_size`] per chunk).
+//! Simulated time is the critical path under the synchronous-step model:
+//! per step all L nodes transmit concurrently, so the step costs
+//! `max_w transfer_time(bytes_w)`; the round is the sum over the
+//! `2·(L−1)` steps. Workers report per-step byte traces to the
+//! coordinator, which does the max/sum — the coordinator itself moves no
+//! gradient data (there is no server in a ring).
 
-use super::link::Link;
+use std::ops::Range;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use super::collective::{Collective, CommStats, GradCodec, WireSpec, WorkerExchange};
+use super::link::{Link, TrafficMeter};
+use crate::codec::{self, DecodeScratch};
+use crate::error::{Error, Result};
+use crate::quant::bucket::QuantizedGrad;
+use crate::tensor::rng::Rng;
+
+// --------------------------------------------------------------------
+// Closed-form cost model (Table 1's modeled columns)
+// --------------------------------------------------------------------
 
 /// Time for a ring all-reduce of `bytes` over `n` nodes.
 pub fn allreduce_time(link: &Link, n: usize, bytes: usize) -> f64 {
@@ -30,9 +68,291 @@ pub fn ps_time(link: &Link, _n: usize, up_bytes: usize, down_bytes: usize) -> f6
 
 /// Decode-reduce-requantize ring step count: every hop pays a decode and a
 /// requantize, so the *message* stays small but the effective bytes per
-/// hop equal the quantized size (modeled; used by the ablation bench).
+/// hop equal the quantized size (modeled; the executable [`RingAllReduce`]
+/// measures the same quantity with exact per-chunk header overhead).
 pub fn quantized_ring_time(link: &Link, n: usize, quant_bytes: usize) -> f64 {
     allreduce_time(link, n, quant_bytes)
+}
+
+// --------------------------------------------------------------------
+// Executable ring
+// --------------------------------------------------------------------
+
+/// Element range of ring chunk `i` (of `parts`) for a gradient of `total`
+/// elements, aligned to the `bucket`-sized quantization grid so encoded
+/// messages can be sliced and requantized per chunk without re-bucketing.
+pub fn chunk_range(total: usize, bucket: usize, parts: usize, i: usize) -> Range<usize> {
+    debug_assert!(parts > 0 && bucket > 0 && i < parts);
+    let b = total.div_ceil(bucket); // buckets in the grid
+    let lo = (b * i / parts) * bucket;
+    let hi = (b * (i + 1) / parts) * bucket;
+    lo.min(total)..hi.min(total)
+}
+
+/// `(a − b) mod l` without underflow, for `b ≤ l`.
+fn ring_sub(a: usize, b: usize, l: usize) -> usize {
+    (a + l - b) % l
+}
+
+/// One worker's per-round transmission trace: bytes sent at each of the
+/// `2·(L−1)` synchronous steps.
+struct RoundTrace {
+    worker: usize,
+    step_bytes: Vec<usize>,
+}
+
+/// Coordinator end of the ring: pure bookkeeping (critical-path time,
+/// exact wire bytes) plus relaying worker 0's decoded mean to the
+/// trainer. No gradient bytes flow through it.
+pub struct RingAllReduce {
+    workers: usize,
+    link: Link,
+    trace_rx: Receiver<RoundTrace>,
+    mean_rx: Receiver<Vec<f32>>,
+    meter: TrafficMeter,
+    sim_time_s: f64,
+}
+
+impl RingAllReduce {
+    /// Build the ring: edge `w → (w+1) mod L` for every worker.
+    pub fn new(
+        workers: usize,
+        link: Link,
+        spec: &WireSpec,
+    ) -> Result<(RingAllReduce, Vec<RingWorker>)> {
+        if workers == 0 {
+            return Err(Error::InvalidArg("ring needs at least 1 worker".into()));
+        }
+        // Validate the spec up front (quantizer name) before spawning ends.
+        let _ = GradCodec::new(spec)?;
+        let (trace_tx, trace_rx) = channel::<RoundTrace>();
+        let (mean_tx, mean_rx) = channel::<Vec<f32>>();
+        let mut txs: Vec<Option<Sender<Vec<u8>>>> = Vec::with_capacity(workers);
+        let mut rxs: Vec<Option<Receiver<Vec<u8>>>> = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let (tx, rx) = channel::<Vec<u8>>();
+            txs.push(Some(tx));
+            rxs.push(Some(rx));
+        }
+        let mut ends = Vec::with_capacity(workers);
+        for w in 0..workers {
+            ends.push(RingWorker {
+                id: w,
+                workers,
+                tx_next: txs[(w + 1) % workers].take().expect("edge assigned once"),
+                rx_prev: rxs[w].take().expect("inbox assigned once"),
+                trace_tx: trace_tx.clone(),
+                mean_tx: if w == 0 { Some(mean_tx.clone()) } else { None },
+                codec: GradCodec::new(spec)?,
+                rng: Rng::stream(spec.seed, 4_000 + w as u64),
+                own: Vec::new(),
+                chunk: Vec::new(),
+                qg: QuantizedGrad::default(),
+                dscratch: DecodeScratch::default(),
+                step_bytes: Vec::new(),
+            });
+        }
+        Ok((
+            RingAllReduce {
+                workers,
+                link,
+                trace_rx,
+                mean_rx,
+                meter: TrafficMeter::default(),
+                sim_time_s: 0.0,
+            },
+            ends,
+        ))
+    }
+}
+
+impl Collective for RingAllReduce {
+    fn num_workers(&self) -> usize {
+        self.workers
+    }
+
+    fn round(&mut self, mean_out: &mut Vec<f32>) -> Result<()> {
+        let l = self.workers;
+        let hops = if l > 1 { 2 * (l - 1) } else { 0 };
+        let mut traces: Vec<Option<Vec<usize>>> = (0..l).map(|_| None).collect();
+        for _ in 0..l {
+            let t = self
+                .trace_rx
+                .recv()
+                .map_err(|_| Error::Comm("ring worker died mid-round".into()))?;
+            if t.worker >= l {
+                return Err(Error::Comm(format!("unknown ring worker {}", t.worker)));
+            }
+            if traces[t.worker].is_some() {
+                return Err(Error::Comm(format!("duplicate trace from ring worker {}", t.worker)));
+            }
+            if t.step_bytes.len() != hops {
+                return Err(Error::Comm(format!(
+                    "ring worker {} sent {} step records, expected {hops}",
+                    t.worker,
+                    t.step_bytes.len()
+                )));
+            }
+            traces[t.worker] = Some(t.step_bytes);
+        }
+        // Synchronous-step critical path: all nodes transmit concurrently
+        // within a step, steps serialize.
+        for k in 0..hops {
+            let mut step = 0.0f64;
+            for tr in &traces {
+                let bytes = tr.as_ref().expect("all traces collected")[k];
+                step = step.max(self.link.transfer_time(bytes));
+                self.meter.record_up(&self.link, bytes);
+            }
+            self.sim_time_s += step;
+        }
+        let mean = self
+            .mean_rx
+            .recv()
+            .map_err(|_| Error::Comm("ring worker 0 died before reporting the mean".into()))?;
+        mean_out.clear();
+        mean_out.extend_from_slice(&mean);
+        Ok(())
+    }
+
+    fn stats(&self) -> CommStats {
+        CommStats {
+            wire_bytes: self.meter.total_bytes(),
+            sim_time_s: self.sim_time_s,
+            messages: self.meter.messages,
+        }
+    }
+}
+
+/// Worker end of the ring. All scratch (decoded own gradient, chunk
+/// accumulator, requantization state, decode scratch) is reused across
+/// rounds; hop buffers are recycled through the channels (each received
+/// message buffer becomes the next send).
+pub struct RingWorker {
+    id: usize,
+    workers: usize,
+    tx_next: Sender<Vec<u8>>,
+    rx_prev: Receiver<Vec<u8>>,
+    trace_tx: Sender<RoundTrace>,
+    mean_tx: Option<Sender<Vec<f32>>>,
+    codec: GradCodec,
+    rng: Rng,
+    own: Vec<f32>,
+    chunk: Vec<f32>,
+    qg: QuantizedGrad,
+    dscratch: DecodeScratch,
+    step_bytes: Vec<usize>,
+}
+
+impl RingWorker {
+    fn send(&mut self, msg: Vec<u8>) -> Result<()> {
+        self.step_bytes.push(msg.len());
+        self.tx_next
+            .send(msg)
+            .map_err(|_| Error::Comm("ring successor hung up".into()))
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        self.rx_prev
+            .recv()
+            .map_err(|_| Error::Comm("ring predecessor hung up".into()))
+    }
+
+    /// Decode `msg` into the chunk scratch and verify it matches chunk `c`.
+    fn decode_chunk(&mut self, msg: &[u8], c: usize, total: usize) -> Result<()> {
+        codec::decode_flat_into(msg, &mut self.chunk, &mut self.dscratch)?;
+        let want = chunk_range(total, self.codec.bucket_size(), self.workers, c).len();
+        if self.chunk.len() != want {
+            return Err(Error::Comm(format!(
+                "ring chunk {c} decoded to {} elements, expected {want}",
+                self.chunk.len()
+            )));
+        }
+        Ok(())
+    }
+
+    fn finish_round(&mut self, mean: &[f32]) -> Result<()> {
+        let trace = RoundTrace {
+            worker: self.id,
+            step_bytes: std::mem::take(&mut self.step_bytes),
+        };
+        self.trace_tx
+            .send(trace)
+            .map_err(|_| Error::Comm("ring coordinator hung up".into()))?;
+        if let Some(tx) = &self.mean_tx {
+            tx.send(mean.to_vec())
+                .map_err(|_| Error::Comm("ring coordinator hung up".into()))?;
+        }
+        Ok(())
+    }
+}
+
+impl WorkerExchange for RingWorker {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn exchange(&mut self, encoded: &mut Vec<u8>, mean_out: &mut Vec<f32>) -> Result<()> {
+        let l = self.workers;
+        let w = self.id;
+        let d = self.codec.bucket_size();
+        // Own contribution, decoded once: what this node adds at each hop.
+        codec::decode_flat_into(encoded, &mut self.own, &mut self.dscratch)?;
+        let n = self.own.len();
+        mean_out.clear();
+        self.step_bytes.clear();
+        if l == 1 {
+            // Nothing to exchange: the mean of one contribution is itself.
+            mean_out.extend_from_slice(&self.own);
+            return self.finish_round(mean_out);
+        }
+        mean_out.resize(n, 0.0);
+
+        // ---- reduce-scatter: L−1 hops of decode → add → requantize ----
+        // Step 0 ships a byte slice of the original encoded gradient.
+        let mut cur = Vec::new();
+        let r = chunk_range(n, d, l, w);
+        codec::slice_elements_into(encoded, r.start, r.end, &mut cur)?;
+        for k in 0..l - 1 {
+            self.send(cur)?;
+            let mut msg = self.recv()?;
+            let c = ring_sub(w, k + 1, l);
+            self.decode_chunk(&msg, c, n)?;
+            let r = chunk_range(n, d, l, c);
+            for (a, v) in self.chunk.iter_mut().zip(&self.own[r]) {
+                *a += *v;
+            }
+            // Requantize the partial (or, on the last hop, final) sum for
+            // transmission, recycling the received buffer.
+            self.codec.encode_into(&self.chunk, &mut self.rng, &mut self.qg, &mut msg);
+            cur = msg;
+        }
+
+        // `cur` is the complete encoded sum of chunk (w+1) mod L; every
+        // node decodes the *same bytes* per chunk, so the mean is
+        // bit-identical ring-wide.
+        let c0 = (w + 1) % l;
+        self.decode_chunk(&cur, c0, n)?;
+        let r0 = chunk_range(n, d, l, c0);
+        mean_out[r0].copy_from_slice(&self.chunk);
+
+        // ---- all-gather: L−1 forwarding hops, no requantization ----
+        for k in 0..l - 1 {
+            self.send(cur)?;
+            let msg = self.recv()?;
+            let c = ring_sub(w, k, l);
+            self.decode_chunk(&msg, c, n)?;
+            let r = chunk_range(n, d, l, c);
+            mean_out[r].copy_from_slice(&self.chunk);
+            cur = msg;
+        }
+
+        let inv = 1.0 / l as f32;
+        for v in mean_out.iter_mut() {
+            *v *= inv;
+        }
+        self.finish_round(mean_out)
+    }
 }
 
 #[cfg(test)]
@@ -76,5 +396,30 @@ mod tests {
         let ring = allreduce_time(&link, 16, b);
         let ps = ps_time(&link, 16, b, b);
         assert!(ring < ps * 1.05, "ring {ring} should not lose badly to ps {ps}");
+    }
+
+    #[test]
+    fn chunk_ranges_cover_and_align() {
+        for (total, bucket, parts) in
+            [(1000usize, 128usize, 4usize), (100, 64, 4), (5, 2, 8), (0, 16, 3), (4096, 512, 1)]
+        {
+            let mut covered = 0usize;
+            for i in 0..parts {
+                let r = chunk_range(total, bucket, parts, i);
+                assert_eq!(r.start, covered, "contiguous at {total}/{bucket}/{parts}");
+                assert!(r.start % bucket == 0 || r.start == total, "aligned start");
+                assert!(r.end % bucket == 0 || r.end == total, "aligned end");
+                covered = r.end;
+            }
+            assert_eq!(covered, total, "full cover at {total}/{bucket}/{parts}");
+        }
+    }
+
+    #[test]
+    fn ring_sub_wraps() {
+        assert_eq!(ring_sub(0, 1, 4), 3);
+        assert_eq!(ring_sub(3, 3, 4), 0);
+        assert_eq!(ring_sub(2, 0, 4), 2);
+        assert_eq!(ring_sub(1, 4, 4), 1);
     }
 }

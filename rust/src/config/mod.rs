@@ -7,6 +7,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::comm::Topology;
 use crate::error::{Error, Result};
 
 /// A parsed config value.
@@ -160,6 +161,9 @@ pub struct TrainConfig {
     pub eval_every: usize,
     /// Quantize the server->worker broadcast too (paper §4 option (b)).
     pub quantize_downlink: bool,
+    /// Gradient-exchange topology: parameter-server star or decentralized
+    /// ring all-reduce (`topology = "ps" | "ring"`).
+    pub topology: Topology,
 }
 
 impl Default for TrainConfig {
@@ -182,6 +186,7 @@ impl Default for TrainConfig {
             seed: 42,
             eval_every: 100,
             quantize_downlink: false,
+            topology: Topology::Ps,
         }
     }
 }
@@ -224,6 +229,12 @@ impl TrainConfig {
             c.quantize_downlink =
                 v.as_bool().ok_or_else(|| Error::Config("quantize_downlink".into()))?;
         }
+        if let Some(v) = get("topology") {
+            c.topology = Topology::parse(
+                v.as_str().ok_or_else(|| Error::Config("topology must be a string".into()))?,
+            )
+            .map_err(|e| Error::Config(e.to_string()))?;
+        }
         if let Some(v) = get("clip_factor") {
             c.clip_factor = Some(
                 v.as_f64().ok_or_else(|| Error::Config("clip_factor".into()))? as f32
@@ -263,6 +274,13 @@ impl TrainConfig {
         }
         if !(0.0..1.0).contains(&(self.momentum as f64)) {
             return Err(Error::Config("momentum must be in [0,1)".into()));
+        }
+        if self.quantize_downlink && self.topology == Topology::Ring {
+            return Err(Error::Config(
+                "quantize_downlink applies to the parameter-server broadcast; \
+                 the ring topology has no downlink (drop it or use topology = \"ps\")"
+                    .into(),
+            ));
         }
         Ok(())
     }
@@ -328,6 +346,7 @@ mod tests {
             clip_factor = 2.5
             lr_decay_steps = [100, 200]
             quantize_downlink = true
+            topology = "ring"
             "#,
         )
         .unwrap();
@@ -338,8 +357,28 @@ mod tests {
         assert_eq!(c.clip_factor, Some(2.5));
         assert_eq!(c.lr_decay_steps, vec![100, 200]);
         assert!(c.quantize_downlink);
+        assert_eq!(c.topology, Topology::Ring);
         // defaults preserved
         assert_eq!(c.momentum, 0.9);
+    }
+
+    #[test]
+    fn topology_defaults_to_ps_and_rejects_unknown() {
+        let c = TrainConfig::from_map(&parse("[train]\nworkers = 2\nbatch = 64").unwrap()).unwrap();
+        assert_eq!(c.topology, Topology::Ps);
+        let bad = parse("[train]\ntopology = \"mesh\"").unwrap();
+        assert!(TrainConfig::from_map(&bad).is_err());
+        let wrong_type = parse("[train]\ntopology = 3").unwrap();
+        assert!(TrainConfig::from_map(&wrong_type).is_err());
+        // downlink quantization is a PS-only option
+        let c = TrainConfig {
+            topology: Topology::Ring,
+            quantize_downlink: true,
+            ..TrainConfig::default()
+        };
+        assert!(c.validate().is_err());
+        let c = TrainConfig { topology: Topology::Ring, ..TrainConfig::default() };
+        assert!(c.validate().is_ok());
     }
 
     #[test]

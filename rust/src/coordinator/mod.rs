@@ -2,10 +2,11 @@
 //!
 //! [`trainer::Trainer`] runs synchronous data-parallel SGD: L worker
 //! threads each compute a local gradient (native backend or PJRT),
-//! solve the quantization levels at runtime, quantize + encode, and ship
-//! bytes to the server over the [`crate::comm::ps`] star; the server
-//! decodes, averages, (optionally re-quantizes) and broadcasts; every
-//! node applies the identical [`optimizer::SgdMomentum`] update so
+//! solve the quantization levels at runtime, quantize + encode, and
+//! exchange bytes through a [`crate::comm::Collective`] — the
+//! parameter-server star or the decode-reduce-requantize ring all-reduce
+//! (`TrainConfig::topology`). Every node applies the identical
+//! [`optimizer::SgdMomentum`] update on the identical decoded mean, so
 //! parameters never need to move after initialization.
 
 pub mod optimizer;

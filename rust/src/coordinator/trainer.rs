@@ -1,22 +1,29 @@
-//! Synchronous parameter-server trainer — paper Algorithm 2, threaded.
+//! Synchronous distributed trainer — paper Algorithm 2, threaded, generic
+//! over the gradient-exchange topology.
 //!
 //! Every worker runs in its own thread with its own [`Backend`] instance,
 //! data shard, quantizer RNG stream and optimizer replica. Parameters are
 //! initialized identically everywhere (same seed), and because every node
-//! applies the identical optimizer update on the identical decoded
-//! broadcast Ḡ_t, parameters stay bit-identical across nodes without ever
+//! applies the identical optimizer update on the identical decoded mean
+//! gradient, parameters stay bit-identical across nodes without ever
 //! being transmitted — exactly the structure of the paper's Algorithm 2.
 //!
-//! The server (main thread) gathers the L encoded gradients, decodes and
-//! averages them, optionally re-quantizes the downlink (§4 option b), and
-//! broadcasts. Wire bytes and simulated comm time come from
-//! [`crate::comm`]'s exact accounting.
+//! The exchange itself is behind [`crate::comm::Collective`] /
+//! [`crate::comm::WorkerExchange`]: the parameter-server star or the
+//! decode-reduce-requantize ring, chosen by `TrainConfig::topology`
+//! (`--topology ps|ring`). Wire bytes and simulated comm time come from
+//! the collective's exact accounting. The per-round hot loop reuses all
+//! of its scratch (quantization buckets, wire messages, decode buffers):
+//! the encode/wire/decode/reduce path performs no per-bucket heap
+//! allocation once buffers reach steady state. (The sort-based level
+//! solvers of `orq-S`/`linear-S` still allocate inside
+//! `Quantizer::quantize_bucket_into` — see the quant module docs.)
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 
 use crate::codec::{self, Packing};
 use crate::comm::link::Link;
-use crate::comm::ps::ParameterServer;
+use crate::comm::{build_topology, GradCodec, WireSpec};
 use crate::config::TrainConfig;
 use crate::coordinator::optimizer::SgdMomentum;
 use crate::coordinator::schedule::LrSchedule;
@@ -25,8 +32,8 @@ use crate::error::{Error, Result};
 use crate::metrics::series::SeriesLogger;
 use crate::metrics::{RunSummary, StepMetrics};
 use crate::model::{topk_accuracy, Backend};
-use crate::quant::bucket::BucketQuantizer;
 use crate::quant;
+use crate::quant::bucket::QuantizedGrad;
 use crate::tensor::rng::Rng;
 
 /// Per-step report from one worker (side channel next to the wire path).
@@ -68,7 +75,7 @@ impl<'a> Trainer<'a> {
 
     /// Run Algorithm 2 with one backend per node from `make_backend`
     /// (called with worker id 0..L for workers and L for the server's
-    /// eval replica).
+    /// eval replica), over the topology named by the config.
     pub fn run<F>(&self, make_backend: F) -> Result<TrainOutput>
     where
         F: Fn(usize) -> Box<dyn Backend> + Sync,
@@ -77,17 +84,21 @@ impl<'a> Trainer<'a> {
         let l = cfg.workers;
         let quantizer = quant::from_name(&cfg.method)?;
         let is_fp = quantizer.num_levels() == 0;
-        let bucketq = match cfg.clip_factor {
-            Some(c) => BucketQuantizer::with_clip(cfg.bucket_size, c),
-            None => BucketQuantizer::new(cfg.bucket_size),
-        };
         let schedule = LrSchedule::new(
             cfg.lr,
             cfg.warmup_steps,
             cfg.lr_decay_steps.clone(),
             cfg.lr_decay,
         );
-        let (mut ps, handles) = ParameterServer::new(l, self.link);
+        let spec = WireSpec {
+            method: cfg.method.clone(),
+            bucket_size: cfg.bucket_size,
+            clip_factor: cfg.clip_factor,
+            packing: Packing::BaseS,
+            seed: cfg.seed,
+        };
+        let (mut coll, worker_ends) =
+            build_topology(cfg.topology, l, self.link, &spec, cfg.quantize_downlink)?;
         let (report_tx, report_rx): (Sender<WorkerReport>, Receiver<WorkerReport>) = channel();
 
         let mut server_backend = make_backend(l);
@@ -106,83 +117,70 @@ impl<'a> Trainer<'a> {
 
         std::thread::scope(|scope| {
             // ---------------- workers ----------------
-            for handle in handles {
-                let w = handle.id;
+            for (w, mut wx) in worker_ends.into_iter().enumerate() {
                 let cfg = cfg.clone();
                 let ds = self.ds;
-                let bucketq = bucketq.clone();
+                let spec = spec.clone();
                 let report_tx = report_tx.clone();
                 let make = &make_backend;
                 let schedule = schedule.clone();
                 scope.spawn(move || {
                     let mut backend = make(w);
-                    let quantizer = quant::from_name(&cfg.method).expect("validated");
-                    let is_fp = quantizer.num_levels() == 0;
+                    // One encoder per worker, built from the same WireSpec
+                    // the collective uses — a single quantize+encode path.
+                    let gc = GradCodec::new(&spec).expect("validated");
                     let mut params = backend.init_params(&mut Rng::seed_from(cfg.seed));
                     let mut opt =
                         SgdMomentum::new(params.len(), cfg.momentum, cfg.weight_decay);
                     let mut grad = vec![0.0f32; params.len()];
                     let mut rng_data = Rng::stream(cfg.seed, 1_000 + w as u64);
                     let mut rng_q = Rng::stream(cfg.seed, 2_000 + w as u64);
+                    // Round-persistent scratch: the exchange path allocates
+                    // nothing per bucket once these reach steady state.
+                    let mut qg = QuantizedGrad::default();
+                    let mut msg: Vec<u8> = Vec::new();
+                    let mut mean: Vec<f32> = Vec::new();
+                    let mut deq: Vec<f32> = Vec::new();
                     let per_worker_batch = cfg.batch / cfg.workers;
                     for t in 0..cfg.steps {
                         let batch = ds.worker_batch(w, cfg.workers, per_worker_batch, &mut rng_data);
                         let loss = backend.loss_grad(&params, &batch, &mut grad);
-                        let (bytes, rel_mse, cosine) = if is_fp {
-                            (codec::encode_fp(&grad), 0.0, 1.0)
+                        gc.encode_into(&grad, &mut rng_q, &mut qg, &mut msg);
+                        let (rel_mse, cosine) = if gc.is_fp() {
+                            (0.0, 1.0)
                         } else {
-                            let qg = bucketq.quantize(&grad, quantizer.as_ref(), &mut rng_q);
-                            let e = crate::quant::error::measure(&grad, &qg);
-                            (codec::encode(&qg, &cfg.method, Packing::BaseS), e.rel_mse, e.cosine)
+                            let e = quant::error::measure_into(&grad, &qg, &mut deq);
+                            (e.rel_mse, e.cosine)
                         };
-                        report_tx
+                        if report_tx
                             .send(WorkerReport { step: t, loss: loss as f64, rel_mse, cosine })
-                            .expect("server alive");
-                        handle.send_grad(bytes).expect("server alive");
-                        let bcast = handle.recv_broadcast().expect("server alive");
-                        let avg = codec::decode(&bcast).expect("valid broadcast").to_flat();
-                        opt.step(&mut params, &avg, schedule.lr_at(t));
+                            .is_err()
+                        {
+                            return; // coordinator gone; it reports the error
+                        }
+                        if wx.exchange(&mut msg, &mut mean).is_err() {
+                            return; // ditto — avoid deadlocking the scope
+                        }
+                        opt.step(&mut params, &mean, schedule.lr_at(t));
                     }
                 });
             }
             drop(report_tx);
 
-            // ---------------- server ----------------
+            // ---------------- coordinator ----------------
             let run_server = || -> Result<TrainOutput> {
-                let mut avg = vec![0.0f64; param_count];
-                let mut avg32 = vec![0.0f32; param_count];
-                let mut rng_down = Rng::stream(cfg.seed, 3_000);
+                let mut mean: Vec<f32> = Vec::with_capacity(param_count);
                 for t in 0..cfg.steps {
-                    let bytes_before = ps.meter.total_bytes();
-                    let time_before = ps.sim_time_s;
-                    let uploads = ps.gather()?;
-                    avg.fill(0.0);
-                    for u in &uploads {
-                        let flat = codec::decode(u)?.to_flat();
-                        if flat.len() != param_count {
-                            return Err(Error::Shape(format!(
-                                "worker gradient has {} elements, expected {param_count}",
-                                flat.len()
-                            )));
-                        }
-                        for (a, v) in avg.iter_mut().zip(flat) {
-                            *a += v as f64;
-                        }
+                    let before = coll.stats();
+                    coll.round(&mut mean)?;
+                    if mean.len() != param_count {
+                        return Err(Error::Shape(format!(
+                            "exchange produced {} elements, expected {param_count}",
+                            mean.len()
+                        )));
                     }
-                    let inv = 1.0 / l as f64;
-                    for (a32, a) in avg32.iter_mut().zip(&avg) {
-                        *a32 = (*a * inv) as f32;
-                    }
-                    let bcast = if cfg.quantize_downlink && !is_fp {
-                        let qg = bucketq.quantize(&avg32, quantizer.as_ref(), &mut rng_down);
-                        codec::encode(&qg, &cfg.method, Packing::BaseS)
-                    } else {
-                        codec::encode_fp(&avg32)
-                    };
-                    ps.broadcast(&bcast)?;
-                    // the server applies the decoded broadcast too
-                    let applied = codec::decode(&bcast)?.to_flat();
-                    server_opt.step(&mut server_params, &applied, schedule.lr_at(t));
+                    // the coordinator applies the identical decoded mean
+                    server_opt.step(&mut server_params, &mean, schedule.lr_at(t));
 
                     // drain the L reports for this step
                     let mut loss = 0.0;
@@ -197,13 +195,15 @@ impl<'a> Trainer<'a> {
                         rel += r.rel_mse;
                         cos += r.cosine;
                     }
+                    let inv = 1.0 / l as f64;
+                    let after = coll.stats();
                     series.push(StepMetrics {
                         step: t,
                         train_loss: loss * inv,
                         quant_rel_mse: rel * inv,
                         quant_cosine: cos * inv,
-                        wire_bytes: ps.meter.total_bytes() - bytes_before,
-                        comm_time_s: ps.sim_time_s - time_before,
+                        wire_bytes: after.wire_bytes - before.wire_bytes,
+                        comm_time_s: after.sim_time_s - before.sim_time_s,
                     });
 
                     if cfg.eval_every > 0 && (t + 1) % cfg.eval_every == 0 {
@@ -240,6 +240,10 @@ impl<'a> Trainer<'a> {
                 Ok(TrainOutput { summary, series, params: server_params })
             };
             out = run_server();
+            // Tear the collective down before joining workers: if the
+            // coordinator erred mid-run, blocked workers see closed
+            // channels and exit instead of deadlocking the scope.
+            drop(coll);
         });
         // Move the fields back out: run_server consumed them via closure.
         out
@@ -295,6 +299,7 @@ pub fn native_backend_factory(model: &str) -> Result<impl Fn(usize) -> Box<dyn B
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::Topology;
     use crate::data::synth::DatasetSpec;
 
     fn tiny_ds() -> ClassDataset {
@@ -329,12 +334,21 @@ mod tests {
             seed: 3,
             eval_every: 0,
             quantize_downlink: false,
+            topology: Topology::Ps,
         }
     }
 
     fn run(method: &str, workers: usize) -> TrainOutput {
         let ds = tiny_ds();
         let cfg = tiny_cfg(method, workers);
+        let factory = native_backend_factory(&cfg.model).unwrap();
+        Trainer::new(cfg, &ds).unwrap().run(factory).unwrap()
+    }
+
+    fn run_ring(method: &str, workers: usize) -> TrainOutput {
+        let ds = tiny_ds();
+        let mut cfg = tiny_cfg(method, workers);
+        cfg.topology = Topology::Ring;
         let factory = native_backend_factory(&cfg.model).unwrap();
         Trainer::new(cfg, &ds).unwrap().run(factory).unwrap()
     }
@@ -403,6 +417,43 @@ mod tests {
         let b = run("orq-3", 2);
         assert_eq!(a.params, b.params);
         assert_eq!(a.summary.test_top1, b.summary.test_top1);
+    }
+
+    #[test]
+    fn ring_topology_learns_fp() {
+        let out = run_ring("fp", 4);
+        assert_eq!(out.series.steps.len(), 120);
+        assert!(out.summary.test_top1 > 0.8, "ring fp top1={}", out.summary.test_top1);
+        assert!(out.summary.total_wire_bytes > 0);
+        assert!(out.summary.total_comm_time_s > 0.0);
+    }
+
+    #[test]
+    fn ring_topology_learns_quantized() {
+        let out = run_ring("terngrad", 4);
+        assert!(out.summary.test_top1 > 0.5, "ring terngrad top1={}", out.summary.test_top1);
+        // per-hop requantization is lossy but must not destroy training
+        assert!(out.summary.mean_quant_rel_mse > 0.0);
+    }
+
+    #[test]
+    fn ring_determinism_same_seed_same_result() {
+        let a = run_ring("orq-3", 3);
+        let b = run_ring("orq-3", 3);
+        assert_eq!(a.params, b.params);
+        assert_eq!(a.summary.test_top1, b.summary.test_top1);
+    }
+
+    #[test]
+    fn ring_single_worker_matches_ps_fp() {
+        // With one worker both topologies degenerate to "apply your own
+        // gradient"; fp carries it losslessly, so training is identical.
+        let ps = run("fp", 1);
+        let ring = run_ring("fp", 1);
+        assert_eq!(ps.params, ring.params);
+        // ...but the ring moves zero bytes while PS pays up + broadcast.
+        assert_eq!(ring.summary.total_wire_bytes, 0);
+        assert!(ps.summary.total_wire_bytes > 0);
     }
 
     #[test]

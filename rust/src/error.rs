@@ -1,36 +1,58 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror` offline); the
+//! message strings are part of the crate's contract — tests match on them.
+
+use std::fmt;
 
 /// Unified error for every layer of the stack.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("xla/pjrt error: {0}")]
+    Io(std::io::Error),
     Xla(String),
-
-    #[error("config error: {0}")]
     Config(String),
-
-    #[error("json parse error at byte {offset}: {msg}")]
     Json { offset: usize, msg: String },
-
-    #[error("codec error: {0}")]
     Codec(String),
-
-    #[error("artifact error: {0} (run `make artifacts`)")]
     Artifact(String),
-
-    #[error("shape mismatch: {0}")]
     Shape(String),
-
-    #[error("communication error: {0}")]
     Comm(String),
-
-    #[error("invalid argument: {0}")]
     InvalidArg(String),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(s) => write!(f, "xla/pjrt error: {s}"),
+            Error::Config(s) => write!(f, "config error: {s}"),
+            Error::Json { offset, msg } => {
+                write!(f, "json parse error at byte {offset}: {msg}")
+            }
+            Error::Codec(s) => write!(f, "codec error: {s}"),
+            Error::Artifact(s) => write!(f, "artifact error: {s} (run `make artifacts`)"),
+            Error::Shape(s) => write!(f, "shape mismatch: {s}"),
+            Error::Comm(s) => write!(f, "communication error: {s}"),
+            Error::InvalidArg(s) => write!(f, "invalid argument: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -38,3 +60,28 @@ impl From<xla::Error> for Error {
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages_stable() {
+        assert_eq!(Error::Config("x".into()).to_string(), "config error: x");
+        assert_eq!(
+            Error::Artifact("missing".into()).to_string(),
+            "artifact error: missing (run `make artifacts`)"
+        );
+        assert_eq!(
+            Error::Json { offset: 3, msg: "bad".into() }.to_string(),
+            "json parse error at byte 3: bad"
+        );
+    }
+
+    #[test]
+    fn io_source_preserved() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(e.to_string().starts_with("io error:"));
+    }
+}

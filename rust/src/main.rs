@@ -68,7 +68,7 @@ fn dataset_for(cfg: &TrainConfig) -> Result<ClassDataset> {
 fn cmd_train(args: &Args) -> Result<()> {
     args.check_known(&[
         "config", "model", "method", "workers", "steps", "batch", "dataset", "bucket",
-        "clip", "backend", "artifacts", "out", "seed", "lr", "eval-every",
+        "clip", "backend", "artifacts", "out", "seed", "lr", "eval-every", "topology",
     ])?;
     let mut cfg = match args.get("config") {
         Some(path) => TrainConfig::load(path)?,
@@ -112,13 +112,23 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(e) = args.get_parse::<usize>("eval-every")? {
         cfg.eval_every = e;
     }
+    if let Some(t) = args.get_parse::<orq::comm::Topology>("topology")? {
+        cfg.topology = t;
+    }
     cfg.validate()?;
 
     let ds = dataset_for(&cfg)?;
     let backend_kind = args.get_or("backend", "native");
     println!(
-        "training {} / {} with {} on {} ({} workers, {} steps, d={})",
-        cfg.model, backend_kind, cfg.method, cfg.dataset, cfg.workers, cfg.steps, cfg.bucket_size
+        "training {} / {} with {} on {} ({} workers, {} steps, d={}, topology={})",
+        cfg.model,
+        backend_kind,
+        cfg.method,
+        cfg.dataset,
+        cfg.workers,
+        cfg.steps,
+        cfg.bucket_size,
+        cfg.topology
     );
     let out = match backend_kind {
         "native" => {

@@ -101,12 +101,14 @@ impl Quantizer for BinGradPb {
         false
     }
 
-    fn quantize_bucket(&self, g: &[f32], rng: &mut Rng) -> QuantizedBucket {
+    fn quantize_bucket_into(&self, g: &[f32], rng: &mut Rng, out: &mut QuantizedBucket) {
         let b1 = Self::solve_b1(g);
         let b1 = if b1 > 0.0 { b1 } else { 1e-12 };
-        let levels = vec![-b1, b1];
+        out.levels.clear();
+        out.levels.extend_from_slice(&[-b1, b1]);
         // Eq. (14): clamp outside ±b1, random-round inside.
-        let mut indices = Vec::with_capacity(g.len());
+        out.indices.clear();
+        out.indices.reserve(g.len());
         let width = 2.0 * b1;
         for &v in g {
             let idx = if v < -b1 {
@@ -117,9 +119,8 @@ impl Quantizer for BinGradPb {
                 let p = (v + b1) / width;
                 (rng.f32() < p) as u8
             };
-            indices.push(idx);
+            out.indices.push(idx);
         }
-        QuantizedBucket { levels, indices }
     }
 }
 
@@ -203,11 +204,12 @@ impl Quantizer for BinGradB {
         false
     }
 
-    fn quantize_bucket(&self, g: &[f32], _rng: &mut Rng) -> QuantizedBucket {
+    fn quantize_bucket_into(&self, g: &[f32], _rng: &mut Rng, out: &mut QuantizedBucket) {
         let (lo, b0, hi) = self.solve_levels(g);
-        let levels = vec![lo, hi];
-        let indices = g.iter().map(|&v| (v >= b0) as u8).collect();
-        QuantizedBucket { levels, indices }
+        out.levels.clear();
+        out.levels.extend_from_slice(&[lo, hi]);
+        out.indices.clear();
+        out.indices.extend(g.iter().map(|&v| (v >= b0) as u8));
     }
 }
 

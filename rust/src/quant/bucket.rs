@@ -8,7 +8,7 @@ use crate::quant::clip::clip_sigma_inplace;
 use crate::tensor::rng::Rng;
 
 /// A whole-gradient quantization result: one [`QuantizedBucket`] per bucket.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct QuantizedGrad {
     pub bucket_size: usize,
     pub total_len: usize,
@@ -54,25 +54,43 @@ impl BucketQuantizer {
     }
 
     /// Quantize a full flat gradient bucket-by-bucket.
-    ///
-    /// A scratch buffer is reused across buckets when clipping is enabled
-    /// so the hot path does not allocate per bucket.
     pub fn quantize(&self, g: &[f32], q: &dyn Quantizer, rng: &mut Rng) -> QuantizedGrad {
-        let mut buckets = Vec::with_capacity(self.num_buckets(g.len()));
+        let mut out = QuantizedGrad::default();
+        self.quantize_into(g, q, rng, &mut out);
+        out
+    }
+
+    /// Quantize into a reused [`QuantizedGrad`] — the exchange hot path.
+    /// Per-bucket level/index vectors are recycled across calls, so
+    /// steady-state rounds perform no per-bucket allocation. (Clipping,
+    /// when enabled, allocates one scratch buffer per *call* and reuses
+    /// it across all buckets of that call.)
+    pub fn quantize_into(
+        &self,
+        g: &[f32],
+        q: &dyn Quantizer,
+        rng: &mut Rng,
+        out: &mut QuantizedGrad,
+    ) {
+        let n = self.num_buckets(g.len());
+        out.bucket_size = self.bucket_size;
+        out.total_len = g.len();
+        out.buckets.truncate(n);
+        while out.buckets.len() < n {
+            out.buckets.push(super::QuantizedBucket::default());
+        }
         let mut scratch: Vec<f32> = Vec::new();
-        for chunk in g.chunks(self.bucket_size) {
-            let qb = match self.clip_factor {
+        for (chunk, qb) in g.chunks(self.bucket_size).zip(out.buckets.iter_mut()) {
+            match self.clip_factor {
                 Some(c) => {
                     scratch.clear();
                     scratch.extend_from_slice(chunk);
                     clip_sigma_inplace(&mut scratch, c);
-                    q.quantize_bucket(&scratch, rng)
+                    q.quantize_bucket_into(&scratch, rng, qb);
                 }
-                None => q.quantize_bucket(chunk, rng),
-            };
-            buckets.push(qb);
+                None => q.quantize_bucket_into(chunk, rng, qb),
+            }
         }
-        QuantizedGrad { bucket_size: self.bucket_size, total_len: g.len(), buckets }
     }
 }
 
@@ -139,6 +157,21 @@ mod tests {
         let q = from_name("terngrad").unwrap();
         let _ = BucketQuantizer::with_clip(4, 1.0).quantize(&g, q.as_ref(), &mut Rng::seed_from(0));
         assert_eq!(g, orig);
+    }
+
+    #[test]
+    fn quantize_into_reuses_and_matches() {
+        let mut rng = Rng::seed_from(9);
+        let g: Vec<f32> = (0..700).map(|_| rng.gaussian_f32()).collect();
+        let q = from_name("orq-3").unwrap();
+        let bq = BucketQuantizer::new(256);
+        let fresh = bq.quantize(&g, q.as_ref(), &mut Rng::seed_from(4));
+        // Reused output seeded with stale state from a longer gradient.
+        let mut reused = bq.quantize(&vec![1.0f32; 2000], q.as_ref(), &mut Rng::seed_from(0));
+        bq.quantize_into(&g, q.as_ref(), &mut Rng::seed_from(4), &mut reused);
+        assert_eq!(reused.total_len, 700);
+        assert_eq!(reused.buckets.len(), fresh.buckets.len());
+        assert_eq!(reused.dequantize(), fresh.dequantize());
     }
 
     #[test]

@@ -15,14 +15,7 @@ pub fn expected_rr_mse(g: &[f32], levels: &[f32]) -> f64 {
     let s = levels.len();
     let mut acc = 0.0f64;
     for &v in g {
-        let mut lower = match levels.binary_search_by(|b| b.partial_cmp(&v).unwrap()) {
-            Ok(i) => i,
-            Err(i) => i.wrapping_sub(1),
-        };
-        if lower == usize::MAX {
-            lower = 0;
-        }
-        lower = lower.min(s - 2);
+        let lower = levels.partition_point(|&b| b <= v).saturating_sub(1).min(s - 2);
         let b_lo = levels[lower] as f64;
         let b_hi = levels[lower + 1] as f64;
         let vd = v as f64;
@@ -47,11 +40,24 @@ pub struct QuantError {
 }
 
 pub fn measure(original: &[f32], quantized: &QuantizedGrad) -> QuantError {
-    let deq = quantized.dequantize();
-    let m = mse(original, &deq);
+    let mut scratch = Vec::new();
+    measure_into(original, quantized, &mut scratch)
+}
+
+/// [`measure`] through a reused dequantization scratch (hot path: the
+/// trainer calls this every step without allocating the full gradient).
+pub fn measure_into(
+    original: &[f32],
+    quantized: &QuantizedGrad,
+    scratch: &mut Vec<f32>,
+) -> QuantError {
+    scratch.clear();
+    scratch.resize(quantized.total_len, 0.0);
+    quantized.dequantize_into(scratch);
+    let m = mse(original, scratch);
     let n2 = norm2(original) as f64;
     let denom = if n2 > 0.0 { n2 * n2 / original.len().max(1) as f64 } else { 1.0 };
-    QuantError { mse: m, rel_mse: m / denom, cosine: cosine(original, &deq) }
+    QuantError { mse: m, rel_mse: m / denom, cosine: cosine(original, scratch) }
 }
 
 #[cfg(test)]

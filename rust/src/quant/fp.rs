@@ -20,13 +20,13 @@ impl Quantizer for FpQuantizer {
         true
     }
 
-    fn quantize_bucket(&self, g: &[f32], _rng: &mut Rng) -> QuantizedBucket {
+    fn quantize_bucket_into(&self, g: &[f32], _rng: &mut Rng, out: &mut QuantizedBucket) {
         // Degenerate exact representation: every element is its own level.
         // Only used in metric paths on small buckets; the wire path skips it.
-        QuantizedBucket {
-            levels: g.to_vec(),
-            indices: (0..g.len()).map(|i| i as u8).collect(),
-        }
+        out.levels.clear();
+        out.levels.extend_from_slice(g);
+        out.indices.clear();
+        out.indices.extend((0..g.len()).map(|i| i as u8));
     }
 }
 

@@ -62,13 +62,12 @@ impl Quantizer for LinearQuantizer {
         true
     }
 
-    fn quantize_bucket(&self, g: &[f32], rng: &mut Rng) -> QuantizedBucket {
+    fn quantize_bucket_into(&self, g: &[f32], rng: &mut Rng, out: &mut QuantizedBucket) {
         let mut sorted = g.to_vec();
         sorted.sort_unstable_by(f32::total_cmp);
-        let levels = Self::quantile_levels(&sorted, self.s);
-        let mut indices = Vec::new();
-        random_round(g, &levels, rng, &mut indices);
-        QuantizedBucket { levels, indices }
+        out.levels.clear();
+        out.levels.extend_from_slice(&Self::quantile_levels(&sorted, self.s));
+        random_round(g, &out.levels, rng, &mut out.indices);
     }
 }
 

@@ -20,6 +20,14 @@
 //! * [`bingrad::BinGradB`] — **BinGrad-b**: deterministic threshold
 //!   quantization with conditional-mean levels from Eq. (17) (biased);
 //! * [`signsgd::SignSgdQuantizer`] — scaled sign (Eq. 13), deterministic.
+//!
+//! Schemes implement [`Quantizer::quantize_bucket_into`], which writes
+//! into a caller-owned [`QuantizedBucket`] so the per-round exchange path
+//! reuses its level/index buffers instead of allocating per bucket; the
+//! allocating [`Quantizer::quantize_bucket`] is a convenience wrapper.
+//! (The sort-based level *solvers* — `orq-S`, `linear-S` — still allocate
+//! internal sort/prefix scratch per bucket; making those zero-alloc is a
+//! tracked follow-up, see ROADMAP.)
 
 pub mod bingrad;
 pub mod bucket;
@@ -41,7 +49,7 @@ use crate::tensor::rng::Rng;
 /// * `levels` is sorted ascending and non-empty for quantizing schemes;
 /// * every index is `< levels.len()`;
 /// * `indices.len() ==` input bucket length.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct QuantizedBucket {
     pub levels: Vec<f32>,
     pub indices: Vec<u8>,
@@ -83,14 +91,40 @@ pub trait Quantizer: Send + Sync {
     /// Whether `E[Q(v)] = v` holds for in-range v (paper Assumption 1).
     fn is_unbiased(&self) -> bool;
 
-    /// Quantize one bucket. `rng` drives random rounding.
-    fn quantize_bucket(&self, g: &[f32], rng: &mut Rng) -> QuantizedBucket;
+    /// Quantize one bucket into a caller-owned output, reusing its level
+    /// and index buffers (the exchange hot path — no per-bucket
+    /// allocation once `out` has capacity). `rng` drives random rounding.
+    fn quantize_bucket_into(&self, g: &[f32], rng: &mut Rng, out: &mut QuantizedBucket);
+
+    /// Quantize one bucket. Allocating convenience wrapper around
+    /// [`Quantizer::quantize_bucket_into`].
+    fn quantize_bucket(&self, g: &[f32], rng: &mut Rng) -> QuantizedBucket {
+        let mut out = QuantizedBucket::default();
+        self.quantize_bucket_into(g, rng, &mut out);
+        out
+    }
+}
+
+/// NaN-free view of one gradient value: NaN maps to 0.0 (a corrupted
+/// element contributes its unbiased-zero surrogate instead of poisoning
+/// level bracketing), ±∞ survive and clamp to the end levels below.
+#[inline]
+fn sanitize(v: f32) -> f32 {
+    if v.is_nan() {
+        0.0
+    } else {
+        v
+    }
 }
 
 /// Random rounding against sorted levels — Eq. (7) of the paper, the exact
 /// mirror of the Pallas kernel in `python/compile/kernels/quantize.py`
 /// (and of `ref.stochastic_quantize_ref`): bracket by counting levels ≤ v,
 /// round up with probability (v − b_lo)/(b_hi − b_lo), clamp outside.
+///
+/// Non-finite input never panics: NaN is treated as 0.0, ±∞ clamp into
+/// the extreme brackets (regression-tested; the old binary-search path
+/// panicked on NaN via `partial_cmp().unwrap()`).
 pub fn random_round(g: &[f32], levels: &[f32], rng: &mut Rng, out: &mut Vec<u8>) {
     debug_assert!(levels.len() >= 2);
     debug_assert!(levels.windows(2).all(|w| w[0] <= w[1]));
@@ -103,6 +137,7 @@ pub fn random_round(g: &[f32], levels: &[f32], rng: &mut Rng, out: &mut Vec<u8>)
         // branches, vectorizes, and mirrors the Pallas kernel exactly
         // (§Perf in EXPERIMENTS.md quantifies the win over binary search).
         for &v in g {
+            let v = sanitize(v);
             let mut lower = 0usize;
             for &b in &levels[1..] {
                 lower += (v >= b) as usize;
@@ -118,15 +153,11 @@ pub fn random_round(g: &[f32], levels: &[f32], rng: &mut Rng, out: &mut Vec<u8>)
         return;
     }
     for &v in g {
-        // lower bracket index in [0, s-2]
-        let mut lower = match levels.binary_search_by(|b| b.partial_cmp(&v).unwrap()) {
-            Ok(i) => i,
-            Err(i) => i.wrapping_sub(1),
-        };
-        if lower == usize::MAX {
-            lower = 0; // v below all levels -> clamp into bottom bracket
-        }
-        lower = lower.min(s - 2);
+        let v = sanitize(v);
+        // lower bracket index in [0, s-2]; partition_point never panics on
+        // non-total orders (v is finite here, levels are finite by the
+        // scheme invariant) and matches the counting loop above exactly.
+        let lower = levels.partition_point(|&b| b <= v).saturating_sub(1).min(s - 2);
         let b_lo = levels[lower];
         let b_hi = levels[lower + 1];
         let width = b_hi - b_lo;
@@ -141,20 +172,17 @@ pub fn random_round(g: &[f32], levels: &[f32], rng: &mut Rng, out: &mut Vec<u8>)
 }
 
 /// Deterministic nearest-level rounding (used by tests and BinGrad-b's
-/// threshold special case is equivalent for s=2).
+/// threshold special case is equivalent for s=2). Same non-finite policy
+/// as [`random_round`]: NaN → 0.0, ±∞ clamp to the end levels.
 pub fn nearest_round(g: &[f32], levels: &[f32], out: &mut Vec<u8>) {
     out.clear();
     out.reserve(g.len());
     let s = levels.len();
     for &v in g {
-        let mut lower = match levels.binary_search_by(|b| b.partial_cmp(&v).unwrap()) {
-            Ok(i) => i,
-            Err(i) => i.wrapping_sub(1),
-        };
-        if lower == usize::MAX {
-            lower = 0;
-        }
-        lower = lower.min(s - 2);
+        // Clamp into the level span so the distance comparison below never
+        // sees an ∞ − ∞ tie (which would mis-pick the lower level).
+        let v = sanitize(v).clamp(levels[0], levels[s - 1]);
+        let lower = levels.partition_point(|&b| b <= v).saturating_sub(1).min(s - 2);
         let idx = if (v - levels[lower]).abs() <= (levels[lower + 1] - v).abs() {
             lower
         } else {
@@ -269,6 +297,41 @@ mod tests {
         assert!((ups - 0.25).abs() < 0.01, "P(up)={ups}");
     }
 
+    /// Regression: NaN gradients must not panic (the old binary-search
+    /// bracketing died in `partial_cmp().unwrap()`); they behave as 0.0,
+    /// and ±∞ clamp to the end levels — on BOTH bracketing paths.
+    #[test]
+    fn random_round_survives_non_finite() {
+        let mut rng = Rng::seed_from(1);
+        let mut out = Vec::new();
+        // s=3 exercises the branch-free path; NaN→0.0 lands exactly on
+        // the middle level, deterministically.
+        let levels3 = [-1.0f32, 0.0, 1.0];
+        let g = [f32::NAN, f32::NEG_INFINITY, f32::INFINITY];
+        for _ in 0..20 {
+            random_round(&g, &levels3, &mut rng, &mut out);
+            assert_eq!(out, vec![1, 0, 2]);
+        }
+        // s=17 exercises the search path (the one that used to panic).
+        let levels17: Vec<f32> = (0..17).map(|i| i as f32 - 8.0).collect();
+        for _ in 0..20 {
+            random_round(&g, &levels17, &mut rng, &mut out);
+            assert_eq!(out, vec![8, 0, 16]);
+        }
+    }
+
+    #[test]
+    fn nearest_round_survives_non_finite() {
+        let levels = [-1.0f32, 0.0, 1.0];
+        let mut out = Vec::new();
+        nearest_round(&[f32::NAN, f32::NEG_INFINITY, f32::INFINITY], &levels, &mut out);
+        assert_eq!(out, vec![1, 0, 2]);
+        // 17 levels: the former binary-search path
+        let levels17: Vec<f32> = (0..17).map(|i| i as f32 - 8.0).collect();
+        nearest_round(&[f32::NAN, f32::NEG_INFINITY, f32::INFINITY], &levels17, &mut out);
+        assert_eq!(out, vec![8, 0, 16]);
+    }
+
     #[test]
     fn nearest_round_ties_and_halves() {
         let levels = [0.0f32, 1.0];
@@ -284,5 +347,26 @@ mod tests {
         let mut buf = vec![0.0; 4];
         qb.dequantize_into(&mut buf);
         assert_eq!(buf, vec![2.0, -1.0, 0.0, 0.0]);
+    }
+
+    /// `quantize_bucket_into` must reuse the output's buffers and agree
+    /// with the allocating wrapper for every scheme.
+    #[test]
+    fn quantize_into_matches_wrapper() {
+        let mut rng = Rng::seed_from(3);
+        let g: Vec<f32> = (0..512).map(|_| rng.gaussian_f32()).collect();
+        for name in paper_methods() {
+            if name == "fp" {
+                continue;
+            }
+            let q = from_name(name).unwrap();
+            let fresh = q.quantize_bucket(&g, &mut Rng::seed_from(7));
+            let mut reused = QuantizedBucket {
+                levels: vec![99.0; 32], // stale garbage must be overwritten
+                indices: vec![255; 700],
+            };
+            q.quantize_bucket_into(&g, &mut Rng::seed_from(7), &mut reused);
+            assert_eq!(fresh, reused, "{name}");
+        }
     }
 }

@@ -74,11 +74,10 @@ impl Quantizer for OrqQuantizer {
         true
     }
 
-    fn quantize_bucket(&self, g: &[f32], rng: &mut Rng) -> QuantizedBucket {
-        let levels = self.levels_for(g);
-        let mut indices = Vec::new();
-        random_round(g, &levels, rng, &mut indices);
-        QuantizedBucket { levels, indices }
+    fn quantize_bucket_into(&self, g: &[f32], rng: &mut Rng, out: &mut QuantizedBucket) {
+        out.levels.clear();
+        out.levels.extend_from_slice(&self.levels_for(g));
+        random_round(g, &out.levels, rng, &mut out.indices);
     }
 }
 

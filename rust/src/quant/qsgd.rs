@@ -24,10 +24,16 @@ impl QsgdQuantizer {
     /// computed first so the grid stays finite up to m = f32::MAX/2
     /// (found by the adversarial-bucket test).
     pub fn grid(s: usize, m: f32) -> Vec<f32> {
+        let mut out = Vec::new();
+        Self::grid_into(s, m, &mut out);
+        out
+    }
+
+    /// [`QsgdQuantizer::grid`] into a reused buffer (cleared first).
+    pub fn grid_into(s: usize, m: f32, out: &mut Vec<f32>) {
         let m = if m > 0.0 { m } else { 1.0 };
-        (0..s)
-            .map(|k| -m + 2.0 * m * (k as f32 / (s - 1) as f32))
-            .collect()
+        out.clear();
+        out.extend((0..s).map(|k| -m + 2.0 * m * (k as f32 / (s - 1) as f32)));
     }
 }
 
@@ -44,12 +50,10 @@ impl Quantizer for QsgdQuantizer {
         true
     }
 
-    fn quantize_bucket(&self, g: &[f32], rng: &mut Rng) -> QuantizedBucket {
+    fn quantize_bucket_into(&self, g: &[f32], rng: &mut Rng, out: &mut QuantizedBucket) {
         let m = SliceStats::compute(g).max_abs();
-        let levels = Self::grid(self.s, m);
-        let mut indices = Vec::new();
-        random_round(g, &levels, rng, &mut indices);
-        QuantizedBucket { levels, indices }
+        Self::grid_into(self.s, m, &mut out.levels);
+        random_round(g, &out.levels, rng, &mut out.indices);
     }
 }
 

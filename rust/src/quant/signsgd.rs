@@ -19,14 +19,14 @@ impl Quantizer for SignSgdQuantizer {
         false
     }
 
-    fn quantize_bucket(&self, g: &[f32], _rng: &mut Rng) -> QuantizedBucket {
+    fn quantize_bucket_into(&self, g: &[f32], _rng: &mut Rng, out: &mut QuantizedBucket) {
         let n = g.len().max(1) as f64;
         let scale = (g.iter().map(|v| v.abs() as f64).sum::<f64>() / n) as f32;
         let scale = if scale > 0.0 { scale } else { 1e-12 };
-        QuantizedBucket {
-            levels: vec![-scale, scale],
-            indices: g.iter().map(|&v| (v >= 0.0) as u8).collect(),
-        }
+        out.levels.clear();
+        out.levels.extend_from_slice(&[-scale, scale]);
+        out.indices.clear();
+        out.indices.extend(g.iter().map(|&v| (v >= 0.0) as u8));
     }
 }
 

@@ -22,15 +22,14 @@ impl Quantizer for TernGradQuantizer {
         true
     }
 
-    fn quantize_bucket(&self, g: &[f32], rng: &mut Rng) -> QuantizedBucket {
+    fn quantize_bucket_into(&self, g: &[f32], rng: &mut Rng, out: &mut QuantizedBucket) {
         let m = SliceStats::compute(g).max_abs();
         // Degenerate all-zero bucket: keep a tiny symmetric range so the
         // level vector stays strictly sorted (everything maps to level 0).
         let m = if m > 0.0 { m } else { 1.0 };
-        let levels = vec![-m, 0.0, m];
-        let mut indices = Vec::new();
-        random_round(g, &levels, rng, &mut indices);
-        QuantizedBucket { levels, indices }
+        out.levels.clear();
+        out.levels.extend_from_slice(&[-m, 0.0, m]);
+        random_round(g, &out.levels, rng, &mut out.indices);
     }
 }
 

@@ -1,0 +1,108 @@
+//! API-compatible stand-in for the PJRT engine when the `pjrt` feature is
+//! off (the default offline build).
+//!
+//! Manifest parsing still works — `orq info` and the meta tests run
+//! unchanged — but anything that would execute HLO returns a clean
+//! [`Error::Xla`] instead of requiring the vendored `xla` bindings.
+
+use std::path::Path;
+
+use super::meta::{Manifest, ModelMeta};
+use crate::data::Batch;
+use crate::error::{Error, Result};
+use crate::model::Backend;
+use crate::tensor::rng::Rng;
+
+fn unavailable() -> Error {
+    Error::Xla(
+        "PJRT runtime not compiled in (rebuild with `--features pjrt` and vendored xla bindings)"
+            .into(),
+    )
+}
+
+/// Stub PJRT client: construction fails cleanly.
+pub struct Engine {
+    _priv: (),
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        Err(unavailable())
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".into()
+    }
+
+    pub fn load_model(&self, manifest: &Manifest, name: &str) -> Result<LoadedModel> {
+        // Keep the manifest-lookup error behavior of the real engine so
+        // "model not found" still beats "pjrt unavailable" in messages.
+        let _ = manifest.find(name)?;
+        Err(unavailable())
+    }
+}
+
+/// Stub compiled model. Never constructible through [`Engine`]; the
+/// methods exist so callers typecheck identically with the feature off.
+pub struct LoadedModel {
+    pub meta: ModelMeta,
+}
+
+impl LoadedModel {
+    pub fn classifier_grad(&self, _params: &[f32], _batch: &Batch) -> Result<(f32, Vec<f32>)> {
+        Err(unavailable())
+    }
+
+    pub fn classifier_logits(&self, _params: &[f32], _batch: &Batch) -> Result<Vec<f32>> {
+        Err(unavailable())
+    }
+
+    pub fn lm_grad(&self, _params: &[f32], _tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
+        Err(unavailable())
+    }
+}
+
+/// Stub backend adapter; `load` validates the manifest, then reports the
+/// missing runtime.
+#[derive(Clone)]
+pub struct PjrtBackend {
+    meta: ModelMeta,
+}
+
+impl PjrtBackend {
+    pub fn new(model: LoadedModel) -> Self {
+        PjrtBackend { meta: model.meta }
+    }
+
+    pub fn load(artifacts_dir: impl AsRef<Path>, model: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let _ = manifest.find(model)?;
+        Err(unavailable())
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> String {
+        format!("pjrt:{}", self.meta.name)
+    }
+
+    fn param_count(&self) -> usize {
+        self.meta.param_count
+    }
+
+    fn num_classes(&self) -> usize {
+        self.meta.classes
+    }
+
+    fn init_params(&self, rng: &mut Rng) -> Vec<f32> {
+        crate::model::init::init_flat(&self.meta.sections, rng)
+    }
+
+    fn loss_grad(&mut self, _params: &[f32], _batch: &Batch, _grad_out: &mut [f32]) -> f32 {
+        panic!("{}", unavailable())
+    }
+
+    fn logits(&mut self, _params: &[f32], _batch: &Batch) -> Vec<f32> {
+        panic!("{}", unavailable())
+    }
+}

@@ -1,6 +1,7 @@
 //! End-to-end coordinator tests: the paper's qualitative orderings must
 //! emerge from full training runs on the synthetic substrate.
 
+use orq::comm::Topology;
 use orq::config::TrainConfig;
 use orq::coordinator::trainer::{native_backend_factory, Trainer};
 use orq::data::synth::{ClassDataset, DatasetSpec};
@@ -37,6 +38,7 @@ fn cfg(method: &str) -> TrainConfig {
         seed: 5,
         eval_every: 0,
         quantize_downlink: false,
+        topology: Topology::Ps,
     }
 }
 

@@ -1,0 +1,197 @@
+//! Topology equivalence: the parameter-server star and the ring
+//! all-reduce are two transports for the SAME exchange semantics — the
+//! mean of the decoded uploads. Swept over the gradient-distribution
+//! families (the proptest role in this offline build):
+//!
+//! * `fp` is lossless on both, so the decoded means must agree (up to
+//!   f32 summation order: PS sums worker-major in f64, the ring folds
+//!   chunk partial sums hop by hop);
+//! * every ring node must decode the bit-identical mean — the invariant
+//!   that keeps parameter replicas in sync without parameter traffic;
+//! * wire bytes must match the closed-form `codec::wire_size` accounting
+//!   exactly, per topology;
+//! * the ring's simulated critical path must agree with the closed-form
+//!   `ring::allreduce_time` model up to per-chunk header overhead.
+
+use orq::codec::{wire_size, Packing};
+use orq::comm::link::Link;
+use orq::comm::{build_topology, ring, run_once, Topology, WireSpec};
+use orq::testutil::{sample, ALL_DISTS};
+use orq::tensor::rng::Rng;
+
+fn spec(method: &str, bucket: usize) -> WireSpec {
+    WireSpec { seed: 5, ..WireSpec::new(method, bucket) }
+}
+
+fn grads(n: usize, workers: usize, dist_seed: u64) -> Vec<Vec<f32>> {
+    let dist = ALL_DISTS[(dist_seed as usize) % ALL_DISTS.len()];
+    let mut rng = Rng::stream(900 + dist_seed, dist_seed);
+    (0..workers).map(|_| sample(dist, n, 1.0, &mut rng)).collect()
+}
+
+/// Exact mean in f64 (the semantics both topologies approximate).
+fn exact_mean(gs: &[Vec<f32>]) -> Vec<f32> {
+    let n = gs[0].len();
+    let inv = 1.0 / gs.len() as f64;
+    (0..n)
+        .map(|i| (gs.iter().map(|g| g[i] as f64).sum::<f64>() * inv) as f32)
+        .collect()
+}
+
+#[test]
+fn fp_means_agree_across_topologies() {
+    let link = Link::ten_gbps();
+    for dist_seed in 0..ALL_DISTS.len() as u64 {
+        for workers in [1usize, 2, 3, 5] {
+            let gs = grads(1536, workers, dist_seed);
+            let sp = spec("fp", 256);
+            let (ps_mean, _) = run_once(Topology::Ps, link, &sp, false, &gs).unwrap();
+            let (ring_mean, _) = run_once(Topology::Ring, link, &sp, false, &gs).unwrap();
+            assert_eq!(ps_mean.len(), 1536);
+            assert_eq!(ring_mean.len(), 1536);
+            let exact = exact_mean(&gs);
+            for (i, ((p, r), e)) in ps_mean.iter().zip(&ring_mean).zip(&exact).enumerate() {
+                let tol = 1e-5f32 * (1.0 + e.abs());
+                assert!(
+                    (p - e).abs() <= tol,
+                    "dist {dist_seed} L={workers} ps[{i}]={p} exact={e}"
+                );
+                assert!(
+                    (r - e).abs() <= tol,
+                    "dist {dist_seed} L={workers} ring[{i}]={r} exact={e}"
+                );
+            }
+        }
+    }
+}
+
+/// Every ring node must apply the bit-identical decoded mean — quantized
+/// schemes included (all-gather forwards final encoded chunks verbatim).
+#[test]
+fn ring_mean_bit_identical_on_every_node() {
+    let link = Link::ten_gbps();
+    for method in ["fp", "terngrad", "orq-5"] {
+        let workers = 4;
+        let gs = grads(2048, workers, 1);
+        let sp = spec(method, 256);
+        let (mut coll, ends) = build_topology(Topology::Ring, workers, link, &sp, false).unwrap();
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, Vec<f32>)>();
+        let mut coord_mean = Vec::new();
+        std::thread::scope(|scope| {
+            for (w, mut wx) in ends.into_iter().enumerate() {
+                let g: &[f32] = &gs[w];
+                let sp = sp.clone();
+                let tx = tx.clone();
+                scope.spawn(move || {
+                    let gc = orq::comm::GradCodec::new(&sp).unwrap();
+                    let mut rng = Rng::stream(sp.seed, 2_000 + w as u64);
+                    let mut qg = orq::quant::bucket::QuantizedGrad::default();
+                    let mut msg = Vec::new();
+                    gc.encode_into(g, &mut rng, &mut qg, &mut msg);
+                    let mut mean = Vec::new();
+                    wx.exchange(&mut msg, &mut mean).unwrap();
+                    tx.send((w, mean)).unwrap();
+                });
+            }
+            coll.round(&mut coord_mean).unwrap();
+        });
+        drop(tx);
+        let mut means: Vec<(usize, Vec<f32>)> = rx.iter().collect();
+        means.sort_by_key(|(w, _)| *w);
+        assert_eq!(means.len(), workers, "{method}");
+        for (w, m) in &means {
+            assert_eq!(m, &means[0].1, "{method}: node {w} diverged from node 0");
+        }
+        assert_eq!(coord_mean, means[0].1, "{method}: coordinator mean diverged");
+    }
+}
+
+#[test]
+fn wire_bytes_match_codec_accounting_exactly() {
+    let link = Link::ten_gbps();
+    // n = L·d·k keeps every ring chunk equal-sized and non-empty, so the
+    // closed-form per-chunk sizes apply verbatim.
+    let workers = 4;
+    let d = 128;
+    let n = workers * d * 3; // 12 buckets → 3 per chunk
+    for (method, s) in [("terngrad", 3usize), ("orq-5", 5), ("fp", 0)] {
+        let gs = grads(n, workers, 2);
+        let sp = spec(method, d);
+        // PS: L quantized uplinks + 1 FP broadcast.
+        let (_, ps) = run_once(Topology::Ps, link, &sp, false, &gs).unwrap();
+        let up = wire_size(n, d, s, Packing::BaseS, method) as u64;
+        let down = wire_size(n, n.max(1), 0, Packing::BaseS, "fp") as u64;
+        assert_eq!(ps.wire_bytes, workers as u64 * up + down, "{method} ps bytes");
+        assert_eq!(ps.messages, workers as u64 + 1, "{method} ps messages");
+        // Ring: every chunk crosses 2(L−1) edges, each message an
+        // independently-headered chunk of n/L elements.
+        let (_, rg) = run_once(Topology::Ring, link, &sp, false, &gs).unwrap();
+        let chunk_msg = wire_size(n / workers, d, s, Packing::BaseS, method) as u64;
+        let hops = 2 * (workers as u64 - 1);
+        assert_eq!(rg.wire_bytes, hops * workers as u64 * chunk_msg, "{method} ring bytes");
+        assert_eq!(rg.messages, hops * workers as u64, "{method} ring messages");
+    }
+}
+
+#[test]
+fn ring_sim_time_matches_model_up_to_headers() {
+    let link = Link::ten_gbps();
+    let workers = 8;
+    let d = 512;
+    let n = workers * d * 32; // 131072 elements, equal chunks
+    let gs = grads(n, workers, 3);
+    let sp = spec("fp", d);
+    let (_, rg) = run_once(Topology::Ring, link, &sp, false, &gs).unwrap();
+    // Exact prediction: 2(L−1) steps, every node ships an equal fp chunk
+    // message, so the per-step max equals any single transfer.
+    let chunk_msg = wire_size(n / workers, d, 0, Packing::BaseS, "fp");
+    let exact = 2.0 * (workers - 1) as f64 * link.transfer_time(chunk_msg);
+    assert!((rg.sim_time_s - exact).abs() < 1e-12, "measured {} vs exact {exact}", rg.sim_time_s);
+    // The closed-form model ignores the 22-byte per-message header, so it
+    // is a strict but tight lower bound at this scale.
+    let model = ring::allreduce_time(&link, workers, n * 4);
+    assert!(rg.sim_time_s > model, "headers make measured > model");
+    assert!(rg.sim_time_s < model * 1.01, "within 1%: {} vs {model}", rg.sim_time_s);
+}
+
+/// Quantized ring exchange: per-hop requantization is lossy, but the
+/// decoded mean must stay a faithful direction estimate of the exact
+/// mean, on every distribution family.
+#[test]
+fn quantized_ring_mean_tracks_exact_mean() {
+    let link = Link::ten_gbps();
+    for dist_seed in 0..ALL_DISTS.len() as u64 {
+        let workers = 4;
+        let gs = grads(4096, workers, dist_seed);
+        let exact = exact_mean(&gs);
+        // ORQ's distribution-adaptive levels keep the estimate faithful
+        // even on the heavy-tailed families (the paper's selling point).
+        let sp = spec("orq-5", 512);
+        let (ring_mean, _) = run_once(Topology::Ring, link, &sp, false, &gs).unwrap();
+        let cos = orq::tensor::cosine(&ring_mean, &exact);
+        assert!(cos > 0.25, "dist {dist_seed}: ring mean decorrelated, cosine={cos}");
+        let (ps_mean, _) = run_once(Topology::Ps, link, &sp, false, &gs).unwrap();
+        let cos_ps = orq::tensor::cosine(&ps_mean, &exact);
+        assert!(cos_ps > 0.25, "dist {dist_seed}: ps cosine={cos_ps}");
+    }
+}
+
+/// Ragged case: n not divisible by L·d still covers every element —
+/// uneven (and possibly empty) chunks must round-trip.
+#[test]
+fn ring_handles_ragged_and_empty_chunks() {
+    let link = Link::ten_gbps();
+    for (n, workers, d) in [(1000usize, 3usize, 128usize), (100, 6, 64), (5, 4, 2), (1, 3, 4)] {
+        let gs = grads(n, workers, 4);
+        let sp = spec("fp", d);
+        let (ring_mean, _) = run_once(Topology::Ring, link, &sp, false, &gs).unwrap();
+        let exact = exact_mean(&gs);
+        assert_eq!(ring_mean.len(), n, "n={n} L={workers} d={d}");
+        for (i, (r, e)) in ring_mean.iter().zip(&exact).enumerate() {
+            assert!(
+                (r - e).abs() <= 1e-5 * (1.0 + e.abs()),
+                "n={n} L={workers} d={d} i={i}"
+            );
+        }
+    }
+}
