@@ -1,11 +1,14 @@
 //! Bucket-size sweep (Table 3 in miniature): accuracy of ORQ-3 vs
 //! TernGrad as the bucket size d grows — ORQ should degrade more slowly.
 //!
-//! Runs on either exchange topology; `--topology ring` exercises the
-//! decode-reduce-requantize ring all-reduce end-to-end (2 workers), where
-//! per-hop requantization adds extra error on top of the bucket effect.
+//! Runs on any exchange topology; `--topology ring` exercises the
+//! decode-reduce-requantize ring all-reduce end-to-end (2 workers), and
+//! `--topology hier [--groups N]` the two-level hierarchy (4 workers in
+//! 2 groups by default), where intra-hop + leader requantization adds
+//! extra error on top of the bucket effect.
 //!
-//! Run: `cargo run --release --example bucket_sweep -- [--steps N] [--topology ps|ring] [--workers N]`
+//! Run: `cargo run --release --example bucket_sweep -- [--steps N]
+//!       [--topology ps|ring|hier] [--workers N] [--groups N]`
 
 use orq::bench::print_rows;
 use orq::cli::Args;
@@ -16,12 +19,17 @@ use orq::data::synth::{ClassDataset, DatasetSpec};
 
 fn main() -> orq::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
-    args.check_known(&["steps", "topology", "workers"])?;
+    args.check_known(&["steps", "topology", "workers", "groups"])?;
     let steps = args.get_parse::<usize>("steps")?.unwrap_or(250);
     let topology = args.get_parse::<Topology>("topology")?.unwrap_or_default();
-    let workers = args
-        .get_parse::<usize>("workers")?
-        .unwrap_or(if topology == Topology::Ring { 2 } else { 1 });
+    let workers = args.get_parse::<usize>("workers")?.unwrap_or(match topology {
+        Topology::Ring => 2,
+        Topology::Hier => 4,
+        Topology::Ps => 1,
+    });
+    let groups = args
+        .get_parse::<usize>("groups")?
+        .unwrap_or(if topology == Topology::Hier { 2.min(workers) } else { 1 });
 
     let ds = ClassDataset::generate(DatasetSpec::cifar10_like(64));
     let buckets = [128usize, 512, 2048, 8192, 32768];
@@ -41,6 +49,7 @@ fn main() -> orq::Result<()> {
                 lr: 0.08,
                 lr_decay_steps: vec![steps / 2, steps * 3 / 4],
                 topology,
+                groups,
                 ..TrainConfig::default()
             };
             let factory = native_backend_factory(&cfg.model)?;
@@ -48,7 +57,12 @@ fn main() -> orq::Result<()> {
             row.push(format!("{:.2}", out.summary.test_top1 * 100.0));
         }
         rows.push(row);
-        println!("{method}: swept {} bucket sizes on {topology} ({workers} workers)", buckets.len());
+        let shape = if topology == Topology::Hier {
+            format!("{topology} ({workers} workers, {groups} groups)")
+        } else {
+            format!("{topology} ({workers} workers)")
+        };
+        println!("{method}: swept {} bucket sizes on {shape}", buckets.len());
     }
     let labels: Vec<String> = buckets.iter().map(|b| b.to_string()).collect();
     let mut header = vec!["method"];

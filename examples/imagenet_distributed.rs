@@ -41,6 +41,8 @@ fn main() -> orq::Result<()> {
         eval_every: (steps / 10).max(1),
         quantize_downlink: false,
         topology: orq::comm::Topology::Ps,
+        groups: 1,
+        links: orq::config::LinkConfig::default(),
     };
     println!("imagenet_distributed: {method}, 4 workers, d=512, clip 2.5σ, {steps} steps");
     let factory = native_backend_factory(&cfg.model)?;

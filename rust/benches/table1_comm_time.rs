@@ -1,14 +1,14 @@
 //! Table 1: #parameters and communication time of one gradient at
 //! 10 Gbps for the paper's model zoo — extended with the wire sizes and
 //! times of every quantization scheme (exact codec accounting), plus the
-//! ring-all-reduce comparison the paper mentions in §4: the closed-form
-//! model AND a measured round over the real executable topologies
-//! (`comm::run_once`), side by side.
+//! topology comparison the paper motivates in §4: the closed-form models
+//! (PS star, ring all-reduce, two-level hierarchy) AND measured rounds
+//! over the real executable topologies (`comm::run_once`), side by side.
 
 use orq::bench::print_rows;
 use orq::codec::{wire_size, Packing};
-use orq::comm::link::Link;
-use orq::comm::{ring, run_once, Topology, WireSpec};
+use orq::comm::link::{Link, LinkMap};
+use orq::comm::{hier, ring, run_once, ExchangeConfig, Topology, WireSpec};
 use orq::tensor::rng::Rng;
 use orq::util::fmt;
 
@@ -104,8 +104,10 @@ fn main() {
             .collect();
         for (scheme, s) in [("fp", 0usize), ("terngrad", 3)] {
             let spec = WireSpec { seed: 7, ..WireSpec::new(scheme, d) };
-            let (_, ps) = run_once(Topology::Ps, link, &spec, false, &grads).expect("ps round");
-            let (_, rg) = run_once(Topology::Ring, link, &spec, false, &grads).expect("ring round");
+            let ps_cfg = ExchangeConfig::flat(Topology::Ps, link);
+            let ring_cfg = ExchangeConfig::flat(Topology::Ring, link);
+            let (_, ps) = run_once(&ps_cfg, &spec, &grads).expect("ps round");
+            let (_, rg) = run_once(&ring_cfg, &spec, &grads).expect("ring round");
             let one = wire_size(n_elems, d, s, Packing::BaseS, scheme);
             rows.push(vec![
                 format!("{workers} workers"),
@@ -120,6 +122,58 @@ fn main() {
     print_rows(
         "Topology (measured, 2.1M elements over real channels): PS vs ring vs ring model",
         &["cluster", "scheme", "PS measured", "ring measured", "ring model", "ring bytes"],
+        &rows,
+    );
+
+    // --- hierarchical topology on a heterogeneous cluster: fast
+    // 100 Gbps intra-rack links, slow 1 Gbps / 5 ms cross-rack links
+    // (the TernGrad-style scenario that motivates compressing harder on
+    // the inter-node edges). Measured rounds over the real two-level
+    // collective next to the closed-form `hier::hier_time` model; the
+    // measured figure pays exact per-chunk header/level-table overhead.
+    let links = LinkMap::new(Link::new(100e9, 1e-6), Link::new(1e9, 0.005));
+    let n_elems = 1usize << 21;
+    let mut rows = Vec::new();
+    for (workers, groups) in [(8usize, 2usize), (8, 4), (16, 4)] {
+        let mut rng = Rng::seed_from(42);
+        let grads: Vec<Vec<f32>> = (0..workers)
+            .map(|_| {
+                let mut g = vec![0.0f32; n_elems];
+                rng.fill_gaussian(&mut g, 1e-3);
+                g
+            })
+            .collect();
+        for (scheme, s) in [("fp", 0usize), ("terngrad", 3)] {
+            let spec = WireSpec { seed: 7, ..WireSpec::new(scheme, d) };
+            let hier_cfg = ExchangeConfig::hier(groups, links);
+            let (_, h) = run_once(&hier_cfg, &spec, &grads).expect("hier round");
+            let ps_cfg = ExchangeConfig { links, ..ExchangeConfig::flat(Topology::Ps, link) };
+            let (_, ps) = run_once(&ps_cfg, &spec, &grads).expect("ps round");
+            let q_bytes = wire_size(n_elems, d, s, Packing::BaseS, scheme);
+            let fp_bytes = n_elems * 4;
+            let model = hier::hier_time(&links, workers, groups, q_bytes, fp_bytes);
+            rows.push(vec![
+                format!("{workers}w/{groups}g"),
+                scheme.to_string(),
+                fmt::duration(h.sim_time_s),
+                fmt::duration(model),
+                fmt::duration(ps.sim_time_s),
+                fmt::bytes(h.wire_bytes_intra),
+                fmt::bytes(h.wire_bytes_inter),
+            ]);
+        }
+    }
+    print_rows(
+        "Hierarchical (measured, 100G intra / 1G+5ms inter): hier vs model vs flat PS",
+        &[
+            "cluster",
+            "scheme",
+            "hier measured",
+            "hier model",
+            "PS measured",
+            "intra bytes",
+            "inter bytes",
+        ],
         &rows,
     );
 }

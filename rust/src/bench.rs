@@ -239,6 +239,8 @@ pub mod suite {
             eval_every: 0,
             quantize_downlink: false,
             topology: crate::comm::Topology::Ps,
+            groups: 1,
+            links: crate::config::LinkConfig::default(),
         }
     }
 

@@ -90,7 +90,9 @@ orq — optimal gradient quantization for distributed training (ORQ/BinGrad)
 USAGE:
   orq train [--config FILE] [--model M] [--method Q] [--workers N]
             [--steps N] [--batch N] [--dataset D] [--bucket N] [--clip C]
-            [--topology ps|ring] [--backend native|pjrt]
+            [--topology ps|ring|hier] [--groups N] [--backend native|pjrt]
+            [--intra-bandwidth BPS] [--intra-latency S]
+            [--inter-bandwidth BPS] [--inter-latency S]
             [--artifacts DIR] [--out DIR] [--seed N]
   orq info  [--artifacts DIR]          inspect the AOT artifact manifest
   orq demo  [--method Q] [--n N]       quantize a synthetic gradient, show stats
@@ -99,7 +101,10 @@ USAGE:
 METHODS: fp, signsgd, bingrad-pb, bingrad-b, terngrad, qsgd-S, linear-S, orq-S
 MODELS (native): mlp_s, mlp_m, mlp_l, mlp:d0-d1-...  (pjrt): names from meta.json
 DATASETS: cifar10, cifar100, imagenet
-TOPOLOGIES: ps (parameter-server star), ring (decode-reduce-requantize all-reduce)
+TOPOLOGIES: ps (parameter-server star), ring (decode-reduce-requantize all-reduce),
+            hier (intra-group rings + leader star; --groups must divide --workers)
+LINKS: per edge class — intra (in-group) vs inter (cross-group / flat edges);
+       bandwidth in bits/s, one-way latency in seconds (default 10e9 / 0)
 ";
 
 #[cfg(test)]

@@ -13,12 +13,15 @@
 //!   returns the same decoded mean, and owns the exact wire-byte and
 //!   simulated-time accounting ([`CommStats`]).
 //!
-//! Two real implementations exist, both over `std::sync::mpsc` channels:
-//! the star in [`super::ps`] and the decode-reduce-requantize ring in
-//! [`super::ring`]. [`build_topology`] constructs either from a
-//! [`Topology`] tag, and [`run_once`] drives a single round with scoped
-//! threads — the entry point the Table 1 bench and the equivalence tests
-//! use.
+//! Three real implementations exist, all over `std::sync::mpsc` channels:
+//! the star in [`super::ps`], the decode-reduce-requantize ring in
+//! [`super::ring`], and the two-level hierarchy in [`super::hier`].
+//! [`build_topology`] constructs any of them from an [`ExchangeConfig`]
+//! (topology tag + per-edge-class [`LinkMap`] + grouping), and
+//! [`run_once`] drives a single round with scoped threads — the entry
+//! point the Table 1 bench and the equivalence tests use.
+
+use std::sync::mpsc::Receiver;
 
 use crate::codec::{self, Packing};
 use crate::error::{Error, Result};
@@ -26,7 +29,8 @@ use crate::quant::bucket::{BucketQuantizer, QuantizedGrad};
 use crate::quant::{self, Quantizer};
 use crate::tensor::rng::Rng;
 
-use super::link::Link;
+use super::hier::HierarchicalCollective;
+use super::link::{Link, LinkMap};
 use super::ps::PsCollective;
 use super::ring::RingAllReduce;
 
@@ -39,6 +43,9 @@ pub enum Topology {
     /// Decentralized ring all-reduce: reduce-scatter + all-gather with
     /// decode → partial-reduce → requantize at every hop.
     Ring,
+    /// Two-level hierarchy: intra-group rings + a leader star
+    /// (`groups` in [`ExchangeConfig`] sets the partition).
+    Hier,
 }
 
 impl Topology {
@@ -46,8 +53,9 @@ impl Topology {
         match s {
             "ps" | "star" => Ok(Topology::Ps),
             "ring" => Ok(Topology::Ring),
+            "hier" | "hierarchical" => Ok(Topology::Hier),
             other => Err(Error::InvalidArg(format!(
-                "unknown topology {other:?} (use ps or ring)"
+                "unknown topology {other:?} (use ps, ring or hier)"
             ))),
         }
     }
@@ -56,6 +64,7 @@ impl Topology {
         match self {
             Topology::Ps => "ps",
             Topology::Ring => "ring",
+            Topology::Hier => "hier",
         }
     }
 }
@@ -74,13 +83,108 @@ impl std::str::FromStr for Topology {
     }
 }
 
-/// Cumulative exchange accounting: exact wire bytes, simulated
-/// communication seconds on the critical path, and message count.
+/// Cumulative exchange accounting: exact wire bytes (total and per edge
+/// class), simulated communication seconds on the critical path, and
+/// message count.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CommStats {
     pub wire_bytes: u64,
+    /// Bytes that crossed fast intra-group edges. Zero for flat
+    /// topologies (every worker is its own group, so all of their edges
+    /// are inter-class).
+    pub wire_bytes_intra: u64,
+    /// Bytes that crossed slow inter-group edges.
+    pub wire_bytes_inter: u64,
     pub sim_time_s: f64,
     pub messages: u64,
+}
+
+/// Everything that shapes the exchange *transport* (as opposed to the
+/// wire format, which is [`WireSpec`]): topology, worker grouping, and
+/// the per-edge-class link model.
+#[derive(Debug, Clone)]
+pub struct ExchangeConfig {
+    pub topology: Topology,
+    /// Worker groups for [`Topology::Hier`] (must divide the worker
+    /// count). Flat topologies require 1.
+    pub groups: usize,
+    pub links: LinkMap,
+    /// Quantize the PS broadcast too (paper §4 option b). PS only: the
+    /// ring requantizes every hop by construction and the hierarchy's
+    /// mean multicast is FP by construction.
+    pub quantize_downlink: bool,
+}
+
+impl ExchangeConfig {
+    /// A flat (ps/ring) topology over a homogeneous link.
+    pub fn flat(topology: Topology, link: Link) -> ExchangeConfig {
+        ExchangeConfig {
+            topology,
+            groups: 1,
+            links: LinkMap::uniform(link),
+            quantize_downlink: false,
+        }
+    }
+
+    /// The hierarchical topology with `groups` groups over a
+    /// heterogeneous link map.
+    pub fn hier(groups: usize, links: LinkMap) -> ExchangeConfig {
+        ExchangeConfig { topology: Topology::Hier, groups, links, quantize_downlink: false }
+    }
+
+    pub fn with_downlink(mut self, quantize_downlink: bool) -> ExchangeConfig {
+        self.quantize_downlink = quantize_downlink;
+        self
+    }
+
+    /// Validate grouping and downlink options against a worker count.
+    pub fn validate(&self, workers: usize) -> Result<()> {
+        match self.topology {
+            Topology::Hier => {
+                if self.groups == 0 || (workers > 0 && workers % self.groups != 0) {
+                    return Err(Error::InvalidArg(format!(
+                        "groups ({}) must be a positive divisor of the worker count ({workers})",
+                        self.groups
+                    )));
+                }
+                if self.quantize_downlink {
+                    return Err(Error::InvalidArg(
+                        "quantize_downlink applies to the parameter-server broadcast; \
+                         the hierarchical mean multicast is FP by construction \
+                         (drop the flag or use --topology ps)"
+                            .into(),
+                    ));
+                }
+            }
+            Topology::Ring => {
+                if self.quantize_downlink {
+                    // Refuse rather than silently no-op: the flag is a PS
+                    // downlink option; the ring requantizes at every hop by
+                    // construction, so there is no broadcast to quantize.
+                    return Err(Error::InvalidArg(
+                        "quantize_downlink applies to the parameter-server broadcast; \
+                         the ring topology has no downlink (drop the flag or use --topology ps)"
+                            .into(),
+                    ));
+                }
+                if self.groups != 1 {
+                    return Err(Error::InvalidArg(format!(
+                        "groups ({}) only applies to the hier topology",
+                        self.groups
+                    )));
+                }
+            }
+            Topology::Ps => {
+                if self.groups != 1 {
+                    return Err(Error::InvalidArg(format!(
+                        "groups ({}) only applies to the hier topology",
+                        self.groups
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Everything a topology needs to know about the wire format: how
@@ -165,6 +269,50 @@ impl GradCodec {
     }
 }
 
+/// One worker's per-round transmission trace on a topology's global
+/// synchronous step grid: `step_bytes[k]` is the bytes that worker sent
+/// in step `k` (0 = silent that step). Shared by the ring and
+/// hierarchical coordinators' critical-path accounting.
+pub(crate) struct RoundTrace {
+    pub(crate) worker: usize,
+    pub(crate) step_bytes: Vec<usize>,
+}
+
+/// Collect exactly one `steps`-slot trace from each of `l` workers,
+/// validating worker ids, duplicates, and record lengths; returns the
+/// traces indexed by worker id. `what` names the topology in errors.
+pub(crate) fn collect_traces(
+    rx: &Receiver<RoundTrace>,
+    l: usize,
+    steps: usize,
+    what: &str,
+) -> Result<Vec<Vec<usize>>> {
+    let mut traces: Vec<Option<Vec<usize>>> = (0..l).map(|_| None).collect();
+    for _ in 0..l {
+        let t = rx
+            .recv()
+            .map_err(|_| Error::Comm(format!("{what} worker died mid-round")))?;
+        if t.worker >= l {
+            return Err(Error::Comm(format!("unknown {what} worker {}", t.worker)));
+        }
+        if traces[t.worker].is_some() {
+            return Err(Error::Comm(format!(
+                "duplicate trace from {what} worker {}",
+                t.worker
+            )));
+        }
+        if t.step_bytes.len() != steps {
+            return Err(Error::Comm(format!(
+                "{what} worker {} sent {} step records, expected {steps}",
+                t.worker,
+                t.step_bytes.len()
+            )));
+        }
+        traces[t.worker] = Some(t.step_bytes);
+    }
+    Ok(traces.into_iter().map(|t| t.expect("all slots filled")).collect())
+}
+
 /// Coordinator end of a topology (lives on the trainer's main thread).
 pub trait Collective: Send {
     fn num_workers(&self) -> usize;
@@ -195,32 +343,30 @@ pub type TopologyEnds = (Box<dyn Collective>, Vec<Box<dyn WorkerExchange>>);
 
 /// Construct a topology's two ends.
 pub fn build_topology(
-    topology: Topology,
+    cfg: &ExchangeConfig,
     workers: usize,
-    link: Link,
     spec: &WireSpec,
-    quantize_downlink: bool,
 ) -> Result<TopologyEnds> {
-    match topology {
+    cfg.validate(workers)?;
+    match cfg.topology {
         Topology::Ps => {
-            let (coord, ends) = PsCollective::new(workers, link, spec, quantize_downlink)?;
+            let (coord, ends) =
+                PsCollective::new(workers, cfg.links, spec, cfg.quantize_downlink)?;
             Ok((
                 Box::new(coord),
                 ends.into_iter().map(|e| Box::new(e) as Box<dyn WorkerExchange>).collect(),
             ))
         }
         Topology::Ring => {
-            if quantize_downlink {
-                // Refuse rather than silently no-op: the flag is a PS
-                // downlink option; the ring requantizes at every hop by
-                // construction, so there is no broadcast to quantize.
-                return Err(Error::InvalidArg(
-                    "quantize_downlink applies to the parameter-server broadcast; \
-                     the ring topology has no downlink (drop the flag or use --topology ps)"
-                        .into(),
-                ));
-            }
-            let (coord, ends) = RingAllReduce::new(workers, link, spec)?;
+            let (coord, ends) = RingAllReduce::new(workers, cfg.links, spec)?;
+            Ok((
+                Box::new(coord),
+                ends.into_iter().map(|e| Box::new(e) as Box<dyn WorkerExchange>).collect(),
+            ))
+        }
+        Topology::Hier => {
+            let (coord, ends) =
+                HierarchicalCollective::new(workers, cfg.groups, cfg.links, spec)?;
             Ok((
                 Box::new(coord),
                 ends.into_iter().map(|e| Box::new(e) as Box<dyn WorkerExchange>).collect(),
@@ -234,13 +380,11 @@ pub fn build_topology(
 /// return the decoded mean and the round's stats. Used by the Table 1
 /// bench ("measured" columns) and the topology-equivalence tests.
 pub fn run_once(
-    topology: Topology,
-    link: Link,
+    cfg: &ExchangeConfig,
     spec: &WireSpec,
-    quantize_downlink: bool,
     grads: &[Vec<f32>],
 ) -> Result<(Vec<f32>, CommStats)> {
-    let (mut coll, ends) = build_topology(topology, grads.len(), link, spec, quantize_downlink)?;
+    let (mut coll, ends) = build_topology(cfg, grads.len(), spec)?;
     let mut mean = Vec::new();
     let res: Result<CommStats> = std::thread::scope(|scope| {
         for (w, mut wx) in ends.into_iter().enumerate() {
@@ -280,10 +424,39 @@ mod tests {
         assert_eq!(Topology::parse("ps").unwrap(), Topology::Ps);
         assert_eq!(Topology::parse("star").unwrap(), Topology::Ps);
         assert_eq!(Topology::parse("ring").unwrap(), Topology::Ring);
+        assert_eq!(Topology::parse("hier").unwrap(), Topology::Hier);
+        assert_eq!(Topology::parse("hierarchical").unwrap(), Topology::Hier);
         assert!(Topology::parse("mesh").is_err());
         assert_eq!(Topology::Ring.to_string(), "ring");
+        assert_eq!(Topology::Hier.to_string(), "hier");
         assert_eq!("ps".parse::<Topology>().unwrap(), Topology::Ps);
         assert_eq!(Topology::default(), Topology::Ps);
+    }
+
+    #[test]
+    fn exchange_config_validation() {
+        let link = Link::ten_gbps();
+        // flat topologies reject groups != 1
+        let mut c = ExchangeConfig::flat(Topology::Ps, link);
+        c.groups = 2;
+        assert!(c.validate(4).is_err());
+        let mut c = ExchangeConfig::flat(Topology::Ring, link);
+        c.groups = 2;
+        assert!(c.validate(4).is_err());
+        // hier needs a positive divisor of the worker count
+        assert!(ExchangeConfig::hier(3, LinkMap::uniform(link)).validate(4).is_err());
+        assert!(ExchangeConfig::hier(0, LinkMap::uniform(link)).validate(4).is_err());
+        assert!(ExchangeConfig::hier(2, LinkMap::uniform(link)).validate(4).is_ok());
+        // downlink quantization is PS-only
+        assert!(ExchangeConfig::flat(Topology::Ps, link).with_downlink(true).validate(2).is_ok());
+        assert!(ExchangeConfig::flat(Topology::Ring, link)
+            .with_downlink(true)
+            .validate(2)
+            .is_err());
+        assert!(ExchangeConfig::hier(2, LinkMap::uniform(link))
+            .with_downlink(true)
+            .validate(2)
+            .is_err());
     }
 
     #[test]
@@ -317,16 +490,27 @@ mod tests {
     #[test]
     fn build_topology_rejects_bad_method() {
         let spec = WireSpec::new("not-a-method", 64);
-        assert!(build_topology(Topology::Ps, 2, Link::ten_gbps(), &spec, false).is_err());
-        assert!(build_topology(Topology::Ring, 2, Link::ten_gbps(), &spec, false).is_err());
+        let link = Link::ten_gbps();
+        assert!(build_topology(&ExchangeConfig::flat(Topology::Ps, link), 2, &spec).is_err());
+        assert!(build_topology(&ExchangeConfig::flat(Topology::Ring, link), 2, &spec).is_err());
+        let hier = ExchangeConfig::hier(2, LinkMap::uniform(link));
+        assert!(build_topology(&hier, 2, &spec).is_err());
     }
 
     #[test]
-    fn ring_rejects_downlink_quantization() {
+    fn ring_and_hier_reject_downlink_quantization() {
         let spec = WireSpec::new("terngrad", 64);
-        assert!(build_topology(Topology::Ring, 2, Link::ten_gbps(), &spec, true).is_err());
-        assert!(build_topology(Topology::Ring, 2, Link::ten_gbps(), &spec, false).is_ok());
-        assert!(build_topology(Topology::Ps, 2, Link::ten_gbps(), &spec, true).is_ok());
+        let link = Link::ten_gbps();
+        let ring_q = ExchangeConfig::flat(Topology::Ring, link).with_downlink(true);
+        assert!(build_topology(&ring_q, 2, &spec).is_err());
+        let ring = ExchangeConfig::flat(Topology::Ring, link);
+        assert!(build_topology(&ring, 2, &spec).is_ok());
+        let ps_q = ExchangeConfig::flat(Topology::Ps, link).with_downlink(true);
+        assert!(build_topology(&ps_q, 2, &spec).is_ok());
+        let hier_q = ExchangeConfig::hier(2, LinkMap::uniform(link)).with_downlink(true);
+        assert!(build_topology(&hier_q, 4, &spec).is_err());
+        let hier = ExchangeConfig::hier(2, LinkMap::uniform(link));
+        assert!(build_topology(&hier, 4, &spec).is_ok());
     }
 
     /// A coordinator-side error (mismatched upload shapes) must surface as
@@ -336,7 +520,19 @@ mod tests {
     fn run_once_surfaces_shape_errors_instead_of_hanging() {
         let spec = WireSpec::new("fp", 64);
         let grads = vec![vec![0.5f32; 128], vec![0.5f32; 256]];
-        let err = run_once(Topology::Ps, Link::ten_gbps(), &spec, false, &grads);
+        let err = run_once(&ExchangeConfig::flat(Topology::Ps, Link::ten_gbps()), &spec, &grads);
+        assert!(err.is_err(), "mismatched gradient lengths must error");
+    }
+
+    /// Same property for the hierarchy: a mismatched contribution inside a
+    /// group must error out of the round, not hang the scoped join.
+    #[test]
+    fn hier_run_once_surfaces_shape_errors_instead_of_hanging() {
+        let spec = WireSpec::new("fp", 64);
+        let grads =
+            vec![vec![0.5f32; 128], vec![0.5f32; 256], vec![0.5f32; 128], vec![0.5f32; 128]];
+        let cfg = ExchangeConfig::hier(2, LinkMap::uniform(Link::ten_gbps()));
+        let err = run_once(&cfg, &spec, &grads);
         assert!(err.is_err(), "mismatched gradient lengths must error");
     }
 }

@@ -1,0 +1,658 @@
+//! Hierarchical two-level collective: intra-group ring reduction over
+//! fast links, a leader star over slow links, results broadcast back down.
+//!
+//! The ROADMAP's hierarchical/tree follow-up to PR 1, motivated by the
+//! heterogeneous clusters of §1: TernGrad-style compression pays off
+//! precisely on slow inter-node links, so the topology should localize as
+//! much traffic as possible onto the fast intra-group edges. Workers are
+//! partitioned into `groups` equal groups (`--groups N`, config
+//! `groups = N`); a round runs four phases:
+//!
+//! 1. **Intra reduce-scatter** (fast [`EdgeClass::Intra`] edges): each
+//!    group of m members runs the PR 1 ring reduce-scatter — `m−1` hops
+//!    of decode → partial-reduce → requantize on the bucket-aligned chunk
+//!    grid ([`super::ring::chunk_range`] with `parts = m`), first hop a
+//!    byte slice of the original encoded gradient.
+//! 2. **Gather** (intra): every member ships its completed group-sum
+//!    chunk to the group leader (requantized, exactly like the ring's
+//!    first all-gather hop); the leader assembles the decoded group sum.
+//! 3. **Leader star** (slow [`EdgeClass::Inter`] edges): non-root leaders
+//!    requantize their group sum and upload it to the root (worker 0);
+//!    the root decodes, reduces every group sum in group order (f64),
+//!    and multicasts the FP-encoded global mean back to the leaders.
+//!    Single-member groups skip phases 1–2 and forward their *original*
+//!    encoded gradient unchanged — with `groups == workers` the star
+//!    degenerates to the parameter server with no extra quantization.
+//! 4. **Intra broadcast** (intra): each leader multicasts the FP mean to
+//!    its members. Every node decodes the same bytes, so the mean is
+//!    bit-identical cluster-wide — the invariant that keeps parameter
+//!    replicas in sync (same as PS and ring). There is no quantized
+//!    downlink option: like the ring, the topology rejects
+//!    `quantize_downlink`.
+//!
+//! **Accounting.** Wire bytes are exact encoded sizes, kept per edge
+//! class ([`crate::comm::CommStats::wire_bytes_intra`] /
+//! [`wire_bytes_inter`](crate::comm::CommStats::wire_bytes_inter)).
+//! Simulated time is the synchronous-step critical path over a fixed
+//! global step grid of `m + 3` steps — `m−1` reduce-scatter steps, one
+//! gather step, one inter uplink step, one inter multicast, one intra
+//! multicast — where each step costs the max transfer over all nodes
+//! transmitting in it (multicasts count once, the PS broadcast
+//! convention). [`hier_time`] is the closed-form model the Table 1 bench
+//! prints next to the measured rounds.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use super::collective::{
+    collect_traces, Collective, CommStats, GradCodec, RoundTrace, WireSpec, WorkerExchange,
+};
+use super::link::{EdgeClass, LinkMap, TrafficMeter};
+use super::ring::{chunk_range, ring_sub};
+use crate::codec::{self, DecodeScratch};
+use crate::error::{Error, Result};
+use crate::quant::bucket::QuantizedGrad;
+use crate::tensor::rng::Rng;
+
+// --------------------------------------------------------------------
+// Closed-form cost model (Table 1's modeled column)
+// --------------------------------------------------------------------
+
+/// Critical-path time of one hierarchical round: `l` workers in `groups`
+/// groups, a quantized gradient of `quant_bytes` on the wire, an FP mean
+/// of `fp_bytes` on the way down. Matches the executable collective up to
+/// per-chunk header/level-table overhead (each hop message is an
+/// independently headered chunk).
+pub fn hier_time(
+    links: &LinkMap,
+    l: usize,
+    groups: usize,
+    quant_bytes: usize,
+    fp_bytes: usize,
+) -> f64 {
+    assert!(l > 0 && groups > 0 && l % groups == 0);
+    let m = l / groups;
+    if l == 1 {
+        return 0.0;
+    }
+    let mut t = 0.0;
+    if m > 1 {
+        // m−1 reduce-scatter steps + 1 gather step, each one chunk of
+        // quant_bytes / m on the fast links.
+        let chunk = quant_bytes as f64 / m as f64;
+        t += m as f64 * (links.intra.latency_s + chunk * 8.0 / links.intra.bandwidth_bps);
+        // leader multicast of the FP mean into the group
+        t += links.intra.transfer_time(fp_bytes);
+    }
+    if groups > 1 {
+        // slowest-of-(G−1) leader uplinks (all equal) + root multicast
+        t += links.inter.transfer_time(quant_bytes);
+        t += links.inter.transfer_time(fp_bytes);
+    }
+    t
+}
+
+// --------------------------------------------------------------------
+// Executable topology
+// --------------------------------------------------------------------
+
+/// Coordinator end: pure bookkeeping (per-edge-class bytes, critical-path
+/// time) plus relaying the root's decoded mean. No gradient bytes flow
+/// through it.
+pub struct HierarchicalCollective {
+    workers: usize,
+    group_size: usize,
+    links: LinkMap,
+    trace_rx: Receiver<RoundTrace>,
+    mean_rx: Receiver<Vec<f32>>,
+    meter_intra: TrafficMeter,
+    meter_inter: TrafficMeter,
+    sim_time_s: f64,
+}
+
+impl HierarchicalCollective {
+    /// Build the two-level topology: `workers` must be a positive
+    /// multiple of `groups`; group g is workers `[g·m, (g+1)·m)`, its
+    /// leader the first of them, the global root worker 0.
+    pub fn new(
+        workers: usize,
+        groups: usize,
+        links: LinkMap,
+        spec: &WireSpec,
+    ) -> Result<(HierarchicalCollective, Vec<HierWorker>)> {
+        if workers == 0 {
+            return Err(Error::InvalidArg("hier needs at least 1 worker".into()));
+        }
+        if groups == 0 || workers % groups != 0 {
+            return Err(Error::InvalidArg(format!(
+                "groups ({groups}) must be a positive divisor of the worker count ({workers})"
+            )));
+        }
+        let _ = GradCodec::new(spec)?; // validate the quantizer name up front
+        let m = workers / groups;
+
+        let (trace_tx, trace_rx) = channel::<RoundTrace>();
+        let (mean_tx, mean_rx) = channel::<Vec<f32>>();
+
+        // Intra ring edges: worker w → next member of its group.
+        let mut ring_txs: Vec<Option<Sender<Vec<u8>>>> = Vec::with_capacity(workers);
+        let mut ring_rxs: Vec<Option<Receiver<Vec<u8>>>> = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let (tx, rx) = channel::<Vec<u8>>();
+            ring_txs.push(Some(tx));
+            ring_rxs.push(Some(rx));
+        }
+        // Gather channels: one per group, rx at the leader.
+        let mut gather = Vec::with_capacity(groups);
+        for _ in 0..groups {
+            let (tx, rx) = channel::<(usize, Vec<u8>)>();
+            gather.push((tx, Some(rx)));
+        }
+        // Leader star: uplink to the root + per-leader downlinks.
+        let (up_tx, up_rx) = channel::<(usize, Vec<u8>)>();
+        let mut up_rx = Some(up_rx);
+        let mut down_txs: Vec<Sender<Vec<u8>>> = Vec::with_capacity(groups.saturating_sub(1));
+        let mut down_rxs: Vec<Option<Receiver<Vec<u8>>>> =
+            (0..workers).map(|_| None).collect();
+        for g in 1..groups {
+            let (tx, rx) = channel::<Vec<u8>>();
+            down_txs.push(tx);
+            down_rxs[g * m] = Some(rx);
+        }
+        // Intra broadcast: per-member channels held by the group leader.
+        let mut bcast_txs: Vec<Vec<Sender<Vec<u8>>>> = (0..groups).map(|_| Vec::new()).collect();
+        let mut bcast_rxs: Vec<Option<Receiver<Vec<u8>>>> =
+            (0..workers).map(|_| None).collect();
+        for g in 0..groups {
+            for j in 1..m {
+                let (tx, rx) = channel::<Vec<u8>>();
+                bcast_txs[g].push(tx);
+                bcast_rxs[g * m + j] = Some(rx);
+            }
+        }
+
+        let mut ends = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let g = w / m;
+            let j = w % m;
+            ends.push(HierWorker {
+                id: w,
+                workers,
+                groups,
+                group_size: m,
+                group: g,
+                member: j,
+                ring_tx: ring_txs[g * m + (j + 1) % m].take().expect("edge assigned once"),
+                ring_rx: ring_rxs[w].take().expect("inbox assigned once"),
+                gather_tx: if j != 0 { Some(gather[g].0.clone()) } else { None },
+                gather_rx: if j == 0 { gather[g].1.take() } else { None },
+                up_tx: if j == 0 && g != 0 { Some(up_tx.clone()) } else { None },
+                up_rx: if w == 0 { up_rx.take() } else { None },
+                down_txs: if w == 0 { std::mem::take(&mut down_txs) } else { Vec::new() },
+                down_rx: down_rxs[w].take(),
+                bcast_txs: if j == 0 { std::mem::take(&mut bcast_txs[g]) } else { Vec::new() },
+                bcast_rx: bcast_rxs[w].take(),
+                trace_tx: trace_tx.clone(),
+                mean_tx: if w == 0 { Some(mean_tx.clone()) } else { None },
+                codec: GradCodec::new(spec)?,
+                rng: Rng::stream(spec.seed, 5_000 + w as u64),
+                own: Vec::new(),
+                chunk: Vec::new(),
+                group_sum: Vec::new(),
+                chunk_filled: Vec::new(),
+                acc: Vec::new(),
+                slots: Vec::new(),
+                slot_filled: Vec::new(),
+                qg: QuantizedGrad::default(),
+                dscratch: DecodeScratch::default(),
+                msg: Vec::new(),
+                step_bytes: Vec::new(),
+            });
+        }
+        Ok((
+            HierarchicalCollective {
+                workers,
+                group_size: m,
+                links,
+                trace_rx,
+                mean_rx,
+                meter_intra: TrafficMeter::default(),
+                meter_inter: TrafficMeter::default(),
+                sim_time_s: 0.0,
+            },
+            ends,
+        ))
+    }
+
+    /// Edge class of global step `k` on the `m + 3` grid.
+    fn step_class(&self, k: usize) -> EdgeClass {
+        let m = self.group_size;
+        if k < m {
+            EdgeClass::Intra // reduce-scatter hops + gather
+        } else if k < m + 2 {
+            EdgeClass::Inter // leader uplink, root multicast
+        } else {
+            EdgeClass::Intra // leader multicast
+        }
+    }
+}
+
+impl Collective for HierarchicalCollective {
+    fn num_workers(&self) -> usize {
+        self.workers
+    }
+
+    fn round(&mut self, mean_out: &mut Vec<f32>) -> Result<()> {
+        let l = self.workers;
+        let steps = self.group_size + 3;
+        let traces = collect_traces(&self.trace_rx, l, steps, "hier")?;
+        // Synchronous-step critical path on the global grid: nodes
+        // transmit concurrently within a step, steps serialize. A zero
+        // entry means "silent this step" and contributes no latency.
+        for k in 0..steps {
+            let class = self.step_class(k);
+            let mut step = 0.0f64;
+            for tr in &traces {
+                let bytes = tr[k];
+                if bytes == 0 {
+                    continue;
+                }
+                step = step.max(self.links.transfer_time(class, bytes));
+                let meter = match class {
+                    EdgeClass::Intra => &mut self.meter_intra,
+                    EdgeClass::Inter => &mut self.meter_inter,
+                };
+                // Up through the gather/uplink steps, down for multicasts.
+                if k < self.group_size + 1 {
+                    meter.record_up(self.links.link(class), bytes);
+                } else {
+                    meter.record_down(self.links.link(class), bytes);
+                }
+            }
+            self.sim_time_s += step;
+        }
+        let mean = self
+            .mean_rx
+            .recv()
+            .map_err(|_| Error::Comm("hier root died before reporting the mean".into()))?;
+        mean_out.clear();
+        mean_out.extend_from_slice(&mean);
+        Ok(())
+    }
+
+    fn stats(&self) -> CommStats {
+        CommStats {
+            wire_bytes: self.meter_intra.total_bytes() + self.meter_inter.total_bytes(),
+            wire_bytes_intra: self.meter_intra.total_bytes(),
+            wire_bytes_inter: self.meter_inter.total_bytes(),
+            sim_time_s: self.sim_time_s,
+            messages: self.meter_intra.messages + self.meter_inter.messages,
+        }
+    }
+}
+
+/// Worker end. All scratch (decoded gradient, chunk accumulator, group
+/// sum, root reduction slots, requantization state, decode scratch) is
+/// reused across rounds.
+pub struct HierWorker {
+    id: usize,
+    workers: usize,
+    groups: usize,
+    group_size: usize,
+    group: usize,
+    member: usize,
+    ring_tx: Sender<Vec<u8>>,
+    ring_rx: Receiver<Vec<u8>>,
+    gather_tx: Option<Sender<(usize, Vec<u8>)>>,
+    gather_rx: Option<Receiver<(usize, Vec<u8>)>>,
+    up_tx: Option<Sender<(usize, Vec<u8>)>>,
+    up_rx: Option<Receiver<(usize, Vec<u8>)>>,
+    down_txs: Vec<Sender<Vec<u8>>>,
+    down_rx: Option<Receiver<Vec<u8>>>,
+    bcast_txs: Vec<Sender<Vec<u8>>>,
+    bcast_rx: Option<Receiver<Vec<u8>>>,
+    trace_tx: Sender<RoundTrace>,
+    mean_tx: Option<Sender<Vec<f32>>>,
+    codec: GradCodec,
+    rng: Rng,
+    own: Vec<f32>,
+    chunk: Vec<f32>,
+    group_sum: Vec<f32>,
+    chunk_filled: Vec<bool>,
+    acc: Vec<f64>,
+    slots: Vec<Vec<f32>>,
+    slot_filled: Vec<bool>,
+    qg: QuantizedGrad,
+    dscratch: DecodeScratch,
+    msg: Vec<u8>,
+    step_bytes: Vec<usize>,
+}
+
+impl HierWorker {
+    fn hung_up(what: &str) -> Error {
+        Error::Comm(format!("hier {what} hung up"))
+    }
+
+    /// Decode `msg` into the chunk scratch and verify it matches chunk `c`
+    /// of the group grid.
+    fn decode_chunk(&mut self, msg: &[u8], c: usize, total: usize) -> Result<()> {
+        codec::decode_flat_into(msg, &mut self.chunk, &mut self.dscratch)?;
+        let want = chunk_range(total, self.codec.bucket_size(), self.group_size, c).len();
+        if self.chunk.len() != want {
+            return Err(Error::Comm(format!(
+                "hier chunk {c} decoded to {} elements, expected {want}",
+                self.chunk.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Intra reduce-scatter + gather: leaves the decoded group sum in
+    /// `self.group_sum` on leaders; members return after shipping their
+    /// completed chunk. For single-member groups the group sum is the
+    /// worker's own decoded gradient.
+    fn reduce_group(&mut self, encoded: &[u8], n: usize) -> Result<()> {
+        let m = self.group_size;
+        let j = self.member;
+        let d = self.codec.bucket_size();
+        if m == 1 {
+            self.group_sum.clear();
+            self.group_sum.extend_from_slice(&self.own);
+            return Ok(());
+        }
+
+        // ---- reduce-scatter: m−1 hops of decode → add → requantize ----
+        let mut cur = Vec::new();
+        let r = chunk_range(n, d, m, j);
+        codec::slice_elements_into(encoded, r.start, r.end, &mut cur)?;
+        for k in 0..m - 1 {
+            self.step_bytes[k] = cur.len();
+            self.ring_tx.send(cur).map_err(|_| Self::hung_up("ring successor"))?;
+            let mut msg = self.ring_rx.recv().map_err(|_| Self::hung_up("ring predecessor"))?;
+            let c = ring_sub(j, k + 1, m);
+            self.decode_chunk(&msg, c, n)?;
+            let r = chunk_range(n, d, m, c);
+            for (a, v) in self.chunk.iter_mut().zip(&self.own[r]) {
+                *a += *v;
+            }
+            if k + 1 < m - 1 {
+                // Requantize the partial sum for the next hop, recycling
+                // the received buffer. The final sum is requantized below
+                // for the gather instead.
+                self.codec.encode_into(&self.chunk, &mut self.rng, &mut self.qg, &mut msg);
+                cur = msg;
+            } else {
+                cur = Vec::new();
+            }
+        }
+        // `self.chunk` now holds the complete group sum of chunk (j+1)%m.
+        let c_own = (j + 1) % m;
+        if j != 0 {
+            // ---- gather: ship the completed chunk to the leader ----
+            self.codec.encode_into(&self.chunk, &mut self.rng, &mut self.qg, &mut self.msg);
+            self.step_bytes[m - 1] = self.msg.len();
+            let bytes = std::mem::take(&mut self.msg);
+            self.gather_tx
+                .as_ref()
+                .expect("members hold the gather sender")
+                .send((c_own, bytes))
+                .map_err(|_| Self::hung_up("group leader"))?;
+            return Ok(());
+        }
+        // ---- leader: assemble the group sum ----
+        self.group_sum.clear();
+        self.group_sum.resize(n, 0.0);
+        let r = chunk_range(n, d, m, c_own);
+        self.group_sum[r].copy_from_slice(&self.chunk);
+        self.chunk_filled.clear();
+        self.chunk_filled.resize(m, false);
+        self.chunk_filled[c_own] = true;
+        let rx = self.gather_rx.take().expect("leaders hold the gather receiver");
+        let res = (|| -> Result<()> {
+            for _ in 0..m - 1 {
+                let (c, bytes) = rx.recv().map_err(|_| Self::hung_up("group member"))?;
+                if c >= m || self.chunk_filled[c] {
+                    return Err(Error::Comm(format!("unexpected gather chunk {c}")));
+                }
+                self.chunk_filled[c] = true;
+                self.decode_chunk(&bytes, c, n)?;
+                let r = chunk_range(n, d, m, c);
+                self.group_sum[r].copy_from_slice(&self.chunk);
+            }
+            Ok(())
+        })();
+        self.gather_rx = Some(rx);
+        res
+    }
+
+    /// Root: reduce all group sums in group order (f64), write the global
+    /// mean, multicast it FP-encoded down the star.
+    fn root_reduce_and_broadcast(&mut self, n: usize, mean_out: &mut Vec<f32>) -> Result<()> {
+        let g_count = self.groups;
+        self.slots.resize_with(g_count, Vec::new);
+        self.slot_filled.clear();
+        self.slot_filled.resize(g_count, false);
+        self.slots[0].clear();
+        self.slots[0].extend_from_slice(&self.group_sum);
+        self.slot_filled[0] = true;
+        if g_count > 1 {
+            let rx = self.up_rx.take().expect("root holds the uplink receiver");
+            let res = (|| -> Result<()> {
+                for _ in 0..g_count - 1 {
+                    let (g, bytes) = rx.recv().map_err(|_| Self::hung_up("group leader"))?;
+                    if g >= g_count || self.slot_filled[g] {
+                        return Err(Error::Comm(format!("unexpected leader upload from group {g}")));
+                    }
+                    self.slot_filled[g] = true;
+                    codec::decode_flat_into(&bytes, &mut self.slots[g], &mut self.dscratch)?;
+                    if self.slots[g].len() != n {
+                        return Err(Error::Shape(format!(
+                            "group {g} sum has {} elements, expected {n}",
+                            self.slots[g].len()
+                        )));
+                    }
+                }
+                Ok(())
+            })();
+            self.up_rx = Some(rx);
+            res?;
+        }
+        self.acc.clear();
+        self.acc.resize(n, 0.0);
+        for slot in &self.slots {
+            for (a, v) in self.acc.iter_mut().zip(slot) {
+                *a += *v as f64;
+            }
+        }
+        let inv = 1.0 / self.workers as f64;
+        mean_out.clear();
+        mean_out.extend(self.acc.iter().map(|a| (*a * inv) as f32));
+        // FP multicast down: every node decodes these exact bytes, and FP
+        // encoding is a lossless f32 round-trip, so the root's own
+        // `mean_out` is bit-identical to what the leaves decode.
+        codec::encode_fp_into(mean_out, &mut self.msg);
+        let m = self.group_size;
+        if !self.down_txs.is_empty() {
+            self.step_bytes[m + 1] = self.msg.len();
+            for tx in &self.down_txs {
+                tx.send(self.msg.clone()).map_err(|_| Self::hung_up("group leader"))?;
+            }
+        }
+        if !self.bcast_txs.is_empty() {
+            self.step_bytes[m + 2] = self.msg.len();
+            for tx in &self.bcast_txs {
+                tx.send(self.msg.clone()).map_err(|_| Self::hung_up("group member"))?;
+            }
+        }
+        Ok(())
+    }
+
+    fn finish_round(&mut self, mean: &[f32]) -> Result<()> {
+        let trace = RoundTrace {
+            worker: self.id,
+            step_bytes: std::mem::take(&mut self.step_bytes),
+        };
+        self.trace_tx.send(trace).map_err(|_| Self::hung_up("coordinator"))?;
+        if let Some(tx) = &self.mean_tx {
+            tx.send(mean.to_vec()).map_err(|_| Self::hung_up("coordinator"))?;
+        }
+        Ok(())
+    }
+}
+
+impl WorkerExchange for HierWorker {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn exchange(&mut self, encoded: &mut Vec<u8>, mean_out: &mut Vec<f32>) -> Result<()> {
+        let m = self.group_size;
+        codec::decode_flat_into(encoded, &mut self.own, &mut self.dscratch)?;
+        let n = self.own.len();
+        mean_out.clear();
+        self.step_bytes.clear();
+        self.step_bytes.resize(m + 3, 0);
+
+        if self.workers == 1 {
+            // Nothing to exchange: the mean of one contribution is itself.
+            mean_out.extend_from_slice(&self.own);
+            return self.finish_round(mean_out);
+        }
+
+        self.reduce_group(encoded, n)?;
+
+        if self.member == 0 && self.group != 0 {
+            // ---- leader uplink over the slow star ----
+            if m == 1 {
+                // Single-member group: forward the original encoded bytes
+                // verbatim — no spurious extra quantization.
+                self.msg.clear();
+                self.msg.append(encoded);
+            } else {
+                let (rng, qg, msg) = (&mut self.rng, &mut self.qg, &mut self.msg);
+                self.codec.encode_into(&self.group_sum, rng, qg, msg);
+            }
+            self.step_bytes[m] = self.msg.len();
+            let bytes = std::mem::take(&mut self.msg);
+            self.up_tx
+                .as_ref()
+                .expect("non-root leaders hold the uplink sender")
+                .send((self.group, bytes))
+                .map_err(|_| Self::hung_up("root"))?;
+        }
+
+        if self.id == 0 {
+            self.root_reduce_and_broadcast(n, mean_out)?;
+        } else {
+            // Leaders wait on the root's star downlink, members on their
+            // leader's group broadcast.
+            let rx = if self.member == 0 {
+                self.down_rx.take().expect("non-root leaders hold the star downlink")
+            } else {
+                self.bcast_rx.take().expect("members hold the group broadcast inbox")
+            };
+            let res = rx.recv().map_err(|_| {
+                Self::hung_up(if self.member == 0 { "root" } else { "group leader" })
+            });
+            if self.member == 0 {
+                self.down_rx = Some(rx);
+            } else {
+                self.bcast_rx = Some(rx);
+            }
+            let bytes = res?;
+            // Leaders re-multicast the identical bytes into their group.
+            if self.member == 0 && !self.bcast_txs.is_empty() {
+                self.step_bytes[m + 2] = bytes.len();
+                for tx in &self.bcast_txs {
+                    tx.send(bytes.clone()).map_err(|_| Self::hung_up("group member"))?;
+                }
+            }
+            codec::decode_flat_into(&bytes, mean_out, &mut self.dscratch)?;
+            // Recycle the broadcast allocation as the caller's next encode
+            // buffer (the PS convention) — keeps steady-state rounds free
+            // of full-gradient reallocations.
+            *encoded = bytes;
+        }
+        if mean_out.len() != n {
+            return Err(Error::Shape(format!(
+                "hier mean has {} elements, worker {} contributed {n}",
+                mean_out.len(),
+                self.id
+            )));
+        }
+        self.finish_round(mean_out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::link::Link;
+
+    fn links(intra_bw: f64, inter_bw: f64) -> LinkMap {
+        LinkMap::new(Link::new(intra_bw, 0.0), Link::new(inter_bw, 0.0))
+    }
+
+    #[test]
+    fn hier_time_edge_cases() {
+        let lm = LinkMap::uniform(Link::ten_gbps());
+        assert_eq!(hier_time(&lm, 1, 1, 1 << 20, 1 << 22), 0.0);
+        // groups == workers: star only — quantized up + fp down.
+        let t = hier_time(&lm, 4, 4, 1000, 4000);
+        let want = lm.inter.transfer_time(1000) + lm.inter.transfer_time(4000);
+        assert!((t - want).abs() < 1e-15);
+        // one group: intra ring + gather + intra multicast, no star.
+        let t = hier_time(&lm, 4, 1, 4000, 16000);
+        let want = 4.0 * lm.intra.transfer_time(1000) + lm.intra.transfer_time(16000);
+        assert!((t - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hier_beats_flat_star_on_slow_inter_links() {
+        // 8 workers, fast 100 Gbps racks, slow 1 Gbps cross-rack: the
+        // hierarchy sends 2 cross-rack gradients instead of 8 uplinks.
+        let lm = links(100e9, 1e9);
+        let q = 1 << 20; // quantized gradient bytes
+        let fp = 1 << 22; // fp mean bytes
+        let hier = hier_time(&lm, 8, 2, q, fp);
+        // flat PS on the same cluster: every edge is inter-class.
+        let ps = lm.inter.transfer_time(q) + lm.inter.transfer_time(fp);
+        // PS pays max-of-8-uplinks + broadcast just like 1 uplink here, so
+        // the hierarchy cannot beat the *time* model of an idealized
+        // multicast star — but it must stay in the same ballpark while
+        // moving most bytes onto intra edges (asserted in the equivalence
+        // tests). Sanity: hier is within 2× of flat PS on this cluster.
+        assert!(hier < ps * 2.0, "hier={hier} ps={ps}");
+        // And with latency-free fat intra pipes, shrinking inter traffic
+        // helps: compare against a PS whose uplinks serialize (worst case).
+        let ps_serial = 8.0 * lm.inter.transfer_time(q) + lm.inter.transfer_time(fp);
+        assert!(hier < ps_serial, "hier={hier} ps_serial={ps_serial}");
+    }
+
+    #[test]
+    fn new_rejects_bad_grouping() {
+        let lm = LinkMap::uniform(Link::ten_gbps());
+        let spec = WireSpec::new("terngrad", 64);
+        assert!(HierarchicalCollective::new(0, 1, lm, &spec).is_err());
+        assert!(HierarchicalCollective::new(4, 0, lm, &spec).is_err());
+        assert!(HierarchicalCollective::new(4, 3, lm, &spec).is_err());
+        assert!(HierarchicalCollective::new(4, 2, lm, &spec).is_ok());
+        assert!(HierarchicalCollective::new(4, 4, lm, &spec).is_ok());
+        assert!(HierarchicalCollective::new(4, 1, lm, &spec).is_ok());
+        let bad = WireSpec::new("bogus", 64);
+        assert!(HierarchicalCollective::new(2, 1, lm, &bad).is_err());
+    }
+
+    #[test]
+    fn step_grid_classes() {
+        let lm = LinkMap::uniform(Link::ten_gbps());
+        let spec = WireSpec::new("fp", 64);
+        let (coll, _ends) = HierarchicalCollective::new(6, 2, lm, &spec).unwrap();
+        // m = 3: steps 0,1 = RS, 2 = gather (intra); 3,4 = star (inter);
+        // 5 = group multicast (intra).
+        assert_eq!(coll.step_class(0), EdgeClass::Intra);
+        assert_eq!(coll.step_class(2), EdgeClass::Intra);
+        assert_eq!(coll.step_class(3), EdgeClass::Inter);
+        assert_eq!(coll.step_class(4), EdgeClass::Inter);
+        assert_eq!(coll.step_class(5), EdgeClass::Intra);
+    }
+}

@@ -1,5 +1,15 @@
 //! Link model: `time = latency + bytes / bandwidth` with exact byte
 //! accounting — the substrate behind Table 1's "Comm Time" column.
+//!
+//! Two layers:
+//! * [`Link`] — one point-to-point link (bandwidth + one-way latency);
+//! * [`LinkMap`] — the per-edge-class generalization: every edge of a
+//!   topology is either *intra-group* (fast, rack-local) or *inter-group*
+//!   (slow, cross-rack). Flat topologies (PS star, ring) treat every
+//!   worker as its own group, so all of their edges are inter-class; the
+//!   hierarchical collective localizes most traffic onto intra edges,
+//!   which is exactly the TernGrad/§1 motivation for compressing harder
+//!   on slow inter-node links.
 
 /// A simulated network link.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -30,6 +40,50 @@ impl Link {
     /// Time to push `bytes` through this link, seconds.
     pub fn transfer_time(&self, bytes: usize) -> f64 {
         self.latency_s + (bytes as f64 * 8.0) / self.bandwidth_bps
+    }
+}
+
+/// Which class of edge a transfer crosses in the (possibly hierarchical)
+/// cluster graph. Flat topologies have only [`EdgeClass::Inter`] edges
+/// (every worker is its own group); the hierarchical collective uses
+/// [`EdgeClass::Intra`] for in-group hops and [`EdgeClass::Inter`] for the
+/// leader star.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeClass {
+    /// Within an aggregation group (fast, e.g. NVLink/rack-local).
+    Intra,
+    /// Between groups / across the central aggregation boundary (slow).
+    Inter,
+}
+
+/// Per-edge-class link model: one [`Link`] per [`EdgeClass`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkMap {
+    pub intra: Link,
+    pub inter: Link,
+}
+
+impl LinkMap {
+    /// Homogeneous cluster: the same link everywhere (the paper's Table 1
+    /// testbed when built from [`Link::ten_gbps`]).
+    pub fn uniform(link: Link) -> Self {
+        LinkMap { intra: link, inter: link }
+    }
+
+    pub fn new(intra: Link, inter: Link) -> Self {
+        LinkMap { intra, inter }
+    }
+
+    pub fn link(&self, class: EdgeClass) -> &Link {
+        match class {
+            EdgeClass::Intra => &self.intra,
+            EdgeClass::Inter => &self.inter,
+        }
+    }
+
+    /// Time to push `bytes` over one edge of the given class, seconds.
+    pub fn transfer_time(&self, class: EdgeClass, bytes: usize) -> f64 {
+        self.link(class).transfer_time(bytes)
     }
 }
 
@@ -91,6 +145,20 @@ mod tests {
         assert!((link.transfer_time(0) - 0.010).abs() < 1e-12);
         let t = link.transfer_time(1_000_000); // 8 Mbit / 1 Gbps = 8 ms
         assert!((t - 0.018).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn link_map_routes_by_class() {
+        let fast = Link::new(100e9, 0.0);
+        let slow = Link::new(1e9, 0.010);
+        let m = LinkMap::new(fast, slow);
+        assert_eq!(*m.link(EdgeClass::Intra), fast);
+        assert_eq!(*m.link(EdgeClass::Inter), slow);
+        let b = 1_000_000usize; // 8 Mbit
+        assert!((m.transfer_time(EdgeClass::Intra, b) - 8e-5).abs() < 1e-12);
+        assert!((m.transfer_time(EdgeClass::Inter, b) - 0.018).abs() < 1e-9);
+        let u = LinkMap::uniform(fast);
+        assert_eq!(u.intra, u.inter);
     }
 
     #[test]

@@ -1,10 +1,16 @@
-//! Communication substrate: link model, the topology-agnostic
-//! [`Collective`] abstraction, and two real implementations of it.
+//! Communication substrate: per-edge-class link model, the
+//! topology-agnostic [`Collective`] abstraction, and three real
+//! implementations of it.
 //!
 //! The paper's Table 1 costs gradients at 10 Gbps; all transfer *times*
 //! here come from [`Link::transfer_time`] (a simulated clock — nothing
 //! sleeps), while the *bytes* come from the exact wire accounting in
-//! [`crate::codec`]. Both topologies exchange real bytes over real
+//! [`crate::codec`]. Links are a [`LinkMap`] with one [`Link`] per
+//! [`link::EdgeClass`]: *intra*-group (fast, rack-local) and
+//! *inter*-group (slow, cross-rack). Flat topologies treat every worker
+//! as its own group, so all of their edges are inter-class; a uniform
+//! map ([`LinkMap::uniform`]) reproduces the paper's homogeneous 10 Gbps
+//! star exactly. All topologies exchange real bytes over real
 //! `std::sync::mpsc` channels between worker threads:
 //!
 //! * **Parameter server** ([`ps`], `--topology ps`) — L workers ⇄ 1
@@ -23,23 +29,35 @@
 //!   transmissions, summed over steps. [`ring`] also keeps the
 //!   closed-form cost model ([`ring::allreduce_time`]) that the Table 1
 //!   bench prints next to the measured numbers.
+//! * **Hierarchical two-level** ([`hier`], `--topology hier --groups N`)
+//!   — workers partitioned into N groups: intra-group ring
+//!   reduce-scatter + chunk gather over fast intra edges, group leaders
+//!   decode → reduce → requantize over a slow inter-group star, the FP
+//!   mean multicast back down (root → leaders → members). Localizes most
+//!   bytes onto the fast edges ([`CommStats::wire_bytes_intra`] /
+//!   [`CommStats::wire_bytes_inter`] keep the split); [`hier::hier_time`]
+//!   is its closed-form critical-path model.
 //!
-//! Pick a topology from the CLI (`orq train --topology ps|ring`), a
-//! config file (`topology = "ring"` under `[train]`), or directly via
+//! Pick a topology from the CLI (`orq train --topology ps|ring|hier
+//! [--groups N]`), a config file (`topology = "hier"`, `groups = N`, and
+//! `intra_bandwidth`/`intra_latency`/`inter_bandwidth`/`inter_latency`
+//! under `[train]`), or directly via
 //! [`TrainConfig::topology`](crate::config::TrainConfig). The trainer is
 //! generic over [`Collective`]/[`WorkerExchange`]; [`build_topology`]
-//! constructs either end set from a [`Topology`] tag and [`run_once`]
+//! constructs any end set from an [`ExchangeConfig`] and [`run_once`]
 //! drives a single standalone round (benches/tests).
 
 pub mod collective;
+pub mod hier;
 pub mod link;
 pub mod ps;
 pub mod ring;
 
 pub use collective::{
-    build_topology, run_once, Collective, CommStats, GradCodec, Topology, WireSpec,
-    WorkerExchange,
+    build_topology, run_once, Collective, CommStats, ExchangeConfig, GradCodec, Topology,
+    WireSpec, WorkerExchange,
 };
-pub use link::Link;
+pub use hier::{HierWorker, HierarchicalCollective};
+pub use link::{EdgeClass, Link, LinkMap};
 pub use ps::{ParameterServer, PsCollective, PsWorker, WorkerHandle};
 pub use ring::{RingAllReduce, RingWorker};

@@ -13,7 +13,7 @@
 use std::sync::mpsc::{channel, Receiver, Sender};
 
 use super::collective::{Collective, CommStats, GradCodec, WireSpec, WorkerExchange};
-use super::link::{Link, TrafficMeter};
+use super::link::{Link, LinkMap, TrafficMeter};
 use crate::codec::{self, DecodeScratch};
 use crate::error::{Error, Result};
 use crate::quant::bucket::QuantizedGrad;
@@ -139,9 +139,12 @@ pub struct PsCollective {
 }
 
 impl PsCollective {
+    /// Build over a per-edge-class link map. Every star edge crosses the
+    /// central aggregation boundary, so the PS uses the *inter* link
+    /// (flat topologies treat each worker as its own group).
     pub fn new(
         workers: usize,
-        link: Link,
+        links: LinkMap,
         spec: &WireSpec,
         quantize_downlink: bool,
     ) -> Result<(PsCollective, Vec<PsWorker>)> {
@@ -151,7 +154,7 @@ impl PsCollective {
             return Err(Error::InvalidArg("parameter server needs at least 1 worker".into()));
         }
         let codec = GradCodec::new(spec)?;
-        let (server, handles) = ParameterServer::new(workers, link);
+        let (server, handles) = ParameterServer::new(workers, links.inter);
         let ends = handles
             .into_iter()
             .map(|handle| PsWorker { handle, scratch: DecodeScratch::default() })
@@ -221,6 +224,8 @@ impl Collective for PsCollective {
     fn stats(&self) -> CommStats {
         CommStats {
             wire_bytes: self.server.meter.total_bytes(),
+            wire_bytes_intra: 0,
+            wire_bytes_inter: self.server.meter.total_bytes(),
             sim_time_s: self.server.sim_time_s,
             messages: self.server.meter.messages,
         }

@@ -38,8 +38,10 @@
 use std::ops::Range;
 use std::sync::mpsc::{channel, Receiver, Sender};
 
-use super::collective::{Collective, CommStats, GradCodec, WireSpec, WorkerExchange};
-use super::link::{Link, TrafficMeter};
+use super::collective::{
+    collect_traces, Collective, CommStats, GradCodec, RoundTrace, WireSpec, WorkerExchange,
+};
+use super::link::{Link, LinkMap, TrafficMeter};
 use crate::codec::{self, DecodeScratch};
 use crate::error::{Error, Result};
 use crate::quant::bucket::QuantizedGrad;
@@ -90,15 +92,8 @@ pub fn chunk_range(total: usize, bucket: usize, parts: usize, i: usize) -> Range
 }
 
 /// `(a − b) mod l` without underflow, for `b ≤ l`.
-fn ring_sub(a: usize, b: usize, l: usize) -> usize {
+pub(crate) fn ring_sub(a: usize, b: usize, l: usize) -> usize {
     (a + l - b) % l
-}
-
-/// One worker's per-round transmission trace: bytes sent at each of the
-/// `2·(L−1)` synchronous steps.
-struct RoundTrace {
-    worker: usize,
-    step_bytes: Vec<usize>,
 }
 
 /// Coordinator end of the ring: pure bookkeeping (critical-path time,
@@ -114,12 +109,15 @@ pub struct RingAllReduce {
 }
 
 impl RingAllReduce {
-    /// Build the ring: edge `w → (w+1) mod L` for every worker.
+    /// Build the ring: edge `w → (w+1) mod L` for every worker. Ring
+    /// edges connect distinct single-worker groups, so the ring uses the
+    /// *inter* link of the per-edge-class map.
     pub fn new(
         workers: usize,
-        link: Link,
+        links: LinkMap,
         spec: &WireSpec,
     ) -> Result<(RingAllReduce, Vec<RingWorker>)> {
+        let link = links.inter;
         if workers == 0 {
             return Err(Error::InvalidArg("ring needs at least 1 worker".into()));
         }
@@ -174,33 +172,13 @@ impl Collective for RingAllReduce {
     fn round(&mut self, mean_out: &mut Vec<f32>) -> Result<()> {
         let l = self.workers;
         let hops = if l > 1 { 2 * (l - 1) } else { 0 };
-        let mut traces: Vec<Option<Vec<usize>>> = (0..l).map(|_| None).collect();
-        for _ in 0..l {
-            let t = self
-                .trace_rx
-                .recv()
-                .map_err(|_| Error::Comm("ring worker died mid-round".into()))?;
-            if t.worker >= l {
-                return Err(Error::Comm(format!("unknown ring worker {}", t.worker)));
-            }
-            if traces[t.worker].is_some() {
-                return Err(Error::Comm(format!("duplicate trace from ring worker {}", t.worker)));
-            }
-            if t.step_bytes.len() != hops {
-                return Err(Error::Comm(format!(
-                    "ring worker {} sent {} step records, expected {hops}",
-                    t.worker,
-                    t.step_bytes.len()
-                )));
-            }
-            traces[t.worker] = Some(t.step_bytes);
-        }
+        let traces = collect_traces(&self.trace_rx, l, hops, "ring")?;
         // Synchronous-step critical path: all nodes transmit concurrently
         // within a step, steps serialize.
         for k in 0..hops {
             let mut step = 0.0f64;
             for tr in &traces {
-                let bytes = tr.as_ref().expect("all traces collected")[k];
+                let bytes = tr[k];
                 step = step.max(self.link.transfer_time(bytes));
                 self.meter.record_up(&self.link, bytes);
             }
@@ -218,6 +196,8 @@ impl Collective for RingAllReduce {
     fn stats(&self) -> CommStats {
         CommStats {
             wire_bytes: self.meter.total_bytes(),
+            wire_bytes_intra: 0,
+            wire_bytes_inter: self.meter.total_bytes(),
             sim_time_s: self.sim_time_s,
             messages: self.meter.messages,
         }

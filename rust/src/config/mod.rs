@@ -7,7 +7,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::comm::Topology;
+use crate::comm::{Link, LinkMap, Topology};
 use crate::error::{Error, Result};
 
 /// A parsed config value.
@@ -131,6 +131,68 @@ fn parse_value(s: &str, ln: usize) -> Result<Value> {
     Err(err("unrecognized value"))
 }
 
+/// Per-edge-class link settings: bandwidth in bits/s, one-way latency in
+/// seconds, for the fast intra-group and slow inter-group edge classes.
+/// Flat topologies (ps/ring) only use the inter values; defaults
+/// reproduce the paper's homogeneous 10 Gbps zero-latency testbed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkConfig {
+    /// Config key `intra_bandwidth` (bits per second).
+    pub intra_bandwidth: f64,
+    /// Config key `intra_latency` (seconds, one-way).
+    pub intra_latency: f64,
+    /// Config key `inter_bandwidth` (bits per second).
+    pub inter_bandwidth: f64,
+    /// Config key `inter_latency` (seconds, one-way).
+    pub inter_latency: f64,
+}
+
+impl Default for LinkConfig {
+    fn default() -> Self {
+        LinkConfig {
+            intra_bandwidth: 10e9,
+            intra_latency: 0.0,
+            inter_bandwidth: 10e9,
+            inter_latency: 0.0,
+        }
+    }
+}
+
+impl LinkConfig {
+    pub fn validate(&self) -> Result<()> {
+        for (key, bw) in [
+            ("intra_bandwidth", self.intra_bandwidth),
+            ("inter_bandwidth", self.inter_bandwidth),
+        ] {
+            if !(bw.is_finite() && bw > 0.0) {
+                return Err(Error::Config(format!(
+                    "{key} must be a finite positive bit rate, got {bw}"
+                )));
+            }
+        }
+        for (key, lat) in [
+            ("intra_latency", self.intra_latency),
+            ("inter_latency", self.inter_latency),
+        ] {
+            if !(lat.is_finite() && lat >= 0.0) {
+                return Err(Error::Config(format!(
+                    "{key} must be a finite non-negative duration in seconds, got {lat}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Instantiate the simulated [`LinkMap`]. Call [`Self::validate`]
+    /// first — [`Link::new`] asserts on non-positive bandwidth.
+    pub fn link_map(&self) -> LinkMap {
+        LinkMap::new(
+            Link::new(self.intra_bandwidth, self.intra_latency),
+            Link::new(self.inter_bandwidth, self.inter_latency),
+        )
+    }
+}
+
 /// Full training-run configuration (defaults follow the paper's §5 setup,
 /// scaled to the synthetic substrate).
 #[derive(Debug, Clone, PartialEq)]
@@ -161,9 +223,16 @@ pub struct TrainConfig {
     pub eval_every: usize,
     /// Quantize the server->worker broadcast too (paper §4 option (b)).
     pub quantize_downlink: bool,
-    /// Gradient-exchange topology: parameter-server star or decentralized
-    /// ring all-reduce (`topology = "ps" | "ring"`).
+    /// Gradient-exchange topology: parameter-server star, decentralized
+    /// ring all-reduce, or the two-level hierarchy
+    /// (`topology = "ps" | "ring" | "hier"`).
     pub topology: Topology,
+    /// Worker groups for the hierarchical topology (`groups = N`; must
+    /// divide `workers`). Flat topologies require 1.
+    pub groups: usize,
+    /// Per-edge-class simulated link model (`intra_bandwidth`,
+    /// `intra_latency`, `inter_bandwidth`, `inter_latency`).
+    pub links: LinkConfig,
 }
 
 impl Default for TrainConfig {
@@ -187,6 +256,8 @@ impl Default for TrainConfig {
             eval_every: 100,
             quantize_downlink: false,
             topology: Topology::Ps,
+            groups: 1,
+            links: LinkConfig::default(),
         }
     }
 }
@@ -225,6 +296,20 @@ impl TrainConfig {
         set!(bucket_size, as_i64, "bucket_size");
         set!(seed, as_i64, "seed");
         set!(eval_every, as_i64, "eval_every");
+        set!(groups, as_i64, "groups");
+        macro_rules! set_link {
+            ($field:ident, $name:expr) => {
+                if let Some(v) = get($name) {
+                    c.links.$field = v.as_f64().ok_or_else(|| {
+                        Error::Config(format!("bad type for {} (expected a number)", $name))
+                    })?;
+                }
+            };
+        }
+        set_link!(intra_bandwidth, "intra_bandwidth");
+        set_link!(intra_latency, "intra_latency");
+        set_link!(inter_bandwidth, "inter_bandwidth");
+        set_link!(inter_latency, "inter_latency");
         if let Some(v) = get("quantize_downlink") {
             c.quantize_downlink =
                 v.as_bool().ok_or_else(|| Error::Config("quantize_downlink".into()))?;
@@ -275,14 +360,39 @@ impl TrainConfig {
         if !(0.0..1.0).contains(&(self.momentum as f64)) {
             return Err(Error::Config("momentum must be in [0,1)".into()));
         }
-        if self.quantize_downlink && self.topology == Topology::Ring {
-            return Err(Error::Config(
+        if self.quantize_downlink && self.topology != Topology::Ps {
+            return Err(Error::Config(format!(
                 "quantize_downlink applies to the parameter-server broadcast; \
-                 the ring topology has no downlink (drop it or use topology = \"ps\")"
-                    .into(),
-            ));
+                 the {} topology broadcasts no quantized downlink \
+                 (drop it or use topology = \"ps\")",
+                self.topology
+            )));
         }
+        match self.topology {
+            Topology::Hier => {
+                if self.groups == 0 || self.workers % self.groups != 0 {
+                    return Err(Error::Config(format!(
+                        "groups ({}) must be a positive divisor of workers ({})",
+                        self.groups, self.workers
+                    )));
+                }
+            }
+            Topology::Ps | Topology::Ring => {
+                if self.groups != 1 {
+                    return Err(Error::Config(format!(
+                        "groups ({}) only applies to topology = \"hier\"",
+                        self.groups
+                    )));
+                }
+            }
+        }
+        self.links.validate()?;
         Ok(())
+    }
+
+    /// The simulated per-edge-class link map for this run.
+    pub fn link_map(&self) -> LinkMap {
+        self.links.link_map()
     }
 
     pub fn load(path: &str) -> Result<Self> {
@@ -379,6 +489,52 @@ mod tests {
         assert!(c.validate().is_err());
         let c = TrainConfig { topology: Topology::Ring, ..TrainConfig::default() };
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn hier_groups_and_links_from_map() {
+        let m = parse(
+            r#"
+            [train]
+            workers = 6
+            batch = 60
+            topology = "hier"
+            groups = 3
+            intra_bandwidth = 100e9
+            intra_latency = 1e-6
+            inter_bandwidth = 1e9
+            inter_latency = 0.01
+            "#,
+        )
+        .unwrap();
+        let c = TrainConfig::from_map(&m).unwrap();
+        assert_eq!(c.topology, Topology::Hier);
+        assert_eq!(c.groups, 3);
+        let lm = c.link_map();
+        assert_eq!(lm.intra.bandwidth_bps, 100e9);
+        assert_eq!(lm.intra.latency_s, 1e-6);
+        assert_eq!(lm.inter.bandwidth_bps, 1e9);
+        assert_eq!(lm.inter.latency_s, 0.01);
+    }
+
+    #[test]
+    fn hier_rejects_bad_groups_and_links() {
+        let rejects = |toml: &str| TrainConfig::from_map(&parse(toml).unwrap()).is_err();
+        let base = "[train]\nworkers = 4\nbatch = 4\n";
+        // groups must divide workers
+        assert!(rejects(&format!("{base}topology = \"hier\"\ngroups = 3")));
+        // groups on a flat topology is an error, not silently ignored
+        assert!(rejects(&format!("{base}groups = 2")));
+        // quantize_downlink is PS-only (hier's downlink is FP multicast)
+        let q = format!("{base}topology = \"hier\"\ngroups = 2\nquantize_downlink = true");
+        assert!(rejects(&q));
+        // link keys must be numbers…
+        assert!(rejects("[train]\ninter_bandwidth = \"fast\""));
+        // …and physically meaningful (no zero/negative bandwidth, no
+        // negative latency) — errors, not Link::new panics
+        assert!(rejects("[train]\ninter_bandwidth = 0"));
+        assert!(rejects("[train]\nintra_bandwidth = -1e9"));
+        assert!(rejects("[train]\ninter_latency = -0.5"));
     }
 
     #[test]

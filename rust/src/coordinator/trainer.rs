@@ -9,21 +9,22 @@
 //! being transmitted — exactly the structure of the paper's Algorithm 2.
 //!
 //! The exchange itself is behind [`crate::comm::Collective`] /
-//! [`crate::comm::WorkerExchange`]: the parameter-server star or the
-//! decode-reduce-requantize ring, chosen by `TrainConfig::topology`
-//! (`--topology ps|ring`). Wire bytes and simulated comm time come from
-//! the collective's exact accounting. The per-round hot loop reuses all
-//! of its scratch (quantization buckets, wire messages, decode buffers):
-//! the encode/wire/decode/reduce path performs no per-bucket heap
-//! allocation once buffers reach steady state. (The sort-based level
-//! solvers of `orq-S`/`linear-S` still allocate inside
-//! `Quantizer::quantize_bucket_into` — see the quant module docs.)
+//! [`crate::comm::WorkerExchange`]: the parameter-server star, the
+//! decode-reduce-requantize ring, or the two-level hierarchy, chosen by
+//! `TrainConfig::topology` (`--topology ps|ring|hier [--groups N]`) over
+//! the per-edge-class link model of `TrainConfig::links`. Wire bytes and
+//! simulated comm time come from the collective's exact accounting.
+//! The per-round hot loop reuses all of its scratch (quantization
+//! buckets, wire messages, decode buffers, and the sort-based level
+//! solvers' hoisted sort/prefix scratch): the encode/wire/decode/reduce
+//! path performs no per-bucket heap allocation once buffers reach steady
+//! state.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 
 use crate::codec::{self, Packing};
-use crate::comm::link::Link;
-use crate::comm::{build_topology, GradCodec, WireSpec};
+use crate::comm::link::{Link, LinkMap};
+use crate::comm::{build_topology, ExchangeConfig, GradCodec, WireSpec};
 use crate::config::TrainConfig;
 use crate::coordinator::optimizer::SgdMomentum;
 use crate::coordinator::schedule::LrSchedule;
@@ -55,7 +56,7 @@ pub struct TrainOutput {
 /// The coordinator.
 pub struct Trainer<'a> {
     pub cfg: TrainConfig,
-    pub link: Link,
+    pub links: LinkMap,
     ds: &'a ClassDataset,
 }
 
@@ -65,11 +66,19 @@ impl<'a> Trainer<'a> {
         if ds.spec.classes < 5 && cfg.eval_every > 0 {
             // top-5 would be trivially 1.0; allowed, but tables expect ≥5.
         }
-        Ok(Trainer { cfg, link: Link::ten_gbps(), ds })
+        let links = cfg.link_map();
+        Ok(Trainer { cfg, links, ds })
     }
 
+    /// Override the config's link model with a homogeneous link.
     pub fn with_link(mut self, link: Link) -> Self {
-        self.link = link;
+        self.links = LinkMap::uniform(link);
+        self
+    }
+
+    /// Override the config's link model with a per-edge-class map.
+    pub fn with_links(mut self, links: LinkMap) -> Self {
+        self.links = links;
         self
     }
 
@@ -97,8 +106,13 @@ impl<'a> Trainer<'a> {
             packing: Packing::BaseS,
             seed: cfg.seed,
         };
-        let (mut coll, worker_ends) =
-            build_topology(cfg.topology, l, self.link, &spec, cfg.quantize_downlink)?;
+        let xcfg = ExchangeConfig {
+            topology: cfg.topology,
+            groups: cfg.groups,
+            links: self.links,
+            quantize_downlink: cfg.quantize_downlink,
+        };
+        let (mut coll, worker_ends) = build_topology(&xcfg, l, &spec)?;
         let (report_tx, report_rx): (Sender<WorkerReport>, Receiver<WorkerReport>) = channel();
 
         let mut server_backend = make_backend(l);
@@ -300,6 +314,7 @@ pub fn native_backend_factory(model: &str) -> Result<impl Fn(usize) -> Box<dyn B
 mod tests {
     use super::*;
     use crate::comm::Topology;
+    use crate::config::LinkConfig;
     use crate::data::synth::DatasetSpec;
 
     fn tiny_ds() -> ClassDataset {
@@ -335,6 +350,8 @@ mod tests {
             eval_every: 0,
             quantize_downlink: false,
             topology: Topology::Ps,
+            groups: 1,
+            links: LinkConfig::default(),
         }
     }
 
@@ -349,6 +366,15 @@ mod tests {
         let ds = tiny_ds();
         let mut cfg = tiny_cfg(method, workers);
         cfg.topology = Topology::Ring;
+        let factory = native_backend_factory(&cfg.model).unwrap();
+        Trainer::new(cfg, &ds).unwrap().run(factory).unwrap()
+    }
+
+    fn run_hier(method: &str, workers: usize, groups: usize) -> TrainOutput {
+        let ds = tiny_ds();
+        let mut cfg = tiny_cfg(method, workers);
+        cfg.topology = Topology::Hier;
+        cfg.groups = groups;
         let factory = native_backend_factory(&cfg.model).unwrap();
         Trainer::new(cfg, &ds).unwrap().run(factory).unwrap()
     }
@@ -461,6 +487,52 @@ mod tests {
         let ds = tiny_ds();
         let mut cfg = tiny_cfg("fp", 3);
         cfg.batch = 32; // not a multiple of 3
+        assert!(Trainer::new(cfg, &ds).is_err());
+    }
+
+    #[test]
+    fn hier_topology_learns_fp() {
+        let out = run_hier("fp", 4, 2);
+        assert_eq!(out.series.steps.len(), 120);
+        assert!(out.summary.test_top1 > 0.8, "hier fp top1={}", out.summary.test_top1);
+        assert!(out.summary.total_wire_bytes > 0);
+        assert!(out.summary.total_comm_time_s > 0.0);
+    }
+
+    #[test]
+    fn hier_topology_learns_quantized() {
+        let out = run_hier("terngrad", 4, 2);
+        assert!(out.summary.test_top1 > 0.5, "hier terngrad top1={}", out.summary.test_top1);
+        // intra-hop + leader requantization is lossy but must not destroy
+        // training
+        assert!(out.summary.mean_quant_rel_mse > 0.0);
+    }
+
+    #[test]
+    fn hier_determinism_same_seed_same_result() {
+        let a = run_hier("orq-3", 6, 3);
+        let b = run_hier("orq-3", 6, 3);
+        assert_eq!(a.params, b.params);
+        assert_eq!(a.summary.test_top1, b.summary.test_top1);
+    }
+
+    #[test]
+    fn hier_single_worker_matches_ps_fp() {
+        // One worker: every topology degenerates to "apply your own
+        // gradient"; fp carries it losslessly, so training is identical,
+        // and like the ring, the hierarchy moves zero bytes.
+        let ps = run("fp", 1);
+        let hier = run_hier("fp", 1, 1);
+        assert_eq!(ps.params, hier.params);
+        assert_eq!(hier.summary.total_wire_bytes, 0);
+    }
+
+    #[test]
+    fn hier_rejects_bad_grouping() {
+        let ds = tiny_ds();
+        let mut cfg = tiny_cfg("fp", 4);
+        cfg.topology = Topology::Hier;
+        cfg.groups = 3; // does not divide 4
         assert!(Trainer::new(cfg, &ds).is_err());
     }
 }

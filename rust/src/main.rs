@@ -69,6 +69,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.check_known(&[
         "config", "model", "method", "workers", "steps", "batch", "dataset", "bucket",
         "clip", "backend", "artifacts", "out", "seed", "lr", "eval-every", "topology",
+        "groups", "intra-bandwidth", "intra-latency", "inter-bandwidth", "inter-latency",
     ])?;
     let mut cfg = match args.get("config") {
         Some(path) => TrainConfig::load(path)?,
@@ -115,10 +116,29 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(t) = args.get_parse::<orq::comm::Topology>("topology")? {
         cfg.topology = t;
     }
+    if let Some(g) = args.get_parse::<usize>("groups")? {
+        cfg.groups = g;
+    }
+    if let Some(b) = args.get_parse::<f64>("intra-bandwidth")? {
+        cfg.links.intra_bandwidth = b;
+    }
+    if let Some(l) = args.get_parse::<f64>("intra-latency")? {
+        cfg.links.intra_latency = l;
+    }
+    if let Some(b) = args.get_parse::<f64>("inter-bandwidth")? {
+        cfg.links.inter_bandwidth = b;
+    }
+    if let Some(l) = args.get_parse::<f64>("inter-latency")? {
+        cfg.links.inter_latency = l;
+    }
     cfg.validate()?;
 
     let ds = dataset_for(&cfg)?;
     let backend_kind = args.get_or("backend", "native");
+    let topo = match cfg.topology {
+        orq::comm::Topology::Hier => format!("hier/{} groups", cfg.groups),
+        t => t.to_string(),
+    };
     println!(
         "training {} / {} with {} on {} ({} workers, {} steps, d={}, topology={})",
         cfg.model,
@@ -128,7 +148,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.workers,
         cfg.steps,
         cfg.bucket_size,
-        cfg.topology
+        topo
     );
     let out = match backend_kind {
         "native" => {

@@ -6,37 +6,52 @@
 //! levels crowd into the high-density region around zero and the gradient
 //! shape information is destroyed (Fig. 1 discussion).
 
+use std::sync::{Mutex, PoisonError};
+
 use super::{random_round, QuantizedBucket, Quantizer};
 use crate::tensor::rng::Rng;
 
 pub struct LinearQuantizer {
     s: usize,
+    /// Reusable sorted-bucket scratch; see [`super::orq::OrqQuantizer`]
+    /// for the interior-mutability rationale (keeps the `&self` trait
+    /// interface, uncontended per-worker lock).
+    scratch: Mutex<Vec<f32>>,
 }
 
 impl LinearQuantizer {
     pub fn new(s: usize) -> Self {
         assert!(s >= 2);
-        LinearQuantizer { s }
+        LinearQuantizer { s, scratch: Mutex::new(Vec::new()) }
     }
 
     /// Levels at quantiles k/(s-1) of the sorted bucket, deduplicated with
     /// a strictly-increasing nudge so `random_round`'s invariant holds.
+    /// Allocating reference path; the hot path is
+    /// [`Self::quantile_levels_into`].
     pub fn quantile_levels(sorted: &[f32], s: usize) -> Vec<f32> {
+        let mut levels = Vec::new();
+        Self::quantile_levels_into(sorted, s, &mut levels);
+        levels
+    }
+
+    /// [`Self::quantile_levels`] into a reused buffer (cleared first) —
+    /// no allocation once `levels` has capacity.
+    pub fn quantile_levels_into(sorted: &[f32], s: usize, levels: &mut Vec<f32>) {
         debug_assert!(!sorted.is_empty());
         let n = sorted.len();
-        let mut levels: Vec<f32> = (0..s)
-            .map(|k| {
-                let pos = (k as f64 / (s - 1) as f64) * (n - 1) as f64;
-                let lo = pos.floor() as usize;
-                let hi = pos.ceil() as usize;
-                if lo == hi {
-                    sorted[lo]
-                } else {
-                    let w = (pos - lo as f64) as f32;
-                    sorted[lo] * (1.0 - w) + sorted[hi] * w
-                }
-            })
-            .collect();
+        levels.clear();
+        levels.extend((0..s).map(|k| {
+            let pos = (k as f64 / (s - 1) as f64) * (n - 1) as f64;
+            let lo = pos.floor() as usize;
+            let hi = pos.ceil() as usize;
+            if lo == hi {
+                sorted[lo]
+            } else {
+                let w = (pos - lo as f64) as f32;
+                sorted[lo] * (1.0 - w) + sorted[hi] * w
+            }
+        }));
         // Strictly increasing: duplicate quantiles (heavy mass at one value)
         // get an epsilon ladder so binary search stays well-defined.
         for i in 1..levels.len() {
@@ -45,7 +60,6 @@ impl LinearQuantizer {
                 levels[i] = levels[i - 1] + eps;
             }
         }
-        levels
     }
 }
 
@@ -63,10 +77,13 @@ impl Quantizer for LinearQuantizer {
     }
 
     fn quantize_bucket_into(&self, g: &[f32], rng: &mut Rng, out: &mut QuantizedBucket) {
-        let mut sorted = g.to_vec();
-        sorted.sort_unstable_by(f32::total_cmp);
-        out.levels.clear();
-        out.levels.extend_from_slice(&Self::quantile_levels(&sorted, self.s));
+        {
+            let mut sorted = self.scratch.lock().unwrap_or_else(PoisonError::into_inner);
+            sorted.clear();
+            sorted.extend_from_slice(g);
+            sorted.sort_unstable_by(f32::total_cmp);
+            Self::quantile_levels_into(&sorted, self.s, &mut out.levels);
+        }
         random_round(g, &out.levels, rng, &mut out.indices);
     }
 }
@@ -118,6 +135,25 @@ mod tests {
             central_gap < tail_gap,
             "central {central_gap} should be tighter than tail {tail_gap}"
         );
+    }
+
+    /// The hoisted-scratch hot path must be bit-identical to the
+    /// allocating reference solver across reuse with different bucket
+    /// shapes.
+    #[test]
+    fn scratch_reuse_bit_identical_to_allocating_path() {
+        let mut data_rng = Rng::seed_from(13);
+        let reused = LinearQuantizer::new(9);
+        for (i, n) in [1024usize, 3, 200, 1, 4096].into_iter().enumerate() {
+            let g: Vec<f32> = (0..n).map(|_| data_rng.gaussian_f32()).collect();
+            let mut sorted = g.clone();
+            sorted.sort_unstable_by(f32::total_cmp);
+            let seed = 40 + i as u64;
+            let a = reused.quantize_bucket(&g, &mut Rng::seed_from(seed));
+            let b = LinearQuantizer::new(9).quantize_bucket(&g, &mut Rng::seed_from(seed));
+            assert_eq!(a, b, "n={n}");
+            assert_eq!(a.levels, LinearQuantizer::quantile_levels(&sorted, 9), "n={n}");
+        }
     }
 
     #[test]

@@ -25,9 +25,12 @@
 //! into a caller-owned [`QuantizedBucket`] so the per-round exchange path
 //! reuses its level/index buffers instead of allocating per bucket; the
 //! allocating [`Quantizer::quantize_bucket`] is a convenience wrapper.
-//! (The sort-based level *solvers* — `orq-S`, `linear-S` — still allocate
-//! internal sort/prefix scratch per bucket; making those zero-alloc is a
-//! tracked follow-up, see ROADMAP.)
+//! The sort-based level solvers (`orq-S`, `linear-S`) keep their
+//! sort/prefix scratch in reusable per-quantizer buffers (behind an
+//! uncontended mutex, preserving the `&self` interface), so steady-state
+//! `quantize_bucket_into` calls are allocation-free for every scheme —
+//! asserted bit-identical to the allocating reference solvers by the
+//! scheme tests.
 
 pub mod bingrad;
 pub mod bucket;

@@ -24,12 +24,30 @@
 //! "future work" improvement the paper's conclusion hints at; the ablation
 //! bench (`quant_throughput --ablation`) quantifies what it buys.
 
+use std::sync::{Mutex, PoisonError};
+
 use super::{random_round, QuantizedBucket, Quantizer};
 use crate::tensor::rng::Rng;
+
+/// Reusable level-solver scratch: the sorted copy of the bucket, its
+/// prefix sums, and the recursion stack. Hoisted out of the per-bucket
+/// path so steady-state [`Quantizer::quantize_bucket_into`] calls perform
+/// no allocation (the ROADMAP's zero-alloc follow-up for the sort-based
+/// schemes).
+#[derive(Debug, Default)]
+struct SortScratch {
+    sorted: Vec<f32>,
+    prefix: Vec<f64>,
+    stack: Vec<(usize, usize, f32, f32)>,
+}
 
 pub struct OrqQuantizer {
     s: usize,
     refine_sweeps: usize,
+    /// Interior mutability keeps the `&self` [`Quantizer`] interface
+    /// (and `Send + Sync`); each worker owns its quantizer, so the lock
+    /// is uncontended — its cost is noise next to the O(d log d) sort.
+    scratch: Mutex<SortScratch>,
 }
 
 impl OrqQuantizer {
@@ -38,26 +56,40 @@ impl OrqQuantizer {
     /// [`solve_levels`]).
     pub fn new(s: usize) -> Self {
         assert!(s >= 2, "ORQ needs at least 2 levels");
-        OrqQuantizer { s, refine_sweeps: 0 }
+        OrqQuantizer { s, refine_sweeps: 0, scratch: Mutex::new(SortScratch::default()) }
     }
 
     /// Greedy solution + `sweeps` coordinate-descent refinement passes.
     pub fn with_refinement(s: usize, sweeps: usize) -> Self {
-        OrqQuantizer { s, refine_sweeps: sweeps }
+        OrqQuantizer { s, refine_sweeps: sweeps, scratch: Mutex::new(SortScratch::default()) }
     }
 
     /// Solve the optimal levels for a bucket. Exposed for the figure
     /// benches and the property tests.
     pub fn levels_for(&self, g: &[f32]) -> Vec<f32> {
-        let mut sorted = g.to_vec();
-        sorted.sort_unstable_by(f32::total_cmp);
-        let mut levels = solve_levels(&sorted, self.s);
-        for _ in 0..self.refine_sweeps {
-            if !refine_once(&sorted, &mut levels) {
-                break;
+        let mut levels = Vec::with_capacity(self.s);
+        let mut sc = self.scratch.lock().unwrap_or_else(PoisonError::into_inner);
+        self.solve_into(g, &mut sc, &mut levels);
+        levels
+    }
+
+    /// Sort + greedy solve + optional refinement through the reused
+    /// scratch, writing the levels into `out` (cleared first).
+    fn solve_into(&self, g: &[f32], sc: &mut SortScratch, out: &mut Vec<f32>) {
+        sc.sorted.clear();
+        sc.sorted.extend_from_slice(g);
+        sc.sorted.sort_unstable_by(f32::total_cmp);
+        let SortScratch { sorted, prefix, stack } = sc;
+        solve_levels_into(sorted, self.s, prefix, stack, out);
+        // Degenerate buckets (empty/constant) never fill the prefix sums;
+        // their synthetic ladders need no refinement anyway.
+        if self.refine_sweeps > 0 && !sorted.is_empty() && sorted[sorted.len() - 1] > sorted[0] {
+            for _ in 0..self.refine_sweeps {
+                if !refine_once(sorted, prefix, out) {
+                    break;
+                }
             }
         }
-        levels
     }
 }
 
@@ -75,22 +107,31 @@ impl Quantizer for OrqQuantizer {
     }
 
     fn quantize_bucket_into(&self, g: &[f32], rng: &mut Rng, out: &mut QuantizedBucket) {
-        out.levels.clear();
-        out.levels.extend_from_slice(&self.levels_for(g));
+        {
+            let mut sc = self.scratch.lock().unwrap_or_else(PoisonError::into_inner);
+            self.solve_into(g, &mut sc, &mut out.levels);
+        }
         random_round(g, &out.levels, rng, &mut out.indices);
     }
 }
 
 /// Prefix sums of a sorted bucket: `prefix[i] = Σ sorted[..i]` (f64).
 fn prefix_sums(sorted: &[f32]) -> Vec<f64> {
-    let mut p = Vec::with_capacity(sorted.len() + 1);
+    let mut p = Vec::new();
+    prefix_sums_into(sorted, &mut p);
+    p
+}
+
+/// [`prefix_sums`] into a reused buffer (cleared first).
+fn prefix_sums_into(sorted: &[f32], p: &mut Vec<f64>) {
+    p.clear();
+    p.reserve(sorted.len() + 1);
     p.push(0.0);
     let mut acc = 0.0f64;
     for &v in sorted {
         acc += v as f64;
         p.push(acc);
     }
-    p
 }
 
 /// First index with `sorted[i] >= x`.
@@ -136,12 +177,36 @@ fn solve_mid(sorted: &[f32], prefix: &[f64], i0: usize, i1: usize, l: f32, r: f3
 /// For s = 2^K + 1 this is exactly the paper's recursion. For other s the
 /// recursion splits the interval containing the most remaining splits
 /// first, which degenerates to the same thing for powers of two.
+///
+/// Allocating reference path; the exchange hot path goes through
+/// [`solve_levels_into`] with hoisted scratch, which is asserted
+/// bit-identical to this in the tests.
 pub fn solve_levels(sorted: &[f32], s: usize) -> Vec<f32> {
+    let mut prefix = Vec::new();
+    let mut stack = Vec::new();
+    let mut levels = Vec::new();
+    solve_levels_into(sorted, s, &mut prefix, &mut stack, &mut levels);
+    levels
+}
+
+/// [`solve_levels`] through caller-owned prefix-sum/stack scratch, writing
+/// into `levels` (cleared first). No allocation once the buffers have
+/// capacity. `prefix` is left holding the bucket's prefix sums (valid for
+/// [`refine_once`]) except on degenerate (empty/constant) buckets.
+fn solve_levels_into(
+    sorted: &[f32],
+    s: usize,
+    prefix: &mut Vec<f64>,
+    stack: &mut Vec<(usize, usize, f32, f32)>,
+    levels: &mut Vec<f32>,
+) {
     assert!(s >= 2);
     let n = sorted.len();
+    levels.clear();
     if n == 0 {
         // Degenerate: synthesize a strictly increasing ladder around 0.
-        return (0..s).map(|k| k as f32 * 1e-12).collect();
+        levels.extend((0..s).map(|k| k as f32 * 1e-12));
+        return;
     }
     let lo = sorted[0];
     let hi = sorted[n - 1];
@@ -149,15 +214,17 @@ pub fn solve_levels(sorted: &[f32], s: usize) -> Vec<f32> {
         // Constant bucket: ladder of epsilons above the single value so the
         // level vector stays strictly sorted; everything quantizes to lo.
         let eps = (lo.abs() * 1e-6).max(1e-12);
-        return (0..s).map(|k| lo + k as f32 * eps).collect();
+        levels.extend((0..s).map(|k| lo + k as f32 * eps));
+        return;
     }
-    let prefix = prefix_sums(sorted);
+    prefix_sums_into(sorted, prefix);
 
     // Recursive subdivision: (level_index_l, level_index_r, value_l, value_r).
-    let mut levels = vec![0.0f32; s];
+    levels.resize(s, 0.0);
     levels[0] = lo;
     levels[s - 1] = hi;
-    let mut stack = vec![(0usize, s - 1, lo, hi)];
+    stack.clear();
+    stack.push((0usize, s - 1, lo, hi));
     while let Some((kl, kr, vl, vr)) = stack.pop() {
         if kr - kl < 2 {
             continue;
@@ -165,26 +232,25 @@ pub fn solve_levels(sorted: &[f32], s: usize) -> Vec<f32> {
         let km = (kl + kr) / 2;
         let i0 = lower_bound(sorted, vl);
         let i1 = lower_bound(sorted, nextafter_up(vr));
-        let vm = solve_mid(sorted, &prefix, i0, i1, vl, vr);
+        let vm = solve_mid(sorted, prefix, i0, i1, vl, vr);
         levels[km] = vm;
         stack.push((kl, km, vl, vm));
         stack.push((km, kr, vm, vr));
     }
-    enforce_increasing(&mut levels);
-    levels
+    enforce_increasing(levels);
 }
 
 /// One coordinate-descent sweep of the exact optimality condition over the
-/// interior levels. Returns true if any level moved materially.
-fn refine_once(sorted: &[f32], levels: &mut [f32]) -> bool {
-    let prefix = prefix_sums(sorted);
+/// interior levels, given the bucket's precomputed prefix sums. Returns
+/// true if any level moved materially.
+fn refine_once(sorted: &[f32], prefix: &[f64], levels: &mut [f32]) -> bool {
     let mut moved = false;
     for k in 1..levels.len() - 1 {
         let l = levels[k - 1];
         let r = levels[k + 1];
         let i0 = lower_bound(sorted, l);
         let i1 = lower_bound(sorted, nextafter_up(r));
-        let new = solve_mid(sorted, &prefix, i0, i1, l, r);
+        let new = solve_mid(sorted, prefix, i0, i1, l, r);
         if (new - levels[k]).abs() > 1e-7 * (r - l).abs().max(1e-12) {
             moved = true;
         }
@@ -358,6 +424,34 @@ mod tests {
         let m = g.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
         let e_even = expected_rr_mse(&g, &QsgdQuantizer::grid(5, m));
         assert!(e < e_even * 0.25, "bimodal: orq={e} even={e_even}");
+    }
+
+    /// The hoisted-scratch hot path must be bit-identical to the
+    /// allocating reference solver, including after the scratch has been
+    /// dirtied by buckets of very different shapes and sizes.
+    #[test]
+    fn scratch_reuse_bit_identical_to_allocating_path() {
+        let mut data_rng = Rng::seed_from(21);
+        let reused = OrqQuantizer::new(5);
+        let reused_refined = OrqQuantizer::with_refinement(5, 8);
+        for (i, n) in [2048usize, 7, 64, 0, 513, 1, 300].into_iter().enumerate() {
+            let g: Vec<f32> = (0..n).map(|_| data_rng.gaussian_f32()).collect();
+            let mut sorted = g.clone();
+            sorted.sort_unstable_by(f32::total_cmp);
+            // allocating reference: fresh sort + fresh solve_levels
+            assert_eq!(OrqQuantizer::new(5).levels_for(&g), solve_levels(&sorted, 5), "{n}");
+            // greedy path, dirty scratch vs fresh quantizer
+            let seed = 100 + i as u64;
+            let a = reused.quantize_bucket(&g, &mut Rng::seed_from(seed));
+            let b = OrqQuantizer::new(5).quantize_bucket(&g, &mut Rng::seed_from(seed));
+            assert_eq!(a, b, "greedy n={n}");
+            assert_eq!(a.levels, solve_levels(&sorted, 5), "levels n={n}");
+            // refined path too
+            let a = reused_refined.quantize_bucket(&g, &mut Rng::seed_from(seed));
+            let fresh = OrqQuantizer::with_refinement(5, 8);
+            let b = fresh.quantize_bucket(&g, &mut Rng::seed_from(seed));
+            assert_eq!(a, b, "refined n={n}");
+        }
     }
 
     #[test]

@@ -1,0 +1,115 @@
+//! Negative-path coverage for the config/CLI surface grown in the
+//! hierarchical-topology change: every bad combination must come back as
+//! a typed `Err`, never a panic — these are exactly the inputs a user
+//! typos on the command line or in an experiment file.
+
+use orq::cli::Args;
+use orq::comm::link::{Link, LinkMap};
+use orq::comm::{build_topology, ExchangeConfig, Topology, WireSpec};
+use orq::config::{parse, TrainConfig};
+
+fn args(s: &str) -> Args {
+    Args::parse(s.split_whitespace().map(String::from)).unwrap()
+}
+
+fn cfg_from(toml: &str) -> orq::Result<TrainConfig> {
+    TrainConfig::from_map(&parse(toml)?)
+}
+
+#[test]
+fn unknown_topology_values_error() {
+    for bad in ["mesh", "tree", "Hier", "ps2", ""] {
+        assert!(Topology::parse(bad).is_err(), "{bad:?}");
+    }
+    // through the CLI parser
+    let a = args("train --topology mesh");
+    assert!(a.get_parse::<Topology>("topology").is_err());
+    // through a config file
+    assert!(cfg_from("[train]\ntopology = \"mesh\"").is_err());
+    assert!(cfg_from("[train]\ntopology = 3").is_err());
+    // and the valid spellings still parse
+    let a = args("train --topology hier --groups 2");
+    assert_eq!(a.get_parse::<Topology>("topology").unwrap(), Some(Topology::Hier));
+    assert_eq!(a.get_parse::<usize>("groups").unwrap(), Some(2));
+}
+
+#[test]
+fn groups_must_divide_the_world_size() {
+    // config layer
+    let bad = cfg_from("[train]\nworkers = 4\nbatch = 4\ntopology = \"hier\"\ngroups = 3");
+    assert!(bad.is_err());
+    let bad = cfg_from("[train]\nworkers = 4\nbatch = 4\ntopology = \"hier\"\ngroups = 0");
+    assert!(bad.is_err());
+    let ok = cfg_from("[train]\nworkers = 4\nbatch = 4\ntopology = \"hier\"\ngroups = 4");
+    assert!(ok.is_ok());
+    // groups is meaningless on flat topologies — error, not silence
+    assert!(cfg_from("[train]\nworkers = 4\nbatch = 4\ngroups = 2").is_err());
+    assert!(cfg_from("[train]\nworkers = 4\nbatch = 4\ntopology = \"ring\"\ngroups = 2").is_err());
+    // comm layer independently enforces the same invariant
+    let spec = WireSpec::new("terngrad", 64);
+    let links = LinkMap::uniform(Link::ten_gbps());
+    assert!(build_topology(&ExchangeConfig::hier(3, links), 4, &spec).is_err());
+    assert!(build_topology(&ExchangeConfig::hier(0, links), 4, &spec).is_err());
+    assert!(build_topology(&ExchangeConfig::hier(2, links), 4, &spec).is_ok());
+}
+
+#[test]
+fn quantize_downlink_is_ps_only() {
+    for topo in ["ring", "hier"] {
+        let toml = format!(
+            "[train]\nworkers = 4\nbatch = 4\ntopology = \"{topo}\"\nquantize_downlink = true{}",
+            if topo == "hier" { "\ngroups = 2" } else { "" }
+        );
+        assert!(cfg_from(&toml).is_err(), "{topo}");
+    }
+    let ok = cfg_from("[train]\nworkers = 4\nbatch = 4\nquantize_downlink = true");
+    assert!(ok.is_ok());
+    // comm layer
+    let spec = WireSpec::new("terngrad", 64);
+    let links = LinkMap::uniform(Link::ten_gbps());
+    let hier_q = ExchangeConfig::hier(2, links).with_downlink(true);
+    assert!(build_topology(&hier_q, 4, &spec).is_err());
+    let ring_q = ExchangeConfig::flat(Topology::Ring, Link::ten_gbps()).with_downlink(true);
+    assert!(build_topology(&ring_q, 4, &spec).is_err());
+}
+
+#[test]
+fn invalid_link_keys_error_instead_of_panicking() {
+    // wrong types
+    assert!(cfg_from("[train]\ninter_bandwidth = \"10G\"").is_err());
+    assert!(cfg_from("[train]\nintra_latency = true").is_err());
+    // non-physical values (these used to be able to reach Link::new's
+    // assert; they must be caught at validation)
+    assert!(cfg_from("[train]\ninter_bandwidth = 0").is_err());
+    assert!(cfg_from("[train]\ninter_bandwidth = -5e9").is_err());
+    assert!(cfg_from("[train]\nintra_bandwidth = 0.0").is_err());
+    assert!(cfg_from("[train]\nintra_latency = -0.001").is_err());
+    assert!(cfg_from("[train]\ninter_latency = -1").is_err());
+    assert!(cfg_from("[train]\ninter_latency = nan").is_err());
+    assert!(cfg_from("[train]\nintra_bandwidth = inf").is_err());
+    // valid heterogeneous settings pass and build the right map
+    let c = cfg_from(
+        "[train]\nintra_bandwidth = 100e9\nintra_latency = 1e-6\n\
+         inter_bandwidth = 1e9\ninter_latency = 0.02",
+    )
+    .unwrap();
+    let lm = c.link_map();
+    assert_eq!(lm.intra.bandwidth_bps, 100e9);
+    assert_eq!(lm.inter.latency_s, 0.02);
+}
+
+#[test]
+fn cli_parser_rejects_malformed_input() {
+    // bare operand after the subcommand
+    assert!(Args::parse(["train".into(), "loose".into()]).is_err());
+    // empty option name
+    assert!(Args::parse(["train".into(), "--".into(), "x".into()]).is_err());
+    // unknown option against the train command's allowlist
+    let a = args("train --topologyy hier");
+    assert!(a.check_known(&["topology", "groups"]).is_err());
+    // unparsable numbers surface as errors
+    let a = args("train --groups two");
+    assert!(a.get_parse::<usize>("groups").is_err());
+    let a = args("train --inter-bandwidth fast");
+    assert!(a.get_parse::<f64>("inter-bandwidth").is_err());
+}

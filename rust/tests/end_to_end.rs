@@ -39,6 +39,8 @@ fn cfg(method: &str) -> TrainConfig {
         eval_every: 0,
         quantize_downlink: false,
         topology: Topology::Ps,
+        groups: 1,
+        links: orq::config::LinkConfig::default(),
     }
 }
 

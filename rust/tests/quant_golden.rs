@@ -1,0 +1,123 @@
+//! Golden-value tests for the optimal-condition solvers: on closed-form
+//! distributions the paper's optima are hand-derivable, so the solvers
+//! must hit them to tight tolerance — not just beat the baselines.
+//!
+//! * **ORQ / Eq. (12)** on a uniform density collapses to the midpoint
+//!   rule (Remark 1.1): evenly spaced levels. On two levels the solution
+//!   is the support endpoints (Corollary 1.1).
+//! * **BinGrad-b / Eq. (17)** is the 1-D 2-means (Lloyd/centroid) fixed
+//!   point: conditional means around the threshold. Uniform[0,1] gives
+//!   (0.25, 0.75) at threshold 0.5; a two-point distribution gives the
+//!   two atoms exactly after one iteration.
+//! * **BinGrad-pb / Eq. (15)** solves `b₁·∫₀^∞p = ∫_{b₁}^∞ v·p`. For a
+//!   symmetric two-point ±a it gives b₁ = a exactly; for Uniform[−1,1]
+//!   the quadratic `b/2 = (1−b²)/4` gives b₁ = √2 − 1.
+//!
+//! Tolerances: exact (≤ f32 epsilon) where the empirical solver sees the
+//! atoms directly, ~2·10⁻³ on dense 4097-point grids (one grid step of
+//! discretization error).
+
+use orq::quant::bingrad::{BinGradB, BinGradPb};
+use orq::quant::orq::{condition_residual, solve_levels, OrqQuantizer};
+
+/// Dense uniform grid on [lo, hi]: 4097 evenly spaced points.
+fn grid(lo: f32, hi: f32) -> Vec<f32> {
+    (0..=4096).map(|i| lo + (hi - lo) * i as f32 / 4096.0).collect()
+}
+
+const GRID_TOL: f32 = 2e-3;
+
+#[test]
+fn orq_uniform_density_gives_evenly_spaced_levels() {
+    let g = grid(0.0, 1.0);
+    for s in [3usize, 5, 9] {
+        let lv = solve_levels(&g, s);
+        assert_eq!(lv.len(), s);
+        for (k, &b) in lv.iter().enumerate() {
+            let expect = k as f32 / (s - 1) as f32;
+            assert!(
+                (b - expect).abs() < GRID_TOL,
+                "s={s} level {k}: {b} vs midpoint-rule {expect}"
+            );
+        }
+    }
+    // shifted/scaled support: the optimum is affine-equivariant
+    let g = grid(-2.0, 6.0);
+    let lv = solve_levels(&g, 5);
+    for (k, &b) in lv.iter().enumerate() {
+        let expect = -2.0 + 8.0 * k as f32 / 4.0;
+        assert!((b - expect).abs() < 8.0 * GRID_TOL, "level {k}: {b} vs {expect}");
+    }
+}
+
+#[test]
+fn orq_two_level_solution_is_the_support() {
+    // Corollary 1.1: with s = 2 the optimal levels are exactly the
+    // endpoints, on any distribution.
+    let g = grid(-1.5, 0.25);
+    assert_eq!(solve_levels(&g, 2), vec![-1.5, 0.25]);
+    let q = OrqQuantizer::new(2);
+    let lv = q.levels_for(&[0.3f32, -0.7, 0.1, 0.2]);
+    assert_eq!(lv, vec![-0.7, 0.3]);
+}
+
+#[test]
+fn orq_refined_solution_satisfies_eq12_on_uniform() {
+    // After coordinate descent the exact discrete condition must hold at
+    // every interior level — the Eq. (12) residual is ~0.
+    let mut g = grid(0.0, 1.0);
+    g.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let lv = OrqQuantizer::with_refinement(5, 32).levels_for(&g);
+    for (k, r) in condition_residual(&g, &lv).iter().enumerate() {
+        assert!(*r < 5e-3, "interior level {k} residual {r}");
+    }
+}
+
+#[test]
+fn bingrad_b_uniform_is_quarter_centroids() {
+    // Lloyd fixed point on Uniform[0,1]: threshold 1/2, centroids 1/4 and
+    // 3/4 (conditional means of the halves).
+    let g = grid(0.0, 1.0);
+    let (lo, b0, hi) = BinGradB::new().solve_levels(&g);
+    assert!((b0 - 0.5).abs() < GRID_TOL, "b0={b0}");
+    assert!((lo - 0.25).abs() < GRID_TOL, "lo={lo}");
+    assert!((hi - 0.75).abs() < GRID_TOL, "hi={hi}");
+}
+
+#[test]
+fn bingrad_b_two_point_recovers_the_atoms_exactly() {
+    // 25% mass at −1, 75% at +2: conditional means are the atoms
+    // themselves, threshold their midpoint — exact in one iteration.
+    let mut g = vec![-1.0f32; 64];
+    g.resize(256, 2.0);
+    let (lo, b0, hi) = BinGradB::new().solve_levels(&g);
+    assert_eq!(lo, -1.0);
+    assert_eq!(hi, 2.0);
+    assert!((b0 - 0.5).abs() < 1e-6, "b0={b0}");
+    // symmetric ±a: threshold 0, levels ±a
+    let mut g = vec![-0.75f32; 128];
+    g.resize(256, 0.75);
+    let (lo, b0, hi) = BinGradB::new().solve_levels(&g);
+    assert_eq!((lo, hi), (-0.75, 0.75));
+    assert!(b0.abs() < 1e-7, "b0={b0}");
+}
+
+#[test]
+fn bingrad_pb_two_point_solves_b1_at_the_atom() {
+    // Eq. (15) on equal-mass ±a: b₁·(1/2) = (1/2)·a ⇒ b₁ = a, exactly.
+    for a in [0.5f32, 1.0, 3.25] {
+        let mut g = vec![-a; 128];
+        g.resize(256, a);
+        let b1 = BinGradPb::solve_b1(&g);
+        assert!((b1 - a).abs() <= a * 1e-6, "a={a}: b1={b1}");
+    }
+}
+
+#[test]
+fn bingrad_pb_uniform_is_sqrt2_minus_1() {
+    // Uniform[−1,1]: b/2 = (1−b²)/4 ⇒ b² + 2b − 1 = 0 ⇒ b = √2 − 1.
+    let g = grid(-1.0, 1.0);
+    let b1 = BinGradPb::solve_b1(&g);
+    let expect = std::f32::consts::SQRT_2 - 1.0;
+    assert!((b1 - expect).abs() < GRID_TOL, "b1={b1} vs √2−1={expect}");
+}

@@ -1,0 +1,173 @@
+//! Statistical unbiasedness suite — the paper's Assumption 1 split,
+//! verified empirically rather than desk-checked.
+//!
+//! The unbiased schemes (ORQ, QSGD, TernGrad, Linear) promise
+//! `E[Q(v)] = v` for every in-range element under random rounding
+//! (Eq. 7). With N independent rounding draws the empirical mean is
+//! within `z·sqrt(Var[Q(v)]/N)` of v with per-element failure
+//! probability `2·Φ(−z)`; the per-draw variance has the closed form
+//! `Var[Q(v)] = (v − b_lo)(b_hi − v)` (the Eq. 9 integrand) computed
+//! from the scheme's *actual* (deterministic) level table, so the bound
+//! is exact rather than heuristic. We use z = 6 (≈ 2·10⁻⁹ two-sided per
+//! element, ~10⁻⁵ across the whole suite — and the fixed seeds pin the
+//! outcome to a single deterministic draw anyway) plus a 10⁻⁶ absolute
+//! slack for f32 accumulation; the biased schemes' deviations exceed
+//! this bound by an order of magnitude, so the split stays sharp.
+//!
+//! The biased schemes (BinGrad-pb, BinGrad-b, signSGD) must be *flagged*
+//! (`is_unbiased() == false`) and demonstrably violate the same bound —
+//! BinGrad-b and signSGD deterministically (their error never averages
+//! out), BinGrad-pb exactly on its clamped tail (|v| ≥ b₁) while staying
+//! unbiased strictly inside (−b₁, b₁).
+
+use orq::quant::bingrad::BinGradPb;
+use orq::quant::{self, Quantizer};
+use orq::testutil::{sample, GradDist};
+use orq::tensor::rng::Rng;
+
+const DRAWS: usize = 600;
+const Z: f64 = 6.0;
+const BUCKET: usize = 256;
+
+fn bucket(dist: GradDist, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::stream(4242, seed);
+    sample(dist, BUCKET, 1.0, &mut rng)
+}
+
+/// Empirical `E[Q(g)]` over `DRAWS` independent rounding streams, plus
+/// the (draw-invariant) level table the scheme solved for this bucket.
+fn empirical_mean(q: &dyn Quantizer, g: &[f32]) -> (Vec<f64>, Vec<f32>) {
+    let mut acc = vec![0.0f64; g.len()];
+    let mut levels = Vec::new();
+    for t in 0..DRAWS {
+        let qb = q.quantize_bucket(g, &mut Rng::stream(90_000, t as u64));
+        if t == 0 {
+            levels = qb.levels.clone();
+        } else {
+            assert_eq!(levels, qb.levels, "level solving must be RNG-independent");
+        }
+        for (a, &i) in acc.iter_mut().zip(&qb.indices) {
+            *a += qb.levels[i as usize] as f64;
+        }
+    }
+    for a in acc.iter_mut() {
+        *a /= DRAWS as f64;
+    }
+    (acc, levels)
+}
+
+/// `z·sqrt(Var[Q(v)]/N) + ε` for one element against the solved levels.
+fn clt_bound(levels: &[f32], v: f32) -> f64 {
+    let s = levels.len();
+    let lower = levels.partition_point(|&b| b <= v).saturating_sub(1).min(s - 2);
+    let b_lo = levels[lower] as f64;
+    let b_hi = levels[lower + 1] as f64;
+    let vd = (v as f64).clamp(b_lo, b_hi);
+    let var = (vd - b_lo) * (b_hi - vd);
+    Z * (var / DRAWS as f64).sqrt() + 1e-6
+}
+
+/// Fraction of elements whose empirical mean violates its CLT bound.
+fn violation_fraction(g: &[f32], mean: &[f64], levels: &[f32]) -> f64 {
+    let bad = g
+        .iter()
+        .zip(mean)
+        .filter(|(&v, &m)| (m - v as f64).abs() > clt_bound(levels, v))
+        .count();
+    bad as f64 / g.len() as f64
+}
+
+#[test]
+fn unbiased_schemes_pass_the_confidence_bound() {
+    for method in ["orq-5", "qsgd-5", "terngrad", "linear-5"] {
+        let q = quant::from_name(method).unwrap();
+        assert!(q.is_unbiased(), "{method} must be flagged unbiased");
+        for (di, dist) in [GradDist::Gaussian, GradDist::Uniform, GradDist::Bimodal]
+            .into_iter()
+            .enumerate()
+        {
+            let g = bucket(dist, di as u64);
+            let (mean, levels) = empirical_mean(q.as_ref(), &g);
+            for (i, (&v, &m)) in g.iter().zip(&mean).enumerate() {
+                let tol = clt_bound(&levels, v);
+                assert!(
+                    (m - v as f64).abs() <= tol,
+                    "{method}/{dist:?}: E[Q(g)][{i}]={m} vs g[{i}]={v} (tol {tol})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn biased_schemes_are_flagged_and_fail_the_bound() {
+    for method in ["bingrad-b", "signsgd"] {
+        let q = quant::from_name(method).unwrap();
+        assert!(!q.is_unbiased(), "{method} must be flagged biased");
+        let g = bucket(GradDist::Gaussian, 7);
+        let (mean, levels) = empirical_mean(q.as_ref(), &g);
+        let frac = violation_fraction(&g, &mean, &levels);
+        assert!(
+            frac > 0.5,
+            "{method}: only {frac:.2} of elements violate the unbiased bound — \
+             a biased scheme's error must not average out"
+        );
+    }
+    assert!(!quant::from_name("bingrad-pb").unwrap().is_unbiased());
+}
+
+/// BinGrad-pb is *partially* biased: unbiased random rounding strictly
+/// inside (−b₁, b₁), deterministic clamping (hence bias) outside.
+#[test]
+fn bingrad_pb_bias_is_exactly_the_clamped_tail() {
+    let q = quant::from_name("bingrad-pb").unwrap();
+    let g = bucket(GradDist::Gaussian, 11);
+    let b1 = BinGradPb::solve_b1(&g);
+    assert!(b1 > 0.0);
+    let (mean, levels) = empirical_mean(q.as_ref(), &g);
+    let mut interior = 0usize;
+    let mut clamped_biased = 0usize;
+    let mut clamped_total = 0usize;
+    for (&v, &m) in g.iter().zip(&mean) {
+        let tol = clt_bound(&levels, v);
+        if v.abs() < b1 * 0.999 {
+            // interior: must pass the unbiased bound
+            assert!(
+                (m - v as f64).abs() <= tol,
+                "interior element v={v} biased: E={m} (b1={b1}, tol={tol})"
+            );
+            interior += 1;
+        } else if v.abs() > b1 * 1.02 {
+            // clamped tail: E[Q(v)] = ±b₁ exactly, so any element a few
+            // bound-widths past b₁ must violate
+            clamped_total += 1;
+            if (m - v as f64).abs() > tol {
+                clamped_biased += 1;
+            }
+            assert!(
+                (m.abs() - b1 as f64).abs() < 1e-6,
+                "clamped element v={v} must map to ±b1={b1}, got {m}"
+            );
+        }
+    }
+    assert!(interior > 50, "gaussian bucket should have interior mass (got {interior})");
+    assert!(clamped_total > 10, "gaussian bucket should have tail mass (got {clamped_total})");
+    assert!(
+        clamped_biased as f64 >= 0.8 * clamped_total as f64,
+        "clamped tail must be biased: {clamped_biased}/{clamped_total}"
+    );
+}
+
+/// The whole paper split, via the trait flags: Table-order methods
+/// partition exactly into {unbiased random-rounding} ∪ {biased}.
+#[test]
+fn paper_method_bias_split() {
+    let unbiased = ["fp", "terngrad", "orq-3", "qsgd-5", "orq-5", "linear-5", "qsgd-9", "orq-9"];
+    let biased = ["bingrad-pb", "bingrad-b", "signsgd"];
+    for m in unbiased {
+        assert!(quant::from_name(m).unwrap().is_unbiased(), "{m}");
+    }
+    for m in biased {
+        assert!(!quant::from_name(m).unwrap().is_unbiased(), "{m}");
+    }
+}

@@ -1,21 +1,27 @@
-//! Topology equivalence: the parameter-server star and the ring
-//! all-reduce are two transports for the SAME exchange semantics — the
-//! mean of the decoded uploads. Swept over the gradient-distribution
-//! families (the proptest role in this offline build):
+//! Topology equivalence: the parameter-server star, the ring all-reduce
+//! and the hierarchical two-level collective are three transports for the
+//! SAME exchange semantics — the mean of the decoded uploads. Swept over
+//! the gradient-distribution families (the proptest role in this offline
+//! build):
 //!
-//! * `fp` is lossless on both, so the decoded means must agree (up to
-//!   f32 summation order: PS sums worker-major in f64, the ring folds
-//!   chunk partial sums hop by hop);
-//! * every ring node must decode the bit-identical mean — the invariant
-//!   that keeps parameter replicas in sync without parameter traffic;
+//! * `fp` is lossless on all three, so the decoded means must agree (up
+//!   to f32 summation order: PS sums worker-major in f64, the ring folds
+//!   chunk partial sums hop by hop, the hierarchy folds within groups
+//!   then across groups in f64);
+//! * every node must decode the bit-identical mean — the invariant that
+//!   keeps parameter replicas in sync without parameter traffic (the
+//!   ring forwards final encoded chunks verbatim; the hierarchy
+//!   multicasts one FP message);
 //! * wire bytes must match the closed-form `codec::wire_size` accounting
-//!   exactly, per topology;
-//! * the ring's simulated critical path must agree with the closed-form
-//!   `ring::allreduce_time` model up to per-chunk header overhead.
+//!   exactly — *per edge class* for the hierarchy (intra-group ring and
+//!   gather traffic vs inter-group leader-star traffic);
+//! * simulated critical-path times must agree with the closed-form
+//!   models (`ring::allreduce_time`, `hier::hier_time`) up to per-chunk
+//!   header overhead.
 
 use orq::codec::{wire_size, Packing};
-use orq::comm::link::Link;
-use orq::comm::{build_topology, ring, run_once, Topology, WireSpec};
+use orq::comm::link::{Link, LinkMap};
+use orq::comm::{build_topology, hier, ring, run_once, ExchangeConfig, Topology, WireSpec};
 use orq::testutil::{sample, ALL_DISTS};
 use orq::tensor::rng::Rng;
 
@@ -29,7 +35,15 @@ fn grads(n: usize, workers: usize, dist_seed: u64) -> Vec<Vec<f32>> {
     (0..workers).map(|_| sample(dist, n, 1.0, &mut rng)).collect()
 }
 
-/// Exact mean in f64 (the semantics both topologies approximate).
+fn flat(topology: Topology) -> ExchangeConfig {
+    ExchangeConfig::flat(topology, Link::ten_gbps())
+}
+
+fn hier_cfg(groups: usize) -> ExchangeConfig {
+    ExchangeConfig::hier(groups, LinkMap::uniform(Link::ten_gbps()))
+}
+
+/// Exact mean in f64 (the semantics all topologies approximate).
 fn exact_mean(gs: &[Vec<f32>]) -> Vec<f32> {
     let n = gs[0].len();
     let inv = 1.0 / gs.len() as f64;
@@ -38,15 +52,19 @@ fn exact_mean(gs: &[Vec<f32>]) -> Vec<f32> {
         .collect()
 }
 
+/// Divisors of `w` — the legal `groups` values for a hier run.
+fn divisors(w: usize) -> Vec<usize> {
+    (1..=w).filter(|g| w % g == 0).collect()
+}
+
 #[test]
 fn fp_means_agree_across_topologies() {
-    let link = Link::ten_gbps();
     for dist_seed in 0..ALL_DISTS.len() as u64 {
         for workers in [1usize, 2, 3, 5] {
             let gs = grads(1536, workers, dist_seed);
             let sp = spec("fp", 256);
-            let (ps_mean, _) = run_once(Topology::Ps, link, &sp, false, &gs).unwrap();
-            let (ring_mean, _) = run_once(Topology::Ring, link, &sp, false, &gs).unwrap();
+            let (ps_mean, _) = run_once(&flat(Topology::Ps), &sp, &gs).unwrap();
+            let (ring_mean, _) = run_once(&flat(Topology::Ring), &sp, &gs).unwrap();
             assert_eq!(ps_mean.len(), 1536);
             assert_eq!(ring_mean.len(), 1536);
             let exact = exact_mean(&gs);
@@ -61,54 +79,87 @@ fn fp_means_agree_across_topologies() {
                     "dist {dist_seed} L={workers} ring[{i}]={r} exact={e}"
                 );
             }
+            // every legal grouping of the hierarchy agrees too
+            for groups in divisors(workers) {
+                let (h_mean, _) = run_once(&hier_cfg(groups), &sp, &gs).unwrap();
+                assert_eq!(h_mean.len(), 1536);
+                for (i, (h, e)) in h_mean.iter().zip(&exact).enumerate() {
+                    let tol = 1e-5f32 * (1.0 + e.abs());
+                    assert!(
+                        (h - e).abs() <= tol,
+                        "dist {dist_seed} L={workers} G={groups} hier[{i}]={h} exact={e}"
+                    );
+                }
+            }
         }
     }
 }
 
-/// Every ring node must apply the bit-identical decoded mean — quantized
-/// schemes included (all-gather forwards final encoded chunks verbatim).
+/// Every node of a topology must apply the bit-identical decoded mean —
+/// quantized schemes included. The ring forwards final encoded chunks
+/// verbatim; the hierarchy multicasts a single FP message down the tree.
+fn assert_mean_bit_identical(cfg: &ExchangeConfig, workers: usize, method: &str) {
+    let gs = grads(2048, workers, 1);
+    let sp = spec(method, 256);
+    let (mut coll, ends) = build_topology(cfg, workers, &sp).unwrap();
+    let (tx, rx) = std::sync::mpsc::channel::<(usize, Vec<f32>)>();
+    let mut coord_mean = Vec::new();
+    std::thread::scope(|scope| {
+        for (w, mut wx) in ends.into_iter().enumerate() {
+            let g: &[f32] = &gs[w];
+            let sp = sp.clone();
+            let tx = tx.clone();
+            scope.spawn(move || {
+                let gc = orq::comm::GradCodec::new(&sp).unwrap();
+                let mut rng = Rng::stream(sp.seed, 2_000 + w as u64);
+                let mut qg = orq::quant::bucket::QuantizedGrad::default();
+                let mut msg = Vec::new();
+                gc.encode_into(g, &mut rng, &mut qg, &mut msg);
+                let mut mean = Vec::new();
+                wx.exchange(&mut msg, &mut mean).unwrap();
+                tx.send((w, mean)).unwrap();
+            });
+        }
+        coll.round(&mut coord_mean).unwrap();
+    });
+    drop(tx);
+    let mut means: Vec<(usize, Vec<f32>)> = rx.iter().collect();
+    means.sort_by_key(|(w, _)| *w);
+    assert_eq!(means.len(), workers, "{method} {:?}", cfg.topology);
+    for (w, m) in &means {
+        assert_eq!(
+            m, &means[0].1,
+            "{method} {:?}: node {w} diverged from node 0",
+            cfg.topology
+        );
+    }
+    assert_eq!(
+        coord_mean, means[0].1,
+        "{method} {:?}: coordinator mean diverged",
+        cfg.topology
+    );
+}
+
 #[test]
 fn ring_mean_bit_identical_on_every_node() {
-    let link = Link::ten_gbps();
     for method in ["fp", "terngrad", "orq-5"] {
-        let workers = 4;
-        let gs = grads(2048, workers, 1);
-        let sp = spec(method, 256);
-        let (mut coll, ends) = build_topology(Topology::Ring, workers, link, &sp, false).unwrap();
-        let (tx, rx) = std::sync::mpsc::channel::<(usize, Vec<f32>)>();
-        let mut coord_mean = Vec::new();
-        std::thread::scope(|scope| {
-            for (w, mut wx) in ends.into_iter().enumerate() {
-                let g: &[f32] = &gs[w];
-                let sp = sp.clone();
-                let tx = tx.clone();
-                scope.spawn(move || {
-                    let gc = orq::comm::GradCodec::new(&sp).unwrap();
-                    let mut rng = Rng::stream(sp.seed, 2_000 + w as u64);
-                    let mut qg = orq::quant::bucket::QuantizedGrad::default();
-                    let mut msg = Vec::new();
-                    gc.encode_into(g, &mut rng, &mut qg, &mut msg);
-                    let mut mean = Vec::new();
-                    wx.exchange(&mut msg, &mut mean).unwrap();
-                    tx.send((w, mean)).unwrap();
-                });
-            }
-            coll.round(&mut coord_mean).unwrap();
-        });
-        drop(tx);
-        let mut means: Vec<(usize, Vec<f32>)> = rx.iter().collect();
-        means.sort_by_key(|(w, _)| *w);
-        assert_eq!(means.len(), workers, "{method}");
-        for (w, m) in &means {
-            assert_eq!(m, &means[0].1, "{method}: node {w} diverged from node 0");
-        }
-        assert_eq!(coord_mean, means[0].1, "{method}: coordinator mean diverged");
+        assert_mean_bit_identical(&flat(Topology::Ring), 4, method);
+    }
+}
+
+#[test]
+fn hier_mean_bit_identical_on_every_node() {
+    for method in ["fp", "terngrad", "orq-5"] {
+        // leaders, members and the root across several groupings
+        assert_mean_bit_identical(&hier_cfg(2), 4, method);
+        assert_mean_bit_identical(&hier_cfg(3), 6, method);
+        assert_mean_bit_identical(&hier_cfg(1), 4, method);
+        assert_mean_bit_identical(&hier_cfg(4), 4, method);
     }
 }
 
 #[test]
 fn wire_bytes_match_codec_accounting_exactly() {
-    let link = Link::ten_gbps();
     // n = L·d·k keeps every ring chunk equal-sized and non-empty, so the
     // closed-form per-chunk sizes apply verbatim.
     let workers = 4;
@@ -117,20 +168,65 @@ fn wire_bytes_match_codec_accounting_exactly() {
     for (method, s) in [("terngrad", 3usize), ("orq-5", 5), ("fp", 0)] {
         let gs = grads(n, workers, 2);
         let sp = spec(method, d);
-        // PS: L quantized uplinks + 1 FP broadcast.
-        let (_, ps) = run_once(Topology::Ps, link, &sp, false, &gs).unwrap();
+        // PS: L quantized uplinks + 1 FP broadcast, all on inter edges.
+        let (_, ps) = run_once(&flat(Topology::Ps), &sp, &gs).unwrap();
         let up = wire_size(n, d, s, Packing::BaseS, method) as u64;
         let down = wire_size(n, n.max(1), 0, Packing::BaseS, "fp") as u64;
         assert_eq!(ps.wire_bytes, workers as u64 * up + down, "{method} ps bytes");
         assert_eq!(ps.messages, workers as u64 + 1, "{method} ps messages");
+        assert_eq!(ps.wire_bytes_intra, 0, "{method} ps intra");
+        assert_eq!(ps.wire_bytes_inter, ps.wire_bytes, "{method} ps inter");
         // Ring: every chunk crosses 2(L−1) edges, each message an
         // independently-headered chunk of n/L elements.
-        let (_, rg) = run_once(Topology::Ring, link, &sp, false, &gs).unwrap();
+        let (_, rg) = run_once(&flat(Topology::Ring), &sp, &gs).unwrap();
         let chunk_msg = wire_size(n / workers, d, s, Packing::BaseS, method) as u64;
         let hops = 2 * (workers as u64 - 1);
         assert_eq!(rg.wire_bytes, hops * workers as u64 * chunk_msg, "{method} ring bytes");
         assert_eq!(rg.messages, hops * workers as u64, "{method} ring messages");
+        assert_eq!(rg.wire_bytes_intra, 0, "{method} ring intra");
     }
+}
+
+/// Hierarchy byte accounting per edge class: intra = in-group ring hops +
+/// chunk gather + leader multicast, inter = leader uplinks + root
+/// multicast, every message an independently headered chunk/gradient.
+#[test]
+fn hier_wire_bytes_match_codec_accounting_per_edge_class() {
+    let workers = 4usize;
+    let groups = 2usize;
+    let m = workers / groups;
+    let d = 128;
+    let n = m * d * 3; // equal in-group chunks of n/m elements
+    for (method, s) in [("terngrad", 3usize), ("orq-5", 5), ("fp", 0)] {
+        let gs = grads(n, workers, 2);
+        let sp = spec(method, d);
+        let (_, st) = run_once(&hier_cfg(groups), &sp, &gs).unwrap();
+        let chunk_msg = wire_size(n / m, d, s, Packing::BaseS, method) as u64;
+        let grad_msg = wire_size(n, d, s, Packing::BaseS, method) as u64;
+        let fp_msg = wire_size(n, n.max(1), 0, Packing::BaseS, "fp") as u64;
+        // intra: L·(m−1) reduce-scatter hops + (L−G) gather messages of
+        // one chunk each, plus G leader multicasts of the FP mean
+        // (counted once per group, the PS broadcast convention).
+        let intra = (workers * (m - 1) + (workers - groups)) as u64 * chunk_msg
+            + groups as u64 * fp_msg;
+        // inter: G−1 requantized group sums up + 1 root multicast down.
+        let inter = (groups as u64 - 1) * grad_msg + fp_msg;
+        assert_eq!(st.wire_bytes_intra, intra, "{method} hier intra bytes");
+        assert_eq!(st.wire_bytes_inter, inter, "{method} hier inter bytes");
+        assert_eq!(st.wire_bytes, intra + inter, "{method} hier total");
+        let msgs = (workers * (m - 1) + (workers - groups) + groups + groups) as u64;
+        assert_eq!(st.messages, msgs, "{method} hier messages");
+    }
+    // groups == workers degenerates to a leader star: the uplinks are the
+    // workers' ORIGINAL encoded gradients (no extra requantization), and
+    // nothing crosses an intra edge.
+    let gs = grads(n, workers, 3);
+    let sp = spec("terngrad", d);
+    let (_, st) = run_once(&hier_cfg(workers), &sp, &gs).unwrap();
+    let grad_msg = wire_size(n, d, 3, Packing::BaseS, "terngrad") as u64;
+    let fp_msg = wire_size(n, n.max(1), 0, Packing::BaseS, "fp") as u64;
+    assert_eq!(st.wire_bytes_intra, 0);
+    assert_eq!(st.wire_bytes_inter, (workers as u64 - 1) * grad_msg + fp_msg);
 }
 
 #[test]
@@ -141,7 +237,7 @@ fn ring_sim_time_matches_model_up_to_headers() {
     let n = workers * d * 32; // 131072 elements, equal chunks
     let gs = grads(n, workers, 3);
     let sp = spec("fp", d);
-    let (_, rg) = run_once(Topology::Ring, link, &sp, false, &gs).unwrap();
+    let (_, rg) = run_once(&flat(Topology::Ring), &sp, &gs).unwrap();
     // Exact prediction: 2(L−1) steps, every node ships an equal fp chunk
     // message, so the per-step max equals any single transfer.
     let chunk_msg = wire_size(n / workers, d, 0, Packing::BaseS, "fp");
@@ -154,12 +250,46 @@ fn ring_sim_time_matches_model_up_to_headers() {
     assert!(rg.sim_time_s < model * 1.01, "within 1%: {} vs {model}", rg.sim_time_s);
 }
 
-/// Quantized ring exchange: per-hop requantization is lossy, but the
-/// decoded mean must stay a faithful direction estimate of the exact
-/// mean, on every distribution family.
+/// Hierarchy critical path on a heterogeneous link map: the measured time
+/// must equal the exact per-step prediction, and track the closed-form
+/// `hier::hier_time` model up to per-chunk header overhead.
 #[test]
-fn quantized_ring_mean_tracks_exact_mean() {
-    let link = Link::ten_gbps();
+fn hier_sim_time_matches_model_up_to_headers() {
+    let links = LinkMap::new(Link::new(100e9, 1e-6), Link::new(1e9, 0.005));
+    let workers = 4usize;
+    let groups = 2usize;
+    let m = workers / groups;
+    let d = 512;
+    let n = m * d * 16; // 16384 elements, equal in-group chunks
+    let gs = grads(n, workers, 4);
+    let sp = spec("fp", d);
+    let cfg = ExchangeConfig::hier(groups, links);
+    let (_, st) = run_once(&cfg, &sp, &gs).unwrap();
+    let chunk_msg = wire_size(n / m, d, 0, Packing::BaseS, "fp");
+    let fp_msg = wire_size(n, n.max(1), 0, Packing::BaseS, "fp");
+    // Steps: (m−1) reduce-scatter + 1 gather (intra, chunk each), leader
+    // uplink (inter, full fp gradient), root multicast (inter, fp mean),
+    // leader multicast (intra, fp mean).
+    let exact = m as f64 * links.intra.transfer_time(chunk_msg)
+        + links.inter.transfer_time(fp_msg)
+        + links.inter.transfer_time(fp_msg)
+        + links.intra.transfer_time(fp_msg);
+    assert!(
+        (st.sim_time_s - exact).abs() < 1e-12,
+        "measured {} vs exact {exact}",
+        st.sim_time_s
+    );
+    // Closed form ignores the 22-byte headers: strict, tight lower bound.
+    let model = hier::hier_time(&links, workers, groups, n * 4, n * 4);
+    assert!(st.sim_time_s > model, "headers make measured > model");
+    assert!(st.sim_time_s < model * 1.01, "within 1%: {} vs {model}", st.sim_time_s);
+}
+
+/// Quantized exchange: per-hop/leader requantization is lossy, but the
+/// decoded mean must stay a faithful direction estimate of the exact
+/// mean, on every distribution family and every topology.
+#[test]
+fn quantized_mean_tracks_exact_mean() {
     for dist_seed in 0..ALL_DISTS.len() as u64 {
         let workers = 4;
         let gs = grads(4096, workers, dist_seed);
@@ -167,24 +297,26 @@ fn quantized_ring_mean_tracks_exact_mean() {
         // ORQ's distribution-adaptive levels keep the estimate faithful
         // even on the heavy-tailed families (the paper's selling point).
         let sp = spec("orq-5", 512);
-        let (ring_mean, _) = run_once(Topology::Ring, link, &sp, false, &gs).unwrap();
+        let (ring_mean, _) = run_once(&flat(Topology::Ring), &sp, &gs).unwrap();
         let cos = orq::tensor::cosine(&ring_mean, &exact);
         assert!(cos > 0.25, "dist {dist_seed}: ring mean decorrelated, cosine={cos}");
-        let (ps_mean, _) = run_once(Topology::Ps, link, &sp, false, &gs).unwrap();
+        let (ps_mean, _) = run_once(&flat(Topology::Ps), &sp, &gs).unwrap();
         let cos_ps = orq::tensor::cosine(&ps_mean, &exact);
         assert!(cos_ps > 0.25, "dist {dist_seed}: ps cosine={cos_ps}");
+        let (h_mean, _) = run_once(&hier_cfg(2), &sp, &gs).unwrap();
+        let cos_h = orq::tensor::cosine(&h_mean, &exact);
+        assert!(cos_h > 0.25, "dist {dist_seed}: hier cosine={cos_h}");
     }
 }
 
-/// Ragged case: n not divisible by L·d still covers every element —
-/// uneven (and possibly empty) chunks must round-trip.
+/// Ragged case: n not divisible by L·d (or m·d) still covers every
+/// element — uneven (and possibly empty) chunks must round-trip.
 #[test]
-fn ring_handles_ragged_and_empty_chunks() {
-    let link = Link::ten_gbps();
+fn ring_and_hier_handle_ragged_and_empty_chunks() {
     for (n, workers, d) in [(1000usize, 3usize, 128usize), (100, 6, 64), (5, 4, 2), (1, 3, 4)] {
         let gs = grads(n, workers, 4);
         let sp = spec("fp", d);
-        let (ring_mean, _) = run_once(Topology::Ring, link, &sp, false, &gs).unwrap();
+        let (ring_mean, _) = run_once(&flat(Topology::Ring), &sp, &gs).unwrap();
         let exact = exact_mean(&gs);
         assert_eq!(ring_mean.len(), n, "n={n} L={workers} d={d}");
         for (i, (r, e)) in ring_mean.iter().zip(&exact).enumerate() {
@@ -193,5 +325,57 @@ fn ring_handles_ragged_and_empty_chunks() {
                 "n={n} L={workers} d={d} i={i}"
             );
         }
+        for groups in divisors(workers) {
+            let (h_mean, _) = run_once(&hier_cfg(groups), &sp, &gs).unwrap();
+            assert_eq!(h_mean.len(), n, "hier n={n} L={workers} G={groups} d={d}");
+            for (i, (h, e)) in h_mean.iter().zip(&exact).enumerate() {
+                assert!(
+                    (h - e).abs() <= 1e-5 * (1.0 + e.abs()),
+                    "hier n={n} L={workers} G={groups} d={d} i={i}"
+                );
+            }
+        }
     }
+}
+
+/// On a slow-inter/fast-intra cluster the hierarchy must put strictly
+/// fewer bytes on the slow edges than either flat topology, beat the
+/// ring outright on simulated round time, and stay within noise of the
+/// idealized-multicast PS star (whose max-of-L-uplinks time model is a
+/// lower bound no aggregation tree can undercut — the hierarchy matches
+/// it while shipping L−G fewer gradients across the slow boundary).
+#[test]
+fn hier_localizes_traffic_onto_fast_links() {
+    let links = LinkMap::new(Link::new(100e9, 0.0), Link::new(1e9, 0.010));
+    let workers = 8usize;
+    let d = 512;
+    let n = workers * d * 8;
+    let gs = grads(n, workers, 5);
+    let sp = spec("terngrad", d);
+    let ps = ExchangeConfig { links, ..ExchangeConfig::flat(Topology::Ps, Link::ten_gbps()) };
+    let ring = ExchangeConfig { links, ..ExchangeConfig::flat(Topology::Ring, Link::ten_gbps()) };
+    let (_, ps_st) = run_once(&ps, &sp, &gs).unwrap();
+    let (_, ring_st) = run_once(&ring, &sp, &gs).unwrap();
+    let (_, h_st) = run_once(&ExchangeConfig::hier(2, links), &sp, &gs).unwrap();
+    assert!(
+        h_st.wire_bytes_inter < ps_st.wire_bytes_inter
+            && h_st.wire_bytes_inter < ring_st.wire_bytes_inter,
+        "hier inter bytes {} should undercut ps {} and ring {}",
+        h_st.wire_bytes_inter,
+        ps_st.wire_bytes_inter,
+        ring_st.wire_bytes_inter
+    );
+    assert!(h_st.wire_bytes_intra > 0, "in-group traffic must ride the fast edges");
+    assert!(
+        h_st.sim_time_s < ring_st.sim_time_s,
+        "hier {} should beat the latency-bound ring {} on a slow-inter cluster",
+        h_st.sim_time_s,
+        ring_st.sim_time_s
+    );
+    assert!(
+        h_st.sim_time_s < ps_st.sim_time_s * 1.05,
+        "hier {} should stay within noise of the idealized ps star {}",
+        h_st.sim_time_s,
+        ps_st.sim_time_s
+    );
 }
