@@ -42,6 +42,7 @@ fn main() -> orq::Result<()> {
         quantize_downlink: false,
         topology: orq::comm::Topology::Ps,
         groups: 1,
+        threads: 1,
         links: orq::config::LinkConfig::default(),
     };
     println!("imagenet_distributed: {method}, 4 workers, d=512, clip 2.5σ, {steps} steps");

@@ -42,6 +42,24 @@ impl Measurement {
         });
         r
     }
+
+    /// Machine-readable form for the `perfbench` `BENCH_*.json`
+    /// artifacts (see the schema note in CHANGES.md).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("iters".to_string(), Json::Num(self.iters as f64));
+        m.insert("mean_s".to_string(), Json::Num(self.mean_s));
+        m.insert("std_s".to_string(), Json::Num(self.std_s));
+        m.insert("min_s".to_string(), Json::Num(self.min_s));
+        m.insert("p50_s".to_string(), Json::Num(self.p50_s));
+        m.insert("p99_s".to_string(), Json::Num(self.p99_s));
+        if let Some(t) = self.throughput() {
+            m.insert("elem_s".to_string(), Json::Num(t));
+        }
+        Json::Obj(m)
+    }
 }
 
 /// Bench runner configuration.
@@ -159,6 +177,17 @@ mod tests {
     }
 
     #[test]
+    fn measurement_to_json_has_required_fields() {
+        let m = summarize("x", &[1.0, 2.0], Some(10));
+        let j = m.to_json();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("x"));
+        assert!(j.get("mean_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("elem_s").is_some());
+        let txt = j.dump();
+        assert_eq!(crate::util::json::Json::parse(&txt).unwrap(), j);
+    }
+
+    #[test]
     fn time_cap_stops_early() {
         let b = Bench { warmup_iters: 0, iters: 1000, max_seconds: 0.05 };
         let m = b.measure("sleepy", None, || std::thread::sleep(std::time::Duration::from_millis(20)));
@@ -240,6 +269,7 @@ pub mod suite {
             quantize_downlink: false,
             topology: crate::comm::Topology::Ps,
             groups: 1,
+            threads: 1,
             links: crate::config::LinkConfig::default(),
         }
     }

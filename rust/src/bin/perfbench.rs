@@ -1,0 +1,499 @@
+//! perfbench — the repo's machine-readable performance harness.
+//!
+//! Measures, in one run, both the new fast paths and their retained
+//! baselines (so every speedup figure is a same-machine comparison):
+//!
+//! * **codec kernels** — fixed-width pack/unpack, word-level vs the
+//!   scalar reference, and base-s unpack, reciprocal vs the `%`/`/`
+//!   scalar reference → `BENCH_codec.json`;
+//! * **quantize throughput** — per-scheme Melem/s (level solve +
+//!   rounding), plus serial vs parallel quantize+encode through
+//!   `GradCodec` → `BENCH_exchange.json`;
+//! * **exchange rounds** — end-to-end `run_once` wall time for ps
+//!   (serial and parallel codec paths), ring and hier →
+//!   `BENCH_exchange.json`.
+//!
+//! ## JSON schema (v1)
+//!
+//! `BENCH_codec.json`: `{ schema: "orq.perfbench.codec/v1", mode,
+//! elements, kernels: [{kernel: "fixed"|"base_s", bits|s, op:
+//! "pack"|"unpack", path: "word"|"scalar"|"recip", mean_s, gb_s,
+//! melem_s, wire_bytes}], speedup: {fixed_pack_unpack, base_s_unpack} }`.
+//!
+//! `BENCH_exchange.json`: `{ schema: "orq.perfbench.exchange/v1", mode,
+//! elements, workers, threads, bucket_size, quantize: [{method, path:
+//! "serial"|"parallel", mean_s, melem_s}], rounds: [{topology, path,
+//! mean_s, wire_bytes, sim_time_s}], speedup: {quantize_encode,
+//! ps_round} }`.
+//!
+//! `--smoke` runs small sizes, then re-parses both artifacts and asserts
+//! the schema plus monotone sanity (sizes and rates positive, fixed-width
+//! wire bytes grow with width, base-3 beats 2-bit fixed) — no timing
+//! thresholds, so it is CI-safe on noisy runners.
+
+use std::collections::BTreeMap;
+
+use orq::bench::{print_table, Bench, Measurement};
+use orq::cli::Args;
+use orq::codec::bitpack;
+use orq::comm::link::{Link, LinkMap};
+use orq::comm::{run_once, ExchangeConfig, GradCodec, Topology, WireSpec};
+use orq::error::{Error, Result};
+use orq::quant::bucket::{BucketQuantizer, QuantizedGrad};
+use orq::quant::parallel::BucketPipeline;
+use orq::tensor::rng::Rng;
+use orq::util::json::Json;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("perfbench: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    args.check_known(&["smoke", "out", "n", "threads", "workers"])?;
+    let smoke = args.flag("smoke");
+    let out_dir = args.get_or("out", ".").to_string();
+    let n: usize = args
+        .get_parse("n")?
+        .unwrap_or(if smoke { 1 << 16 } else { 1 << 22 });
+    let threads = BucketPipeline::new(args.get_parse("threads")?.unwrap_or(0)).threads();
+    let workers: usize = args.get_parse("workers")?.unwrap_or(2);
+    let bench = if smoke {
+        Bench { warmup_iters: 1, iters: 5, max_seconds: 2.0 }
+    } else {
+        Bench::from_env()
+    };
+    let mode = if smoke { "smoke" } else { "full" };
+
+    let codec_json = bench_codec(&bench, n, mode);
+    let exchange_json = bench_exchange(&bench, n, workers, threads, mode)?;
+
+    std::fs::create_dir_all(&out_dir)?;
+    let codec_path = format!("{out_dir}/BENCH_codec.json");
+    let exchange_path = format!("{out_dir}/BENCH_exchange.json");
+    std::fs::write(&codec_path, codec_json.dump())?;
+    std::fs::write(&exchange_path, exchange_json.dump())?;
+    println!("\nwrote {codec_path} and {exchange_path}");
+    if smoke {
+        validate_codec(&codec_json)?;
+        validate_exchange(&exchange_json)?;
+        println!("smoke validation OK: schema + monotone sanity checks passed");
+    }
+    Ok(())
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        pairs
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+fn gaussian(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::seed_from(seed);
+    let mut g = vec![0.0f32; n];
+    rng.fill_gaussian(&mut g, 1e-3);
+    g
+}
+
+fn rand_indices(n: usize, s: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Rng::seed_from(seed);
+    (0..n).map(|_| rng.below(s as u64) as u8).collect()
+}
+
+/// One kernel row: timing + derived throughputs, keyed by kernel family,
+/// width parameter, op and path.
+fn kernel_entry(
+    kernel: &str,
+    (param_key, param): (&str, usize),
+    op: &str,
+    path: &str,
+    m: &Measurement,
+    wire_bytes: usize,
+) -> Json {
+    obj(vec![
+        ("kernel", Json::Str(kernel.to_string())),
+        (param_key, Json::Num(param as f64)),
+        ("op", Json::Str(op.to_string())),
+        ("path", Json::Str(path.to_string())),
+        ("mean_s", Json::Num(m.mean_s)),
+        ("melem_s", Json::Num(m.throughput().unwrap_or(0.0) / 1e6)),
+        ("gb_s", Json::Num(wire_bytes as f64 / m.mean_s.max(1e-12) / 1e9)),
+        ("wire_bytes", Json::Num(wire_bytes as f64)),
+    ])
+}
+
+fn bench_codec(bench: &Bench, n: usize, mode: &str) -> Json {
+    let mut rows = Vec::new();
+    let mut kernels = Vec::new();
+    let (mut fixed_word, mut fixed_scalar) = (0.0f64, 0.0f64);
+    let (mut recip_s, mut scalar_s) = (0.0f64, 0.0f64);
+
+    // ---- fixed-width: word kernels vs scalar reference ----
+    for bits in [1u32, 2, 3, 4, 8] {
+        let s = 1usize << bits;
+        let idx = rand_indices(n, s, bits as u64);
+        let wire = (n * bits as usize).div_ceil(8);
+        let mut out = Vec::new();
+        let mut dec = Vec::new();
+        // correctness outside the timers: word == scalar, roundtrip exact
+        let packed = bitpack::pack_fixed(&idx, bits);
+        let mut scalar_packed = Vec::new();
+        bitpack::pack_fixed_scalar_into(&idx, bits, &mut scalar_packed);
+        assert_eq!(packed, scalar_packed, "word/scalar pack divergence at bits={bits}");
+        assert_eq!(bitpack::unpack_fixed(&packed, n, bits).unwrap(), idx);
+
+        for (path, scalar) in [("word", false), ("scalar", true)] {
+            let m = bench.measure(&format!("pack fixed{bits} {path}"), Some(n as u64), || {
+                out.clear();
+                if scalar {
+                    bitpack::pack_fixed_scalar_into(&idx, bits, &mut out);
+                } else {
+                    bitpack::pack_fixed_into(&idx, bits, &mut out);
+                }
+                std::hint::black_box(out.len());
+            });
+            *(if scalar { &mut fixed_scalar } else { &mut fixed_word }) += m.mean_s;
+            kernels.push(kernel_entry("fixed", ("bits", bits as usize), "pack", path, &m, wire));
+            rows.push(m);
+            let m = bench.measure(&format!("unpack fixed{bits} {path}"), Some(n as u64), || {
+                let r = if scalar {
+                    bitpack::unpack_fixed_scalar_into(&packed, n, bits, &mut dec)
+                } else {
+                    bitpack::unpack_fixed_into(&packed, n, bits, &mut dec)
+                };
+                r.expect("exact payload");
+                std::hint::black_box(dec.len());
+            });
+            *(if scalar { &mut fixed_scalar } else { &mut fixed_word }) += m.mean_s;
+            kernels.push(kernel_entry("fixed", ("bits", bits as usize), "unpack", path, &m, wire));
+            rows.push(m);
+        }
+    }
+    print_table(&format!("Fixed-width kernels — {n} elements, word vs scalar"), &rows);
+
+    // ---- base-s: reciprocal decode vs scalar %// reference ----
+    let mut rows = Vec::new();
+    for s in [3usize, 5, 9, 255] {
+        let idx = rand_indices(n, s, 1000 + s as u64);
+        let radix = bitpack::Radix::new(s);
+        let wire = n.div_ceil(radix.digits_per_word()) * 8;
+        let mut out = Vec::new();
+        let mut dec = Vec::new();
+        let packed = bitpack::pack_base_s(&idx, s);
+        let mut scalar_dec = Vec::new();
+        bitpack::unpack_base_s_scalar_into(&packed, n, s, &mut scalar_dec).unwrap();
+        assert_eq!(scalar_dec, idx, "recip/scalar unpack divergence at s={s}");
+
+        let m = bench.measure(&format!("pack base{s}"), Some(n as u64), || {
+            out.clear();
+            radix.pack_into(&idx, &mut out);
+            std::hint::black_box(out.len());
+        });
+        kernels.push(kernel_entry("base_s", ("s", s), "pack", "word", &m, wire));
+        rows.push(m);
+        for (path, scalar) in [("recip", false), ("scalar", true)] {
+            let m = bench.measure(&format!("unpack base{s} {path}"), Some(n as u64), || {
+                let r = if scalar {
+                    bitpack::unpack_base_s_scalar_into(&packed, n, s, &mut dec)
+                } else {
+                    radix.unpack_into(&packed, n, &mut dec)
+                };
+                r.expect("exact payload");
+                std::hint::black_box(dec.len());
+            });
+            *(if scalar { &mut scalar_s } else { &mut recip_s }) += m.mean_s;
+            kernels.push(kernel_entry("base_s", ("s", s), "unpack", path, &m, wire));
+            rows.push(m);
+        }
+    }
+    print_table(&format!("Base-s kernels — {n} digits, reciprocal vs scalar"), &rows);
+
+    let speedup = obj(vec![
+        ("fixed_pack_unpack", Json::Num(fixed_scalar / fixed_word.max(1e-12))),
+        ("base_s_unpack", Json::Num(scalar_s / recip_s.max(1e-12))),
+    ]);
+    println!(
+        "codec speedups: fixed pack+unpack ×{:.2}, base-s unpack ×{:.2}",
+        fixed_scalar / fixed_word.max(1e-12),
+        scalar_s / recip_s.max(1e-12)
+    );
+    obj(vec![
+        ("schema", Json::Str("orq.perfbench.codec/v1".into())),
+        ("mode", Json::Str(mode.into())),
+        ("elements", Json::Num(n as f64)),
+        ("kernels", Json::Arr(kernels)),
+        ("speedup", speedup),
+    ])
+}
+
+fn bench_exchange(
+    bench: &Bench,
+    n: usize,
+    workers: usize,
+    threads: usize,
+    mode: &str,
+) -> Result<Json> {
+    let bucket = 512usize;
+    let method = "orq-5";
+    let g = gaussian(n, 1);
+
+    // ---- per-scheme quantize throughput (serial, d = 2048) ----
+    let mut rows = Vec::new();
+    let mut quantize = Vec::new();
+    let bq = BucketQuantizer::new(2048);
+    for m in orq::quant::paper_methods() {
+        if m == "fp" {
+            continue;
+        }
+        let q = orq::quant::from_name(m)?;
+        let mut qrng = Rng::seed_from(2);
+        let mut qg = QuantizedGrad::default();
+        let meas = bench.measure(&format!("quantize {m}"), Some(n as u64), || {
+            bq.quantize_into(&g, q.as_ref(), &mut qrng, &mut qg);
+            std::hint::black_box(qg.buckets.len());
+        });
+        quantize.push(obj(vec![
+            ("method", Json::Str(m.to_string())),
+            ("path", Json::Str("serial".into())),
+            ("mean_s", Json::Num(meas.mean_s)),
+            ("melem_s", Json::Num(meas.throughput().unwrap_or(0.0) / 1e6)),
+        ]));
+        rows.push(meas);
+    }
+    print_table(&format!("Quantize throughput — {n} elements, d=2048, serial"), &rows);
+
+    // ---- quantize+encode: serial GradCodec vs parallel pipeline ----
+    let mut rows = Vec::new();
+    let mut qe = [0.0f64; 2]; // [serial, parallel]
+    for (i, (path, t)) in [("serial", 1usize), ("parallel", threads)].into_iter().enumerate() {
+        let spec = WireSpec::new(method, bucket).with_threads(t);
+        let mut gc = GradCodec::new(&spec)?;
+        let mut rng = Rng::seed_from(3);
+        let mut qg = QuantizedGrad::default();
+        let mut msg = Vec::new();
+        let meas = bench.measure(
+            &format!("quantize+encode {method} {path} (t={t})"),
+            Some(n as u64),
+            || {
+                gc.encode_into(&g, &mut rng, &mut qg, &mut msg);
+                std::hint::black_box(msg.len());
+            },
+        );
+        qe[i] = meas.mean_s;
+        quantize.push(obj(vec![
+            ("method", Json::Str(method.to_string())),
+            ("path", Json::Str(path.to_string())),
+            ("mean_s", Json::Num(meas.mean_s)),
+            ("melem_s", Json::Num(meas.throughput().unwrap_or(0.0) / 1e6)),
+        ]));
+        rows.push(meas);
+    }
+    print_table(
+        &format!("Quantize+encode — {method}, d={bucket}, serial vs {threads} threads"),
+        &rows,
+    );
+
+    // ---- end-to-end exchange rounds ----
+    let link = Link::ten_gbps();
+    let grads: Vec<Vec<f32>> = (0..workers).map(|w| gaussian(n, 10 + w as u64)).collect();
+    let groups = if workers % 2 == 0 { 2 } else { 1 };
+    let configs: Vec<(&str, &str, ExchangeConfig, usize)> = vec![
+        ("ps", "serial", ExchangeConfig::flat(Topology::Ps, link), 1),
+        ("ps", "parallel", ExchangeConfig::flat(Topology::Ps, link), threads),
+        ("ring", "serial", ExchangeConfig::flat(Topology::Ring, link), 1),
+        ("hier", "serial", ExchangeConfig::hier(groups, LinkMap::uniform(link)), 1),
+    ];
+    let mut rows = Vec::new();
+    let mut round_entries = Vec::new();
+    let mut ps_round = [0.0f64; 2]; // [serial, parallel]
+    for (topo, path, cfg, t) in configs {
+        let spec = WireSpec { seed: 7, ..WireSpec::new(method, bucket) }.with_threads(t);
+        // one validated round outside the timer, for stats + fail-fast
+        let (_, stats) = run_once(&cfg, &spec, &grads)?;
+        let meas = bench.measure(&format!("{topo} round {path} (t={t})"), None, || {
+            let out = run_once(&cfg, &spec, &grads).expect("validated above");
+            std::hint::black_box(out.0.len());
+        });
+        if topo == "ps" {
+            ps_round[if path == "serial" { 0 } else { 1 }] = meas.mean_s;
+        }
+        round_entries.push(obj(vec![
+            ("topology", Json::Str(topo.to_string())),
+            ("path", Json::Str(path.to_string())),
+            ("mean_s", Json::Num(meas.mean_s)),
+            ("wire_bytes", Json::Num(stats.wire_bytes as f64)),
+            ("sim_time_s", Json::Num(stats.sim_time_s)),
+        ]));
+        rows.push(meas);
+    }
+    print_table(
+        &format!("Exchange rounds — {workers} workers × {n} elements, {method}, d={bucket}"),
+        &rows,
+    );
+
+    let speedup = obj(vec![
+        ("quantize_encode", Json::Num(qe[0] / qe[1].max(1e-12))),
+        ("ps_round", Json::Num(ps_round[0] / ps_round[1].max(1e-12))),
+    ]);
+    println!(
+        "exchange speedups (serial / parallel, {threads} threads): quantize+encode ×{:.2}, ps round ×{:.2}",
+        qe[0] / qe[1].max(1e-12),
+        ps_round[0] / ps_round[1].max(1e-12)
+    );
+    Ok(obj(vec![
+        ("schema", Json::Str("orq.perfbench.exchange/v1".into())),
+        ("mode", Json::Str(mode.into())),
+        ("elements", Json::Num(n as f64)),
+        ("workers", Json::Num(workers as f64)),
+        ("threads", Json::Num(threads as f64)),
+        ("bucket_size", Json::Num(bucket as f64)),
+        ("quantize", Json::Arr(quantize)),
+        ("rounds", Json::Arr(round_entries)),
+        ("speedup", speedup),
+    ]))
+}
+
+// ---------------------------------------------------------------------
+// --smoke artifact validation: schema + monotone sanity, no timing
+// thresholds.
+// ---------------------------------------------------------------------
+
+fn fail(msg: String) -> Error {
+    Error::InvalidArg(format!("smoke validation failed: {msg}"))
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64> {
+    j.req(key)?
+        .as_f64()
+        .ok_or_else(|| fail(format!("{key} is not a number")))
+}
+
+fn validate_codec(j: &Json) -> Result<()> {
+    // the artifact on disk must round-trip through the parser
+    let j = &Json::parse(&j.dump())?;
+    if j.req("schema")?.as_str() != Some("orq.perfbench.codec/v1") {
+        return Err(fail("bad codec schema tag".into()));
+    }
+    j.req("mode")?;
+    let elements = req_f64(j, "elements")?;
+    let kernels = j
+        .req("kernels")?
+        .as_arr()
+        .ok_or_else(|| fail("kernels is not an array".into()))?;
+    if kernels.is_empty() {
+        return Err(fail("kernels is empty".into()));
+    }
+    let mut fixed_pack_word: Vec<(f64, f64)> = Vec::new(); // (bits, wire_bytes)
+    let mut base3_bytes = None;
+    for k in kernels {
+        for key in ["kernel", "op", "path"] {
+            k.req(key)?;
+        }
+        if req_f64(k, "mean_s")? <= 0.0 || req_f64(k, "wire_bytes")? <= 0.0 {
+            return Err(fail(format!("non-positive timing/size in {}", k.dump())));
+        }
+        if k.get("kernel").and_then(Json::as_str) == Some("fixed")
+            && k.get("op").and_then(Json::as_str) == Some("pack")
+            && k.get("path").and_then(Json::as_str) == Some("word")
+        {
+            fixed_pack_word.push((req_f64(k, "bits")?, req_f64(k, "wire_bytes")?));
+        }
+        if k.get("kernel").and_then(Json::as_str) == Some("base_s")
+            && k.get("s").and_then(Json::as_f64) == Some(3.0)
+        {
+            base3_bytes = Some(req_f64(k, "wire_bytes")?);
+        }
+    }
+    // monotone: wider fixed widths cost more wire bytes
+    fixed_pack_word.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    for w in fixed_pack_word.windows(2) {
+        if w[1].1 <= w[0].1 {
+            return Err(fail(format!(
+                "fixed wire bytes not monotone in width: {:?}",
+                fixed_pack_word
+            )));
+        }
+    }
+    // base-3 (1.6 bits/elt) must beat 2-bit fixed for the same n
+    let two_bit = fixed_pack_word
+        .iter()
+        .find(|(b, _)| *b == 2.0)
+        .ok_or_else(|| fail("missing 2-bit fixed entry".into()))?
+        .1;
+    match base3_bytes {
+        Some(b3) if b3 < two_bit => {}
+        other => return Err(fail(format!("base-3 ({other:?}) must beat 2-bit ({two_bit})"))),
+    }
+    if two_bit > elements {
+        return Err(fail("2-bit packing cannot exceed 1 byte/elt".into()));
+    }
+    let sp = j.req("speedup")?;
+    for key in ["fixed_pack_unpack", "base_s_unpack"] {
+        let v = req_f64(sp, key)?;
+        if !v.is_finite() || v <= 0.0 {
+            return Err(fail(format!("speedup {key} = {v}")));
+        }
+    }
+    Ok(())
+}
+
+fn validate_exchange(j: &Json) -> Result<()> {
+    let j = &Json::parse(&j.dump())?;
+    if j.req("schema")?.as_str() != Some("orq.perfbench.exchange/v1") {
+        return Err(fail("bad exchange schema tag".into()));
+    }
+    for key in ["mode", "elements", "workers", "threads", "bucket_size"] {
+        j.req(key)?;
+    }
+    let quantize = j
+        .req("quantize")?
+        .as_arr()
+        .ok_or_else(|| fail("quantize is not an array".into()))?;
+    if quantize.is_empty() {
+        return Err(fail("quantize is empty".into()));
+    }
+    for q in quantize {
+        q.req("method")?;
+        q.req("path")?;
+        if req_f64(q, "melem_s")? <= 0.0 {
+            return Err(fail(format!("non-positive throughput in {}", q.dump())));
+        }
+    }
+    let rounds = j
+        .req("rounds")?
+        .as_arr()
+        .ok_or_else(|| fail("rounds is not an array".into()))?;
+    let mut seen_ps = (false, false);
+    for r in rounds {
+        let topo = r.req("topology")?.as_str().unwrap_or_default().to_string();
+        let path = r.req("path")?.as_str().unwrap_or_default().to_string();
+        if req_f64(r, "mean_s")? <= 0.0
+            || req_f64(r, "wire_bytes")? <= 0.0
+            || req_f64(r, "sim_time_s")? <= 0.0
+        {
+            return Err(fail(format!("non-positive figures in {}", r.dump())));
+        }
+        match (topo.as_str(), path.as_str()) {
+            ("ps", "serial") => seen_ps.0 = true,
+            ("ps", "parallel") => seen_ps.1 = true,
+            _ => {}
+        }
+    }
+    if seen_ps != (true, true) {
+        return Err(fail("both ps serial and ps parallel rounds are required".into()));
+    }
+    let sp = j.req("speedup")?;
+    for key in ["quantize_encode", "ps_round"] {
+        let v = req_f64(sp, key)?;
+        if !v.is_finite() || v <= 0.0 {
+            return Err(fail(format!("speedup {key} = {v}")));
+        }
+    }
+    Ok(())
+}

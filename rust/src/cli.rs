@@ -90,7 +90,8 @@ orq — optimal gradient quantization for distributed training (ORQ/BinGrad)
 USAGE:
   orq train [--config FILE] [--model M] [--method Q] [--workers N]
             [--steps N] [--batch N] [--dataset D] [--bucket N] [--clip C]
-            [--topology ps|ring|hier] [--groups N] [--backend native|pjrt]
+            [--topology ps|ring|hier] [--groups N] [--threads N]
+            [--backend native|pjrt]
             [--intra-bandwidth BPS] [--intra-latency S]
             [--inter-bandwidth BPS] [--inter-latency S]
             [--artifacts DIR] [--out DIR] [--seed N]
@@ -105,6 +106,8 @@ TOPOLOGIES: ps (parameter-server star), ring (decode-reduce-requantize all-reduc
             hier (intra-group rings + leader star; --groups must divide --workers)
 LINKS: per edge class — intra (in-group) vs inter (cross-group / flat edges);
        bandwidth in bits/s, one-way latency in seconds (default 10e9 / 0)
+THREADS: codec threads per node — 1 serial (default), 0 auto-detect cores,
+       N ≥ 2 parallel per-bucket quantize/encode + decode/reduce pipeline
 ";
 
 #[cfg(test)]

@@ -7,12 +7,128 @@
 //! packing reaches that asymptotically by radix-encoding groups of digits
 //! into u64 words (40 trits / 27 pentits / 20 nonits per word).
 //!
+//! # Word-level layout
+//!
+//! The fixed-width wire format is a little-endian bit stream: element k
+//! occupies stream bits `[k·bits, (k+1)·bits)`, and byte b of the payload
+//! holds stream bits `[8b, 8b+8)` with bit j of the byte at stream
+//! position `8b + j`. A u64 in little-endian byte order has exactly the
+//! same bit numbering as 8 consecutive stream bytes, so the packers work
+//! a word at a time instead of an element at a time: 8 elements always
+//! fill exactly `bits` whole bytes (`8·bits` stream bits), and for the
+//! power-of-two widths 1/2/4/8 a full u64 holds `64/bits` elements. The
+//! word kernels ([`pack_fixed_into`]/[`unpack_fixed_into`]) are branchless
+//! per group — build `Σ idx_k << (k·bits)`, store/load the low bytes —
+//! with monomorphic specializations for bits ∈ {1, 2, 4} (bits = 8 is a
+//! byte copy). They are bit-identical to the retained scalar reference
+//! kernels ([`pack_fixed_scalar_into`]/[`unpack_fixed_scalar_into`]),
+//! which the differential suite (`rust/tests/codec_differential.rs`) and
+//! the `perfbench` baseline keep honest.
+//!
+//! # Reciprocal-multiplication radix decode
+//!
+//! Base-s decode extracts one digit per `%`/`/` pair. A hardware 64-bit
+//! division costs 20–40 cycles; [`Radix`] replaces it with
+//! multiply-by-precomputed-reciprocal: for a non-power-of-two radix s
+//! with ℓ = ⌊log₂ s⌋ ≥ 1, precompute `m = ⌊2^(64+ℓ)/s⌋ < 2^64`. Then for
+//! any n < 2^64, `q̂ = ⌊n·m / 2^(64+ℓ)⌋` under-estimates `⌊n/s⌋` by at
+//! most 1 (writing `2^(64+ℓ) = m·s + e` with `0 ≤ e < s`, the error term
+//! `n·e/(s·2^(64+ℓ)) < 2^-ℓ ≤ ½ < 1`), so a single branchless
+//! compare-and-fix of the remainder recovers the exact quotient. Powers
+//! of two use shift/mask. `digits_per_word(s)` and the reciprocal are
+//! computed once per [`Radix`] and hoisted out of every pack/unpack loop
+//! (and, via the codec, out of the per-bucket decode loop).
+//!
 //! Each packer has an `_into` form that appends to (or refills) a caller
 //! buffer — the exchange hot path uses those so per-bucket work never
-//! allocates.
+//! allocates. Unpackers are fallible: truncated or non-word-aligned
+//! payloads return `Err` instead of panicking, so malformed wire bytes
+//! can never take down a worker.
+
+use crate::error::{Error, Result};
+
+// --------------------------------------------------------------------
+// Fixed-width packing
+// --------------------------------------------------------------------
 
 /// Append `indices` (< 2^bits each) at `bits` per element to `out`.
+/// Word-at-a-time kernel; bit-identical to [`pack_fixed_scalar_into`].
 pub fn pack_fixed_into(indices: &[u8], bits: u32, out: &mut Vec<u8>) {
+    assert!((1..=8).contains(&bits));
+    let start = out.len();
+    let total_bits = indices.len() * bits as usize;
+    out.resize(start + total_bits.div_ceil(8), 0);
+    let buf = &mut out[start..];
+    match bits {
+        1 => pack_words::<1>(indices, buf),
+        2 => pack_words::<2>(indices, buf),
+        4 => pack_words::<4>(indices, buf),
+        8 => buf.copy_from_slice(indices),
+        _ => pack_groups(indices, bits, buf),
+    }
+}
+
+/// Monomorphic kernel for the power-of-two widths 1/2/4: `64/B` elements
+/// per output u64 word, whole words stored with `to_le_bytes`.
+fn pack_words<const B: u32>(indices: &[u8], buf: &mut [u8]) {
+    let per = (64 / B) as usize;
+    let nf = indices.len() / per;
+    let (full, tail) = buf.split_at_mut(nf * 8);
+    for (chunk, dst) in indices.chunks_exact(per).zip(full.chunks_exact_mut(8)) {
+        let mut word = 0u64;
+        for (k, &idx) in chunk.iter().enumerate() {
+            debug_assert!((idx as u32) < (1 << B));
+            word |= (idx as u64) << (k as u32 * B);
+        }
+        dst.copy_from_slice(&word.to_le_bytes());
+    }
+    let rem = &indices[nf * per..];
+    if !rem.is_empty() {
+        let mut word = 0u64;
+        for (k, &idx) in rem.iter().enumerate() {
+            debug_assert!((idx as u32) < (1 << B));
+            word |= (idx as u64) << (k as u32 * B);
+        }
+        tail.copy_from_slice(&word.to_le_bytes()[..tail.len()]);
+    }
+}
+
+/// Generic word kernel for bits ∈ {3, 5, 6, 7}: 8 elements fill exactly
+/// `bits` whole bytes, so groups never straddle a byte boundary.
+fn pack_groups(indices: &[u8], bits: u32, buf: &mut [u8]) {
+    let b = bits as usize;
+    let nf = indices.len() / 8;
+    let (full, tail) = buf.split_at_mut(nf * b);
+    for (chunk, dst) in indices.chunks_exact(8).zip(full.chunks_exact_mut(b)) {
+        let mut word = 0u64;
+        for (k, &idx) in chunk.iter().enumerate() {
+            debug_assert!((idx as u32) < (1 << bits));
+            word |= (idx as u64) << (k as u32 * bits);
+        }
+        dst.copy_from_slice(&word.to_le_bytes()[..b]);
+    }
+    let rem = &indices[nf * 8..];
+    if !rem.is_empty() {
+        let mut word = 0u64;
+        for (k, &idx) in rem.iter().enumerate() {
+            debug_assert!((idx as u32) < (1 << bits));
+            word |= (idx as u64) << (k as u32 * bits);
+        }
+        tail.copy_from_slice(&word.to_le_bytes()[..tail.len()]);
+    }
+}
+
+/// Pack `indices` (< 2^bits each) at `bits` per element.
+pub fn pack_fixed(indices: &[u8], bits: u32) -> Vec<u8> {
+    let mut out = Vec::new();
+    pack_fixed_into(indices, bits, &mut out);
+    out
+}
+
+/// Retained scalar reference packer (per-element shift loop). The word
+/// kernels are asserted byte-identical to this; `perfbench` measures
+/// both in the same run.
+pub fn pack_fixed_scalar_into(indices: &[u8], bits: u32, out: &mut Vec<u8>) {
     assert!((1..=8).contains(&bits));
     let start = out.len();
     let total_bits = indices.len() * bits as usize;
@@ -31,17 +147,102 @@ pub fn pack_fixed_into(indices: &[u8], bits: u32, out: &mut Vec<u8>) {
     }
 }
 
-/// Pack `indices` (< 2^bits each) at `bits` per element.
-pub fn pack_fixed(indices: &[u8], bits: u32) -> Vec<u8> {
-    let mut out = Vec::new();
-    pack_fixed_into(indices, bits, &mut out);
-    out
+/// Unpack `n` elements at `bits` per element into a reused buffer
+/// (cleared first). Errors on a payload shorter than `n` elements need.
+pub fn unpack_fixed_into(bytes: &[u8], n: usize, bits: u32, out: &mut Vec<u8>) -> Result<()> {
+    assert!((1..=8).contains(&bits));
+    let need = (n * bits as usize).div_ceil(8);
+    if bytes.len() < need {
+        return Err(Error::Codec(format!(
+            "fixed-width payload too short: {} bytes for {n} elements at {bits} bits",
+            bytes.len()
+        )));
+    }
+    out.clear();
+    out.reserve(n);
+    let bytes = &bytes[..need];
+    match bits {
+        1 => unpack_words::<1>(bytes, n, out),
+        2 => unpack_words::<2>(bytes, n, out),
+        4 => unpack_words::<4>(bytes, n, out),
+        8 => out.extend_from_slice(&bytes[..n]),
+        _ => unpack_groups(bytes, n, bits, out),
+    }
+    Ok(())
 }
 
-/// Unpack `n` elements at `bits` per element into a reused buffer
-/// (cleared first).
-pub fn unpack_fixed_into(bytes: &[u8], n: usize, bits: u32, out: &mut Vec<u8>) {
+/// Monomorphic unpack for the power-of-two widths 1/2/4. `bytes` is the
+/// exact payload (`ceil(n·B/8)` bytes, checked by the caller).
+fn unpack_words<const B: u32>(bytes: &[u8], n: usize, out: &mut Vec<u8>) {
+    let per = (64 / B) as usize;
+    let mask = (1u64 << B) - 1;
+    let nf = n / per;
+    for chunk in bytes.chunks_exact(8).take(nf) {
+        let word = u64::from_le_bytes(chunk.try_into().unwrap());
+        for k in 0..per {
+            out.push(((word >> (k as u32 * B)) & mask) as u8);
+        }
+    }
+    let r = n - nf * per;
+    if r > 0 {
+        let tail = &bytes[nf * 8..];
+        let mut wb = [0u8; 8];
+        wb[..tail.len()].copy_from_slice(tail);
+        let word = u64::from_le_bytes(wb);
+        for k in 0..r {
+            out.push(((word >> (k as u32 * B)) & mask) as u8);
+        }
+    }
+}
+
+/// Generic word unpack for bits ∈ {3, 5, 6, 7}: one `bits`-byte group of
+/// 8 elements per iteration.
+fn unpack_groups(bytes: &[u8], n: usize, bits: u32, out: &mut Vec<u8>) {
+    let b = bits as usize;
+    let mask = (1u64 << bits) - 1;
+    let nf = n / 8;
+    for chunk in bytes.chunks_exact(b).take(nf) {
+        let mut wb = [0u8; 8];
+        wb[..b].copy_from_slice(chunk);
+        let word = u64::from_le_bytes(wb);
+        for k in 0..8u32 {
+            out.push(((word >> (k * bits)) & mask) as u8);
+        }
+    }
+    let r = n - nf * 8;
+    if r > 0 {
+        let tail = &bytes[nf * b..];
+        let mut wb = [0u8; 8];
+        wb[..tail.len()].copy_from_slice(tail);
+        let word = u64::from_le_bytes(wb);
+        for k in 0..r as u32 {
+            out.push(((word >> (k * bits)) & mask) as u8);
+        }
+    }
+}
+
+/// Unpack `n` elements at `bits` per element.
+pub fn unpack_fixed(bytes: &[u8], n: usize, bits: u32) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    unpack_fixed_into(bytes, n, bits, &mut out)?;
+    Ok(out)
+}
+
+/// Retained scalar reference unpacker (per-element shift/branch loop).
+pub fn unpack_fixed_scalar_into(
+    bytes: &[u8],
+    n: usize,
+    bits: u32,
+    out: &mut Vec<u8>,
+) -> Result<()> {
     assert!((1..=8).contains(&bits));
+    let need = (n * bits as usize).div_ceil(8);
+    if bytes.len() < need {
+        return Err(Error::Codec(format!(
+            "fixed-width payload too short: {} bytes for {n} elements at {bits} bits",
+            bytes.len()
+        )));
+    }
     let mask = ((1u16 << bits) - 1) as u8;
     out.clear();
     out.reserve(n);
@@ -56,14 +257,12 @@ pub fn unpack_fixed_into(bytes: &[u8], n: usize, bits: u32, out: &mut Vec<u8>) {
         out.push(v & mask);
         bitpos += bits as usize;
     }
+    Ok(())
 }
 
-/// Unpack `n` elements at `bits` per element.
-pub fn unpack_fixed(bytes: &[u8], n: usize, bits: u32) -> Vec<u8> {
-    let mut out = Vec::new();
-    unpack_fixed_into(bytes, n, bits, &mut out);
-    out
-}
+// --------------------------------------------------------------------
+// Base-s (radix) packing
+// --------------------------------------------------------------------
 
 /// Max digits of radix `s` that fit a u64: largest g with s^g ≤ 2^64.
 pub fn digits_per_word(s: usize) -> usize {
@@ -79,19 +278,124 @@ pub fn digits_per_word(s: usize) -> usize {
     }
 }
 
+/// Precomputed radix-s codec state: digits-per-word and the
+/// divide-by-reciprocal constants, hoisted out of the pack/unpack loops.
+/// Construct once per message; see the module docs for the exactness
+/// argument of the reciprocal trick.
+#[derive(Debug, Clone, Copy)]
+pub struct Radix {
+    s: u64,
+    g: usize,
+    kind: RadixKind,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum RadixKind {
+    /// Power-of-two radix: shift/mask.
+    Pow2 { shift: u32 },
+    /// `q̂ = (n·m) >> p` under-estimates `n/s` by at most 1 (see module
+    /// docs); one branchless remainder fixup makes it exact.
+    Mul { m: u64, p: u32 },
+}
+
+impl Radix {
+    /// `s` must be in [2, 256].
+    pub fn new(s: usize) -> Radix {
+        assert!((2..=256).contains(&s), "radix must be in [2, 256], got {s}");
+        let su = s as u64;
+        let g = digits_per_word(s);
+        let kind = if su.is_power_of_two() {
+            RadixKind::Pow2 { shift: su.trailing_zeros() }
+        } else {
+            let l = 63 - su.leading_zeros(); // ⌊log₂ s⌋ ≥ 1 for s ≥ 3
+            let p = 64 + l;
+            let m = ((1u128 << p) / su as u128) as u64;
+            RadixKind::Mul { m, p }
+        };
+        Radix { s: su, g, kind }
+    }
+
+    /// Digits of this radix per u64 word.
+    pub fn digits_per_word(&self) -> usize {
+        self.g
+    }
+
+    /// Exact `(n / s, n % s)` without a hardware division.
+    #[inline]
+    fn divmod(&self, n: u64) -> (u64, u64) {
+        match self.kind {
+            RadixKind::Pow2 { shift } => (n >> shift, n & (self.s - 1)),
+            RadixKind::Mul { m, p } => {
+                let q = ((n as u128 * m as u128) >> p) as u64;
+                let r = n - q * self.s;
+                let fix = (r >= self.s) as u64;
+                (q + fix, r - fix * self.s)
+            }
+        }
+    }
+
+    /// Append radix-encoded `indices` (< s each) as u64 words,
+    /// little-endian digits, to `out`. Sizes the output exactly,
+    /// accounting for any non-empty prefix already in `out`.
+    pub fn pack_into(&self, indices: &[u8], out: &mut Vec<u8>) {
+        let start = out.len();
+        let words = indices.len().div_ceil(self.g);
+        out.resize(start + words * 8, 0);
+        for (chunk, dst) in indices.chunks(self.g).zip(out[start..].chunks_exact_mut(8)) {
+            let mut word: u64 = 0;
+            for &d in chunk.iter().rev() {
+                debug_assert!((d as u64) < self.s);
+                word = word * self.s + d as u64;
+            }
+            dst.copy_from_slice(&word.to_le_bytes());
+        }
+    }
+
+    /// Decode `n` digits from packed u64 words into a reused buffer
+    /// (cleared first). Errors on a short or non-word-aligned payload.
+    pub fn unpack_into(&self, bytes: &[u8], n: usize, out: &mut Vec<u8>) -> Result<()> {
+        let g = self.g;
+        let need = n
+            .div_ceil(g)
+            .checked_mul(8)
+            .ok_or_else(|| Error::Codec("digit count overflows".into()))?;
+        if bytes.len() < need {
+            return Err(Error::Codec(format!(
+                "base-{} payload too short: {} bytes for {n} digits (need {need})",
+                self.s,
+                bytes.len()
+            )));
+        }
+        out.clear();
+        out.reserve(n);
+        let nf = n / g; // words drained completely
+        let mut chunks = bytes.chunks_exact(8);
+        for chunk in chunks.by_ref().take(nf) {
+            let mut word = u64::from_le_bytes(chunk.try_into().unwrap());
+            for _ in 0..g {
+                let (q, r) = self.divmod(word);
+                out.push(r as u8);
+                word = q;
+            }
+        }
+        let rem = n - nf * g;
+        if rem > 0 {
+            let chunk = chunks.next().expect("length checked above");
+            let mut word = u64::from_le_bytes(chunk.try_into().unwrap());
+            for _ in 0..rem {
+                let (q, r) = self.divmod(word);
+                out.push(r as u8);
+                word = q;
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Append radix-s-encoded indices (< s each) as u64 words, little-endian
 /// digits, to `out`.
 pub fn pack_base_s_into(indices: &[u8], s: usize, out: &mut Vec<u8>) {
-    let g = digits_per_word(s);
-    out.reserve(indices.len().div_ceil(g) * 8);
-    for chunk in indices.chunks(g) {
-        let mut word: u64 = 0;
-        for &d in chunk.iter().rev() {
-            debug_assert!((d as usize) < s);
-            word = word * s as u64 + d as u64;
-        }
-        out.extend_from_slice(&word.to_le_bytes());
-    }
+    Radix::new(s).pack_into(indices, out);
 }
 
 /// Radix-encode indices (< s each) into u64 words, little-endian digits.
@@ -102,32 +406,52 @@ pub fn pack_base_s(indices: &[u8], s: usize) -> Vec<u8> {
 }
 
 /// Decode `n` radix-s digits from packed u64 words into a reused buffer
-/// (cleared first).
-pub fn unpack_base_s_into(bytes: &[u8], n: usize, s: usize, out: &mut Vec<u8>) {
+/// (cleared first). Errors on truncated/non-word-aligned payloads.
+pub fn unpack_base_s_into(bytes: &[u8], n: usize, s: usize, out: &mut Vec<u8>) -> Result<()> {
+    Radix::new(s).unpack_into(bytes, n, out)
+}
+
+/// Decode `n` radix-s digits from packed u64 words.
+pub fn unpack_base_s(bytes: &[u8], n: usize, s: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    unpack_base_s_into(bytes, n, s, &mut out)?;
+    Ok(out)
+}
+
+/// Retained scalar reference decoder (`%`/`/` per digit); the reciprocal
+/// path is asserted identical to this, and `perfbench` measures both.
+pub fn unpack_base_s_scalar_into(
+    bytes: &[u8],
+    n: usize,
+    s: usize,
+    out: &mut Vec<u8>,
+) -> Result<()> {
     let g = digits_per_word(s);
+    if bytes.len() < n.div_ceil(g) * 8 {
+        return Err(Error::Codec(format!(
+            "base-{s} payload too short: {} bytes for {n} digits",
+            bytes.len()
+        )));
+    }
     out.clear();
     out.reserve(n);
-    for chunk in bytes.chunks(8) {
-        let mut word = u64::from_le_bytes(chunk.try_into().expect("word-aligned payload"));
+    for chunk in bytes.chunks_exact(8) {
+        let mut word = u64::from_le_bytes(chunk.try_into().unwrap());
         for _ in 0..g {
             if out.len() == n {
-                break;
+                return Ok(());
             }
             out.push((word % s as u64) as u8);
             word /= s as u64;
         }
         if out.len() == n {
-            break;
+            return Ok(());
         }
     }
-    assert_eq!(out.len(), n, "payload too short");
-}
-
-/// Decode `n` radix-s digits from packed u64 words.
-pub fn unpack_base_s(bytes: &[u8], n: usize, s: usize) -> Vec<u8> {
-    let mut out = Vec::new();
-    unpack_base_s_into(bytes, n, s, &mut out);
-    out
+    if out.len() != n {
+        return Err(Error::Codec("payload too short".into()));
+    }
+    Ok(())
 }
 
 /// Effective bits/element of base-s packing (asymptotic, exact per word).
@@ -153,9 +477,45 @@ mod tests {
                 let idx = rand_indices(n, s, bits as u64 * 100 + n as u64);
                 let packed = pack_fixed(&idx, bits);
                 assert_eq!(packed.len(), (n * bits as usize).div_ceil(8));
-                assert_eq!(unpack_fixed(&packed, n, bits), idx, "bits={bits} n={n}");
+                assert_eq!(unpack_fixed(&packed, n, bits).unwrap(), idx, "bits={bits} n={n}");
             }
         }
+    }
+
+    /// Word kernels vs the retained scalar reference: byte-for-byte, for
+    /// every width, across group-boundary lengths (the big sweep lives in
+    /// `rust/tests/codec_differential.rs`).
+    #[test]
+    fn word_kernels_match_scalar_reference() {
+        for bits in 1..=8u32 {
+            let s = 1usize << bits;
+            for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 63, 64, 65, 127, 128, 129, 500] {
+                let idx = rand_indices(n, s, bits as u64 * 999 + n as u64);
+                let mut word = vec![0xA5u8; 3];
+                let mut scalar = vec![0xA5u8; 3];
+                pack_fixed_into(&idx, bits, &mut word);
+                pack_fixed_scalar_into(&idx, bits, &mut scalar);
+                assert_eq!(word, scalar, "pack bits={bits} n={n}");
+                let mut a = Vec::new();
+                let mut b = Vec::new();
+                unpack_fixed_into(&word[3..], n, bits, &mut a).unwrap();
+                unpack_fixed_scalar_into(&word[3..], n, bits, &mut b).unwrap();
+                assert_eq!(a, b, "unpack bits={bits} n={n}");
+                assert_eq!(a, idx, "roundtrip bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_unpack_rejects_short_payload() {
+        let idx = rand_indices(100, 8, 3);
+        let packed = pack_fixed(&idx, 3);
+        let mut out = Vec::new();
+        assert!(unpack_fixed_into(&packed[..packed.len() - 1], 100, 3, &mut out).is_err());
+        assert!(unpack_fixed_scalar_into(&packed[..5], 100, 3, &mut out).is_err());
+        assert!(unpack_fixed(&[], 1, 1).is_err());
+        // exact payload still decodes
+        assert_eq!(unpack_fixed(&packed, 100, 3).unwrap(), idx);
     }
 
     #[test]
@@ -168,15 +528,64 @@ mod tests {
         assert_eq!(digits_per_word(256), 8);
     }
 
+    /// The reciprocal divmod must agree with hardware `/`/`%` for every
+    /// radix and adversarial dividends (word-boundary values, near
+    /// multiples, random u64s).
+    #[test]
+    fn reciprocal_divmod_exact() {
+        for s in 2..=256usize {
+            let r = Radix::new(s);
+            let su = s as u64;
+            let mut cases = vec![
+                0u64,
+                1,
+                su - 1,
+                su,
+                su + 1,
+                su * su,
+                u64::MAX,
+                u64::MAX - 1,
+                u64::MAX / su,
+                (u64::MAX / su) * su,
+                (u64::MAX / su) * su - 1,
+            ];
+            for k in [1u32, 7, 31, 32, 33, 62, 63] {
+                let p = 1u64 << k;
+                cases.extend([p - 1, p, p + 1]);
+            }
+            let mut rng = Rng::seed_from(s as u64);
+            cases.extend((0..64).map(|_| rng.next_u64()));
+            for n in cases {
+                assert_eq!(r.divmod(n), (n / su, n % su), "s={s} n={n}");
+            }
+        }
+    }
+
     #[test]
     fn base_s_roundtrip() {
         for s in [2usize, 3, 5, 9, 17] {
             for n in [0usize, 1, 19, 20, 21, 40, 1000] {
                 let idx = rand_indices(n, s, s as u64 * 1000 + n as u64);
                 let packed = pack_base_s(&idx, s);
-                assert_eq!(unpack_base_s(&packed, n, s), idx, "s={s} n={n}");
+                assert_eq!(unpack_base_s(&packed, n, s).unwrap(), idx, "s={s} n={n}");
             }
         }
+    }
+
+    #[test]
+    fn base_s_unpack_rejects_short_or_misaligned() {
+        let idx = rand_indices(100, 5, 7);
+        let packed = pack_base_s(&idx, 5);
+        let mut out = Vec::new();
+        // truncated to a non-word boundary
+        assert!(unpack_base_s_into(&packed[..packed.len() - 3], 100, 5, &mut out).is_err());
+        // truncated to a word boundary but still short
+        assert!(unpack_base_s_into(&packed[..packed.len() - 8], 100, 5, &mut out).is_err());
+        assert!(unpack_base_s_into(&[], 1, 5, &mut out).is_err());
+        assert!(unpack_base_s_scalar_into(&packed[..8], 100, 5, &mut out).is_err());
+        // exact payload still decodes, and extra trailing bytes are ignored
+        assert!(unpack_base_s_into(&packed, 100, 5, &mut out).is_ok());
+        assert_eq!(out, idx);
     }
 
     #[test]
@@ -194,10 +603,10 @@ mod tests {
         // clear semantics for unpackers
         let packed = pack_base_s(&idx, 5);
         let mut scratch = vec![9u8; 7];
-        unpack_base_s_into(&packed, idx.len(), 5, &mut scratch);
+        unpack_base_s_into(&packed, idx.len(), 5, &mut scratch).unwrap();
         assert_eq!(scratch, idx);
         let packed_f = pack_fixed(&idx, 3);
-        unpack_fixed_into(&packed_f, idx.len(), 3, &mut scratch);
+        unpack_fixed_into(&packed_f, idx.len(), 3, &mut scratch).unwrap();
         assert_eq!(scratch, idx);
     }
 

@@ -25,6 +25,15 @@
 //! [`slice_elements_into`] cuts a bucket-aligned element range out of an
 //! encoded message as a standalone message — the ring all-reduce uses it
 //! to ship each node's original quantized chunks without requantizing.
+//! For the parallel bucket pipeline (`quant::parallel`),
+//! [`encode_quantized_header_into`] + [`BucketEncoder`] let shards append
+//! payload segments that concatenate byte-identically to [`encode`], and
+//! [`decode_slice_into`] decodes a bucket-aligned element range into a
+//! disjoint slice of a shared output buffer. Packing state (fixed width,
+//! radix reciprocal) is precomputed once per message, not per bucket.
+//! Every decode path is fallible end to end: malformed wire bytes —
+//! truncated headers or payloads, bad scheme names, length lies — return
+//! `Err`, never panic.
 
 pub mod bitpack;
 
@@ -67,17 +76,72 @@ pub fn encode_fp(g: &[f32]) -> Vec<u8> {
 /// The hot path: no per-bucket allocation.
 pub fn encode_into(qg: &QuantizedGrad, scheme: &str, packing: Packing, out: &mut Vec<u8>) {
     let s = qg.buckets.first().map(|b| b.levels.len()).unwrap_or(0);
-    let flags = if packing == Packing::BaseS { FLAG_BASE_S } else { 0 };
     out.clear();
-    write_header(out, flags, s as u8, scheme, qg.total_len as u64, qg.bucket_size as u32);
-    for b in &qg.buckets {
-        debug_assert_eq!(b.levels.len(), s, "all buckets must share s");
+    encode_quantized_header_into(s, scheme, packing, qg.total_len, qg.bucket_size, out);
+    encode_buckets_into(&qg.buckets, s, packing, out);
+}
+
+/// Append the wire header of a quantized message (the parallel pipeline
+/// writes the header once, then has its shards append bucket payloads
+/// via [`BucketEncoder`]).
+pub fn encode_quantized_header_into(
+    s: usize,
+    scheme: &str,
+    packing: Packing,
+    total: usize,
+    bucket: usize,
+    out: &mut Vec<u8>,
+) {
+    let flags = if packing == Packing::BaseS { FLAG_BASE_S } else { 0 };
+    write_header(out, flags, s as u8, scheme, total as u64, bucket as u32);
+}
+
+/// Append the payload bytes (level table + packed indices) of a run of
+/// buckets to `out`. Byte-identical to the corresponding span of
+/// [`encode`]'s payload.
+pub fn encode_buckets_into(
+    buckets: &[QuantizedBucket],
+    s: usize,
+    packing: Packing,
+    out: &mut Vec<u8>,
+) {
+    if buckets.is_empty() {
+        return;
+    }
+    let enc = BucketEncoder::new(s, packing);
+    for b in buckets {
+        enc.encode_bucket_into(b, out);
+    }
+}
+
+/// Per-message packing state (radix reciprocal, fixed width) hoisted out
+/// of the per-bucket encode loop; `Copy` so pipeline shards share it.
+#[derive(Debug, Clone, Copy)]
+pub struct BucketEncoder {
+    s: usize,
+    bits: u32,
+    radix: Option<bitpack::Radix>,
+}
+
+impl BucketEncoder {
+    pub fn new(s: usize, packing: Packing) -> BucketEncoder {
+        debug_assert!(s >= 2, "quantized buckets need at least 2 levels");
+        BucketEncoder {
+            s,
+            bits: bits_for(s),
+            radix: (packing == Packing::BaseS).then(|| bitpack::Radix::new(s)),
+        }
+    }
+
+    /// Append one bucket's level table + packed indices to `out`.
+    pub fn encode_bucket_into(&self, b: &QuantizedBucket, out: &mut Vec<u8>) {
+        debug_assert_eq!(b.levels.len(), self.s, "all buckets must share s");
         for lv in &b.levels {
             out.extend_from_slice(&lv.to_le_bytes());
         }
-        match packing {
-            Packing::Fixed => bitpack::pack_fixed_into(&b.indices, bits_for(s), out),
-            Packing::BaseS => bitpack::pack_base_s_into(&b.indices, s, out),
+        match &self.radix {
+            Some(r) => r.pack_into(&b.indices, out),
+            None => bitpack::pack_fixed_into(&b.indices, self.bits, out),
         }
     }
 }
@@ -166,6 +230,12 @@ fn parse(bytes: &[u8]) -> Result<Wire<'_>> {
     // size is computable up front — reject before any allocation sized by
     // attacker-controlled fields (found by the byte-corruption fuzz test).
     let remaining = bytes.len() - r.pos;
+    // Every encoder frames bucket ≥ 1 (FP uses len.max(1)), so a zero
+    // here is corruption; rejecting it for FP too keeps the parallel
+    // decode's bucket-grid sharding from degenerating to empty ranges.
+    if bucket == 0 {
+        return Err(Error::Codec("bucket size 0".into()));
+    }
     if flags & FLAG_FP != 0 {
         let need = total
             .checked_mul(4)
@@ -179,9 +249,6 @@ fn parse(bytes: &[u8]) -> Result<Wire<'_>> {
     }
     if s < 2 {
         return Err(Error::Codec(format!("quantized message with s={s}")));
-    }
-    if bucket == 0 {
-        return Err(Error::Codec("bucket size 0".into()));
     }
     let packing = if flags & FLAG_BASE_S != 0 { Packing::BaseS } else { Packing::Fixed };
     // Coarse bound first: ≥1 bit per element, so total can never exceed
@@ -224,7 +291,10 @@ pub fn decode(bytes: &[u8]) -> Result<Decoded> {
         return Ok(Decoded::Fp(out));
     }
     let s = w.s;
-    let base_s = w.packing() == Packing::BaseS;
+    let radix = match w.packing() {
+        Packing::BaseS => Some(bitpack::Radix::new(s)),
+        Packing::Fixed => None,
+    };
     let n_buckets = w.total.div_ceil(w.bucket);
     let mut buckets = Vec::with_capacity(n_buckets);
     for bi in 0..n_buckets {
@@ -235,11 +305,11 @@ pub fn decode(bytes: &[u8]) -> Result<Decoded> {
         }
         let payload_len = packed_len(len, s, w.packing());
         let payload = r.take(payload_len)?;
-        let indices = if base_s {
-            bitpack::unpack_base_s(payload, len, s)
-        } else {
-            bitpack::unpack_fixed(payload, len, bits_for(s))
-        };
+        let mut indices = Vec::new();
+        match &radix {
+            Some(rx) => rx.unpack_into(payload, len, &mut indices)?,
+            None => bitpack::unpack_fixed_into(payload, len, bits_for(s), &mut indices)?,
+        }
         if indices.iter().any(|&i| (i as usize) >= s) {
             return Err(Error::Codec("index out of level range".into()));
         }
@@ -266,45 +336,124 @@ pub struct DecodeScratch {
 pub fn decode_flat_into(bytes: &[u8], out: &mut Vec<f32>, scratch: &mut DecodeScratch) -> Result<()> {
     let w = parse(bytes)?;
     out.clear();
-    out.reserve(w.total);
     if w.is_fp() {
+        out.reserve(w.total);
         for chunk in w.payload.chunks_exact(4) {
             out.push(f32::from_le_bytes(chunk.try_into().unwrap()));
         }
         return Ok(());
     }
-    let s = w.s;
-    let base_s = w.packing() == Packing::BaseS;
+    out.resize(w.total, 0.0);
     let n_buckets = w.total.div_ceil(w.bucket);
-    let mut pos = 0usize;
-    for bi in 0..n_buckets {
-        let len = if bi + 1 == n_buckets { tail_len(w.total, w.bucket) } else { w.bucket };
+    decode_bucket_run(&w, 0, n_buckets, out, scratch)
+}
+
+/// Decode elements `[e0, e1)` of an encoded message into `out`
+/// (`out.len() == e1 − e0`). Quantized cuts must be aligned to the
+/// message's bucket grid (`e % bucket == 0` or `e == total` at both
+/// ends); FP messages slice at any element boundary. Disjoint ranges can
+/// be decoded concurrently into disjoint slices of one output buffer —
+/// the parallel decode path of `quant::parallel::BucketPipeline`.
+pub fn decode_slice_into(
+    bytes: &[u8],
+    e0: usize,
+    e1: usize,
+    out: &mut [f32],
+    scratch: &mut DecodeScratch,
+) -> Result<()> {
+    let w = parse(bytes)?;
+    if e0 > e1 || e1 > w.total {
+        return Err(Error::Codec(format!(
+            "slice {e0}..{e1} out of range for {} elements",
+            w.total
+        )));
+    }
+    if out.len() != e1 - e0 {
+        return Err(Error::Shape(format!(
+            "slice {e0}..{e1} decoded into a {}-element buffer",
+            out.len()
+        )));
+    }
+    if w.is_fp() {
+        let src = w.payload[e0 * 4..e1 * 4].chunks_exact(4);
+        for (o, chunk) in out.iter_mut().zip(src) {
+            *o = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        return Ok(());
+    }
+    let d = w.bucket;
+    let aligned = |e: usize| e % d == 0 || e == w.total;
+    if !aligned(e0) || !aligned(e1) {
+        return Err(Error::Codec(format!(
+            "slice {e0}..{e1} not aligned to bucket size {d}"
+        )));
+    }
+    if e0 == e1 {
+        return Ok(());
+    }
+    decode_bucket_run(&w, e0 / d, e1.div_ceil(d), out, scratch)
+}
+
+/// Shared quantized decode loop over buckets `[b0, b1)` of a validated
+/// message, writing the dequantized values into `out` (whose length must
+/// equal the covered element count). `parse()` validated the exact
+/// payload length, so the offset reads cannot run past the end.
+fn decode_bucket_run(
+    w: &Wire<'_>,
+    b0: usize,
+    b1: usize,
+    out: &mut [f32],
+    scratch: &mut DecodeScratch,
+) -> Result<()> {
+    let s = w.s;
+    let radix = match w.packing() {
+        Packing::BaseS => Some(bitpack::Radix::new(s)),
+        Packing::Fixed => None,
+    };
+    let bits = bits_for(s.max(2));
+    let n_buckets = w.total.div_ceil(w.bucket);
+    // Hoisted per-bucket byte counts: only the final bucket can be ragged.
+    let tail = tail_len(w.total, w.bucket);
+    let full_packed = packed_len(w.bucket, s, w.packing());
+    let tail_packed = packed_len(tail, s, w.packing());
+    let mut pos = b0 * (s * 4 + full_packed);
+    let mut outpos = 0usize;
+    for bi in b0..b1 {
+        let is_tail = bi + 1 == n_buckets;
+        let len = if is_tail { tail } else { w.bucket };
         scratch.levels.clear();
         for _ in 0..s {
-            // parse() validated the exact payload length, so these reads
-            // cannot run past the end.
             scratch
                 .levels
                 .push(f32::from_le_bytes(w.payload[pos..pos + 4].try_into().unwrap()));
             pos += 4;
         }
-        let payload_len = packed_len(len, s, w.packing());
+        let payload_len = if is_tail { tail_packed } else { full_packed };
         let packed = &w.payload[pos..pos + payload_len];
         pos += payload_len;
-        if base_s {
-            bitpack::unpack_base_s_into(packed, len, s, &mut scratch.indices);
-        } else {
-            bitpack::unpack_fixed_into(packed, len, bits_for(s), &mut scratch.indices);
+        match &radix {
+            Some(r) => r.unpack_into(packed, len, &mut scratch.indices)?,
+            None => bitpack::unpack_fixed_into(packed, len, bits, &mut scratch.indices)?,
         }
         for &i in &scratch.indices {
             let lv = scratch
                 .levels
                 .get(i as usize)
                 .ok_or_else(|| Error::Codec("index out of level range".into()))?;
-            out.push(*lv);
+            out[outpos] = *lv;
+            outpos += 1;
         }
     }
+    debug_assert_eq!(outpos, out.len());
     Ok(())
+}
+
+/// Cheap header peek: `(total element count, bucket size)` of an encoded
+/// message, with the full O(1) header/length validation of the decoders
+/// but no payload work. FP messages report their framing bucket size.
+pub fn peek_shape(bytes: &[u8]) -> Result<(usize, usize)> {
+    let w = parse(bytes)?;
+    Ok((w.total, w.bucket))
 }
 
 /// Cut elements `[e0, e1)` out of an encoded message as a standalone

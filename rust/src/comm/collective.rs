@@ -26,6 +26,7 @@ use std::sync::mpsc::Receiver;
 use crate::codec::{self, Packing};
 use crate::error::{Error, Result};
 use crate::quant::bucket::{BucketQuantizer, QuantizedGrad};
+use crate::quant::parallel::BucketPipeline;
 use crate::quant::{self, Quantizer};
 use crate::tensor::rng::Rng;
 
@@ -188,8 +189,9 @@ impl ExchangeConfig {
 }
 
 /// Everything a topology needs to know about the wire format: how
-/// gradients are quantized and packed, and the seed its internal RNG
-/// streams derive from (downlink requantization, ring hop requantization).
+/// gradients are quantized and packed, the seed its internal RNG
+/// streams derive from (downlink requantization, ring hop
+/// requantization), and how many codec threads each node may use.
 #[derive(Debug, Clone)]
 pub struct WireSpec {
     /// Quantizer name (see [`quant::from_name`]); `"fp"` disables
@@ -201,6 +203,13 @@ pub struct WireSpec {
     pub clip_factor: Option<f32>,
     pub packing: Packing,
     pub seed: u64,
+    /// Codec threads per node. `1` (the default) is the serial legacy
+    /// path — single advancing RNG stream across buckets, bit-identical
+    /// to the pre-pipeline wire bytes. Any other value routes
+    /// quantize+encode and the PS decode+reduce through the parallel
+    /// [`BucketPipeline`] with per-bucket RNG streams; the wire bytes are
+    /// then identical for every thread count (`0` = auto-detect cores).
+    pub threads: usize,
 }
 
 impl WireSpec {
@@ -211,18 +220,28 @@ impl WireSpec {
             clip_factor: None,
             packing: Packing::BaseS,
             seed: 0,
+            threads: 1,
         }
+    }
+
+    /// Builder-style codec thread count override.
+    pub fn with_threads(mut self, threads: usize) -> WireSpec {
+        self.threads = threads;
+        self
     }
 }
 
 /// A [`WireSpec`] instantiated into a working encoder: quantizer + bucket
-/// splitter + packing. Owned per node so encoding is lock-free.
+/// splitter + packing (+ optional parallel pipeline). Owned per node so
+/// encoding is lock-free.
 pub struct GradCodec {
     method: String,
     packing: Packing,
     quantizer: Box<dyn Quantizer>,
     bucketq: BucketQuantizer,
     is_fp: bool,
+    pipeline: Option<BucketPipeline>,
+    dscratch: codec::DecodeScratch,
 }
 
 impl GradCodec {
@@ -233,13 +252,24 @@ impl GradCodec {
             Some(c) => BucketQuantizer::with_clip(spec.bucket_size, c),
             None => BucketQuantizer::new(spec.bucket_size),
         };
+        let pipeline = match spec.threads {
+            1 => None,
+            t => Some(BucketPipeline::new(t)),
+        };
         Ok(GradCodec {
             method: spec.method.clone(),
             packing: spec.packing,
             quantizer,
             bucketq,
             is_fp,
+            pipeline,
+            dscratch: codec::DecodeScratch::default(),
         })
+    }
+
+    /// Whether this codec runs the parallel bucket pipeline.
+    pub fn is_parallel(&self) -> bool {
+        self.pipeline.is_some()
     }
 
     pub fn is_fp(&self) -> bool {
@@ -253,8 +283,13 @@ impl GradCodec {
     /// Quantize (unless FP or empty) and encode `g` into a reused message
     /// buffer. `qg` is the reusable quantization scratch — steady-state
     /// calls perform no per-bucket allocation.
+    ///
+    /// Serial codecs (`threads == 1`) advance `rng` through every bucket
+    /// in order (the pre-pipeline wire bytes, bit-for-bit). Parallel
+    /// codecs draw one round key from `rng` and give each bucket its own
+    /// derived stream, so the bytes are identical for every thread count.
     pub fn encode_into(
-        &self,
+        &mut self,
         g: &[f32],
         rng: &mut Rng,
         qg: &mut QuantizedGrad,
@@ -262,9 +297,36 @@ impl GradCodec {
     ) {
         if self.is_fp || g.is_empty() {
             codec::encode_fp_into(g, msg);
-        } else {
-            self.bucketq.quantize_into(g, self.quantizer.as_ref(), rng, qg);
-            codec::encode_into(qg, &self.method, self.packing, msg);
+            return;
+        }
+        match &mut self.pipeline {
+            None => {
+                self.bucketq.quantize_into(g, self.quantizer.as_ref(), rng, qg);
+                codec::encode_into(qg, &self.method, self.packing, msg);
+            }
+            Some(pipe) => {
+                let round_key = rng.next_u64();
+                pipe.encode_into(
+                    &self.bucketq,
+                    self.quantizer.as_ref(),
+                    g,
+                    round_key,
+                    &self.method,
+                    self.packing,
+                    msg,
+                );
+            }
+        }
+    }
+
+    /// Decode a wire message into a flat f32 buffer, using the parallel
+    /// pipeline when this codec has one (serial otherwise). The trainer's
+    /// per-step error measurement uses this on the parallel path, where
+    /// no [`QuantizedGrad`] is materialized.
+    pub fn decode_flat_into(&mut self, bytes: &[u8], out: &mut Vec<f32>) -> Result<()> {
+        match &mut self.pipeline {
+            Some(pipe) => pipe.decode_flat_into(bytes, out),
+            None => codec::decode_flat_into(bytes, out, &mut self.dscratch),
         }
     }
 }
@@ -391,7 +453,7 @@ pub fn run_once(
             let g: &[f32] = &grads[w];
             let spec = spec.clone();
             scope.spawn(move || {
-                let gc = GradCodec::new(&spec).expect("spec validated by build_topology");
+                let mut gc = GradCodec::new(&spec).expect("spec validated by build_topology");
                 let mut rng = Rng::stream(spec.seed, 2_000 + w as u64);
                 let mut qg = QuantizedGrad::default();
                 let mut msg = Vec::new();
@@ -466,12 +528,12 @@ mod tests {
         let mut qg = QuantizedGrad::default();
         let mut msg = Vec::new();
 
-        let fp = GradCodec::new(&WireSpec::new("fp", 128)).unwrap();
+        let mut fp = GradCodec::new(&WireSpec::new("fp", 128)).unwrap();
         assert!(fp.is_fp());
         fp.encode_into(&g, &mut rng, &mut qg, &mut msg);
         assert_eq!(msg, codec::encode_fp(&g));
 
-        let tg = GradCodec::new(&WireSpec::new("terngrad", 128)).unwrap();
+        let mut tg = GradCodec::new(&WireSpec::new("terngrad", 128)).unwrap();
         assert!(!tg.is_fp());
         assert_eq!(tg.bucket_size(), 128);
         tg.encode_into(&g, &mut rng, &mut qg, &mut msg);
@@ -485,6 +547,38 @@ mod tests {
         assert!(codec::decode(&msg).unwrap().is_empty());
 
         assert!(GradCodec::new(&WireSpec::new("bogus", 128)).is_err());
+    }
+
+    /// Parallel codecs must emit identical wire bytes for every thread
+    /// count (per-bucket RNG streams), and the default `threads == 1`
+    /// codec must keep the legacy single-stream bytes.
+    #[test]
+    fn grad_codec_threads_bit_identity() {
+        let g: Vec<f32> = {
+            let mut rng = Rng::seed_from(9);
+            (0..2500).map(|_| rng.gaussian_f32()).collect()
+        };
+        let mut qg = QuantizedGrad::default();
+        // legacy serial path: same bytes as quantize_into + encode
+        let mut serial = GradCodec::new(&WireSpec::new("orq-5", 256)).unwrap();
+        let mut legacy = Vec::new();
+        serial.encode_into(&g, &mut Rng::seed_from(4), &mut qg, &mut legacy);
+        let q = quant::from_name("orq-5").unwrap();
+        let mut want = QuantizedGrad::default();
+        BucketQuantizer::new(256).quantize_into(&g, q.as_ref(), &mut Rng::seed_from(4), &mut want);
+        assert_eq!(legacy, codec::encode(&want, "orq-5", Packing::BaseS));
+        // parallel path: thread-count independent
+        let mut reference: Option<Vec<u8>> = None;
+        for threads in [2usize, 3, 8] {
+            let spec = WireSpec::new("orq-5", 256).with_threads(threads);
+            let mut gc = GradCodec::new(&spec).unwrap();
+            let mut msg = Vec::new();
+            gc.encode_into(&g, &mut Rng::seed_from(4), &mut qg, &mut msg);
+            match &reference {
+                None => reference = Some(msg.clone()),
+                Some(r) => assert_eq!(&msg, r, "threads={threads}"),
+            }
+        }
     }
 
     #[test]

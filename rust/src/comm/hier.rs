@@ -30,6 +30,10 @@
 //!    downlink option: like the ring, the topology rejects
 //!    `quantize_downlink`.
 //!
+//! **Codec threads.** Like the ring, every node's [`GradCodec`] honors
+//! `WireSpec::threads` for its quantize/requantize work (parallel
+//! per-bucket pipeline, deterministic and thread-count invariant).
+//!
 //! **Accounting.** Wire bytes are exact encoded sizes, kept per edge
 //! class ([`crate::comm::CommStats::wire_bytes_intra`] /
 //! [`wire_bytes_inter`](crate::comm::CommStats::wire_bytes_inter)).

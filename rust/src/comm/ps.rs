@@ -17,6 +17,7 @@ use super::link::{Link, LinkMap, TrafficMeter};
 use crate::codec::{self, DecodeScratch};
 use crate::error::{Error, Result};
 use crate::quant::bucket::QuantizedGrad;
+use crate::quant::parallel::BucketPipeline;
 use crate::tensor::rng::Rng;
 
 /// Message from a worker: (worker id, encoded gradient bytes).
@@ -125,7 +126,11 @@ impl WorkerHandle {
 /// [`Collective`] over the parameter-server star: gather L encoded
 /// uploads, decode + average in f64, optionally requantize the downlink
 /// (paper §4 option b), broadcast. All decode/aggregate scratch is reused
-/// across rounds — the aggregation loop performs no per-bucket allocation.
+/// across rounds — the aggregation loop performs no per-bucket
+/// allocation. With `WireSpec::threads != 1` the decode+reduce runs
+/// through the parallel [`BucketPipeline`] (bit-identical sums, see
+/// `quant::parallel`); `threads == 1` keeps the serial loop as the
+/// retained baseline `perfbench` measures against.
 pub struct PsCollective {
     server: ParameterServer,
     codec: GradCodec,
@@ -136,6 +141,7 @@ pub struct PsCollective {
     msg: Vec<u8>,
     qg: QuantizedGrad,
     dscratch: DecodeScratch,
+    pipeline: Option<BucketPipeline>,
 }
 
 impl PsCollective {
@@ -170,6 +176,10 @@ impl PsCollective {
                 msg: Vec::new(),
                 qg: QuantizedGrad::default(),
                 dscratch: DecodeScratch::default(),
+                pipeline: match spec.threads {
+                    1 => None,
+                    t => Some(BucketPipeline::new(t)),
+                },
             },
             ends,
         ))
@@ -183,25 +193,31 @@ impl Collective for PsCollective {
 
     fn round(&mut self, mean_out: &mut Vec<f32>) -> Result<()> {
         let uploads = self.server.gather()?;
-        self.acc.clear();
-        let mut expect: Option<usize> = None;
-        for u in &uploads {
-            codec::decode_flat_into(u, &mut self.flat, &mut self.dscratch)?;
-            match expect {
-                None => {
-                    expect = Some(self.flat.len());
-                    self.acc.resize(self.flat.len(), 0.0);
+        match &mut self.pipeline {
+            Some(pipe) => pipe.decode_reduce_into(&uploads, &mut self.acc)?,
+            None => {
+                // Serial baseline: decode each upload, add element-wise.
+                self.acc.clear();
+                let mut expect: Option<usize> = None;
+                for u in &uploads {
+                    codec::decode_flat_into(u, &mut self.flat, &mut self.dscratch)?;
+                    match expect {
+                        None => {
+                            expect = Some(self.flat.len());
+                            self.acc.resize(self.flat.len(), 0.0);
+                        }
+                        Some(n) if n != self.flat.len() => {
+                            return Err(Error::Shape(format!(
+                                "worker gradient has {} elements, expected {n}",
+                                self.flat.len()
+                            )))
+                        }
+                        Some(_) => {}
+                    }
+                    for (a, v) in self.acc.iter_mut().zip(&self.flat) {
+                        *a += *v as f64;
+                    }
                 }
-                Some(n) if n != self.flat.len() => {
-                    return Err(Error::Shape(format!(
-                        "worker gradient has {} elements, expected {n}",
-                        self.flat.len()
-                    )))
-                }
-                Some(_) => {}
-            }
-            for (a, v) in self.acc.iter_mut().zip(&self.flat) {
-                *a += *v as f64;
             }
         }
         let inv = 1.0 / uploads.len() as f64;

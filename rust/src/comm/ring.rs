@@ -26,6 +26,11 @@
 //! relies on to keep parameter replicas in sync). FP gradients take the
 //! same path losslessly.
 //!
+//! **Codec threads.** Each worker's [`GradCodec`] honors
+//! `WireSpec::threads`: with a parallel codec the per-hop requantization
+//! runs the bucket pipeline (per-bucket RNG streams — still fully
+//! deterministic per worker, and thread-count invariant).
+//!
 //! **Accounting.** Wire bytes are the exact encoded sizes of every hop
 //! message (they match [`crate::codec::wire_size`] per chunk).
 //! Simulated time is the critical path under the synchronous-step model:

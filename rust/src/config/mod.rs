@@ -230,6 +230,11 @@ pub struct TrainConfig {
     /// Worker groups for the hierarchical topology (`groups = N`; must
     /// divide `workers`). Flat topologies require 1.
     pub groups: usize,
+    /// Codec threads per node (`threads = N`): 1 = serial legacy path,
+    /// 0 = auto-detect cores, N ≥ 2 = parallel per-bucket
+    /// quantize+encode / decode+reduce pipeline. Wire bytes and training
+    /// results are identical for every parallel thread count.
+    pub threads: usize,
     /// Per-edge-class simulated link model (`intra_bandwidth`,
     /// `intra_latency`, `inter_bandwidth`, `inter_latency`).
     pub links: LinkConfig,
@@ -257,6 +262,7 @@ impl Default for TrainConfig {
             quantize_downlink: false,
             topology: Topology::Ps,
             groups: 1,
+            threads: 1,
             links: LinkConfig::default(),
         }
     }
@@ -297,6 +303,7 @@ impl TrainConfig {
         set!(seed, as_i64, "seed");
         set!(eval_every, as_i64, "eval_every");
         set!(groups, as_i64, "groups");
+        set!(threads, as_i64, "threads");
         macro_rules! set_link {
             ($field:ident, $name:expr) => {
                 if let Some(v) = get($name) {
@@ -356,6 +363,14 @@ impl TrainConfig {
         }
         if self.bucket_size == 0 {
             return Err(Error::Config("bucket_size must be >= 1".into()));
+        }
+        // Catches negative config values too: the i64 → usize cast wraps
+        // them to huge counts.
+        if self.threads > 1024 {
+            return Err(Error::Config(format!(
+                "threads ({}) must be in [0, 1024] (0 = auto-detect cores)",
+                self.threads
+            )));
         }
         if !(0.0..1.0).contains(&(self.momentum as f64)) {
             return Err(Error::Config("momentum must be in [0,1)".into()));
@@ -489,6 +504,28 @@ mod tests {
         assert!(c.validate().is_err());
         let c = TrainConfig { topology: Topology::Ring, ..TrainConfig::default() };
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn threads_key_parses_and_defaults_serial() {
+        assert_eq!(TrainConfig::default().threads, 1);
+        let c = TrainConfig::from_map(
+            &parse("[train]\nworkers = 2\nbatch = 64\nthreads = 4").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.threads, 4);
+        // 0 = auto-detect is a valid setting
+        let c = TrainConfig::from_map(
+            &parse("[train]\nworkers = 2\nbatch = 64\nthreads = 0").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.threads, 0);
+        assert!(c.validate().is_ok());
+        // negative values wrap to huge usize counts and must be rejected
+        let bad = parse("[train]\nworkers = 2\nbatch = 64\nthreads = -1").unwrap();
+        assert!(TrainConfig::from_map(&bad).is_err());
+        let bad = parse("[train]\nworkers = 2\nbatch = 64\nthreads = 100000").unwrap();
+        assert!(TrainConfig::from_map(&bad).is_err());
     }
 
     #[test]

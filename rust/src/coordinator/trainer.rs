@@ -105,6 +105,7 @@ impl<'a> Trainer<'a> {
             clip_factor: cfg.clip_factor,
             packing: Packing::BaseS,
             seed: cfg.seed,
+            threads: cfg.threads,
         };
         let xcfg = ExchangeConfig {
             topology: cfg.topology,
@@ -141,8 +142,9 @@ impl<'a> Trainer<'a> {
                 scope.spawn(move || {
                     let mut backend = make(w);
                     // One encoder per worker, built from the same WireSpec
-                    // the collective uses — a single quantize+encode path.
-                    let gc = GradCodec::new(&spec).expect("validated");
+                    // the collective uses — a single quantize+encode path
+                    // (parallel across buckets when cfg.threads != 1).
+                    let mut gc = GradCodec::new(&spec).expect("validated");
                     let mut params = backend.init_params(&mut Rng::seed_from(cfg.seed));
                     let mut opt =
                         SgdMomentum::new(params.len(), cfg.momentum, cfg.weight_decay);
@@ -162,6 +164,14 @@ impl<'a> Trainer<'a> {
                         gc.encode_into(&grad, &mut rng_q, &mut qg, &mut msg);
                         let (rel_mse, cosine) = if gc.is_fp() {
                             (0.0, 1.0)
+                        } else if gc.is_parallel() {
+                            // The pipeline never materializes `qg`;
+                            // measure via the wire bytes instead
+                            // (decode(encode(g)) == dequantize exactly).
+                            gc.decode_flat_into(&msg, &mut deq)
+                                .expect("own encoding always decodes");
+                            let e = quant::error::measure_flat(&grad, &deq);
+                            (e.rel_mse, e.cosine)
                         } else {
                             let e = quant::error::measure_into(&grad, &qg, &mut deq);
                             (e.rel_mse, e.cosine)
@@ -351,6 +361,7 @@ mod tests {
             quantize_downlink: false,
             topology: Topology::Ps,
             groups: 1,
+            threads: 1,
             links: LinkConfig::default(),
         }
     }
@@ -443,6 +454,24 @@ mod tests {
         let b = run("orq-3", 2);
         assert_eq!(a.params, b.params);
         assert_eq!(a.summary.test_top1, b.summary.test_top1);
+    }
+
+    /// The parallel codec path must learn, and — because encode uses
+    /// per-bucket RNG streams and the PS reduce preserves accumulation
+    /// order — training must be bit-identical for every thread count.
+    #[test]
+    fn parallel_codec_threads_learn_and_match_across_counts() {
+        let ds = tiny_ds();
+        let run_t = |threads: usize| {
+            let mut cfg = tiny_cfg("orq-3", 2);
+            cfg.threads = threads;
+            let factory = native_backend_factory(&cfg.model).unwrap();
+            Trainer::new(cfg, &ds).unwrap().run(factory).unwrap()
+        };
+        let a = run_t(2);
+        let b = run_t(4);
+        assert_eq!(a.params, b.params, "thread count must not change training");
+        assert!(a.summary.test_top1 > 0.6, "top1={}", a.summary.test_top1);
     }
 
     #[test]

@@ -69,7 +69,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.check_known(&[
         "config", "model", "method", "workers", "steps", "batch", "dataset", "bucket",
         "clip", "backend", "artifacts", "out", "seed", "lr", "eval-every", "topology",
-        "groups", "intra-bandwidth", "intra-latency", "inter-bandwidth", "inter-latency",
+        "groups", "threads", "intra-bandwidth", "intra-latency", "inter-bandwidth",
+        "inter-latency",
     ])?;
     let mut cfg = match args.get("config") {
         Some(path) => TrainConfig::load(path)?,
@@ -118,6 +119,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(g) = args.get_parse::<usize>("groups")? {
         cfg.groups = g;
+    }
+    if let Some(t) = args.get_parse::<usize>("threads")? {
+        cfg.threads = t;
     }
     if let Some(b) = args.get_parse::<f64>("intra-bandwidth")? {
         cfg.links.intra_bandwidth = b;

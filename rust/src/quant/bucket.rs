@@ -92,6 +92,59 @@ impl BucketQuantizer {
             }
         }
     }
+
+    /// Quantize bucket `bi` (`chunk` = its slice of the gradient) with an
+    /// independent RNG stream derived from `(round_key, bi)`, applying
+    /// the configured clipping through `clip_scratch`. The result depends
+    /// only on `(chunk, round_key, bi)` — not on processing order or
+    /// thread placement — the invariant the parallel pipeline
+    /// ([`crate::quant::parallel`]) and its serial reference share.
+    pub fn quantize_bucket_stream(
+        &self,
+        chunk: &[f32],
+        bi: usize,
+        q: &dyn Quantizer,
+        round_key: u64,
+        clip_scratch: &mut Vec<f32>,
+        out: &mut QuantizedBucket,
+    ) {
+        let mut rng = Rng::stream(round_key, bi as u64);
+        match self.clip_factor {
+            Some(c) => {
+                clip_scratch.clear();
+                clip_scratch.extend_from_slice(chunk);
+                clip_sigma_inplace(clip_scratch, c);
+                q.quantize_bucket_into(clip_scratch, &mut rng, out);
+            }
+            None => q.quantize_bucket_into(chunk, &mut rng, out),
+        }
+    }
+
+    /// Like [`Self::quantize_into`] but with the per-bucket RNG streams
+    /// of [`Self::quantize_bucket_stream`] — the serial reference the
+    /// parallel pipeline is differential-tested against (identical wire
+    /// bytes for every thread count).
+    pub fn quantize_streams_into(
+        &self,
+        g: &[f32],
+        q: &dyn Quantizer,
+        round_key: u64,
+        out: &mut QuantizedGrad,
+    ) {
+        let n = self.num_buckets(g.len());
+        out.bucket_size = self.bucket_size;
+        out.total_len = g.len();
+        out.buckets.truncate(n);
+        while out.buckets.len() < n {
+            out.buckets.push(super::QuantizedBucket::default());
+        }
+        let mut clip = Vec::new();
+        for (bi, (chunk, qb)) in
+            g.chunks(self.bucket_size).zip(out.buckets.iter_mut()).enumerate()
+        {
+            self.quantize_bucket_stream(chunk, bi, q, round_key, &mut clip, qb);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -172,6 +225,34 @@ mod tests {
         assert_eq!(reused.total_len, 700);
         assert_eq!(reused.buckets.len(), fresh.buckets.len());
         assert_eq!(reused.dequantize(), fresh.dequantize());
+    }
+
+    /// Stream quantization is bucket-order independent: quantizing any
+    /// single bucket in isolation reproduces its slot in the full run,
+    /// and clipping behaves identically to the sequential path.
+    #[test]
+    fn stream_quantization_is_order_independent() {
+        let mut rng = Rng::seed_from(17);
+        let g: Vec<f32> = (0..900).map(|_| rng.gaussian_f32()).collect();
+        for bq in [BucketQuantizer::new(256), BucketQuantizer::with_clip(256, 2.0)] {
+            let q = from_name("orq-5").unwrap();
+            let mut full = QuantizedGrad::default();
+            bq.quantize_streams_into(&g, q.as_ref(), 99, &mut full);
+            assert_eq!(full.buckets.len(), 4);
+            // re-derive buckets in reverse order through the per-bucket entry
+            let mut clip = Vec::new();
+            for bi in (0..4usize).rev() {
+                let lo = bi * 256;
+                let hi = (lo + 256).min(g.len());
+                let mut qb = QuantizedBucket::default();
+                bq.quantize_bucket_stream(&g[lo..hi], bi, q.as_ref(), 99, &mut clip, &mut qb);
+                assert_eq!(qb, full.buckets[bi], "bucket {bi}");
+            }
+            // a different round key decorrelates the rounding draws
+            let mut other = QuantizedGrad::default();
+            bq.quantize_streams_into(&g, q.as_ref(), 100, &mut other);
+            assert_ne!(full.buckets[0].indices, other.buckets[0].indices);
+        }
     }
 
     #[test]

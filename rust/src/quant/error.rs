@@ -54,10 +54,18 @@ pub fn measure_into(
     scratch.clear();
     scratch.resize(quantized.total_len, 0.0);
     quantized.dequantize_into(scratch);
-    let m = mse(original, scratch);
+    measure_flat(original, scratch)
+}
+
+/// [`measure`] against an already-dequantized flat gradient (e.g. a
+/// decoded wire message — the parallel codec path never materializes a
+/// [`QuantizedGrad`], and `decode(encode(g))` equals `dequantize` by
+/// construction).
+pub fn measure_flat(original: &[f32], dequantized: &[f32]) -> QuantError {
+    let m = mse(original, dequantized);
     let n2 = norm2(original) as f64;
     let denom = if n2 > 0.0 { n2 * n2 / original.len().max(1) as f64 } else { 1.0 };
-    QuantError { mse: m, rel_mse: m / denom, cosine: cosine(original, scratch) }
+    QuantError { mse: m, rel_mse: m / denom, cosine: cosine(original, dequantized) }
 }
 
 #[cfg(test)]

@@ -6,23 +6,21 @@
 //! levels crowd into the high-density region around zero and the gradient
 //! shape information is destroyed (Fig. 1 discussion).
 
-use std::sync::{Mutex, PoisonError};
-
+use super::scratch::with_sort_scratch;
 use super::{random_round, QuantizedBucket, Quantizer};
 use crate::tensor::rng::Rng;
 
+/// Stateless: the sorted-bucket scratch lives in the per-thread arena
+/// (`quant::scratch`), so one instance serves many pipeline threads
+/// lock-free; see [`super::orq::OrqQuantizer`].
 pub struct LinearQuantizer {
     s: usize,
-    /// Reusable sorted-bucket scratch; see [`super::orq::OrqQuantizer`]
-    /// for the interior-mutability rationale (keeps the `&self` trait
-    /// interface, uncontended per-worker lock).
-    scratch: Mutex<Vec<f32>>,
 }
 
 impl LinearQuantizer {
     pub fn new(s: usize) -> Self {
         assert!(s >= 2);
-        LinearQuantizer { s, scratch: Mutex::new(Vec::new()) }
+        LinearQuantizer { s }
     }
 
     /// Levels at quantiles k/(s-1) of the sorted bucket, deduplicated with
@@ -77,13 +75,12 @@ impl Quantizer for LinearQuantizer {
     }
 
     fn quantize_bucket_into(&self, g: &[f32], rng: &mut Rng, out: &mut QuantizedBucket) {
-        {
-            let mut sorted = self.scratch.lock().unwrap_or_else(PoisonError::into_inner);
-            sorted.clear();
-            sorted.extend_from_slice(g);
-            sorted.sort_unstable_by(f32::total_cmp);
-            Self::quantile_levels_into(&sorted, self.s, &mut out.levels);
-        }
+        with_sort_scratch(|sc| {
+            sc.sorted.clear();
+            sc.sorted.extend_from_slice(g);
+            sc.sorted.sort_unstable_by(f32::total_cmp);
+            Self::quantile_levels_into(&sc.sorted, self.s, &mut out.levels);
+        });
         random_round(g, &out.levels, rng, &mut out.indices);
     }
 }

@@ -26,11 +26,12 @@
 //! reuses its level/index buffers instead of allocating per bucket; the
 //! allocating [`Quantizer::quantize_bucket`] is a convenience wrapper.
 //! The sort-based level solvers (`orq-S`, `linear-S`) keep their
-//! sort/prefix scratch in reusable per-quantizer buffers (behind an
-//! uncontended mutex, preserving the `&self` interface), so steady-state
-//! `quantize_bucket_into` calls are allocation-free for every scheme —
-//! asserted bit-identical to the allocating reference solvers by the
-//! scheme tests.
+//! sort/prefix scratch in per-thread arenas (`scratch`) — no locks, so
+//! the parallel bucket pipeline ([`parallel`]) can drive one quantizer
+//! from many threads without contention — and steady-state
+//! `quantize_bucket_into` calls are allocation-free for every scheme,
+//! asserted bit-identical to the allocating reference solvers (and to a
+//! mutex-locked replica of the PR 2 path) by the scheme tests.
 
 pub mod bingrad;
 pub mod bucket;
@@ -40,7 +41,9 @@ pub mod error_feedback;
 pub mod fp;
 pub mod linear;
 pub mod orq;
+pub mod parallel;
 pub mod qsgd;
+pub(crate) mod scratch;
 pub mod signsgd;
 pub mod terngrad;
 

@@ -24,30 +24,18 @@
 //! "future work" improvement the paper's conclusion hints at; the ablation
 //! bench (`quant_throughput --ablation`) quantifies what it buys.
 
-use std::sync::{Mutex, PoisonError};
-
+use super::scratch::{with_sort_scratch, SortScratch};
 use super::{random_round, QuantizedBucket, Quantizer};
 use crate::tensor::rng::Rng;
 
-/// Reusable level-solver scratch: the sorted copy of the bucket, its
-/// prefix sums, and the recursion stack. Hoisted out of the per-bucket
-/// path so steady-state [`Quantizer::quantize_bucket_into`] calls perform
-/// no allocation (the ROADMAP's zero-alloc follow-up for the sort-based
-/// schemes).
-#[derive(Debug, Default)]
-struct SortScratch {
-    sorted: Vec<f32>,
-    prefix: Vec<f64>,
-    stack: Vec<(usize, usize, f32, f32)>,
-}
-
+/// Stateless solver configuration: all working memory lives in the
+/// per-thread [`SortScratch`] arena (`quant::scratch`), so one quantizer
+/// instance can serve many pipeline threads with no lock and no
+/// per-bucket allocation. (PR 2 kept this scratch behind a per-quantizer
+/// `Mutex`; the tests retain a locked replica and assert bit-identity.)
 pub struct OrqQuantizer {
     s: usize,
     refine_sweeps: usize,
-    /// Interior mutability keeps the `&self` [`Quantizer`] interface
-    /// (and `Send + Sync`); each worker owns its quantizer, so the lock
-    /// is uncontended — its cost is noise next to the O(d log d) sort.
-    scratch: Mutex<SortScratch>,
 }
 
 impl OrqQuantizer {
@@ -56,20 +44,19 @@ impl OrqQuantizer {
     /// [`solve_levels`]).
     pub fn new(s: usize) -> Self {
         assert!(s >= 2, "ORQ needs at least 2 levels");
-        OrqQuantizer { s, refine_sweeps: 0, scratch: Mutex::new(SortScratch::default()) }
+        OrqQuantizer { s, refine_sweeps: 0 }
     }
 
     /// Greedy solution + `sweeps` coordinate-descent refinement passes.
     pub fn with_refinement(s: usize, sweeps: usize) -> Self {
-        OrqQuantizer { s, refine_sweeps: sweeps, scratch: Mutex::new(SortScratch::default()) }
+        OrqQuantizer { s, refine_sweeps: sweeps }
     }
 
     /// Solve the optimal levels for a bucket. Exposed for the figure
     /// benches and the property tests.
     pub fn levels_for(&self, g: &[f32]) -> Vec<f32> {
         let mut levels = Vec::with_capacity(self.s);
-        let mut sc = self.scratch.lock().unwrap_or_else(PoisonError::into_inner);
-        self.solve_into(g, &mut sc, &mut levels);
+        with_sort_scratch(|sc| self.solve_into(g, sc, &mut levels));
         levels
     }
 
@@ -107,10 +94,7 @@ impl Quantizer for OrqQuantizer {
     }
 
     fn quantize_bucket_into(&self, g: &[f32], rng: &mut Rng, out: &mut QuantizedBucket) {
-        {
-            let mut sc = self.scratch.lock().unwrap_or_else(PoisonError::into_inner);
-            self.solve_into(g, &mut sc, &mut out.levels);
-        }
+        with_sort_scratch(|sc| self.solve_into(g, sc, &mut out.levels));
         random_round(g, &out.levels, rng, &mut out.indices);
     }
 }
@@ -452,6 +436,59 @@ mod tests {
             let b = fresh.quantize_bucket(&g, &mut Rng::seed_from(seed));
             assert_eq!(a, b, "refined n={n}");
         }
+    }
+
+    /// The per-thread-arena path must be bit-identical to the old
+    /// per-quantizer-mutex path (a locked replica of the PR 2 design:
+    /// same `solve_levels_into`, scratch behind a `Mutex` instead of the
+    /// thread-local arena).
+    #[test]
+    fn thread_local_scratch_bit_identical_to_locked_path() {
+        use std::sync::Mutex;
+        let locked = Mutex::new(SortScratch::default());
+        let q = OrqQuantizer::new(5);
+        let mut data_rng = Rng::seed_from(77);
+        for n in [0usize, 1, 7, 300, 513, 2048] {
+            let g: Vec<f32> = (0..n).map(|_| data_rng.gaussian_f32()).collect();
+            let mut want = Vec::new();
+            {
+                let mut guard = locked.lock().unwrap();
+                let sc = &mut *guard;
+                let mut sorted = g.clone();
+                sorted.sort_unstable_by(f32::total_cmp);
+                solve_levels_into(&sorted, 5, &mut sc.prefix, &mut sc.stack, &mut want);
+            }
+            assert_eq!(q.levels_for(&g), want, "n={n}");
+        }
+    }
+
+    /// One shared quantizer instance driven from many threads at once
+    /// (the parallel pipeline's access pattern) must produce exactly the
+    /// per-bucket results of a serial run — per-thread arenas cannot
+    /// interfere.
+    #[test]
+    fn concurrent_buckets_match_serial() {
+        let q = OrqQuantizer::new(9);
+        let mut data_rng = Rng::seed_from(31);
+        let buckets: Vec<Vec<f32>> = (0..8)
+            .map(|i| (0..300 + 40 * i).map(|_| data_rng.gaussian_f32()).collect())
+            .collect();
+        let serial: Vec<QuantizedBucket> = buckets
+            .iter()
+            .enumerate()
+            .map(|(i, b)| q.quantize_bucket(b, &mut Rng::seed_from(500 + i as u64)))
+            .collect();
+        std::thread::scope(|scope| {
+            for (i, b) in buckets.iter().enumerate() {
+                let (q, want) = (&q, &serial[i]);
+                scope.spawn(move || {
+                    for _ in 0..4 {
+                        let got = q.quantize_bucket(b, &mut Rng::seed_from(500 + i as u64));
+                        assert_eq!(&got, want, "bucket {i}");
+                    }
+                });
+            }
+        });
     }
 
     #[test]

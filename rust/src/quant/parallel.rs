@@ -1,0 +1,401 @@
+//! Parallel per-bucket pipeline: quantize→encode and decode→reduce
+//! sharded across scoped threads.
+//!
+//! Buckets are independent by construction (paper §5: each bucket solves
+//! its own levels and rounds its own elements), so the two hot loops of
+//! an exchange round parallelize along the bucket grid:
+//!
+//! * **quantize + encode** — [`BucketPipeline::encode_into`] writes the
+//!   wire header, then splits the bucket range into contiguous shards;
+//!   each shard thread quantizes its buckets (per-bucket RNG streams,
+//!   [`BucketQuantizer::quantize_bucket_stream`]) and serializes them
+//!   into its own segment buffer; segments concatenate in bucket order,
+//!   so the wire bytes are identical for every thread count (and to the
+//!   serial [`BucketQuantizer::quantize_streams_into`] reference).
+//! * **decode + reduce** — [`BucketPipeline::decode_flat_into`] and
+//!   [`BucketPipeline::decode_reduce_into`] split the *output* buffer
+//!   into disjoint bucket-aligned slices and decode each range straight
+//!   out of the shared message bytes ([`codec::decode_slice_into`]).
+//!   The reduce variant preserves the per-element upload accumulation
+//!   order, so the f64 sums are bit-identical to the serial loop.
+//!
+//! Threading is `std::thread::scope` (dependency-free, the `trainer.rs`
+//! idiom). All shard state — segment buffers, one reusable
+//! [`QuantizedBucket`], clip scratch, decode scratch — lives in arenas
+//! reused across rounds: the steady-state parallel path performs no
+//! per-bucket allocation and takes no locks (the level solvers use
+//! per-thread arenas, `quant::scratch`). Scoped threads are spawned per
+//! call, so the *solver* arenas amortize across a shard's buckets within
+//! one round rather than across rounds, and each call pays k thread
+//! spawns — worth it for multi-bucket gradients, not for tiny ones (the
+//! shard count is capped by the bucket count; a persistent worker pool
+//! is the ROADMAP follow-up that would remove both costs).
+
+use std::ops::Range;
+use std::thread;
+
+use crate::codec::{self, BucketEncoder, DecodeScratch, Packing};
+use crate::error::{Error, Result};
+use crate::quant::bucket::BucketQuantizer;
+use crate::quant::{QuantizedBucket, Quantizer};
+
+/// Reusable parallel codec state: a thread count plus per-shard arenas.
+pub struct BucketPipeline {
+    threads: usize,
+    shards: Vec<Shard>,
+}
+
+#[derive(Default)]
+struct Shard {
+    /// Encoded payload segment (this shard's run of buckets).
+    seg: Vec<u8>,
+    /// One reusable quantized bucket — each bucket is serialized into
+    /// `seg` immediately, so shards never materialize their whole run.
+    qb: QuantizedBucket,
+    clip: Vec<f32>,
+    flat: Vec<f32>,
+    scratch: DecodeScratch,
+}
+
+/// Bucket range of shard `i` of `k` over `n` buckets (contiguous,
+/// balanced to within one bucket).
+fn shard_range(n: usize, k: usize, i: usize) -> Range<usize> {
+    (n * i / k)..(n * (i + 1) / k)
+}
+
+impl BucketPipeline {
+    /// `threads == 0` means auto (`std::thread::available_parallelism`).
+    /// Counts are capped at 256 — beyond core counts extra shards only
+    /// cost spawns, and the cap bounds thread explosion if an absurd
+    /// count slips past config validation.
+    pub fn new(threads: usize) -> BucketPipeline {
+        let t = if threads == 0 {
+            thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        BucketPipeline { threads: t.min(256), shards: Vec::new() }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn ensure_shards(&mut self, k: usize) {
+        while self.shards.len() < k {
+            self.shards.push(Shard::default());
+        }
+    }
+
+    /// Quantize `g` bucket-by-bucket (per-bucket RNG streams derived from
+    /// `round_key`) and encode it as a wire message into `out` (cleared
+    /// first). Byte-identical to serial
+    /// [`BucketQuantizer::quantize_streams_into`] + [`codec::encode`]
+    /// for every thread count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn encode_into(
+        &mut self,
+        bq: &BucketQuantizer,
+        q: &dyn Quantizer,
+        g: &[f32],
+        round_key: u64,
+        scheme: &str,
+        packing: Packing,
+        out: &mut Vec<u8>,
+    ) {
+        let s = q.num_levels();
+        debug_assert!(s >= 2, "FP gradients take the fp framing, not the pipeline");
+        let nb = bq.num_buckets(g.len());
+        out.clear();
+        codec::encode_quantized_header_into(s, scheme, packing, g.len(), bq.bucket_size, out);
+        if nb == 0 {
+            return;
+        }
+        let k = self.threads.min(nb);
+        self.ensure_shards(k);
+        let enc = BucketEncoder::new(s, packing);
+        if k == 1 {
+            let shard = &mut self.shards[0];
+            encode_shard(bq, q, g, round_key, 0..nb, enc, shard);
+            out.extend_from_slice(&shard.seg);
+            return;
+        }
+        let shards = &mut self.shards[..k];
+        thread::scope(|scope| {
+            for (i, shard) in shards.iter_mut().enumerate() {
+                let range = shard_range(nb, k, i);
+                scope.spawn(move || encode_shard(bq, q, g, round_key, range, enc, shard));
+            }
+        });
+        for shard in &self.shards[..k] {
+            out.extend_from_slice(&shard.seg);
+        }
+    }
+
+    /// Decode a wire message into a flat f32 buffer (cleared and
+    /// refilled), sharding the bucket grid across threads. Identical
+    /// output to [`codec::decode_flat_into`].
+    pub fn decode_flat_into(&mut self, bytes: &[u8], out: &mut Vec<f32>) -> Result<()> {
+        let (total, bucket) = codec::peek_shape(bytes)?;
+        out.clear();
+        out.resize(total, 0.0);
+        let nb = total.div_ceil(bucket.max(1));
+        let k = self.threads.min(nb.max(1));
+        self.ensure_shards(k);
+        if k == 1 {
+            return codec::decode_slice_into(bytes, 0, total, out, &mut self.shards[0].scratch);
+        }
+        let shards = &mut self.shards[..k];
+        let mut res: Result<()> = Ok(());
+        thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(k);
+            let mut rest: &mut [f32] = out;
+            let mut e0 = 0usize;
+            for (i, shard) in shards.iter_mut().enumerate() {
+                let e1 = (shard_range(nb, k, i).end * bucket).min(total);
+                let (mine, tail) = std::mem::take(&mut rest).split_at_mut(e1 - e0);
+                rest = tail;
+                let sc = &mut shard.scratch;
+                handles
+                    .push(scope.spawn(move || codec::decode_slice_into(bytes, e0, e1, mine, sc)));
+                e0 = e1;
+            }
+            for h in handles {
+                let r = h
+                    .join()
+                    .unwrap_or_else(|_| Err(Error::Comm("decode shard panicked".into())));
+                if res.is_ok() {
+                    res = r;
+                }
+            }
+        });
+        res
+    }
+
+    /// Decode every upload and accumulate element-wise f64 sums into
+    /// `acc` (cleared and resized to the shared gradient length). The
+    /// per-element accumulation order over uploads is the upload order —
+    /// exactly the serial decode-then-add loop — so the reduced sums are
+    /// bit-identical to the serial path for any thread count.
+    pub fn decode_reduce_into(&mut self, uploads: &[Vec<u8>], acc: &mut Vec<f64>) -> Result<()> {
+        let mut shape: Option<(usize, usize)> = None;
+        for u in uploads {
+            let (t, b) = codec::peek_shape(u)?;
+            match shape {
+                None => shape = Some((t, b)),
+                Some((n, _)) if n != t => {
+                    return Err(Error::Shape(format!(
+                        "worker gradient has {t} elements, expected {n}"
+                    )))
+                }
+                Some(_) => {}
+            }
+        }
+        let (total, bucket) = shape.unwrap_or((0, 1));
+        acc.clear();
+        acc.resize(total, 0.0);
+        let nb = total.div_ceil(bucket.max(1));
+        let k = self.threads.min(nb.max(1));
+        self.ensure_shards(k);
+        if k == 1 {
+            return reduce_shard(uploads, 0, total, acc, &mut self.shards[0]);
+        }
+        let shards = &mut self.shards[..k];
+        let mut res: Result<()> = Ok(());
+        thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(k);
+            let mut rest: &mut [f64] = acc;
+            let mut e0 = 0usize;
+            for (i, shard) in shards.iter_mut().enumerate() {
+                let e1 = (shard_range(nb, k, i).end * bucket).min(total);
+                let (mine, tail) = std::mem::take(&mut rest).split_at_mut(e1 - e0);
+                rest = tail;
+                handles.push(scope.spawn(move || reduce_shard(uploads, e0, e1, mine, shard)));
+                e0 = e1;
+            }
+            for h in handles {
+                let r = h
+                    .join()
+                    .unwrap_or_else(|_| Err(Error::Comm("reduce shard panicked".into())));
+                if res.is_ok() {
+                    res = r;
+                }
+            }
+        });
+        res
+    }
+}
+
+/// Quantize and serialize one contiguous run of buckets into the shard's
+/// segment buffer.
+fn encode_shard(
+    bq: &BucketQuantizer,
+    q: &dyn Quantizer,
+    g: &[f32],
+    round_key: u64,
+    buckets: Range<usize>,
+    enc: BucketEncoder,
+    shard: &mut Shard,
+) {
+    shard.seg.clear();
+    let d = bq.bucket_size;
+    for bi in buckets {
+        let lo = bi * d;
+        let hi = (lo + d).min(g.len());
+        bq.quantize_bucket_stream(&g[lo..hi], bi, q, round_key, &mut shard.clip, &mut shard.qb);
+        enc.encode_bucket_into(&shard.qb, &mut shard.seg);
+    }
+}
+
+/// Decode elements `[e0, e1)` of every upload and add them (in upload
+/// order) into this shard's slice of the accumulator.
+fn reduce_shard(
+    uploads: &[Vec<u8>],
+    e0: usize,
+    e1: usize,
+    acc: &mut [f64],
+    shard: &mut Shard,
+) -> Result<()> {
+    shard.flat.clear();
+    shard.flat.resize(e1 - e0, 0.0);
+    for u in uploads {
+        let Shard { flat, scratch, .. } = shard;
+        codec::decode_slice_into(u, e0, e1, flat, scratch)?;
+        for (a, v) in acc.iter_mut().zip(flat.iter()) {
+            *a += *v as f64;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::bucket::QuantizedGrad;
+    use crate::quant::from_name;
+    use crate::tensor::rng::Rng;
+
+    fn sample(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from(seed);
+        (0..n).map(|_| rng.gaussian_f32()).collect()
+    }
+
+    /// Wire bytes must be identical for every thread count and equal to
+    /// the serial per-bucket-stream reference, across schemes, packings,
+    /// ragged tails, and clipping.
+    #[test]
+    fn parallel_encode_bit_identical_to_serial_streams() {
+        for (n, d) in [(1500usize, 256usize), (1000, 128), (255, 64), (64, 64), (10, 256)] {
+            let g = sample(n, n as u64);
+            for method in ["terngrad", "orq-5", "linear-9", "bingrad-b"] {
+                let q = from_name(method).unwrap();
+                for bq in [BucketQuantizer::new(d), BucketQuantizer::with_clip(d, 2.5)] {
+                    for packing in [Packing::Fixed, Packing::BaseS] {
+                        let mut qg = QuantizedGrad::default();
+                        bq.quantize_streams_into(&g, q.as_ref(), 7, &mut qg);
+                        let want = codec::encode(&qg, method, packing);
+                        for threads in [1usize, 2, 3, 8] {
+                            let mut pipe = BucketPipeline::new(threads);
+                            let mut got = Vec::new();
+                            pipe.encode_into(&bq, q.as_ref(), &g, 7, method, packing, &mut got);
+                            assert_eq!(
+                                got, want,
+                                "{method} {packing:?} n={n} d={d} threads={threads}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_decode_matches_serial_decode() {
+        let g = sample(3001, 3);
+        let q = from_name("orq-5").unwrap();
+        let bq = BucketQuantizer::new(128);
+        let mut qg = QuantizedGrad::default();
+        bq.quantize_streams_into(&g, q.as_ref(), 11, &mut qg);
+        for packing in [Packing::Fixed, Packing::BaseS] {
+            let bytes = codec::encode(&qg, "orq-5", packing);
+            let mut want = Vec::new();
+            codec::decode_flat_into(&bytes, &mut want, &mut DecodeScratch::default()).unwrap();
+            for threads in [1usize, 2, 5, 16] {
+                let mut pipe = BucketPipeline::new(threads);
+                let mut got = Vec::new();
+                pipe.decode_flat_into(&bytes, &mut got).unwrap();
+                assert_eq!(got, want, "{packing:?} threads={threads}");
+            }
+        }
+        // FP framing takes the single-shard path and round-trips exactly
+        let fp = codec::encode_fp(&g);
+        let mut pipe = BucketPipeline::new(4);
+        let mut got = Vec::new();
+        pipe.decode_flat_into(&fp, &mut got).unwrap();
+        assert_eq!(got, g);
+    }
+
+    /// Parallel decode+reduce must produce bit-identical f64 sums to the
+    /// serial decode-then-add loop (same per-element accumulation order).
+    #[test]
+    fn parallel_reduce_bit_identical_to_serial() {
+        let bq = BucketQuantizer::new(200);
+        let q = from_name("terngrad").unwrap();
+        let uploads: Vec<Vec<u8>> = (0..5)
+            .map(|w| {
+                let g = sample(1700, 40 + w);
+                let mut qg = QuantizedGrad::default();
+                bq.quantize_streams_into(&g, q.as_ref(), w, &mut qg);
+                codec::encode(&qg, "terngrad", Packing::BaseS)
+            })
+            .collect();
+        // serial reference
+        let mut flat = Vec::new();
+        let mut sc = DecodeScratch::default();
+        let mut want = vec![0.0f64; 1700];
+        for u in &uploads {
+            codec::decode_flat_into(u, &mut flat, &mut sc).unwrap();
+            for (a, v) in want.iter_mut().zip(&flat) {
+                *a += *v as f64;
+            }
+        }
+        for threads in [1usize, 2, 3, 8] {
+            let mut pipe = BucketPipeline::new(threads);
+            let mut acc = Vec::new();
+            pipe.decode_reduce_into(&uploads, &mut acc).unwrap();
+            assert_eq!(acc, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn reduce_rejects_mismatched_shapes_and_corrupt_bytes() {
+        let bq = BucketQuantizer::new(64);
+        let q = from_name("terngrad").unwrap();
+        let enc = |n: usize, key: u64| {
+            let g = sample(n, key);
+            let mut qg = QuantizedGrad::default();
+            bq.quantize_streams_into(&g, q.as_ref(), key, &mut qg);
+            codec::encode(&qg, "terngrad", Packing::BaseS)
+        };
+        let mut pipe = BucketPipeline::new(4);
+        let mut acc = Vec::new();
+        let mismatched = vec![enc(128, 1), enc(256, 2)];
+        assert!(pipe.decode_reduce_into(&mismatched, &mut acc).is_err());
+        let mut corrupt = enc(128, 3);
+        corrupt.truncate(corrupt.len() - 3);
+        assert!(pipe.decode_reduce_into(&[corrupt], &mut acc).is_err());
+        let mut out = Vec::new();
+        let mut short = enc(128, 4);
+        short.truncate(10);
+        assert!(pipe.decode_flat_into(&short, &mut out).is_err());
+        // empty upload set reduces to an empty accumulator
+        pipe.decode_reduce_into(&[], &mut acc).unwrap();
+        assert!(acc.is_empty());
+    }
+
+    #[test]
+    fn auto_thread_count_is_positive() {
+        assert!(BucketPipeline::new(0).threads() >= 1);
+        assert_eq!(BucketPipeline::new(3).threads(), 3);
+    }
+}

@@ -1,0 +1,73 @@
+//! Per-thread level-solver scratch arenas.
+//!
+//! The sort-based level solvers (`orq-S`, `linear-S`) need a sorted copy
+//! of the bucket plus prefix-sum/recursion buffers. PR 2 hoisted those
+//! behind a per-quantizer `Mutex` to keep the `&self` [`super::Quantizer`]
+//! interface; that was uncontended with one quantizer per worker, but the
+//! parallel bucket pipeline (`super::parallel`) drives *one* quantizer
+//! from many threads, where a shared lock would serialize every bucket.
+//!
+//! Instead each thread owns one [`SortScratch`] arena in a `thread_local`,
+//! shared by every solver instance on that thread (the buffers are
+//! cleared before each use, so solver output depends only on the input —
+//! the scheme tests assert bit-identity against both the allocating
+//! reference solvers and a mutex-locked replica of the old path). No
+//! locks, no per-bucket allocation once a thread's arena reaches steady
+//! state, and the quantizer structs themselves become stateless. On
+//! long-lived threads (trainer workers, ring/hier nodes, serial codecs)
+//! steady state spans the whole run; the pipeline's scoped shard threads
+//! live one round, so their arenas amortize across that round's buckets.
+
+use std::cell::RefCell;
+
+/// Reusable level-solver scratch: the sorted copy of the bucket, its
+/// prefix sums, and the recursion stack.
+#[derive(Debug, Default)]
+pub(crate) struct SortScratch {
+    pub(crate) sorted: Vec<f32>,
+    pub(crate) prefix: Vec<f64>,
+    pub(crate) stack: Vec<(usize, usize, f32, f32)>,
+}
+
+thread_local! {
+    static ARENA: RefCell<SortScratch> = RefCell::new(SortScratch::default());
+}
+
+/// Run `f` with this thread's solver arena. Non-reentrant (the solvers
+/// never nest).
+pub(crate) fn with_sort_scratch<R>(f: impl FnOnce(&mut SortScratch) -> R) -> R {
+    ARENA.with(|cell| f(&mut cell.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_reuses_capacity_within_a_thread() {
+        let cap = with_sort_scratch(|sc| {
+            sc.sorted.clear();
+            sc.sorted.extend_from_slice(&[1.0; 4096]);
+            sc.sorted.capacity()
+        });
+        let cap2 = with_sort_scratch(|sc| {
+            assert!(sc.sorted.capacity() >= 4096, "arena persists across calls");
+            sc.sorted.clear();
+            sc.sorted.capacity()
+        });
+        assert_eq!(cap, cap2);
+    }
+
+    #[test]
+    fn arenas_are_independent_per_thread() {
+        with_sort_scratch(|sc| {
+            sc.sorted.clear();
+            sc.sorted.push(7.0);
+        });
+        std::thread::spawn(|| {
+            with_sort_scratch(|sc| assert!(sc.sorted.is_empty(), "fresh arena per thread"));
+        })
+        .join()
+        .unwrap();
+    }
+}

@@ -79,6 +79,71 @@ impl Json {
             msg: format!("missing required field {key:?}"),
         })
     }
+
+    /// Serialize to a compact JSON string (stable key order — objects
+    /// are `BTreeMap`s). Non-finite numbers become `null` (JSON has no
+    /// NaN/∞); finite numbers use Rust's shortest-roundtrip formatting,
+    /// so `parse(dump(v)) == v`. The `BENCH_*.json` perf artifacts are
+    /// written through this.
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) if !n.is_finite() => out.push_str("null"),
+            Json::Num(n) => {
+                use std::fmt::Write;
+                let _ = write!(out, "{n}");
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                use std::fmt::Write;
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -324,6 +389,28 @@ mod tests {
         assert_eq!(j.get("b").unwrap().as_bool(), Some(true));
         assert!(j.req("missing").is_err());
         assert!(j.req("n").is_ok());
+    }
+
+    #[test]
+    fn dump_roundtrips_through_parse() {
+        let j = Json::parse(
+            r#"{"a": [1, 2.5, {"b": "c\nd \"q\""}], "n": null, "t": true, "u": "héllo → 世界"}"#,
+        )
+        .unwrap();
+        let dumped = j.dump();
+        assert_eq!(Json::parse(&dumped).unwrap(), j);
+        // stable output (BTreeMap key order)
+        assert_eq!(Json::parse(&dumped).unwrap().dump(), dumped);
+        // empty containers and scalars
+        assert_eq!(Json::Arr(vec![]).dump(), "[]");
+        assert_eq!(Json::Obj(Default::default()).dump(), "{}");
+        assert_eq!(Json::Num(42.0).dump(), "42");
+        assert_eq!(Json::Bool(false).dump(), "false");
+        // JSON has no NaN/∞ — they degrade to null
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
+        // control characters escape as \u sequences
+        assert_eq!(Json::Str("\u{1}".into()).dump(), "\"\\u0001\"");
     }
 
     #[test]

@@ -40,6 +40,7 @@ fn cfg(method: &str) -> TrainConfig {
         quantize_downlink: false,
         topology: Topology::Ps,
         groups: 1,
+        threads: 1,
         links: orq::config::LinkConfig::default(),
     }
 }

@@ -110,7 +110,7 @@ fn assert_mean_bit_identical(cfg: &ExchangeConfig, workers: usize, method: &str)
             let sp = sp.clone();
             let tx = tx.clone();
             scope.spawn(move || {
-                let gc = orq::comm::GradCodec::new(&sp).unwrap();
+                let mut gc = orq::comm::GradCodec::new(&sp).unwrap();
                 let mut rng = Rng::stream(sp.seed, 2_000 + w as u64);
                 let mut qg = orq::quant::bucket::QuantizedGrad::default();
                 let mut msg = Vec::new();
