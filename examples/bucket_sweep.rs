@@ -2,13 +2,16 @@
 //! TernGrad as the bucket size d grows — ORQ should degrade more slowly.
 //!
 //! Runs on any exchange topology; `--topology ring` exercises the
-//! decode-reduce-requantize ring all-reduce end-to-end (2 workers), and
+//! decode-reduce-requantize ring all-reduce end-to-end (2 workers),
 //! `--topology hier [--groups N]` the two-level hierarchy (4 workers in
 //! 2 groups by default), where intra-hop + leader requantization adds
-//! extra error on top of the bucket effect.
+//! extra error on top of the bucket effect, and `--topology sharded-ps
+//! [--shards S] [--staleness K]` the sharded/bounded-staleness parameter
+//! server (per-shard byte counters printed after each sweep).
 //!
 //! Run: `cargo run --release --example bucket_sweep -- [--steps N]
-//!       [--topology ps|ring|hier] [--workers N] [--groups N]`
+//!       [--topology ps|ring|hier|sharded-ps] [--workers N] [--groups N]
+//!       [--shards S] [--staleness K]`
 
 use orq::bench::print_rows;
 use orq::cli::Args;
@@ -19,23 +22,29 @@ use orq::data::synth::{ClassDataset, DatasetSpec};
 
 fn main() -> orq::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
-    args.check_known(&["steps", "topology", "workers", "groups"])?;
+    args.check_known(&["steps", "topology", "workers", "groups", "shards", "staleness"])?;
     let steps = args.get_parse::<usize>("steps")?.unwrap_or(250);
     let topology = args.get_parse::<Topology>("topology")?.unwrap_or_default();
     let workers = args.get_parse::<usize>("workers")?.unwrap_or(match topology {
         Topology::Ring => 2,
         Topology::Hier => 4,
         Topology::Ps => 1,
+        Topology::ShardedPs => 2,
     });
     let groups = args
         .get_parse::<usize>("groups")?
         .unwrap_or(if topology == Topology::Hier { 2.min(workers) } else { 1 });
+    let shards = args
+        .get_parse::<usize>("shards")?
+        .unwrap_or(if topology == Topology::ShardedPs { 2 } else { 1 });
+    let staleness = args.get_parse::<usize>("staleness")?.unwrap_or(0);
 
     let ds = ClassDataset::generate(DatasetSpec::cifar10_like(64));
     let buckets = [128usize, 512, 2048, 8192, 32768];
     let mut rows = Vec::new();
     for method in ["terngrad", "orq-3"] {
         let mut row = vec![method.to_string()];
+        let mut last_shard_bytes: Option<Vec<u64>> = None;
         for &d in &buckets {
             let cfg = TrainConfig {
                 model: "mlp:64-192-192-10".into(),
@@ -50,19 +59,29 @@ fn main() -> orq::Result<()> {
                 lr_decay_steps: vec![steps / 2, steps * 3 / 4],
                 topology,
                 groups,
+                shards,
+                staleness,
                 ..TrainConfig::default()
             };
             let factory = native_backend_factory(&cfg.model)?;
             let out = Trainer::new(cfg, &ds)?.run(factory)?;
             row.push(format!("{:.2}", out.summary.test_top1 * 100.0));
+            last_shard_bytes = out.shard_bytes;
         }
         rows.push(row);
-        let shape = if topology == Topology::Hier {
-            format!("{topology} ({workers} workers, {groups} groups)")
-        } else {
-            format!("{topology} ({workers} workers)")
+        let shape = match topology {
+            Topology::Hier => format!("{topology} ({workers} workers, {groups} groups)"),
+            Topology::ShardedPs => format!(
+                "{topology} ({workers} workers, {shards} shards, staleness {staleness})"
+            ),
+            _ => format!("{topology} ({workers} workers)"),
         };
         println!("{method}: swept {} bucket sizes on {shape}", buckets.len());
+        if let Some(sb) = &last_shard_bytes {
+            let parts: Vec<String> = sb.iter().map(|b| b.to_string()).collect();
+            println!("{method}: per-shard wire bytes at d={} → [{}]",
+                     buckets.last().unwrap(), parts.join(", "));
+        }
     }
     let labels: Vec<String> = buckets.iter().map(|b| b.to_string()).collect();
     let mut header = vec!["method"];

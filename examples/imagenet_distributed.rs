@@ -2,9 +2,17 @@
 //! §5.2 protocol (4 workers, d = 512, clip 2.5σ, warmup), with series
 //! CSVs for plotting Figure 3.
 //!
-//! Run: `cargo run --release --example imagenet_distributed -- [--steps N] [--method orq-5] [--out DIR]`
+//! Scale the exchange with `--shards S` / `--staleness K` (either one
+//! switches the topology to the sharded/bounded-staleness parameter
+//! server unless `--topology` says otherwise); sharded runs print the
+//! per-shard wire-byte counters and the staleness histogram.
+//!
+//! Run: `cargo run --release --example imagenet_distributed --
+//!       [--steps N] [--method orq-5] [--out DIR]
+//!       [--topology ps|ring|hier|sharded-ps] [--shards S] [--staleness K]`
 
 use orq::cli::Args;
+use orq::comm::Topology;
 use orq::config::TrainConfig;
 use orq::coordinator::trainer::{native_backend_factory, Trainer};
 use orq::data::synth::{ClassDataset, DatasetSpec};
@@ -12,9 +20,15 @@ use orq::util::fmt;
 
 fn main() -> orq::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
+    args.check_known(&["steps", "method", "out", "topology", "shards", "staleness"])?;
     let steps = args.get_parse::<usize>("steps")?.unwrap_or(250);
     let method = args.get_or("method", "orq-5").to_string();
     let outdir = args.get_or("out", "artifacts/results").to_string();
+    let shards = args.get_parse::<usize>("shards")?.unwrap_or(1);
+    let staleness = args.get_parse::<usize>("staleness")?.unwrap_or(0);
+    let topology = args.get_parse::<Topology>("topology")?.unwrap_or(
+        if shards > 1 || staleness > 0 { Topology::ShardedPs } else { Topology::Ps },
+    );
 
     let mut spec = DatasetSpec::imagenet_like(128);
     spec.classes = 100;
@@ -40,12 +54,21 @@ fn main() -> orq::Result<()> {
         seed: 7,
         eval_every: (steps / 10).max(1),
         quantize_downlink: false,
-        topology: orq::comm::Topology::Ps,
+        topology,
         groups: 1,
+        // Passed through verbatim: an explicit --shards/--staleness that
+        // conflicts with --topology is rejected by TrainConfig::validate,
+        // never silently overridden.
+        shards,
+        staleness,
+        error_feedback: false,
         threads: 1,
         links: orq::config::LinkConfig::default(),
     };
-    println!("imagenet_distributed: {method}, 4 workers, d=512, clip 2.5σ, {steps} steps");
+    println!(
+        "imagenet_distributed: {method}, 4 workers, d=512, clip 2.5σ, {steps} steps, \
+         topology {topology}"
+    );
     let factory = native_backend_factory(&cfg.model)?;
     let out = Trainer::new(cfg, &ds)?.run(factory)?;
     let s = &out.summary;
@@ -53,6 +76,15 @@ fn main() -> orq::Result<()> {
              s.test_top5 * 100.0, s.mean_quant_rel_mse);
     println!("wire {}  sim comm {}", fmt::bytes(s.total_wire_bytes),
              fmt::duration(s.total_comm_time_s));
+    if let Some(sb) = &out.shard_bytes {
+        let parts: Vec<String> = sb.iter().map(|b| fmt::bytes(*b)).collect();
+        println!("per-shard wire bytes: [{}]", parts.join(", "));
+        let st = &out.comm.staleness;
+        println!(
+            "staleness: window applied age max {} ({} cold start rounds of {})",
+            st.max_age, st.cold_rounds, st.rounds
+        );
+    }
 
     std::fs::create_dir_all(&outdir)?;
     out.series.write_csv(&format!("{outdir}/imagenet_{method}_series.csv"))?;

@@ -8,7 +8,7 @@
 use orq::bench::print_rows;
 use orq::codec::{wire_size, Packing};
 use orq::comm::link::{Link, LinkMap};
-use orq::comm::{hier, ring, run_once, ExchangeConfig, Topology, WireSpec};
+use orq::comm::{hier, ring, run_once, shard, ExchangeConfig, Topology, WireSpec};
 use orq::tensor::rng::Rng;
 use orq::util::fmt;
 
@@ -174,6 +174,63 @@ fn main() {
             "intra bytes",
             "inter bytes",
         ],
+        &rows,
+    );
+
+    // --- sharded parameter server: the star's bandwidth bottleneck cut
+    // S ways (each shard serves one bucket-aligned chunk in its own
+    // thread). Measured one-round times over the real collective next to
+    // the closed-form `shard::sharded_time` model, plus the async
+    // amortization `shard::async_time` predicts for a latency-bearing
+    // link with a staleness window K.
+    let n_elems = 1usize << 21;
+    let workers = 4usize;
+    let mut rng = Rng::seed_from(42);
+    let grads: Vec<Vec<f32>> = (0..workers)
+        .map(|_| {
+            let mut g = vec![0.0f32; n_elems];
+            rng.fill_gaussian(&mut g, 1e-3);
+            g
+        })
+        .collect();
+    let mut rows = Vec::new();
+    for (scheme, s) in [("fp", 0usize), ("terngrad", 3)] {
+        let spec = WireSpec { seed: 7, ..WireSpec::new(scheme, d) };
+        let up = wire_size(n_elems, d, s, Packing::BaseS, scheme);
+        let down = n_elems * 4;
+        for shards in [1usize, 2, 4, 8] {
+            let cfg = ExchangeConfig::sharded(shards, 0, link);
+            let (_, st) = run_once(&cfg, &spec, &grads).expect("sharded round");
+            rows.push(vec![
+                format!("S={shards}"),
+                scheme.to_string(),
+                fmt::duration(st.sim_time_s),
+                fmt::duration(shard::sharded_time(&link, workers, shards, up, down)),
+                fmt::bytes(st.wire_bytes),
+            ]);
+        }
+    }
+    print_rows(
+        &format!("Sharded PS (measured, {workers} workers, 2.1M elements): round vs model"),
+        &["shards", "scheme", "measured", "model", "wire bytes"],
+        &rows,
+    );
+
+    // Async amortization (modeled): 100 rounds of the terngrad gradient on
+    // a 1 Gbps / 5 ms star — the latency term shrinks with the window.
+    let slow = Link::new(1e9, 0.005);
+    let up = wire_size(n_elems, d, 3, Packing::BaseS, "terngrad");
+    let down = n_elems * 4;
+    let mut rows = Vec::new();
+    for k in [0usize, 1, 4, 16] {
+        rows.push(vec![
+            format!("K={k}"),
+            fmt::duration(shard::async_time(&slow, workers, 4, 100, k, up, down)),
+        ]);
+    }
+    print_rows(
+        "Async sharded PS (modeled, 100 rounds @ 1 Gbps + 5 ms, S=4): staleness window",
+        &["window", "total comm time"],
         &rows,
     );
 }

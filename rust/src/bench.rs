@@ -269,6 +269,9 @@ pub mod suite {
             quantize_downlink: false,
             topology: crate::comm::Topology::Ps,
             groups: 1,
+            shards: 1,
+            staleness: 0,
+            error_feedback: false,
             threads: 1,
             links: crate::config::LinkConfig::default(),
         }

@@ -9,22 +9,30 @@
 //! * **quantize throughput** — per-scheme Melem/s (level solve +
 //!   rounding), plus serial vs parallel quantize+encode through
 //!   `GradCodec` → `BENCH_exchange.json`;
-//! * **exchange rounds** — end-to-end `run_once` wall time for ps
-//!   (serial and parallel codec paths), ring and hier →
+//! * **exchange rounds** — end-to-end `comm::run_rounds` wall time for
+//!   ps (serial and parallel codec paths), ring, hier, and the sharded
+//!   parameter server (synchronous and with a staleness window) →
 //!   `BENCH_exchange.json`.
 //!
-//! ## JSON schema (v1)
+//! ## JSON schema
 //!
-//! `BENCH_codec.json`: `{ schema: "orq.perfbench.codec/v1", mode,
+//! `BENCH_codec.json` (v1): `{ schema: "orq.perfbench.codec/v1", mode,
 //! elements, kernels: [{kernel: "fixed"|"base_s", bits|s, op:
 //! "pack"|"unpack", path: "word"|"scalar"|"recip", mean_s, gb_s,
 //! melem_s, wire_bytes}], speedup: {fixed_pack_unpack, base_s_unpack} }`.
 //!
-//! `BENCH_exchange.json`: `{ schema: "orq.perfbench.exchange/v1", mode,
-//! elements, workers, threads, bucket_size, quantize: [{method, path:
-//! "serial"|"parallel", mean_s, melem_s}], rounds: [{topology, path,
-//! mean_s, wire_bytes, sim_time_s}], speedup: {quantize_encode,
-//! ps_round} }`.
+//! `BENCH_exchange.json` (v2): `{ schema: "orq.perfbench.exchange/v2",
+//! mode, elements, workers, threads, bucket_size, quantize: [{method,
+//! path: "serial"|"parallel", mean_s, melem_s}], rounds: [{topology,
+//! path, mean_s, wire_bytes, sim_time_s, shards, staleness}], speedup:
+//! {quantize_encode, ps_round} }`. v2 preserves every v1 field and adds
+//! the per-round `shards`/`staleness` columns plus the
+//! `topology: "sharded-ps"` entries (`path: "serial"` = synchronous
+//! `--shards 2`, `path: "async"` = staleness window 2). Every round
+//! entry is a per-round average over the same fixed multi-round window
+//! (the largest `K + 1` in the set), so async warm rounds (mean pull +
+//! decode) are in the measurement and per-iteration topology setup
+//! amortizes identically across entries.
 //!
 //! `--smoke` runs small sizes, then re-parses both artifacts and asserts
 //! the schema plus monotone sanity (sizes and rates positive, fixed-width
@@ -37,7 +45,7 @@ use orq::bench::{print_table, Bench, Measurement};
 use orq::cli::Args;
 use orq::codec::bitpack;
 use orq::comm::link::{Link, LinkMap};
-use orq::comm::{run_once, ExchangeConfig, GradCodec, Topology, WireSpec};
+use orq::comm::{run_rounds, ExchangeConfig, GradCodec, Topology, WireSpec};
 use orq::error::{Error, Result};
 use orq::quant::bucket::{BucketQuantizer, QuantizedGrad};
 use orq::quant::parallel::BucketPipeline;
@@ -308,17 +316,26 @@ fn bench_exchange(
         ("ps", "parallel", ExchangeConfig::flat(Topology::Ps, link), threads),
         ("ring", "serial", ExchangeConfig::flat(Topology::Ring, link), 1),
         ("hier", "serial", ExchangeConfig::hier(groups, LinkMap::uniform(link)), 1),
+        ("sharded-ps", "serial", ExchangeConfig::sharded(2, 0, link), 1),
+        ("sharded-ps", "async", ExchangeConfig::sharded(2, 2, link), 1),
     ];
+    // One measurement window for EVERY entry — the largest staleness
+    // window in the set — so warm async rounds (mean pull + decode) are
+    // in the measurement AND the per-iteration topology setup amortizes
+    // identically across entries (figures stay comparable). All reported
+    // round figures are per-round averages over this window.
+    let window = configs.iter().map(|(_, _, c, _)| c.staleness + 1).max().unwrap_or(1);
+    let inv = 1.0 / window as f64;
     let mut rows = Vec::new();
     let mut round_entries = Vec::new();
     let mut ps_round = [0.0f64; 2]; // [serial, parallel]
     for (topo, path, cfg, t) in configs {
         let spec = WireSpec { seed: 7, ..WireSpec::new(method, bucket) }.with_threads(t);
-        // one validated round outside the timer, for stats + fail-fast
-        let (_, stats) = run_once(&cfg, &spec, &grads)?;
+        // one validated window outside the timer, for stats + fail-fast
+        let (_, stats) = run_rounds(&cfg, &spec, &grads, window)?;
         let meas = bench.measure(&format!("{topo} round {path} (t={t})"), None, || {
-            let out = run_once(&cfg, &spec, &grads).expect("validated above");
-            std::hint::black_box(out.0.len());
+            let out = run_rounds(&cfg, &spec, &grads, window).expect("validated above");
+            std::hint::black_box(out.1.wire_bytes);
         });
         if topo == "ps" {
             ps_round[if path == "serial" { 0 } else { 1 }] = meas.mean_s;
@@ -326,9 +343,11 @@ fn bench_exchange(
         round_entries.push(obj(vec![
             ("topology", Json::Str(topo.to_string())),
             ("path", Json::Str(path.to_string())),
-            ("mean_s", Json::Num(meas.mean_s)),
-            ("wire_bytes", Json::Num(stats.wire_bytes as f64)),
-            ("sim_time_s", Json::Num(stats.sim_time_s)),
+            ("mean_s", Json::Num(meas.mean_s * inv)),
+            ("wire_bytes", Json::Num(stats.wire_bytes as f64 * inv)),
+            ("sim_time_s", Json::Num(stats.sim_time_s * inv)),
+            ("shards", Json::Num(cfg.shards as f64)),
+            ("staleness", Json::Num(cfg.staleness as f64)),
         ]));
         rows.push(meas);
     }
@@ -347,7 +366,7 @@ fn bench_exchange(
         ps_round[0] / ps_round[1].max(1e-12)
     );
     Ok(obj(vec![
-        ("schema", Json::Str("orq.perfbench.exchange/v1".into())),
+        ("schema", Json::Str("orq.perfbench.exchange/v2".into())),
         ("mode", Json::Str(mode.into())),
         ("elements", Json::Num(n as f64)),
         ("workers", Json::Num(workers as f64)),
@@ -445,7 +464,7 @@ fn validate_codec(j: &Json) -> Result<()> {
 
 fn validate_exchange(j: &Json) -> Result<()> {
     let j = &Json::parse(&j.dump())?;
-    if j.req("schema")?.as_str() != Some("orq.perfbench.exchange/v1") {
+    if j.req("schema")?.as_str() != Some("orq.perfbench.exchange/v2") {
         return Err(fail("bad exchange schema tag".into()));
     }
     for key in ["mode", "elements", "workers", "threads", "bucket_size"] {
@@ -470,6 +489,7 @@ fn validate_exchange(j: &Json) -> Result<()> {
         .as_arr()
         .ok_or_else(|| fail("rounds is not an array".into()))?;
     let mut seen_ps = (false, false);
+    let mut seen_sharded = (false, false);
     for r in rounds {
         let topo = r.req("topology")?.as_str().unwrap_or_default().to_string();
         let path = r.req("path")?.as_str().unwrap_or_default().to_string();
@@ -479,14 +499,38 @@ fn validate_exchange(j: &Json) -> Result<()> {
         {
             return Err(fail(format!("non-positive figures in {}", r.dump())));
         }
+        // v2 columns: every round entry declares its shard count and
+        // staleness window (1 / 0 on the unsharded topologies).
+        let shards = req_f64(r, "shards")?;
+        let staleness = req_f64(r, "staleness")?;
+        if shards < 1.0 || staleness < 0.0 {
+            return Err(fail(format!("bad shards/staleness in {}", r.dump())));
+        }
         match (topo.as_str(), path.as_str()) {
             ("ps", "serial") => seen_ps.0 = true,
             ("ps", "parallel") => seen_ps.1 = true,
+            ("sharded-ps", "serial") => {
+                if shards < 2.0 || staleness != 0.0 {
+                    return Err(fail("sharded-ps serial must run S ≥ 2, K = 0".into()));
+                }
+                seen_sharded.0 = true;
+            }
+            ("sharded-ps", "async") => {
+                if shards < 2.0 || staleness < 1.0 {
+                    return Err(fail("sharded-ps async must run S ≥ 2, K ≥ 1".into()));
+                }
+                seen_sharded.1 = true;
+            }
             _ => {}
         }
     }
     if seen_ps != (true, true) {
         return Err(fail("both ps serial and ps parallel rounds are required".into()));
+    }
+    if seen_sharded != (true, true) {
+        return Err(fail(
+            "both sharded-ps serial and sharded-ps async rounds are required".into(),
+        ));
     }
     let sp = j.req("speedup")?;
     for key in ["quantize_encode", "ps_round"] {

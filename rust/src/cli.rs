@@ -90,7 +90,8 @@ orq — optimal gradient quantization for distributed training (ORQ/BinGrad)
 USAGE:
   orq train [--config FILE] [--model M] [--method Q] [--workers N]
             [--steps N] [--batch N] [--dataset D] [--bucket N] [--clip C]
-            [--topology ps|ring|hier] [--groups N] [--threads N]
+            [--topology ps|ring|hier|sharded-ps] [--groups N]
+            [--shards S] [--staleness K] [--error-feedback] [--threads N]
             [--backend native|pjrt]
             [--intra-bandwidth BPS] [--intra-latency S]
             [--inter-bandwidth BPS] [--inter-latency S]
@@ -103,11 +104,15 @@ METHODS: fp, signsgd, bingrad-pb, bingrad-b, terngrad, qsgd-S, linear-S, orq-S
 MODELS (native): mlp_s, mlp_m, mlp_l, mlp:d0-d1-...  (pjrt): names from meta.json
 DATASETS: cifar10, cifar100, imagenet
 TOPOLOGIES: ps (parameter-server star), ring (decode-reduce-requantize all-reduce),
-            hier (intra-group rings + leader star; --groups must divide --workers)
+            hier (intra-group rings + leader star; --groups must divide --workers),
+            sharded-ps (bucket-aligned server shards; --shards S, and --staleness K
+            lets workers run K rounds ahead of the slowest shard — K=0 synchronous)
 LINKS: per edge class — intra (in-group) vs inter (cross-group / flat edges);
        bandwidth in bits/s, one-way latency in seconds (default 10e9 / 0)
 THREADS: codec threads per node — 1 serial (default), 0 auto-detect cores,
        N ≥ 2 parallel per-bucket quantize/encode + decode/reduce pipeline
+ERROR FEEDBACK: --error-feedback quantizes g + m and keeps the residual m
+       (ps/sharded-ps with a quantizing method and --threads 1)
 ";
 
 #[cfg(test)]

@@ -24,7 +24,9 @@
 //! materialization, no per-bucket allocation), and
 //! [`slice_elements_into`] cuts a bucket-aligned element range out of an
 //! encoded message as a standalone message — the ring all-reduce uses it
-//! to ship each node's original quantized chunks without requantizing.
+//! to ship each node's original quantized chunks without requantizing,
+//! and [`slice_elements_append`] lands the same cut behind an existing
+//! envelope header (the sharded-ps versioned frames) in one copy.
 //! For the parallel bucket pipeline (`quant::parallel`),
 //! [`encode_quantized_header_into`] + [`BucketEncoder`] let shards append
 //! payload segments that concatenate byte-identically to [`encode`], and
@@ -462,6 +464,16 @@ pub fn peek_shape(bytes: &[u8]) -> Result<(usize, usize)> {
 /// aligned to the message's bucket grid (`e % bucket == 0` or `e ==
 /// total` at both ends); FP messages slice at any element boundary.
 pub fn slice_elements_into(bytes: &[u8], e0: usize, e1: usize, out: &mut Vec<u8>) -> Result<()> {
+    out.clear();
+    slice_elements_append(bytes, e0, e1, out)
+}
+
+/// [`slice_elements_into`] appended to `out`'s existing tail instead of
+/// clearing it — so an outer envelope (the sharded-ps versioned frame)
+/// can write its header first and have the sliced message land directly
+/// behind it, one copy, one owned buffer. On `Err` the tail is
+/// unspecified (callers discard the buffer).
+pub fn slice_elements_append(bytes: &[u8], e0: usize, e1: usize, out: &mut Vec<u8>) -> Result<()> {
     let w = parse(bytes)?;
     if e0 > e1 || e1 > w.total {
         return Err(Error::Codec(format!(
@@ -470,7 +482,6 @@ pub fn slice_elements_into(bytes: &[u8], e0: usize, e1: usize, out: &mut Vec<u8>
         )));
     }
     let n = e1 - e0;
-    out.clear();
     if w.is_fp() {
         write_header(out, w.flags, 0, w.scheme, n as u64, n.max(1) as u32);
         out.extend_from_slice(&w.payload[e0 * 4..e1 * 4]);
@@ -685,6 +696,13 @@ mod tests {
         // empty slice decodes to nothing
         slice_elements_into(&bytes, 100, 100, &mut out).unwrap();
         assert!(decode(&out).unwrap().is_empty());
+        // the append variant lands the identical message behind an
+        // existing prefix and leaves the prefix untouched
+        let mut framed = vec![0xAB, 0xCD];
+        slice_elements_append(&bytes, 13, 77, &mut framed).unwrap();
+        slice_elements_into(&bytes, 13, 77, &mut out).unwrap();
+        assert_eq!(&framed[..2], &[0xAB, 0xCD]);
+        assert_eq!(&framed[2..], &out[..]);
     }
 
     #[test]

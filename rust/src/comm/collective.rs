@@ -13,11 +13,12 @@
 //!   returns the same decoded mean, and owns the exact wire-byte and
 //!   simulated-time accounting ([`CommStats`]).
 //!
-//! Three real implementations exist, all over `std::sync::mpsc` channels:
+//! Four real implementations exist, all over `std::sync::mpsc` channels:
 //! the star in [`super::ps`], the decode-reduce-requantize ring in
-//! [`super::ring`], and the two-level hierarchy in [`super::hier`].
+//! [`super::ring`], the two-level hierarchy in [`super::hier`], and the
+//! sharded/bounded-staleness parameter server in [`super::async_ps`].
 //! [`build_topology`] constructs any of them from an [`ExchangeConfig`]
-//! (topology tag + per-edge-class [`LinkMap`] + grouping), and
+//! (topology tag + per-edge-class [`LinkMap`] + grouping/sharding), and
 //! [`run_once`] drives a single round with scoped threads — the entry
 //! point the Table 1 bench and the equivalence tests use.
 
@@ -26,14 +27,17 @@ use std::sync::mpsc::Receiver;
 use crate::codec::{self, Packing};
 use crate::error::{Error, Result};
 use crate::quant::bucket::{BucketQuantizer, QuantizedGrad};
+use crate::quant::error_feedback::ErrorFeedback;
 use crate::quant::parallel::BucketPipeline;
 use crate::quant::{self, Quantizer};
 use crate::tensor::rng::Rng;
 
+use super::async_ps::ShardedPsCollective;
 use super::hier::HierarchicalCollective;
 use super::link::{Link, LinkMap};
 use super::ps::PsCollective;
 use super::ring::RingAllReduce;
+use super::shard::StalenessStats;
 
 /// Which gradient-exchange topology to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -47,6 +51,11 @@ pub enum Topology {
     /// Two-level hierarchy: intra-group rings + a leader star
     /// (`groups` in [`ExchangeConfig`] sets the partition).
     Hier,
+    /// Sharded parameter server: the gradient partitioned bucket-aligned
+    /// across `shards` independent server shards, optionally with a
+    /// bounded staleness window (`staleness` in [`ExchangeConfig`];
+    /// `K = 0` is fully synchronous, `S = 1, K = 0` ≡ [`Topology::Ps`]).
+    ShardedPs,
 }
 
 impl Topology {
@@ -55,8 +64,9 @@ impl Topology {
             "ps" | "star" => Ok(Topology::Ps),
             "ring" => Ok(Topology::Ring),
             "hier" | "hierarchical" => Ok(Topology::Hier),
+            "sharded-ps" | "sharded" => Ok(Topology::ShardedPs),
             other => Err(Error::InvalidArg(format!(
-                "unknown topology {other:?} (use ps, ring or hier)"
+                "unknown topology {other:?} (use ps, ring, hier or sharded-ps)"
             ))),
         }
     }
@@ -66,6 +76,7 @@ impl Topology {
             Topology::Ps => "ps",
             Topology::Ring => "ring",
             Topology::Hier => "hier",
+            Topology::ShardedPs => "sharded-ps",
         }
     }
 }
@@ -85,8 +96,9 @@ impl std::str::FromStr for Topology {
 }
 
 /// Cumulative exchange accounting: exact wire bytes (total and per edge
-/// class), simulated communication seconds on the critical path, and
-/// message count.
+/// class), simulated communication seconds on the critical path, message
+/// count, and — for the sharded/async parameter server — the
+/// applied-version staleness histogram.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CommStats {
     pub wire_bytes: u64,
@@ -98,6 +110,11 @@ pub struct CommStats {
     pub wire_bytes_inter: u64,
     pub sim_time_s: f64,
     pub messages: u64,
+    /// Per-round applied-version age accounting. All-zero for the
+    /// synchronous topologies; populated by [`Topology::ShardedPs`]
+    /// (every warm round records age `K`, cold start rounds are counted
+    /// separately — see [`StalenessStats`]).
+    pub staleness: StalenessStats,
 }
 
 /// Everything that shapes the exchange *transport* (as opposed to the
@@ -109,10 +126,18 @@ pub struct ExchangeConfig {
     /// Worker groups for [`Topology::Hier`] (must divide the worker
     /// count). Flat topologies require 1.
     pub groups: usize,
+    /// Server shards for [`Topology::ShardedPs`] (each must own at least
+    /// one bucket of the gradient). Every other topology requires 1.
+    pub shards: usize,
+    /// Bounded staleness window `K` for [`Topology::ShardedPs`]: workers
+    /// may run up to `K` rounds ahead of the slowest shard and apply the
+    /// round-`r − K` mean at round `r`. `0` (required on every other
+    /// topology) is fully synchronous.
+    pub staleness: usize,
     pub links: LinkMap,
     /// Quantize the PS broadcast too (paper §4 option b). PS only: the
-    /// ring requantizes every hop by construction and the hierarchy's
-    /// mean multicast is FP by construction.
+    /// ring requantizes every hop by construction, and the hierarchy's
+    /// and sharded server's mean downlinks are FP by construction.
     pub quantize_downlink: bool,
 }
 
@@ -122,6 +147,8 @@ impl ExchangeConfig {
         ExchangeConfig {
             topology,
             groups: 1,
+            shards: 1,
+            staleness: 0,
             links: LinkMap::uniform(link),
             quantize_downlink: false,
         }
@@ -130,7 +157,28 @@ impl ExchangeConfig {
     /// The hierarchical topology with `groups` groups over a
     /// heterogeneous link map.
     pub fn hier(groups: usize, links: LinkMap) -> ExchangeConfig {
-        ExchangeConfig { topology: Topology::Hier, groups, links, quantize_downlink: false }
+        ExchangeConfig {
+            topology: Topology::Hier,
+            groups,
+            shards: 1,
+            staleness: 0,
+            links,
+            quantize_downlink: false,
+        }
+    }
+
+    /// The sharded parameter server with `shards` server shards and a
+    /// bounded staleness window of `staleness` rounds, over a homogeneous
+    /// link.
+    pub fn sharded(shards: usize, staleness: usize, link: Link) -> ExchangeConfig {
+        ExchangeConfig {
+            topology: Topology::ShardedPs,
+            groups: 1,
+            shards,
+            staleness,
+            links: LinkMap::uniform(link),
+            quantize_downlink: false,
+        }
     }
 
     pub fn with_downlink(mut self, quantize_downlink: bool) -> ExchangeConfig {
@@ -138,9 +186,47 @@ impl ExchangeConfig {
         self
     }
 
-    /// Validate grouping and downlink options against a worker count.
+    /// Validate grouping, sharding and downlink options against a worker
+    /// count.
     pub fn validate(&self, workers: usize) -> Result<()> {
+        if self.topology != Topology::ShardedPs {
+            if self.shards != 1 {
+                return Err(Error::InvalidArg(format!(
+                    "shards ({}) only applies to the sharded-ps topology",
+                    self.shards
+                )));
+            }
+            if self.staleness != 0 {
+                return Err(Error::InvalidArg(format!(
+                    "staleness ({}) requires the asynchronous sharded-ps topology; \
+                     the {} topology is synchronous by construction",
+                    self.staleness, self.topology
+                )));
+            }
+        }
         match self.topology {
+            Topology::ShardedPs => {
+                if self.shards == 0 {
+                    return Err(Error::InvalidArg(
+                        "shards must be >= 1 (1 degenerates to the flat parameter server)"
+                            .into(),
+                    ));
+                }
+                if self.groups != 1 {
+                    return Err(Error::InvalidArg(format!(
+                        "groups ({}) only applies to the hier topology",
+                        self.groups
+                    )));
+                }
+                if self.quantize_downlink {
+                    return Err(Error::InvalidArg(
+                        "quantize_downlink applies to the flat parameter-server broadcast; \
+                         the sharded-ps per-shard mean downlink is FP by construction \
+                         (drop the flag or use --topology ps)"
+                            .into(),
+                    ));
+                }
+            }
             Topology::Hier => {
                 if self.groups == 0 || (workers > 0 && workers % self.groups != 0) {
                     return Err(Error::InvalidArg(format!(
@@ -319,6 +405,33 @@ impl GradCodec {
         }
     }
 
+    /// Build error-feedback state matching this codec's bucket/clip
+    /// configuration. Serial quantized codecs only — the parallel
+    /// pipeline never materializes the quantized gradient the residual
+    /// update needs (config validation enforces both).
+    pub fn error_feedback(&self) -> ErrorFeedback {
+        ErrorFeedback::new(self.bucketq.clone())
+    }
+
+    /// The error-feedback twin of [`Self::encode_into`]: quantize
+    /// `g + m` through `ef` (residual memory updated in place) and
+    /// encode with this codec's scheme and packing.
+    pub fn encode_ef_into(
+        &mut self,
+        ef: &mut ErrorFeedback,
+        g: &[f32],
+        rng: &mut Rng,
+        qg: &mut QuantizedGrad,
+        msg: &mut Vec<u8>,
+    ) {
+        debug_assert!(
+            !self.is_fp && self.pipeline.is_none(),
+            "EF needs a serial quantizing codec (config validation enforces this)"
+        );
+        ef.quantize_into(g, self.quantizer.as_ref(), rng, qg);
+        codec::encode_into(qg, &self.method, self.packing, msg);
+    }
+
     /// Decode a wire message into a flat f32 buffer, using the parallel
     /// pipeline when this codec has one (serial otherwise). The trainer's
     /// per-step error measurement uses this on the parallel path, where
@@ -387,6 +500,13 @@ pub trait Collective: Send {
     /// Cumulative totals since construction. Per-round figures are deltas
     /// between consecutive calls.
     fn stats(&self) -> CommStats;
+
+    /// Exact wire bytes through each server shard, for topologies that
+    /// shard their aggregation ([`Topology::ShardedPs`]); `None`
+    /// elsewhere.
+    fn shard_bytes(&self) -> Option<Vec<u64>> {
+        None
+    }
 }
 
 /// Worker end of a topology (one per worker thread).
@@ -434,17 +554,31 @@ pub fn build_topology(
                 ends.into_iter().map(|e| Box::new(e) as Box<dyn WorkerExchange>).collect(),
             ))
         }
+        Topology::ShardedPs => {
+            let (coord, ends) =
+                ShardedPsCollective::new(workers, cfg.shards, cfg.staleness, cfg.links, spec)?;
+            Ok((
+                Box::new(coord),
+                ends.into_iter().map(|e| Box::new(e) as Box<dyn WorkerExchange>).collect(),
+            ))
+        }
     }
 }
 
-/// Drive one full exchange round over `grads` (one per worker) with
-/// scoped worker threads: encode with the spec's quantizer, exchange,
-/// return the decoded mean and the round's stats. Used by the Table 1
-/// bench ("measured" columns) and the topology-equivalence tests.
-pub fn run_once(
+/// Drive `rounds` exchange rounds over one built topology with scoped
+/// worker threads: each worker re-encodes the same gradient every round
+/// (the spec's quantizer RNG streams advance across rounds) and
+/// exchanges; returns the last round's decoded mean and the cumulative
+/// stats. Asynchronous sharded topologies pipeline inside their
+/// staleness window, so multi-round drives are what exercise (and
+/// measure) warm rounds. `rounds == 0` moves nothing and returns an
+/// empty mean. This is the one copy of the drop-before-join teardown
+/// convention benches and tests should reuse.
+pub fn run_rounds(
     cfg: &ExchangeConfig,
     spec: &WireSpec,
     grads: &[Vec<f32>],
+    rounds: usize,
 ) -> Result<(Vec<f32>, CommStats)> {
     let (mut coll, ends) = build_topology(cfg, grads.len(), spec)?;
     let mut mean = Vec::new();
@@ -457,24 +591,45 @@ pub fn run_once(
                 let mut rng = Rng::stream(spec.seed, 2_000 + w as u64);
                 let mut qg = QuantizedGrad::default();
                 let mut msg = Vec::new();
-                gc.encode_into(g, &mut rng, &mut qg, &mut msg);
                 let mut mean = Vec::new();
-                // On channel death the coordinator's round() surfaces the
-                // real error; a panic here would only mask it.
-                let _ = wx.exchange(&mut msg, &mut mean);
+                for _ in 0..rounds {
+                    gc.encode_into(g, &mut rng, &mut qg, &mut msg);
+                    // On channel death the coordinator's round() surfaces
+                    // the real error; a panic here would only mask it.
+                    if wx.exchange(&mut msg, &mut mean).is_err() {
+                        return;
+                    }
+                }
             });
         }
-        let round = coll.round(&mut mean);
+        let mut round_res = Ok(());
+        for _ in 0..rounds {
+            if let Err(e) = coll.round(&mut mean) {
+                round_res = Err(e);
+                break;
+            }
+        }
         let stats = coll.stats();
         // Tear the coordinator down before the scope joins: if round()
         // erred mid-exchange (e.g. mismatched upload shapes), workers
         // still blocked on its channels must see them close and exit
         // instead of deadlocking the join.
         drop(coll);
-        round.map(|()| stats)
+        round_res.map(|()| stats)
     });
     let stats = res?;
     Ok((mean, stats))
+}
+
+/// Drive one full exchange round over `grads` (one per worker): the
+/// `rounds == 1` case of [`run_rounds`]. Used by the Table 1 bench
+/// ("measured" columns) and the topology-equivalence tests.
+pub fn run_once(
+    cfg: &ExchangeConfig,
+    spec: &WireSpec,
+    grads: &[Vec<f32>],
+) -> Result<(Vec<f32>, CommStats)> {
+    run_rounds(cfg, spec, grads, 1)
 }
 
 #[cfg(test)]
@@ -488,10 +643,14 @@ mod tests {
         assert_eq!(Topology::parse("ring").unwrap(), Topology::Ring);
         assert_eq!(Topology::parse("hier").unwrap(), Topology::Hier);
         assert_eq!(Topology::parse("hierarchical").unwrap(), Topology::Hier);
+        assert_eq!(Topology::parse("sharded-ps").unwrap(), Topology::ShardedPs);
+        assert_eq!(Topology::parse("sharded").unwrap(), Topology::ShardedPs);
         assert!(Topology::parse("mesh").is_err());
         assert_eq!(Topology::Ring.to_string(), "ring");
         assert_eq!(Topology::Hier.to_string(), "hier");
+        assert_eq!(Topology::ShardedPs.to_string(), "sharded-ps");
         assert_eq!("ps".parse::<Topology>().unwrap(), Topology::Ps);
+        assert_eq!("sharded-ps".parse::<Topology>().unwrap(), Topology::ShardedPs);
         assert_eq!(Topology::default(), Topology::Ps);
     }
 
@@ -519,6 +678,22 @@ mod tests {
             .with_downlink(true)
             .validate(2)
             .is_err());
+        assert!(ExchangeConfig::sharded(2, 0, link).with_downlink(true).validate(2).is_err());
+        // sharding and staleness are sharded-ps-only knobs
+        assert!(ExchangeConfig::sharded(2, 3, link).validate(4).is_ok());
+        assert!(ExchangeConfig::sharded(0, 0, link).validate(4).is_err());
+        let mut c = ExchangeConfig::flat(Topology::Ps, link);
+        c.shards = 2;
+        assert!(c.validate(4).is_err());
+        let mut c = ExchangeConfig::flat(Topology::Ring, link);
+        c.staleness = 1;
+        assert!(c.validate(4).is_err());
+        let mut c = ExchangeConfig::hier(2, LinkMap::uniform(link));
+        c.staleness = 1;
+        assert!(c.validate(4).is_err());
+        let mut c = ExchangeConfig::sharded(2, 0, link);
+        c.groups = 2;
+        assert!(c.validate(4).is_err());
     }
 
     #[test]
@@ -581,6 +756,31 @@ mod tests {
         }
     }
 
+    /// `encode_ef_into` must be byte-identical to running the standalone
+    /// `ErrorFeedback` over the same bucket config and encoding the
+    /// result — one wire format, whether compensated or not.
+    #[test]
+    fn grad_codec_error_feedback_matches_manual_path() {
+        let g: Vec<f32> = (0..600).map(|i| (i as f32 - 300.0) / 90.0).collect();
+        let mut gc = GradCodec::new(&WireSpec::new("bingrad-b", 128)).unwrap();
+        let mut ef = gc.error_feedback();
+        let mut qg = QuantizedGrad::default();
+        let mut msg = Vec::new();
+        gc.encode_ef_into(&mut ef, &g, &mut Rng::seed_from(5), &mut qg, &mut msg);
+        let q = quant::from_name("bingrad-b").unwrap();
+        let mut ef2 = ErrorFeedback::new(BucketQuantizer::new(128));
+        let mut qg2 = QuantizedGrad::default();
+        ef2.quantize_into(&g, q.as_ref(), &mut Rng::seed_from(5), &mut qg2);
+        assert_eq!(msg, codec::encode(&qg2, "bingrad-b", Packing::BaseS));
+        // a second round compensates: the transmitted signal differs from
+        // the plain (memoryless) quantization of the same gradient
+        gc.encode_ef_into(&mut ef, &g, &mut Rng::seed_from(6), &mut qg, &mut msg);
+        let mut plain = GradCodec::new(&WireSpec::new("bingrad-b", 128)).unwrap();
+        let mut msg2 = Vec::new();
+        plain.encode_into(&g, &mut Rng::seed_from(6), &mut qg2, &mut msg2);
+        assert_ne!(msg, msg2, "round 2 must carry the residual");
+    }
+
     #[test]
     fn build_topology_rejects_bad_method() {
         let spec = WireSpec::new("not-a-method", 64);
@@ -589,6 +789,7 @@ mod tests {
         assert!(build_topology(&ExchangeConfig::flat(Topology::Ring, link), 2, &spec).is_err());
         let hier = ExchangeConfig::hier(2, LinkMap::uniform(link));
         assert!(build_topology(&hier, 2, &spec).is_err());
+        assert!(build_topology(&ExchangeConfig::sharded(2, 0, link), 2, &spec).is_err());
     }
 
     #[test]

@@ -290,6 +290,7 @@ impl Collective for HierarchicalCollective {
             wire_bytes_inter: self.meter_inter.total_bytes(),
             sim_time_s: self.sim_time_s,
             messages: self.meter_intra.messages + self.meter_inter.messages,
+            staleness: Default::default(),
         }
     }
 }

@@ -1,5 +1,5 @@
 //! Communication substrate: per-edge-class link model, the
-//! topology-agnostic [`Collective`] abstraction, and three real
+//! topology-agnostic [`Collective`] abstraction, and four real
 //! implementations of it.
 //!
 //! The paper's Table 1 costs gradients at 10 Gbps; all transfer *times*
@@ -37,9 +37,24 @@
 //!   bytes onto the fast edges ([`CommStats::wire_bytes_intra`] /
 //!   [`CommStats::wire_bytes_inter`] keep the split); [`hier::hier_time`]
 //!   is its closed-form critical-path model.
+//! * **Sharded / async parameter server** ([`async_ps`] on the
+//!   [`shard`] substrate, `--topology sharded-ps --shards S
+//!   [--staleness K]`) — the flat gradient partitioned bucket-aligned
+//!   across S server shards (each worker's per-shard upload is a pure
+//!   byte slice of its one encoded gradient), each shard reducing in its
+//!   own real thread so a slow shard no longer serializes the round.
+//!   Every message rides a *versioned frame* (round number in the wire
+//!   header); with a bounded staleness window K ≥ 1 workers run up to K
+//!   rounds ahead of the slowest shard and apply the round-`r − K` mean
+//!   at round `r` (K = 0 is fully synchronous, and `S = 1, K = 0` is
+//!   bit-identical to the flat PS). [`CommStats::staleness`] keeps the
+//!   applied-version age histogram; [`shard::sharded_time`] /
+//!   [`shard::async_time`] are the closed-form critical-path models.
 //!
-//! Pick a topology from the CLI (`orq train --topology ps|ring|hier
-//! [--groups N]`), a config file (`topology = "hier"`, `groups = N`, and
+//! Pick a topology from the CLI (`orq train --topology
+//! ps|ring|hier|sharded-ps [--groups N] [--shards S] [--staleness K]`), a
+//! config file (`topology = "hier"`, `groups = N`, `topology =
+//! "sharded-ps"`, `shards = S`, `staleness = K`, and
 //! `intra_bandwidth`/`intra_latency`/`inter_bandwidth`/`inter_latency`
 //! under `[train]`), or directly via
 //! [`TrainConfig::topology`](crate::config::TrainConfig). The trainer is
@@ -47,17 +62,21 @@
 //! constructs any end set from an [`ExchangeConfig`] and [`run_once`]
 //! drives a single standalone round (benches/tests).
 
+pub mod async_ps;
 pub mod collective;
 pub mod hier;
 pub mod link;
 pub mod ps;
 pub mod ring;
+pub mod shard;
 
+pub use async_ps::{ShardedPsCollective, ShardedPsWorker};
 pub use collective::{
-    build_topology, run_once, Collective, CommStats, ExchangeConfig, GradCodec, Topology,
-    WireSpec, WorkerExchange,
+    build_topology, run_once, run_rounds, Collective, CommStats, ExchangeConfig, GradCodec,
+    Topology, WireSpec, WorkerExchange,
 };
 pub use hier::{HierWorker, HierarchicalCollective};
 pub use link::{EdgeClass, Link, LinkMap};
 pub use ps::{ParameterServer, PsCollective, PsWorker, WorkerHandle};
 pub use ring::{RingAllReduce, RingWorker};
+pub use shard::StalenessStats;

@@ -244,6 +244,7 @@ impl Collective for PsCollective {
             wire_bytes_inter: self.server.meter.total_bytes(),
             sim_time_s: self.server.sim_time_s,
             messages: self.server.meter.messages,
+            staleness: Default::default(),
         }
     }
 }

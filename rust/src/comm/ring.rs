@@ -205,6 +205,7 @@ impl Collective for RingAllReduce {
             wire_bytes_inter: self.meter.total_bytes(),
             sim_time_s: self.sim_time_s,
             messages: self.meter.messages,
+            staleness: Default::default(),
         }
     }
 }

@@ -1,0 +1,425 @@
+//! Sharded parameter-server substrate: the bucket-aligned shard
+//! partition, the versioned wire frame that carries per-shard chunks, the
+//! bounded-staleness accounting ([`StalenessStats`]), and the closed-form
+//! critical-path models ([`sharded_time`], [`async_time`]) that mirror
+//! [`super::ring::allreduce_time`] / [`super::hier::hier_time`].
+//!
+//! **Partition.** The flat gradient is cut into `S` contiguous,
+//! bucket-aligned element ranges ([`shard_range`], the ring's
+//! [`chunk_range`](super::ring::chunk_range) grid with `parts = S`), so a
+//! worker's per-shard upload is a pure byte slice of its one encoded
+//! gradient ([`crate::codec::slice_elements_into`]) — no per-shard
+//! requantization, and shard `s` of every worker covers the identical
+//! element range. Ranges are contiguous and increasing, so shard chunks
+//! reassemble by concatenation in shard order.
+//!
+//! **Versioned frames.** Every sharded-ps message (worker→shard upload,
+//! shard→worker mean broadcast) wraps its codec payload in a fixed
+//! [`FRAME_HEADER_BYTES`]-byte frame carrying the round number, the shard
+//! id and the sender id. The round field is what makes bounded staleness
+//! *checkable*: a worker at round `r` with window `K` refuses any mean
+//! frame older than `r − K` (and, in the deterministic schedule, any
+//! frame that is not exactly `r − K`). Parsing is fully validated —
+//! truncated headers, bad magic/version/kind bytes and payload-length
+//! lies all return `Err`, never panic (same contract as
+//! [`crate::codec`]).
+//!
+//! **Staleness accounting.** [`StalenessStats`] is the per-round
+//! applied-version age histogram kept by the coordinator inside
+//! [`CommStats`](super::CommStats): warm rounds record `age = round −
+//! applied_version` (exactly `K` under the deterministic schedule —
+//! the structure also admits adaptive pulls), cold rounds (the first `K`
+//! rounds, before any version is inside the window) are counted
+//! separately, and `max_age` is the bound the staleness property test
+//! asserts (`max_age ≤ K`).
+//!
+//! **Time models.** One synchronous sharded round costs the slowest
+//! shard's star: `max_s [max_l uplink(chunk_s) + broadcast(chunk_s)]`
+//! ([`sharded_time`]; with `S = 1` this is exactly the flat PS round).
+//! With a staleness window `K`, up to `K + 1` rounds are in flight, so
+//! per-round latency amortizes across the window while bandwidth does
+//! not ([`async_time`]); `async_time(.., rounds, 0, ..)` reduces exactly
+//! to `rounds · sharded_time(..)`. The executable collective
+//! ([`super::async_ps`]) measures the same quantities with exact
+//! per-frame byte accounting.
+
+use std::ops::Range;
+
+use super::link::Link;
+use crate::error::{Error, Result};
+
+// --------------------------------------------------------------------
+// Shard partition
+// --------------------------------------------------------------------
+
+/// Element range owned by server shard `i` of `shards`, for a gradient of
+/// `total` elements on the `bucket`-sized quantization grid. Delegates to
+/// the ring's chunk grid: contiguous, increasing, bucket-aligned ranges
+/// that cover `[0, total)` exactly.
+pub fn shard_range(total: usize, bucket: usize, shards: usize, i: usize) -> Range<usize> {
+    super::ring::chunk_range(total, bucket, shards, i)
+}
+
+// --------------------------------------------------------------------
+// Versioned frames
+// --------------------------------------------------------------------
+
+/// Frame magic `"ORQF"` (little-endian).
+pub const FRAME_MAGIC: u32 = 0x4651_524F;
+/// Versioned-frame wire version.
+pub const FRAME_VERSION: u8 = 1;
+/// Fixed frame header size: magic u32, version u8, kind u8, shard u16,
+/// sender u16, round u64, payload_len u32.
+pub const FRAME_HEADER_BYTES: usize = 4 + 1 + 1 + 2 + 2 + 8 + 4;
+
+/// What a sharded-ps frame carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Worker → shard: one encoded gradient chunk.
+    Upload,
+    /// Shard → worker: the FP-encoded mean of the shard's chunk.
+    Mean,
+}
+
+impl FrameKind {
+    fn byte(self) -> u8 {
+        match self {
+            FrameKind::Upload => 0,
+            FrameKind::Mean => 1,
+        }
+    }
+
+    fn from_byte(b: u8) -> Result<FrameKind> {
+        match b {
+            0 => Ok(FrameKind::Upload),
+            1 => Ok(FrameKind::Mean),
+            other => Err(Error::Codec(format!("unknown frame kind {other}"))),
+        }
+    }
+}
+
+/// Parsed view of a versioned frame: header fields + payload slice (the
+/// inner [`crate::codec`] message bytes).
+#[derive(Debug)]
+pub struct Frame<'a> {
+    pub kind: FrameKind,
+    pub shard: u16,
+    pub sender: u16,
+    pub round: u64,
+    pub payload: &'a [u8],
+}
+
+/// Serialize a versioned frame into a reused buffer (cleared first).
+pub fn encode_frame_into(
+    kind: FrameKind,
+    round: u64,
+    shard: u16,
+    sender: u16,
+    payload: &[u8],
+    out: &mut Vec<u8>,
+) {
+    out.clear();
+    out.reserve(FRAME_HEADER_BYTES + payload.len());
+    out.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
+    out.push(FRAME_VERSION);
+    out.push(kind.byte());
+    out.extend_from_slice(&shard.to_le_bytes());
+    out.extend_from_slice(&sender.to_le_bytes());
+    out.extend_from_slice(&round.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+}
+
+/// Start a frame in `out` (cleared): the header with a zero payload
+/// length. Append the payload bytes directly behind it (e.g.
+/// [`crate::codec::slice_elements_append`] — one copy, no intermediate
+/// buffer), then call [`finish_frame`] to patch the length in.
+pub fn begin_frame_into(kind: FrameKind, round: u64, shard: u16, sender: u16, out: &mut Vec<u8>) {
+    encode_frame_into(kind, round, shard, sender, &[], out);
+}
+
+/// Patch the payload length of a frame started with [`begin_frame_into`]
+/// after its payload has been appended.
+pub fn finish_frame(out: &mut Vec<u8>) {
+    debug_assert!(out.len() >= FRAME_HEADER_BYTES, "finish_frame needs a begun frame");
+    let len = (out.len() - FRAME_HEADER_BYTES) as u32;
+    out[18..22].copy_from_slice(&len.to_le_bytes());
+}
+
+/// Parse and fully validate a versioned frame. Truncated headers, wrong
+/// magic/version, unknown kinds and payload-length lies are all `Err`.
+pub fn parse_frame(bytes: &[u8]) -> Result<Frame<'_>> {
+    if bytes.len() < FRAME_HEADER_BYTES {
+        return Err(Error::Codec(format!(
+            "truncated frame: {} bytes, header needs {FRAME_HEADER_BYTES}",
+            bytes.len()
+        )));
+    }
+    let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+    if magic != FRAME_MAGIC {
+        return Err(Error::Codec(format!("bad frame magic {magic:#x}")));
+    }
+    let version = bytes[4];
+    if version != FRAME_VERSION {
+        return Err(Error::Codec(format!("unsupported frame version {version}")));
+    }
+    let kind = FrameKind::from_byte(bytes[5])?;
+    let shard = u16::from_le_bytes(bytes[6..8].try_into().unwrap());
+    let sender = u16::from_le_bytes(bytes[8..10].try_into().unwrap());
+    let round = u64::from_le_bytes(bytes[10..18].try_into().unwrap());
+    let payload_len = u32::from_le_bytes(bytes[18..22].try_into().unwrap()) as usize;
+    let payload = &bytes[FRAME_HEADER_BYTES..];
+    if payload.len() != payload_len {
+        return Err(Error::Codec(format!(
+            "frame payload is {} bytes, header claims {payload_len}",
+            payload.len()
+        )));
+    }
+    Ok(Frame { kind, shard, sender, round, payload })
+}
+
+// --------------------------------------------------------------------
+// Staleness accounting
+// --------------------------------------------------------------------
+
+/// Histogram buckets of [`StalenessStats::hist`]: ages `0..=7`, with the
+/// last bucket absorbing everything older.
+pub const STALENESS_HIST_BUCKETS: usize = 9;
+
+/// Per-round applied-version age accounting for the sharded/async
+/// parameter server (zero everywhere for the synchronous topologies).
+///
+/// `Copy` by design (a fixed-width inline histogram) so it rides inside
+/// [`CommStats`](super::CommStats) without changing that struct's
+/// by-value ergonomics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StalenessStats {
+    /// Rounds served in total (warm + cold).
+    pub rounds: u64,
+    /// Rounds applied before any model version was inside the staleness
+    /// window (the first `K` rounds of an async run).
+    pub cold_rounds: u64,
+    /// Largest observed `round − applied_version` age. The staleness
+    /// bound property is `max_age ≤ K`.
+    pub max_age: u64,
+    /// Counts by age: `hist[a]` rounds applied a version `a` rounds old;
+    /// the final bucket absorbs ages `≥ STALENESS_HIST_BUCKETS − 1`.
+    pub hist: [u64; STALENESS_HIST_BUCKETS],
+}
+
+impl StalenessStats {
+    /// Record one warm round that applied a version `age` rounds old.
+    pub fn record(&mut self, age: u64) {
+        self.rounds += 1;
+        self.max_age = self.max_age.max(age);
+        self.hist[(age as usize).min(STALENESS_HIST_BUCKETS - 1)] += 1;
+    }
+
+    /// Record one cold round (no version inside the window yet).
+    pub fn record_cold(&mut self) {
+        self.rounds += 1;
+        self.cold_rounds += 1;
+    }
+
+    /// Warm rounds recorded in the age histogram.
+    pub fn observed(&self) -> u64 {
+        self.hist.iter().sum()
+    }
+}
+
+// --------------------------------------------------------------------
+// Closed-form cost models
+// --------------------------------------------------------------------
+
+/// Critical-path time of one *synchronous* sharded-ps round: `l` workers
+/// upload one `up_bytes / shards` chunk to each of `shards` servers
+/// concurrently, each shard broadcasts a `down_bytes / shards` mean
+/// chunk; the round waits for the slowest shard. With equal chunks over a
+/// homogeneous link this is `2·latency + (up + down)/S · 8/bw` — at
+/// `shards == 1` exactly the flat parameter-server round
+/// ([`super::ring::ps_time`]), and `S×` less bandwidth per endpoint
+/// otherwise (the whole point of sharding the server).
+pub fn sharded_time(
+    link: &Link,
+    _workers: usize,
+    shards: usize,
+    up_bytes: usize,
+    down_bytes: usize,
+) -> f64 {
+    assert!(shards > 0);
+    let up = up_bytes as f64 / shards as f64;
+    let down = down_bytes as f64 / shards as f64;
+    2.0 * link.latency_s + (up + down) * 8.0 / link.bandwidth_bps
+}
+
+/// Critical-path time of `rounds` sharded-ps rounds under a bounded
+/// staleness window of `staleness` rounds: up to `staleness + 1` rounds
+/// are in flight, so the per-round latency is paid once per window
+/// (`ceil(rounds / (K+1))` barriers) while the bandwidth term — the
+/// shards' serial service time — is paid in full. `staleness == 0`
+/// reduces exactly to `rounds · sharded_time(..)`.
+pub fn async_time(
+    link: &Link,
+    workers: usize,
+    shards: usize,
+    rounds: usize,
+    staleness: usize,
+    up_bytes: usize,
+    down_bytes: usize,
+) -> f64 {
+    if rounds == 0 {
+        return 0.0;
+    }
+    let per_round_bw =
+        sharded_time(link, workers, shards, up_bytes, down_bytes) - 2.0 * link.latency_s;
+    let barriers = rounds.div_ceil(staleness + 1);
+    rounds as f64 * per_round_bw + barriers as f64 * 2.0 * link.latency_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_cover_and_align() {
+        for (total, bucket, shards) in
+            [(1000usize, 128usize, 4usize), (2048, 256, 7), (5, 2, 2), (4096, 512, 1)]
+        {
+            let mut covered = 0usize;
+            for i in 0..shards {
+                let r = shard_range(total, bucket, shards, i);
+                assert_eq!(r.start, covered, "contiguous at {total}/{bucket}/{shards}");
+                assert!(r.start % bucket == 0 || r.start == total, "aligned start");
+                assert!(r.end % bucket == 0 || r.end == total, "aligned end");
+                covered = r.end;
+            }
+            assert_eq!(covered, total, "full cover at {total}/{bucket}/{shards}");
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let payload = [7u8, 8, 9, 10, 11];
+        let mut bytes = Vec::new();
+        encode_frame_into(FrameKind::Upload, 42, 3, 17, &payload, &mut bytes);
+        assert_eq!(bytes.len(), FRAME_HEADER_BYTES + payload.len());
+        let f = parse_frame(&bytes).unwrap();
+        assert_eq!(f.kind, FrameKind::Upload);
+        assert_eq!(f.shard, 3);
+        assert_eq!(f.sender, 17);
+        assert_eq!(f.round, 42);
+        assert_eq!(f.payload, &payload);
+        // the mean kind and an empty payload round-trip too
+        encode_frame_into(FrameKind::Mean, u64::MAX, 0, 0, &[], &mut bytes);
+        let f = parse_frame(&bytes).unwrap();
+        assert_eq!(f.kind, FrameKind::Mean);
+        assert_eq!(f.round, u64::MAX);
+        assert!(f.payload.is_empty());
+    }
+
+    /// Malformed versioned frames are rejected with `Err`, never panic:
+    /// every truncation point, corrupted magic/version/kind bytes, and
+    /// payload-length lies in both directions.
+    #[test]
+    fn malformed_frames_rejected() {
+        let mut bytes = Vec::new();
+        encode_frame_into(FrameKind::Mean, 9, 1, 2, &[1, 2, 3, 4], &mut bytes);
+        for n in 0..bytes.len() {
+            assert!(parse_frame(&bytes[..n]).is_err(), "prefix {n} must not parse");
+        }
+        // bad magic
+        let mut b = bytes.clone();
+        b[0] ^= 0xFF;
+        assert!(parse_frame(&b).is_err());
+        // bad version
+        let mut b = bytes.clone();
+        b[4] = 99;
+        assert!(parse_frame(&b).is_err());
+        // unknown kind
+        let mut b = bytes.clone();
+        b[5] = 2;
+        assert!(parse_frame(&b).is_err());
+        // payload-length lies: claims more and less than present
+        let mut b = bytes.clone();
+        b[18] = 200;
+        assert!(parse_frame(&b).is_err());
+        let mut b = bytes.clone();
+        b[18] = 1;
+        assert!(parse_frame(&b).is_err());
+        // trailing garbage breaks the exact-length contract
+        let mut b = bytes.clone();
+        b.push(0);
+        assert!(parse_frame(&b).is_err());
+        // the pristine frame still parses
+        assert!(parse_frame(&bytes).is_ok());
+    }
+
+    /// A frame built incrementally (header first, payload appended, length
+    /// patched) must be byte-identical to the one-shot encoder.
+    #[test]
+    fn begin_finish_frame_matches_one_shot() {
+        let payload = [9u8, 8, 7, 6, 5, 4];
+        let mut oneshot = Vec::new();
+        encode_frame_into(FrameKind::Upload, 31, 4, 9, &payload, &mut oneshot);
+        let mut staged = Vec::new();
+        begin_frame_into(FrameKind::Upload, 31, 4, 9, &mut staged);
+        staged.extend_from_slice(&payload);
+        finish_frame(&mut staged);
+        assert_eq!(staged, oneshot);
+        let f = parse_frame(&staged).unwrap();
+        assert_eq!(f.payload, &payload);
+        // empty payload stays valid
+        let mut empty = Vec::new();
+        begin_frame_into(FrameKind::Mean, 0, 0, 0, &mut empty);
+        finish_frame(&mut empty);
+        assert!(parse_frame(&empty).is_ok());
+    }
+
+    #[test]
+    fn staleness_stats_record_and_saturate() {
+        let mut st = StalenessStats::default();
+        st.record_cold();
+        st.record(0);
+        st.record(2);
+        st.record(2);
+        st.record(100); // saturates into the last bucket
+        assert_eq!(st.rounds, 5);
+        assert_eq!(st.cold_rounds, 1);
+        assert_eq!(st.max_age, 100);
+        assert_eq!(st.observed(), 4);
+        assert_eq!(st.hist[0], 1);
+        assert_eq!(st.hist[2], 2);
+        assert_eq!(st.hist[STALENESS_HIST_BUCKETS - 1], 1);
+    }
+
+    #[test]
+    fn sharded_time_degenerates_to_flat_ps_at_one_shard() {
+        let link = Link::new(1e9, 0.002);
+        let up = 1_000_000usize;
+        let down = 4_000_000usize;
+        let flat = super::super::ring::ps_time(&link, 4, up, down);
+        assert!((sharded_time(&link, 4, 1, up, down) - flat).abs() < 1e-12);
+        // S shards cut the bandwidth term by S while latency stays
+        let t4 = sharded_time(&link, 4, 4, up, down);
+        let bw = (up + down) as f64 * 8.0 / 1e9;
+        assert!((t4 - (2.0 * 0.002 + bw / 4.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn async_time_amortizes_latency_only() {
+        let link = Link::new(1e9, 0.010);
+        let (l, s, up, down) = (4usize, 2usize, 1 << 20, 1 << 20);
+        let rounds = 12;
+        // K = 0 is exactly rounds × the synchronous round
+        let sync = async_time(&link, l, s, rounds, 0, up, down);
+        assert!((sync - rounds as f64 * sharded_time(&link, l, s, up, down)).abs() < 1e-12);
+        // a window of K hides all but every (K+1)-th latency barrier,
+        // leaving the bandwidth term untouched
+        let k3 = async_time(&link, l, s, rounds, 3, up, down);
+        let bw_term = sync - rounds as f64 * 2.0 * link.latency_s;
+        assert!((k3 - (bw_term + 3.0 * 2.0 * link.latency_s)).abs() < 1e-12);
+        assert!(k3 < sync);
+        // zero rounds cost nothing
+        assert_eq!(async_time(&link, l, s, 0, 3, up, down), 0.0);
+    }
+}

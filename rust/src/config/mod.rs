@@ -224,12 +224,28 @@ pub struct TrainConfig {
     /// Quantize the server->worker broadcast too (paper §4 option (b)).
     pub quantize_downlink: bool,
     /// Gradient-exchange topology: parameter-server star, decentralized
-    /// ring all-reduce, or the two-level hierarchy
-    /// (`topology = "ps" | "ring" | "hier"`).
+    /// ring all-reduce, the two-level hierarchy, or the sharded/async
+    /// parameter server
+    /// (`topology = "ps" | "ring" | "hier" | "sharded-ps"`).
     pub topology: Topology,
     /// Worker groups for the hierarchical topology (`groups = N`; must
     /// divide `workers`). Flat topologies require 1.
     pub groups: usize,
+    /// Server shards for the sharded-ps topology (`shards = S`; every
+    /// shard must own at least one gradient bucket). Other topologies
+    /// require 1.
+    pub shards: usize,
+    /// Bounded staleness window for the sharded-ps topology
+    /// (`staleness = K`): workers run up to K rounds ahead of the
+    /// slowest shard and apply the round-`r − K` mean at round `r`.
+    /// `0` (required on every synchronous topology) disables the lag.
+    pub staleness: usize,
+    /// Wrap the worker-side quantizer in error feedback
+    /// (`error_feedback = true`): quantize `g + m`, keep the residual
+    /// `m ← (g + m) − Q(g + m)`. Parameter-server paths (ps /
+    /// sharded-ps) with a quantizing method and the serial codec
+    /// (`threads = 1`) only.
+    pub error_feedback: bool,
     /// Codec threads per node (`threads = N`): 1 = serial legacy path,
     /// 0 = auto-detect cores, N ≥ 2 = parallel per-bucket
     /// quantize+encode / decode+reduce pipeline. Wire bytes and training
@@ -262,6 +278,9 @@ impl Default for TrainConfig {
             quantize_downlink: false,
             topology: Topology::Ps,
             groups: 1,
+            shards: 1,
+            staleness: 0,
+            error_feedback: false,
             threads: 1,
             links: LinkConfig::default(),
         }
@@ -303,6 +322,8 @@ impl TrainConfig {
         set!(seed, as_i64, "seed");
         set!(eval_every, as_i64, "eval_every");
         set!(groups, as_i64, "groups");
+        set!(shards, as_i64, "shards");
+        set!(staleness, as_i64, "staleness");
         set!(threads, as_i64, "threads");
         macro_rules! set_link {
             ($field:ident, $name:expr) => {
@@ -320,6 +341,10 @@ impl TrainConfig {
         if let Some(v) = get("quantize_downlink") {
             c.quantize_downlink =
                 v.as_bool().ok_or_else(|| Error::Config("quantize_downlink".into()))?;
+        }
+        if let Some(v) = get("error_feedback") {
+            c.error_feedback =
+                v.as_bool().ok_or_else(|| Error::Config("error_feedback".into()))?;
         }
         if let Some(v) = get("topology") {
             c.topology = Topology::parse(
@@ -383,6 +408,37 @@ impl TrainConfig {
                 self.topology
             )));
         }
+        // Catches negative config values too: the i64 → usize cast wraps
+        // them to huge counts (the `threads` hardening, applied to the
+        // sharded-ps knobs).
+        if self.shards == 0 || self.shards > 4096 {
+            return Err(Error::Config(format!(
+                "shards ({}) must be in [1, 4096] (1 degenerates to the flat \
+                 parameter server)",
+                self.shards
+            )));
+        }
+        if self.staleness > 1024 {
+            return Err(Error::Config(format!(
+                "staleness ({}) must be in [0, 1024] (0 = fully synchronous)",
+                self.staleness
+            )));
+        }
+        if self.topology != Topology::ShardedPs {
+            if self.shards != 1 {
+                return Err(Error::Config(format!(
+                    "shards ({}) only applies to topology = \"sharded-ps\"",
+                    self.shards
+                )));
+            }
+            if self.staleness != 0 {
+                return Err(Error::Config(format!(
+                    "staleness ({}) requires the asynchronous topology = \"sharded-ps\"; \
+                     the {} topology is synchronous by construction",
+                    self.staleness, self.topology
+                )));
+            }
+        }
         match self.topology {
             Topology::Hier => {
                 if self.groups == 0 || self.workers % self.groups != 0 {
@@ -392,13 +448,38 @@ impl TrainConfig {
                     )));
                 }
             }
-            Topology::Ps | Topology::Ring => {
+            Topology::Ps | Topology::Ring | Topology::ShardedPs => {
                 if self.groups != 1 {
                     return Err(Error::Config(format!(
                         "groups ({}) only applies to topology = \"hier\"",
                         self.groups
                     )));
                 }
+            }
+        }
+        if self.error_feedback {
+            if self.method == "fp" {
+                return Err(Error::Config(
+                    "error_feedback compensates quantization error; method = \"fp\" \
+                     has none (drop error_feedback or pick a quantizing method)"
+                        .into(),
+                ));
+            }
+            if !matches!(self.topology, Topology::Ps | Topology::ShardedPs) {
+                return Err(Error::Config(format!(
+                    "error_feedback is wired for the parameter-server paths \
+                     (topology = \"ps\" or \"sharded-ps\"); the {} topology \
+                     requantizes at every hop and needs per-hop compensation \
+                     (ROADMAP follow-up)",
+                    self.topology
+                )));
+            }
+            if self.threads != 1 {
+                return Err(Error::Config(format!(
+                    "error_feedback requires threads = 1 (got {}): the residual \
+                     update needs the serially materialized quantized gradient",
+                    self.threads
+                )));
             }
         }
         self.links.validate()?;
@@ -526,6 +607,77 @@ mod tests {
         assert!(TrainConfig::from_map(&bad).is_err());
         let bad = parse("[train]\nworkers = 2\nbatch = 64\nthreads = 100000").unwrap();
         assert!(TrainConfig::from_map(&bad).is_err());
+    }
+
+    #[test]
+    fn sharded_ps_keys_parse_and_validate() {
+        let c = TrainConfig::from_map(
+            &parse(
+                "[train]\nworkers = 4\nbatch = 64\ntopology = \"sharded-ps\"\n\
+                 shards = 3\nstaleness = 2",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.topology, Topology::ShardedPs);
+        assert_eq!(c.shards, 3);
+        assert_eq!(c.staleness, 2);
+        // defaults: one shard, synchronous
+        let d = TrainConfig::default();
+        assert_eq!((d.shards, d.staleness), (1, 0));
+        assert!(!d.error_feedback);
+        let rejects = |toml: &str| TrainConfig::from_map(&parse(toml).unwrap()).is_err();
+        let sharded = "[train]\nworkers = 2\nbatch = 64\ntopology = \"sharded-ps\"\n";
+        // shards = 0, negative and absurd counts are rejected
+        assert!(rejects(&format!("{sharded}shards = 0")));
+        assert!(rejects(&format!("{sharded}shards = -2")));
+        assert!(rejects(&format!("{sharded}shards = 100000")));
+        // staleness must be non-negative and bounded
+        assert!(rejects(&format!("{sharded}staleness = -1")));
+        assert!(rejects(&format!("{sharded}staleness = 100000")));
+        // sharding/staleness on a synchronous topology is an error
+        assert!(rejects("[train]\nworkers = 2\nbatch = 64\nshards = 2"));
+        assert!(rejects("[train]\nworkers = 2\nbatch = 64\nstaleness = 1"));
+        assert!(rejects(
+            "[train]\nworkers = 2\nbatch = 64\ntopology = \"ring\"\nstaleness = 1"
+        ));
+        // quantize_downlink is still PS-only
+        assert!(rejects(&format!("{sharded}quantize_downlink = true")));
+    }
+
+    #[test]
+    fn error_feedback_key_parses_and_validates() {
+        let c = TrainConfig::from_map(
+            &parse(
+                "[train]\nworkers = 2\nbatch = 64\nmethod = \"bingrad-b\"\n\
+                 error_feedback = true",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert!(c.error_feedback);
+        let rejects = |toml: &str| TrainConfig::from_map(&parse(toml).unwrap()).is_err();
+        // fp has no quantization error to compensate
+        assert!(rejects("[train]\nworkers = 2\nbatch = 64\nerror_feedback = true"));
+        // EF is a PS-path option — the ring/hier hops requantize
+        assert!(rejects(
+            "[train]\nworkers = 2\nbatch = 64\nmethod = \"terngrad\"\n\
+             topology = \"ring\"\nerror_feedback = true"
+        ));
+        // the parallel codec never materializes the quantized gradient
+        assert!(rejects(
+            "[train]\nworkers = 2\nbatch = 64\nmethod = \"terngrad\"\n\
+             threads = 4\nerror_feedback = true"
+        ));
+        // sharded-ps accepts EF
+        let ok = TrainConfig::from_map(
+            &parse(
+                "[train]\nworkers = 2\nbatch = 64\nmethod = \"terngrad\"\n\
+                 topology = \"sharded-ps\"\nshards = 2\nerror_feedback = true",
+            )
+            .unwrap(),
+        );
+        assert!(ok.is_ok());
     }
 
     #[test]

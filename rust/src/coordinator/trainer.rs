@@ -10,10 +10,18 @@
 //!
 //! The exchange itself is behind [`crate::comm::Collective`] /
 //! [`crate::comm::WorkerExchange`]: the parameter-server star, the
-//! decode-reduce-requantize ring, or the two-level hierarchy, chosen by
-//! `TrainConfig::topology` (`--topology ps|ring|hier [--groups N]`) over
-//! the per-edge-class link model of `TrainConfig::links`. Wire bytes and
-//! simulated comm time come from the collective's exact accounting.
+//! decode-reduce-requantize ring, the two-level hierarchy, or the
+//! sharded/bounded-staleness parameter server, chosen by
+//! `TrainConfig::topology` (`--topology ps|ring|hier|sharded-ps
+//! [--groups N] [--shards S] [--staleness K]`) over the per-edge-class
+//! link model of `TrainConfig::links`. With a staleness window `K ≥ 1`
+//! every node (coordinator included) applies the round-`t − K` mean at
+//! step `t` — replicas still stay bit-identical, just `K` rounds behind
+//! the gradients. Wire bytes and simulated comm time come from the
+//! collective's exact accounting. Workers can opt into error feedback
+//! (`TrainConfig::error_feedback`, PS paths + serial codec): quantize
+//! `g + m` and keep the residual `m`, which rescues the biased schemes
+//! (BinGrad-b, signSGD) end-to-end.
 //! The per-round hot loop reuses all of its scratch (quantization
 //! buckets, wire messages, decode buffers, and the sort-based level
 //! solvers' hoisted sort/prefix scratch): the encode/wire/decode/reduce
@@ -24,7 +32,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 
 use crate::codec::{self, Packing};
 use crate::comm::link::{Link, LinkMap};
-use crate::comm::{build_topology, ExchangeConfig, GradCodec, WireSpec};
+use crate::comm::{build_topology, CommStats, ExchangeConfig, GradCodec, Topology, WireSpec};
 use crate::config::TrainConfig;
 use crate::coordinator::optimizer::SgdMomentum;
 use crate::coordinator::schedule::LrSchedule;
@@ -51,6 +59,12 @@ pub struct TrainOutput {
     pub series: SeriesLogger,
     /// Final server-side parameters (identical to every worker's).
     pub params: Vec<f32>,
+    /// Final cumulative exchange accounting, including the sharded-ps
+    /// staleness histogram ([`CommStats::staleness`]).
+    pub comm: CommStats,
+    /// Exact wire bytes through each server shard (sharded-ps runs;
+    /// `None` on the other topologies).
+    pub shard_bytes: Option<Vec<u64>>,
 }
 
 /// The coordinator.
@@ -110,15 +124,29 @@ impl<'a> Trainer<'a> {
         let xcfg = ExchangeConfig {
             topology: cfg.topology,
             groups: cfg.groups,
+            shards: cfg.shards,
+            staleness: cfg.staleness,
             links: self.links,
             quantize_downlink: cfg.quantize_downlink,
         };
-        let (mut coll, worker_ends) = build_topology(&xcfg, l, &spec)?;
-        let (report_tx, report_rx): (Sender<WorkerReport>, Receiver<WorkerReport>) = channel();
-
         let mut server_backend = make_backend(l);
         let param_count = server_backend.param_count();
         let classes = server_backend.num_classes();
+        if cfg.topology == Topology::ShardedPs {
+            // Fail early with an actionable message: the worker end would
+            // reject this too, but only after the threads have spun up.
+            let buckets = param_count.div_ceil(cfg.bucket_size).max(1);
+            if cfg.shards > buckets {
+                return Err(Error::Config(format!(
+                    "shards ({}) exceeds the model's bucket count ({param_count} params \
+                     at bucket_size {} = {buckets} buckets); every shard must own at \
+                     least one bucket — reduce shards or bucket_size",
+                    cfg.shards, cfg.bucket_size
+                )));
+            }
+        }
+        let (mut coll, worker_ends) = build_topology(&xcfg, l, &spec)?;
+        let (report_tx, report_rx): (Sender<WorkerReport>, Receiver<WorkerReport>) = channel();
         if classes < self.ds.spec.classes {
             return Err(Error::Shape(format!(
                 "model {} has {classes} outputs but dataset has {} classes",
@@ -157,11 +185,21 @@ impl<'a> Trainer<'a> {
                     let mut msg: Vec<u8> = Vec::new();
                     let mut mean: Vec<f32> = Vec::new();
                     let mut deq: Vec<f32> = Vec::new();
+                    // Opt-in error feedback (validated: PS paths, serial
+                    // codec, quantizing method): quantize g + m instead
+                    // of g, keep the residual m ← (g + m) − Q(g + m).
+                    let mut ef = cfg.error_feedback.then(|| gc.error_feedback());
                     let per_worker_batch = cfg.batch / cfg.workers;
                     for t in 0..cfg.steps {
                         let batch = ds.worker_batch(w, cfg.workers, per_worker_batch, &mut rng_data);
                         let loss = backend.loss_grad(&params, &batch, &mut grad);
-                        gc.encode_into(&grad, &mut rng_q, &mut qg, &mut msg);
+                        match &mut ef {
+                            Some(ef) => gc.encode_ef_into(ef, &grad, &mut rng_q, &mut qg, &mut msg),
+                            None => gc.encode_into(&grad, &mut rng_q, &mut qg, &mut msg),
+                        }
+                        // With EF the figures measure Q(g + m) against the
+                        // raw g — the transmitted signal's fidelity to the
+                        // current gradient, residual included.
                         let (rel_mse, cosine) = if gc.is_fp() {
                             (0.0, 1.0)
                         } else if gc.is_parallel() {
@@ -261,7 +299,13 @@ impl<'a> Trainer<'a> {
                     total_comm_time_s: series.total_comm_time(),
                     compression_ratio: ratio,
                 };
-                Ok(TrainOutput { summary, series, params: server_params })
+                Ok(TrainOutput {
+                    summary,
+                    series,
+                    params: server_params,
+                    comm: coll.stats(),
+                    shard_bytes: coll.shard_bytes(),
+                })
             };
             out = run_server();
             // Tear the collective down before joining workers: if the
@@ -361,6 +405,9 @@ mod tests {
             quantize_downlink: false,
             topology: Topology::Ps,
             groups: 1,
+            shards: 1,
+            staleness: 0,
+            error_feedback: false,
             threads: 1,
             links: LinkConfig::default(),
         }
@@ -386,6 +433,16 @@ mod tests {
         let mut cfg = tiny_cfg(method, workers);
         cfg.topology = Topology::Hier;
         cfg.groups = groups;
+        let factory = native_backend_factory(&cfg.model).unwrap();
+        Trainer::new(cfg, &ds).unwrap().run(factory).unwrap()
+    }
+
+    fn run_sharded(method: &str, workers: usize, shards: usize, staleness: usize) -> TrainOutput {
+        let ds = tiny_ds();
+        let mut cfg = tiny_cfg(method, workers);
+        cfg.topology = Topology::ShardedPs;
+        cfg.shards = shards;
+        cfg.staleness = staleness;
         let factory = native_backend_factory(&cfg.model).unwrap();
         Trainer::new(cfg, &ds).unwrap().run(factory).unwrap()
     }
@@ -562,6 +619,114 @@ mod tests {
         let mut cfg = tiny_cfg("fp", 4);
         cfg.topology = Topology::Hier;
         cfg.groups = 3; // does not divide 4
+        assert!(Trainer::new(cfg, &ds).is_err());
+    }
+
+    /// The sharded parameter server with S = 1, K = 0 must train
+    /// bit-identically to the flat PS — the wire carries the same codec
+    /// payloads (framed), the shard reduces in the same worker order, and
+    /// every node decodes the same FP mean. Holds for every scheme.
+    #[test]
+    fn sharded_s1_k0_bit_identical_to_ps() {
+        for method in ["fp", "orq-3", "bingrad-b"] {
+            let ps = run(method, 2);
+            let sh = run_sharded(method, 2, 1, 0);
+            assert_eq!(ps.params, sh.params, "{method}");
+            assert_eq!(ps.summary.test_top1, sh.summary.test_top1, "{method}");
+        }
+    }
+
+    /// Shard-count invariance at K = 0: the assembled mean is the same
+    /// f64-reduced PS mean regardless of how the bucket grid is
+    /// partitioned, so training is bit-identical for every shard count.
+    /// (The tiny 808-param model at d = 256 has 4 buckets — S ≤ 4.)
+    #[test]
+    fn sharded_training_invariant_across_shard_counts() {
+        let a = run_sharded("orq-3", 2, 1, 0);
+        let b = run_sharded("orq-3", 2, 2, 0);
+        let c = run_sharded("orq-3", 2, 4, 0);
+        assert_eq!(a.params, b.params);
+        assert_eq!(a.params, c.params);
+        assert!(a.summary.test_top1 > 0.6, "top1={}", a.summary.test_top1);
+        // per-shard byte counters cover the whole wire, and sharding
+        // populates them
+        let sb = b.shard_bytes.as_ref().expect("sharded runs report per-shard bytes");
+        assert_eq!(sb.len(), 2);
+        assert!(sb.iter().all(|&b| b > 0));
+        assert_eq!(sb.iter().sum::<u64>(), b.comm.wire_bytes);
+        assert!(a.shard_bytes.is_some() && run("fp", 1).shard_bytes.is_none());
+    }
+
+    /// Bounded staleness K ≥ 1: the run pipelines (first K rounds apply
+    /// the zero mean, then every round applies the round-(t − K) mean),
+    /// stays deterministic, still learns, and the coordinator's
+    /// staleness histogram records exactly the configured lag.
+    #[test]
+    fn sharded_staleness_window_learns_and_is_deterministic() {
+        let a = run_sharded("orq-3", 2, 2, 2);
+        let b = run_sharded("orq-3", 2, 2, 2);
+        assert_eq!(a.params, b.params, "stale runs must stay reproducible");
+        assert!(a.summary.test_top1 > 0.4, "top1={}", a.summary.test_top1);
+        let st = a.comm.staleness;
+        assert_eq!(st.rounds, 120);
+        assert_eq!(st.cold_rounds, 2);
+        assert_eq!(st.max_age, 2);
+        assert_eq!(st.hist[2], 118);
+        // the lag changes the trajectory vs the synchronous run
+        let sync = run_sharded("orq-3", 2, 2, 0);
+        assert_ne!(a.params, sync.params);
+        assert_eq!(sync.comm.staleness.max_age, 0);
+        assert_eq!(sync.comm.staleness.cold_rounds, 0);
+    }
+
+    /// More shards than gradient buckets is rejected up front with an
+    /// actionable error (808 params at d = 256 → 4 buckets).
+    #[test]
+    fn sharded_rejects_more_shards_than_buckets() {
+        let ds = tiny_ds();
+        let mut cfg = tiny_cfg("fp", 2);
+        cfg.topology = Topology::ShardedPs;
+        cfg.shards = 64;
+        let factory = native_backend_factory(&cfg.model).unwrap();
+        let err = Trainer::new(cfg, &ds).unwrap().run(factory).unwrap_err();
+        assert!(err.to_string().contains("bucket count"), "{err}");
+    }
+
+    /// Error feedback end-to-end on the PS path: the biased BinGrad-b
+    /// runs compensated, learns, and actually changes the trajectory.
+    #[test]
+    fn error_feedback_trains_biased_scheme() {
+        let ds = tiny_ds();
+        let mut cfg = tiny_cfg("bingrad-b", 2);
+        cfg.error_feedback = true;
+        let factory = native_backend_factory(&cfg.model).unwrap();
+        let ef = Trainer::new(cfg, &ds).unwrap().run(factory).unwrap();
+        assert!(ef.summary.test_top1 > 0.5, "EF top1={}", ef.summary.test_top1);
+        let plain = run("bingrad-b", 2);
+        assert_ne!(ef.params, plain.params, "EF must alter the transmitted signal");
+        // EF composes with the sharded topology too
+        let mut cfg = tiny_cfg("bingrad-b", 2);
+        cfg.topology = Topology::ShardedPs;
+        cfg.shards = 2;
+        cfg.error_feedback = true;
+        let factory = native_backend_factory(&cfg.model).unwrap();
+        let sh = Trainer::new(cfg, &ds).unwrap().run(factory).unwrap();
+        assert_eq!(sh.params, ef.params, "S=2 K=0 EF ≡ flat PS EF");
+    }
+
+    #[test]
+    fn error_feedback_rejected_off_the_ps_paths() {
+        let ds = tiny_ds();
+        let mut cfg = tiny_cfg("terngrad", 2);
+        cfg.error_feedback = true;
+        cfg.topology = Topology::Ring;
+        assert!(Trainer::new(cfg, &ds).is_err());
+        let mut cfg = tiny_cfg("fp", 2);
+        cfg.error_feedback = true;
+        assert!(Trainer::new(cfg, &ds).is_err());
+        let mut cfg = tiny_cfg("terngrad", 2);
+        cfg.error_feedback = true;
+        cfg.threads = 4;
         assert!(Trainer::new(cfg, &ds).is_err());
     }
 }

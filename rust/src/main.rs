@@ -69,8 +69,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.check_known(&[
         "config", "model", "method", "workers", "steps", "batch", "dataset", "bucket",
         "clip", "backend", "artifacts", "out", "seed", "lr", "eval-every", "topology",
-        "groups", "threads", "intra-bandwidth", "intra-latency", "inter-bandwidth",
-        "inter-latency",
+        "groups", "shards", "staleness", "error-feedback", "threads", "intra-bandwidth",
+        "intra-latency", "inter-bandwidth", "inter-latency",
     ])?;
     let mut cfg = match args.get("config") {
         Some(path) => TrainConfig::load(path)?,
@@ -120,6 +120,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(g) = args.get_parse::<usize>("groups")? {
         cfg.groups = g;
     }
+    if let Some(s) = args.get_parse::<usize>("shards")? {
+        cfg.shards = s;
+    }
+    if let Some(k) = args.get_parse::<usize>("staleness")? {
+        cfg.staleness = k;
+    }
+    if args.flag("error-feedback") {
+        cfg.error_feedback = true;
+    }
     if let Some(t) = args.get_parse::<usize>("threads")? {
         cfg.threads = t;
     }
@@ -141,6 +150,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     let backend_kind = args.get_or("backend", "native");
     let topo = match cfg.topology {
         orq::comm::Topology::Hier => format!("hier/{} groups", cfg.groups),
+        orq::comm::Topology::ShardedPs => {
+            format!("sharded-ps/{} shards, staleness {}", cfg.shards, cfg.staleness)
+        }
         t => t.to_string(),
     };
     println!(
@@ -177,6 +189,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!("wire bytes  : {}", fmt::bytes(s.total_wire_bytes));
     println!("comm time   : {} (simulated @10Gbps)", fmt::duration(s.total_comm_time_s));
     println!("compression : ×{:.1}", s.compression_ratio);
+    if let Some(sb) = &out.shard_bytes {
+        let parts: Vec<String> = sb.iter().map(|b| fmt::bytes(*b)).collect();
+        println!("shard bytes : [{}]", parts.join(", "));
+        let st = &out.comm.staleness;
+        if st.cold_rounds > 0 || st.max_age > 0 {
+            println!(
+                "staleness   : max age {} rounds, {} cold start rounds",
+                st.max_age, st.cold_rounds
+            );
+        }
+    }
 
     if let Some(dir) = args.get("out") {
         std::fs::create_dir_all(dir)?;

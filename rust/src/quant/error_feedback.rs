@@ -38,12 +38,27 @@ impl ErrorFeedback {
 
     /// Quantize `g + memory`, update memory with the new residual.
     pub fn quantize(&mut self, g: &[f32], q: &dyn Quantizer, rng: &mut Rng) -> QuantizedGrad {
+        let mut qg = QuantizedGrad::default();
+        self.quantize_into(g, q, rng, &mut qg);
+        qg
+    }
+
+    /// Like [`Self::quantize`] but into a reused [`QuantizedGrad`] — the
+    /// trainer's per-round hot path (steady-state rounds allocate
+    /// nothing beyond the lazily-sized residual memory).
+    pub fn quantize_into(
+        &mut self,
+        g: &[f32],
+        q: &dyn Quantizer,
+        rng: &mut Rng,
+        out: &mut QuantizedGrad,
+    ) {
         if self.memory.len() != g.len() {
             self.memory = vec![0.0; g.len()];
         }
         self.compensated.clear();
         self.compensated.extend(g.iter().zip(&self.memory).map(|(a, b)| a + b));
-        let qg = self.bucketq.quantize(&self.compensated, q, rng);
+        self.bucketq.quantize_into(&self.compensated, q, rng, out);
         // m ← (g + m) − Q(g + m), computed bucket-wise without allocating
         // the full dequantized vector.
         for (bi, chunk) in self
@@ -51,13 +66,12 @@ impl ErrorFeedback {
             .chunks_mut(self.bucketq.bucket_size)
             .enumerate()
         {
-            let qb = &qg.buckets[bi];
+            let qb = &out.buckets[bi];
             let base = bi * self.bucketq.bucket_size;
             for (j, m) in chunk.iter_mut().enumerate() {
                 *m = self.compensated[base + j] - qb.levels[qb.indices[j] as usize];
             }
         }
-        qg
     }
 }
 
@@ -151,6 +165,51 @@ mod tests {
         let qg = ef.quantize(&g, q.as_ref(), &mut rng);
         let e = crate::quant::error::measure(&g, &qg);
         assert!(e.cosine > 0.9, "first EF step ≈ plain quantization");
+    }
+
+    /// Regression for the trainer wiring: across rounds, the EF memory
+    /// drives the *cumulative transmitted mean* toward the true
+    /// gradient — the error of the running mean decays monotonically
+    /// between checkpoints (it cannot with the plain biased quantizer,
+    /// whose running mean converges to the biased expectation instead).
+    #[test]
+    fn ef_memory_decays_quantization_error_across_rounds() {
+        let q = from_name("bingrad-b").unwrap();
+        let g = grad(21, 768);
+        let mut ef = ErrorFeedback::new(BucketQuantizer::new(256));
+        let mut rng = Rng::seed_from(22);
+        let mut sum = vec![0.0f32; g.len()];
+        let mut qg = crate::quant::bucket::QuantizedGrad::default();
+        let err_at = |sum: &[f32], t: usize| {
+            let mean: Vec<f32> = sum.iter().map(|s| s / t as f32).collect();
+            let diff: Vec<f32> = mean.iter().zip(&g).map(|(a, b)| a - b).collect();
+            norm2(&diff) / norm2(&g)
+        };
+        let mut checkpoints = Vec::new();
+        for t in 1..=32 {
+            ef.quantize_into(&g, q.as_ref(), &mut rng, &mut qg);
+            for (s, v) in sum.iter_mut().zip(qg.dequantize()) {
+                *s += v;
+            }
+            if t == 1 || t == 8 || t == 32 {
+                checkpoints.push(err_at(&sum, t));
+            }
+        }
+        assert!(
+            checkpoints[1] < 0.6 * checkpoints[0],
+            "relative error must decay: {checkpoints:?}"
+        );
+        assert!(
+            checkpoints[2] < 0.6 * checkpoints[1],
+            "…and keep decaying: {checkpoints:?}"
+        );
+        // the reused-buffer entry point matches the allocating one
+        let mut ef2 = ErrorFeedback::new(BucketQuantizer::new(256));
+        let fresh = ef2.quantize(&g, q.as_ref(), &mut Rng::seed_from(22));
+        let mut ef3 = ErrorFeedback::new(BucketQuantizer::new(256));
+        let mut reused = crate::quant::bucket::QuantizedGrad::default();
+        ef3.quantize_into(&g, q.as_ref(), &mut Rng::seed_from(22), &mut reused);
+        assert_eq!(fresh.dequantize(), reused.dequantize());
     }
 
     #[test]

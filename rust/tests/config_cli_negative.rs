@@ -99,6 +99,82 @@ fn invalid_link_keys_error_instead_of_panicking() {
 }
 
 #[test]
+fn sharded_ps_knobs_rejected_with_actionable_errors() {
+    // shards = 0 / negative / absurd counts
+    let sharded = "[train]\nworkers = 2\nbatch = 64\ntopology = \"sharded-ps\"\n";
+    for bad in ["shards = 0", "shards = -3", "shards = 100000"] {
+        let err = cfg_from(&format!("{sharded}{bad}")).unwrap_err();
+        assert!(err.to_string().contains("shards"), "{bad}: {err}");
+    }
+    // staleness < 0 (wraps through the i64 → usize cast) and absurd windows
+    for bad in ["staleness = -1", "staleness = 100000"] {
+        let err = cfg_from(&format!("{sharded}{bad}")).unwrap_err();
+        assert!(err.to_string().contains("staleness"), "{bad}: {err}");
+    }
+    // staleness on a synchronous topology names the fix
+    for topo in ["ps", "ring", "hier"] {
+        let toml = format!(
+            "[train]\nworkers = 4\nbatch = 4\ntopology = \"{topo}\"\nstaleness = 1{}",
+            if topo == "hier" { "\ngroups = 2" } else { "" }
+        );
+        let err = cfg_from(&toml).unwrap_err();
+        assert!(err.to_string().contains("sharded-ps"), "{topo}: {err}");
+    }
+    // shards on a non-sharded topology is an error, not silence
+    assert!(cfg_from("[train]\nworkers = 2\nbatch = 64\nshards = 2").is_err());
+    // valid sharded configs pass
+    let ok = cfg_from(&format!("{sharded}shards = 2\nstaleness = 3")).unwrap();
+    assert_eq!((ok.shards, ok.staleness), (2, 3));
+    // comm layer independently enforces the same invariants
+    let spec = WireSpec::new("terngrad", 64);
+    let link = Link::ten_gbps();
+    assert!(build_topology(&ExchangeConfig::sharded(0, 0, link), 2, &spec).is_err());
+    let mut c = ExchangeConfig::flat(Topology::Ps, link);
+    c.staleness = 1;
+    assert!(build_topology(&c, 2, &spec).is_err());
+    // more shards than the gradient has buckets: rejected at the first
+    // exchange with an actionable message (trainer pre-checks too)
+    let grads = vec![vec![0.5f32; 128]; 2]; // 2 buckets at d = 64
+    let err =
+        orq::comm::run_once(&ExchangeConfig::sharded(3, 0, link), &spec, &grads).unwrap_err();
+    assert!(err.to_string().contains("bucket count"), "{err}");
+    // CLI spellings parse
+    let a = args("train --topology sharded-ps --shards 4 --staleness 2");
+    assert_eq!(a.get_parse::<Topology>("topology").unwrap(), Some(Topology::ShardedPs));
+    assert_eq!(a.get_parse::<usize>("shards").unwrap(), Some(4));
+    assert_eq!(a.get_parse::<usize>("staleness").unwrap(), Some(2));
+}
+
+#[test]
+fn error_feedback_rejected_where_it_cannot_compensate() {
+    // fp has no quantization error
+    let err = cfg_from("[train]\nworkers = 2\nbatch = 64\nerror_feedback = true").unwrap_err();
+    assert!(err.to_string().contains("error_feedback"), "{err}");
+    // ring/hier requantize per hop — EF is a PS-path option
+    for topo in ["ring", "hier"] {
+        let toml = format!(
+            "[train]\nworkers = 4\nbatch = 4\nmethod = \"terngrad\"\n\
+             topology = \"{topo}\"\nerror_feedback = true{}",
+            if topo == "hier" { "\ngroups = 2" } else { "" }
+        );
+        assert!(cfg_from(&toml).is_err(), "{topo}");
+    }
+    // the parallel codec path cannot feed the residual update
+    assert!(cfg_from(
+        "[train]\nworkers = 2\nbatch = 64\nmethod = \"terngrad\"\n\
+         threads = 0\nerror_feedback = true"
+    )
+    .is_err());
+    // wrong value type
+    assert!(cfg_from("[train]\nerror_feedback = 1").is_err());
+    // the valid spelling passes on both PS paths
+    assert!(cfg_from(
+        "[train]\nworkers = 2\nbatch = 64\nmethod = \"bingrad-b\"\nerror_feedback = true"
+    )
+    .is_ok());
+}
+
+#[test]
 fn cli_parser_rejects_malformed_input() {
     // bare operand after the subcommand
     assert!(Args::parse(["train".into(), "loose".into()]).is_err());

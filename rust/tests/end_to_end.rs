@@ -40,6 +40,9 @@ fn cfg(method: &str) -> TrainConfig {
         quantize_downlink: false,
         topology: Topology::Ps,
         groups: 1,
+        shards: 1,
+        staleness: 0,
+        error_feedback: false,
         threads: 1,
         links: orq::config::LinkConfig::default(),
     }

@@ -21,7 +21,7 @@
 
 use orq::codec::{wire_size, Packing};
 use orq::comm::link::{Link, LinkMap};
-use orq::comm::{build_topology, hier, ring, run_once, ExchangeConfig, Topology, WireSpec};
+use orq::comm::{build_topology, hier, ring, run_once, shard, ExchangeConfig, Topology, WireSpec};
 use orq::testutil::{sample, ALL_DISTS};
 use orq::tensor::rng::Rng;
 
@@ -41,6 +41,10 @@ fn flat(topology: Topology) -> ExchangeConfig {
 
 fn hier_cfg(groups: usize) -> ExchangeConfig {
     ExchangeConfig::hier(groups, LinkMap::uniform(Link::ten_gbps()))
+}
+
+fn sharded_cfg(shards: usize, staleness: usize) -> ExchangeConfig {
+    ExchangeConfig::sharded(shards, staleness, Link::ten_gbps())
 }
 
 /// Exact mean in f64 (the semantics all topologies approximate).
@@ -336,6 +340,183 @@ fn ring_and_hier_handle_ragged_and_empty_chunks() {
             }
         }
     }
+}
+
+/// Acceptance criterion of the sharded subsystem: with S = 1, K = 0 the
+/// sharded parameter server decodes a mean *bit-identical* to the flat
+/// PS, for every scheme family — the frames wrap the same codec
+/// payloads, the shard reduces in the same worker order and f64
+/// accumulation, and the FP downlink is lossless.
+#[test]
+fn sharded_ps_s1_k0_bit_identical_to_ps() {
+    for method in ["orq-5", "linear-9", "bingrad-b", "fp"] {
+        for workers in [1usize, 2, 5] {
+            let gs = grads(2048, workers, 3);
+            let sp = spec(method, 256);
+            let (ps_mean, _) = run_once(&flat(Topology::Ps), &sp, &gs).unwrap();
+            let (sh_mean, _) = run_once(&sharded_cfg(1, 0), &sp, &gs).unwrap();
+            assert_eq!(ps_mean, sh_mean, "{method} L={workers}");
+        }
+    }
+}
+
+/// Shard-count invariance at K = 0: the bucket grid can be cut into any
+/// number of shards (including ones that leave ragged chunk sizes)
+/// without changing a single bit of the decoded mean — per-element f64
+/// accumulation order is worker order regardless of the partition.
+#[test]
+fn sharded_mean_invariant_across_shard_counts() {
+    for method in ["orq-5", "terngrad", "fp"] {
+        let gs = grads(2048, 3, 1); // d = 256 → 8 buckets
+        let sp = spec(method, 256);
+        let (reference, _) = run_once(&sharded_cfg(1, 0), &sp, &gs).unwrap();
+        for shards in [2usize, 4, 7] {
+            let (mean, _) = run_once(&sharded_cfg(shards, 0), &sp, &gs).unwrap();
+            assert_eq!(mean, reference, "{method} S={shards}");
+        }
+    }
+}
+
+/// Every node of the sharded topology (workers and coordinator) decodes
+/// the bit-identical mean — the replica-sync invariant, like ps/ring/hier.
+#[test]
+fn sharded_mean_bit_identical_on_every_node() {
+    for method in ["fp", "terngrad", "orq-5"] {
+        assert_mean_bit_identical(&sharded_cfg(2, 0), 4, method);
+        assert_mean_bit_identical(&sharded_cfg(4, 0), 3, method);
+    }
+}
+
+/// Sharded-ps byte accounting: L·S framed chunk uploads + S framed FP
+/// mean broadcasts per round, every message an independently headered
+/// codec payload wrapped in a `FRAME_HEADER_BYTES` versioned frame, all
+/// on inter-class edges.
+#[test]
+fn sharded_wire_bytes_match_codec_accounting_exactly() {
+    let workers = 4usize;
+    let shards = 2usize;
+    let d = 128usize;
+    let n = shards * d * 3; // equal chunks of n/S elements
+    for (method, s) in [("terngrad", 3usize), ("orq-5", 5), ("fp", 0)] {
+        let gs = grads(n, workers, 2);
+        let sp = spec(method, d);
+        let (_, st) = run_once(&sharded_cfg(shards, 0), &sp, &gs).unwrap();
+        let chunk = n / shards;
+        let up = (shard::FRAME_HEADER_BYTES + wire_size(chunk, d, s, Packing::BaseS, method))
+            as u64;
+        let down = (shard::FRAME_HEADER_BYTES
+            + wire_size(chunk, chunk.max(1), 0, Packing::BaseS, "fp")) as u64;
+        let want = (workers * shards) as u64 * up + shards as u64 * down;
+        assert_eq!(st.wire_bytes, want, "{method} sharded bytes");
+        assert_eq!(st.messages, (workers * shards + shards) as u64, "{method} messages");
+        assert_eq!(st.wire_bytes_intra, 0, "{method} intra");
+        assert_eq!(st.wire_bytes_inter, st.wire_bytes, "{method} inter");
+    }
+}
+
+/// Synchronous sharded critical path: measured time equals the exact
+/// per-frame prediction and exceeds the closed-form `shard::sharded_time`
+/// model by only the per-chunk header overhead.
+#[test]
+fn sharded_sim_time_matches_model_up_to_headers() {
+    let link = Link::ten_gbps();
+    let workers = 3usize;
+    let shards = 4usize;
+    let d = 256usize;
+    let n = shards * d * 8; // 8192 elements, equal chunks
+    let gs = grads(n, workers, 3);
+    let sp = spec("fp", d);
+    let (_, st) = run_once(&sharded_cfg(shards, 0), &sp, &gs).unwrap();
+    let chunk = n / shards;
+    let up_msg = shard::FRAME_HEADER_BYTES + wire_size(chunk, d, 0, Packing::BaseS, "fp");
+    let down_msg =
+        shard::FRAME_HEADER_BYTES + wire_size(chunk, chunk.max(1), 0, Packing::BaseS, "fp");
+    // Equal chunks: the slowest shard's star equals any shard's star.
+    let exact = link.transfer_time(up_msg) + link.transfer_time(down_msg);
+    assert!(
+        (st.sim_time_s - exact).abs() < 1e-12,
+        "measured {} vs exact {exact}",
+        st.sim_time_s
+    );
+    // Closed form ignores the 22 + 22 byte headers: strict lower bound.
+    let model = shard::sharded_time(&link, workers, shards, n * 4, n * 4);
+    assert!(st.sim_time_s > model, "headers make measured > model");
+    assert!(st.sim_time_s < model * 1.01, "within 1%: {} vs {model}", st.sim_time_s);
+}
+
+/// The bounded-staleness property and the round pipeline, end to end
+/// over several rounds: no applied model version is ever older than
+/// `round − K` (the coordinator histogram pins the exact ages), the
+/// first K rounds apply zeros, every later round applies exactly the
+/// round-`t − K` synchronous mean, and the async critical path tracks
+/// `shard::async_time` up to header overhead.
+#[test]
+fn sharded_async_staleness_bound_and_pipelined_means() {
+    let rounds = 6usize;
+    let workers = 3usize;
+    let k = 2usize;
+    let n = 8192usize;
+    let sp = spec("fp", 256);
+    let cfg = sharded_cfg(2, k);
+    let (mut coll, ends) = build_topology(&cfg, workers, &sp).unwrap();
+    let gset = |w: usize, r: usize| -> Vec<f32> {
+        let mut rng = Rng::stream(700 + w as u64, r as u64);
+        sample(ALL_DISTS[0], n, 1.0, &mut rng)
+    };
+    let mut means = Vec::new();
+    std::thread::scope(|scope| {
+        for (w, mut wx) in ends.into_iter().enumerate() {
+            let sp = sp.clone();
+            let gset = &gset;
+            scope.spawn(move || {
+                let mut gc = orq::comm::GradCodec::new(&sp).unwrap();
+                let mut rng = Rng::stream(sp.seed, 2_000 + w as u64);
+                let mut qg = orq::quant::bucket::QuantizedGrad::default();
+                let mut msg = Vec::new();
+                let mut mean = Vec::new();
+                for r in 0..rounds {
+                    let g = gset(w, r);
+                    gc.encode_into(&g, &mut rng, &mut qg, &mut msg);
+                    // exchange() verifies the frame's round field: any
+                    // version older than r − K errors instead of applying
+                    wx.exchange(&mut msg, &mut mean).unwrap();
+                    assert_eq!(mean.len(), n, "worker {w} round {r}");
+                    if r < k {
+                        assert!(
+                            mean.iter().all(|&v| v == 0.0),
+                            "worker {w}: cold rounds apply the zero mean"
+                        );
+                    }
+                }
+            });
+        }
+        for _ in 0..rounds {
+            let mut m = Vec::new();
+            coll.round(&mut m).unwrap();
+            means.push(m);
+        }
+    });
+    let st = coll.stats();
+    assert_eq!(st.staleness.max_age as usize, k, "staleness bound");
+    assert_eq!(st.staleness.cold_rounds as usize, k);
+    assert_eq!(st.staleness.rounds as usize, rounds);
+    assert_eq!(st.staleness.hist[k] as usize, rounds - k);
+    for (t, mean) in means.iter().enumerate() {
+        if t < k {
+            assert!(mean.iter().all(|&v| v == 0.0), "round {t}");
+        } else {
+            // the pipelined round applies the round-(t − K) synchronous
+            // mean, bit for bit
+            let gs: Vec<Vec<f32>> = (0..workers).map(|w| gset(w, t - k)).collect();
+            let (want, _) = run_once(&sharded_cfg(2, 0), &sp, &gs).unwrap();
+            assert_eq!(mean, &want, "round {t}");
+        }
+    }
+    // Async critical path: bandwidth paid in full, latency per window
+    // (zero on this link); headers make measured a hair above the model.
+    let model = shard::async_time(&Link::ten_gbps(), workers, 2, rounds, k, n * 4, n * 4);
+    assert!(st.sim_time_s > model, "{} vs {model}", st.sim_time_s);
+    assert!(st.sim_time_s < model * 1.01, "within 1%: {} vs {model}", st.sim_time_s);
 }
 
 /// On a slow-inter/fast-intra cluster the hierarchy must put strictly
