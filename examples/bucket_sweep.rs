@@ -11,7 +11,10 @@
 //!
 //! Run: `cargo run --release --example bucket_sweep -- [--steps N]
 //!       [--topology ps|ring|hier|sharded-ps] [--workers N] [--groups N]
-//!       [--shards S] [--staleness K]`
+//!       [--shards S] [--staleness K] [--threads N] [--pool true|false]`
+//!
+//! `--threads N` runs the parallel codec per node (the big-bucket rows
+//! shard well); `--pool false` reverts to per-round scoped threads.
 
 use orq::bench::print_rows;
 use orq::cli::Args;
@@ -22,7 +25,9 @@ use orq::data::synth::{ClassDataset, DatasetSpec};
 
 fn main() -> orq::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
-    args.check_known(&["steps", "topology", "workers", "groups", "shards", "staleness"])?;
+    args.check_known(&[
+        "steps", "topology", "workers", "groups", "shards", "staleness", "threads", "pool",
+    ])?;
     let steps = args.get_parse::<usize>("steps")?.unwrap_or(250);
     let topology = args.get_parse::<Topology>("topology")?.unwrap_or_default();
     let workers = args.get_parse::<usize>("workers")?.unwrap_or(match topology {
@@ -38,6 +43,8 @@ fn main() -> orq::Result<()> {
         .get_parse::<usize>("shards")?
         .unwrap_or(if topology == Topology::ShardedPs { 2 } else { 1 });
     let staleness = args.get_parse::<usize>("staleness")?.unwrap_or(0);
+    let threads = args.get_parse::<usize>("threads")?.unwrap_or(1);
+    let pool = args.get_parse::<bool>("pool")?.unwrap_or(true);
 
     let ds = ClassDataset::generate(DatasetSpec::cifar10_like(64));
     let buckets = [128usize, 512, 2048, 8192, 32768];
@@ -61,6 +68,8 @@ fn main() -> orq::Result<()> {
                 groups,
                 shards,
                 staleness,
+                threads,
+                pool,
                 ..TrainConfig::default()
             };
             let factory = native_backend_factory(&cfg.model)?;

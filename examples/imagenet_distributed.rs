@@ -9,7 +9,12 @@
 //!
 //! Run: `cargo run --release --example imagenet_distributed --
 //!       [--steps N] [--method orq-5] [--out DIR]
-//!       [--topology ps|ring|hier|sharded-ps] [--shards S] [--staleness K]`
+//!       [--topology ps|ring|hier|sharded-ps] [--shards S] [--staleness K]
+//!       [--threads N] [--pool true|false]`
+//!
+//! `--threads N` shards the codec per node; `--pool false` falls back to
+//! the per-round scoped threads (bit-identical results, slower steady
+//! state).
 
 use orq::cli::Args;
 use orq::comm::Topology;
@@ -20,12 +25,16 @@ use orq::util::fmt;
 
 fn main() -> orq::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
-    args.check_known(&["steps", "method", "out", "topology", "shards", "staleness"])?;
+    args.check_known(&[
+        "steps", "method", "out", "topology", "shards", "staleness", "threads", "pool",
+    ])?;
     let steps = args.get_parse::<usize>("steps")?.unwrap_or(250);
     let method = args.get_or("method", "orq-5").to_string();
     let outdir = args.get_or("out", "artifacts/results").to_string();
     let shards = args.get_parse::<usize>("shards")?.unwrap_or(1);
     let staleness = args.get_parse::<usize>("staleness")?.unwrap_or(0);
+    let threads = args.get_parse::<usize>("threads")?.unwrap_or(1);
+    let pool = args.get_parse::<bool>("pool")?.unwrap_or(true);
     let topology = args.get_parse::<Topology>("topology")?.unwrap_or(
         if shards > 1 || staleness > 0 { Topology::ShardedPs } else { Topology::Ps },
     );
@@ -62,12 +71,14 @@ fn main() -> orq::Result<()> {
         shards,
         staleness,
         error_feedback: false,
-        threads: 1,
+        threads,
+        pool,
         links: orq::config::LinkConfig::default(),
     };
     println!(
         "imagenet_distributed: {method}, 4 workers, d=512, clip 2.5σ, {steps} steps, \
-         topology {topology}"
+         topology {topology}, {threads} codec thread(s), {}",
+        if pool { "pooled" } else { "scoped threads" }
     );
     let factory = native_backend_factory(&cfg.model)?;
     let out = Trainer::new(cfg, &ds)?.run(factory)?;

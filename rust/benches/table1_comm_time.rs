@@ -8,7 +8,8 @@
 use orq::bench::print_rows;
 use orq::codec::{wire_size, Packing};
 use orq::comm::link::{Link, LinkMap};
-use orq::comm::{hier, ring, run_once, shard, ExchangeConfig, Topology, WireSpec};
+use orq::comm::{hier, ring, run_once, shard, ExchangeConfig, PoolMode, Topology, WireSpec};
+use orq::quant::pool::PoolHandle;
 use orq::tensor::rng::Rng;
 use orq::util::fmt;
 
@@ -23,6 +24,11 @@ const ZOO: [(&str, u64); 5] = [
 fn main() {
     let link = Link::ten_gbps();
     let d = 512; // the paper's ImageNet bucket size
+    // One persistent worker pool for every measured round below: codecs
+    // and shard servers across all the run_once calls reuse the same
+    // threads (the cross-round amortization perfbench quantifies).
+    let pool = PoolHandle::new(0);
+    let pooled = |spec: WireSpec| spec.with_pool_mode(PoolMode::Shared(pool.clone()));
 
     // --- the paper's exact table: FP32 comm time ---
     let mut rows = Vec::new();
@@ -103,7 +109,7 @@ fn main() {
             })
             .collect();
         for (scheme, s) in [("fp", 0usize), ("terngrad", 3)] {
-            let spec = WireSpec { seed: 7, ..WireSpec::new(scheme, d) };
+            let spec = pooled(WireSpec { seed: 7, ..WireSpec::new(scheme, d) });
             let ps_cfg = ExchangeConfig::flat(Topology::Ps, link);
             let ring_cfg = ExchangeConfig::flat(Topology::Ring, link);
             let (_, ps) = run_once(&ps_cfg, &spec, &grads).expect("ps round");
@@ -144,7 +150,7 @@ fn main() {
             })
             .collect();
         for (scheme, s) in [("fp", 0usize), ("terngrad", 3)] {
-            let spec = WireSpec { seed: 7, ..WireSpec::new(scheme, d) };
+            let spec = pooled(WireSpec { seed: 7, ..WireSpec::new(scheme, d) });
             let hier_cfg = ExchangeConfig::hier(groups, links);
             let (_, h) = run_once(&hier_cfg, &spec, &grads).expect("hier round");
             let ps_cfg = ExchangeConfig { links, ..ExchangeConfig::flat(Topology::Ps, link) };
@@ -195,7 +201,7 @@ fn main() {
         .collect();
     let mut rows = Vec::new();
     for (scheme, s) in [("fp", 0usize), ("terngrad", 3)] {
-        let spec = WireSpec { seed: 7, ..WireSpec::new(scheme, d) };
+        let spec = pooled(WireSpec { seed: 7, ..WireSpec::new(scheme, d) });
         let up = wire_size(n_elems, d, s, Packing::BaseS, scheme);
         let down = n_elems * 4;
         for shards in [1usize, 2, 4, 8] {

@@ -273,6 +273,7 @@ pub mod suite {
             staleness: 0,
             error_feedback: false,
             threads: 1,
+            pool: true,
             links: crate::config::LinkConfig::default(),
         }
     }

@@ -10,9 +10,12 @@
 //!   rounding), plus serial vs parallel quantize+encode through
 //!   `GradCodec` → `BENCH_exchange.json`;
 //! * **exchange rounds** — end-to-end `comm::run_rounds` wall time for
-//!   ps (serial and parallel codec paths), ring, hier, and the sharded
-//!   parameter server (synchronous and with a staleness window) →
-//!   `BENCH_exchange.json`.
+//!   ps (serial, pooled-parallel and scoped-parallel codec paths), ring,
+//!   hier, and the sharded parameter server (synchronous and with a
+//!   staleness window) → `BENCH_exchange.json`;
+//! * **amortization** — round-1 (pool spawn + arena growth) vs
+//!   steady-state cost of the pooled paths, so the cross-round win of
+//!   the persistent worker pool is measured, not asserted.
 //!
 //! ## JSON schema
 //!
@@ -21,23 +24,35 @@
 //! "pack"|"unpack", path: "word"|"scalar"|"recip", mean_s, gb_s,
 //! melem_s, wire_bytes}], speedup: {fixed_pack_unpack, base_s_unpack} }`.
 //!
-//! `BENCH_exchange.json` (v2): `{ schema: "orq.perfbench.exchange/v2",
+//! `BENCH_exchange.json` (v3): `{ schema: "orq.perfbench.exchange/v3",
 //! mode, elements, workers, threads, bucket_size, quantize: [{method,
-//! path: "serial"|"parallel", mean_s, melem_s}], rounds: [{topology,
-//! path, mean_s, wire_bytes, sim_time_s, shards, staleness}], speedup:
-//! {quantize_encode, ps_round} }`. v2 preserves every v1 field and adds
-//! the per-round `shards`/`staleness` columns plus the
-//! `topology: "sharded-ps"` entries (`path: "serial"` = synchronous
-//! `--shards 2`, `path: "async"` = staleness window 2). Every round
-//! entry is a per-round average over the same fixed multi-round window
-//! (the largest `K + 1` in the set), so async warm rounds (mean pull +
-//! decode) are in the measurement and per-iteration topology setup
-//! amortizes identically across entries.
+//! path: "serial"|"parallel"|"parallel-scoped", mean_s, melem_s}],
+//! rounds: [{topology, path, mean_s, wire_bytes, sim_time_s, shards,
+//! staleness}], amortization: {quantize_encode: {round1_s, steady_s,
+//! rounds}, ps_round: {round1_s, steady_s, rounds}}, speedup:
+//! {quantize_encode, ps_round, pooled_round} }`. v3 preserves every v2
+//! field (which preserved every v1 field) and adds: the
+//! `path: "parallel-scoped"` quantize and ps-round entries — the
+//! retained PR 3/4 per-round `std::thread::scope` execution, measured in
+//! the same run as the pooled default (`path: "parallel"`) so
+//! `speedup.pooled_round = scoped / pooled` is a same-machine figure —
+//! and the `amortization` section (first pooled call vs steady-state
+//! mean: round 1 pays the thread spawns and the solver-arena growth that
+//! steady-state rounds no longer do). Every round entry is a per-round
+//! average over the same fixed multi-round window (the largest `K + 1`
+//! in the set), so async warm rounds (mean pull + decode) are in the
+//! measurement and per-iteration topology setup amortizes identically
+//! across entries.
 //!
 //! `--smoke` runs small sizes, then re-parses both artifacts and asserts
 //! the schema plus monotone sanity (sizes and rates positive, fixed-width
 //! wire bytes grow with width, base-3 beats 2-bit fixed) — no timing
 //! thresholds, so it is CI-safe on noisy runners.
+//!
+//! `--floors ci/perf_floors.json` compares the exchange speedups against
+//! committed floors and exits non-zero below any of them — the CI
+//! regression gate (floors are deliberately generous: they catch a lost
+//! optimization, not runner noise).
 
 use std::collections::BTreeMap;
 
@@ -45,10 +60,10 @@ use orq::bench::{print_table, Bench, Measurement};
 use orq::cli::Args;
 use orq::codec::bitpack;
 use orq::comm::link::{Link, LinkMap};
-use orq::comm::{run_rounds, ExchangeConfig, GradCodec, Topology, WireSpec};
+use orq::comm::{run_rounds, ExchangeConfig, GradCodec, PoolMode, Topology, WireSpec};
 use orq::error::{Error, Result};
 use orq::quant::bucket::{BucketQuantizer, QuantizedGrad};
-use orq::quant::parallel::BucketPipeline;
+use orq::quant::pool::PoolHandle;
 use orq::tensor::rng::Rng;
 use orq::util::json::Json;
 
@@ -61,13 +76,16 @@ fn main() {
 
 fn run() -> Result<()> {
     let args = Args::from_env()?;
-    args.check_known(&["smoke", "out", "n", "threads", "workers"])?;
+    args.check_known(&["smoke", "out", "n", "threads", "workers", "floors"])?;
     let smoke = args.flag("smoke");
     let out_dir = args.get_or("out", ".").to_string();
     let n: usize = args
         .get_parse("n")?
         .unwrap_or(if smoke { 1 << 16 } else { 1 << 22 });
-    let threads = BucketPipeline::new(args.get_parse("threads")?.unwrap_or(0)).threads();
+    let threads = match args.get_parse("threads")?.unwrap_or(0) {
+        0 => orq::quant::pool::auto_threads().min(256),
+        t => t.min(256),
+    };
     let workers: usize = args.get_parse("workers")?.unwrap_or(2);
     let bench = if smoke {
         Bench { warmup_iters: 1, iters: 5, max_seconds: 2.0 }
@@ -77,7 +95,7 @@ fn run() -> Result<()> {
     let mode = if smoke { "smoke" } else { "full" };
 
     let codec_json = bench_codec(&bench, n, mode);
-    let exchange_json = bench_exchange(&bench, n, workers, threads, mode)?;
+    let exchange_json = bench_exchange(&bench, n, workers, threads, mode, smoke)?;
 
     std::fs::create_dir_all(&out_dir)?;
     let codec_path = format!("{out_dir}/BENCH_codec.json");
@@ -90,7 +108,45 @@ fn run() -> Result<()> {
         validate_exchange(&exchange_json)?;
         println!("smoke validation OK: schema + monotone sanity checks passed");
     }
+    if let Some(floors_path) = args.get("floors") {
+        check_floors(&exchange_json, floors_path)?;
+    }
     Ok(())
+}
+
+/// CI regression gate: every speedup named in the floors file must meet
+/// its committed floor. Floors are generous by design — they exist to
+/// catch a lost optimization (a pooled path silently falling back to
+/// spawns, a parallel path serializing), not to measure runner noise.
+fn check_floors(exchange: &Json, floors_path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(floors_path)?;
+    let floors = Json::parse(&text)?;
+    let want = floors
+        .req("speedup")?
+        .as_obj()
+        .ok_or_else(|| Error::InvalidArg("floors: speedup is not an object".into()))?;
+    let got = exchange.req("speedup")?;
+    let mut failures = Vec::new();
+    for (key, floor) in want {
+        let floor = floor.as_f64().ok_or_else(|| {
+            Error::InvalidArg(format!("floors: speedup.{key} is not a number"))
+        })?;
+        let measured = req_f64(got, key)?;
+        let verdict = if measured >= floor { "ok" } else { "BELOW FLOOR" };
+        println!("perf gate: speedup.{key} = {measured:.3} (floor {floor:.3}) {verdict}");
+        if measured < floor {
+            failures.push(format!("speedup.{key} = {measured:.3} < floor {floor:.3}"));
+        }
+    }
+    if failures.is_empty() {
+        println!("perf gate OK: all floors met ({floors_path})");
+        Ok(())
+    } else {
+        Err(Error::InvalidArg(format!(
+            "perf regression gate failed: {} (floors in {floors_path})",
+            failures.join("; ")
+        )))
+    }
 }
 
 fn obj(pairs: Vec<(&str, Json)>) -> Json {
@@ -246,10 +302,17 @@ fn bench_exchange(
     workers: usize,
     threads: usize,
     mode: &str,
+    smoke: bool,
 ) -> Result<Json> {
     let bucket = 512usize;
     let method = "orq-5";
     let g = gaussian(n, 1);
+    // One persistent pool for every pooled figure in this run: codecs,
+    // shard servers and the run_rounds drivers share it, so repeated
+    // bench iterations measure *steady-state* pooled rounds (round-1
+    // costs are quantified separately in the amortization section).
+    let pool = PoolHandle::new(threads);
+    let shared = PoolMode::Shared(pool.clone());
 
     // ---- per-scheme quantize throughput (serial, d = 2048) ----
     let mut rows = Vec::new();
@@ -276,11 +339,18 @@ fn bench_exchange(
     }
     print_table(&format!("Quantize throughput — {n} elements, d=2048, serial"), &rows);
 
-    // ---- quantize+encode: serial GradCodec vs parallel pipeline ----
+    // ---- quantize+encode: serial GradCodec vs parallel pipeline, the
+    // parallel path in both execution modes (pooled default vs the
+    // retained scoped-thread baseline) ----
     let mut rows = Vec::new();
-    let mut qe = [0.0f64; 2]; // [serial, parallel]
-    for (i, (path, t)) in [("serial", 1usize), ("parallel", threads)].into_iter().enumerate() {
-        let spec = WireSpec::new(method, bucket).with_threads(t);
+    let mut qe = [0.0f64; 3]; // [serial, parallel (pooled), parallel-scoped]
+    let qe_paths: [(&str, usize, PoolMode); 3] = [
+        ("serial", 1, PoolMode::Scoped),
+        ("parallel", threads, shared.clone()),
+        ("parallel-scoped", threads, PoolMode::Scoped),
+    ];
+    for (i, (path, t, pm)) in qe_paths.into_iter().enumerate() {
+        let spec = WireSpec::new(method, bucket).with_threads(t).with_pool_mode(pm);
         let mut gc = GradCodec::new(&spec)?;
         let mut rng = Rng::seed_from(3);
         let mut qg = QuantizedGrad::default();
@@ -303,7 +373,10 @@ fn bench_exchange(
         rows.push(meas);
     }
     print_table(
-        &format!("Quantize+encode — {method}, d={bucket}, serial vs {threads} threads"),
+        &format!(
+            "Quantize+encode — {method}, d={bucket}, serial vs {threads} threads \
+             (pooled and scoped)"
+        ),
         &rows,
     );
 
@@ -311,26 +384,44 @@ fn bench_exchange(
     let link = Link::ten_gbps();
     let grads: Vec<Vec<f32>> = (0..workers).map(|w| gaussian(n, 10 + w as u64)).collect();
     let groups = if workers % 2 == 0 { 2 } else { 1 };
-    let configs: Vec<(&str, &str, ExchangeConfig, usize)> = vec![
-        ("ps", "serial", ExchangeConfig::flat(Topology::Ps, link), 1),
-        ("ps", "parallel", ExchangeConfig::flat(Topology::Ps, link), threads),
-        ("ring", "serial", ExchangeConfig::flat(Topology::Ring, link), 1),
-        ("hier", "serial", ExchangeConfig::hier(groups, LinkMap::uniform(link)), 1),
-        ("sharded-ps", "serial", ExchangeConfig::sharded(2, 0, link), 1),
-        ("sharded-ps", "async", ExchangeConfig::sharded(2, 2, link), 1),
+    let configs: Vec<(&str, &str, ExchangeConfig, usize, PoolMode)> = vec![
+        ("ps", "serial", ExchangeConfig::flat(Topology::Ps, link), 1, shared.clone()),
+        ("ps", "parallel", ExchangeConfig::flat(Topology::Ps, link), threads, shared.clone()),
+        (
+            "ps",
+            "parallel-scoped",
+            ExchangeConfig::flat(Topology::Ps, link),
+            threads,
+            PoolMode::Scoped,
+        ),
+        ("ring", "serial", ExchangeConfig::flat(Topology::Ring, link), 1, shared.clone()),
+        (
+            "hier",
+            "serial",
+            ExchangeConfig::hier(groups, LinkMap::uniform(link)),
+            1,
+            shared.clone(),
+        ),
+        ("sharded-ps", "serial", ExchangeConfig::sharded(2, 0, link), 1, shared.clone()),
+        ("sharded-ps", "async", ExchangeConfig::sharded(2, 2, link), 1, shared.clone()),
     ];
     // One measurement window for EVERY entry — the largest staleness
     // window in the set — so warm async rounds (mean pull + decode) are
     // in the measurement AND the per-iteration topology setup amortizes
     // identically across entries (figures stay comparable). All reported
-    // round figures are per-round averages over this window.
-    let window = configs.iter().map(|(_, _, c, _)| c.staleness + 1).max().unwrap_or(1);
+    // round figures are per-round averages over this window. Pooled
+    // entries reuse one persistent pool across iterations — steady
+    // state — while `parallel-scoped` re-spawns per round, exactly the
+    // cost the pool removes.
+    let window = configs.iter().map(|(_, _, c, _, _)| c.staleness + 1).max().unwrap_or(1);
     let inv = 1.0 / window as f64;
     let mut rows = Vec::new();
     let mut round_entries = Vec::new();
-    let mut ps_round = [0.0f64; 2]; // [serial, parallel]
-    for (topo, path, cfg, t) in configs {
-        let spec = WireSpec { seed: 7, ..WireSpec::new(method, bucket) }.with_threads(t);
+    let mut ps_round = [0.0f64; 3]; // [serial, parallel (pooled), parallel-scoped]
+    for (topo, path, cfg, t, pm) in configs {
+        let spec = WireSpec { seed: 7, ..WireSpec::new(method, bucket) }
+            .with_threads(t)
+            .with_pool_mode(pm);
         // one validated window outside the timer, for stats + fail-fast
         let (_, stats) = run_rounds(&cfg, &spec, &grads, window)?;
         let meas = bench.measure(&format!("{topo} round {path} (t={t})"), None, || {
@@ -338,7 +429,12 @@ fn bench_exchange(
             std::hint::black_box(out.1.wire_bytes);
         });
         if topo == "ps" {
-            ps_round[if path == "serial" { 0 } else { 1 }] = meas.mean_s;
+            let slot = match path {
+                "serial" => 0,
+                "parallel" => 1,
+                _ => 2,
+            };
+            ps_round[slot] = meas.mean_s;
         }
         round_entries.push(obj(vec![
             ("topology", Json::Str(topo.to_string())),
@@ -356,17 +452,25 @@ fn bench_exchange(
         &rows,
     );
 
+    let amortization = bench_amortization(n, threads, workers, bucket, method, &grads, smoke)?;
+
     let speedup = obj(vec![
         ("quantize_encode", Json::Num(qe[0] / qe[1].max(1e-12))),
         ("ps_round", Json::Num(ps_round[0] / ps_round[1].max(1e-12))),
+        // pooled vs scoped on the same parallel ps round — the tentpole
+        // figure the CI floor gates (steady-state pooled must not lose
+        // to per-round spawns).
+        ("pooled_round", Json::Num(ps_round[2] / ps_round[1].max(1e-12))),
     ]);
     println!(
-        "exchange speedups (serial / parallel, {threads} threads): quantize+encode ×{:.2}, ps round ×{:.2}",
+        "exchange speedups ({threads} threads): quantize+encode ×{:.2} (serial/pooled), \
+         ps round ×{:.2} (serial/pooled), ps round ×{:.2} (scoped/pooled)",
         qe[0] / qe[1].max(1e-12),
-        ps_round[0] / ps_round[1].max(1e-12)
+        ps_round[0] / ps_round[1].max(1e-12),
+        ps_round[2] / ps_round[1].max(1e-12)
     );
     Ok(obj(vec![
-        ("schema", Json::Str("orq.perfbench.exchange/v2".into())),
+        ("schema", Json::Str("orq.perfbench.exchange/v3".into())),
         ("mode", Json::Str(mode.into())),
         ("elements", Json::Num(n as f64)),
         ("workers", Json::Num(workers as f64)),
@@ -374,7 +478,74 @@ fn bench_exchange(
         ("bucket_size", Json::Num(bucket as f64)),
         ("quantize", Json::Arr(quantize)),
         ("rounds", Json::Arr(round_entries)),
+        ("amortization", amortization),
         ("speedup", speedup),
+    ]))
+}
+
+/// Round-1 vs steady-state cost of the pooled paths: a fresh pool's
+/// first call pays the thread spawns and the level-solver arena growth;
+/// subsequent rounds reuse both. Reported raw (no thresholds — the
+/// ratio is machine-dependent), one fresh pool per figure.
+fn bench_amortization(
+    n: usize,
+    threads: usize,
+    workers: usize,
+    bucket: usize,
+    method: &str,
+    grads: &[Vec<f32>],
+    smoke: bool,
+) -> Result<Json> {
+    use std::time::Instant;
+    let steady_rounds = if smoke { 3usize } else { 10 };
+    let g = gaussian(n, 1);
+
+    // quantize+encode through a fresh pooled codec (own pool)
+    let spec = WireSpec::new(method, bucket).with_threads(threads);
+    let mut gc = GradCodec::new(&spec)?;
+    let mut rng = Rng::seed_from(3);
+    let mut qg = QuantizedGrad::default();
+    let mut msg = Vec::new();
+    let t0 = Instant::now();
+    gc.encode_into(&g, &mut rng, &mut qg, &mut msg);
+    let qe_round1 = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    for _ in 0..steady_rounds {
+        gc.encode_into(&g, &mut rng, &mut qg, &mut msg);
+        std::hint::black_box(msg.len());
+    }
+    let qe_steady = t0.elapsed().as_secs_f64() / steady_rounds as f64;
+
+    // one ps exchange round on a fresh shared pool
+    let cfg = ExchangeConfig::flat(Topology::Ps, Link::ten_gbps());
+    let spec = WireSpec { seed: 7, ..WireSpec::new(method, bucket) }
+        .with_threads(threads)
+        .with_pool_mode(PoolMode::Shared(PoolHandle::new(threads)));
+    let t0 = Instant::now();
+    run_rounds(&cfg, &spec, grads, 1)?;
+    let ps_round1 = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    for _ in 0..steady_rounds {
+        let out = run_rounds(&cfg, &spec, grads, 1)?;
+        std::hint::black_box(out.1.wire_bytes);
+    }
+    let ps_steady = t0.elapsed().as_secs_f64() / steady_rounds as f64;
+
+    println!(
+        "amortization ({workers} workers): quantize+encode round 1 {:.2e}s vs steady {:.2e}s, \
+         ps round 1 {:.2e}s vs steady {:.2e}s",
+        qe_round1, qe_steady, ps_round1, ps_steady
+    );
+    let entry = |round1: f64, steady: f64| {
+        obj(vec![
+            ("round1_s", Json::Num(round1)),
+            ("steady_s", Json::Num(steady)),
+            ("rounds", Json::Num(steady_rounds as f64)),
+        ])
+    };
+    Ok(obj(vec![
+        ("quantize_encode", entry(qe_round1, qe_steady)),
+        ("ps_round", entry(ps_round1, ps_steady)),
     ]))
 }
 
@@ -464,7 +635,7 @@ fn validate_codec(j: &Json) -> Result<()> {
 
 fn validate_exchange(j: &Json) -> Result<()> {
     let j = &Json::parse(&j.dump())?;
-    if j.req("schema")?.as_str() != Some("orq.perfbench.exchange/v2") {
+    if j.req("schema")?.as_str() != Some("orq.perfbench.exchange/v3") {
         return Err(fail("bad exchange schema tag".into()));
     }
     for key in ["mode", "elements", "workers", "threads", "bucket_size"] {
@@ -488,7 +659,7 @@ fn validate_exchange(j: &Json) -> Result<()> {
         .req("rounds")?
         .as_arr()
         .ok_or_else(|| fail("rounds is not an array".into()))?;
-    let mut seen_ps = (false, false);
+    let mut seen_ps = (false, false, false);
     let mut seen_sharded = (false, false);
     for r in rounds {
         let topo = r.req("topology")?.as_str().unwrap_or_default().to_string();
@@ -509,6 +680,7 @@ fn validate_exchange(j: &Json) -> Result<()> {
         match (topo.as_str(), path.as_str()) {
             ("ps", "serial") => seen_ps.0 = true,
             ("ps", "parallel") => seen_ps.1 = true,
+            ("ps", "parallel-scoped") => seen_ps.2 = true,
             ("sharded-ps", "serial") => {
                 if shards < 2.0 || staleness != 0.0 {
                     return Err(fail("sharded-ps serial must run S ≥ 2, K = 0".into()));
@@ -524,16 +696,31 @@ fn validate_exchange(j: &Json) -> Result<()> {
             _ => {}
         }
     }
-    if seen_ps != (true, true) {
-        return Err(fail("both ps serial and ps parallel rounds are required".into()));
+    if seen_ps != (true, true, true) {
+        return Err(fail(
+            "ps serial, ps parallel (pooled) and ps parallel-scoped rounds are all required"
+                .into(),
+        ));
     }
     if seen_sharded != (true, true) {
         return Err(fail(
             "both sharded-ps serial and sharded-ps async rounds are required".into(),
         ));
     }
+    // v3: the amortization section quantifies round-1 (spawns + arena
+    // growth) vs steady state for both pooled figures.
+    let am = j.req("amortization")?;
+    for section in ["quantize_encode", "ps_round"] {
+        let s = am.req(section)?;
+        for key in ["round1_s", "steady_s", "rounds"] {
+            let v = req_f64(s, key)?;
+            if !v.is_finite() || v <= 0.0 {
+                return Err(fail(format!("amortization {section}.{key} = {v}")));
+            }
+        }
+    }
     let sp = j.req("speedup")?;
-    for key in ["quantize_encode", "ps_round"] {
+    for key in ["quantize_encode", "ps_round", "pooled_round"] {
         let v = req_f64(sp, key)?;
         if !v.is_finite() || v <= 0.0 {
             return Err(fail(format!("speedup {key} = {v}")));

@@ -92,7 +92,7 @@ USAGE:
             [--steps N] [--batch N] [--dataset D] [--bucket N] [--clip C]
             [--topology ps|ring|hier|sharded-ps] [--groups N]
             [--shards S] [--staleness K] [--error-feedback] [--threads N]
-            [--backend native|pjrt]
+            [--pool true|false] [--backend native|pjrt]
             [--intra-bandwidth BPS] [--intra-latency S]
             [--inter-bandwidth BPS] [--inter-latency S]
             [--artifacts DIR] [--out DIR] [--seed N]
@@ -111,8 +111,12 @@ LINKS: per edge class — intra (in-group) vs inter (cross-group / flat edges);
        bandwidth in bits/s, one-way latency in seconds (default 10e9 / 0)
 THREADS: codec threads per node — 1 serial (default), 0 auto-detect cores,
        N ≥ 2 parallel per-bucket quantize/encode + decode/reduce pipeline
+POOL: --pool true (default) runs codec shards, sharded-PS reduce loops and
+       drivers on one persistent worker pool (spawns + solver arenas paid
+       once per run); --pool false keeps per-round scoped threads —
+       bit-identical results, retained as the perf baseline
 ERROR FEEDBACK: --error-feedback quantizes g + m and keeps the residual m
-       (ps/sharded-ps with a quantizing method and --threads 1)
+       (ps/sharded-ps with a quantizing method; serial or parallel codec)
 ";
 
 #[cfg(test)]

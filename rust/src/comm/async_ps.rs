@@ -43,11 +43,18 @@
 //! semantics). The coordinator's [`CommStats`] carries the
 //! [`StalenessStats`] applied-version age histogram.
 //!
-//! **Shutdown.** Shard threads are detached and exit when any of their
-//! channels disconnects; worker/coordinator ends hold the only senders,
-//! so dropping the ends tears the whole topology down without joins that
-//! could deadlock (protocol violations travel to the coordinator as a
-//! `Failed` record and surface from [`Collective::round`]).
+//! **Shutdown.** Shard reduce loops are detached services: they exit
+//! when any of their channels disconnects; worker/coordinator ends hold
+//! the only senders, so dropping the ends tears the whole topology down
+//! without joins that could deadlock (protocol violations travel to the
+//! coordinator as a `Failed` record and surface from
+//! [`Collective::round`]). When the [`WireSpec`] carries a shared
+//! worker pool ([`PoolMode::Shared`](super::collective::PoolMode) — the
+//! trainer and `run_rounds` default), the loops run on pool workers via
+//! [`spawn_detached`](crate::quant::pool::WorkerPool::spawn_detached)
+//! instead of freshly spawned threads, and the collective holds a pool
+//! handle that it drops *after* its channels, so the pool's final join
+//! never waits on a still-serving shard.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -289,6 +296,11 @@ pub struct ShardedPsCollective {
     pool: Vec<Vec<f32>>,
     chunk: Vec<f32>,
     scratch: DecodeScratch,
+    /// Keeps the shared worker pool hosting the shard reduce loops alive
+    /// for as long as this collective. Declared last: Rust drops fields
+    /// in declaration order, so the channels above disconnect (shard
+    /// loops exit) before a final pool handle could start joining.
+    _worker_pool: Option<crate::quant::pool::PoolHandle>,
 }
 
 impl ShardedPsCollective {
@@ -367,12 +379,19 @@ impl ShardedPsCollective {
                 payload: Vec::new(),
                 scratch: DecodeScratch::default(),
             };
-            // Detached on purpose: the thread exits as soon as any of its
+            // Detached on purpose: the loop exits as soon as any of its
             // channels disconnects, so no join (which could deadlock a
-            // mid-error teardown) is ever needed.
-            let _ = std::thread::Builder::new()
-                .name(format!("orq-shard-{s}"))
-                .spawn(move || server.run())?;
+            // mid-error teardown) is ever needed. With a shared worker
+            // pool the loop runs on a (reusable) pool worker; otherwise
+            // it gets a dedicated named thread as in PR 4.
+            match spec.pool.shared() {
+                Some(pool) => pool.spawn_detached(move || server.run())?,
+                None => {
+                    let _ = std::thread::Builder::new()
+                        .name(format!("orq-shard-{s}"))
+                        .spawn(move || server.run())?;
+                }
+            }
         }
 
         let k = staleness as u64;
@@ -410,6 +429,7 @@ impl ShardedPsCollective {
                 pool: Vec::new(),
                 chunk: Vec::new(),
                 scratch: DecodeScratch::default(),
+                _worker_pool: spec.pool.shared().cloned(),
             },
             ends,
         ))

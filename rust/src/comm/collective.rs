@@ -29,6 +29,7 @@ use crate::error::{Error, Result};
 use crate::quant::bucket::{BucketQuantizer, QuantizedGrad};
 use crate::quant::error_feedback::ErrorFeedback;
 use crate::quant::parallel::BucketPipeline;
+use crate::quant::pool::PoolHandle;
 use crate::quant::{self, Quantizer};
 use crate::tensor::rng::Rng;
 
@@ -274,6 +275,39 @@ impl ExchangeConfig {
     }
 }
 
+/// How parallel codec shards, sharded-PS reduce loops and multi-round
+/// drivers execute their worker tasks.
+#[derive(Debug, Clone, Default)]
+pub enum PoolMode {
+    /// Persistent worker pool, one per codec/driver (default): thread
+    /// spawns and the per-thread level-solver arenas are paid once per
+    /// run, not once per round.
+    #[default]
+    Pooled,
+    /// One persistent pool shared across every codec, collective and
+    /// driver built from this spec — what [`run_rounds`] and the trainer
+    /// set up, so the whole hot path reuses a single thread set.
+    Shared(PoolHandle),
+    /// Legacy per-round `std::thread::scope` execution (PRs 3–4) —
+    /// retained as the same-machine baseline perfbench measures the
+    /// pool against. Bit-identical output to the pooled modes.
+    Scoped,
+}
+
+impl PoolMode {
+    /// The shared pool handle, if this mode carries one.
+    pub fn shared(&self) -> Option<&PoolHandle> {
+        match self {
+            PoolMode::Shared(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    pub fn is_scoped(&self) -> bool {
+        matches!(self, PoolMode::Scoped)
+    }
+}
+
 /// Everything a topology needs to know about the wire format: how
 /// gradients are quantized and packed, the seed its internal RNG
 /// streams derive from (downlink requantization, ring hop
@@ -296,6 +330,11 @@ pub struct WireSpec {
     /// [`BucketPipeline`] with per-bucket RNG streams; the wire bytes are
     /// then identical for every thread count (`0` = auto-detect cores).
     pub threads: usize,
+    /// Task execution mode for the parallel codec, the sharded-PS reduce
+    /// loops, and [`run_rounds`]: pooled (default), a shared pool, or
+    /// the legacy scoped-thread baseline. Wire bytes and decoded means
+    /// are bit-identical across all three.
+    pub pool: PoolMode,
 }
 
 impl WireSpec {
@@ -307,6 +346,7 @@ impl WireSpec {
             packing: Packing::BaseS,
             seed: 0,
             threads: 1,
+            pool: PoolMode::default(),
         }
     }
 
@@ -314,6 +354,27 @@ impl WireSpec {
     pub fn with_threads(mut self, threads: usize) -> WireSpec {
         self.threads = threads;
         self
+    }
+
+    /// Builder-style execution mode override (see [`PoolMode`]).
+    pub fn with_pool_mode(mut self, pool: PoolMode) -> WireSpec {
+        self.pool = pool;
+        self
+    }
+
+    /// Build the parallel pipeline this spec calls for — `None` when
+    /// `threads == 1` (the serial legacy path) — honoring the execution
+    /// mode. One construction rule for every pipeline in the stack
+    /// (worker codecs, the PS server's decode+reduce).
+    pub(crate) fn build_pipeline(&self) -> Option<BucketPipeline> {
+        match self.threads {
+            1 => None,
+            t => Some(match &self.pool {
+                PoolMode::Pooled => BucketPipeline::new(t),
+                PoolMode::Shared(p) => BucketPipeline::with_pool(t, p.clone()),
+                PoolMode::Scoped => BucketPipeline::scoped(t),
+            }),
+        }
     }
 }
 
@@ -338,10 +399,7 @@ impl GradCodec {
             Some(c) => BucketQuantizer::with_clip(spec.bucket_size, c),
             None => BucketQuantizer::new(spec.bucket_size),
         };
-        let pipeline = match spec.threads {
-            1 => None,
-            t => Some(BucketPipeline::new(t)),
-        };
+        let pipeline = spec.build_pipeline();
         Ok(GradCodec {
             method: spec.method.clone(),
             packing: spec.packing,
@@ -406,16 +464,22 @@ impl GradCodec {
     }
 
     /// Build error-feedback state matching this codec's bucket/clip
-    /// configuration. Serial quantized codecs only — the parallel
-    /// pipeline never materializes the quantized gradient the residual
-    /// update needs (config validation enforces both).
+    /// configuration. Works for serial and parallel codecs alike: the
+    /// serial path updates the residual from the materialized
+    /// [`QuantizedGrad`], the parallel path through the pipeline-side
+    /// dequantization buffer
+    /// ([`BucketPipeline::encode_ef_into`]).
     pub fn error_feedback(&self) -> ErrorFeedback {
         ErrorFeedback::new(self.bucketq.clone())
     }
 
     /// The error-feedback twin of [`Self::encode_into`]: quantize
     /// `g + m` through `ef` (residual memory updated in place) and
-    /// encode with this codec's scheme and packing.
+    /// encode with this codec's scheme and packing. Serial codecs keep
+    /// the PR 4 path bit-for-bit; parallel codecs shard the compensated
+    /// signal like any other gradient (wire bytes identical for every
+    /// thread count) and recover the residual by decoding their own
+    /// message.
     pub fn encode_ef_into(
         &mut self,
         ef: &mut ErrorFeedback,
@@ -425,11 +489,37 @@ impl GradCodec {
         msg: &mut Vec<u8>,
     ) {
         debug_assert!(
-            !self.is_fp && self.pipeline.is_none(),
-            "EF needs a serial quantizing codec (config validation enforces this)"
+            !self.is_fp,
+            "EF needs a quantizing method (config validation enforces this)"
         );
-        ef.quantize_into(g, self.quantizer.as_ref(), rng, qg);
-        codec::encode_into(qg, &self.method, self.packing, msg);
+        match &mut self.pipeline {
+            None => {
+                ef.quantize_into(g, self.quantizer.as_ref(), rng, qg);
+                codec::encode_into(qg, &self.method, self.packing, msg);
+            }
+            Some(pipe) => {
+                let round_key = rng.next_u64();
+                pipe.encode_ef_into(
+                    &self.bucketq,
+                    self.quantizer.as_ref(),
+                    ef,
+                    g,
+                    round_key,
+                    &self.method,
+                    self.packing,
+                    msg,
+                );
+            }
+        }
+    }
+
+    /// The dequantized transmitted signal of the last parallel
+    /// [`Self::encode_ef_into`] call (the buffer the pipeline's residual
+    /// update decoded); `None` on serial codecs, which materialize the
+    /// [`QuantizedGrad`] instead. Lets the trainer measure quantization
+    /// error without decoding the same message twice.
+    pub fn ef_dequant(&self) -> Option<&[f32]> {
+        self.pipeline.as_ref().map(|p| p.ef_dequant())
     }
 
     /// Decode a wire message into a flat f32 buffer, using the parallel
@@ -565,59 +655,113 @@ pub fn build_topology(
     }
 }
 
-/// Drive `rounds` exchange rounds over one built topology with scoped
-/// worker threads: each worker re-encodes the same gradient every round
-/// (the spec's quantizer RNG streams advance across rounds) and
-/// exchanges; returns the last round's decoded mean and the cumulative
-/// stats. Asynchronous sharded topologies pipeline inside their
-/// staleness window, so multi-round drives are what exercise (and
-/// measure) warm rounds. `rounds == 0` moves nothing and returns an
-/// empty mean. This is the one copy of the drop-before-join teardown
-/// convention benches and tests should reuse.
+/// One worker's multi-round drive loop (shared by the pooled and scoped
+/// drivers of [`run_rounds`]).
+fn drive_worker(
+    spec: &WireSpec,
+    w: usize,
+    g: &[f32],
+    mut wx: Box<dyn WorkerExchange>,
+    rounds: usize,
+) {
+    let mut gc = GradCodec::new(spec).expect("spec validated by build_topology");
+    let mut rng = Rng::stream(spec.seed, 2_000 + w as u64);
+    let mut qg = QuantizedGrad::default();
+    let mut msg = Vec::new();
+    let mut mean = Vec::new();
+    for _ in 0..rounds {
+        gc.encode_into(g, &mut rng, &mut qg, &mut msg);
+        // On channel death the coordinator's round() surfaces the real
+        // error; a panic here would only mask it.
+        if wx.exchange(&mut msg, &mut mean).is_err() {
+            return;
+        }
+    }
+}
+
+/// The coordinator half of [`run_rounds`], shared by the pooled and
+/// scoped drivers: serve every round, then report cumulative stats.
+/// The caller must still drop the collective before its scope
+/// joins/drains (the drop-before-join teardown convention) so that on a
+/// mid-exchange error, workers blocked on its channels see them close
+/// and exit instead of deadlocking.
+fn drive_coordinator(
+    coll: &mut dyn Collective,
+    mean: &mut Vec<f32>,
+    rounds: usize,
+) -> Result<CommStats> {
+    let mut round_res = Ok(());
+    for _ in 0..rounds {
+        if let Err(e) = coll.round(mean) {
+            round_res = Err(e);
+            break;
+        }
+    }
+    let stats = coll.stats();
+    round_res.map(|()| stats)
+}
+
+/// Drive `rounds` exchange rounds over one built topology: each worker
+/// re-encodes the same gradient every round (the spec's quantizer RNG
+/// streams advance across rounds) and exchanges; returns the last
+/// round's decoded mean and the cumulative stats. Asynchronous sharded
+/// topologies pipeline inside their staleness window, so multi-round
+/// drives are what exercise (and measure) warm rounds. `rounds == 0`
+/// moves nothing and returns an empty mean.
+///
+/// Worker loops run on the spec's [`PoolMode`]: the default `Pooled` is
+/// upgraded to one run-local [`PoolMode::Shared`] pool so every codec
+/// and shard reduce loop of this drive reuses the same threads across
+/// all rounds (callers that pass `Shared` themselves amortize across
+/// *calls* too — what perfbench measures); `Scoped` keeps the PR 4
+/// scoped-thread driver as the baseline. This is the one copy of the
+/// drop-before-join teardown convention benches and tests should reuse.
 pub fn run_rounds(
     cfg: &ExchangeConfig,
     spec: &WireSpec,
     grads: &[Vec<f32>],
     rounds: usize,
 ) -> Result<(Vec<f32>, CommStats)> {
-    let (mut coll, ends) = build_topology(cfg, grads.len(), spec)?;
+    let spec = match &spec.pool {
+        PoolMode::Pooled => {
+            spec.clone().with_pool_mode(PoolMode::Shared(PoolHandle::new(spec.threads)))
+        }
+        _ => spec.clone(),
+    };
+    let (mut coll, ends) = build_topology(cfg, grads.len(), &spec)?;
     let mut mean = Vec::new();
-    let res: Result<CommStats> = std::thread::scope(|scope| {
-        for (w, mut wx) in ends.into_iter().enumerate() {
-            let g: &[f32] = &grads[w];
-            let spec = spec.clone();
-            scope.spawn(move || {
-                let mut gc = GradCodec::new(&spec).expect("spec validated by build_topology");
-                let mut rng = Rng::stream(spec.seed, 2_000 + w as u64);
-                let mut qg = QuantizedGrad::default();
-                let mut msg = Vec::new();
-                let mut mean = Vec::new();
-                for _ in 0..rounds {
-                    gc.encode_into(g, &mut rng, &mut qg, &mut msg);
-                    // On channel death the coordinator's round() surfaces
-                    // the real error; a panic here would only mask it.
-                    if wx.exchange(&mut msg, &mut mean).is_err() {
-                        return;
-                    }
+    let shared = spec.pool.shared().cloned();
+    let stats = match shared {
+        Some(pool) => {
+            let spec = &spec;
+            let coordinated: Result<Result<CommStats>> = pool.scope(|sc| {
+                for (w, wx) in ends.into_iter().enumerate() {
+                    let g: &[f32] = &grads[w];
+                    sc.spawn(move || drive_worker(spec, w, g, wx, rounds));
                 }
+                let res = drive_coordinator(coll.as_mut(), &mut mean, rounds);
+                // Tear the coordinator down before the scope drains (see
+                // drive_coordinator's teardown note).
+                drop(coll);
+                res
             });
+            coordinated??
         }
-        let mut round_res = Ok(());
-        for _ in 0..rounds {
-            if let Err(e) = coll.round(&mut mean) {
-                round_res = Err(e);
-                break;
-            }
+        None => {
+            let res: Result<CommStats> = std::thread::scope(|scope| {
+                for (w, wx) in ends.into_iter().enumerate() {
+                    let g: &[f32] = &grads[w];
+                    let spec = &spec;
+                    scope.spawn(move || drive_worker(spec, w, g, wx, rounds));
+                }
+                let res = drive_coordinator(coll.as_mut(), &mut mean, rounds);
+                // Same drop-before-join convention as the pooled driver.
+                drop(coll);
+                res
+            });
+            res?
         }
-        let stats = coll.stats();
-        // Tear the coordinator down before the scope joins: if round()
-        // erred mid-exchange (e.g. mismatched upload shapes), workers
-        // still blocked on its channels must see them close and exit
-        // instead of deadlocking the join.
-        drop(coll);
-        round_res.map(|()| stats)
-    });
-    let stats = res?;
+    };
     Ok((mean, stats))
 }
 
@@ -752,6 +896,87 @@ mod tests {
             match &reference {
                 None => reference = Some(msg.clone()),
                 Some(r) => assert_eq!(&msg, r, "threads={threads}"),
+            }
+        }
+    }
+
+    /// The decay regression of `quant::error_feedback`, extended to the
+    /// pooled parallel codec: feeding the same gradient repeatedly, the
+    /// cumulative transmitted mean must converge on the true gradient
+    /// (relative error decaying between checkpoints), which the plain
+    /// biased quantizer cannot do. Exercises the pipeline-side residual
+    /// across many rounds on one persistent pool.
+    #[test]
+    fn pooled_parallel_error_feedback_decays_across_rounds() {
+        let g: Vec<f32> = {
+            let mut rng = Rng::seed_from(21);
+            (0..768).map(|_| rng.gaussian_f32()).collect()
+        };
+        let norm2 = |v: &[f32]| v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        let spec = WireSpec::new("bingrad-b", 256).with_threads(3);
+        let mut gc = GradCodec::new(&spec).unwrap();
+        assert!(gc.is_parallel());
+        let mut ef = gc.error_feedback();
+        let mut rng = Rng::seed_from(22);
+        let mut qg = QuantizedGrad::default();
+        let mut msg = Vec::new();
+        let mut deq = Vec::new();
+        let mut sum = vec![0.0f32; g.len()];
+        let err_at = |sum: &[f32], t: usize| {
+            let diff: Vec<f32> =
+                sum.iter().zip(&g).map(|(s, gi)| s / t as f32 - gi).collect();
+            norm2(&diff) / norm2(&g)
+        };
+        let mut checkpoints = Vec::new();
+        for t in 1..=32usize {
+            gc.encode_ef_into(&mut ef, &g, &mut rng, &mut qg, &mut msg);
+            gc.decode_flat_into(&msg, &mut deq).unwrap();
+            for (s, v) in sum.iter_mut().zip(&deq) {
+                *s += v;
+            }
+            if t == 1 || t == 8 || t == 32 {
+                checkpoints.push(err_at(&sum, t));
+            }
+        }
+        assert!(
+            checkpoints[1] < 0.6 * checkpoints[0],
+            "relative error must decay under pooled EF: {checkpoints:?}"
+        );
+        assert!(
+            checkpoints[2] < 0.6 * checkpoints[1],
+            "…and keep decaying: {checkpoints:?}"
+        );
+    }
+
+    /// One spec, three execution modes (pooled, shared pool, scoped):
+    /// the wire bytes must be bit-identical — the pool is pure execution.
+    #[test]
+    fn grad_codec_pool_modes_bit_identical() {
+        let g: Vec<f32> = {
+            let mut rng = Rng::seed_from(13);
+            (0..3000).map(|_| rng.gaussian_f32()).collect()
+        };
+        let mut qg = QuantizedGrad::default();
+        let mut reference: Option<Vec<Vec<u8>>> = None;
+        let handle = PoolHandle::new(2);
+        for mode in [
+            PoolMode::Pooled,
+            PoolMode::Shared(handle.clone()),
+            PoolMode::Scoped,
+        ] {
+            let spec = WireSpec::new("linear-9", 256).with_threads(4).with_pool_mode(mode);
+            let mut gc = GradCodec::new(&spec).unwrap();
+            let mut msg = Vec::new();
+            // several rounds so arenas are reused in the pooled modes
+            let rounds_bytes: Vec<Vec<u8>> = (0..3u64)
+                .map(|round| {
+                    gc.encode_into(&g, &mut Rng::seed_from(round), &mut qg, &mut msg);
+                    msg.clone()
+                })
+                .collect();
+            match &reference {
+                None => reference = Some(rounds_bytes),
+                Some(want) => assert_eq!(&rounds_bytes, want, "{:?}", spec.pool),
             }
         }
     }

@@ -61,6 +61,14 @@
 //! generic over [`Collective`]/[`WorkerExchange`]; [`build_topology`]
 //! constructs any end set from an [`ExchangeConfig`] and [`run_once`]
 //! drives a single standalone round (benches/tests).
+//!
+//! Execution of the parallel codec shards, the sharded-PS reduce loops
+//! and the [`run_rounds`] worker loops is governed by
+//! [`WireSpec::pool`]/[`PoolMode`]: the default runs everything on one
+//! persistent worker pool (`crate::quant::pool`) so thread spawns and
+//! per-thread solver arenas amortize across rounds; `PoolMode::Scoped`
+//! retains the per-round scoped threads as the measurable baseline.
+//! All modes are bit-identical in wire bytes and decoded means.
 
 pub mod async_ps;
 pub mod collective;
@@ -73,7 +81,7 @@ pub mod shard;
 pub use async_ps::{ShardedPsCollective, ShardedPsWorker};
 pub use collective::{
     build_topology, run_once, run_rounds, Collective, CommStats, ExchangeConfig, GradCodec,
-    Topology, WireSpec, WorkerExchange,
+    PoolMode, Topology, WireSpec, WorkerExchange,
 };
 pub use hier::{HierWorker, HierarchicalCollective};
 pub use link::{EdgeClass, Link, LinkMap};

@@ -176,10 +176,9 @@ impl PsCollective {
                 msg: Vec::new(),
                 qg: QuantizedGrad::default(),
                 dscratch: DecodeScratch::default(),
-                pipeline: match spec.threads {
-                    1 => None,
-                    t => Some(BucketPipeline::new(t)),
-                },
+                // Same construction rule as the worker codecs: pooled by
+                // default (spec.pool), scoped as the retained baseline.
+                pipeline: spec.build_pipeline(),
             },
             ends,
         ))

@@ -243,14 +243,23 @@ pub struct TrainConfig {
     /// Wrap the worker-side quantizer in error feedback
     /// (`error_feedback = true`): quantize `g + m`, keep the residual
     /// `m ← (g + m) − Q(g + m)`. Parameter-server paths (ps /
-    /// sharded-ps) with a quantizing method and the serial codec
-    /// (`threads = 1`) only.
+    /// sharded-ps) with a quantizing method; works with the serial codec
+    /// (residual from the materialized quantized gradient, PR 4
+    /// bit-for-bit) and the parallel codec (pipeline-side residual via
+    /// wire dequantization).
     pub error_feedback: bool,
     /// Codec threads per node (`threads = N`): 1 = serial legacy path,
     /// 0 = auto-detect cores, N ≥ 2 = parallel per-bucket
     /// quantize+encode / decode+reduce pipeline. Wire bytes and training
     /// results are identical for every parallel thread count.
     pub threads: usize,
+    /// Run codec shards, sharded-PS reduce loops and exchange drivers on
+    /// one persistent worker pool shared across the whole run
+    /// (`pool = true`, the default: thread spawns and level-solver
+    /// arenas amortize across rounds). `pool = false` keeps the legacy
+    /// per-round scoped threads — same results bit for bit, retained as
+    /// the perf baseline.
+    pub pool: bool,
     /// Per-edge-class simulated link model (`intra_bandwidth`,
     /// `intra_latency`, `inter_bandwidth`, `inter_latency`).
     pub links: LinkConfig,
@@ -282,6 +291,7 @@ impl Default for TrainConfig {
             staleness: 0,
             error_feedback: false,
             threads: 1,
+            pool: true,
             links: LinkConfig::default(),
         }
     }
@@ -345,6 +355,11 @@ impl TrainConfig {
         if let Some(v) = get("error_feedback") {
             c.error_feedback =
                 v.as_bool().ok_or_else(|| Error::Config("error_feedback".into()))?;
+        }
+        if let Some(v) = get("pool") {
+            c.pool = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("pool must be a bool (true = pooled)".into()))?;
         }
         if let Some(v) = get("topology") {
             c.topology = Topology::parse(
@@ -474,13 +489,8 @@ impl TrainConfig {
                     self.topology
                 )));
             }
-            if self.threads != 1 {
-                return Err(Error::Config(format!(
-                    "error_feedback requires threads = 1 (got {}): the residual \
-                     update needs the serially materialized quantized gradient",
-                    self.threads
-                )));
-            }
+            // threads != 1 composes since the parallel codec grew a
+            // pipeline-side residual (BucketPipeline::encode_ef_into).
         }
         self.links.validate()?;
         Ok(())
@@ -610,6 +620,24 @@ mod tests {
     }
 
     #[test]
+    fn pool_key_parses_and_defaults_pooled() {
+        assert!(TrainConfig::default().pool, "pooled execution is the default");
+        let c = TrainConfig::from_map(
+            &parse("[train]\nworkers = 2\nbatch = 64\npool = false").unwrap(),
+        )
+        .unwrap();
+        assert!(!c.pool);
+        let c = TrainConfig::from_map(
+            &parse("[train]\nworkers = 2\nbatch = 64\npool = true\nthreads = 4").unwrap(),
+        )
+        .unwrap();
+        assert!(c.pool);
+        // wrong value types are errors, not silent defaults
+        assert!(TrainConfig::from_map(&parse("[train]\npool = 1").unwrap()).is_err());
+        assert!(TrainConfig::from_map(&parse("[train]\npool = \"yes\"").unwrap()).is_err());
+    }
+
+    #[test]
     fn sharded_ps_keys_parse_and_validate() {
         let c = TrainConfig::from_map(
             &parse(
@@ -664,11 +692,15 @@ mod tests {
             "[train]\nworkers = 2\nbatch = 64\nmethod = \"terngrad\"\n\
              topology = \"ring\"\nerror_feedback = true"
         ));
-        // the parallel codec never materializes the quantized gradient
-        assert!(rejects(
-            "[train]\nworkers = 2\nbatch = 64\nmethod = \"terngrad\"\n\
-             threads = 4\nerror_feedback = true"
-        ));
+        // the parallel codec composes with EF (pipeline-side residual)
+        let ok = TrainConfig::from_map(
+            &parse(
+                "[train]\nworkers = 2\nbatch = 64\nmethod = \"terngrad\"\n\
+                 threads = 4\nerror_feedback = true",
+            )
+            .unwrap(),
+        );
+        assert!(ok.is_ok(), "EF + parallel codec is now supported");
         // sharded-ps accepts EF
         let ok = TrainConfig::from_map(
             &parse(

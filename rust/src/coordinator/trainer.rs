@@ -19,20 +19,26 @@
 //! step `t` — replicas still stay bit-identical, just `K` rounds behind
 //! the gradients. Wire bytes and simulated comm time come from the
 //! collective's exact accounting. Workers can opt into error feedback
-//! (`TrainConfig::error_feedback`, PS paths + serial codec): quantize
-//! `g + m` and keep the residual `m`, which rescues the biased schemes
-//! (BinGrad-b, signSGD) end-to-end.
+//! (`TrainConfig::error_feedback`, PS paths, serial or parallel codec):
+//! quantize `g + m` and keep the residual `m`, which rescues the biased
+//! schemes (BinGrad-b, signSGD) end-to-end.
 //! The per-round hot loop reuses all of its scratch (quantization
 //! buckets, wire messages, decode buffers, and the sort-based level
 //! solvers' hoisted sort/prefix scratch): the encode/wire/decode/reduce
 //! path performs no per-bucket heap allocation once buffers reach steady
-//! state.
+//! state. With `TrainConfig::pool` (the default) all codec shards and
+//! sharded-PS reduce loops additionally run on one persistent worker
+//! pool (`quant::pool`) shared across the run, so thread spawns and the
+//! per-thread solver arenas amortize across *rounds*, not just buckets.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 
 use crate::codec::{self, Packing};
 use crate::comm::link::{Link, LinkMap};
-use crate::comm::{build_topology, CommStats, ExchangeConfig, GradCodec, Topology, WireSpec};
+use crate::comm::{
+    build_topology, CommStats, ExchangeConfig, GradCodec, PoolMode, Topology, WireSpec,
+};
+use crate::quant::pool::PoolHandle;
 use crate::config::TrainConfig;
 use crate::coordinator::optimizer::SgdMomentum;
 use crate::coordinator::schedule::LrSchedule;
@@ -113,6 +119,17 @@ impl<'a> Trainer<'a> {
             cfg.lr_decay_steps.clone(),
             cfg.lr_decay,
         );
+        // One persistent worker pool for the whole run (cfg.pool, the
+        // default): every worker's codec, the sharded-PS reduce loops and
+        // the parallel decode shards share its threads, so spawn costs
+        // and the per-thread level-solver arenas amortize across all
+        // steps. `pool = false` keeps the legacy per-round scoped
+        // threads (bit-identical results either way).
+        let pool_mode = if cfg.pool {
+            PoolMode::Shared(PoolHandle::new(cfg.threads))
+        } else {
+            PoolMode::Scoped
+        };
         let spec = WireSpec {
             method: cfg.method.clone(),
             bucket_size: cfg.bucket_size,
@@ -120,6 +137,7 @@ impl<'a> Trainer<'a> {
             packing: Packing::BaseS,
             seed: cfg.seed,
             threads: cfg.threads,
+            pool: pool_mode,
         };
         let xcfg = ExchangeConfig {
             topology: cfg.topology,
@@ -185,9 +203,10 @@ impl<'a> Trainer<'a> {
                     let mut msg: Vec<u8> = Vec::new();
                     let mut mean: Vec<f32> = Vec::new();
                     let mut deq: Vec<f32> = Vec::new();
-                    // Opt-in error feedback (validated: PS paths, serial
-                    // codec, quantizing method): quantize g + m instead
-                    // of g, keep the residual m ← (g + m) − Q(g + m).
+                    // Opt-in error feedback (validated: PS paths with a
+                    // quantizing method; serial or parallel codec):
+                    // quantize g + m instead of g, keep the residual
+                    // m ← (g + m) − Q(g + m).
                     let mut ef = cfg.error_feedback.then(|| gc.error_feedback());
                     let per_worker_batch = cfg.batch / cfg.workers;
                     for t in 0..cfg.steps {
@@ -206,9 +225,17 @@ impl<'a> Trainer<'a> {
                             // The pipeline never materializes `qg`;
                             // measure via the wire bytes instead
                             // (decode(encode(g)) == dequantize exactly).
-                            gc.decode_flat_into(&msg, &mut deq)
-                                .expect("own encoding always decodes");
-                            let e = quant::error::measure_flat(&grad, &deq);
+                            // With EF the pipeline already decoded its
+                            // own message for the residual — reuse that
+                            // buffer instead of decoding twice.
+                            let e = if ef.is_some() {
+                                let d = gc.ef_dequant().expect("parallel codec has a pipeline");
+                                quant::error::measure_flat(&grad, d)
+                            } else {
+                                gc.decode_flat_into(&msg, &mut deq)
+                                    .expect("own encoding always decodes");
+                                quant::error::measure_flat(&grad, &deq)
+                            };
                             (e.rel_mse, e.cosine)
                         } else {
                             let e = quant::error::measure_into(&grad, &qg, &mut deq);
@@ -409,6 +436,7 @@ mod tests {
             staleness: 0,
             error_feedback: false,
             threads: 1,
+            pool: true,
             links: LinkConfig::default(),
         }
     }
@@ -724,9 +752,58 @@ mod tests {
         let mut cfg = tiny_cfg("fp", 2);
         cfg.error_feedback = true;
         assert!(Trainer::new(cfg, &ds).is_err());
-        let mut cfg = tiny_cfg("terngrad", 2);
-        cfg.error_feedback = true;
-        cfg.threads = 4;
-        assert!(Trainer::new(cfg, &ds).is_err());
+    }
+
+    /// Error feedback through the parallel codec (the combination PR 4
+    /// rejected): learns, carries the residual (trajectory differs from
+    /// the memoryless parallel run), and is thread-count invariant.
+    #[test]
+    fn error_feedback_parallel_codec_learns_and_is_thread_invariant() {
+        let ds = tiny_ds();
+        let run_ef_t = |threads: usize| {
+            let mut cfg = tiny_cfg("bingrad-b", 2);
+            cfg.error_feedback = true;
+            cfg.threads = threads;
+            let factory = native_backend_factory(&cfg.model).unwrap();
+            Trainer::new(cfg, &ds).unwrap().run(factory).unwrap()
+        };
+        let a = run_ef_t(2);
+        let b = run_ef_t(4);
+        assert_eq!(a.params, b.params, "EF training must be thread-count invariant");
+        assert!(a.summary.test_top1 > 0.5, "EF top1={}", a.summary.test_top1);
+        // the residual must matter: plain parallel bingrad-b diverges
+        let mut cfg = tiny_cfg("bingrad-b", 2);
+        cfg.threads = 2;
+        let factory = native_backend_factory(&cfg.model).unwrap();
+        let plain = Trainer::new(cfg, &ds).unwrap().run(factory).unwrap();
+        assert_ne!(a.params, plain.params, "EF must alter the transmitted signal");
+    }
+
+    /// The persistent pool must be invisible in the results: pooled and
+    /// scoped execution train bit-identically, serial and parallel, on
+    /// the flat and sharded PS topologies.
+    #[test]
+    fn pooled_and_scoped_training_bit_identical() {
+        let ds = tiny_ds();
+        let run_mode = |pool: bool, threads: usize, shards: usize| {
+            let mut cfg = tiny_cfg("orq-3", 2);
+            cfg.pool = pool;
+            cfg.threads = threads;
+            if shards > 1 {
+                cfg.topology = Topology::ShardedPs;
+                cfg.shards = shards;
+            }
+            let factory = native_backend_factory(&cfg.model).unwrap();
+            Trainer::new(cfg, &ds).unwrap().run(factory).unwrap()
+        };
+        for (threads, shards) in [(1usize, 1usize), (2, 1), (2, 2)] {
+            let pooled = run_mode(true, threads, shards);
+            let scoped = run_mode(false, threads, shards);
+            assert_eq!(
+                pooled.params, scoped.params,
+                "threads={threads} shards={shards}: pool must not change training"
+            );
+            assert_eq!(pooled.summary.total_wire_bytes, scoped.summary.total_wire_bytes);
+        }
     }
 }

@@ -69,8 +69,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.check_known(&[
         "config", "model", "method", "workers", "steps", "batch", "dataset", "bucket",
         "clip", "backend", "artifacts", "out", "seed", "lr", "eval-every", "topology",
-        "groups", "shards", "staleness", "error-feedback", "threads", "intra-bandwidth",
-        "intra-latency", "inter-bandwidth", "inter-latency",
+        "groups", "shards", "staleness", "error-feedback", "threads", "pool",
+        "intra-bandwidth", "intra-latency", "inter-bandwidth", "inter-latency",
     ])?;
     let mut cfg = match args.get("config") {
         Some(path) => TrainConfig::load(path)?,
@@ -131,6 +131,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(t) = args.get_parse::<usize>("threads")? {
         cfg.threads = t;
+    }
+    if let Some(p) = args.get_parse::<bool>("pool")? {
+        cfg.pool = p;
     }
     if let Some(b) = args.get_parse::<f64>("intra-bandwidth")? {
         cfg.links.intra_bandwidth = b;

@@ -43,6 +43,31 @@ impl ErrorFeedback {
         qg
     }
 
+    /// Fill and return the compensated signal `g + m`, lazily sizing the
+    /// residual memory to `g`. The split entry point of the parallel
+    /// pipeline's EF path ([`crate::quant::parallel::BucketPipeline::
+    /// encode_ef_into`]): compensate → quantize+encode (sharded) →
+    /// [`Self::update_residual`] with the dequantized wire values.
+    pub(crate) fn compensate(&mut self, g: &[f32]) -> &[f32] {
+        if self.memory.len() != g.len() {
+            self.memory = vec![0.0; g.len()];
+        }
+        self.compensated.clear();
+        self.compensated.extend(g.iter().zip(&self.memory).map(|(a, b)| a + b));
+        &self.compensated
+    }
+
+    /// Absorb the residual after the caller quantized the compensated
+    /// signal from [`Self::compensate`]: `m ← (g + m) − deq`, where
+    /// `deq` is the dequantized transmitted signal (for wire codecs,
+    /// decoding one's own message — exact dequantization).
+    pub(crate) fn update_residual(&mut self, deq: &[f32]) {
+        debug_assert_eq!(deq.len(), self.compensated.len());
+        for ((m, c), d) in self.memory.iter_mut().zip(&self.compensated).zip(deq) {
+            *m = c - d;
+        }
+    }
+
     /// Like [`Self::quantize`] but into a reused [`QuantizedGrad`] — the
     /// trainer's per-round hot path (steady-state rounds allocate
     /// nothing beyond the lazily-sized residual memory).
@@ -53,11 +78,7 @@ impl ErrorFeedback {
         rng: &mut Rng,
         out: &mut QuantizedGrad,
     ) {
-        if self.memory.len() != g.len() {
-            self.memory = vec![0.0; g.len()];
-        }
-        self.compensated.clear();
-        self.compensated.extend(g.iter().zip(&self.memory).map(|(a, b)| a + b));
+        self.compensate(g);
         self.bucketq.quantize_into(&self.compensated, q, rng, out);
         // m ← (g + m) − Q(g + m), computed bucket-wise without allocating
         // the full dequantized vector.

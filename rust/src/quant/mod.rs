@@ -42,6 +42,7 @@ pub mod fp;
 pub mod linear;
 pub mod orq;
 pub mod parallel;
+pub mod pool;
 pub mod qsgd;
 pub(crate) mod scratch;
 pub mod signsgd;

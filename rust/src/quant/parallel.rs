@@ -1,5 +1,5 @@
 //! Parallel per-bucket pipeline: quantize→encode and decode→reduce
-//! sharded across scoped threads.
+//! sharded across worker threads.
 //!
 //! Buckets are independent by construction (paper §5: each bucket solves
 //! its own levels and rounds its own elements), so the two hot loops of
@@ -7,7 +7,7 @@
 //!
 //! * **quantize + encode** — [`BucketPipeline::encode_into`] writes the
 //!   wire header, then splits the bucket range into contiguous shards;
-//!   each shard thread quantizes its buckets (per-bucket RNG streams,
+//!   each shard task quantizes its buckets (per-bucket RNG streams,
 //!   [`BucketQuantizer::quantize_bucket_stream`]) and serializes them
 //!   into its own segment buffer; segments concatenate in bucket order,
 //!   so the wire bytes are identical for every thread count (and to the
@@ -19,17 +19,26 @@
 //!   The reduce variant preserves the per-element upload accumulation
 //!   order, so the f64 sums are bit-identical to the serial loop.
 //!
-//! Threading is `std::thread::scope` (dependency-free, the `trainer.rs`
-//! idiom). All shard state — segment buffers, one reusable
-//! [`QuantizedBucket`], clip scratch, decode scratch — lives in arenas
-//! reused across rounds: the steady-state parallel path performs no
-//! per-bucket allocation and takes no locks (the level solvers use
-//! per-thread arenas, `quant::scratch`). Scoped threads are spawned per
-//! call, so the *solver* arenas amortize across a shard's buckets within
-//! one round rather than across rounds, and each call pays k thread
-//! spawns — worth it for multi-bucket gradients, not for tiny ones (the
-//! shard count is capped by the bucket count; a persistent worker pool
-//! is the ROADMAP follow-up that would remove both costs).
+//! Execution is **pooled by default**: shard tasks run on a persistent
+//! [`WorkerPool`](super::pool::WorkerPool) (owned by this pipeline, or
+//! shared via [`BucketPipeline::with_pool`]), so thread spawns and the
+//! per-thread level-solver arenas (`quant::scratch`) are paid once per
+//! run instead of once per round. [`BucketPipeline::scoped`] retains the
+//! PR 3 `std::thread::scope` execution as the measurable baseline
+//! (perfbench reports pooled vs scoped round times side by side). Both
+//! modes produce bit-identical output — shard results depend only on
+//! `(bytes, round_key, bucket index)`, never on which thread ran them —
+//! and all shard state (segment buffers, one reusable
+//! [`QuantizedBucket`], clip scratch, decode scratch) lives in arenas
+//! owned by the pipeline and reused across rounds: the steady-state
+//! parallel path performs no per-bucket allocation and takes no locks.
+//!
+//! Error feedback composes with the pipeline through
+//! [`BucketPipeline::encode_ef_into`]: the compensated signal `g + m` is
+//! quantized in parallel, and the residual `m ← (g + m) − Q(g + m)` is
+//! recovered through the pipeline-side dequantization buffer (decoding
+//! one's own message is exact dequantization), so `--error-feedback`
+//! no longer requires the serial codec.
 
 use std::ops::Range;
 use std::thread;
@@ -37,12 +46,23 @@ use std::thread;
 use crate::codec::{self, BucketEncoder, DecodeScratch, Packing};
 use crate::error::{Error, Result};
 use crate::quant::bucket::BucketQuantizer;
+use crate::quant::error_feedback::ErrorFeedback;
+use crate::quant::pool::PoolHandle;
 use crate::quant::{QuantizedBucket, Quantizer};
 
-/// Reusable parallel codec state: a thread count plus per-shard arenas.
+/// Reusable parallel codec state: a thread count, per-shard arenas, and
+/// the worker pool (or the legacy scoped-thread mode) that executes the
+/// shard tasks.
 pub struct BucketPipeline {
     threads: usize,
     shards: Vec<Shard>,
+    /// `Some` = persistent pool execution (default); `None` = legacy
+    /// per-round `std::thread::scope` (the retained perf baseline).
+    pool: Option<PoolHandle>,
+    /// Pipeline-side dequantization buffer for the error-feedback
+    /// residual update (parallel EF never materializes a
+    /// [`QuantizedGrad`](crate::quant::bucket::QuantizedGrad)).
+    ef_deq: Vec<f32>,
 }
 
 #[derive(Default)]
@@ -55,6 +75,8 @@ struct Shard {
     clip: Vec<f32>,
     flat: Vec<f32>,
     scratch: DecodeScratch,
+    /// Per-shard task outcome of the last pooled decode/reduce run.
+    err: Option<Error>,
 }
 
 /// Bucket range of shard `i` of `k` over `n` buckets (contiguous,
@@ -63,22 +85,79 @@ fn shard_range(n: usize, k: usize, i: usize) -> Range<usize> {
     (n * i / k)..(n * (i + 1) / k)
 }
 
+/// Element spans `[e0, e1)` of each of `k` decode/reduce shards: the
+/// bucket grid of [`shard_range`] scaled to elements and clipped to
+/// `total`. The ONE copy of the boundary math all four decode/reduce
+/// loops (pooled and scoped) share — pooled and scoped execution must
+/// shard identically or the bit-identity contract breaks.
+fn shard_spans(
+    nb: usize,
+    k: usize,
+    bucket: usize,
+    total: usize,
+) -> impl Iterator<Item = Range<usize>> {
+    let mut e0 = 0usize;
+    (0..k).map(move |i| {
+        let e1 = (shard_range(nb, k, i).end * bucket).min(total);
+        let span = e0..e1;
+        e0 = e1;
+        span
+    })
+}
+
+/// Resolve a configured thread count (0 = auto) to the shard target.
+fn resolve_threads(threads: usize) -> usize {
+    let t = if threads == 0 { crate::quant::pool::auto_threads() } else { threads };
+    // Beyond core counts extra shards only cost dispatches, and the cap
+    // bounds thread explosion if an absurd count slips past validation.
+    t.min(256)
+}
+
 impl BucketPipeline {
+    /// Pooled pipeline with its own persistent worker pool.
     /// `threads == 0` means auto (`std::thread::available_parallelism`).
-    /// Counts are capped at 256 — beyond core counts extra shards only
-    /// cost spawns, and the cap bounds thread explosion if an absurd
-    /// count slips past config validation.
     pub fn new(threads: usize) -> BucketPipeline {
-        let t = if threads == 0 {
-            thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
-            threads
-        };
-        BucketPipeline { threads: t.min(256), shards: Vec::new() }
+        let t = resolve_threads(threads);
+        BucketPipeline {
+            threads: t,
+            shards: Vec::new(),
+            pool: Some(PoolHandle::new(t)),
+            ef_deq: Vec::new(),
+        }
+    }
+
+    /// Pooled pipeline on a caller-shared pool (one pool per run,
+    /// threaded through `WireSpec` — codecs, shard servers and drivers
+    /// then reuse the same threads).
+    pub fn with_pool(threads: usize, pool: PoolHandle) -> BucketPipeline {
+        BucketPipeline {
+            threads: resolve_threads(threads),
+            shards: Vec::new(),
+            pool: Some(pool),
+            ef_deq: Vec::new(),
+        }
+    }
+
+    /// Legacy scoped-thread pipeline: spawns `k` threads per call, as in
+    /// PR 3. Retained as the same-machine baseline perfbench measures
+    /// the pool against; output is bit-identical to the pooled modes.
+    pub fn scoped(threads: usize) -> BucketPipeline {
+        BucketPipeline {
+            threads: resolve_threads(threads),
+            shards: Vec::new(),
+            pool: None,
+            ef_deq: Vec::new(),
+        }
     }
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Whether shard tasks run on a persistent pool (vs per-round scoped
+    /// threads).
+    pub fn is_pooled(&self) -> bool {
+        self.pool.is_some()
     }
 
     fn ensure_shards(&mut self, k: usize) {
@@ -91,7 +170,7 @@ impl BucketPipeline {
     /// `round_key`) and encode it as a wire message into `out` (cleared
     /// first). Byte-identical to serial
     /// [`BucketQuantizer::quantize_streams_into`] + [`codec::encode`]
-    /// for every thread count.
+    /// for every thread count and both execution modes.
     #[allow(clippy::too_many_arguments)]
     pub fn encode_into(
         &mut self,
@@ -121,15 +200,64 @@ impl BucketPipeline {
             return;
         }
         let shards = &mut self.shards[..k];
-        thread::scope(|scope| {
-            for (i, shard) in shards.iter_mut().enumerate() {
-                let range = shard_range(nb, k, i);
-                scope.spawn(move || encode_shard(bq, q, g, round_key, range, enc, shard));
-            }
-        });
+        match &self.pool {
+            Some(pool) => pool
+                .scope(|sc| {
+                    for (i, shard) in shards.iter_mut().enumerate() {
+                        let range = shard_range(nb, k, i);
+                        sc.spawn(move || encode_shard(bq, q, g, round_key, range, enc, shard));
+                    }
+                })
+                // A panicking quantizer is a bug; scoped mode would
+                // propagate the panic from the join, so mirror it.
+                .unwrap_or_else(|e| panic!("parallel encode failed: {e}")),
+            None => thread::scope(|scope| {
+                for (i, shard) in shards.iter_mut().enumerate() {
+                    let range = shard_range(nb, k, i);
+                    scope.spawn(move || encode_shard(bq, q, g, round_key, range, enc, shard));
+                }
+            }),
+        }
         for shard in &self.shards[..k] {
             out.extend_from_slice(&shard.seg);
         }
+    }
+
+    /// The error-feedback twin of [`Self::encode_into`]: quantize and
+    /// encode the compensated signal `g + m` (sharded exactly like the
+    /// plain path, so the wire bytes stay thread-count invariant), then
+    /// recover the residual `m ← (g + m) − Q(g + m)` by decoding the
+    /// message just written — dequantization through the wire, exact by
+    /// construction. `ef` carries the residual memory across rounds.
+    #[allow(clippy::too_many_arguments)]
+    pub fn encode_ef_into(
+        &mut self,
+        bq: &BucketQuantizer,
+        q: &dyn Quantizer,
+        ef: &mut ErrorFeedback,
+        g: &[f32],
+        round_key: u64,
+        scheme: &str,
+        packing: Packing,
+        out: &mut Vec<u8>,
+    ) {
+        {
+            let comp = ef.compensate(g);
+            self.encode_into(bq, q, comp, round_key, scheme, packing, out);
+        }
+        let mut deq = std::mem::take(&mut self.ef_deq);
+        self.decode_flat_into(out, &mut deq).expect("own encoding always decodes");
+        ef.update_residual(&deq);
+        self.ef_deq = deq;
+    }
+
+    /// The dequantized transmitted signal of the last
+    /// [`Self::encode_ef_into`] call — the buffer the residual update
+    /// decoded. Exposed so callers measuring quantization error (the
+    /// trainer's per-step rel-MSE/cosine) can reuse it instead of
+    /// decoding the same message a second time.
+    pub fn ef_dequant(&self) -> &[f32] {
+        &self.ef_deq
     }
 
     /// Decode a wire message into a flat f32 buffer (cleared and
@@ -146,30 +274,52 @@ impl BucketPipeline {
             return codec::decode_slice_into(bytes, 0, total, out, &mut self.shards[0].scratch);
         }
         let shards = &mut self.shards[..k];
-        let mut res: Result<()> = Ok(());
-        thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(k);
-            let mut rest: &mut [f32] = out;
-            let mut e0 = 0usize;
-            for (i, shard) in shards.iter_mut().enumerate() {
-                let e1 = (shard_range(nb, k, i).end * bucket).min(total);
-                let (mine, tail) = std::mem::take(&mut rest).split_at_mut(e1 - e0);
-                rest = tail;
-                let sc = &mut shard.scratch;
-                handles
-                    .push(scope.spawn(move || codec::decode_slice_into(bytes, e0, e1, mine, sc)));
-                e0 = e1;
+        match &self.pool {
+            Some(pool) => {
+                let pooled = pool.scope(|sc| {
+                    let mut rest: &mut [f32] = out;
+                    for (shard, span) in shards.iter_mut().zip(shard_spans(nb, k, bucket, total))
+                    {
+                        let (mine, tail) = std::mem::take(&mut rest).split_at_mut(span.len());
+                        rest = tail;
+                        let (e0, e1) = (span.start, span.end);
+                        sc.spawn(move || {
+                            let r =
+                                codec::decode_slice_into(bytes, e0, e1, mine, &mut shard.scratch);
+                            shard.err = r.err();
+                        });
+                    }
+                });
+                pooled.map_err(|e| Error::Comm(format!("decode shard died: {e}")))?;
+                self.first_shard_err(k)
             }
-            for h in handles {
-                let r = h
-                    .join()
-                    .unwrap_or_else(|_| Err(Error::Comm("decode shard panicked".into())));
-                if res.is_ok() {
-                    res = r;
-                }
+            None => {
+                let mut res: Result<()> = Ok(());
+                thread::scope(|scope| {
+                    let mut handles = Vec::with_capacity(k);
+                    let mut rest: &mut [f32] = out;
+                    for (shard, span) in shards.iter_mut().zip(shard_spans(nb, k, bucket, total))
+                    {
+                        let (mine, tail) = std::mem::take(&mut rest).split_at_mut(span.len());
+                        rest = tail;
+                        let (e0, e1) = (span.start, span.end);
+                        let sc = &mut shard.scratch;
+                        handles.push(
+                            scope.spawn(move || codec::decode_slice_into(bytes, e0, e1, mine, sc)),
+                        );
+                    }
+                    for h in handles {
+                        let r = h
+                            .join()
+                            .unwrap_or_else(|_| Err(Error::Comm("decode shard panicked".into())));
+                        if res.is_ok() {
+                            res = r;
+                        }
+                    }
+                });
+                res
             }
-        });
-        res
+        }
     }
 
     /// Decode every upload and accumulate element-wise f64 sums into
@@ -201,27 +351,60 @@ impl BucketPipeline {
             return reduce_shard(uploads, 0, total, acc, &mut self.shards[0]);
         }
         let shards = &mut self.shards[..k];
+        match &self.pool {
+            Some(pool) => {
+                let pooled = pool.scope(|sc| {
+                    let mut rest: &mut [f64] = acc;
+                    for (shard, span) in shards.iter_mut().zip(shard_spans(nb, k, bucket, total))
+                    {
+                        let (mine, tail) = std::mem::take(&mut rest).split_at_mut(span.len());
+                        rest = tail;
+                        let (e0, e1) = (span.start, span.end);
+                        sc.spawn(move || {
+                            let r = reduce_shard(uploads, e0, e1, mine, &mut *shard);
+                            shard.err = r.err();
+                        });
+                    }
+                });
+                pooled.map_err(|e| Error::Comm(format!("reduce shard died: {e}")))?;
+                self.first_shard_err(k)
+            }
+            None => {
+                let mut res: Result<()> = Ok(());
+                thread::scope(|scope| {
+                    let mut handles = Vec::with_capacity(k);
+                    let mut rest: &mut [f64] = acc;
+                    for (shard, span) in shards.iter_mut().zip(shard_spans(nb, k, bucket, total))
+                    {
+                        let (mine, tail) = std::mem::take(&mut rest).split_at_mut(span.len());
+                        rest = tail;
+                        let (e0, e1) = (span.start, span.end);
+                        handles
+                            .push(scope.spawn(move || reduce_shard(uploads, e0, e1, mine, shard)));
+                    }
+                    for h in handles {
+                        let r = h
+                            .join()
+                            .unwrap_or_else(|_| Err(Error::Comm("reduce shard panicked".into())));
+                        if res.is_ok() {
+                            res = r;
+                        }
+                    }
+                });
+                res
+            }
+        }
+    }
+
+    /// First (in shard order) error reported by the last pooled run —
+    /// the same priority the scoped join loop uses.
+    fn first_shard_err(&mut self, k: usize) -> Result<()> {
         let mut res: Result<()> = Ok(());
-        thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(k);
-            let mut rest: &mut [f64] = acc;
-            let mut e0 = 0usize;
-            for (i, shard) in shards.iter_mut().enumerate() {
-                let e1 = (shard_range(nb, k, i).end * bucket).min(total);
-                let (mine, tail) = std::mem::take(&mut rest).split_at_mut(e1 - e0);
-                rest = tail;
-                handles.push(scope.spawn(move || reduce_shard(uploads, e0, e1, mine, shard)));
-                e0 = e1;
+        for shard in &mut self.shards[..k] {
+            if let (Some(e), true) = (shard.err.take(), res.is_ok()) {
+                res = Err(e);
             }
-            for h in handles {
-                let r = h
-                    .join()
-                    .unwrap_or_else(|_| Err(Error::Comm("reduce shard panicked".into())));
-                if res.is_ok() {
-                    res = r;
-                }
-            }
-        });
+        }
         res
     }
 }
@@ -280,11 +463,13 @@ mod tests {
         (0..n).map(|_| rng.gaussian_f32()).collect()
     }
 
-    /// Wire bytes must be identical for every thread count and equal to
+    /// Wire bytes must be identical for every thread count and execution
+    /// mode (pooled own-pool, pooled shared-pool, scoped) and equal to
     /// the serial per-bucket-stream reference, across schemes, packings,
     /// ragged tails, and clipping.
     #[test]
     fn parallel_encode_bit_identical_to_serial_streams() {
+        let shared = PoolHandle::new(3);
         for (n, d) in [(1500usize, 256usize), (1000, 128), (255, 64), (64, 64), (10, 256)] {
             let g = sample(n, n as u64);
             for method in ["terngrad", "orq-5", "linear-9", "bingrad-b"] {
@@ -295,17 +480,67 @@ mod tests {
                         bq.quantize_streams_into(&g, q.as_ref(), 7, &mut qg);
                         let want = codec::encode(&qg, method, packing);
                         for threads in [1usize, 2, 3, 8] {
-                            let mut pipe = BucketPipeline::new(threads);
-                            let mut got = Vec::new();
-                            pipe.encode_into(&bq, q.as_ref(), &g, 7, method, packing, &mut got);
-                            assert_eq!(
-                                got, want,
-                                "{method} {packing:?} n={n} d={d} threads={threads}"
-                            );
+                            for pipe in [
+                                BucketPipeline::new(threads),
+                                BucketPipeline::with_pool(threads, shared.clone()),
+                                BucketPipeline::scoped(threads),
+                            ] {
+                                let mut pipe = pipe;
+                                let mut got = Vec::new();
+                                pipe.encode_into(
+                                    &bq,
+                                    q.as_ref(),
+                                    &g,
+                                    7,
+                                    method,
+                                    packing,
+                                    &mut got,
+                                );
+                                assert_eq!(
+                                    got, want,
+                                    "{method} {packing:?} n={n} d={d} threads={threads} \
+                                     pooled={}",
+                                    pipe.is_pooled()
+                                );
+                            }
                         }
                     }
                 }
             }
+        }
+    }
+
+    /// The pool-reuse contract of the tentpole: one pipeline driven for
+    /// several rounds (arenas and pool threads reused throughout) must
+    /// emit bit-identical bytes to a fresh pipeline per round, for every
+    /// scheme family — arena history is invisible in the output.
+    #[test]
+    fn reused_arenas_match_fresh_pipelines_across_rounds() {
+        let g = sample(2200, 5);
+        let bq = BucketQuantizer::new(256);
+        for method in ["terngrad", "qsgd-5", "orq-5", "linear-9", "bingrad-b", "signsgd"] {
+            let q = from_name(method).unwrap();
+            let mut reused = BucketPipeline::new(3);
+            let spawned_after_round1 = {
+                let mut out = Vec::new();
+                reused.encode_into(&bq, q.as_ref(), &g, 0, method, Packing::BaseS, &mut out);
+                // threads_spawned only counts this pipeline's own pool
+                reused.pool.as_ref().unwrap().threads_spawned()
+            };
+            for round in 0..4u64 {
+                let mut got = Vec::new();
+                reused.encode_into(&bq, q.as_ref(), &g, round, method, Packing::BaseS, &mut got);
+                let mut fresh = BucketPipeline::new(3);
+                let mut want = Vec::new();
+                fresh.encode_into(&bq, q.as_ref(), &g, round, method, Packing::BaseS, &mut want);
+                assert_eq!(got, want, "{method} round {round}");
+            }
+            // steady state: no new threads after round 1's peak
+            assert_eq!(
+                reused.pool.as_ref().unwrap().threads_spawned(),
+                spawned_after_round1,
+                "{method}: pool must reuse its workers across rounds"
+            );
         }
     }
 
@@ -321,10 +556,11 @@ mod tests {
             let mut want = Vec::new();
             codec::decode_flat_into(&bytes, &mut want, &mut DecodeScratch::default()).unwrap();
             for threads in [1usize, 2, 5, 16] {
-                let mut pipe = BucketPipeline::new(threads);
-                let mut got = Vec::new();
-                pipe.decode_flat_into(&bytes, &mut got).unwrap();
-                assert_eq!(got, want, "{packing:?} threads={threads}");
+                for mut pipe in [BucketPipeline::new(threads), BucketPipeline::scoped(threads)] {
+                    let mut got = Vec::new();
+                    pipe.decode_flat_into(&bytes, &mut got).unwrap();
+                    assert_eq!(got, want, "{packing:?} threads={threads}");
+                }
             }
         }
         // FP framing takes the single-shard path and round-trips exactly
@@ -336,7 +572,9 @@ mod tests {
     }
 
     /// Parallel decode+reduce must produce bit-identical f64 sums to the
-    /// serial decode-then-add loop (same per-element accumulation order).
+    /// serial decode-then-add loop (same per-element accumulation order),
+    /// in both execution modes, including across repeated rounds on one
+    /// pipeline.
     #[test]
     fn parallel_reduce_bit_identical_to_serial() {
         let bq = BucketQuantizer::new(200);
@@ -360,10 +598,13 @@ mod tests {
             }
         }
         for threads in [1usize, 2, 3, 8] {
-            let mut pipe = BucketPipeline::new(threads);
-            let mut acc = Vec::new();
-            pipe.decode_reduce_into(&uploads, &mut acc).unwrap();
-            assert_eq!(acc, want, "threads={threads}");
+            for mut pipe in [BucketPipeline::new(threads), BucketPipeline::scoped(threads)] {
+                let mut acc = Vec::new();
+                for round in 0..3 {
+                    pipe.decode_reduce_into(&uploads, &mut acc).unwrap();
+                    assert_eq!(acc, want, "threads={threads} round={round}");
+                }
+            }
         }
     }
 
@@ -377,25 +618,80 @@ mod tests {
             bq.quantize_streams_into(&g, q.as_ref(), key, &mut qg);
             codec::encode(&qg, "terngrad", Packing::BaseS)
         };
-        let mut pipe = BucketPipeline::new(4);
-        let mut acc = Vec::new();
-        let mismatched = vec![enc(128, 1), enc(256, 2)];
-        assert!(pipe.decode_reduce_into(&mismatched, &mut acc).is_err());
-        let mut corrupt = enc(128, 3);
-        corrupt.truncate(corrupt.len() - 3);
-        assert!(pipe.decode_reduce_into(&[corrupt], &mut acc).is_err());
-        let mut out = Vec::new();
-        let mut short = enc(128, 4);
-        short.truncate(10);
-        assert!(pipe.decode_flat_into(&short, &mut out).is_err());
-        // empty upload set reduces to an empty accumulator
-        pipe.decode_reduce_into(&[], &mut acc).unwrap();
-        assert!(acc.is_empty());
+        for mut pipe in [BucketPipeline::new(4), BucketPipeline::scoped(4)] {
+            let mut acc = Vec::new();
+            let mismatched = vec![enc(128, 1), enc(256, 2)];
+            assert!(pipe.decode_reduce_into(&mismatched, &mut acc).is_err());
+            let mut corrupt = enc(128, 3);
+            corrupt.truncate(corrupt.len() - 3);
+            assert!(pipe.decode_reduce_into(&[corrupt], &mut acc).is_err());
+            let mut out = Vec::new();
+            let mut short = enc(128, 4);
+            short.truncate(10);
+            assert!(pipe.decode_flat_into(&short, &mut out).is_err());
+            // empty upload set reduces to an empty accumulator
+            pipe.decode_reduce_into(&[], &mut acc).unwrap();
+            assert!(acc.is_empty());
+            // after errors, the same pipeline still works (pool survives)
+            let mut round = Vec::new();
+            pipe.decode_flat_into(&enc(128, 5), &mut round).unwrap();
+            assert_eq!(round.len(), 128);
+        }
     }
 
+    /// Pipeline-side error feedback: byte-identical to compensating by
+    /// hand and feeding the plain pipeline, residual tracked exactly,
+    /// and invariant across thread counts and execution modes.
     #[test]
-    fn auto_thread_count_is_positive() {
-        assert!(BucketPipeline::new(0).threads() >= 1);
+    fn pipeline_error_feedback_matches_manual_compensation() {
+        let g = sample(1600, 9);
+        let bq = BucketQuantizer::new(256);
+        let q = from_name("bingrad-b").unwrap();
+        // reference: EF round 1 compensates with m = 0, so the bytes are
+        // the plain pipeline's bytes for g
+        let mut reference: Option<(Vec<u8>, Vec<u8>)> = None;
+        for threads in [2usize, 3, 8] {
+            for pooled in [true, false] {
+                let mut pipe = if pooled {
+                    BucketPipeline::new(threads)
+                } else {
+                    BucketPipeline::scoped(threads)
+                };
+                let mut ef = ErrorFeedback::new(bq.clone());
+                let mut r1 = Vec::new();
+                let ps = Packing::BaseS;
+                pipe.encode_ef_into(&bq, q.as_ref(), &mut ef, &g, 1, "bingrad-b", ps, &mut r1);
+                let mut plain = Vec::new();
+                pipe.encode_into(&bq, q.as_ref(), &g, 1, "bingrad-b", Packing::BaseS, &mut plain);
+                assert_eq!(r1, plain, "round 1 has zero residual");
+                // round 2 must carry the residual: different bytes than a
+                // memoryless encode of the same gradient
+                let mut r2 = Vec::new();
+                pipe.encode_ef_into(&bq, q.as_ref(), &mut ef, &g, 2, "bingrad-b", ps, &mut r2);
+                let mut plain2 = Vec::new();
+                pipe.encode_into(&bq, q.as_ref(), &g, 2, "bingrad-b", Packing::BaseS, &mut plain2);
+                assert_ne!(r2, plain2, "round 2 must quantize g + m");
+                match &reference {
+                    None => reference = Some((r1, r2)),
+                    Some((w1, w2)) => {
+                        assert_eq!(&r1, w1, "threads={threads} pooled={pooled}");
+                        assert_eq!(&r2, w2, "threads={threads} pooled={pooled}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// `threads == 0` auto-sizing is deterministic: repeated
+    /// constructions agree with each other and with the explicit count.
+    #[test]
+    fn auto_thread_count_is_positive_and_deterministic() {
+        let a = BucketPipeline::new(0).threads();
+        let b = BucketPipeline::new(0).threads();
+        assert_eq!(a, b);
+        assert!(a >= 1);
         assert_eq!(BucketPipeline::new(3).threads(), 3);
+        assert_eq!(BucketPipeline::scoped(0).threads(), a);
+        assert_eq!(BucketPipeline::new(a).threads(), a);
     }
 }

@@ -1,0 +1,555 @@
+//! Persistent codec/shard worker pool — long-lived threads fed by
+//! channels, replacing the per-round `std::thread::scope` spawns of the
+//! parallel bucket pipeline (and hosting the sharded-PS reduce loops).
+//!
+//! ## Why a pool
+//!
+//! The scoped pipeline (`super::parallel` in its legacy mode) spawns `k`
+//! OS threads *per exchange round* and tears them down at the join. Two
+//! costs recur every round: the spawns themselves, and — more subtly —
+//! the per-thread level-solver arenas (`super::scratch`), which are
+//! `thread_local` and therefore die with the scoped threads, so the
+//! sort/prefix buffers of the `orq-S`/`linear-S` solvers re-grow from
+//! empty each round. Adaptive schemes re-solve levels every round, which
+//! makes that amortized per-round overhead the dominant encode cost on
+//! small-to-medium gradients. A pool keeps the threads (and with them
+//! their `thread_local` arenas) alive for the whole training run: round 1
+//! pays the spawns and the arena growth, steady-state rounds pay neither.
+//!
+//! ## Execution model
+//!
+//! [`WorkerPool`] is a *cached* pool: it keeps a registry of idle
+//! workers, each parked on its own job channel. Dispatching a task pops
+//! an idle worker (no spawn) or, when none is idle, spawns a fresh one
+//! that re-registers itself after every job. Capacity therefore adapts
+//! to peak demand and is never a deadlock bound — tasks that *block*
+//! (exchange worker loops waiting on channel peers, shard reduce loops)
+//! always start immediately, exactly like the scoped threads they
+//! replace, and nested scopes (a pooled exchange worker driving a pooled
+//! codec) cannot starve. [`WorkerPool::threads`] is the *parallelism
+//! target* used by components that shard work (`threads == 0` at
+//! construction auto-sizes to `std::thread::available_parallelism`,
+//! deterministically — the same value every time on a given machine);
+//! the live thread count is demand-driven and capped only by the task
+//! count.
+//!
+//! Two entry points:
+//!
+//! * [`WorkerPool::scope`] — structured, *borrowing* round tasks: the
+//!   closure spawns tasks that may borrow caller state (gradient slices,
+//!   shard arenas), runs coordinator-side code while they execute, and
+//!   the scope does not return until every spawned task has finished.
+//!   This mirrors `std::thread::scope`, minus the spawns.
+//! * [`WorkerPool::spawn_detached`] — unstructured `'static` services
+//!   (the sharded-PS reduce loops): the task owns its channels and exits
+//!   when they disconnect; the thread then returns to the idle registry
+//!   for reuse.
+//!
+//! ## Ownership and lifetime of arenas
+//!
+//! Three kinds of scratch live at three lifetimes:
+//!
+//! * **Pipeline shard arenas** (`parallel::Shard`: segment buffers,
+//!   reusable quantized bucket, clip/decode scratch) are owned by the
+//!   [`BucketPipeline`](super::parallel::BucketPipeline) and *borrowed*
+//!   by round tasks through [`WorkerPool::scope`] — they persist across
+//!   rounds regardless of which pool worker runs which shard.
+//! * **Level-solver arenas** (`super::scratch::SortScratch`) are
+//!   `thread_local` to the pool workers. Because the workers are
+//!   long-lived, these now persist for the whole run; solver output is
+//!   independent of arena history (buffers are cleared before use), so
+//!   reuse is bit-invisible — the scheme tests pin this down.
+//! * **Task-owned state** (shard-server accumulators) moves into
+//!   detached tasks and lives exactly as long as the service.
+//!
+//! ## Shutdown protocol and panic safety
+//!
+//! Dropping the last [`PoolHandle`] closes the registry, delivers an
+//! exit message to every idle worker, and **joins** every thread the
+//! pool ever spawned. Busy workers observe the closed registry when
+//! their current task ends and exit instead of re-registering. Drop the
+//! structures a detached service blocks on (its channels) *before* the
+//! last handle — [`super::super::comm::async_ps`] guarantees this by
+//! holding a handle clone that drops after the collective's channels.
+//!
+//! A panicking task is caught on the worker (`catch_unwind`), reported
+//! through the scope as an `Err` — never a hang — and the worker thread
+//! survives and returns to the idle registry. Lost tasks (a worker dying
+//! without reporting, or an OS spawn failure) are detected through the
+//! completion channel disconnecting and also surface as `Err`.
+//!
+//! ## Soundness of the borrowing scope
+//!
+//! [`PoolScope::spawn`] erases the task's borrow lifetime to send it
+//! through the `'static` job channels (the one `unsafe` in this module).
+//! This is sound for the same reason `std::thread::scope` is: a drain
+//! guard inside [`WorkerPool::scope`] blocks — on the normal path *and*
+//! during unwinding — until every spawned task has either completed
+//! (reported on the completion channel) or been destroyed unrun (its
+//! completion sender dropped, observed as a disconnect), so no task can
+//! touch its borrows after `scope` returns. The scope's environment
+//! lifetime is invariant, which prevents spawning tasks that borrow
+//! state created *inside* the scope closure (such state would die before
+//! the drain).
+
+use std::cell::Cell;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+
+/// Deterministic auto-size for `threads == 0`: the machine's available
+/// parallelism (1 if undetectable). Resolved once per call site, never
+/// re-sampled mid-run, so sharded (`--shards`) and flat drivers that
+/// resolve it independently agree.
+pub fn auto_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// One unit of pool work plus its completion reporter. `done` carries
+/// `true` for a clean finish, `false` for a caught panic; dropping a job
+/// unrun drops the sender, which the drain guard observes as a lost task.
+struct Job {
+    task: Box<dyn FnOnce() + Send + 'static>,
+    done: Sender<bool>,
+}
+
+/// Message to a parked worker.
+enum Msg {
+    Job(Job),
+    Exit,
+}
+
+/// Shared pool state: the idle-worker stack and every join handle.
+struct Registry {
+    idle: Vec<Sender<Msg>>,
+    handles: Vec<JoinHandle<()>>,
+    /// Set by `Drop`; busy workers exit instead of re-registering.
+    closed: bool,
+    /// Total threads ever spawned (amortization diagnostics and tests).
+    spawned: usize,
+}
+
+/// The persistent worker pool. Construct through [`PoolHandle::new`] so
+/// the pool can be shared across codecs, collectives and drivers.
+pub struct WorkerPool {
+    threads: usize,
+    registry: Arc<Mutex<Registry>>,
+}
+
+/// Lock helper: the registry holds no user invariants a panicked task
+/// could have broken (tasks never run under the lock), so a poisoned
+/// mutex is safe to recover.
+fn lock(reg: &Mutex<Registry>) -> MutexGuard<'_, Registry> {
+    reg.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn worker_loop(rx: Receiver<Msg>, my_tx: Sender<Msg>, registry: Arc<Mutex<Registry>>) {
+    loop {
+        let msg = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => return,
+        };
+        match msg {
+            Msg::Exit => return,
+            Msg::Job(Job { task, done }) => {
+                let ok = catch_unwind(AssertUnwindSafe(task)).is_ok();
+                // Re-register BEFORE reporting completion: when a scope's
+                // drain returns, every worker it used is already back in
+                // the idle registry, so the caller's next round
+                // deterministically reuses threads instead of racing the
+                // re-registration and spawning extras.
+                let exit = {
+                    let mut reg = lock(&registry);
+                    if reg.closed {
+                        true
+                    } else {
+                        reg.idle.push(my_tx.clone());
+                        false
+                    }
+                };
+                let _ = done.send(ok);
+                if exit {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+impl WorkerPool {
+    /// `threads == 0` auto-sizes (see [`auto_threads`]); the value is the
+    /// sharding *target* reported by [`Self::threads`], capped at 256
+    /// like the pipeline's. No threads are spawned until work arrives.
+    pub fn new(threads: usize) -> WorkerPool {
+        let t = if threads == 0 { auto_threads() } else { threads };
+        WorkerPool {
+            threads: t.clamp(1, 256),
+            registry: Arc::new(Mutex::new(Registry {
+                idle: Vec::new(),
+                handles: Vec::new(),
+                closed: false,
+                spawned: 0,
+            })),
+        }
+    }
+
+    /// The resolved parallelism target (never 0).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Total worker threads ever spawned. Steady state: this stops
+    /// growing once peak concurrent demand has been seen once.
+    pub fn threads_spawned(&self) -> usize {
+        lock(&self.registry).spawned
+    }
+
+    /// Hand `job` to an idle worker, or spawn a new one. `Err` only if
+    /// the OS refuses a needed thread spawn (the job is dropped unrun,
+    /// which the caller's drain observes through the done channel).
+    fn dispatch(&self, mut job: Job) -> Result<()> {
+        loop {
+            let idle = {
+                let mut reg = lock(&self.registry);
+                reg.idle.pop()
+            };
+            match idle {
+                Some(tx) => match tx.send(Msg::Job(job)) {
+                    Ok(()) => return Ok(()),
+                    // The worker died (it never does in normal operation,
+                    // but a lost thread must not lose the job): recover
+                    // the job and try the next idle worker or spawn.
+                    Err(send_err) => match send_err.0 {
+                        Msg::Job(j) => job = j,
+                        Msg::Exit => unreachable!("dispatch never sends Exit"),
+                    },
+                },
+                None => {
+                    let (tx, rx) = channel::<Msg>();
+                    let registry = Arc::clone(&self.registry);
+                    let my_tx = tx.clone();
+                    let mut reg = lock(&self.registry);
+                    let name = format!("orq-pool-{}", reg.spawned);
+                    let handle = std::thread::Builder::new()
+                        .name(name)
+                        .spawn(move || worker_loop(rx, my_tx, registry))?;
+                    reg.spawned += 1;
+                    reg.handles.push(handle);
+                    drop(reg);
+                    tx.send(Msg::Job(job)).map_err(|_| {
+                        Error::Comm("pool worker exited before its first job".into())
+                    })?;
+                    return Ok(());
+                }
+            }
+        }
+    }
+
+    /// Run a batch of borrowing tasks to completion: `f` spawns tasks on
+    /// the given [`PoolScope`] (they start immediately on pool workers)
+    /// and may keep doing caller-side work; when `f` returns, `scope`
+    /// blocks until every spawned task has finished. Returns `Err` if any
+    /// task panicked or was lost — never hangs on a dead worker.
+    pub fn scope<'env, R>(&self, f: impl FnOnce(&PoolScope<'_, 'env>) -> R) -> Result<R> {
+        let (done_tx, done_rx) = channel::<bool>();
+        let state = ScopeState {
+            submitted: Cell::new(0),
+            lost: Cell::new(false),
+            panicked: Cell::new(false),
+        };
+        let result = {
+            // Declared first ⇒ dropped last: the guard drains after the
+            // scope below has released its completion sender, so a
+            // disconnect on `done_rx` reliably means "no task left".
+            let _guard = DrainGuard { rx: &done_rx, state: &state };
+            let scope = PoolScope { pool: self, done_tx, state: &state, _env: PhantomData };
+            f(&scope)
+        };
+        if state.lost.get() {
+            Err(Error::Comm("worker pool lost a task (worker died or spawn failed)".into()))
+        } else if state.panicked.get() {
+            Err(Error::Comm("worker pool task panicked".into()))
+        } else {
+            Ok(result)
+        }
+    }
+
+    /// Run a self-contained (`'static`) service on a pool worker — the
+    /// sharded-PS reduce loops. Nobody joins the task itself; it must
+    /// exit on its own (by observing its channels disconnect) before the
+    /// last [`PoolHandle`] drops, or the final join will wait for it.
+    pub fn spawn_detached(&self, f: impl FnOnce() + Send + 'static) -> Result<()> {
+        let (done_tx, _) = channel::<bool>();
+        self.dispatch(Job { task: Box::new(f), done: done_tx })
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        let (idle, handles) = {
+            let mut reg = lock(&self.registry);
+            reg.closed = true;
+            (std::mem::take(&mut reg.idle), std::mem::take(&mut reg.handles))
+        };
+        for tx in idle {
+            let _ = tx.send(Msg::Exit);
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Scope-shared bookkeeping (single-threaded: only the scope closure's
+/// thread spawns).
+struct ScopeState {
+    submitted: Cell<usize>,
+    lost: Cell<bool>,
+    panicked: Cell<bool>,
+}
+
+/// Spawning handle passed to the closure of [`WorkerPool::scope`].
+pub struct PoolScope<'pool, 'env> {
+    pool: &'pool WorkerPool,
+    done_tx: Sender<bool>,
+    state: &'pool ScopeState,
+    /// Invariant in `'env` (see the module docs' soundness note).
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'env> PoolScope<'_, 'env> {
+    /// Spawn one task. It starts immediately on an idle (or fresh) pool
+    /// worker and may borrow anything that outlives the `scope` call.
+    pub fn spawn(&self, task: impl FnOnce() + Send + 'env) {
+        let boxed: Box<dyn FnOnce() + Send + 'env> = Box::new(task);
+        // SAFETY: the drain guard in `WorkerPool::scope` blocks (also
+        // during unwinding) until this task has run to completion or been
+        // destroyed unrun, both of which end its borrows; `'env` is
+        // invariant, so it cannot be shrunk to borrow scope-local state.
+        let boxed: Box<dyn FnOnce() + Send + 'static> = unsafe {
+            std::mem::transmute::<
+                Box<dyn FnOnce() + Send + 'env>,
+                Box<dyn FnOnce() + Send + 'static>,
+            >(boxed)
+        };
+        match self.pool.dispatch(Job { task: boxed, done: self.done_tx.clone() }) {
+            Ok(()) => self.state.submitted.set(self.state.submitted.get() + 1),
+            Err(_) => self.state.lost.set(true),
+        }
+    }
+}
+
+/// Blocks until every spawned task of one scope has reported (or been
+/// destroyed). Runs in `Drop` so a panicking scope closure still drains
+/// before its borrows unwind.
+struct DrainGuard<'a> {
+    rx: &'a Receiver<bool>,
+    state: &'a ScopeState,
+}
+
+impl Drop for DrainGuard<'_> {
+    fn drop(&mut self) {
+        let mut remaining = self.state.submitted.get();
+        while remaining > 0 {
+            match self.rx.recv() {
+                Ok(true) => {}
+                Ok(false) => self.state.panicked.set(true),
+                // All completion senders gone with reports outstanding:
+                // some delivered job was destroyed unrun. Its borrows are
+                // over (the closure was dropped), so returning is safe —
+                // report it as a lost task.
+                Err(_) => {
+                    self.state.lost.set(true);
+                    break;
+                }
+            }
+            remaining -= 1;
+        }
+    }
+}
+
+/// Shared, cloneable handle to a [`WorkerPool`]. The pool shuts down
+/// (exit messages + joins) when the last handle drops.
+#[derive(Clone)]
+pub struct PoolHandle(Arc<WorkerPool>);
+
+impl PoolHandle {
+    /// Build a pool behind a shareable handle (`threads == 0` = auto).
+    pub fn new(threads: usize) -> PoolHandle {
+        PoolHandle(Arc::new(WorkerPool::new(threads)))
+    }
+}
+
+impl std::ops::Deref for PoolHandle {
+    type Target = WorkerPool;
+
+    fn deref(&self) -> &WorkerPool {
+        &self.0
+    }
+}
+
+impl std::fmt::Debug for PoolHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PoolHandle(threads = {})", self.0.threads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn scope_runs_borrowing_tasks_and_blocks_until_done() {
+        let pool = WorkerPool::new(4);
+        let mut out = vec![0u64; 8];
+        let input: Vec<u64> = (0..8).collect();
+        pool.scope(|s| {
+            for (o, i) in out.iter_mut().zip(&input) {
+                s.spawn(move || *o = i * i);
+            }
+        })
+        .unwrap();
+        assert_eq!(out, vec![0, 1, 4, 9, 16, 25, 36, 49]);
+    }
+
+    #[test]
+    fn workers_are_reused_across_scopes() {
+        let pool = WorkerPool::new(2);
+        let count = AtomicUsize::new(0);
+        for _ in 0..20 {
+            pool.scope(|s| {
+                for _ in 0..2 {
+                    s.spawn(|| {
+                        count.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            })
+            .unwrap();
+        }
+        assert_eq!(count.load(Ordering::SeqCst), 40);
+        // 20 rounds of ≤ 2 concurrent tasks: peak demand bounds spawns,
+        // not round count — the amortization the pool exists for.
+        assert!(pool.threads_spawned() <= 2, "spawned {}", pool.threads_spawned());
+    }
+
+    /// A panicking task must surface as `Err` (not a hang), and the pool
+    /// must keep working afterwards.
+    #[test]
+    fn panicked_task_is_err_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let err = pool
+            .scope(|s| {
+                s.spawn(|| panic!("injected"));
+                s.spawn(|| {});
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("panicked"), "{err}");
+        // same pool, next round: healthy
+        let mut x = 0u32;
+        pool.scope(|s| s.spawn(|| x = 7)).unwrap();
+        assert_eq!(x, 7);
+    }
+
+    /// The scope must drain spawned tasks even when the scope closure
+    /// itself panics (the borrows unwind right after).
+    #[test]
+    fn scope_closure_panic_still_drains_tasks() {
+        let pool = WorkerPool::new(1);
+        let flag = AtomicUsize::new(0);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let _ = pool.scope(|s| {
+                s.spawn(|| {
+                    flag.fetch_add(1, Ordering::SeqCst);
+                });
+                panic!("scope body");
+            });
+        }));
+        assert!(caught.is_err());
+        assert_eq!(flag.load(Ordering::SeqCst), 1, "task ran before unwind passed the scope");
+    }
+
+    #[test]
+    fn blocking_tasks_all_start_nested_scopes_do_not_starve() {
+        // More mutually-blocking tasks than any fixed pool size: each
+        // task only finishes once every task has started (rendezvous via
+        // a channel fan-in), which deadlocks any bounded-queue design.
+        let pool = WorkerPool::new(1);
+        let n = 6;
+        let (tx, rx) = channel::<usize>();
+        let barrier = Arc::new(std::sync::Barrier::new(n));
+        pool.scope(|s| {
+            for i in 0..n {
+                let tx = tx.clone();
+                let barrier = Arc::clone(&barrier);
+                s.spawn(move || {
+                    barrier.wait();
+                    tx.send(i).unwrap();
+                });
+            }
+            drop(tx);
+            let got: Vec<usize> = rx.iter().take(n).collect();
+            assert_eq!(got.len(), n);
+        })
+        .unwrap();
+        // nested: a pooled task drives its own scope on the same pool
+        let pool_ref = &pool;
+        let mut out = [0u32; 4];
+        pool_ref
+            .scope(|outer| {
+                let slots: &mut [u32] = &mut out;
+                outer.spawn(move || {
+                    pool_ref
+                        .scope(|inner| {
+                            for (i, slot) in slots.iter_mut().enumerate() {
+                                inner.spawn(move || *slot = i as u32 + 1);
+                            }
+                        })
+                        .unwrap();
+                });
+            })
+            .unwrap();
+        assert_eq!(out, [1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn detached_service_runs_and_pool_shuts_down_cleanly() {
+        let (tx, rx) = channel::<u32>();
+        {
+            let pool = PoolHandle::new(2);
+            pool.spawn_detached(move || {
+                // a miniature shard server: serve until disconnect
+                let _ = tx.send(41);
+                let _ = tx.send(42);
+            })
+            .unwrap();
+            assert_eq!(rx.recv().unwrap(), 41);
+            assert_eq!(rx.recv().unwrap(), 42);
+            // handle drop here joins every worker — must not hang
+        }
+        assert!(rx.recv().is_err(), "service exited with the pool");
+    }
+
+    #[test]
+    fn auto_sizing_is_deterministic_and_positive() {
+        let a = WorkerPool::new(0).threads();
+        let b = WorkerPool::new(0).threads();
+        assert_eq!(a, b, "auto-size must resolve identically every time");
+        assert!(a >= 1);
+        assert_eq!(WorkerPool::new(3).threads(), 3);
+        assert_eq!(WorkerPool::new(100_000).threads(), 256, "capped");
+        assert_eq!(auto_threads(), a);
+    }
+
+    #[test]
+    fn scope_with_zero_tasks_is_a_no_op() {
+        let pool = WorkerPool::new(2);
+        let r = pool.scope(|_s| 11).unwrap();
+        assert_eq!(r, 11);
+        assert_eq!(pool.threads_spawned(), 0, "no work, no threads");
+    }
+}

@@ -14,9 +14,12 @@
 //! reference solvers and a mutex-locked replica of the old path). No
 //! locks, no per-bucket allocation once a thread's arena reaches steady
 //! state, and the quantizer structs themselves become stateless. On
-//! long-lived threads (trainer workers, ring/hier nodes, serial codecs)
-//! steady state spans the whole run; the pipeline's scoped shard threads
-//! live one round, so their arenas amortize across that round's buckets.
+//! long-lived threads (trainer workers, ring/hier nodes, serial codecs,
+//! and the persistent pool workers of `super::pool` — the pipeline's
+//! default execution since PR 5) steady state spans the whole run; only
+//! the legacy scoped mode (`BucketPipeline::scoped`, retained as the
+//! perf baseline) still pays per-round arena regrowth, which is exactly
+//! the gap perfbench's `amortization` section measures.
 
 use std::cell::RefCell;
 

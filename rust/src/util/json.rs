@@ -72,6 +72,14 @@ impl Json {
         }
     }
 
+    /// The underlying key → value map of an object (`None` otherwise).
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
     /// `obj.field` access that produces a descriptive error.
     pub fn req<'a>(&'a self, key: &str) -> Result<&'a Json> {
         self.get(key).ok_or_else(|| Error::Json {

@@ -159,12 +159,13 @@ fn error_feedback_rejected_where_it_cannot_compensate() {
         );
         assert!(cfg_from(&toml).is_err(), "{topo}");
     }
-    // the parallel codec path cannot feed the residual update
+    // the parallel codec composes with EF since the pipeline grew a
+    // residual path (PR 5) — previously rejected, now accepted
     assert!(cfg_from(
         "[train]\nworkers = 2\nbatch = 64\nmethod = \"terngrad\"\n\
          threads = 0\nerror_feedback = true"
     )
-    .is_err());
+    .is_ok());
     // wrong value type
     assert!(cfg_from("[train]\nerror_feedback = 1").is_err());
     // the valid spelling passes on both PS paths
@@ -172,6 +173,21 @@ fn error_feedback_rejected_where_it_cannot_compensate() {
         "[train]\nworkers = 2\nbatch = 64\nmethod = \"bingrad-b\"\nerror_feedback = true"
     )
     .is_ok());
+}
+
+#[test]
+fn pool_key_validates_and_cli_spelling_parses() {
+    // wrong value types are errors, not silent defaults
+    assert!(cfg_from("[train]\npool = 1").is_err());
+    assert!(cfg_from("[train]\npool = \"pooled\"").is_err());
+    // both spellings pass through the config layer
+    assert!(!cfg_from("[train]\nworkers = 2\nbatch = 64\npool = false").unwrap().pool);
+    assert!(cfg_from("[train]\nworkers = 2\nbatch = 64\npool = true").unwrap().pool);
+    // CLI: --pool takes a bool; garbage is a parse error
+    let a = args("train --pool false");
+    assert_eq!(a.get_parse::<bool>("pool").unwrap(), Some(false));
+    let a = args("train --pool maybe");
+    assert!(a.get_parse::<bool>("pool").is_err());
 }
 
 #[test]

@@ -44,6 +44,7 @@ fn cfg(method: &str) -> TrainConfig {
         staleness: 0,
         error_feedback: false,
         threads: 1,
+        pool: true,
         links: orq::config::LinkConfig::default(),
     }
 }

@@ -21,7 +21,11 @@
 
 use orq::codec::{wire_size, Packing};
 use orq::comm::link::{Link, LinkMap};
-use orq::comm::{build_topology, hier, ring, run_once, shard, ExchangeConfig, Topology, WireSpec};
+use orq::comm::{
+    build_topology, hier, ring, run_once, run_rounds, shard, ExchangeConfig, PoolMode, Topology,
+    WireSpec,
+};
+use orq::quant::pool::PoolHandle;
 use orq::testutil::{sample, ALL_DISTS};
 use orq::tensor::rng::Rng;
 
@@ -559,4 +563,79 @@ fn hier_localizes_traffic_onto_fast_links() {
         h_st.sim_time_s,
         ps_st.sim_time_s
     );
+}
+
+/// PR 5 pool invariance: a multi-round drive must decode bit-identical
+/// means whether the codec shards run on the persistent pool (its own,
+/// or one shared across codecs and shard servers) or on the legacy
+/// per-round scoped threads, for every codec thread count — the pool is
+/// pure execution, never semantics. Covers the flat PS, the sharded PS,
+/// and the async sharded PS (warm staleness rounds included).
+#[test]
+fn pooled_multi_round_means_bit_identical_across_modes_and_threads() {
+    let rounds = 3usize;
+    let gs = grads(2048, 3, 2); // d = 256 → 8 buckets
+    let cfgs = [flat(Topology::Ps), sharded_cfg(2, 0), sharded_cfg(2, 1)];
+    for (ci, cfg) in cfgs.iter().enumerate() {
+        for method in ["orq-5", "terngrad"] {
+            // reference: scoped-thread execution, 2 codec threads
+            let scoped = spec(method, 256).with_threads(2).with_pool_mode(PoolMode::Scoped);
+            let (want, want_st) = run_rounds(cfg, &scoped, &gs, rounds).unwrap();
+            for threads in [2usize, 3] {
+                // pooled default (run-local pool)
+                let pooled = spec(method, 256).with_threads(threads);
+                let (got, got_st) = run_rounds(cfg, &pooled, &gs, rounds).unwrap();
+                assert_eq!(got, want, "{method} cfg#{ci} pooled threads={threads}");
+                assert_eq!(got_st.wire_bytes, want_st.wire_bytes, "{method} cfg#{ci}");
+                // explicitly shared pool, reused across two full drives:
+                // cross-call arena/thread reuse must be invisible too
+                let handle = PoolHandle::new(threads);
+                let sh = spec(method, 256)
+                    .with_threads(threads)
+                    .with_pool_mode(PoolMode::Shared(handle.clone()));
+                let (first, _) = run_rounds(cfg, &sh, &gs, rounds).unwrap();
+                let (second, _) = run_rounds(cfg, &sh, &gs, rounds).unwrap();
+                assert_eq!(first, want, "{method} cfg#{ci} shared threads={threads}");
+                assert_eq!(second, want, "{method} cfg#{ci} shared drive 2");
+            }
+        }
+    }
+}
+
+/// The serial legacy path (`threads = 1`) must stay bit-identical under
+/// the pooled driver: pooling moves the run_rounds worker loops and the
+/// sharded reduce loops onto pool threads, but the wire bytes and means
+/// are the PR 4 scoped-driver ones, S = 1, K = 0 ≡ flat PS included.
+#[test]
+fn pooled_driver_keeps_serial_path_bit_identical() {
+    let rounds = 3usize;
+    let gs = grads(1536, 2, 4);
+    for method in ["orq-5", "bingrad-b", "fp"] {
+        let scoped = spec(method, 256).with_pool_mode(PoolMode::Scoped);
+        let pooled = spec(method, 256); // threads = 1, PoolMode::Pooled
+        let (want, want_st) = run_rounds(&flat(Topology::Ps), &scoped, &gs, rounds).unwrap();
+        let (got, got_st) = run_rounds(&flat(Topology::Ps), &pooled, &gs, rounds).unwrap();
+        assert_eq!(got, want, "{method} serial pooled vs scoped");
+        assert_eq!(got_st.wire_bytes, want_st.wire_bytes);
+        let (sh, _) = run_rounds(&sharded_cfg(1, 0), &pooled, &gs, rounds).unwrap();
+        assert_eq!(sh, want, "{method} sharded S=1 K=0 pooled ≡ flat PS");
+    }
+}
+
+/// `threads = 0` (auto-size) resolves deterministically under sharding:
+/// two identical async sharded drives decode identical means, and both
+/// match an explicit-thread-count run at the resolved value.
+#[test]
+fn auto_thread_count_deterministic_under_shards() {
+    let rounds = 4usize;
+    let gs = grads(2048, 3, 6);
+    let cfg = sharded_cfg(2, 1);
+    let auto = spec("orq-5", 256).with_threads(0);
+    let (a, _) = run_rounds(&cfg, &auto, &gs, rounds).unwrap();
+    let (b, _) = run_rounds(&cfg, &auto, &gs, rounds).unwrap();
+    assert_eq!(a, b, "auto-sized sharded runs must be reproducible");
+    let resolved = orq::quant::pool::auto_threads().min(256);
+    let explicit = spec("orq-5", 256).with_threads(resolved);
+    let (c, _) = run_rounds(&cfg, &explicit, &gs, rounds).unwrap();
+    assert_eq!(a, c, "auto must equal the explicitly resolved count");
 }
