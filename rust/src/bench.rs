@@ -274,6 +274,8 @@ pub mod suite {
             error_feedback: false,
             threads: 1,
             pool: true,
+            overlap: false,
+            sections: 4,
             links: crate::config::LinkConfig::default(),
         }
     }

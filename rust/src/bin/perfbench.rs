@@ -19,30 +19,44 @@
 //!
 //! ## JSON schema
 //!
-//! `BENCH_codec.json` (v1): `{ schema: "orq.perfbench.codec/v1", mode,
-//! elements, kernels: [{kernel: "fixed"|"base_s", bits|s, op:
-//! "pack"|"unpack", path: "word"|"scalar"|"recip", mean_s, gb_s,
-//! melem_s, wire_bytes}], speedup: {fixed_pack_unpack, base_s_unpack} }`.
+//! `BENCH_codec.json` (v2): `{ schema: "orq.perfbench.codec/v2", mode,
+//! elements, kernels: [{kernel: "fixed"|"base_s"|"round", bits|s, op:
+//! "pack"|"unpack"|"round", path: "word"|"scalar"|"recip", mean_s, gb_s,
+//! melem_s, wire_bytes}], speedup: {fixed_pack_unpack, base_s_unpack,
+//! round_twopass} }`. v2 preserves every v1 field and adds the
+//! stochastic-rounding rows: the autovectorization-friendly two-pass
+//! kernel (`path: "word"`) vs the retained fused scalar reference
+//! (`path: "scalar"`, `quant::random_round_reference`), with
+//! `speedup.round_twopass = scalar / two-pass`.
 //!
-//! `BENCH_exchange.json` (v3): `{ schema: "orq.perfbench.exchange/v3",
+//! `BENCH_exchange.json` (v4): `{ schema: "orq.perfbench.exchange/v4",
 //! mode, elements, workers, threads, bucket_size, quantize: [{method,
 //! path: "serial"|"parallel"|"parallel-scoped", mean_s, melem_s}],
 //! rounds: [{topology, path, mean_s, wire_bytes, sim_time_s, shards,
 //! staleness}], amortization: {quantize_encode: {round1_s, steady_s,
-//! rounds}, ps_round: {round1_s, steady_s, rounds}}, speedup:
-//! {quantize_encode, ps_round, pooled_round} }`. v3 preserves every v2
-//! field (which preserved every v1 field) and adds: the
-//! `path: "parallel-scoped"` quantize and ps-round entries — the
-//! retained PR 3/4 per-round `std::thread::scope` execution, measured in
-//! the same run as the pooled default (`path: "parallel"`) so
-//! `speedup.pooled_round = scoped / pooled` is a same-machine figure —
-//! and the `amortization` section (first pooled call vs steady-state
-//! mean: round 1 pays the thread spawns and the solver-arena growth that
-//! steady-state rounds no longer do). Every round entry is a per-round
-//! average over the same fixed multi-round window (the largest `K + 1`
-//! in the set), so async warm rounds (mean pull + decode) are in the
-//! measurement and per-iteration topology setup amortizes identically
-//! across entries.
+//! rounds}, ps_round: {round1_s, steady_s, rounds}}, overlap:
+//! {model_params, sections, batch, flat_s, overlap_s, section_bytes,
+//! ps_model_err_pct}, speedup: {quantize_encode, ps_round, pooled_round,
+//! overlap_round} }`. v3 preserved every v2 field (which preserved every
+//! v1 field) and added: the `path: "parallel-scoped"` quantize and
+//! ps-round entries — the retained PR 3/4 per-round `std::thread::scope`
+//! execution, measured in the same run as the pooled default
+//! (`path: "parallel"`) so `speedup.pooled_round = scoped / pooled` is a
+//! same-machine figure — and the `amortization` section (first pooled
+//! call vs steady-state mean: round 1 pays the thread spawns and the
+//! solver-arena growth that steady-state rounds no longer do). Every
+//! round entry is a per-round average over the same fixed multi-round
+//! window (the largest `K + 1` in the set), so async warm rounds (mean
+//! pull + decode) are in the measurement and per-iteration topology
+//! setup amortizes identically across entries. v4 adds the `overlap`
+//! section: backward+encode wall time on a real native MLP, flat
+//! (sequential backward then encode) vs overlapped (sections encode on
+//! the pool while the backward tail runs, `comm::overlap`), with the
+//! assembled messages asserted byte-identical and
+//! `speedup.overlap_round = flat / overlapped`; `ps_model_err_pct`
+//! verifies the overlapped closed-form PS model against the measured
+//! simulated round (degenerate case — every section ready at t = 0 on
+//! the zero-latency link sums to the flat model) to < 1%.
 //!
 //! `--smoke` runs small sizes, then re-parses both artifacts and asserts
 //! the schema plus monotone sanity (sizes and rates positive, fixed-width
@@ -278,17 +292,57 @@ fn bench_codec(bench: &Bench, n: usize, mode: &str) -> Json {
     }
     print_table(&format!("Base-s kernels — {n} digits, reciprocal vs scalar"), &rows);
 
+    // ---- stochastic rounding: two-pass lane-block kernel vs the
+    // retained fused scalar reference ----
+    let mut rows = Vec::new();
+    let (mut round_twopass, mut round_scalar) = (0.0f64, 0.0f64);
+    for s in [3usize, 5, 9] {
+        let levels: Vec<f32> =
+            (0..s).map(|i| -1.0 + 2.0 * i as f32 / (s - 1) as f32).collect();
+        // spread the gaussian across the level table so bracketing is
+        // exercised, not just the center bracket
+        let g: Vec<f32> = gaussian(n, 40 + s as u64).iter().map(|v| v * 600.0).collect();
+        // correctness outside the timers: identical indices, identical
+        // RNG consumption
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        let mut ra = Rng::seed_from(9);
+        let mut rb = Rng::seed_from(9);
+        orq::quant::random_round(&g, &levels, &mut ra, &mut a);
+        orq::quant::random_round_reference(&g, &levels, &mut rb, &mut b);
+        assert_eq!(a, b, "two-pass/scalar rounding divergence at s={s}");
+        let wire = n; // one index byte per element, pre-packing
+        for (path, scalar) in [("word", false), ("scalar", true)] {
+            let mut rng = Rng::seed_from(11);
+            let mut out = Vec::new();
+            let m = bench.measure(&format!("round s={s} {path}"), Some(n as u64), || {
+                if scalar {
+                    orq::quant::random_round_reference(&g, &levels, &mut rng, &mut out);
+                } else {
+                    orq::quant::random_round(&g, &levels, &mut rng, &mut out);
+                }
+                std::hint::black_box(out.len());
+            });
+            *(if scalar { &mut round_scalar } else { &mut round_twopass }) += m.mean_s;
+            kernels.push(kernel_entry("round", ("s", s), "round", path, &m, wire));
+            rows.push(m);
+        }
+    }
+    print_table(&format!("Stochastic rounding — {n} elements, two-pass vs scalar"), &rows);
+
     let speedup = obj(vec![
         ("fixed_pack_unpack", Json::Num(fixed_scalar / fixed_word.max(1e-12))),
         ("base_s_unpack", Json::Num(scalar_s / recip_s.max(1e-12))),
+        ("round_twopass", Json::Num(round_scalar / round_twopass.max(1e-12))),
     ]);
     println!(
-        "codec speedups: fixed pack+unpack ×{:.2}, base-s unpack ×{:.2}",
+        "codec speedups: fixed pack+unpack ×{:.2}, base-s unpack ×{:.2}, \
+         stochastic round ×{:.2}",
         fixed_scalar / fixed_word.max(1e-12),
-        scalar_s / recip_s.max(1e-12)
+        scalar_s / recip_s.max(1e-12),
+        round_scalar / round_twopass.max(1e-12)
     );
     obj(vec![
-        ("schema", Json::Str("orq.perfbench.codec/v1".into())),
+        ("schema", Json::Str("orq.perfbench.codec/v2".into())),
         ("mode", Json::Str(mode.into())),
         ("elements", Json::Num(n as f64)),
         ("kernels", Json::Arr(kernels)),
@@ -453,6 +507,8 @@ fn bench_exchange(
     );
 
     let amortization = bench_amortization(n, threads, workers, bucket, method, &grads, smoke)?;
+    let (overlap, overlap_round) =
+        bench_overlap(bench, threads, workers, bucket, method, &shared, smoke)?;
 
     let speedup = obj(vec![
         ("quantize_encode", Json::Num(qe[0] / qe[1].max(1e-12))),
@@ -461,16 +517,21 @@ fn bench_exchange(
         // figure the CI floor gates (steady-state pooled must not lose
         // to per-round spawns).
         ("pooled_round", Json::Num(ps_round[2] / ps_round[1].max(1e-12))),
+        // flat backward→encode vs the section-overlapped driver on the
+        // same model, batch and pool — the PR 6 figure the CI floor
+        // gates (overlap must not lose the hidden-encode win).
+        ("overlap_round", Json::Num(overlap_round)),
     ]);
     println!(
         "exchange speedups ({threads} threads): quantize+encode ×{:.2} (serial/pooled), \
-         ps round ×{:.2} (serial/pooled), ps round ×{:.2} (scoped/pooled)",
+         ps round ×{:.2} (serial/pooled), ps round ×{:.2} (scoped/pooled), \
+         backward+encode ×{overlap_round:.2} (flat/overlapped)",
         qe[0] / qe[1].max(1e-12),
         ps_round[0] / ps_round[1].max(1e-12),
         ps_round[2] / ps_round[1].max(1e-12)
     );
     Ok(obj(vec![
-        ("schema", Json::Str("orq.perfbench.exchange/v3".into())),
+        ("schema", Json::Str("orq.perfbench.exchange/v4".into())),
         ("mode", Json::Str(mode.into())),
         ("elements", Json::Num(n as f64)),
         ("workers", Json::Num(workers as f64)),
@@ -479,8 +540,143 @@ fn bench_exchange(
         ("quantize", Json::Arr(quantize)),
         ("rounds", Json::Arr(round_entries)),
         ("amortization", amortization),
+        ("overlap", overlap),
         ("speedup", speedup),
     ]))
+}
+
+/// Backward/encode overlap on a real native MLP: flat (sequential
+/// backward, then `GradCodec::encode_into`) vs the overlap driver
+/// (`comm::overlap::OverlapEncoder`, sections quantize+encode on the
+/// pool while the backward tail runs). The assembled messages are
+/// asserted byte-identical outside the timers, and the overlapped
+/// closed-form PS model is checked against the simulator's measured
+/// round time in its degenerate case (every section ready at t = 0 on
+/// the zero-latency link sums to the flat `ps_time` model).
+///
+/// Returns the `overlap` JSON section and the flat/overlapped speedup.
+fn bench_overlap(
+    bench: &Bench,
+    threads: usize,
+    workers: usize,
+    bucket: usize,
+    method: &str,
+    shared: &PoolMode,
+    smoke: bool,
+) -> Result<(Json, f64)> {
+    use orq::comm::{ps_overlap_time, OverlapEncoder, SectionMap};
+    use orq::data::synth::{ClassDataset, DatasetSpec};
+    use orq::model::native::NativeMlp;
+    use orq::model::Backend;
+
+    // overlap needs the parallel codec; a 1-thread run still measures a
+    // real (2-thread) overlapped path rather than skipping the figure
+    let t = threads.max(2);
+    let dims: Vec<usize> =
+        if smoke { vec![64, 128, 128, 32] } else { vec![512, 1024, 1024, 256] };
+    let sections = 3usize;
+    let batch_n = if smoke { 16 } else { 64 };
+    let mut backend = NativeMlp::new(dims.clone());
+    let mut backend2 = NativeMlp::new(dims.clone());
+    let param_count = backend.param_count();
+    let ds = ClassDataset::generate(DatasetSpec {
+        in_dim: dims[0],
+        classes: *dims.last().unwrap(),
+        train_n: 256,
+        test_n: 1,
+        margin: 3.0,
+        noise: 0.6,
+        label_noise: 0.0,
+        seed: 11,
+    });
+    let batch = ds.worker_batch(0, 1, batch_n, &mut Rng::seed_from(2));
+    let params = backend.init_params(&mut Rng::seed_from(1));
+
+    let spec = WireSpec::new(method, bucket).with_threads(t).with_pool_mode(shared.clone());
+    let mut gc = GradCodec::new(&spec)?;
+    let map = SectionMap::new(&backend.layer_spans(), sections, bucket)?;
+    let mut ov = OverlapEncoder::new(&spec, map)?;
+    let mut grad = vec![0.0f32; param_count];
+    let mut grad2 = vec![0.0f32; param_count];
+    let mut qg = QuantizedGrad::default();
+    let mut msg = Vec::new();
+    let mut msg2 = Vec::new();
+
+    // correctness outside the timers: one overlapped round is
+    // byte-identical to the flat backward→encode under the same draw
+    {
+        let mut ra = Rng::seed_from(7);
+        let mut rb = Rng::seed_from(7);
+        backend.loss_grad(&params, &batch, &mut grad);
+        gc.encode_into(&grad, &mut ra, &mut qg, &mut msg);
+        ov.encode_overlapped(None, &mut rb, &mut msg2, |cb| {
+            backend2.loss_grad_sections(&params, &batch, &mut grad2, cb)
+        });
+        assert_eq!(msg, msg2, "overlapped wire bytes diverge from the flat encode");
+        assert_eq!(ra.next_u64(), rb.next_u64(), "overlap must consume one round key");
+    }
+
+    let mut rows = Vec::new();
+    let mut rng_f = Rng::seed_from(21);
+    let flat = bench.measure("backward+encode flat", Some(param_count as u64), || {
+        backend.loss_grad(&params, &batch, &mut grad);
+        gc.encode_into(&grad, &mut rng_f, &mut qg, &mut msg);
+        std::hint::black_box(msg.len());
+    });
+    rows.push(flat.clone());
+    let mut rng_o = Rng::seed_from(21);
+    let over = bench.measure("backward+encode overlap", Some(param_count as u64), || {
+        ov.encode_overlapped(None, &mut rng_o, &mut msg2, |cb| {
+            backend2.loss_grad_sections(&params, &batch, &mut grad2, cb)
+        });
+        std::hint::black_box(msg2.len());
+    });
+    rows.push(over.clone());
+    print_table(
+        &format!(
+            "Backward/encode overlap — {} params, {sections} sections, {method}, t={t}",
+            param_count
+        ),
+        &rows,
+    );
+
+    // Degenerate-model check vs the measured simulated ps round: on the
+    // zero-latency link with every section ready at t = 0, the
+    // overlapped model's serialized uplink sums to the flat ps model,
+    // which must agree with the simulator's accounting to < 1%.
+    let link = Link::ten_gbps();
+    let sim_grads: Vec<Vec<f32>> =
+        (0..workers.max(1)).map(|w| gaussian(param_count, 90 + w as u64)).collect();
+    let cfg = ExchangeConfig::flat(Topology::Ps, link);
+    let pspec = WireSpec { seed: 7, ..WireSpec::new(method, bucket) }
+        .with_threads(t)
+        .with_pool_mode(shared.clone());
+    let (mean, stats) = run_rounds(&cfg, &pspec, &sim_grads, 1)?;
+    let mut down = Vec::new();
+    orq::codec::encode_fp_into(&mean, &mut down);
+    // per-section uplink shares from the driver's last round; the
+    // common header rides the first section
+    let mut up: Vec<usize> = ov.section_bytes().to_vec();
+    up[0] += msg2.len() - up.iter().sum::<usize>();
+    let ready = vec![0.0f64; up.len()];
+    let model = ps_overlap_time(&link, &ready, &up, down.len());
+    let err_pct = (model - stats.sim_time_s).abs() / stats.sim_time_s.max(1e-12) * 100.0;
+    println!(
+        "overlap model check: ps_overlap_time {model:.3e}s vs simulated {:.3e}s \
+         ({err_pct:.3}% error)",
+        stats.sim_time_s
+    );
+
+    let section = obj(vec![
+        ("model_params", Json::Num(param_count as f64)),
+        ("sections", Json::Num(up.len() as f64)),
+        ("batch", Json::Num(batch_n as f64)),
+        ("flat_s", Json::Num(flat.mean_s)),
+        ("overlap_s", Json::Num(over.mean_s)),
+        ("section_bytes", Json::Arr(up.iter().map(|&b| Json::Num(b as f64)).collect())),
+        ("ps_model_err_pct", Json::Num(err_pct)),
+    ]);
+    Ok((section, flat.mean_s / over.mean_s.max(1e-12)))
 }
 
 /// Round-1 vs steady-state cost of the pooled paths: a fresh pool's
@@ -567,7 +763,7 @@ fn req_f64(j: &Json, key: &str) -> Result<f64> {
 fn validate_codec(j: &Json) -> Result<()> {
     // the artifact on disk must round-trip through the parser
     let j = &Json::parse(&j.dump())?;
-    if j.req("schema")?.as_str() != Some("orq.perfbench.codec/v1") {
+    if j.req("schema")?.as_str() != Some("orq.perfbench.codec/v2") {
         return Err(fail("bad codec schema tag".into()));
     }
     j.req("mode")?;
@@ -624,7 +820,7 @@ fn validate_codec(j: &Json) -> Result<()> {
         return Err(fail("2-bit packing cannot exceed 1 byte/elt".into()));
     }
     let sp = j.req("speedup")?;
-    for key in ["fixed_pack_unpack", "base_s_unpack"] {
+    for key in ["fixed_pack_unpack", "base_s_unpack", "round_twopass"] {
         let v = req_f64(sp, key)?;
         if !v.is_finite() || v <= 0.0 {
             return Err(fail(format!("speedup {key} = {v}")));
@@ -635,7 +831,7 @@ fn validate_codec(j: &Json) -> Result<()> {
 
 fn validate_exchange(j: &Json) -> Result<()> {
     let j = &Json::parse(&j.dump())?;
-    if j.req("schema")?.as_str() != Some("orq.perfbench.exchange/v3") {
+    if j.req("schema")?.as_str() != Some("orq.perfbench.exchange/v4") {
         return Err(fail("bad exchange schema tag".into()));
     }
     for key in ["mode", "elements", "workers", "threads", "bucket_size"] {
@@ -719,8 +915,31 @@ fn validate_exchange(j: &Json) -> Result<()> {
             }
         }
     }
+    // v4: the overlap section measures flat vs section-overlapped
+    // backward+encode and verifies the overlapped closed-form ps model
+    // against the simulator in its degenerate (all-ready-at-0) case.
+    let ov = j.req("overlap")?;
+    for key in ["model_params", "sections", "batch", "flat_s", "overlap_s"] {
+        let v = req_f64(ov, key)?;
+        if !v.is_finite() || v <= 0.0 {
+            return Err(fail(format!("overlap {key} = {v}")));
+        }
+    }
+    let sections = ov
+        .req("section_bytes")?
+        .as_arr()
+        .ok_or_else(|| fail("overlap section_bytes is not an array".into()))?;
+    if sections.is_empty() || sections.len() != req_f64(ov, "sections")? as usize {
+        return Err(fail("overlap section_bytes/sections mismatch".into()));
+    }
+    let err_pct = req_f64(ov, "ps_model_err_pct")?;
+    if !err_pct.is_finite() || err_pct >= 1.0 {
+        return Err(fail(format!(
+            "overlapped ps model disagrees with the simulator: {err_pct}% (must be < 1%)"
+        )));
+    }
     let sp = j.req("speedup")?;
-    for key in ["quantize_encode", "ps_round", "pooled_round"] {
+    for key in ["quantize_encode", "ps_round", "pooled_round", "overlap_round"] {
         let v = req_f64(sp, key)?;
         if !v.is_finite() || v <= 0.0 {
             return Err(fail(format!("speedup {key} = {v}")));

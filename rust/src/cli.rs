@@ -92,7 +92,8 @@ USAGE:
             [--steps N] [--batch N] [--dataset D] [--bucket N] [--clip C]
             [--topology ps|ring|hier|sharded-ps] [--groups N]
             [--shards S] [--staleness K] [--error-feedback] [--threads N]
-            [--pool true|false] [--backend native|pjrt]
+            [--pool true|false] [--overlap] [--sections N]
+            [--backend native|pjrt]
             [--intra-bandwidth BPS] [--intra-latency S]
             [--inter-bandwidth BPS] [--inter-latency S]
             [--artifacts DIR] [--out DIR] [--seed N]
@@ -117,6 +118,12 @@ POOL: --pool true (default) runs codec shards, sharded-PS reduce loops and
        bit-identical results, retained as the perf baseline
 ERROR FEEDBACK: --error-feedback quantizes g + m and keeps the residual m
        (ps/sharded-ps with a quantizing method; serial or parallel codec)
+OVERLAP: --overlap buckets the gradient by model section (--sections N layer
+       groups, cut on the bucket grid) and quantizes+encodes each section on
+       the worker pool while backward still computes the remaining layers —
+       bit-identical wire bytes and trained parameters vs the flat exchange.
+       Needs a quantizing method and the parallel codec (--threads 0 or ≥ 2;
+       --threads 1 degenerates to the flat path)
 ";
 
 #[cfg(test)]

@@ -52,7 +52,7 @@ use super::collective::{
 };
 use super::link::{EdgeClass, LinkMap, TrafficMeter};
 use super::ring::{chunk_range, ring_sub};
-use crate::codec::{self, DecodeScratch};
+use crate::codec;
 use crate::error::{Error, Result};
 use crate::quant::bucket::QuantizedGrad;
 use crate::tensor::rng::Rng;
@@ -207,7 +207,6 @@ impl HierarchicalCollective {
                 slots: Vec::new(),
                 slot_filled: Vec::new(),
                 qg: QuantizedGrad::default(),
-                dscratch: DecodeScratch::default(),
                 msg: Vec::new(),
                 step_bytes: Vec::new(),
             });
@@ -327,7 +326,6 @@ pub struct HierWorker {
     slots: Vec<Vec<f32>>,
     slot_filled: Vec<bool>,
     qg: QuantizedGrad,
-    dscratch: DecodeScratch,
     msg: Vec<u8>,
     step_bytes: Vec<usize>,
 }
@@ -338,9 +336,10 @@ impl HierWorker {
     }
 
     /// Decode `msg` into the chunk scratch and verify it matches chunk `c`
-    /// of the group grid.
+    /// of the group grid. Routed through [`GradCodec`] so a parallel
+    /// `WireSpec` decodes hop chunks on the worker pool too.
     fn decode_chunk(&mut self, msg: &[u8], c: usize, total: usize) -> Result<()> {
-        codec::decode_flat_into(msg, &mut self.chunk, &mut self.dscratch)?;
+        self.codec.decode_flat_into(msg, &mut self.chunk)?;
         let want = chunk_range(total, self.codec.bucket_size(), self.group_size, c).len();
         if self.chunk.len() != want {
             return Err(Error::Comm(format!(
@@ -448,7 +447,7 @@ impl HierWorker {
                         return Err(Error::Comm(format!("unexpected leader upload from group {g}")));
                     }
                     self.slot_filled[g] = true;
-                    codec::decode_flat_into(&bytes, &mut self.slots[g], &mut self.dscratch)?;
+                    self.codec.decode_flat_into(&bytes, &mut self.slots[g])?;
                     if self.slots[g].len() != n {
                         return Err(Error::Shape(format!(
                             "group {g} sum has {} elements, expected {n}",
@@ -511,7 +510,7 @@ impl WorkerExchange for HierWorker {
 
     fn exchange(&mut self, encoded: &mut Vec<u8>, mean_out: &mut Vec<f32>) -> Result<()> {
         let m = self.group_size;
-        codec::decode_flat_into(encoded, &mut self.own, &mut self.dscratch)?;
+        self.codec.decode_flat_into(encoded, &mut self.own)?;
         let n = self.own.len();
         mean_out.clear();
         self.step_bytes.clear();
@@ -571,7 +570,7 @@ impl WorkerExchange for HierWorker {
                     tx.send(bytes.clone()).map_err(|_| Self::hung_up("group member"))?;
                 }
             }
-            codec::decode_flat_into(&bytes, mean_out, &mut self.dscratch)?;
+            self.codec.decode_flat_into(&bytes, mean_out)?;
             // Recycle the broadcast allocation as the caller's next encode
             // buffer (the PS convention) — keeps steady-state rounds free
             // of full-gradient reallocations.
@@ -645,6 +644,43 @@ mod tests {
         assert!(HierarchicalCollective::new(4, 1, lm, &spec).is_ok());
         let bad = WireSpec::new("bogus", 64);
         assert!(HierarchicalCollective::new(2, 1, lm, &bad).is_err());
+    }
+
+    /// Codec-routed decodes (hop chunks, gathered chunks, leader
+    /// uploads, own gradient, fp mean) through the parallel pipeline:
+    /// deterministic decode + thread-count-invariant per-bucket encode
+    /// streams ⇒ the cluster-wide mean matches bit for bit across every
+    /// parallel thread count, for every grouping, quantized and fp.
+    #[test]
+    fn hier_mean_bit_identical_across_decode_thread_counts() {
+        use super::super::collective::{run_once, ExchangeConfig};
+        let workers = 4;
+        let n = 1000; // ragged final bucket on the 64 grid
+        let grads: Vec<Vec<f32>> = (0..workers)
+            .map(|w| {
+                (0..n)
+                    .map(|i| ((i * 37 + w * 101) % 997) as f32 / 997.0 - 0.5)
+                    .collect()
+            })
+            .collect();
+        for method in ["terngrad", "fp"] {
+            for groups in [1usize, 2, 4] {
+                let cfg = ExchangeConfig::hier(groups, LinkMap::uniform(Link::ten_gbps()));
+                let mut reference: Option<Vec<f32>> = None;
+                for threads in [2usize, 3, 4] {
+                    let spec = WireSpec::new(method, 64).with_threads(threads);
+                    let (mean, _) = run_once(&cfg, &spec, &grads).unwrap();
+                    assert_eq!(mean.len(), n);
+                    match &reference {
+                        None => reference = Some(mean),
+                        Some(r) => assert_eq!(
+                            r, &mean,
+                            "{method} hier mean (groups={groups}) diverged at {threads} threads"
+                        ),
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -69,11 +69,27 @@
 //! per-thread solver arenas amortize across rounds; `PoolMode::Scoped`
 //! retains the per-round scoped threads as the measurable baseline.
 //! All modes are bit-identical in wire bytes and decoded means.
+//!
+//! **Backward/communication overlap** ([`overlap`], `--overlap
+//! [--sections N]`) — a model-section bucket map ([`SectionMap`]) seeded
+//! from the backend's layer structure cuts the codec's bucket grid at
+//! layer-group boundaries; the overlap driver ([`OverlapEncoder`])
+//! quantizes+encodes each section on the worker pool the moment the
+//! reverse-order backward reports it complete, hiding encode latency
+//! behind the remaining backward compute. The assembled message is
+//! byte-identical to the flat parallel encode, so every topology,
+//! thread count, and error-feedback setting trains to bit-identical
+//! parameters with overlap on or off. The overlapped closed-form round
+//! models ([`overlap::overlap_round_time`] and the per-topology
+//! wrappers) extend the flat `ps`/`ring`/`hier`/`sharded` models with
+//! the pipeline recurrence `end_i = max(end_{i-1}, ready_i) + comm_i`
+//! plus the exposed mean-broadcast tail.
 
 pub mod async_ps;
 pub mod collective;
 pub mod hier;
 pub mod link;
+pub mod overlap;
 pub mod ps;
 pub mod ring;
 pub mod shard;
@@ -85,6 +101,10 @@ pub use collective::{
 };
 pub use hier::{HierWorker, HierarchicalCollective};
 pub use link::{EdgeClass, Link, LinkMap};
+pub use overlap::{
+    hier_overlap_time, overlap_round_time, ps_overlap_time, ring_overlap_time,
+    sharded_overlap_time, OverlapEncoder, Section, SectionMap,
+};
 pub use ps::{ParameterServer, PsCollective, PsWorker, WorkerHandle};
 pub use ring::{RingAllReduce, RingWorker};
 pub use shard::StalenessStats;

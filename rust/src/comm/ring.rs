@@ -47,7 +47,7 @@ use super::collective::{
     collect_traces, Collective, CommStats, GradCodec, RoundTrace, WireSpec, WorkerExchange,
 };
 use super::link::{Link, LinkMap, TrafficMeter};
-use crate::codec::{self, DecodeScratch};
+use crate::codec;
 use crate::error::{Error, Result};
 use crate::quant::bucket::QuantizedGrad;
 use crate::tensor::rng::Rng;
@@ -151,7 +151,6 @@ impl RingAllReduce {
                 own: Vec::new(),
                 chunk: Vec::new(),
                 qg: QuantizedGrad::default(),
-                dscratch: DecodeScratch::default(),
                 step_bytes: Vec::new(),
             });
         }
@@ -226,7 +225,6 @@ pub struct RingWorker {
     own: Vec<f32>,
     chunk: Vec<f32>,
     qg: QuantizedGrad,
-    dscratch: DecodeScratch,
     step_bytes: Vec<usize>,
 }
 
@@ -245,9 +243,13 @@ impl RingWorker {
     }
 
     /// Decode `msg` into the chunk scratch and verify it matches chunk `c`.
+    /// Routed through [`GradCodec`] so a parallel `WireSpec` decodes hop
+    /// chunks on the worker pool too (split field borrows: the codec
+    /// writes into the chunk scratch while both live in `self`).
     fn decode_chunk(&mut self, msg: &[u8], c: usize, total: usize) -> Result<()> {
-        codec::decode_flat_into(msg, &mut self.chunk, &mut self.dscratch)?;
-        let want = chunk_range(total, self.codec.bucket_size(), self.workers, c).len();
+        let RingWorker { codec, chunk, .. } = self;
+        codec.decode_flat_into(msg, chunk)?;
+        let want = chunk_range(total, codec.bucket_size(), self.workers, c).len();
         if self.chunk.len() != want {
             return Err(Error::Comm(format!(
                 "ring chunk {c} decoded to {} elements, expected {want}",
@@ -282,8 +284,13 @@ impl WorkerExchange for RingWorker {
         let l = self.workers;
         let w = self.id;
         let d = self.codec.bucket_size();
-        // Own contribution, decoded once: what this node adds at each hop.
-        codec::decode_flat_into(encoded, &mut self.own, &mut self.dscratch)?;
+        // Own contribution, decoded once: what this node adds at each hop
+        // (codec-routed, so the parallel pipeline shards this full-size
+        // decode exactly like the PS paths).
+        {
+            let RingWorker { codec, own, .. } = self;
+            codec.decode_flat_into(encoded, own)?;
+        }
         let n = self.own.len();
         mean_out.clear();
         self.step_bytes.clear();
@@ -407,5 +414,65 @@ mod tests {
         assert_eq!(ring_sub(3, 3, 4), 0);
         assert_eq!(ring_sub(2, 0, 4), 2);
         assert_eq!(ring_sub(1, 4, 4), 1);
+    }
+
+    /// The exact bytes of a chunk-sized message through the serial
+    /// scratch decoder and the pooled pipeline decoder: the pipeline
+    /// chunk decode (new in the codec-routed `decode_chunk`) must be a
+    /// pure speedup, bit-identical to the serial path it replaced.
+    #[test]
+    fn pipeline_chunk_decode_matches_serial_decode() {
+        for n in [96usize, 1000] {
+            let g: Vec<f32> =
+                (0..n).map(|i| ((i * 13) % 31) as f32 / 31.0 - 0.5).collect();
+            let mut enc =
+                GradCodec::new(&WireSpec::new("terngrad", 64).with_threads(2)).unwrap();
+            let mut rng = Rng::stream(7, 0);
+            let mut qg = QuantizedGrad::default();
+            let mut msg = Vec::new();
+            enc.encode_into(&g, &mut rng, &mut qg, &mut msg);
+            let mut serial = GradCodec::new(&WireSpec::new("terngrad", 64)).unwrap();
+            let mut par =
+                GradCodec::new(&WireSpec::new("terngrad", 64).with_threads(4)).unwrap();
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            serial.decode_flat_into(&msg, &mut a).unwrap();
+            par.decode_flat_into(&msg, &mut b).unwrap();
+            assert_eq!(a.len(), n);
+            assert_eq!(a, b, "pipeline decode diverged from serial at n={n}");
+        }
+    }
+
+    /// Full ring rounds with codec-routed chunk decode: the per-bucket
+    /// encode streams are thread-count invariant and decode is
+    /// deterministic, so the ring mean must match bit for bit across
+    /// every parallel thread count, quantized and fp.
+    #[test]
+    fn ring_mean_bit_identical_across_decode_thread_counts() {
+        use super::super::collective::{run_once, ExchangeConfig, Topology};
+        let workers = 4;
+        let n = 1000; // ragged final bucket on the 64 grid
+        let grads: Vec<Vec<f32>> = (0..workers)
+            .map(|w| {
+                (0..n)
+                    .map(|i| ((i * 37 + w * 101) % 997) as f32 / 997.0 - 0.5)
+                    .collect()
+            })
+            .collect();
+        let cfg = ExchangeConfig::flat(Topology::Ring, Link::ten_gbps());
+        for method in ["terngrad", "fp"] {
+            let mut reference: Option<Vec<f32>> = None;
+            for threads in [2usize, 3, 4] {
+                let spec = WireSpec::new(method, 64).with_threads(threads);
+                let (mean, _) = run_once(&cfg, &spec, &grads).unwrap();
+                assert_eq!(mean.len(), n);
+                match &reference {
+                    None => reference = Some(mean),
+                    Some(r) => assert_eq!(
+                        r, &mean,
+                        "{method} ring mean diverged at {threads} threads"
+                    ),
+                }
+            }
+        }
     }
 }

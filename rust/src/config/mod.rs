@@ -260,6 +260,19 @@ pub struct TrainConfig {
     /// per-round scoped threads — same results bit for bit, retained as
     /// the perf baseline.
     pub pool: bool,
+    /// Overlap backward compute with section quantize+encode
+    /// (`overlap = true`, `--overlap`): a model-section bucket map seeded
+    /// from the backend's layer structure hands each completed gradient
+    /// section to the worker pool while the backward tail still runs
+    /// ([`crate::comm::overlap`]). Needs a quantizing method; training is
+    /// bit-identical to the flat exchange at every thread count
+    /// (`threads = 1` degenerates to the flat path outright).
+    pub overlap: bool,
+    /// Overlap section count (`sections = N`, `--sections N`): contiguous
+    /// layer groups, balanced to within one layer, cut on the codec's
+    /// bucket grid. Must not exceed the model's layer count when overlap
+    /// is on.
+    pub sections: usize,
     /// Per-edge-class simulated link model (`intra_bandwidth`,
     /// `intra_latency`, `inter_bandwidth`, `inter_latency`).
     pub links: LinkConfig,
@@ -292,6 +305,8 @@ impl Default for TrainConfig {
             error_feedback: false,
             threads: 1,
             pool: true,
+            overlap: false,
+            sections: 4,
             links: LinkConfig::default(),
         }
     }
@@ -335,6 +350,7 @@ impl TrainConfig {
         set!(shards, as_i64, "shards");
         set!(staleness, as_i64, "staleness");
         set!(threads, as_i64, "threads");
+        set!(sections, as_i64, "sections");
         macro_rules! set_link {
             ($field:ident, $name:expr) => {
                 if let Some(v) = get($name) {
@@ -360,6 +376,11 @@ impl TrainConfig {
             c.pool = v
                 .as_bool()
                 .ok_or_else(|| Error::Config("pool must be a bool (true = pooled)".into()))?;
+        }
+        if let Some(v) = get("overlap") {
+            c.overlap = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("overlap must be a bool".into()))?;
         }
         if let Some(v) = get("topology") {
             c.topology = Topology::parse(
@@ -491,6 +512,22 @@ impl TrainConfig {
             }
             // threads != 1 composes since the parallel codec grew a
             // pipeline-side residual (BucketPipeline::encode_ef_into).
+        }
+        // Catches negative config values too (the `threads` hardening,
+        // applied to the overlap knob).
+        if self.sections == 0 || self.sections > 1024 {
+            return Err(Error::Config(format!(
+                "sections ({}) must be in [1, 1024]",
+                self.sections
+            )));
+        }
+        if self.overlap && self.method == "fp" {
+            return Err(Error::Config(
+                "overlap pipelines section quantize+encode behind backward; \
+                 method = \"fp\" has no bucket grid to pipeline (drop overlap \
+                 or pick a quantizing method)"
+                    .into(),
+            ));
         }
         self.links.validate()?;
         Ok(())
@@ -635,6 +672,32 @@ mod tests {
         // wrong value types are errors, not silent defaults
         assert!(TrainConfig::from_map(&parse("[train]\npool = 1").unwrap()).is_err());
         assert!(TrainConfig::from_map(&parse("[train]\npool = \"yes\"").unwrap()).is_err());
+    }
+
+    #[test]
+    fn overlap_keys_parse_and_validate() {
+        let d = TrainConfig::default();
+        assert!(!d.overlap, "flat exchange is the default");
+        assert_eq!(d.sections, 4);
+        let c = TrainConfig::from_map(
+            &parse("[train]\nmethod = \"orq-5\"\noverlap = true\nsections = 8\nthreads = 4")
+                .unwrap(),
+        )
+        .unwrap();
+        assert!(c.overlap);
+        assert_eq!(c.sections, 8);
+        // wrong value types are errors, not silent defaults
+        assert!(TrainConfig::from_map(&parse("[train]\noverlap = 1").unwrap()).is_err());
+        // sections = 0 and wrapped negatives are rejected
+        assert!(TrainConfig::from_map(&parse("[train]\nsections = 0").unwrap()).is_err());
+        assert!(TrainConfig::from_map(&parse("[train]\nsections = -2").unwrap()).is_err());
+        // overlap needs a quantizing method: fp has no bucket grid
+        let bad = parse("[train]\nmethod = \"fp\"\noverlap = true").unwrap();
+        let err = TrainConfig::from_map(&bad).unwrap_err();
+        assert!(err.to_string().contains("quantizing method"), "{err}");
+        // overlap at threads = 1 is allowed — it degenerates to flat
+        let c = TrainConfig { method: "terngrad".into(), overlap: true, ..TrainConfig::default() };
+        assert!(c.validate().is_ok());
     }
 
     #[test]

@@ -30,13 +30,28 @@
 //! sharded-PS reduce loops additionally run on one persistent worker
 //! pool (`quant::pool`) shared across the run, so thread spawns and the
 //! per-thread solver arenas amortize across *rounds*, not just buckets.
+//!
+//! With `TrainConfig::overlap` (`--overlap [--sections N]`, quantizing
+//! methods with a parallel codec) each worker drives its backward
+//! through [`crate::comm::overlap::OverlapEncoder`]: the model-section
+//! bucket map seeded from [`Backend::layer_spans`] hands every completed
+//! section to the worker pool for quantize+encode while the backward
+//! tail is still running ([`Backend::loss_grad_sections`]). The
+//! assembled wire message is byte-identical to the flat post-backward
+//! encode, so overlapped runs train to bit-identical parameters on
+//! every topology, thread count, and error-feedback setting; under EF
+//! the sections stage `g + m` and the residual settles after backward
+//! (decode own message → `m ← (g + m) − deq`). At `threads == 1` the
+//! flag degenerates to the flat path — the serial encoder's single RNG
+//! stream cannot start mid-gradient.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 
 use crate::codec::{self, Packing};
 use crate::comm::link::{Link, LinkMap};
 use crate::comm::{
-    build_topology, CommStats, ExchangeConfig, GradCodec, PoolMode, Topology, WireSpec,
+    build_topology, CommStats, ExchangeConfig, GradCodec, OverlapEncoder, PoolMode, SectionMap,
+    Topology, WireSpec,
 };
 use crate::quant::pool::PoolHandle;
 use crate::config::TrainConfig;
@@ -163,6 +178,18 @@ impl<'a> Trainer<'a> {
                 )));
             }
         }
+        if cfg.overlap {
+            // Fail early with an actionable message: the worker-side
+            // section map would reject this too, but inside a thread.
+            let layers = server_backend.layer_spans().len();
+            if cfg.sections > layers {
+                return Err(Error::Config(format!(
+                    "sections ({}) exceeds the model's layer count ({layers}); every \
+                     overlap section needs at least one layer — reduce sections",
+                    cfg.sections
+                )));
+            }
+        }
         let (mut coll, worker_ends) = build_topology(&xcfg, l, &spec)?;
         let (report_tx, report_rx): (Sender<WorkerReport>, Receiver<WorkerReport>) = channel();
         if classes < self.ds.spec.classes {
@@ -208,19 +235,64 @@ impl<'a> Trainer<'a> {
                     // quantize g + m instead of g, keep the residual
                     // m ← (g + m) − Q(g + m).
                     let mut ef = cfg.error_feedback.then(|| gc.error_feedback());
+                    // Overlapped backward+encode (quantizing methods,
+                    // parallel codec): sections of the gradient hit the
+                    // worker pool as backward completes them. threads == 1
+                    // degenerates to the flat path — the serial encoder
+                    // cannot start mid-gradient — which is bit-identical
+                    // by construction.
+                    let mut overlap = if cfg.overlap && cfg.threads != 1 && !gc.is_fp() {
+                        let map =
+                            SectionMap::new(&backend.layer_spans(), cfg.sections, cfg.bucket_size)
+                                .expect("checked before spawn");
+                        Some(OverlapEncoder::new(&spec, map).expect("checked before spawn"))
+                    } else {
+                        None
+                    };
                     let per_worker_batch = cfg.batch / cfg.workers;
                     for t in 0..cfg.steps {
                         let batch = ds.worker_batch(w, cfg.workers, per_worker_batch, &mut rng_data);
-                        let loss = backend.loss_grad(&params, &batch, &mut grad);
-                        match &mut ef {
-                            Some(ef) => gc.encode_ef_into(ef, &grad, &mut rng_q, &mut qg, &mut msg),
-                            None => gc.encode_into(&grad, &mut rng_q, &mut qg, &mut msg),
+                        let loss = match &mut overlap {
+                            Some(ov) => {
+                                let n = grad.len();
+                                let memory = ef.as_mut().map(|e| e.residual(n));
+                                ov.encode_overlapped(memory, &mut rng_q, &mut msg, |cb| {
+                                    backend.loss_grad_sections(&params, &batch, &mut grad, cb)
+                                })
+                            }
+                            None => {
+                                let loss = backend.loss_grad(&params, &batch, &mut grad);
+                                match &mut ef {
+                                    Some(ef) => {
+                                        gc.encode_ef_into(ef, &grad, &mut rng_q, &mut qg, &mut msg)
+                                    }
+                                    None => gc.encode_into(&grad, &mut rng_q, &mut qg, &mut msg),
+                                }
+                                loss
+                            }
+                        };
+                        if overlap.is_some() {
+                            // Settle the overlapped round: decode our own
+                            // message (exact dequantization of the
+                            // transmitted signal) for the figures, and with
+                            // EF the residual update m ← (g + m) − deq.
+                            gc.decode_flat_into(&msg, &mut deq)
+                                .expect("own encoding always decodes");
+                            if let Some(ef) = &mut ef {
+                                ef.compensate(&grad);
+                                ef.update_residual(&deq);
+                            }
                         }
                         // With EF the figures measure Q(g + m) against the
                         // raw g — the transmitted signal's fidelity to the
                         // current gradient, residual included.
                         let (rel_mse, cosine) = if gc.is_fp() {
                             (0.0, 1.0)
+                        } else if overlap.is_some() {
+                            // deq holds decode(msg) from the settle step —
+                            // the same numbers as the flat branches below.
+                            let e = quant::error::measure_flat(&grad, &deq);
+                            (e.rel_mse, e.cosine)
                         } else if gc.is_parallel() {
                             // The pipeline never materializes `qg`;
                             // measure via the wire bytes instead
@@ -437,6 +509,8 @@ mod tests {
             error_feedback: false,
             threads: 1,
             pool: true,
+            overlap: false,
+            sections: 2,
             links: LinkConfig::default(),
         }
     }
@@ -805,5 +879,84 @@ mod tests {
             );
             assert_eq!(pooled.summary.total_wire_bytes, scoped.summary.total_wire_bytes);
         }
+    }
+
+    /// The overlap tentpole guarantee: backward/encode overlap trains
+    /// bit-identically to the flat post-backward exchange — same trained
+    /// parameters and wire bytes — on every topology and thread count
+    /// (1 degenerates to flat), with and without error feedback where EF
+    /// is supported (the PS paths).
+    #[test]
+    fn overlap_bit_identical_to_flat_exchange_all_topologies() {
+        let ds = tiny_ds();
+        let run_ov = |topology: Topology, threads: usize, overlap: bool, ef: bool| {
+            let mut cfg = tiny_cfg(if ef { "bingrad-b" } else { "orq-3" }, 2);
+            cfg.topology = topology;
+            match topology {
+                Topology::Hier => cfg.groups = 2,
+                Topology::ShardedPs => cfg.shards = 2,
+                _ => {}
+            }
+            cfg.error_feedback = ef;
+            cfg.threads = threads;
+            cfg.overlap = overlap;
+            cfg.sections = 2; // the tiny 2-layer MLP's maximum
+            let factory = native_backend_factory(&cfg.model).unwrap();
+            Trainer::new(cfg, &ds).unwrap().run(factory).unwrap()
+        };
+        for topology in [Topology::Ps, Topology::Ring, Topology::Hier, Topology::ShardedPs] {
+            for threads in [1usize, 2, 4] {
+                for ef in [false, true] {
+                    if ef && !matches!(topology, Topology::Ps | Topology::ShardedPs) {
+                        continue; // EF is a PS-path feature
+                    }
+                    let flat = run_ov(topology, threads, false, ef);
+                    let over = run_ov(topology, threads, true, ef);
+                    assert_eq!(
+                        flat.params, over.params,
+                        "{topology:?} threads={threads} ef={ef}: overlap changed training"
+                    );
+                    assert_eq!(
+                        flat.summary.total_wire_bytes, over.summary.total_wire_bytes,
+                        "{topology:?} threads={threads} ef={ef}: overlap changed wire bytes"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Overlapped runs still learn and report sane figures (not just
+    /// match a baseline).
+    #[test]
+    fn overlap_learns() {
+        let ds = tiny_ds();
+        let mut cfg = tiny_cfg("orq-5", 2);
+        cfg.threads = 2;
+        cfg.overlap = true;
+        let factory = native_backend_factory(&cfg.model).unwrap();
+        let out = Trainer::new(cfg, &ds).unwrap().run(factory).unwrap();
+        assert!(out.summary.test_top1 > 0.6, "top1={}", out.summary.test_top1);
+        assert!(out.summary.mean_quant_rel_mse > 0.0);
+    }
+
+    /// The overlap negative space: sections = 0 and overlap-on-fp die in
+    /// config validation; more sections than model layers dies in the
+    /// trainer's pre-spawn check with an actionable message.
+    #[test]
+    fn overlap_rejects_bad_shapes() {
+        let ds = tiny_ds();
+        let mut cfg = tiny_cfg("orq-3", 2);
+        cfg.overlap = true;
+        cfg.sections = 0;
+        assert!(Trainer::new(cfg, &ds).is_err(), "sections = 0");
+        let mut cfg = tiny_cfg("fp", 2);
+        cfg.overlap = true;
+        assert!(Trainer::new(cfg, &ds).is_err(), "overlap on fp");
+        let mut cfg = tiny_cfg("orq-3", 2);
+        cfg.overlap = true;
+        cfg.sections = 3; // mlp:16-32-8 has 2 layers
+        let factory = native_backend_factory(&cfg.model).unwrap();
+        let err = Trainer::new(cfg, &ds).unwrap().run(factory).unwrap_err();
+        assert!(err.to_string().contains("layer count"), "{err}");
     }
 }

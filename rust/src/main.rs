@@ -70,6 +70,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         "config", "model", "method", "workers", "steps", "batch", "dataset", "bucket",
         "clip", "backend", "artifacts", "out", "seed", "lr", "eval-every", "topology",
         "groups", "shards", "staleness", "error-feedback", "threads", "pool",
+        "overlap", "sections",
         "intra-bandwidth", "intra-latency", "inter-bandwidth", "inter-latency",
     ])?;
     let mut cfg = match args.get("config") {
@@ -134,6 +135,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(p) = args.get_parse::<bool>("pool")? {
         cfg.pool = p;
+    }
+    if args.flag("overlap") {
+        cfg.overlap = true;
+    }
+    if let Some(s) = args.get_parse::<usize>("sections")? {
+        cfg.sections = s;
     }
     if let Some(b) = args.get_parse::<f64>("intra-bandwidth")? {
         cfg.links.intra_bandwidth = b;

@@ -30,6 +30,34 @@ pub trait Backend: Send {
     /// Compute loss and write the flat gradient into `grad_out`.
     fn loss_grad(&mut self, params: &[f32], batch: &Batch, grad_out: &mut [f32]) -> f32;
 
+    /// Contiguous parameter span of each model layer, in flat-vector
+    /// order (spans tile `0..param_count()`). Backends without exposed
+    /// layer structure report one whole-vector span; the overlap driver
+    /// ([`crate::comm::overlap`]) seeds its section bucket map from this.
+    fn layer_spans(&self) -> Vec<std::ops::Range<usize>> {
+        vec![0..self.param_count()]
+    }
+
+    /// [`Self::loss_grad`] that reports gradient completion while
+    /// backward is still running: `on_ready(frontier, grad)` fires
+    /// whenever the finished region of `grad_out` grows to
+    /// `[frontier, len)` — reverse layer order, so frontiers strictly
+    /// descend and reach 0 by return. Loss and gradient are bit-identical
+    /// to [`Self::loss_grad`]; the callback is pure observation. The
+    /// default computes the full gradient and reports everything at
+    /// once — correct for any backend, with no overlap to exploit.
+    fn loss_grad_sections(
+        &mut self,
+        params: &[f32],
+        batch: &Batch,
+        grad_out: &mut [f32],
+        on_ready: &mut dyn FnMut(usize, &[f32]),
+    ) -> f32 {
+        let loss = self.loss_grad(params, batch, grad_out);
+        on_ready(0, grad_out);
+        loss
+    }
+
     /// Logits for evaluation, `batch × classes` row-major.
     fn logits(&mut self, params: &[f32], batch: &Batch) -> Vec<f32>;
 }

@@ -61,8 +61,9 @@ impl NativeMlp {
         out
     }
 
-    fn layer_offsets(&self) -> Vec<(usize, usize)> {
-        // (w_offset, b_offset) per layer
+    /// `(w_offset, b_offset)` per layer in the flat parameter vector —
+    /// the layer structure the overlap section map is seeded from.
+    pub fn layer_offsets(&self) -> Vec<(usize, usize)> {
         let mut out = Vec::with_capacity(self.layers());
         let mut off = 0;
         for l in 0..self.layers() {
@@ -158,6 +159,45 @@ impl Backend for NativeMlp {
     }
 
     fn loss_grad(&mut self, params: &[f32], batch: &Batch, grad_out: &mut [f32]) -> f32 {
+        self.backward(params, batch, grad_out, &mut |_, _| {})
+    }
+
+    fn layer_spans(&self) -> Vec<std::ops::Range<usize>> {
+        let offsets = self.layer_offsets();
+        (0..self.layers())
+            .map(|l| offsets[l].0..offsets[l].1 + self.dims[l + 1])
+            .collect()
+    }
+
+    fn loss_grad_sections(
+        &mut self,
+        params: &[f32],
+        batch: &Batch,
+        grad_out: &mut [f32],
+        on_ready: &mut dyn FnMut(usize, &[f32]),
+    ) -> f32 {
+        self.backward(params, batch, grad_out, on_ready)
+    }
+
+    fn logits(&mut self, params: &[f32], batch: &Batch) -> Vec<f32> {
+        self.forward(params, batch);
+        self.scratch.acts[self.layers()].clone()
+    }
+}
+
+impl NativeMlp {
+    /// Manual backprop, reporting each layer's completed gradient slice
+    /// through `on_ready` (reverse layer order — the completed region is
+    /// the descending suffix `[frontier, n)`) before spending time on
+    /// that layer's upstream delta. The callback is pure observation:
+    /// loss and gradient are bit-identical for every callback.
+    fn backward(
+        &mut self,
+        params: &[f32],
+        batch: &Batch,
+        grad_out: &mut [f32],
+        on_ready: &mut dyn FnMut(usize, &[f32]),
+    ) -> f32 {
         assert_eq!(params.len(), self.param_count(), "param length");
         assert_eq!(grad_out.len(), params.len(), "grad length");
         assert_eq!(batch.in_dim, self.dims[0], "input dim");
@@ -214,6 +254,9 @@ impl Backend for NativeMlp {
                     }
                 }
             }
+            // Layer l's whole slice (dW then db) is final: report the new
+            // frontier before spending time on the upstream delta.
+            on_ready(wo, grad_out);
             if l > 0 {
                 // delta_prev = (delta · W^T) ⊙ relu'(z[l-1])
                 let w = &params[wo..wo + din * dout];
@@ -242,11 +285,6 @@ impl Backend for NativeMlp {
             }
         }
         loss
-    }
-
-    fn logits(&mut self, params: &[f32], batch: &Batch) -> Vec<f32> {
-        self.forward(params, batch);
-        self.scratch.acts[self.layers()].clone()
     }
 }
 
@@ -387,6 +425,42 @@ mod tests {
         }
         let acc = correct / total;
         assert!(acc > 0.9, "trained accuracy {acc}");
+    }
+
+    #[test]
+    fn sectioned_backward_bit_identical_and_frontiers_descend() {
+        let (mut m, params, batch) = tiny_model_and_batch();
+        let p = m.param_count();
+        let mut flat = vec![0.0f32; p];
+        let loss_flat = m.loss_grad(&params, &batch, &mut flat);
+
+        let mut g = vec![0.0f32; p];
+        let mut frontiers = Vec::new();
+        let loss = m.loss_grad_sections(&params, &batch, &mut g, &mut |f, grad| {
+            assert_eq!(grad.len(), p);
+            // the reported suffix is final: it already matches the
+            // flat-backward gradient bit for bit
+            assert_eq!(&grad[f..], &flat[f..], "suffix [{f}..) not final");
+            frontiers.push(f);
+        });
+        assert_eq!(loss.to_bits(), loss_flat.to_bits());
+        assert_eq!(g, flat);
+
+        // one report per layer, reverse layer order, down to 0
+        let spans = m.layer_spans();
+        assert_eq!(frontiers.len(), spans.len());
+        let mut want: Vec<usize> = spans.iter().map(|s| s.start).collect();
+        want.reverse();
+        assert_eq!(frontiers, want);
+        assert_eq!(*frontiers.last().unwrap(), 0);
+
+        // spans tile the parameter vector contiguously
+        let mut covered = 0usize;
+        for s in &spans {
+            assert_eq!(s.start, covered);
+            covered = s.end;
+        }
+        assert_eq!(covered, p);
     }
 
     #[test]

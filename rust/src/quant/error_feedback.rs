@@ -57,6 +57,19 @@ impl ErrorFeedback {
         &self.compensated
     }
 
+    /// The residual memory, lazily sized to `n`. The overlap driver
+    /// ([`crate::comm::overlap::OverlapEncoder`]) stages per-section
+    /// compensation `g[sec] + m[sec]` itself — it never holds the whole
+    /// gradient mid-backward — then settles the round through
+    /// [`Self::compensate`] + [`Self::update_residual`] once backward
+    /// and the decode of its own message are done.
+    pub(crate) fn residual(&mut self, n: usize) -> &[f32] {
+        if self.memory.len() != n {
+            self.memory = vec![0.0; n];
+        }
+        &self.memory
+    }
+
     /// Absorb the residual after the caller quantized the compensated
     /// signal from [`Self::compensate`]: `m ← (g + m) − deq`, where
     /// `deq` is the dequantized transmitted signal (for wire codecs,

@@ -124,10 +124,26 @@ fn sanitize(v: f32) -> f32 {
     }
 }
 
+/// Lane-block width of the two-pass [`random_round`] kernel: small
+/// enough that the bracket/probability buffers live in L1, wide enough
+/// for the compiler to unroll pass 1 into straight-line SIMD.
+const ROUND_LANES: usize = 64;
+
 /// Random rounding against sorted levels — Eq. (7) of the paper, the exact
 /// mirror of the Pallas kernel in `python/compile/kernels/quantize.py`
 /// (and of `ref.stochastic_quantize_ref`): bracket by counting levels ≤ v,
 /// round up with probability (v − b_lo)/(b_hi − b_lo), clamp outside.
+///
+/// For the paper's level counts (s ≤ 16) the loop runs as a *two-pass
+/// lane-block kernel*: pass 1 brackets [`ROUND_LANES`] elements at a time
+/// and stores `(lower, p)` into fixed stack buffers — no RNG calls, no
+/// `Vec` growth, no data-dependent branches inside the block, so the
+/// bracketing arithmetic autovectorizes — and pass 2 draws one `rng.f32()`
+/// per element *in element order* and applies the branchless select. The
+/// probability is computed with the identical float operations and the
+/// RNG is consumed in the identical sequence as the retained scalar
+/// kernel, so indices are bit-identical to [`random_round_reference`]
+/// (differential-tested) and the wire format is unchanged.
 ///
 /// Non-finite input never panics: NaN is treated as 0.0, ±∞ clamp into
 /// the extreme brackets (regression-tested; the old binary-search path
@@ -138,27 +154,78 @@ pub fn random_round(g: &[f32], levels: &[f32], rng: &mut Rng, out: &mut Vec<u8>)
     out.clear();
     out.reserve(g.len());
     let s = levels.len();
-    if s <= 16 {
-        // Branch-free bracketing for the paper's level counts (s ≤ 9):
-        // count levels ≤ v instead of binary-searching — no unpredictable
-        // branches, vectorizes, and mirrors the Pallas kernel exactly
-        // (§Perf in EXPERIMENTS.md quantifies the win over binary search).
-        for &v in g {
+    if s > 16 {
+        // Large level tables binary-search; the lane-block restructure
+        // buys nothing once bracketing is log-time.
+        random_round_search(g, levels, rng, out);
+        return;
+    }
+    let mut lo_buf = [0u8; ROUND_LANES];
+    let mut p_buf = [0.0f32; ROUND_LANES];
+    for chunk in g.chunks(ROUND_LANES) {
+        // Pass 1: bracket + round-up probability, RNG-free. Writing to
+        // fixed-width stack buffers (not `out`) keeps the loop free of
+        // bounds checks and reallocation, so it vectorizes.
+        for (j, &v) in chunk.iter().enumerate() {
             let v = sanitize(v);
             let mut lower = 0usize;
             for &b in &levels[1..] {
                 lower += (v >= b) as usize;
             }
-            lower = lower.min(s - 2);
+            let lower = lower.min(s - 2);
             let b_lo = levels[lower];
             let b_hi = levels[lower + 1];
             let width = b_hi - b_lo;
             let p = if width > 0.0 { ((v - b_lo) / width).clamp(0.0, 1.0) } else { 0.0 };
-            let up = (rng.f32() < p) as usize;
-            out.push((lower + up) as u8);
+            lo_buf[j] = lower as u8;
+            p_buf[j] = p;
         }
+        // Pass 2: one RNG draw per element in element order — the draw
+        // sequence is the wire contract — and a branchless select.
+        for j in 0..chunk.len() {
+            let up = (rng.f32() < p_buf[j]) as u8;
+            out.push(lo_buf[j] + up);
+        }
+    }
+}
+
+/// The retained scalar [`random_round`] kernel — one fused
+/// bracket+draw+push loop per element, exactly the pre-restructure hot
+/// path. Kept as the reference for the rounding differential suite (the
+/// codec-kernel convention: every restructured kernel keeps its scalar
+/// baseline in-tree) and measured against the two-pass kernel in
+/// `BENCH_codec.json`.
+pub fn random_round_reference(g: &[f32], levels: &[f32], rng: &mut Rng, out: &mut Vec<u8>) {
+    debug_assert!(levels.len() >= 2);
+    debug_assert!(levels.windows(2).all(|w| w[0] <= w[1]));
+    out.clear();
+    out.reserve(g.len());
+    let s = levels.len();
+    if s > 16 {
+        random_round_search(g, levels, rng, out);
         return;
     }
+    for &v in g {
+        let v = sanitize(v);
+        let mut lower = 0usize;
+        for &b in &levels[1..] {
+            lower += (v >= b) as usize;
+        }
+        lower = lower.min(s - 2);
+        let b_lo = levels[lower];
+        let b_hi = levels[lower + 1];
+        let width = b_hi - b_lo;
+        let p = if width > 0.0 { ((v - b_lo) / width).clamp(0.0, 1.0) } else { 0.0 };
+        let up = (rng.f32() < p) as usize;
+        out.push((lower + up) as u8);
+    }
+}
+
+/// Binary-search bracketing for large level tables (s > 16) — shared by
+/// the two-pass kernel and the scalar reference, so the differential
+/// suite covers one implementation, not two copies.
+fn random_round_search(g: &[f32], levels: &[f32], rng: &mut Rng, out: &mut Vec<u8>) {
+    let s = levels.len();
     for &v in g {
         let v = sanitize(v);
         // lower bracket index in [0, s-2]; partition_point never panics on
@@ -354,6 +421,62 @@ mod tests {
         let mut buf = vec![0.0; 4];
         qb.dequantize_into(&mut buf);
         assert_eq!(buf, vec![2.0, -1.0, 0.0, 0.0]);
+    }
+
+    /// The two-pass lane-block kernel must be bit-identical to the
+    /// retained scalar reference: same indices from the same seed for
+    /// every level count, every length (incl. non-multiples of the lane
+    /// width and lengths below one block), and non-finite inputs — and
+    /// the RNG must end in the same state (draw-sequence contract).
+    #[test]
+    fn two_pass_round_bit_identical_to_scalar_reference() {
+        let mut data_rng = Rng::seed_from(17);
+        for s in [2usize, 3, 5, 9, 16, 17, 33] {
+            let levels: Vec<f32> =
+                (0..s).map(|i| i as f32 / (s - 1) as f32 * 2.0 - 1.0).collect();
+            for n in [0usize, 1, 63, 64, 65, 200, 1024] {
+                let mut g: Vec<f32> = (0..n).map(|_| data_rng.gaussian_f32()).collect();
+                if n > 4 {
+                    g[0] = f32::NAN;
+                    g[1] = f32::INFINITY;
+                    g[2] = f32::NEG_INFINITY;
+                    g[3] = levels[0]; // exactly on a level: width-0 guard
+                }
+                let seed = 90 + (s * 1000 + n) as u64;
+                let mut rng_a = Rng::seed_from(seed);
+                let mut rng_b = Rng::seed_from(seed);
+                let mut a = Vec::new();
+                let mut b = Vec::new();
+                random_round(&g, &levels, &mut rng_a, &mut a);
+                random_round_reference(&g, &levels, &mut rng_b, &mut b);
+                assert_eq!(a, b, "s={s} n={n}");
+                // same number of draws consumed → identical next output
+                assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "s={s} n={n}");
+            }
+        }
+    }
+
+    /// The differential holds through every scheme's solved level tables
+    /// too (degenerate tables with repeated levels included).
+    #[test]
+    fn two_pass_round_matches_reference_through_schemes() {
+        let mut data_rng = Rng::seed_from(23);
+        let g: Vec<f32> = (0..777).map(|_| data_rng.gaussian_f32()).collect();
+        for name in paper_methods() {
+            if name == "fp" {
+                continue;
+            }
+            let q = from_name(name).unwrap();
+            let qb = q.quantize_bucket(&g, &mut Rng::seed_from(5));
+            if qb.levels.len() < 2 {
+                continue; // deterministic schemes may bypass random_round
+            }
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            random_round(&g, &qb.levels, &mut Rng::seed_from(6), &mut a);
+            random_round_reference(&g, &qb.levels, &mut Rng::seed_from(6), &mut b);
+            assert_eq!(a, b, "{name}");
+        }
     }
 
     /// `quantize_bucket_into` must reuse the output's buffers and agree

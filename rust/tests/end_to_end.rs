@@ -45,6 +45,8 @@ fn cfg(method: &str) -> TrainConfig {
         error_feedback: false,
         threads: 1,
         pool: true,
+        overlap: false,
+        sections: 4,
         links: orq::config::LinkConfig::default(),
     }
 }
