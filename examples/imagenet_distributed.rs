@@ -73,6 +73,8 @@ fn main() -> orq::Result<()> {
         error_feedback: false,
         threads,
         pool,
+        overlap: false,
+        sections: 4,
         links: orq::config::LinkConfig::default(),
     };
     println!(

@@ -29,34 +29,44 @@
 //! (`path: "scalar"`, `quant::random_round_reference`), with
 //! `speedup.round_twopass = scalar / two-pass`.
 //!
-//! `BENCH_exchange.json` (v4): `{ schema: "orq.perfbench.exchange/v4",
+//! `BENCH_exchange.json` (v5): `{ schema: "orq.perfbench.exchange/v5",
 //! mode, elements, workers, threads, bucket_size, quantize: [{method,
 //! path: "serial"|"parallel"|"parallel-scoped", mean_s, melem_s}],
 //! rounds: [{topology, path, mean_s, wire_bytes, sim_time_s, shards,
 //! staleness}], amortization: {quantize_encode: {round1_s, steady_s,
 //! rounds}, ps_round: {round1_s, steady_s, rounds}}, overlap:
 //! {model_params, sections, batch, flat_s, overlap_s, section_bytes,
-//! ps_model_err_pct}, speedup: {quantize_encode, ps_round, pooled_round,
-//! overlap_round} }`. v3 preserved every v2 field (which preserved every
-//! v1 field) and added: the `path: "parallel-scoped"` quantize and
-//! ps-round entries — the retained PR 3/4 per-round `std::thread::scope`
-//! execution, measured in the same run as the pooled default
-//! (`path: "parallel"`) so `speedup.pooled_round = scoped / pooled` is a
-//! same-machine figure — and the `amortization` section (first pooled
-//! call vs steady-state mean: round 1 pays the thread spawns and the
-//! solver-arena growth that steady-state rounds no longer do). Every
-//! round entry is a per-round average over the same fixed multi-round
-//! window (the largest `K + 1` in the set), so async warm rounds (mean
-//! pull + decode) are in the measurement and per-iteration topology
-//! setup amortizes identically across entries. v4 adds the `overlap`
-//! section: backward+encode wall time on a real native MLP, flat
-//! (sequential backward then encode) vs overlapped (sections encode on
-//! the pool while the backward tail runs, `comm::overlap`), with the
-//! assembled messages asserted byte-identical and
-//! `speedup.overlap_round = flat / overlapped`; `ps_model_err_pct`
-//! verifies the overlapped closed-form PS model against the measured
-//! simulated round (degenerate case — every section ready at t = 0 on
-//! the zero-latency link sums to the flat model) to < 1%.
+//! ps_model_err_pct}, downlink: {topology, rounds, fp | quantized |
+//! quantized_ef: {wire_bytes_up, wire_bytes_down, mean_s, sim_time_s}},
+//! speedup: {quantize_encode, ps_round, pooled_round, overlap_round,
+//! downlink_compression} }`. v3 preserved every v2 field (which
+//! preserved every v1 field) and added: the `path: "parallel-scoped"`
+//! quantize and ps-round entries — the retained PR 3/4 per-round
+//! `std::thread::scope` execution, measured in the same run as the
+//! pooled default (`path: "parallel"`) so `speedup.pooled_round =
+//! scoped / pooled` is a same-machine figure — and the `amortization`
+//! section (first pooled call vs steady-state mean: round 1 pays the
+//! thread spawns and the solver-arena growth that steady-state rounds
+//! no longer do). Every round entry is a per-round average over the
+//! same fixed multi-round window (the largest `K + 1` in the set), so
+//! async warm rounds (mean pull + decode) are in the measurement and
+//! per-iteration topology setup amortizes identically across entries.
+//! v4 added the `overlap` section: backward+encode wall time on a real
+//! native MLP, flat (sequential backward then encode) vs overlapped
+//! (sections encode on the pool while the backward tail runs,
+//! `comm::overlap`), with the assembled messages asserted
+//! byte-identical and `speedup.overlap_round = flat / overlapped`;
+//! `ps_model_err_pct` verifies the overlapped closed-form PS model
+//! against the measured simulated round (degenerate case — every
+//! section ready at t = 0 on the zero-latency link sums to the flat
+//! model) to < 1%. v5 adds the `downlink` section (the PR 7 tentpole):
+//! the same ps round with the mean broadcast FP, requantized once at
+//! the server, and requantized with the server-side downlink residual
+//! armed (TernGrad-style bidirectional compression) — per-edge-class
+//! byte accounting shows the uplink untouched and the downlink shrunk,
+//! and `speedup.downlink_compression = fp down bytes / quantized down
+//! bytes` is a deterministic codec-accounting ratio the CI floor gates
+//! (it catches the downlink silently falling back to FP, not noise).
 //!
 //! `--smoke` runs small sizes, then re-parses both artifacts and asserts
 //! the schema plus monotone sanity (sizes and rates positive, fixed-width
@@ -509,6 +519,8 @@ fn bench_exchange(
     let amortization = bench_amortization(n, threads, workers, bucket, method, &grads, smoke)?;
     let (overlap, overlap_round) =
         bench_overlap(bench, threads, workers, bucket, method, &shared, smoke)?;
+    let (downlink, downlink_compression) =
+        bench_downlink(bench, workers, bucket, method, &grads)?;
 
     let speedup = obj(vec![
         ("quantize_encode", Json::Num(qe[0] / qe[1].max(1e-12))),
@@ -521,17 +533,22 @@ fn bench_exchange(
         // same model, batch and pool — the PR 6 figure the CI floor
         // gates (overlap must not lose the hidden-encode win).
         ("overlap_round", Json::Num(overlap_round)),
+        // fp / quantized broadcast bytes on the same ps round — exact
+        // codec accounting (deterministic, not timing), so the CI floor
+        // catches the downlink silently falling back to FP.
+        ("downlink_compression", Json::Num(downlink_compression)),
     ]);
     println!(
         "exchange speedups ({threads} threads): quantize+encode ×{:.2} (serial/pooled), \
          ps round ×{:.2} (serial/pooled), ps round ×{:.2} (scoped/pooled), \
-         backward+encode ×{overlap_round:.2} (flat/overlapped)",
+         backward+encode ×{overlap_round:.2} (flat/overlapped), \
+         downlink bytes ×{downlink_compression:.2} (fp/quantized broadcast)",
         qe[0] / qe[1].max(1e-12),
         ps_round[0] / ps_round[1].max(1e-12),
         ps_round[2] / ps_round[1].max(1e-12)
     );
     Ok(obj(vec![
-        ("schema", Json::Str("orq.perfbench.exchange/v4".into())),
+        ("schema", Json::Str("orq.perfbench.exchange/v5".into())),
         ("mode", Json::Str(mode.into())),
         ("elements", Json::Num(n as f64)),
         ("workers", Json::Num(workers as f64)),
@@ -541,8 +558,82 @@ fn bench_exchange(
         ("rounds", Json::Arr(round_entries)),
         ("amortization", amortization),
         ("overlap", overlap),
+        ("downlink", downlink),
         ("speedup", speedup),
     ]))
+}
+
+/// Quantized mean downlinks (the PR 7 tentpole figure): the same ps
+/// round three ways — mean broadcast FP (baseline), requantized once at
+/// the server, and requantized with the server-side downlink residual
+/// armed (TernGrad-style bidirectional compression, `--error-feedback`
+/// + `--quantize-downlink`). Byte figures are exact per-edge-class
+/// codec accounting (`CommStats::wire_bytes_up` / `wire_bytes_down`),
+/// so the reported compression ratio is deterministic; the wall-time
+/// figures show what the extra server-side requantize and the residual
+/// upkeep cost per round. Two rounds per window so the EF entry
+/// exercises residual reuse, all figures per-round averages.
+///
+/// Returns the `downlink` JSON section and the fp/quantized broadcast
+/// byte ratio.
+fn bench_downlink(
+    bench: &Bench,
+    workers: usize,
+    bucket: usize,
+    method: &str,
+    grads: &[Vec<f32>],
+) -> Result<(Json, f64)> {
+    let link = Link::ten_gbps();
+    let rounds = 2usize;
+    let inv = 1.0 / rounds as f64;
+    let variants: [(&str, bool, bool); 3] = [
+        ("fp", false, false),
+        ("quantized", true, false),
+        ("quantized_ef", true, true),
+    ];
+    let mut rows = Vec::new();
+    let mut sections: Vec<(&str, Json)> =
+        vec![("topology", Json::Str("ps".into())), ("rounds", Json::Num(rounds as f64))];
+    let mut down_bytes = [0u64; 2]; // [fp, quantized] broadcast totals
+    for (i, (name, dl, ef)) in variants.into_iter().enumerate() {
+        let cfg = ExchangeConfig::flat(Topology::Ps, link)
+            .with_downlink(dl)
+            .with_error_feedback(ef);
+        // serial codec, scoped driver: the figure isolates the downlink
+        // codec work from pool effects measured elsewhere
+        let spec = WireSpec { seed: 7, ..WireSpec::new(method, bucket) }
+            .with_pool_mode(PoolMode::Scoped);
+        // one validated window outside the timer, for stats + fail-fast
+        let (_, stats) = run_rounds(&cfg, &spec, grads, rounds)?;
+        let meas = bench.measure(&format!("ps round downlink={name}"), None, || {
+            let out = run_rounds(&cfg, &spec, grads, rounds).expect("validated above");
+            std::hint::black_box(out.1.wire_bytes);
+        });
+        if i < 2 {
+            down_bytes[i] = stats.wire_bytes_down;
+        }
+        sections.push((
+            name,
+            obj(vec![
+                ("wire_bytes_up", Json::Num(stats.wire_bytes_up as f64 * inv)),
+                ("wire_bytes_down", Json::Num(stats.wire_bytes_down as f64 * inv)),
+                ("mean_s", Json::Num(meas.mean_s * inv)),
+                ("sim_time_s", Json::Num(stats.sim_time_s * inv)),
+            ]),
+        ));
+        rows.push(meas);
+    }
+    print_table(
+        &format!("Quantized downlink — ps, {workers} workers, {method}, d={bucket}"),
+        &rows,
+    );
+    let compression = down_bytes[0] as f64 / (down_bytes[1] as f64).max(1e-12);
+    println!(
+        "downlink broadcast: fp {} B/round vs quantized {} B/round (×{compression:.2})",
+        down_bytes[0] / rounds as u64,
+        down_bytes[1] / rounds as u64
+    );
+    Ok((obj(sections), compression))
 }
 
 /// Backward/encode overlap on a real native MLP: flat (sequential
@@ -831,7 +922,7 @@ fn validate_codec(j: &Json) -> Result<()> {
 
 fn validate_exchange(j: &Json) -> Result<()> {
     let j = &Json::parse(&j.dump())?;
-    if j.req("schema")?.as_str() != Some("orq.perfbench.exchange/v4") {
+    if j.req("schema")?.as_str() != Some("orq.perfbench.exchange/v5") {
         return Err(fail("bad exchange schema tag".into()));
     }
     for key in ["mode", "elements", "workers", "threads", "bucket_size"] {
@@ -938,8 +1029,31 @@ fn validate_exchange(j: &Json) -> Result<()> {
             "overlapped ps model disagrees with the simulator: {err_pct}% (must be < 1%)"
         )));
     }
+    // v5: the downlink section compares the fp broadcast against the
+    // server-requantized one (plain and with the downlink residual
+    // armed) — same uplink bytes, strictly smaller downlink bytes.
+    let dl = j.req("downlink")?;
+    dl.req("topology")?;
+    for name in ["fp", "quantized", "quantized_ef"] {
+        let s = dl.req(name)?;
+        for key in ["wire_bytes_up", "wire_bytes_down", "mean_s", "sim_time_s"] {
+            let v = req_f64(s, key)?;
+            if !v.is_finite() || v <= 0.0 {
+                return Err(fail(format!("downlink {name}.{key} = {v}")));
+            }
+        }
+    }
+    let (fp, q) = (dl.req("fp")?, dl.req("quantized")?);
+    if req_f64(q, "wire_bytes_down")? >= req_f64(fp, "wire_bytes_down")? {
+        return Err(fail("quantized downlink must shrink the broadcast".into()));
+    }
+    if req_f64(q, "wire_bytes_up")? != req_f64(fp, "wire_bytes_up")? {
+        return Err(fail("quantized downlink must leave the uplink untouched".into()));
+    }
     let sp = j.req("speedup")?;
-    for key in ["quantize_encode", "ps_round", "pooled_round", "overlap_round"] {
+    for key in
+        ["quantize_encode", "ps_round", "pooled_round", "overlap_round", "downlink_compression"]
+    {
         let v = req_f64(sp, key)?;
         if !v.is_finite() || v <= 0.0 {
             return Err(fail(format!("speedup {key} = {v}")));

@@ -91,7 +91,8 @@ USAGE:
   orq train [--config FILE] [--model M] [--method Q] [--workers N]
             [--steps N] [--batch N] [--dataset D] [--bucket N] [--clip C]
             [--topology ps|ring|hier|sharded-ps] [--groups N]
-            [--shards S] [--staleness K] [--error-feedback] [--threads N]
+            [--shards S] [--staleness K] [--error-feedback]
+            [--quantize-downlink] [--threads N]
             [--pool true|false] [--overlap] [--sections N]
             [--backend native|pjrt]
             [--intra-bandwidth BPS] [--intra-latency S]
@@ -117,7 +118,13 @@ POOL: --pool true (default) runs codec shards, sharded-PS reduce loops and
        once per run); --pool false keeps per-round scoped threads —
        bit-identical results, retained as the perf baseline
 ERROR FEEDBACK: --error-feedback quantizes g + m and keeps the residual m
-       (ps/sharded-ps with a quantizing method; serial or parallel codec)
+       (any topology with a quantizing method; serial or parallel codec).
+       On ring/hier each requantization hop carries its own residual; with
+       --quantize-downlink the server keeps a downlink residual too
+DOWNLINK: --quantize-downlink requantizes the mean broadcast once at the
+       aggregation point (ps, hier root, each sharded-ps shard) instead of
+       sending it FP — every node still decodes the identical bytes. Not
+       applicable to ring (its all-gather chunks already ride encoded)
 OVERLAP: --overlap buckets the gradient by model section (--sections N layer
        groups, cut on the bucket grid) and quantizes+encodes each section on
        the worker pool while backward still computes the remaining layers —

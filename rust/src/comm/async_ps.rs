@@ -15,10 +15,14 @@
 //! 2. **Per-shard reduce.** Each shard-server thread collects one
 //!    upload per worker (accumulating in worker order, in f64 — the
 //!    exact [`super::ps::PsCollective`] aggregation restricted to its
-//!    chunk), means, FP-encodes the chunk mean, and broadcasts one
-//!    versioned mean frame to every worker plus an accounting record to
-//!    the coordinator. With `S = 1` and `K = 0` every decoded value is
-//!    bit-identical to [`PsCollective`](super::ps::PsCollective).
+//!    chunk), means, encodes the chunk mean (FP by default; requantized
+//!    with its own serial codec + RNG stream under `quantize_downlink`,
+//!    optionally EF-compensated — TernGrad-style bidirectional
+//!    compression), and broadcasts one versioned mean frame to every
+//!    worker plus an accounting record to the coordinator. Every decoder
+//!    sees the same frame bytes, so the applied mean stays bit-identical
+//!    everywhere, lossless or not. With `S = 1` and `K = 0` every decoded
+//!    value is bit-identical to [`PsCollective`](super::ps::PsCollective).
 //! 3. **Bounded-staleness pull.** At round `r` with window `K`, a worker
 //!    blocks only for the mean of round `r − K` (zeros for the first `K`
 //!    cold rounds) and *verifies the frame's round field*: any frame
@@ -67,6 +71,9 @@ use super::shard::{
 };
 use crate::codec::{self, DecodeScratch};
 use crate::error::{Error, Result};
+use crate::quant::bucket::QuantizedGrad;
+use crate::quant::error_feedback::ErrorFeedback;
+use crate::tensor::rng::Rng;
 
 /// Per-round accounting record a shard sends the coordinator.
 enum ShardRecord {
@@ -168,6 +175,14 @@ struct ShardServer {
     downlinks: Vec<Sender<Vec<u8>>>,
     record_tx: Sender<ShardRecord>,
     round: u64,
+    /// Requantize the mean downlink with `codec` (serial — the shard
+    /// loop may itself run on a pool worker, so pool-in-pool encoding is
+    /// off the table; wire bytes are thread-count invariant anyway).
+    quantize_downlink: bool,
+    codec: GradCodec,
+    down_ef: Option<ErrorFeedback>,
+    rng_down: Rng,
+    qg: QuantizedGrad,
     acc: Vec<f64>,
     flat: Vec<f32>,
     mean: Vec<f32>,
@@ -243,8 +258,28 @@ impl ShardServer {
         let inv = 1.0 / self.workers as f64;
         self.mean.clear();
         self.mean.extend(self.acc.iter().map(|a| (*a * inv) as f32));
-        // FP downlink: lossless, so every decoder sees identical values.
-        codec::encode_fp_into(&self.mean, &mut self.payload);
+        // Encode the chunk mean once; workers and the coordinator decode
+        // the identical frame bytes, so the applied mean is bit-identical
+        // everywhere whether the downlink is lossless FP or requantized.
+        if self.quantize_downlink && !self.codec.is_fp() && !self.mean.is_empty() {
+            match &mut self.down_ef {
+                Some(ef) => self.codec.encode_ef_into(
+                    ef,
+                    &self.mean,
+                    &mut self.rng_down,
+                    &mut self.qg,
+                    &mut self.payload,
+                ),
+                None => self.codec.encode_into(
+                    &self.mean,
+                    &mut self.rng_down,
+                    &mut self.qg,
+                    &mut self.payload,
+                ),
+            }
+        } else {
+            codec::encode_fp_into(&self.mean, &mut self.payload);
+        }
         let mut frame = Vec::new();
         encode_frame_into(
             FrameKind::Mean,
@@ -313,6 +348,8 @@ impl ShardedPsCollective {
         staleness: usize,
         links: LinkMap,
         spec: &WireSpec,
+        quantize_downlink: bool,
+        error_feedback: bool,
     ) -> Result<(ShardedPsCollective, Vec<ShardedPsWorker>)> {
         if workers == 0 {
             return Err(Error::InvalidArg(
@@ -333,6 +370,15 @@ impl ShardedPsCollective {
         // Validate the wire spec (quantizer name) up front, the
         // build_topology contract shared by every topology.
         let _ = GradCodec::new(spec)?;
+        // Downlink codecs are serial clones of the spec: the shard loops
+        // may themselves run on pool workers (no pool-in-pool encodes),
+        // and serial wire bytes are identical to any parallel count.
+        let down_spec = {
+            let mut s = spec.clone();
+            s.threads = 1;
+            s.pool = super::collective::PoolMode::Scoped;
+            s
+        };
 
         // Per-(shard, worker) uplink and downlink channels: dedicated
         // edges keep each channel FIFO-in-round-order per worker, which
@@ -365,6 +411,9 @@ impl ShardedPsCollective {
         {
             let (record_tx, record_rx) = channel::<ShardRecord>();
             record_rxs.push(record_rx);
+            let codec = GradCodec::new(&down_spec)?;
+            let down_ef = (error_feedback && quantize_downlink && !codec.is_fp())
+                .then(|| codec.error_feedback());
             let server = ShardServer {
                 shard: s,
                 shards,
@@ -373,6 +422,11 @@ impl ShardedPsCollective {
                 downlinks,
                 record_tx,
                 round: 0,
+                quantize_downlink,
+                codec,
+                down_ef,
+                rng_down: Rng::stream(spec.seed, 7_000 + s as u64),
+                qg: QuantizedGrad::default(),
                 acc: Vec::new(),
                 flat: Vec::new(),
                 mean: Vec::new(),
@@ -514,6 +568,8 @@ impl Collective for ShardedPsCollective {
             wire_bytes: self.meter.total_bytes(),
             wire_bytes_intra: 0,
             wire_bytes_inter: self.meter.total_bytes(),
+            wire_bytes_up: self.meter.bytes_up,
+            wire_bytes_down: self.meter.bytes_down,
             sim_time_s,
             messages: self.meter.messages,
             staleness: self.staleness_stats,
@@ -626,12 +682,13 @@ mod tests {
     #[test]
     fn new_rejects_degenerate_builds() {
         let spec = WireSpec::new("terngrad", 64);
-        assert!(ShardedPsCollective::new(0, 1, 0, links(), &spec).is_err());
-        assert!(ShardedPsCollective::new(2, 0, 0, links(), &spec).is_err());
-        assert!(ShardedPsCollective::new(70_000, 1, 0, links(), &spec).is_err());
+        assert!(ShardedPsCollective::new(0, 1, 0, links(), &spec, false, false).is_err());
+        assert!(ShardedPsCollective::new(2, 0, 0, links(), &spec, false, false).is_err());
+        assert!(ShardedPsCollective::new(70_000, 1, 0, links(), &spec, false, false).is_err());
         let bad = WireSpec::new("bogus", 64);
-        assert!(ShardedPsCollective::new(2, 1, 0, links(), &bad).is_err());
-        assert!(ShardedPsCollective::new(2, 2, 1, links(), &spec).is_ok());
+        assert!(ShardedPsCollective::new(2, 1, 0, links(), &bad, false, false).is_err());
+        assert!(ShardedPsCollective::new(2, 2, 1, links(), &spec, false, false).is_ok());
+        assert!(ShardedPsCollective::new(2, 2, 0, links(), &spec, true, true).is_ok());
     }
 
     #[test]

@@ -109,6 +109,13 @@ pub struct CommStats {
     pub wire_bytes_intra: u64,
     /// Bytes that crossed slow inter-group edges.
     pub wire_bytes_inter: u64,
+    /// Bytes that travelled toward the aggregation point (worker
+    /// uploads, ring/hier reduce-scatter hops, leader uplinks).
+    pub wire_bytes_up: u64,
+    /// Bytes that travelled away from it (mean broadcasts/multicasts,
+    /// ring all-gather hops). `quantize_downlink` shrinks exactly this
+    /// component.
+    pub wire_bytes_down: u64,
     pub sim_time_s: f64,
     pub messages: u64,
     /// Per-round applied-version age accounting. All-zero for the
@@ -136,10 +143,22 @@ pub struct ExchangeConfig {
     /// topology) is fully synchronous.
     pub staleness: usize,
     pub links: LinkMap,
-    /// Quantize the PS broadcast too (paper §4 option b). PS only: the
-    /// ring requantizes every hop by construction, and the hierarchy's
-    /// and sharded server's mean downlinks are FP by construction.
+    /// Quantize the mean downlink too (paper §4 option b, TernGrad-style
+    /// bidirectional compression): the PS broadcast, the hierarchy's
+    /// root → leaders → members multicast, and the sharded server's
+    /// per-shard mean frames. The aggregation point encodes the mean
+    /// *once* and every node decodes the same bytes, so the bit-identity
+    /// invariant is preserved. Rejected on the ring, which has no
+    /// broadcast downlink (the all-gather chunks already ride encoded).
     pub quantize_downlink: bool,
+    /// Error-compensate every lossy encode inside the topology: per-hop
+    /// residuals on the ring/hier decode → reduce → requantize paths
+    /// (one [`ErrorFeedback`] per hop position / tree edge, since each
+    /// compensates a different signal) and, combined with
+    /// `quantize_downlink`, a server-side residual on the mean downlink.
+    /// Worker *uplink* EF stays where it always was — in the trainer's
+    /// worker loop (or [`run_rounds`]'s drive loop).
+    pub error_feedback: bool,
 }
 
 impl ExchangeConfig {
@@ -152,6 +171,7 @@ impl ExchangeConfig {
             staleness: 0,
             links: LinkMap::uniform(link),
             quantize_downlink: false,
+            error_feedback: false,
         }
     }
 
@@ -165,6 +185,7 @@ impl ExchangeConfig {
             staleness: 0,
             links,
             quantize_downlink: false,
+            error_feedback: false,
         }
     }
 
@@ -179,11 +200,17 @@ impl ExchangeConfig {
             staleness,
             links: LinkMap::uniform(link),
             quantize_downlink: false,
+            error_feedback: false,
         }
     }
 
     pub fn with_downlink(mut self, quantize_downlink: bool) -> ExchangeConfig {
         self.quantize_downlink = quantize_downlink;
+        self
+    }
+
+    pub fn with_error_feedback(mut self, error_feedback: bool) -> ExchangeConfig {
+        self.error_feedback = error_feedback;
         self
     }
 
@@ -219,14 +246,6 @@ impl ExchangeConfig {
                         self.groups
                     )));
                 }
-                if self.quantize_downlink {
-                    return Err(Error::InvalidArg(
-                        "quantize_downlink applies to the flat parameter-server broadcast; \
-                         the sharded-ps per-shard mean downlink is FP by construction \
-                         (drop the flag or use --topology ps)"
-                            .into(),
-                    ));
-                }
             }
             Topology::Hier => {
                 if self.groups == 0 || (workers > 0 && workers % self.groups != 0) {
@@ -235,23 +254,16 @@ impl ExchangeConfig {
                         self.groups
                     )));
                 }
-                if self.quantize_downlink {
-                    return Err(Error::InvalidArg(
-                        "quantize_downlink applies to the parameter-server broadcast; \
-                         the hierarchical mean multicast is FP by construction \
-                         (drop the flag or use --topology ps)"
-                            .into(),
-                    ));
-                }
             }
             Topology::Ring => {
                 if self.quantize_downlink {
-                    // Refuse rather than silently no-op: the flag is a PS
-                    // downlink option; the ring requantizes at every hop by
-                    // construction, so there is no broadcast to quantize.
+                    // Refuse rather than silently no-op: the ring has no
+                    // broadcast downlink to quantize — the final all-gather
+                    // chunks already ride the ring encoded.
                     return Err(Error::InvalidArg(
-                        "quantize_downlink applies to the parameter-server broadcast; \
-                         the ring topology has no downlink (drop the flag or use --topology ps)"
+                        "quantize_downlink quantizes the aggregation point's mean broadcast; \
+                         the ring topology has no broadcast downlink \
+                         (drop the flag or pick --topology ps, hier or sharded-ps)"
                             .into(),
                     ));
                 }
@@ -622,31 +634,49 @@ pub fn build_topology(
     cfg.validate(workers)?;
     match cfg.topology {
         Topology::Ps => {
-            let (coord, ends) =
-                PsCollective::new(workers, cfg.links, spec, cfg.quantize_downlink)?;
+            let (coord, ends) = PsCollective::new(
+                workers,
+                cfg.links,
+                spec,
+                cfg.quantize_downlink,
+                cfg.error_feedback,
+            )?;
             Ok((
                 Box::new(coord),
                 ends.into_iter().map(|e| Box::new(e) as Box<dyn WorkerExchange>).collect(),
             ))
         }
         Topology::Ring => {
-            let (coord, ends) = RingAllReduce::new(workers, cfg.links, spec)?;
+            let (coord, ends) = RingAllReduce::new(workers, cfg.links, spec, cfg.error_feedback)?;
             Ok((
                 Box::new(coord),
                 ends.into_iter().map(|e| Box::new(e) as Box<dyn WorkerExchange>).collect(),
             ))
         }
         Topology::Hier => {
-            let (coord, ends) =
-                HierarchicalCollective::new(workers, cfg.groups, cfg.links, spec)?;
+            let (coord, ends) = HierarchicalCollective::new(
+                workers,
+                cfg.groups,
+                cfg.links,
+                spec,
+                cfg.quantize_downlink,
+                cfg.error_feedback,
+            )?;
             Ok((
                 Box::new(coord),
                 ends.into_iter().map(|e| Box::new(e) as Box<dyn WorkerExchange>).collect(),
             ))
         }
         Topology::ShardedPs => {
-            let (coord, ends) =
-                ShardedPsCollective::new(workers, cfg.shards, cfg.staleness, cfg.links, spec)?;
+            let (coord, ends) = ShardedPsCollective::new(
+                workers,
+                cfg.shards,
+                cfg.staleness,
+                cfg.links,
+                spec,
+                cfg.quantize_downlink,
+                cfg.error_feedback,
+            )?;
             Ok((
                 Box::new(coord),
                 ends.into_iter().map(|e| Box::new(e) as Box<dyn WorkerExchange>).collect(),
@@ -656,21 +686,28 @@ pub fn build_topology(
 }
 
 /// One worker's multi-round drive loop (shared by the pooled and scoped
-/// drivers of [`run_rounds`]).
+/// drivers of [`run_rounds`]). With `error_feedback` on (and a lossy
+/// codec), the uplink is compensated across rounds exactly like the
+/// trainer's worker loop.
 fn drive_worker(
     spec: &WireSpec,
+    error_feedback: bool,
     w: usize,
     g: &[f32],
     mut wx: Box<dyn WorkerExchange>,
     rounds: usize,
 ) {
     let mut gc = GradCodec::new(spec).expect("spec validated by build_topology");
+    let mut ef = (error_feedback && !gc.is_fp()).then(|| gc.error_feedback());
     let mut rng = Rng::stream(spec.seed, 2_000 + w as u64);
     let mut qg = QuantizedGrad::default();
     let mut msg = Vec::new();
     let mut mean = Vec::new();
     for _ in 0..rounds {
-        gc.encode_into(g, &mut rng, &mut qg, &mut msg);
+        match &mut ef {
+            Some(ef) => gc.encode_ef_into(ef, g, &mut rng, &mut qg, &mut msg),
+            None => gc.encode_into(g, &mut rng, &mut qg, &mut msg),
+        }
         // On channel death the coordinator's round() surfaces the real
         // error; a panic here would only mask it.
         if wx.exchange(&mut msg, &mut mean).is_err() {
@@ -734,10 +771,11 @@ pub fn run_rounds(
     let stats = match shared {
         Some(pool) => {
             let spec = &spec;
+            let ef = cfg.error_feedback;
             let coordinated: Result<Result<CommStats>> = pool.scope(|sc| {
                 for (w, wx) in ends.into_iter().enumerate() {
                     let g: &[f32] = &grads[w];
-                    sc.spawn(move || drive_worker(spec, w, g, wx, rounds));
+                    sc.spawn(move || drive_worker(spec, ef, w, g, wx, rounds));
                 }
                 let res = drive_coordinator(coll.as_mut(), &mut mean, rounds);
                 // Tear the coordinator down before the scope drains (see
@@ -752,7 +790,7 @@ pub fn run_rounds(
                 for (w, wx) in ends.into_iter().enumerate() {
                     let g: &[f32] = &grads[w];
                     let spec = &spec;
-                    scope.spawn(move || drive_worker(spec, w, g, wx, rounds));
+                    scope.spawn(move || drive_worker(spec, cfg.error_feedback, w, g, wx, rounds));
                 }
                 let res = drive_coordinator(coll.as_mut(), &mut mean, rounds);
                 // Same drop-before-join convention as the pooled driver.
@@ -812,7 +850,8 @@ mod tests {
         assert!(ExchangeConfig::hier(3, LinkMap::uniform(link)).validate(4).is_err());
         assert!(ExchangeConfig::hier(0, LinkMap::uniform(link)).validate(4).is_err());
         assert!(ExchangeConfig::hier(2, LinkMap::uniform(link)).validate(4).is_ok());
-        // downlink quantization is PS-only
+        // downlink quantization applies to every broadcast topology; only
+        // the ring (no broadcast downlink) rejects it
         assert!(ExchangeConfig::flat(Topology::Ps, link).with_downlink(true).validate(2).is_ok());
         assert!(ExchangeConfig::flat(Topology::Ring, link)
             .with_downlink(true)
@@ -821,8 +860,18 @@ mod tests {
         assert!(ExchangeConfig::hier(2, LinkMap::uniform(link))
             .with_downlink(true)
             .validate(2)
-            .is_err());
-        assert!(ExchangeConfig::sharded(2, 0, link).with_downlink(true).validate(2).is_err());
+            .is_ok());
+        assert!(ExchangeConfig::sharded(2, 0, link).with_downlink(true).validate(2).is_ok());
+        // per-hop error feedback is a pure transport option everywhere
+        assert!(ExchangeConfig::flat(Topology::Ring, link)
+            .with_error_feedback(true)
+            .validate(2)
+            .is_ok());
+        assert!(ExchangeConfig::hier(2, LinkMap::uniform(link))
+            .with_error_feedback(true)
+            .with_downlink(true)
+            .validate(4)
+            .is_ok());
         // sharding and staleness are sharded-ps-only knobs
         assert!(ExchangeConfig::sharded(2, 3, link).validate(4).is_ok());
         assert!(ExchangeConfig::sharded(0, 0, link).validate(4).is_err());
@@ -1018,7 +1067,7 @@ mod tests {
     }
 
     #[test]
-    fn ring_and_hier_reject_downlink_quantization() {
+    fn only_the_ring_rejects_downlink_quantization() {
         let spec = WireSpec::new("terngrad", 64);
         let link = Link::ten_gbps();
         let ring_q = ExchangeConfig::flat(Topology::Ring, link).with_downlink(true);
@@ -1028,9 +1077,9 @@ mod tests {
         let ps_q = ExchangeConfig::flat(Topology::Ps, link).with_downlink(true);
         assert!(build_topology(&ps_q, 2, &spec).is_ok());
         let hier_q = ExchangeConfig::hier(2, LinkMap::uniform(link)).with_downlink(true);
-        assert!(build_topology(&hier_q, 4, &spec).is_err());
-        let hier = ExchangeConfig::hier(2, LinkMap::uniform(link));
-        assert!(build_topology(&hier, 4, &spec).is_ok());
+        assert!(build_topology(&hier_q, 4, &spec).is_ok());
+        let sharded_q = ExchangeConfig::sharded(2, 0, link).with_downlink(true);
+        assert!(build_topology(&sharded_q, 2, &spec).is_ok());
     }
 
     /// A coordinator-side error (mismatched upload shapes) must surface as

@@ -19,16 +19,27 @@
 //! 3. **Leader star** (slow [`EdgeClass::Inter`] edges): non-root leaders
 //!    requantize their group sum and upload it to the root (worker 0);
 //!    the root decodes, reduces every group sum in group order (f64),
-//!    and multicasts the FP-encoded global mean back to the leaders.
+//!    and multicasts the encoded global mean back to the leaders — FP by
+//!    default, or requantized once at the root with `quantize_downlink`
+//!    (paper §4 option b on the slow inter links).
 //!    Single-member groups skip phases 1–2 and forward their *original*
 //!    encoded gradient unchanged — with `groups == workers` the star
 //!    degenerates to the parameter server with no extra quantization.
-//! 4. **Intra broadcast** (intra): each leader multicasts the FP mean to
-//!    its members. Every node decodes the same bytes, so the mean is
+//! 4. **Intra broadcast** (intra): each leader re-multicasts the root's
+//!    exact bytes to its members. Every node (the root included, which
+//!    decodes its own message) decodes the same bytes, so the mean is
 //!    bit-identical cluster-wide — the invariant that keeps parameter
-//!    replicas in sync (same as PS and ring). There is no quantized
-//!    downlink option: like the ring, the topology rejects
-//!    `quantize_downlink`.
+//!    replicas in sync (same as PS and ring), lossless or not.
+//!
+//! **Per-hop error feedback.** With `error_feedback` on, every lossy
+//! requantization site keeps its own [`ErrorFeedback`] residual — one per
+//! intra reduce-scatter hop position, one for the member gather encode,
+//! one for the leader uplink (tree-edge-local residuals: each site
+//! compensates a different partial sum), and, combined with
+//! `quantize_downlink`, one at the root for the mean downlink
+//! (TernGrad-style bidirectional compression). Single-member-group
+//! forwarding stays verbatim (nothing is requantized, so there is
+//! nothing to compensate).
 //!
 //! **Codec threads.** Like the ring, every node's [`GradCodec`] honors
 //! `WireSpec::threads` for its quantize/requantize work (parallel
@@ -55,6 +66,7 @@ use super::ring::{chunk_range, ring_sub};
 use crate::codec;
 use crate::error::{Error, Result};
 use crate::quant::bucket::QuantizedGrad;
+use crate::quant::error_feedback::ErrorFeedback;
 use crate::tensor::rng::Rng;
 
 // --------------------------------------------------------------------
@@ -62,16 +74,17 @@ use crate::tensor::rng::Rng;
 // --------------------------------------------------------------------
 
 /// Critical-path time of one hierarchical round: `l` workers in `groups`
-/// groups, a quantized gradient of `quant_bytes` on the wire, an FP mean
-/// of `fp_bytes` on the way down. Matches the executable collective up to
-/// per-chunk header/level-table overhead (each hop message is an
-/// independently headered chunk).
+/// groups, a quantized gradient of `quant_bytes` on the wire up, a mean
+/// of `down_bytes` on the way down (the FP size by default, the
+/// requantized size under `quantize_downlink`). Matches the executable
+/// collective up to per-chunk header/level-table overhead (each hop
+/// message is an independently headered chunk).
 pub fn hier_time(
     links: &LinkMap,
     l: usize,
     groups: usize,
     quant_bytes: usize,
-    fp_bytes: usize,
+    down_bytes: usize,
 ) -> f64 {
     assert!(l > 0 && groups > 0 && l % groups == 0);
     let m = l / groups;
@@ -84,13 +97,13 @@ pub fn hier_time(
         // quant_bytes / m on the fast links.
         let chunk = quant_bytes as f64 / m as f64;
         t += m as f64 * (links.intra.latency_s + chunk * 8.0 / links.intra.bandwidth_bps);
-        // leader multicast of the FP mean into the group
-        t += links.intra.transfer_time(fp_bytes);
+        // leader multicast of the mean into the group
+        t += links.intra.transfer_time(down_bytes);
     }
     if groups > 1 {
         // slowest-of-(G−1) leader uplinks (all equal) + root multicast
         t += links.inter.transfer_time(quant_bytes);
-        t += links.inter.transfer_time(fp_bytes);
+        t += links.inter.transfer_time(down_bytes);
     }
     t
 }
@@ -122,6 +135,8 @@ impl HierarchicalCollective {
         groups: usize,
         links: LinkMap,
         spec: &WireSpec,
+        quantize_downlink: bool,
+        error_feedback: bool,
     ) -> Result<(HierarchicalCollective, Vec<HierWorker>)> {
         if workers == 0 {
             return Err(Error::InvalidArg("hier needs at least 1 worker".into()));
@@ -131,7 +146,8 @@ impl HierarchicalCollective {
                 "groups ({groups}) must be a positive divisor of the worker count ({workers})"
             )));
         }
-        let _ = GradCodec::new(spec)?; // validate the quantizer name up front
+        let probe = GradCodec::new(spec)?; // validate the quantizer name up front
+        let lossy_ef = error_feedback && !probe.is_fp();
         let m = workers / groups;
 
         let (trace_tx, trace_rx) = channel::<RoundTrace>();
@@ -178,6 +194,20 @@ impl HierarchicalCollective {
         for w in 0..workers {
             let g = w / m;
             let j = w % m;
+            let codec = GradCodec::new(spec)?;
+            // One residual per lossy requantization site this worker owns
+            // (each site compensates a different signal): intra hop k,
+            // the member gather encode, the leader uplink encode, and —
+            // at the root, under quantize_downlink — the mean downlink.
+            let hop_ef = if lossy_ef && m > 2 {
+                (0..m - 2).map(|_| codec.error_feedback()).collect()
+            } else {
+                Vec::new()
+            };
+            let gather_ef = (lossy_ef && m > 1 && j != 0).then(|| codec.error_feedback());
+            let up_ef = (lossy_ef && m > 1 && j == 0 && g != 0).then(|| codec.error_feedback());
+            let down_ef =
+                (lossy_ef && quantize_downlink && w == 0).then(|| codec.error_feedback());
             ends.push(HierWorker {
                 id: w,
                 workers,
@@ -197,8 +227,14 @@ impl HierarchicalCollective {
                 bcast_rx: bcast_rxs[w].take(),
                 trace_tx: trace_tx.clone(),
                 mean_tx: if w == 0 { Some(mean_tx.clone()) } else { None },
-                codec: GradCodec::new(spec)?,
+                codec,
+                hop_ef,
+                gather_ef,
+                up_ef,
+                down_ef,
+                quantize_downlink,
                 rng: Rng::stream(spec.seed, 5_000 + w as u64),
+                rng_down: Rng::stream(spec.seed, 6_000),
                 own: Vec::new(),
                 chunk: Vec::new(),
                 group_sum: Vec::new(),
@@ -287,6 +323,8 @@ impl Collective for HierarchicalCollective {
             wire_bytes: self.meter_intra.total_bytes() + self.meter_inter.total_bytes(),
             wire_bytes_intra: self.meter_intra.total_bytes(),
             wire_bytes_inter: self.meter_inter.total_bytes(),
+            wire_bytes_up: self.meter_intra.bytes_up + self.meter_inter.bytes_up,
+            wire_bytes_down: self.meter_intra.bytes_down + self.meter_inter.bytes_down,
             sim_time_s: self.sim_time_s,
             messages: self.meter_intra.messages + self.meter_inter.messages,
             staleness: Default::default(),
@@ -317,7 +355,17 @@ pub struct HierWorker {
     trace_tx: Sender<RoundTrace>,
     mean_tx: Option<Sender<Vec<f32>>>,
     codec: GradCodec,
+    /// Per-site error-feedback residuals (empty/`None` when EF is off,
+    /// the codec is FP, or this worker doesn't own the site): intra
+    /// reduce-scatter hop `k`, the member gather encode, the leader
+    /// uplink encode, and the root's quantized mean downlink.
+    hop_ef: Vec<ErrorFeedback>,
+    gather_ef: Option<ErrorFeedback>,
+    up_ef: Option<ErrorFeedback>,
+    down_ef: Option<ErrorFeedback>,
+    quantize_downlink: bool,
     rng: Rng,
+    rng_down: Rng,
     own: Vec<f32>,
     chunk: Vec<f32>,
     group_sum: Vec<f32>,
@@ -380,9 +428,21 @@ impl HierWorker {
             }
             if k + 1 < m - 1 {
                 // Requantize the partial sum for the next hop, recycling
-                // the received buffer. The final sum is requantized below
-                // for the gather instead.
-                self.codec.encode_into(&self.chunk, &mut self.rng, &mut self.qg, &mut msg);
+                // the received buffer (hop-k residual compensates what the
+                // previous round's hop-k encode dropped). The final sum is
+                // requantized below for the gather instead.
+                match self.hop_ef.get_mut(k) {
+                    Some(ef) => self.codec.encode_ef_into(
+                        ef,
+                        &self.chunk,
+                        &mut self.rng,
+                        &mut self.qg,
+                        &mut msg,
+                    ),
+                    None => {
+                        self.codec.encode_into(&self.chunk, &mut self.rng, &mut self.qg, &mut msg)
+                    }
+                }
                 cur = msg;
             } else {
                 cur = Vec::new();
@@ -392,7 +452,18 @@ impl HierWorker {
         let c_own = (j + 1) % m;
         if j != 0 {
             // ---- gather: ship the completed chunk to the leader ----
-            self.codec.encode_into(&self.chunk, &mut self.rng, &mut self.qg, &mut self.msg);
+            match &mut self.gather_ef {
+                Some(ef) => self.codec.encode_ef_into(
+                    ef,
+                    &self.chunk,
+                    &mut self.rng,
+                    &mut self.qg,
+                    &mut self.msg,
+                ),
+                None => {
+                    self.codec.encode_into(&self.chunk, &mut self.rng, &mut self.qg, &mut self.msg)
+                }
+            }
             self.step_bytes[m - 1] = self.msg.len();
             let bytes = std::mem::take(&mut self.msg);
             self.gather_tx
@@ -470,10 +541,30 @@ impl HierWorker {
         let inv = 1.0 / self.workers as f64;
         mean_out.clear();
         mean_out.extend(self.acc.iter().map(|a| (*a * inv) as f32));
-        // FP multicast down: every node decodes these exact bytes, and FP
-        // encoding is a lossless f32 round-trip, so the root's own
-        // `mean_out` is bit-identical to what the leaves decode.
-        codec::encode_fp_into(mean_out, &mut self.msg);
+        // Encode the mean ONCE; every node (this root included) decodes
+        // the exact same bytes, so the applied mean is bit-identical
+        // cluster-wide whether the downlink is lossless FP or requantized
+        // (`quantize_downlink`, optionally EF-compensated at the root).
+        let lossy_down = self.quantize_downlink && !self.codec.is_fp() && !mean_out.is_empty();
+        if lossy_down {
+            match &mut self.down_ef {
+                Some(ef) => self.codec.encode_ef_into(
+                    ef,
+                    mean_out,
+                    &mut self.rng_down,
+                    &mut self.qg,
+                    &mut self.msg,
+                ),
+                None => self.codec.encode_into(
+                    mean_out,
+                    &mut self.rng_down,
+                    &mut self.qg,
+                    &mut self.msg,
+                ),
+            }
+        } else {
+            codec::encode_fp_into(mean_out, &mut self.msg);
+        }
         let m = self.group_size;
         if !self.down_txs.is_empty() {
             self.step_bytes[m + 1] = self.msg.len();
@@ -486,6 +577,12 @@ impl HierWorker {
             for tx in &self.bcast_txs {
                 tx.send(self.msg.clone()).map_err(|_| Self::hung_up("group member"))?;
             }
+        }
+        if lossy_down {
+            // Lossy downlink: the root must apply its own decoded bytes,
+            // not the exact mean, to stay bit-identical with the leaves.
+            let HierWorker { codec, msg, .. } = self;
+            codec.decode_flat_into(msg, mean_out)?;
         }
         Ok(())
     }
@@ -528,12 +625,16 @@ impl WorkerExchange for HierWorker {
             // ---- leader uplink over the slow star ----
             if m == 1 {
                 // Single-member group: forward the original encoded bytes
-                // verbatim — no spurious extra quantization.
+                // verbatim — no spurious extra quantization (and nothing
+                // to error-compensate).
                 self.msg.clear();
                 self.msg.append(encoded);
             } else {
-                let (rng, qg, msg) = (&mut self.rng, &mut self.qg, &mut self.msg);
-                self.codec.encode_into(&self.group_sum, rng, qg, msg);
+                let HierWorker { codec, up_ef, group_sum, rng, qg, msg, .. } = self;
+                match up_ef {
+                    Some(ef) => codec.encode_ef_into(ef, group_sum, rng, qg, msg),
+                    None => codec.encode_into(group_sum, rng, qg, msg),
+                }
             }
             self.step_bytes[m] = self.msg.len();
             let bytes = std::mem::take(&mut self.msg);
@@ -636,14 +737,15 @@ mod tests {
     fn new_rejects_bad_grouping() {
         let lm = LinkMap::uniform(Link::ten_gbps());
         let spec = WireSpec::new("terngrad", 64);
-        assert!(HierarchicalCollective::new(0, 1, lm, &spec).is_err());
-        assert!(HierarchicalCollective::new(4, 0, lm, &spec).is_err());
-        assert!(HierarchicalCollective::new(4, 3, lm, &spec).is_err());
-        assert!(HierarchicalCollective::new(4, 2, lm, &spec).is_ok());
-        assert!(HierarchicalCollective::new(4, 4, lm, &spec).is_ok());
-        assert!(HierarchicalCollective::new(4, 1, lm, &spec).is_ok());
+        assert!(HierarchicalCollective::new(0, 1, lm, &spec, false, false).is_err());
+        assert!(HierarchicalCollective::new(4, 0, lm, &spec, false, false).is_err());
+        assert!(HierarchicalCollective::new(4, 3, lm, &spec, false, false).is_err());
+        assert!(HierarchicalCollective::new(4, 2, lm, &spec, false, false).is_ok());
+        assert!(HierarchicalCollective::new(4, 4, lm, &spec, false, false).is_ok());
+        assert!(HierarchicalCollective::new(4, 1, lm, &spec, false, false).is_ok());
+        assert!(HierarchicalCollective::new(4, 2, lm, &spec, true, true).is_ok());
         let bad = WireSpec::new("bogus", 64);
-        assert!(HierarchicalCollective::new(2, 1, lm, &bad).is_err());
+        assert!(HierarchicalCollective::new(2, 1, lm, &bad, false, false).is_err());
     }
 
     /// Codec-routed decodes (hop chunks, gathered chunks, leader
@@ -687,7 +789,7 @@ mod tests {
     fn step_grid_classes() {
         let lm = LinkMap::uniform(Link::ten_gbps());
         let spec = WireSpec::new("fp", 64);
-        let (coll, _ends) = HierarchicalCollective::new(6, 2, lm, &spec).unwrap();
+        let (coll, _ends) = HierarchicalCollective::new(6, 2, lm, &spec, false, false).unwrap();
         // m = 3: steps 0,1 = RS, 2 = gather (intra); 3,4 = star (inter);
         // 5 = group multicast (intra).
         assert_eq!(coll.step_class(0), EdgeClass::Intra);

@@ -24,7 +24,10 @@
 //!   each reduce-scatter hop performs **decode → partial-reduce →
 //!   requantize** (quantized codebooks are not closed under addition),
 //!   while all-gather forwards the final encoded chunks unchanged so
-//!   every node decodes a bit-identical mean. Chunks align to the
+//!   every node decodes a bit-identical mean. Under `error_feedback`
+//!   each hop position keeps its own residual, so per-hop requantization
+//!   error is carried into the same hop of the next round instead of
+//!   being discarded. Chunks align to the
 //!   quantization bucket grid; step time is `max` over the L concurrent
 //!   transmissions, summed over steps. [`ring`] also keeps the
 //!   closed-form cost model ([`ring::allreduce_time`]) that the Table 1
@@ -32,10 +35,18 @@
 //! * **Hierarchical two-level** ([`hier`], `--topology hier --groups N`)
 //!   — workers partitioned into N groups: intra-group ring
 //!   reduce-scatter + chunk gather over fast intra edges, group leaders
-//!   decode → reduce → requantize over a slow inter-group star, the FP
-//!   mean multicast back down (root → leaders → members). Localizes most
-//!   bytes onto the fast edges ([`CommStats::wire_bytes_intra`] /
-//!   [`CommStats::wire_bytes_inter`] keep the split); [`hier::hier_time`]
+//!   decode → reduce → requantize over a slow inter-group star, the mean
+//!   multicast back down (root → leaders → members) — FP by default, or
+//!   requantized *once* at the root under `quantize_downlink` (the root
+//!   decodes its own bytes, so every node still applies a bit-identical
+//!   mean; with `error_feedback` the root also keeps a downlink
+//!   residual, TernGrad-style bidirectional compression). Per-hop
+//!   residuals cover every intra-ring and leader-uplink requantization
+//!   site when `error_feedback` is on. Localizes most bytes onto the
+//!   fast edges ([`CommStats::wire_bytes_intra`] /
+//!   [`CommStats::wire_bytes_inter`] keep the split, and
+//!   [`CommStats::wire_bytes_up`] / [`CommStats::wire_bytes_down`] the
+//!   direction split); [`hier::hier_time`]
 //!   is its closed-form critical-path model.
 //! * **Sharded / async parameter server** ([`async_ps`] on the
 //!   [`shard`] substrate, `--topology sharded-ps --shards S
@@ -47,7 +58,10 @@
 //!   header); with a bounded staleness window K ≥ 1 workers run up to K
 //!   rounds ahead of the slowest shard and apply the round-`r − K` mean
 //!   at round `r` (K = 0 is fully synchronous, and `S = 1, K = 0` is
-//!   bit-identical to the flat PS). [`CommStats::staleness`] keeps the
+//!   bit-identical to the flat PS). Each shard's mean broadcast is FP by
+//!   default or requantized once by the shard under `quantize_downlink`
+//!   (optionally with a per-shard server-side residual under
+//!   `error_feedback`). [`CommStats::staleness`] keeps the
 //!   applied-version age histogram; [`shard::sharded_time`] /
 //!   [`shard::async_time`] are the closed-form critical-path models.
 //!
@@ -84,6 +98,11 @@
 //! wrappers) extend the flat `ps`/`ring`/`hier`/`sharded` models with
 //! the pipeline recurrence `end_i = max(end_{i-1}, ready_i) + comm_i`
 //! plus the exposed mean-broadcast tail.
+
+// Non-test comm code must not `unwrap()`: dead peers, truncated frames
+// and codec failures all surface as `Err` on the coordinator. Provably
+// infallible conversions use `expect` with the reason.
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
 
 pub mod async_ps;
 pub mod collective;

@@ -17,6 +17,7 @@ use super::link::{Link, LinkMap, TrafficMeter};
 use crate::codec::{self, DecodeScratch};
 use crate::error::{Error, Result};
 use crate::quant::bucket::QuantizedGrad;
+use crate::quant::error_feedback::ErrorFeedback;
 use crate::quant::parallel::BucketPipeline;
 use crate::tensor::rng::Rng;
 
@@ -90,7 +91,9 @@ impl ParameterServer {
             slots[id] = Some(bytes);
         }
         self.sim_time_s += max_uplink;
-        Ok(slots.into_iter().map(|s| s.unwrap()).collect())
+        // Infallible: the loop above filled all n slots (duplicates and
+        // unknown ids were rejected), so every slot is Some.
+        Ok(slots.into_iter().map(|s| s.expect("one upload per worker")).collect())
     }
 
     /// Broadcast one message to every worker. Advances simulated time by a
@@ -135,6 +138,10 @@ pub struct PsCollective {
     server: ParameterServer,
     codec: GradCodec,
     quantize_downlink: bool,
+    /// Server-side downlink residual (TernGrad-style bidirectional
+    /// compression): with `error_feedback` and a lossy downlink, the mean
+    /// is compensated by what previous broadcasts failed to carry.
+    down_ef: Option<ErrorFeedback>,
     rng_down: Rng,
     acc: Vec<f64>,
     flat: Vec<f32>,
@@ -153,6 +160,7 @@ impl PsCollective {
         links: LinkMap,
         spec: &WireSpec,
         quantize_downlink: bool,
+        error_feedback: bool,
     ) -> Result<(PsCollective, Vec<PsWorker>)> {
         if workers == 0 {
             // Same contract as RingAllReduce::new — Err, not the raw
@@ -160,6 +168,8 @@ impl PsCollective {
             return Err(Error::InvalidArg("parameter server needs at least 1 worker".into()));
         }
         let codec = GradCodec::new(spec)?;
+        let down_ef = (error_feedback && quantize_downlink && !codec.is_fp())
+            .then(|| codec.error_feedback());
         let (server, handles) = ParameterServer::new(workers, links.inter);
         let ends = handles
             .into_iter()
@@ -170,6 +180,7 @@ impl PsCollective {
                 server,
                 codec,
                 quantize_downlink,
+                down_ef,
                 rng_down: Rng::stream(spec.seed, 3_000),
                 acc: Vec::new(),
                 flat: Vec::new(),
@@ -222,11 +233,26 @@ impl Collective for PsCollective {
         let inv = 1.0 / uploads.len() as f64;
         mean_out.clear();
         mean_out.extend(self.acc.iter().map(|a| (*a * inv) as f32));
-        if self.quantize_downlink && !self.codec.is_fp() {
+        if self.quantize_downlink && !self.codec.is_fp() && !mean_out.is_empty() {
             // Lossy downlink: every node (this coordinator included) must
             // apply the *decoded broadcast*, not the exact mean, to stay
-            // bit-identical with the workers.
-            self.codec.encode_into(mean_out, &mut self.rng_down, &mut self.qg, &mut self.msg);
+            // bit-identical with the workers. With EF on, the server
+            // compensates the mean with its own downlink residual first.
+            match &mut self.down_ef {
+                Some(ef) => self.codec.encode_ef_into(
+                    ef,
+                    mean_out,
+                    &mut self.rng_down,
+                    &mut self.qg,
+                    &mut self.msg,
+                ),
+                None => self.codec.encode_into(
+                    mean_out,
+                    &mut self.rng_down,
+                    &mut self.qg,
+                    &mut self.msg,
+                ),
+            }
             self.server.broadcast(&self.msg)?;
             codec::decode_flat_into(&self.msg, mean_out, &mut self.dscratch)?;
         } else {
@@ -241,6 +267,8 @@ impl Collective for PsCollective {
             wire_bytes: self.server.meter.total_bytes(),
             wire_bytes_intra: 0,
             wire_bytes_inter: self.server.meter.total_bytes(),
+            wire_bytes_up: self.server.meter.bytes_up,
+            wire_bytes_down: self.server.meter.bytes_down,
             sim_time_s: self.server.sim_time_s,
             messages: self.server.meter.messages,
             staleness: Default::default(),

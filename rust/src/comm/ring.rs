@@ -26,6 +26,16 @@
 //! relies on to keep parameter replicas in sync). FP gradients take the
 //! same path losslessly.
 //!
+//! **Per-hop error feedback.** With `error_feedback` on, every
+//! requantization site keeps its own [`ErrorFeedback`] residual — one per
+//! reduce-scatter hop position, since hop `k` always requantizes the same
+//! chunk index for a given worker and compensates a *different* partial
+//! sum than hop `k + 1`. The residual carries what hop `k`'s quantization
+//! dropped in round `t` into round `t + 1`'s hop-`k` encode, so the
+//! per-hop bias of biased schemes (BinGrad, signSGD) no longer compounds
+//! with hop count across rounds. All-gather forwarding is untouched, so
+//! the bit-identity property is preserved verbatim.
+//!
 //! **Codec threads.** Each worker's [`GradCodec`] honors
 //! `WireSpec::threads`: with a parallel codec the per-hop requantization
 //! runs the bucket pipeline (per-bucket RNG streams — still fully
@@ -50,6 +60,7 @@ use super::link::{Link, LinkMap, TrafficMeter};
 use crate::codec;
 use crate::error::{Error, Result};
 use crate::quant::bucket::QuantizedGrad;
+use crate::quant::error_feedback::ErrorFeedback;
 use crate::tensor::rng::Rng;
 
 // --------------------------------------------------------------------
@@ -121,13 +132,15 @@ impl RingAllReduce {
         workers: usize,
         links: LinkMap,
         spec: &WireSpec,
+        error_feedback: bool,
     ) -> Result<(RingAllReduce, Vec<RingWorker>)> {
         let link = links.inter;
         if workers == 0 {
             return Err(Error::InvalidArg("ring needs at least 1 worker".into()));
         }
         // Validate the spec up front (quantizer name) before spawning ends.
-        let _ = GradCodec::new(spec)?;
+        let probe = GradCodec::new(spec)?;
+        let hops_ef = if error_feedback && !probe.is_fp() { workers.saturating_sub(1) } else { 0 };
         let (trace_tx, trace_rx) = channel::<RoundTrace>();
         let (mean_tx, mean_rx) = channel::<Vec<f32>>();
         let mut txs: Vec<Option<Sender<Vec<u8>>>> = Vec::with_capacity(workers);
@@ -139,6 +152,11 @@ impl RingAllReduce {
         }
         let mut ends = Vec::with_capacity(workers);
         for w in 0..workers {
+            let codec = GradCodec::new(spec)?;
+            // One residual per reduce-scatter hop position: hop k always
+            // requantizes the same chunk index on this worker, and each hop
+            // compensates a different partial sum.
+            let hop_ef = (0..hops_ef).map(|_| codec.error_feedback()).collect();
             ends.push(RingWorker {
                 id: w,
                 workers,
@@ -146,7 +164,8 @@ impl RingAllReduce {
                 rx_prev: rxs[w].take().expect("inbox assigned once"),
                 trace_tx: trace_tx.clone(),
                 mean_tx: if w == 0 { Some(mean_tx.clone()) } else { None },
-                codec: GradCodec::new(spec)?,
+                codec,
+                hop_ef,
                 rng: Rng::stream(spec.seed, 4_000 + w as u64),
                 own: Vec::new(),
                 chunk: Vec::new(),
@@ -184,7 +203,13 @@ impl Collective for RingAllReduce {
             for tr in &traces {
                 let bytes = tr[k];
                 step = step.max(self.link.transfer_time(bytes));
-                self.meter.record_up(&self.link, bytes);
+                // Reduce-scatter hops move data toward the aggregated
+                // chunks (up); all-gather hops distribute them back (down).
+                if k < l - 1 {
+                    self.meter.record_up(&self.link, bytes);
+                } else {
+                    self.meter.record_down(&self.link, bytes);
+                }
             }
             self.sim_time_s += step;
         }
@@ -202,6 +227,8 @@ impl Collective for RingAllReduce {
             wire_bytes: self.meter.total_bytes(),
             wire_bytes_intra: 0,
             wire_bytes_inter: self.meter.total_bytes(),
+            wire_bytes_up: self.meter.bytes_up,
+            wire_bytes_down: self.meter.bytes_down,
             sim_time_s: self.sim_time_s,
             messages: self.meter.messages,
             staleness: Default::default(),
@@ -221,6 +248,10 @@ pub struct RingWorker {
     trace_tx: Sender<RoundTrace>,
     mean_tx: Option<Sender<Vec<f32>>>,
     codec: GradCodec,
+    /// Per-hop error-feedback residuals (`hop_ef[k]` compensates the
+    /// reduce-scatter hop-`k` requantization); empty when EF is off or
+    /// the codec is FP.
+    hop_ef: Vec<ErrorFeedback>,
     rng: Rng,
     own: Vec<f32>,
     chunk: Vec<f32>,
@@ -316,8 +347,15 @@ impl WorkerExchange for RingWorker {
                 *a += *v;
             }
             // Requantize the partial (or, on the last hop, final) sum for
-            // transmission, recycling the received buffer.
-            self.codec.encode_into(&self.chunk, &mut self.rng, &mut self.qg, &mut msg);
+            // transmission, recycling the received buffer. With EF on, the
+            // hop's residual compensates what round t−1's hop-k encode
+            // dropped.
+            match self.hop_ef.get_mut(k) {
+                Some(ef) => {
+                    self.codec.encode_ef_into(ef, &self.chunk, &mut self.rng, &mut self.qg, &mut msg)
+                }
+                None => self.codec.encode_into(&self.chunk, &mut self.rng, &mut self.qg, &mut msg),
+            }
             cur = msg;
         }
 

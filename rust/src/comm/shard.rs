@@ -77,7 +77,10 @@ pub const FRAME_HEADER_BYTES: usize = 4 + 1 + 1 + 2 + 2 + 8 + 4;
 pub enum FrameKind {
     /// Worker → shard: one encoded gradient chunk.
     Upload,
-    /// Shard → worker: the FP-encoded mean of the shard's chunk.
+    /// Shard → worker: the mean of the shard's chunk — FP-encoded by
+    /// default, or requantized once by the shard under
+    /// `quantize_downlink` (the frame is kind-agnostic about the inner
+    /// codec payload).
     Mean,
 }
 
@@ -155,7 +158,9 @@ pub fn parse_frame(bytes: &[u8]) -> Result<Frame<'_>> {
             bytes.len()
         )));
     }
-    let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+    // The length check above guarantees every fixed-width slice below,
+    // so these conversions are infallible.
+    let magic = u32::from_le_bytes(bytes[0..4].try_into().expect("4-byte slice"));
     if magic != FRAME_MAGIC {
         return Err(Error::Codec(format!("bad frame magic {magic:#x}")));
     }
@@ -164,10 +169,10 @@ pub fn parse_frame(bytes: &[u8]) -> Result<Frame<'_>> {
         return Err(Error::Codec(format!("unsupported frame version {version}")));
     }
     let kind = FrameKind::from_byte(bytes[5])?;
-    let shard = u16::from_le_bytes(bytes[6..8].try_into().unwrap());
-    let sender = u16::from_le_bytes(bytes[8..10].try_into().unwrap());
-    let round = u64::from_le_bytes(bytes[10..18].try_into().unwrap());
-    let payload_len = u32::from_le_bytes(bytes[18..22].try_into().unwrap()) as usize;
+    let shard = u16::from_le_bytes(bytes[6..8].try_into().expect("2-byte slice"));
+    let sender = u16::from_le_bytes(bytes[8..10].try_into().expect("2-byte slice"));
+    let round = u64::from_le_bytes(bytes[10..18].try_into().expect("8-byte slice"));
+    let payload_len = u32::from_le_bytes(bytes[18..22].try_into().expect("4-byte slice")) as usize;
     let payload = &bytes[FRAME_HEADER_BYTES..];
     if payload.len() != payload_len {
         return Err(Error::Codec(format!(
@@ -238,7 +243,9 @@ impl StalenessStats {
 /// homogeneous link this is `2·latency + (up + down)/S · 8/bw` — at
 /// `shards == 1` exactly the flat parameter-server round
 /// ([`super::ring::ps_time`]), and `S×` less bandwidth per endpoint
-/// otherwise (the whole point of sharding the server).
+/// otherwise (the whole point of sharding the server). `down_bytes` is
+/// whatever the downlink actually carries: the FP wire size by default,
+/// or the quantized wire size under `quantize_downlink`.
 pub fn sharded_time(
     link: &Link,
     _workers: usize,

@@ -54,6 +54,11 @@ impl Value {
 /// `section.key` -> value map.
 pub type ConfigMap = BTreeMap<String, Value>;
 
+/// Largest admissible `lr_decay_steps` entry: any real schedule decays
+/// within the run, and the bound rejects `i64 → usize` wrap-arounds from
+/// negative config values.
+const MAX_LR_DECAY_STEP: i64 = 100_000_000;
+
 /// Parse TOML-subset text into a flat `section.key` map.
 pub fn parse(text: &str) -> Result<ConfigMap> {
     let mut out = ConfigMap::new();
@@ -221,7 +226,12 @@ pub struct TrainConfig {
     pub clip_factor: Option<f32>,
     pub seed: u64,
     pub eval_every: usize,
-    /// Quantize the server->worker broadcast too (paper §4 option (b)).
+    /// Quantize the coordinator->worker mean downlink too (paper §4
+    /// option (b), TernGrad-style bidirectional compression): the PS
+    /// broadcast, the hier root multicast and the sharded-ps per-shard
+    /// mean frames. The encoder quantizes the mean once and every node
+    /// decodes the same bytes, so replicas stay bit-identical. The ring
+    /// has no broadcast downlink and rejects the flag.
     pub quantize_downlink: bool,
     /// Gradient-exchange topology: parameter-server star, decentralized
     /// ring all-reduce, the two-level hierarchy, or the sharded/async
@@ -240,13 +250,17 @@ pub struct TrainConfig {
     /// slowest shard and apply the round-`r − K` mean at round `r`.
     /// `0` (required on every synchronous topology) disables the lag.
     pub staleness: usize,
-    /// Wrap the worker-side quantizer in error feedback
+    /// Wrap every quantization site in error feedback
     /// (`error_feedback = true`): quantize `g + m`, keep the residual
-    /// `m ← (g + m) − Q(g + m)`. Parameter-server paths (ps /
-    /// sharded-ps) with a quantizing method; works with the serial codec
-    /// (residual from the materialized quantized gradient, PR 4
-    /// bit-for-bit) and the parallel codec (pipeline-side residual via
-    /// wire dequantization).
+    /// `m ← (g + m) − Q(g + m)`. On the PS paths (ps / sharded-ps) the
+    /// worker uplink carries the residual; on ring/hier every
+    /// decode→reduce→requantize hop keeps its own per-hop residual, so
+    /// biased schemes no longer compound bias with hop count. Needs a
+    /// quantizing method; works with the serial codec (residual from the
+    /// materialized quantized gradient) and the parallel codec
+    /// (pipeline-side residual via wire dequantization). Combined with
+    /// `quantize_downlink`, the downlink encoder keeps a server-side
+    /// residual too (bidirectional EF).
     pub error_feedback: bool,
     /// Codec threads per node (`threads = N`): 1 = serial legacy path,
     /// 0 = auto-detect cores, N ≥ 2 = parallel per-bucket
@@ -399,9 +413,21 @@ impl TrainConfig {
                     c.lr_decay_steps = items
                         .iter()
                         .map(|i| {
-                            i.as_i64().map(|x| x as usize).ok_or_else(|| {
+                            // Bounds-check before the usize cast: `-1 as
+                            // usize` wraps to a huge step count (the
+                            // `threads`/`shards` wrap bug, applied to the
+                            // schedule).
+                            let x = i.as_i64().ok_or_else(|| {
                                 Error::Config("lr_decay_steps must be ints".into())
-                            })
+                            })?;
+                            if !(0..=MAX_LR_DECAY_STEP).contains(&x) {
+                                return Err(Error::Config(format!(
+                                    "lr_decay_steps entry {x} must be in \
+                                     [0, {MAX_LR_DECAY_STEP}] (negative values \
+                                     would wrap to absurd step counts)"
+                                )));
+                            }
+                            Ok(x as usize)
                         })
                         .collect::<Result<_>>()?;
                 }
@@ -436,13 +462,20 @@ impl TrainConfig {
         if !(0.0..1.0).contains(&(self.momentum as f64)) {
             return Err(Error::Config("momentum must be in [0,1)".into()));
         }
-        if self.quantize_downlink && self.topology != Topology::Ps {
+        if let Some(&s) = self.lr_decay_steps.iter().find(|&&s| s > MAX_LR_DECAY_STEP as usize) {
             return Err(Error::Config(format!(
-                "quantize_downlink applies to the parameter-server broadcast; \
-                 the {} topology broadcasts no quantized downlink \
-                 (drop it or use topology = \"ps\")",
-                self.topology
+                "lr_decay_steps entry {s} must be at most {MAX_LR_DECAY_STEP} \
+                 (absurd values are usually wrapped negatives)"
             )));
+        }
+        if self.quantize_downlink && self.topology == Topology::Ring {
+            return Err(Error::Config(
+                "quantize_downlink quantizes the coordinator's mean broadcast; \
+                 the ring topology has no broadcast downlink — the final \
+                 all-gather chunks already ride the ring encoded (drop it or \
+                 pick topology = \"ps\", \"hier\" or \"sharded-ps\")"
+                    .into(),
+            ));
         }
         // Catches negative config values too: the i64 → usize cast wraps
         // them to huge counts (the `threads` hardening, applied to the
@@ -493,25 +526,17 @@ impl TrainConfig {
                 }
             }
         }
-        if self.error_feedback {
-            if self.method == "fp" {
-                return Err(Error::Config(
-                    "error_feedback compensates quantization error; method = \"fp\" \
-                     has none (drop error_feedback or pick a quantizing method)"
-                        .into(),
-                ));
-            }
-            if !matches!(self.topology, Topology::Ps | Topology::ShardedPs) {
-                return Err(Error::Config(format!(
-                    "error_feedback is wired for the parameter-server paths \
-                     (topology = \"ps\" or \"sharded-ps\"); the {} topology \
-                     requantizes at every hop and needs per-hop compensation \
-                     (ROADMAP follow-up)",
-                    self.topology
-                )));
-            }
-            // threads != 1 composes since the parallel codec grew a
-            // pipeline-side residual (BucketPipeline::encode_ef_into).
+        // error_feedback composes with every topology: the PS paths keep
+        // the worker-side residual, and the ring/hier requantize-per-hop
+        // sites carry one residual per hop position (per-hop EF).
+        // threads != 1 composes too, since the parallel codec has a
+        // pipeline-side residual (BucketPipeline::encode_ef_into).
+        if self.error_feedback && self.method == "fp" {
+            return Err(Error::Config(
+                "error_feedback compensates quantization error; method = \"fp\" \
+                 has none (drop error_feedback or pick a quantizing method)"
+                    .into(),
+            ));
         }
         // Catches negative config values too (the `threads` hardening,
         // applied to the overlap knob).
@@ -599,7 +624,8 @@ mod tests {
             clip_factor = 2.5
             lr_decay_steps = [100, 200]
             quantize_downlink = true
-            topology = "ring"
+            topology = "hier"
+            groups = 2
             "#,
         )
         .unwrap();
@@ -610,7 +636,8 @@ mod tests {
         assert_eq!(c.clip_factor, Some(2.5));
         assert_eq!(c.lr_decay_steps, vec![100, 200]);
         assert!(c.quantize_downlink);
-        assert_eq!(c.topology, Topology::Ring);
+        assert_eq!(c.topology, Topology::Hier);
+        assert_eq!(c.groups, 2);
         // defaults preserved
         assert_eq!(c.momentum, 0.9);
     }
@@ -623,7 +650,7 @@ mod tests {
         assert!(TrainConfig::from_map(&bad).is_err());
         let wrong_type = parse("[train]\ntopology = 3").unwrap();
         assert!(TrainConfig::from_map(&wrong_type).is_err());
-        // downlink quantization is a PS-only option
+        // the ring has no broadcast downlink to quantize
         let c = TrainConfig {
             topology: Topology::Ring,
             quantize_downlink: true,
@@ -632,6 +659,26 @@ mod tests {
         assert!(c.validate().is_err());
         let c = TrainConfig { topology: Topology::Ring, ..TrainConfig::default() };
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn lr_decay_steps_reject_negative_and_absurd_entries() {
+        let base = "[train]\nworkers = 2\nbatch = 64\n";
+        let from = |toml: &str| TrainConfig::from_map(&parse(toml).unwrap());
+        // a sane schedule parses
+        let c = from(&format!("{base}lr_decay_steps = [100, 200]")).unwrap();
+        assert_eq!(c.lr_decay_steps, vec![100, 200]);
+        // negatives must not wrap through the i64 → usize cast
+        let err = from(&format!("{base}lr_decay_steps = [100, -1]")).unwrap_err();
+        assert!(err.to_string().contains("wrap"), "{err}");
+        // absurd entries are rejected with the bound in the message
+        let err = from(&format!("{base}lr_decay_steps = [999999999999]")).unwrap_err();
+        assert!(err.to_string().contains("100000000"), "{err}");
+        // non-integer entries keep the type error
+        assert!(from(&format!("{base}lr_decay_steps = [1.5]")).is_err());
+        // direct construction is caught by validate() too
+        let c = TrainConfig { lr_decay_steps: vec![usize::MAX], ..TrainConfig::default() };
+        assert!(c.validate().is_err());
     }
 
     #[test]
@@ -732,8 +779,12 @@ mod tests {
         assert!(rejects(
             "[train]\nworkers = 2\nbatch = 64\ntopology = \"ring\"\nstaleness = 1"
         ));
-        // quantize_downlink is still PS-only
-        assert!(rejects(&format!("{sharded}quantize_downlink = true")));
+        // the per-shard mean downlink quantizes too
+        let c = TrainConfig::from_map(
+            &parse(&format!("{sharded}quantize_downlink = true")).unwrap(),
+        )
+        .unwrap();
+        assert!(c.quantize_downlink);
     }
 
     #[test]
@@ -750,11 +801,23 @@ mod tests {
         let rejects = |toml: &str| TrainConfig::from_map(&parse(toml).unwrap()).is_err();
         // fp has no quantization error to compensate
         assert!(rejects("[train]\nworkers = 2\nbatch = 64\nerror_feedback = true"));
-        // EF is a PS-path option — the ring/hier hops requantize
-        assert!(rejects(
-            "[train]\nworkers = 2\nbatch = 64\nmethod = \"terngrad\"\n\
-             topology = \"ring\"\nerror_feedback = true"
-        ));
+        // ring/hier compose via per-hop residuals
+        let ok = TrainConfig::from_map(
+            &parse(
+                "[train]\nworkers = 2\nbatch = 64\nmethod = \"terngrad\"\n\
+                 topology = \"ring\"\nerror_feedback = true",
+            )
+            .unwrap(),
+        );
+        assert!(ok.is_ok(), "per-hop EF lifts the ring restriction");
+        let ok = TrainConfig::from_map(
+            &parse(
+                "[train]\nworkers = 4\nbatch = 64\nmethod = \"bingrad-b\"\n\
+                 topology = \"hier\"\ngroups = 2\nerror_feedback = true",
+            )
+            .unwrap(),
+        );
+        assert!(ok.is_ok(), "per-hop EF lifts the hier restriction");
         // the parallel codec composes with EF (pipeline-side residual)
         let ok = TrainConfig::from_map(
             &parse(
@@ -809,9 +872,10 @@ mod tests {
         assert!(rejects(&format!("{base}topology = \"hier\"\ngroups = 3")));
         // groups on a flat topology is an error, not silently ignored
         assert!(rejects(&format!("{base}groups = 2")));
-        // quantize_downlink is PS-only (hier's downlink is FP multicast)
+        // hier's root multicast quantizes like the PS broadcast
         let q = format!("{base}topology = \"hier\"\ngroups = 2\nquantize_downlink = true");
-        assert!(rejects(&q));
+        let c = TrainConfig::from_map(&parse(&q).unwrap()).unwrap();
+        assert!(c.quantize_downlink);
         // link keys must be numbers…
         assert!(rejects("[train]\ninter_bandwidth = \"fast\""));
         // …and physically meaningful (no zero/negative bandwidth, no

@@ -19,9 +19,14 @@
 //! step `t` — replicas still stay bit-identical, just `K` rounds behind
 //! the gradients. Wire bytes and simulated comm time come from the
 //! collective's exact accounting. Workers can opt into error feedback
-//! (`TrainConfig::error_feedback`, PS paths, serial or parallel codec):
-//! quantize `g + m` and keep the residual `m`, which rescues the biased
-//! schemes (BinGrad-b, signSGD) end-to-end.
+//! (`TrainConfig::error_feedback`, any topology, serial or parallel
+//! codec): each worker quantizes `g + m` and keeps the residual `m` for
+//! its uplink, which rescues the biased schemes (BinGrad-b, signSGD)
+//! end-to-end; the flag also arms the collectives' own requantization
+//! residuals (one per ring hop position / hierarchy edge, and — with
+//! `TrainConfig::quantize_downlink` — a server-side downlink residual).
+//! The worker-side residual tracks the *uplink* signal only: the
+//! downlink mean arrives already decoded and is applied as-is.
 //! The per-round hot loop reuses all of its scratch (quantization
 //! buckets, wire messages, decode buffers, and the sort-based level
 //! solvers' hoisted sort/prefix scratch): the encode/wire/decode/reduce
@@ -161,6 +166,10 @@ impl<'a> Trainer<'a> {
             staleness: cfg.staleness,
             links: self.links,
             quantize_downlink: cfg.quantize_downlink,
+            // Arms the collective-internal residuals (per-hop on
+            // ring/hier, server-side downlink with quantize_downlink).
+            // The workers' own uplink EF lives in the loop below.
+            error_feedback: cfg.error_feedback,
         };
         let mut server_backend = make_backend(l);
         let param_count = server_backend.param_count();
@@ -230,10 +239,12 @@ impl<'a> Trainer<'a> {
                     let mut msg: Vec<u8> = Vec::new();
                     let mut mean: Vec<f32> = Vec::new();
                     let mut deq: Vec<f32> = Vec::new();
-                    // Opt-in error feedback (validated: PS paths with a
-                    // quantizing method; serial or parallel codec):
-                    // quantize g + m instead of g, keep the residual
-                    // m ← (g + m) − Q(g + m).
+                    // Opt-in error feedback (validated: any topology
+                    // with a quantizing method; serial or parallel
+                    // codec): quantize g + m instead of g, keep the
+                    // residual m ← (g + m) − Q(g + m). The residual
+                    // tracks this worker's own uplink — the exchanged
+                    // mean (quantized downlink or not) never feeds it.
                     let mut ef = cfg.error_feedback.then(|| gc.error_feedback());
                     // Overlapped backward+encode (quantizing methods,
                     // parallel codec): sections of the gradient hit the
@@ -592,19 +603,35 @@ mod tests {
         );
     }
 
+    /// `quantize_downlink` shrinks the mean broadcast on every topology
+    /// that has one (ps, hier, sharded-ps) — and precisely the downlink
+    /// component of the wire, as the new up/down counters attest.
     #[test]
     fn downlink_quantization_shrinks_broadcast() {
         let ds = tiny_ds();
-        let mut cfg = tiny_cfg("orq-3", 2);
-        cfg.quantize_downlink = true;
-        let factory = native_backend_factory(&cfg.model).unwrap();
-        let out = Trainer::new(cfg, &ds).unwrap().run(factory).unwrap();
-        let mut cfg2 = tiny_cfg("orq-3", 2);
-        cfg2.quantize_downlink = false;
-        let factory2 = native_backend_factory(&cfg2.model).unwrap();
-        let out2 = Trainer::new(cfg2, &ds).unwrap().run(factory2).unwrap();
-        assert!(out.summary.total_wire_bytes < out2.summary.total_wire_bytes);
-        assert!(out.summary.test_top1 > 0.5);
+        let run_dl = |topology: Topology, downlink: bool| {
+            let mut cfg = tiny_cfg("orq-3", 2);
+            cfg.topology = topology;
+            match topology {
+                Topology::Hier => cfg.groups = 2,
+                Topology::ShardedPs => cfg.shards = 2,
+                _ => {}
+            }
+            cfg.quantize_downlink = downlink;
+            let factory = native_backend_factory(&cfg.model).unwrap();
+            Trainer::new(cfg, &ds).unwrap().run(factory).unwrap()
+        };
+        for topology in [Topology::Ps, Topology::Hier, Topology::ShardedPs] {
+            let q = run_dl(topology, true);
+            let fp = run_dl(topology, false);
+            assert!(
+                q.summary.total_wire_bytes < fp.summary.total_wire_bytes,
+                "{topology:?}: quantized downlink must shrink the wire"
+            );
+            assert!(q.comm.wire_bytes_down < fp.comm.wire_bytes_down, "{topology:?}");
+            assert_eq!(q.comm.wire_bytes_up, fp.comm.wire_bytes_up, "{topology:?}: uplink untouched");
+            assert!(q.summary.test_top1 > 0.5, "{topology:?} top1={}", q.summary.test_top1);
+        }
     }
 
     #[test]
@@ -816,16 +843,68 @@ mod tests {
         assert_eq!(sh.params, ef.params, "S=2 K=0 EF ≡ flat PS EF");
     }
 
+    /// EF now rides every topology (per-hop residuals on ring/hier);
+    /// only fp — where there is no quantization error to compensate —
+    /// still rejects the flag.
     #[test]
-    fn error_feedback_rejected_off_the_ps_paths() {
+    fn error_feedback_rejected_only_on_fp() {
         let ds = tiny_ds();
-        let mut cfg = tiny_cfg("terngrad", 2);
-        cfg.error_feedback = true;
-        cfg.topology = Topology::Ring;
-        assert!(Trainer::new(cfg, &ds).is_err());
         let mut cfg = tiny_cfg("fp", 2);
         cfg.error_feedback = true;
         assert!(Trainer::new(cfg, &ds).is_err());
+        let mut cfg = tiny_cfg("terngrad", 2);
+        cfg.error_feedback = true;
+        cfg.topology = Topology::Ring;
+        assert!(Trainer::new(cfg, &ds).is_ok());
+    }
+
+    /// Per-hop error feedback end-to-end on the decentralized paths:
+    /// ring and hier runs with EF learn the biased BinGrad-b, stay
+    /// deterministic, and the hop residuals change the trajectory.
+    #[test]
+    fn error_feedback_trains_on_ring_and_hier() {
+        let ds = tiny_ds();
+        let run_ef = |topology: Topology, ef: bool| {
+            let mut cfg = tiny_cfg("bingrad-b", 4);
+            cfg.topology = topology;
+            if topology == Topology::Hier {
+                cfg.groups = 2;
+            }
+            cfg.error_feedback = ef;
+            let factory = native_backend_factory(&cfg.model).unwrap();
+            Trainer::new(cfg, &ds).unwrap().run(factory).unwrap()
+        };
+        for topology in [Topology::Ring, Topology::Hier] {
+            let ef = run_ef(topology, true);
+            let ef2 = run_ef(topology, true);
+            assert_eq!(ef.params, ef2.params, "{topology:?}: EF runs must stay reproducible");
+            assert!(ef.summary.test_top1 > 0.5, "{topology:?} EF top1={}", ef.summary.test_top1);
+            let plain = run_ef(topology, false);
+            assert_ne!(ef.params, plain.params, "{topology:?}: hop residuals must matter");
+        }
+    }
+
+    /// EF × quantized downlink: the worker residual tracks the uplink
+    /// only, so flipping the downlink codec changes the applied mean
+    /// (and the trajectory) but never corrupts the compensation loop —
+    /// the biased scheme still learns, bidirectionally compressed.
+    #[test]
+    fn error_feedback_composes_with_quantized_downlink() {
+        let ds = tiny_ds();
+        let run_efdl = |downlink: bool| {
+            let mut cfg = tiny_cfg("bingrad-b", 2);
+            cfg.error_feedback = true;
+            cfg.quantize_downlink = downlink;
+            let factory = native_backend_factory(&cfg.model).unwrap();
+            Trainer::new(cfg, &ds).unwrap().run(factory).unwrap()
+        };
+        let both = run_efdl(true);
+        let up_only = run_efdl(false);
+        assert!(both.summary.test_top1 > 0.5, "EF+downlink top1={}", both.summary.test_top1);
+        assert_ne!(both.params, up_only.params, "quantized downlink must alter the mean");
+        assert!(both.summary.total_wire_bytes < up_only.summary.total_wire_bytes);
+        // deterministic under the composition too
+        assert_eq!(both.params, run_efdl(true).params);
     }
 
     /// Error feedback through the parallel codec (the combination PR 4
@@ -884,8 +963,7 @@ mod tests {
     /// The overlap tentpole guarantee: backward/encode overlap trains
     /// bit-identically to the flat post-backward exchange — same trained
     /// parameters and wire bytes — on every topology and thread count
-    /// (1 degenerates to flat), with and without error feedback where EF
-    /// is supported (the PS paths).
+    /// (1 degenerates to flat), with and without error feedback.
     #[test]
     fn overlap_bit_identical_to_flat_exchange_all_topologies() {
         let ds = tiny_ds();
@@ -907,9 +985,6 @@ mod tests {
         for topology in [Topology::Ps, Topology::Ring, Topology::Hier, Topology::ShardedPs] {
             for threads in [1usize, 2, 4] {
                 for ef in [false, true] {
-                    if ef && !matches!(topology, Topology::Ps | Topology::ShardedPs) {
-                        continue; // EF is a PS-path feature
-                    }
                     let flat = run_ov(topology, threads, false, ef);
                     let over = run_ov(topology, threads, true, ef);
                     assert_eq!(

@@ -69,8 +69,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.check_known(&[
         "config", "model", "method", "workers", "steps", "batch", "dataset", "bucket",
         "clip", "backend", "artifacts", "out", "seed", "lr", "eval-every", "topology",
-        "groups", "shards", "staleness", "error-feedback", "threads", "pool",
-        "overlap", "sections",
+        "groups", "shards", "staleness", "error-feedback", "quantize-downlink",
+        "threads", "pool", "overlap", "sections",
         "intra-bandwidth", "intra-latency", "inter-bandwidth", "inter-latency",
     ])?;
     let mut cfg = match args.get("config") {
@@ -129,6 +129,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if args.flag("error-feedback") {
         cfg.error_feedback = true;
+    }
+    if args.flag("quantize-downlink") {
+        cfg.quantize_downlink = true;
     }
     if let Some(t) = args.get_parse::<usize>("threads")? {
         cfg.threads = t;

@@ -12,6 +12,14 @@
 //! composable reinforcement — so it ships here as an opt-in wrapper any
 //! [`Quantizer`] can be lifted into, with an ablation showing it rescues
 //! the *biased* schemes (SignSGD/BinGrad-b) most, exactly as [17] proves.
+//!
+//! One instance compensates one *requantization site*, not one worker:
+//! besides the worker uplink, the collectives keep an `ErrorFeedback`
+//! per ring hop position, per hierarchy edge, and (under
+//! `quantize_downlink`) on the server's mean broadcast — each site sees
+//! its own signal stream, so each needs its own residual. The memory
+//! resets whenever the signal length changes, which is also why a site's
+//! instance must only ever see one stable length.
 
 use super::bucket::{BucketQuantizer, QuantizedGrad};
 use super::Quantizer;

@@ -54,21 +54,30 @@ fn groups_must_divide_the_world_size() {
 }
 
 #[test]
-fn quantize_downlink_is_ps_only() {
-    for topo in ["ring", "hier"] {
-        let toml = format!(
-            "[train]\nworkers = 4\nbatch = 4\ntopology = \"{topo}\"\nquantize_downlink = true{}",
-            if topo == "hier" { "\ngroups = 2" } else { "" }
-        );
-        assert!(cfg_from(&toml).is_err(), "{topo}");
-    }
-    let ok = cfg_from("[train]\nworkers = 4\nbatch = 4\nquantize_downlink = true");
-    assert!(ok.is_ok());
-    // comm layer
+fn quantize_downlink_rejected_only_on_the_ring() {
+    // the ring has no broadcast downlink to quantize — actionable error
+    let err = cfg_from(
+        "[train]\nworkers = 4\nbatch = 4\ntopology = \"ring\"\nquantize_downlink = true",
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("ring"), "{err}");
+    // every broadcast topology accepts it
+    assert!(cfg_from("[train]\nworkers = 4\nbatch = 4\nquantize_downlink = true").is_ok());
+    assert!(cfg_from(
+        "[train]\nworkers = 4\nbatch = 4\ntopology = \"hier\"\ngroups = 2\n\
+         quantize_downlink = true"
+    )
+    .is_ok());
+    assert!(cfg_from(
+        "[train]\nworkers = 4\nbatch = 4\ntopology = \"sharded-ps\"\nshards = 2\n\
+         quantize_downlink = true"
+    )
+    .is_ok());
+    // comm layer enforces the same line
     let spec = WireSpec::new("terngrad", 64);
     let links = LinkMap::uniform(Link::ten_gbps());
     let hier_q = ExchangeConfig::hier(2, links).with_downlink(true);
-    assert!(build_topology(&hier_q, 4, &spec).is_err());
+    assert!(build_topology(&hier_q, 4, &spec).is_ok());
     let ring_q = ExchangeConfig::flat(Topology::Ring, Link::ten_gbps()).with_downlink(true);
     assert!(build_topology(&ring_q, 4, &spec).is_err());
 }
@@ -150,14 +159,15 @@ fn error_feedback_rejected_where_it_cannot_compensate() {
     // fp has no quantization error
     let err = cfg_from("[train]\nworkers = 2\nbatch = 64\nerror_feedback = true").unwrap_err();
     assert!(err.to_string().contains("error_feedback"), "{err}");
-    // ring/hier requantize per hop — EF is a PS-path option
+    // ring/hier requantize per hop — each hop position now carries its
+    // own residual, so the flag is accepted on every topology
     for topo in ["ring", "hier"] {
         let toml = format!(
             "[train]\nworkers = 4\nbatch = 4\nmethod = \"terngrad\"\n\
              topology = \"{topo}\"\nerror_feedback = true{}",
             if topo == "hier" { "\ngroups = 2" } else { "" }
         );
-        assert!(cfg_from(&toml).is_err(), "{topo}");
+        assert!(cfg_from(&toml).is_ok(), "{topo}");
     }
     // the parallel codec composes with EF since the pipeline grew a
     // residual path (PR 5) — previously rejected, now accepted
@@ -173,6 +183,42 @@ fn error_feedback_rejected_where_it_cannot_compensate() {
         "[train]\nworkers = 2\nbatch = 64\nmethod = \"bingrad-b\"\nerror_feedback = true"
     )
     .is_ok());
+}
+
+/// `lr_decay_steps` used to accept negative entries by wrapping them
+/// through the i64 → usize cast into astronomically large step numbers
+/// (silently disabling the decay). Negatives and absurd magnitudes must
+/// both come back as typed errors now.
+#[test]
+fn lr_decay_steps_reject_negative_and_absurd_entries() {
+    let base = "[train]\nworkers = 2\nbatch = 64\n";
+    for bad in [
+        "lr_decay_steps = [-1]",
+        "lr_decay_steps = [100, -200]",
+        "lr_decay_steps = [9223372036854775807]",
+        "lr_decay_steps = [200000000]",
+    ] {
+        let err = cfg_from(&format!("{base}{bad}")).unwrap_err();
+        assert!(err.to_string().contains("lr_decay_steps"), "{bad}: {err}");
+    }
+    // wrong element / value types stay errors too
+    assert!(cfg_from(&format!("{base}lr_decay_steps = [true]")).is_err());
+    assert!(cfg_from(&format!("{base}lr_decay_steps = \"80,120\"")).is_err());
+    // valid schedules (empty, unsorted, duplicated) still pass
+    let ok = cfg_from(&format!("{base}lr_decay_steps = [120, 80, 80]")).unwrap();
+    assert_eq!(ok.lr_decay_steps, vec![120, 80, 80]);
+    assert!(cfg_from(&format!("{base}lr_decay_steps = []")).is_ok());
+}
+
+/// The downlink flag's CLI spelling: a bare `--quantize-downlink` flag,
+/// guarded by the train allowlist.
+#[test]
+fn quantize_downlink_cli_spelling_parses() {
+    let a = args("train --method terngrad --quantize-downlink");
+    assert!(a.flag("quantize-downlink"));
+    assert!(a.check_known(&["method", "quantize-downlink"]).is_ok());
+    let a = args("train --quantize-downlinkk");
+    assert!(a.check_known(&["quantize-downlink"]).is_err());
 }
 
 #[test]

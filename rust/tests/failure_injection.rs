@@ -1,12 +1,14 @@
-//! Failure injection: malformed wire bytes, adversarial configs, and
-//! degenerate training shapes must produce clean errors — never panics,
-//! never silent corruption.
+//! Failure injection: malformed wire bytes, adversarial configs, dead
+//! peers and degenerate training shapes must produce clean errors —
+//! never panics, never deadlocks, never silent corruption.
 
 use orq::codec::{self, Packing};
+use orq::comm::link::{Link, LinkMap};
+use orq::comm::{build_topology, ExchangeConfig, GradCodec, Topology, WireSpec};
 use orq::config::TrainConfig;
 use orq::coordinator::trainer::{native_backend_factory, Trainer};
 use orq::data::synth::{ClassDataset, DatasetSpec};
-use orq::quant::bucket::BucketQuantizer;
+use orq::quant::bucket::{BucketQuantizer, QuantizedGrad};
 use orq::quant::{self};
 use orq::tensor::rng::Rng;
 
@@ -164,6 +166,84 @@ fn trainer_rejects_unknown_method_and_model() {
     assert!(native_backend_factory("not-a-model").is_err());
     assert!(native_backend_factory("mlp:64").is_err()); // single dim
     assert!(native_backend_factory("mlp:a-b").is_err()); // non-numeric
+}
+
+/// Star-shaped topologies multiplex every worker onto one uplink
+/// channel, so a dead peer is detected once the last end is gone: drop
+/// all the worker ends before any exchange and the coordinator's gather
+/// must return `Err` — not panic, not block forever.
+#[test]
+fn dead_workers_error_cleanly_on_star_topologies() {
+    let sp = WireSpec { seed: 11, ..WireSpec::new("terngrad", 256) };
+    for cfg in [
+        ExchangeConfig::flat(Topology::Ps, Link::ten_gbps()),
+        ExchangeConfig::hier(2, LinkMap::uniform(Link::ten_gbps())),
+    ] {
+        let (mut coll, ends) = build_topology(&cfg, 4, &sp).unwrap();
+        drop(ends); // every worker dies before contributing
+        let mut mean = Vec::new();
+        assert!(
+            coll.round(&mut mean).is_err(),
+            "{:?}: dead workers must surface as Err on the coordinator",
+            cfg.topology
+        );
+    }
+}
+
+/// The ring and the sharded PS wire peers with dedicated channels, so a
+/// SINGLE dead worker cascades: every survivor sees its hop / frame
+/// channel close and gets `Err` from `exchange` (a panic there would
+/// poison the whole node), and the coordinator reports the dead round
+/// as `Err` too.
+#[test]
+fn one_dead_peer_cascades_as_errors_on_ring_and_sharded_ps() {
+    let sp = WireSpec { seed: 12, ..WireSpec::new("terngrad", 256) };
+    let mut rng = Rng::seed_from(13);
+    let gs: Vec<Vec<f32>> = (0..4)
+        .map(|_| {
+            let mut g = vec![0.0f32; 2048];
+            rng.fill_gaussian(&mut g, 0.01);
+            g
+        })
+        .collect();
+    for cfg in [
+        ExchangeConfig::flat(Topology::Ring, Link::ten_gbps()),
+        ExchangeConfig::sharded(2, 0, Link::ten_gbps()),
+    ] {
+        let (mut coll, mut ends) = build_topology(&cfg, 4, &sp).unwrap();
+        drop(ends.remove(0)); // worker 0 dies before its first exchange
+        let res = std::thread::scope(|scope| {
+            for (i, mut wx) in ends.into_iter().enumerate() {
+                let w = i + 1;
+                let g: &[f32] = &gs[w];
+                let sp = sp.clone();
+                scope.spawn(move || {
+                    let mut gc = GradCodec::new(&sp).unwrap();
+                    let mut rng = Rng::stream(sp.seed, 2_000 + w as u64);
+                    let mut qg = QuantizedGrad::default();
+                    let mut msg = Vec::new();
+                    gc.encode_into(g, &mut rng, &mut qg, &mut msg);
+                    let mut mean = Vec::new();
+                    assert!(
+                        wx.exchange(&mut msg, &mut mean).is_err(),
+                        "survivor {w} must see the dead peer as Err"
+                    );
+                });
+            }
+            let mut mean = Vec::new();
+            let res = coll.round(&mut mean);
+            // Drop before the scope joins so any survivor still blocked
+            // on a coordinator channel unblocks (the drop-before-join
+            // teardown convention from `run_rounds`).
+            drop(coll);
+            res
+        });
+        assert!(
+            res.is_err(),
+            "{:?}: dead peer must surface as Err on the coordinator",
+            cfg.topology
+        );
+    }
 }
 
 #[test]

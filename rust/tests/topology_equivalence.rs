@@ -11,7 +11,12 @@
 //! * every node must decode the bit-identical mean — the invariant that
 //!   keeps parameter replicas in sync without parameter traffic (the
 //!   ring forwards final encoded chunks verbatim; the hierarchy
-//!   multicasts one FP message);
+//!   multicasts one message — FP by default, requantized once at the
+//!   root under `quantize_downlink` — and the aggregation point always
+//!   decodes its own bytes);
+//! * per-hop error feedback and quantized downlinks change *what* is
+//!   transmitted, never the every-node-same-bytes property, and the EF
+//!   residuals must measurably cancel requantization bias over rounds;
 //! * wire bytes must match the closed-form `codec::wire_size` accounting
 //!   exactly — *per edge class* for the hierarchy (intra-group ring and
 //!   gather traffic vs inter-group leader-star traffic);
@@ -620,6 +625,210 @@ fn pooled_driver_keeps_serial_path_bit_identical() {
         let (sh, _) = run_rounds(&sharded_cfg(1, 0), &pooled, &gs, rounds).unwrap();
         assert_eq!(sh, want, "{method} sharded S=1 K=0 pooled ≡ flat PS");
     }
+}
+
+/// Quantized downlinks keep the replica-sync invariant: the aggregation
+/// point (PS server, hier root, each sharded-ps shard) encodes the mean
+/// ONCE and decodes its own bytes, so every node — coordinator included
+/// — still applies the bit-identical mean, with and without the
+/// server-side downlink residual.
+#[test]
+fn quantized_downlink_mean_bit_identical_on_every_node() {
+    for method in ["terngrad", "orq-5"] {
+        for ef in [false, true] {
+            let dl = |cfg: ExchangeConfig| cfg.with_downlink(true).with_error_feedback(ef);
+            assert_mean_bit_identical(&dl(flat(Topology::Ps)), 4, method);
+            assert_mean_bit_identical(&dl(hier_cfg(2)), 4, method);
+            assert_mean_bit_identical(&dl(hier_cfg(3)), 6, method);
+            assert_mean_bit_identical(&dl(sharded_cfg(2, 0)), 4, method);
+        }
+    }
+}
+
+/// Per-hop error feedback keeps the invariant on the decentralized
+/// paths too: residuals change the transmitted signal round over round,
+/// never the every-node-sees-the-same-bytes property.
+#[test]
+fn error_feedback_mean_bit_identical_on_every_node() {
+    for method in ["bingrad-b", "orq-5"] {
+        assert_mean_bit_identical(&flat(Topology::Ring).with_error_feedback(true), 4, method);
+        assert_mean_bit_identical(&hier_cfg(2).with_error_feedback(true), 4, method);
+        assert_mean_bit_identical(&hier_cfg(1).with_error_feedback(true), 4, method);
+    }
+}
+
+/// Downlink byte accounting under `quantize_downlink`, exact to the
+/// byte: the broadcast component shrinks to the quantized wire size
+/// while the uplink component is untouched — on the PS star, per edge
+/// class on the hierarchy, and per versioned frame on the sharded PS.
+#[test]
+fn quantized_downlink_bytes_match_codec_accounting_exactly() {
+    let workers = 4usize;
+    let d = 128usize;
+    for (method, s) in [("terngrad", 3usize), ("orq-5", 5)] {
+        // PS star: L quantized uplinks, one quantized broadcast.
+        let n = workers * d * 3;
+        let gs = grads(n, workers, 2);
+        let sp = spec(method, d);
+        let (_, q) = run_once(&flat(Topology::Ps).with_downlink(true), &sp, &gs).unwrap();
+        let (_, fp) = run_once(&flat(Topology::Ps), &sp, &gs).unwrap();
+        let up = wire_size(n, d, s, Packing::BaseS, method) as u64;
+        let fp_down = wire_size(n, n.max(1), 0, Packing::BaseS, "fp") as u64;
+        assert_eq!(q.wire_bytes_up, workers as u64 * up, "{method} ps up");
+        assert_eq!(q.wire_bytes_down, up, "{method} ps down is one quantized mean");
+        assert_eq!(fp.wire_bytes_up, q.wire_bytes_up, "{method} ps uplink untouched");
+        assert_eq!(fp.wire_bytes_down, fp_down, "{method} ps fp down");
+        assert!(q.wire_bytes_down < fp.wire_bytes_down, "{method} ps downlink must shrink");
+
+        // Hierarchy: the root's single encoded mean rides every
+        // multicast edge verbatim (G leader multicasts intra, 1 root
+        // multicast inter), replacing the FP message wholesale.
+        let groups = 2usize;
+        let m = workers / groups;
+        let n = m * d * 3;
+        let gs = grads(n, workers, 2);
+        let (_, hq) = run_once(&hier_cfg(groups).with_downlink(true), &sp, &gs).unwrap();
+        let chunk_msg = wire_size(n / m, d, s, Packing::BaseS, method) as u64;
+        let grad_msg = wire_size(n, d, s, Packing::BaseS, method) as u64;
+        let intra = (workers * (m - 1) + (workers - groups)) as u64 * chunk_msg
+            + groups as u64 * grad_msg;
+        let inter = (groups as u64 - 1) * grad_msg + grad_msg;
+        assert_eq!(hq.wire_bytes_intra, intra, "{method} hier intra");
+        assert_eq!(hq.wire_bytes_inter, inter, "{method} hier inter");
+        assert_eq!(
+            hq.wire_bytes_down,
+            (groups as u64 + 1) * grad_msg,
+            "{method} hier down = G leader multicasts + root multicast"
+        );
+        let (_, hfp) = run_once(&hier_cfg(groups), &sp, &gs).unwrap();
+        assert_eq!(hfp.wire_bytes_up, hq.wire_bytes_up, "{method} hier uplink untouched");
+        assert!(hq.wire_bytes_down < hfp.wire_bytes_down, "{method} hier downlink shrinks");
+        assert!(
+            hq.wire_bytes_inter < hfp.wire_bytes_inter,
+            "{method} hier slow-edge bytes shrink"
+        );
+
+        // Sharded PS: each shard's mean frame wraps a quantized chunk.
+        let shards = 2usize;
+        let n = shards * d * 3;
+        let gs = grads(n, workers, 2);
+        let (_, sq) = run_once(&sharded_cfg(shards, 0).with_downlink(true), &sp, &gs).unwrap();
+        let chunk = n / shards;
+        let up_frame =
+            (shard::FRAME_HEADER_BYTES + wire_size(chunk, d, s, Packing::BaseS, method)) as u64;
+        let down_frame = up_frame; // same codec, same chunk grid
+        assert_eq!(sq.wire_bytes_up, (workers * shards) as u64 * up_frame, "{method} sharded up");
+        assert_eq!(sq.wire_bytes_down, shards as u64 * down_frame, "{method} sharded down");
+        let (_, sfp) = run_once(&sharded_cfg(shards, 0), &sp, &gs).unwrap();
+        assert_eq!(sfp.wire_bytes_up, sq.wire_bytes_up, "{method} sharded uplink untouched");
+        assert!(sq.wire_bytes_down < sfp.wire_bytes_down, "{method} sharded downlink shrinks");
+    }
+}
+
+/// Extended closed-form models with quantized downlinks: feed
+/// `hier_time`/`sharded_time` the actual quantized wire sizes and the
+/// measured simulated round must sit within 1% above them (per-message
+/// headers are the only gap the models ignore).
+#[test]
+fn quantized_downlink_sim_time_matches_models() {
+    // Hierarchy on a heterogeneous map.
+    let links = LinkMap::new(Link::new(100e9, 1e-6), Link::new(1e9, 0.005));
+    let workers = 4usize;
+    let groups = 2usize;
+    let m = workers / groups;
+    let d = 512usize;
+    let n = m * d * 16;
+    let gs = grads(n, workers, 4);
+    let sp = spec("terngrad", d);
+    let cfg = ExchangeConfig::hier(groups, links).with_downlink(true);
+    let (_, st) = run_once(&cfg, &sp, &gs).unwrap();
+    let quant = wire_size(n, d, 3, Packing::BaseS, "terngrad");
+    let model = hier::hier_time(&links, workers, groups, quant, quant);
+    assert!(st.sim_time_s > model, "headers make measured > model");
+    assert!(st.sim_time_s < model * 1.01, "within 1%: {} vs {model}", st.sim_time_s);
+
+    // Sharded PS on the homogeneous testbed link. Chunks are large
+    // enough that the two 22-byte frame headers the model ignores stay
+    // far inside the 1% envelope at ~2 bits/element.
+    let link = Link::ten_gbps();
+    let workers = 3usize;
+    let shards = 4usize;
+    let n = shards * d * 64;
+    let gs = grads(n, workers, 3);
+    let (_, st) = run_once(&sharded_cfg(shards, 0).with_downlink(true), &sp, &gs).unwrap();
+    let chunk = wire_size(n / shards, d, 3, Packing::BaseS, "terngrad");
+    let model = shard::sharded_time(&link, workers, shards, shards * chunk, shards * chunk);
+    assert!(st.sim_time_s > model, "headers make measured > model");
+    assert!(st.sim_time_s < model * 1.01, "within 1%: {} vs {model}", st.sim_time_s);
+}
+
+/// The EF payoff, measured: push the SAME gradients every round and
+/// compare the running average of the decoded means against the exact
+/// mean. Memoryless requantization of partial sums leaves a bias floor
+/// on the biased BinGrad-b; per-hop residuals (ring hop positions,
+/// hierarchy edges) cancel it over rounds, so the EF average must land
+/// strictly closer. Seeded and deterministic.
+#[test]
+fn per_hop_error_feedback_beats_memoryless_on_biased_scheme() {
+    let workers = 4usize;
+    let rounds = 12usize;
+    let n = 4096usize;
+    let gs = grads(n, workers, 0);
+    let exact = exact_mean(&gs);
+    let avg_err = |cfg: &ExchangeConfig| -> f64 {
+        let sp = spec("bingrad-b", 256);
+        let (mut coll, ends) = build_topology(cfg, workers, &sp).unwrap();
+        let mut sum = vec![0.0f64; n];
+        std::thread::scope(|scope| {
+            for (w, mut wx) in ends.into_iter().enumerate() {
+                let g: &[f32] = &gs[w];
+                let sp = sp.clone();
+                scope.spawn(move || {
+                    let mut gc = orq::comm::GradCodec::new(&sp).unwrap();
+                    let mut rng = Rng::stream(sp.seed, 2_000 + w as u64);
+                    let mut qg = orq::quant::bucket::QuantizedGrad::default();
+                    let mut msg = Vec::new();
+                    let mut mean = Vec::new();
+                    for _ in 0..rounds {
+                        // memoryless uplink in BOTH runs — the toggle
+                        // under test is the topology-internal residuals
+                        gc.encode_into(g, &mut rng, &mut qg, &mut msg);
+                        wx.exchange(&mut msg, &mut mean).unwrap();
+                    }
+                });
+            }
+            let mut m = Vec::new();
+            for _ in 0..rounds {
+                coll.round(&mut m).unwrap();
+                for (acc, v) in sum.iter_mut().zip(&m) {
+                    *acc += *v as f64;
+                }
+            }
+            drop(coll);
+        });
+        let inv = 1.0 / rounds as f64;
+        exact
+            .iter()
+            .zip(&sum)
+            .map(|(e, s)| {
+                let diff = *e as f64 - s * inv;
+                diff * diff
+            })
+            .sum::<f64>()
+            .sqrt()
+    };
+    let ring_plain = avg_err(&flat(Topology::Ring));
+    let ring_ef = avg_err(&flat(Topology::Ring).with_error_feedback(true));
+    assert!(
+        ring_ef < ring_plain,
+        "ring: EF average error {ring_ef} must beat memoryless {ring_plain}"
+    );
+    let hier_plain = avg_err(&hier_cfg(2));
+    let hier_ef = avg_err(&hier_cfg(2).with_error_feedback(true));
+    assert!(
+        hier_ef < hier_plain,
+        "hier: EF average error {hier_ef} must beat memoryless {hier_plain}"
+    );
 }
 
 /// `threads = 0` (auto-size) resolves deterministically under sharding:
