@@ -275,7 +275,8 @@ pub mod suite {
             threads: 1,
             pool: true,
             overlap: false,
-            sections: 4,
+            sections: None,
+            stream_sections: false,
             links: crate::config::LinkConfig::default(),
         }
     }

@@ -29,7 +29,7 @@
 //! (`path: "scalar"`, `quant::random_round_reference`), with
 //! `speedup.round_twopass = scalar / two-pass`.
 //!
-//! `BENCH_exchange.json` (v5): `{ schema: "orq.perfbench.exchange/v5",
+//! `BENCH_exchange.json` (v6): `{ schema: "orq.perfbench.exchange/v6",
 //! mode, elements, workers, threads, bucket_size, quantize: [{method,
 //! path: "serial"|"parallel"|"parallel-scoped", mean_s, melem_s}],
 //! rounds: [{topology, path, mean_s, wire_bytes, sim_time_s, shards,
@@ -38,8 +38,11 @@
 //! {model_params, sections, batch, flat_s, overlap_s, section_bytes,
 //! ps_model_err_pct}, downlink: {topology, rounds, fp | quantized |
 //! quantized_ef: {wire_bytes_up, wire_bytes_down, mean_s, sim_time_s}},
-//! speedup: {quantize_encode, ps_round, pooled_round, overlap_round,
-//! downlink_compression} }`. v3 preserved every v2 field (which
+//! streaming: {topology, sections, ready_last_s, flat_round_sim,
+//! streamed_round_sim, flat_s, streamed_s, ps_model_err_pct, timeline:
+//! [{section, ready_t, link_start_t, done_t}]}, speedup:
+//! {quantize_encode, ps_round, pooled_round, overlap_round,
+//! downlink_compression, streamed_round} }`. v3 preserved every v2 field (which
 //! preserved every v1 field) and added: the `path: "parallel-scoped"`
 //! quantize and ps-round entries — the retained PR 3/4 per-round
 //! `std::thread::scope` execution, measured in the same run as the
@@ -67,6 +70,19 @@
 //! and `speedup.downlink_compression = fp down bytes / quantized down
 //! bytes` is a deterministic codec-accounting ratio the CI floor gates
 //! (it catches the downlink silently falling back to FP, not noise).
+//! v6 adds the `streaming` section (the PR 8 tentpole): the same ps
+//! round flat (the uplink can only start once backward ends) vs
+//! section-streamed (`comm::run_rounds_streamed` — each section frame
+//! rides the link the moment its encode completes). The per-section
+//! `timeline` rows replay the closed-form `ps_streamed_time` recurrence
+//! on the real frame byte sizes (`link_start_t = max(prev done_t,
+//! ready_t)`), checked against the measured simulated round to < 1%,
+//! and `speedup.streamed_round = (ready_last + flat sim) / streamed
+//! sim` — deterministic link-model accounting (the streamed clock
+//! starts at backward start and includes every readiness wait, so the
+//! fair flat baseline is backward end plus the flat round). The CI
+//! floor gates it at 0.9: it catches streaming regressing the round,
+//! not runner noise.
 //!
 //! `--smoke` runs small sizes, then re-parses both artifacts and asserts
 //! the schema plus monotone sanity (sizes and rates positive, fixed-width
@@ -84,7 +100,9 @@ use orq::bench::{print_table, Bench, Measurement};
 use orq::cli::Args;
 use orq::codec::bitpack;
 use orq::comm::link::{Link, LinkMap};
-use orq::comm::{run_rounds, ExchangeConfig, GradCodec, PoolMode, Topology, WireSpec};
+use orq::comm::{
+    run_rounds, run_rounds_streamed, ExchangeConfig, GradCodec, PoolMode, Topology, WireSpec,
+};
 use orq::error::{Error, Result};
 use orq::quant::bucket::{BucketQuantizer, QuantizedGrad};
 use orq::quant::pool::PoolHandle;
@@ -521,6 +539,7 @@ fn bench_exchange(
         bench_overlap(bench, threads, workers, bucket, method, &shared, smoke)?;
     let (downlink, downlink_compression) =
         bench_downlink(bench, workers, bucket, method, &grads)?;
+    let (streaming, streamed_round) = bench_streaming(bench, workers, bucket, method, &grads)?;
 
     let speedup = obj(vec![
         ("quantize_encode", Json::Num(qe[0] / qe[1].max(1e-12))),
@@ -537,18 +556,24 @@ fn bench_exchange(
         // codec accounting (deterministic, not timing), so the CI floor
         // catches the downlink silently falling back to FP.
         ("downlink_compression", Json::Num(downlink_compression)),
+        // (ready_last + flat sim) / streamed sim on the same ps round —
+        // deterministic link-model accounting (the streamed clock
+        // starts at backward start), so the CI floor catches streaming
+        // regressing the round, not runner noise.
+        ("streamed_round", Json::Num(streamed_round)),
     ]);
     println!(
         "exchange speedups ({threads} threads): quantize+encode ×{:.2} (serial/pooled), \
          ps round ×{:.2} (serial/pooled), ps round ×{:.2} (scoped/pooled), \
          backward+encode ×{overlap_round:.2} (flat/overlapped), \
-         downlink bytes ×{downlink_compression:.2} (fp/quantized broadcast)",
+         downlink bytes ×{downlink_compression:.2} (fp/quantized broadcast), \
+         streamed round ×{streamed_round:.2} (backward-end+flat / streamed, simulated)",
         qe[0] / qe[1].max(1e-12),
         ps_round[0] / ps_round[1].max(1e-12),
         ps_round[2] / ps_round[1].max(1e-12)
     );
     Ok(obj(vec![
-        ("schema", Json::Str("orq.perfbench.exchange/v5".into())),
+        ("schema", Json::Str("orq.perfbench.exchange/v6".into())),
         ("mode", Json::Str(mode.into())),
         ("elements", Json::Num(n as f64)),
         ("workers", Json::Num(workers as f64)),
@@ -559,8 +584,151 @@ fn bench_exchange(
         ("amortization", amortization),
         ("overlap", overlap),
         ("downlink", downlink),
+        ("streaming", streaming),
         ("speedup", speedup),
     ]))
+}
+
+/// Section-framed streaming (the PR 8 tentpole figure): the same ps
+/// round with the flat exchange (the uplink can only start once
+/// backward ends) vs the streamed one (`run_rounds_streamed` — each
+/// section frame rides the link the moment its encode completes, while
+/// the backward tail still computes). Both figures are simulated-clock
+/// accounting on the same 10 Gbps link, so the reported speedup is
+/// deterministic: the streamed round is measured from backward start
+/// and includes every readiness wait, making the fair flat baseline
+/// `ready_last + flat round`. The per-section timeline rows replay the
+/// closed-form `ps_streamed_time` recurrence (`link_start_t = max(prev
+/// done_t, ready_t)`) on the real frame byte sizes and the model is
+/// checked against the measured simulated round to < 1% — the same
+/// contract the collective tests enforce. The streamed mean is asserted
+/// bit-identical to the flat round's outside the timers.
+///
+/// Returns the `streaming` JSON section and the
+/// `(ready_last + flat) / streamed` simulated speedup.
+fn bench_streaming(
+    bench: &Bench,
+    workers: usize,
+    bucket: usize,
+    method: &str,
+    grads: &[Vec<f32>],
+) -> Result<(Json, f64)> {
+    use orq::comm::shard::{FRAME_HEADER_BYTES, SECTION_STAMP_BYTES};
+    use orq::comm::{ps_streamed_time, OverlapEncoder, SectionMap, SIM_BACKWARD_RATE};
+
+    let link = Link::ten_gbps();
+    let sections = 4usize;
+    let n = grads.first().map_or(0, |g| g.len());
+    // The streamed run drives the serial (threads = 1) start-anywhere
+    // overlap encoder end to end; its bytes match the flat *parallel*
+    // encode by contract (the legacy serial flat encoder's single RNG
+    // stream cannot start mid-gradient), so the flat baseline runs the
+    // 2-thread codec. Scoped drivers isolate the streaming schedule
+    // from pool effects measured elsewhere.
+    let flat_spec = WireSpec { seed: 7, ..WireSpec::new(method, bucket) }
+        .with_threads(2)
+        .with_pool_mode(PoolMode::Scoped);
+    let stream_spec = WireSpec { seed: 7, ..WireSpec::new(method, bucket) }
+        .with_pool_mode(PoolMode::Scoped);
+    let flat_cfg = ExchangeConfig::flat(Topology::Ps, link);
+    let stream_cfg = ExchangeConfig::flat(Topology::Ps, link).with_streaming(sections);
+
+    // one validated round per path outside the timers, for stats,
+    // fail-fast and the bit-identity assertion
+    let (fmean, fstats) = run_rounds(&flat_cfg, &flat_spec, grads, 1)?;
+    let (smean, sstats) = run_rounds_streamed(&stream_cfg, &stream_spec, grads, 1)?;
+    assert_eq!(smean, fmean, "streamed ps mean must be bit-identical to the flat round");
+
+    let mut rows = Vec::new();
+    let flat_m = bench.measure("ps round flat (post-backward)", None, || {
+        let out = run_rounds(&flat_cfg, &flat_spec, grads, 1).expect("validated above");
+        std::hint::black_box(out.1.wire_bytes);
+    });
+    rows.push(flat_m.clone());
+    let stream_m = bench.measure("ps round streamed", None, || {
+        let out =
+            run_rounds_streamed(&stream_cfg, &stream_spec, grads, 1).expect("validated above");
+        std::hint::black_box(out.1.wire_bytes);
+    });
+    rows.push(stream_m.clone());
+    print_table(
+        &format!(
+            "Section streaming — ps, {workers} workers, {sections} sections, \
+             {method}, d={bucket}"
+        ),
+        &rows,
+    );
+
+    // Worker 0's section frames, replayed exactly as the streamed driver
+    // stages them (encoded sizes are a pure function of element count,
+    // so every worker's frames match byte-for-byte in size).
+    let spans: Vec<std::ops::Range<usize>> =
+        (0..sections).map(|i| n * i / sections..n * (i + 1) / sections).collect();
+    let map = SectionMap::new(&spans, sections, bucket)?;
+    let ready = map.ready_schedule(SIM_BACKWARD_RATE);
+    let mut ov = OverlapEncoder::new(&stream_spec, map)?;
+    let mut rng = Rng::stream(stream_spec.seed, 2_000);
+    let mut out = Vec::new();
+    let mut frames = vec![0usize; sections];
+    ov.encode_streamed(
+        None,
+        &mut rng,
+        &mut out,
+        &ready,
+        &mut |s, m, _| {
+            frames[s] = FRAME_HEADER_BYTES + SECTION_STAMP_BYTES + m.len();
+            Ok(())
+        },
+        |cb| {
+            for s in spans.iter().rev() {
+                cb(s.start, &grads[0]);
+            }
+            0.0
+        },
+    )?;
+
+    // The per-section timeline is the ps_streamed_time recurrence in
+    // send (descending-section) order: a section's transfer starts when
+    // both the link is free and its encode is done.
+    let ready_send: Vec<f64> = ready.iter().rev().copied().collect();
+    let frames_send: Vec<usize> = frames.iter().rev().copied().collect();
+    let mut timeline = Vec::new();
+    let mut end = 0.0f64;
+    for (i, (&r, &fb)) in ready_send.iter().zip(&frames_send).enumerate() {
+        let start = end.max(r);
+        end = start + link.transfer_time(fb);
+        timeline.push(obj(vec![
+            ("section", Json::Num((sections - 1 - i) as f64)),
+            ("ready_t", Json::Num(r)),
+            ("link_start_t", Json::Num(start)),
+            ("done_t", Json::Num(end)),
+        ]));
+    }
+    let mut down = Vec::new();
+    orq::codec::encode_fp_into(&smean, &mut down);
+    let model = ps_streamed_time(&link, &ready_send, &frames_send, down.len());
+    let err_pct = (model - sstats.sim_time_s).abs() / sstats.sim_time_s.max(1e-12) * 100.0;
+    let ready_last = ready.iter().copied().fold(0.0, f64::max);
+    let speedup = (ready_last + fstats.sim_time_s) / sstats.sim_time_s.max(1e-12);
+    println!(
+        "streaming: backward-end+flat {:.3e}s vs streamed {:.3e}s (×{speedup:.2}); \
+         ps_streamed_time model {model:.3e}s ({err_pct:.3}% error)",
+        ready_last + fstats.sim_time_s,
+        sstats.sim_time_s
+    );
+
+    let section = obj(vec![
+        ("topology", Json::Str("ps".into())),
+        ("sections", Json::Num(sections as f64)),
+        ("ready_last_s", Json::Num(ready_last)),
+        ("flat_round_sim", Json::Num(fstats.sim_time_s)),
+        ("streamed_round_sim", Json::Num(sstats.sim_time_s)),
+        ("flat_s", Json::Num(flat_m.mean_s)),
+        ("streamed_s", Json::Num(stream_m.mean_s)),
+        ("ps_model_err_pct", Json::Num(err_pct)),
+        ("timeline", Json::Arr(timeline)),
+    ]);
+    Ok((section, speedup))
 }
 
 /// Quantized mean downlinks (the PR 7 tentpole figure): the same ps
@@ -922,7 +1090,7 @@ fn validate_codec(j: &Json) -> Result<()> {
 
 fn validate_exchange(j: &Json) -> Result<()> {
     let j = &Json::parse(&j.dump())?;
-    if j.req("schema")?.as_str() != Some("orq.perfbench.exchange/v5") {
+    if j.req("schema")?.as_str() != Some("orq.perfbench.exchange/v6") {
         return Err(fail("bad exchange schema tag".into()));
     }
     for key in ["mode", "elements", "workers", "threads", "bucket_size"] {
@@ -1050,10 +1218,67 @@ fn validate_exchange(j: &Json) -> Result<()> {
     if req_f64(q, "wire_bytes_up")? != req_f64(fp, "wire_bytes_up")? {
         return Err(fail("quantized downlink must leave the uplink untouched".into()));
     }
-    let sp = j.req("speedup")?;
-    for key in
-        ["quantize_encode", "ps_round", "pooled_round", "overlap_round", "downlink_compression"]
+    // v6: the streaming section compares the same ps round flat vs
+    // section-streamed on the simulated clock; the per-section timeline
+    // must replay the ps_streamed_time recurrence (transfers gate on
+    // readiness and link-free, done times strictly increase) and the
+    // closed-form model must agree with the simulator to < 1%.
+    let st = j.req("streaming")?;
+    st.req("topology")?;
+    let nsec = req_f64(st, "sections")?;
+    if nsec < 2.0 {
+        return Err(fail("streaming needs at least 2 sections to overlap anything".into()));
+    }
+    for key in ["ready_last_s", "flat_round_sim", "streamed_round_sim", "flat_s", "streamed_s"] {
+        let v = req_f64(st, key)?;
+        if !v.is_finite() || v <= 0.0 {
+            return Err(fail(format!("streaming {key} = {v}")));
+        }
+    }
+    let st_err = req_f64(st, "ps_model_err_pct")?;
+    if !st_err.is_finite() || st_err >= 1.0 {
+        return Err(fail(format!(
+            "streamed ps model disagrees with the simulator: {st_err}% (must be < 1%)"
+        )));
+    }
+    if req_f64(st, "streamed_round_sim")?
+        >= req_f64(st, "ready_last_s")? + req_f64(st, "flat_round_sim")?
     {
+        return Err(fail(
+            "streamed round must strictly beat backward-end + flat round".into(),
+        ));
+    }
+    let timeline = st
+        .req("timeline")?
+        .as_arr()
+        .ok_or_else(|| fail("streaming timeline is not an array".into()))?;
+    if timeline.len() != nsec as usize {
+        return Err(fail("streaming timeline/sections mismatch".into()));
+    }
+    let mut prev_done = 0.0f64;
+    for row in timeline {
+        let (ready, start, done) =
+            (req_f64(row, "ready_t")?, req_f64(row, "link_start_t")?, req_f64(row, "done_t")?);
+        if req_f64(row, "section")? < 0.0 {
+            return Err(fail("negative section index in timeline".into()));
+        }
+        if start < ready || start < prev_done || done <= start {
+            return Err(fail(format!(
+                "timeline row breaks the streaming recurrence: {}",
+                row.dump()
+            )));
+        }
+        prev_done = done;
+    }
+    let sp = j.req("speedup")?;
+    for key in [
+        "quantize_encode",
+        "ps_round",
+        "pooled_round",
+        "overlap_round",
+        "downlink_compression",
+        "streamed_round",
+    ] {
         let v = req_f64(sp, key)?;
         if !v.is_finite() || v <= 0.0 {
             return Err(fail(format!("speedup {key} = {v}")));

@@ -94,7 +94,7 @@ USAGE:
             [--shards S] [--staleness K] [--error-feedback]
             [--quantize-downlink] [--threads N]
             [--pool true|false] [--overlap] [--sections N]
-            [--backend native|pjrt]
+            [--stream-sections] [--backend native|pjrt]
             [--intra-bandwidth BPS] [--intra-latency S]
             [--inter-bandwidth BPS] [--inter-latency S]
             [--artifacts DIR] [--out DIR] [--seed N]
@@ -126,11 +126,20 @@ DOWNLINK: --quantize-downlink requantizes the mean broadcast once at the
        sending it FP — every node still decodes the identical bytes. Not
        applicable to ring (its all-gather chunks already ride encoded)
 OVERLAP: --overlap buckets the gradient by model section (--sections N layer
-       groups, cut on the bucket grid) and quantizes+encodes each section on
-       the worker pool while backward still computes the remaining layers —
-       bit-identical wire bytes and trained parameters vs the flat exchange.
-       Needs a quantizing method and the parallel codec (--threads 0 or ≥ 2;
-       --threads 1 degenerates to the flat path)
+       groups, cut on the bucket grid) and quantizes+encodes each section
+       while backward still computes the remaining layers — on the worker
+       pool with the parallel codec, or inline on the driver thread at
+       --threads 1 (start-anywhere serial encoder) — bit-identical wire
+       bytes and trained parameters vs the flat parallel exchange at every
+       thread count. Needs a quantizing method. --sections without
+       --overlap/--stream-sections is rejected (it would be ignored)
+STREAMING: --stream-sections (implies --overlap) pushes each staged section
+       into the exchange as a section frame the moment its encode completes,
+       so early sections ride the link while the backward tail computes.
+       ps/hier/sharded-ps reduce frames in worker order and stay
+       bit-identical to the flat overlap run; ring runs one
+       reduce-scatter/all-gather per section (deterministic, equivalent to
+       its serial replay). Requires --staleness 0
 ";
 
 #[cfg(test)]

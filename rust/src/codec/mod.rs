@@ -507,6 +507,58 @@ pub fn slice_elements_append(bytes: &[u8], e0: usize, e1: usize, out: &mut Vec<u
     Ok(())
 }
 
+/// Reassemble contiguous sub-messages (as produced by
+/// [`slice_elements_into`] over adjacent ranges, or arriving as
+/// streaming section frames) into one flat message covering their
+/// concatenation — the exact inverse of slicing: the result is
+/// byte-identical to slicing the original message over the union range,
+/// and to the flat parallel encode when the parts are a full section
+/// tiling. All parts must agree on scheme, flags and level count;
+/// quantized parts must share the bucket size and every part except the
+/// last must cover a whole number of buckets (only the globally-final
+/// bucket may be ragged). A pure byte copy — no requantization.
+pub fn concat_messages_into(parts: &[&[u8]], out: &mut Vec<u8>) -> Result<()> {
+    out.clear();
+    let first = match parts.first() {
+        Some(p) => parse(p)?,
+        None => return Err(Error::Codec("concat of zero messages".into())),
+    };
+    let mut total = 0usize;
+    for (i, p) in parts.iter().enumerate() {
+        let w = parse(p)?;
+        if w.scheme != first.scheme || w.flags != first.flags || w.s != first.s {
+            return Err(Error::Codec(format!(
+                "concat part {i} disagrees on scheme/flags/levels with part 0"
+            )));
+        }
+        if !w.is_fp() {
+            if w.bucket != first.bucket {
+                return Err(Error::Codec(format!(
+                    "concat part {i} has bucket size {}, part 0 has {}",
+                    w.bucket, first.bucket
+                )));
+            }
+            if i + 1 != parts.len() && w.total % w.bucket != 0 {
+                return Err(Error::Codec(format!(
+                    "concat part {i} covers {} elements — not a multiple of bucket \
+                     {}, only the final part may end ragged",
+                    w.total, w.bucket
+                )));
+            }
+        }
+        total += w.total;
+    }
+    // FP slices carry their own length as the framing bucket size, so the
+    // reassembled header re-derives it the way `encode_fp_into` does.
+    let bucket = if first.is_fp() { total.max(1) } else { first.bucket };
+    write_header(out, first.flags, first.s as u8, first.scheme, total as u64, bucket as u32);
+    for p in parts {
+        let w = parse(p)?;
+        out.extend_from_slice(w.payload);
+    }
+    Ok(())
+}
+
 /// Packed index bytes for one bucket of `len` elements.
 fn packed_len(len: usize, s: usize, packing: Packing) -> usize {
     match packing {
@@ -730,6 +782,56 @@ mod tests {
             assert!(slice_elements_into(&bytes, 64, 256, &mut out).is_err());
             assert!(slice_elements_into(&bytes, 0, 999, &mut out).is_err());
         }
+    }
+
+    /// Slicing a message into contiguous bucket-aligned pieces and
+    /// concatenating them back must reproduce the original bytes — the
+    /// hier streaming path depends on this inverse exactly.
+    #[test]
+    fn concat_inverts_slice() {
+        let g = sample_grad(1000, 12); // d=128 → ragged 104-element tail
+        let q = from_name("orq-5").unwrap();
+        let qg = BucketQuantizer::new(128).quantize(&g, q.as_ref(), &mut Rng::seed_from(13));
+        for packing in [Packing::Fixed, Packing::BaseS] {
+            let bytes = encode(&qg, "orq-5", packing);
+            let cuts = [0usize, 256, 512, 1000];
+            let mut parts = Vec::new();
+            for w in cuts.windows(2) {
+                let mut p = Vec::new();
+                slice_elements_into(&bytes, w[0], w[1], &mut p).unwrap();
+                parts.push(p);
+            }
+            let views: Vec<&[u8]> = parts.iter().map(|p| p.as_slice()).collect();
+            let mut back = Vec::new();
+            concat_messages_into(&views, &mut back).unwrap();
+            assert_eq!(back, bytes, "{packing:?} concat ∘ slice = id");
+            // an empty middle part is absorbed
+            let mut empty = Vec::new();
+            slice_elements_into(&bytes, 256, 256, &mut empty).unwrap();
+            let views = [parts[0].as_slice(), empty.as_slice(), parts[1].as_slice(),
+                parts[2].as_slice()];
+            concat_messages_into(&views, &mut back).unwrap();
+            assert_eq!(back, bytes, "{packing:?} empty part absorbed");
+            // a ragged non-final part is rejected
+            let views = [parts[2].as_slice(), parts[0].as_slice()];
+            assert!(concat_messages_into(&views, &mut back).is_err());
+            // mixed wire parameters are rejected
+            let fp = encode_fp(&g[..256]);
+            let views = [parts[0].as_slice(), fp.as_slice()];
+            assert!(concat_messages_into(&views, &mut back).is_err());
+        }
+        // FP slices reassemble to the flat FP encode
+        let bytes = encode_fp(&g);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        slice_elements_into(&bytes, 0, 300, &mut a).unwrap();
+        slice_elements_into(&bytes, 300, 1000, &mut b).unwrap();
+        let mut back = Vec::new();
+        concat_messages_into(&[&a, &b], &mut back).unwrap();
+        assert_eq!(back, bytes);
+        // zero parts is an error, one part is the identity
+        assert!(concat_messages_into(&[], &mut back).is_err());
+        concat_messages_into(&[&bytes], &mut back).unwrap();
+        assert_eq!(back, bytes);
     }
 
     #[test]

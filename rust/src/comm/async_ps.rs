@@ -37,6 +37,21 @@
 //! over to the stale regime. The deterministic lag also keeps training
 //! runs reproducible (same seed ⇒ same parameters for any `S`, `K`).
 //!
+//! **Streaming.** With `ExchangeConfig::with_streaming` (synchronous,
+//! `K = 0` only) workers push one [`FrameKind::Section`] frame per
+//! (section, shard) intersection the moment backward stages the section
+//! — empty intersections still ship a stamp-only frame so every channel
+//! stays in per-round lockstep — and each shard reduces its sections
+//! ascending, workers in id order, in f64: the same per-element
+//! accumulation order as the flat sharded round, so the assembled mean
+//! is bit-identical to it. Sharding a section needs the total element
+//! count, which the worker only learns once every section of round 0
+//! has been staged: round 0 buffers the pushes and flushes them in
+//! [`WorkerExchange::finish_streamed`]; later rounds stream
+//! immediately. Each shard's simulated round time is the slowest
+//! worker's pipeline recurrence `end = max(end, ready) + transfer`
+//! over that worker's frames in send order, plus its mean broadcast.
+//!
 //! **Accounting.** All sharded-ps edges cross the central aggregation
 //! boundary (inter class). Bytes are exact frame sizes; per-shard totals
 //! are kept for [`Collective::shard_bytes`]. Simulated time follows the
@@ -65,9 +80,10 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 
 use super::collective::{Collective, CommStats, GradCodec, WireSpec, WorkerExchange};
 use super::link::{Link, LinkMap, TrafficMeter};
+use super::ps::SECTION_MSG_OFFSET;
 use super::shard::{
-    begin_frame_into, encode_frame_into, finish_frame, parse_frame, shard_range, Frame,
-    FrameKind, StalenessStats,
+    begin_frame_into, encode_frame_into, finish_frame, parse_frame, shard_range,
+    split_section_payload, Frame, FrameKind, StalenessStats,
 };
 use crate::codec::{self, DecodeScratch};
 use crate::error::{Error, Result};
@@ -79,8 +95,13 @@ use crate::tensor::rng::Rng;
 enum ShardRecord {
     Round {
         round: u64,
-        /// Frame bytes of each worker's upload, indexed by worker id.
+        /// Frame bytes of each worker's upload, indexed by worker id
+        /// (flat rounds; streamed rounds carry one entry per frame).
         up_bytes: Vec<usize>,
+        /// Streamed rounds only: per-frame (readiness stamp, frame
+        /// bytes) rows, `nsec` per worker in the worker's send order,
+        /// indexed `worker * nsec + arrival`. Empty in flat rounds.
+        stream: Vec<(f64, usize)>,
         /// The broadcast mean frame (the coordinator decodes the same
         /// bytes the workers decode — bit-identical means everywhere).
         frame: Vec<u8>,
@@ -104,10 +125,10 @@ fn check_upload_frame(f: &Frame<'_>, shard: usize, worker: usize, round: u64) ->
             f.kind
         )));
     }
-    if f.shard as usize != shard {
+    if f.slot as usize != shard {
         return Err(Error::Comm(format!(
             "shard {shard}: frame addressed to shard {}",
-            f.shard
+            f.slot
         )));
     }
     if f.sender as usize != worker {
@@ -136,10 +157,10 @@ fn check_mean_frame(f: &Frame<'_>, shard: usize, round: u64, k: u64) -> Result<u
             f.kind
         )));
     }
-    if f.shard as usize != shard || f.sender as usize != shard {
+    if f.slot as usize != shard || f.sender as usize != shard {
         return Err(Error::Comm(format!(
             "mean frame from shard {}/sender {} on shard {shard}'s channel",
-            f.shard, f.sender
+            f.slot, f.sender
         )));
     }
     let want = round - k; // callers guarantee round ≥ k
@@ -175,6 +196,9 @@ struct ShardServer {
     downlinks: Vec<Sender<Vec<u8>>>,
     record_tx: Sender<ShardRecord>,
     round: u64,
+    /// `Some(nsec)` = streamed rounds: `nsec` section frames per worker
+    /// instead of one chunk upload.
+    streaming: Option<usize>,
     /// Requantize the mean downlink with `codec` (serial — the shard
     /// loop may itself run on a pool worker, so pool-in-pool encoding is
     /// off the table; wire bytes are thread-count invariant anyway).
@@ -206,15 +230,12 @@ impl ShardServer {
         }
     }
 
-    /// Serve one round. `Ok(false)` = a channel disconnected (clean
-    /// shutdown); `Err` = protocol violation to report.
-    fn serve_round(&mut self) -> Result<bool> {
-        let r = self.round;
+    /// Flat gather: one chunk upload per worker, accumulated into
+    /// `self.acc` in worker-id order — the `PsCollective` aggregation
+    /// restricted to this shard's chunk. `Ok(false)` = disconnect.
+    fn gather_flat(&mut self, r: u64, up_bytes: &mut Vec<usize>) -> Result<bool> {
         let mut chunk_len: Option<usize> = None;
-        let mut up_bytes = Vec::with_capacity(self.workers);
         self.acc.clear();
-        // One upload per worker, accumulated in worker-id order — the
-        // PsCollective aggregation restricted to this shard's chunk.
         for w in 0..self.workers {
             let bytes = match self.uplinks[w].recv() {
                 Ok(b) => b,
@@ -226,19 +247,6 @@ impl ShardServer {
             codec::decode_flat_into(f.payload, &mut self.flat, &mut self.scratch)?;
             match chunk_len {
                 None => {
-                    // An empty chunk means the bucket grid is cut finer
-                    // than it has buckets (shards > ⌈n / d⌉) — reject with
-                    // the actionable error instead of serving dead air.
-                    // (The trainer pre-checks this; run_once-style drivers
-                    // get the message through the coordinator's round.)
-                    if self.flat.is_empty() && self.shards > 1 {
-                        return Err(Error::InvalidArg(format!(
-                            "sharded-ps shard {} owns no elements: shards ({}) exceeds \
-                             the gradient's bucket count; every shard must own at least \
-                             one bucket — reduce --shards or --bucket",
-                            self.shard, self.shards
-                        )));
-                    }
                     chunk_len = Some(self.flat.len());
                     self.acc.resize(self.flat.len(), 0.0);
                 }
@@ -254,6 +262,139 @@ impl ShardServer {
             for (a, v) in self.acc.iter_mut().zip(&self.flat) {
                 *a += *v as f64;
             }
+        }
+        Ok(true)
+    }
+
+    /// Streamed gather: `nsec` section frames per worker (each worker's
+    /// channel delivers them in its send order), then accumulate into
+    /// `self.acc` sections ascending, workers in id order — the same
+    /// per-element order as [`Self::gather_flat`], so the chunk mean is
+    /// bit-identical to the flat round's. Section∩chunk slices tile the
+    /// chunk contiguously in section order, so offsets come from the
+    /// slices' own lengths. `Ok(false)` = disconnect.
+    fn gather_sections(
+        &mut self,
+        nsec: usize,
+        r: u64,
+        up_bytes: &mut Vec<usize>,
+        stream: &mut Vec<(f64, usize)>,
+    ) -> Result<bool> {
+        let mut slots: Vec<Option<Vec<u8>>> = (0..self.workers * nsec).map(|_| None).collect();
+        for w in 0..self.workers {
+            for _ in 0..nsec {
+                let bytes = match self.uplinks[w].recv() {
+                    Ok(b) => b,
+                    Err(_) => return Ok(false),
+                };
+                let sec = {
+                    let f = parse_frame(&bytes)?;
+                    if f.kind != FrameKind::Section {
+                        return Err(Error::Comm(format!(
+                            "shard {}: expected a section frame from worker {w}, got {:?}",
+                            self.shard, f.kind
+                        )));
+                    }
+                    if f.sender as usize != w {
+                        return Err(Error::Comm(format!(
+                            "shard {}: frame from worker {} on worker {w}'s channel",
+                            self.shard, f.sender
+                        )));
+                    }
+                    if f.round != r {
+                        return Err(Error::Comm(format!(
+                            "shard {}: worker {w} sent round {} during round {r}",
+                            self.shard, f.round
+                        )));
+                    }
+                    let sec = f.slot as usize;
+                    if sec >= nsec {
+                        return Err(Error::Comm(format!(
+                            "shard {}: section {sec} out of range ({nsec} sections)",
+                            self.shard
+                        )));
+                    }
+                    let (ready, _msg) = split_section_payload(f.payload)?;
+                    stream.push((ready, bytes.len()));
+                    sec
+                };
+                if slots[w * nsec + sec].is_some() {
+                    return Err(Error::Comm(format!(
+                        "shard {}: duplicate section {sec} from worker {w}",
+                        self.shard
+                    )));
+                }
+                up_bytes.push(bytes.len());
+                slots[w * nsec + sec] = Some(bytes);
+            }
+        }
+        self.acc.clear();
+        let mut offset = 0usize;
+        for sec in 0..nsec {
+            let mut sec_len: Option<usize> = None;
+            for w in 0..self.workers {
+                let bytes = slots[w * nsec + sec].as_ref().expect("one frame per slot");
+                let msg = &bytes[SECTION_MSG_OFFSET..];
+                // Stamp-only frame: this section misses the chunk.
+                let len = if msg.is_empty() {
+                    0
+                } else {
+                    codec::decode_flat_into(msg, &mut self.flat, &mut self.scratch)?;
+                    self.flat.len()
+                };
+                match sec_len {
+                    None => {
+                        sec_len = Some(len);
+                        self.acc.resize(offset + len, 0.0);
+                    }
+                    Some(n) if n != len => {
+                        return Err(Error::Shape(format!(
+                            "shard {}: worker {w} sent {len} elements for section {sec}, \
+                             expected {n}",
+                            self.shard
+                        )))
+                    }
+                    Some(_) => {}
+                }
+                if len > 0 {
+                    for (a, v) in self.acc[offset..].iter_mut().zip(&self.flat) {
+                        *a += *v as f64;
+                    }
+                }
+            }
+            offset += sec_len.unwrap_or(0);
+        }
+        Ok(true)
+    }
+
+    /// Serve one round. `Ok(false)` = a channel disconnected (clean
+    /// shutdown); `Err` = protocol violation to report.
+    fn serve_round(&mut self) -> Result<bool> {
+        let r = self.round;
+        let mut up_bytes = Vec::with_capacity(self.workers);
+        let mut stream = Vec::new();
+        match self.streaming {
+            Some(nsec) => match self.gather_sections(nsec, r, &mut up_bytes, &mut stream)? {
+                true => {}
+                false => return Ok(false),
+            },
+            None => match self.gather_flat(r, &mut up_bytes)? {
+                true => {}
+                false => return Ok(false),
+            },
+        }
+        // An empty chunk means the bucket grid is cut finer than it has
+        // buckets (shards > ⌈n / d⌉) — reject with the actionable error
+        // instead of serving dead air. (The trainer pre-checks this;
+        // run_once-style drivers get the message through the
+        // coordinator's round.)
+        if self.acc.is_empty() && self.shards > 1 {
+            return Err(Error::InvalidArg(format!(
+                "sharded-ps shard {} owns no elements: shards ({}) exceeds \
+                 the gradient's bucket count; every shard must own at least \
+                 one bucket — reduce --shards or --bucket",
+                self.shard, self.shards
+            )));
         }
         let inv = 1.0 / self.workers as f64;
         self.mean.clear();
@@ -294,7 +435,8 @@ impl ShardServer {
                 return Ok(false);
             }
         }
-        if self.record_tx.send(ShardRecord::Round { round: r, up_bytes, frame }).is_err() {
+        if self.record_tx.send(ShardRecord::Round { round: r, up_bytes, stream, frame }).is_err()
+        {
             return Ok(false);
         }
         self.round += 1;
@@ -314,6 +456,7 @@ pub struct ShardedPsCollective {
     workers: usize,
     shards: usize,
     staleness: u64,
+    streaming: Option<usize>,
     link: Link,
     record_rxs: Vec<Receiver<ShardRecord>>,
     meter: TrafficMeter,
@@ -350,6 +493,7 @@ impl ShardedPsCollective {
         spec: &WireSpec,
         quantize_downlink: bool,
         error_feedback: bool,
+        streaming: Option<usize>,
     ) -> Result<(ShardedPsCollective, Vec<ShardedPsWorker>)> {
         if workers == 0 {
             return Err(Error::InvalidArg(
@@ -359,6 +503,11 @@ impl ShardedPsCollective {
         if shards == 0 {
             return Err(Error::InvalidArg(
                 "sharded parameter server needs at least 1 shard".into(),
+            ));
+        }
+        if streaming.is_some() && staleness != 0 {
+            return Err(Error::InvalidArg(
+                "section streaming requires a synchronous sharded PS (staleness 0)".into(),
             ));
         }
         if workers > u16::MAX as usize || shards > u16::MAX as usize {
@@ -422,6 +571,7 @@ impl ShardedPsCollective {
                 downlinks,
                 record_tx,
                 round: 0,
+                streaming,
                 quantize_downlink,
                 codec,
                 down_ef,
@@ -458,10 +608,13 @@ impl ShardedPsCollective {
                 shards,
                 staleness: k,
                 bucket: spec.bucket_size,
+                streaming,
                 up_txs,
                 down_rxs,
                 round: 0,
                 n: None,
+                sec_lens: Vec::new(),
+                buffered: Vec::new(),
                 chunk: Vec::new(),
                 scratch: DecodeScratch::default(),
             })
@@ -471,6 +624,7 @@ impl ShardedPsCollective {
                 workers,
                 shards,
                 staleness: k,
+                streaming,
                 link: links.inter,
                 record_rxs,
                 meter: TrafficMeter::default(),
@@ -504,9 +658,11 @@ impl Collective for ShardedPsCollective {
             let rec = self.record_rxs[s].recv().map_err(|_| {
                 Error::Comm(format!("sharded-ps shard {s} died mid-round"))
             })?;
-            let (round, up_bytes, frame) = match rec {
+            let (round, up_bytes, stream, frame) = match rec {
                 ShardRecord::Failed(e) => return Err(e),
-                ShardRecord::Round { round, up_bytes, frame } => (round, up_bytes, frame),
+                ShardRecord::Round { round, up_bytes, stream, frame } => {
+                    (round, up_bytes, stream, frame)
+                }
             };
             if round != t {
                 return Err(Error::Comm(format!(
@@ -520,6 +676,26 @@ impl Collective for ShardedPsCollective {
                 self.per_shard_bytes[s] += b as u64;
                 up_max = up_max.max(self.link.transfer_time(b));
                 up_bw_max = up_bw_max.max(bw_time(&self.link, b));
+            }
+            if let Some(nsec) = self.streaming {
+                // Streamed uplink: the shard's gate is the slowest
+                // worker's pipeline recurrence over its own frames in
+                // send order, measured from the round's backward start.
+                if stream.len() != self.workers * nsec {
+                    return Err(Error::Comm(format!(
+                        "sharded-ps shard {s} reported {} stream rows, expected {}",
+                        stream.len(),
+                        self.workers * nsec
+                    )));
+                }
+                up_max = 0.0;
+                for rows in stream.chunks_exact(nsec) {
+                    let mut end = 0.0f64;
+                    for &(ready, b) in rows {
+                        end = end.max(ready) + self.link.transfer_time(b);
+                    }
+                    up_max = up_max.max(end);
+                }
             }
             // Broadcast counted once per shard (the PS multicast
             // convention).
@@ -587,18 +763,59 @@ impl Collective for ShardedPsCollective {
 
 /// Worker end: slice-and-push to every shard, then pull (only) the
 /// round-`r − K` mean frames and reassemble. Chunk/decode scratch is
-/// reused across rounds.
+/// reused across rounds. In streaming mode each staged section is
+/// sliced across the shards the moment it arrives — except round 0,
+/// which buffers until the total element count is known.
 pub struct ShardedPsWorker {
     id: usize,
     shards: usize,
     staleness: u64,
     bucket: usize,
+    streaming: Option<usize>,
     up_txs: Vec<Sender<Vec<u8>>>,
     down_rxs: Vec<Receiver<Vec<u8>>>,
     round: u64,
     n: Option<usize>,
+    /// Streamed layout learned in round 0: element count per section.
+    sec_lens: Vec<usize>,
+    /// Round-0 pushes parked until the layout is known:
+    /// (section, standalone message, readiness stamp), in push order.
+    buffered: Vec<(usize, Vec<u8>, f64)>,
     chunk: Vec<f32>,
     scratch: DecodeScratch,
+}
+
+impl ShardedPsWorker {
+    /// Slice one staged section across every shard and push the frames.
+    /// Empty intersections ship a stamp-only frame so each (shard,
+    /// worker) channel sees exactly `nsec` frames per round.
+    fn send_section_frames(&self, section: usize, payload: &[u8], ready_s: f64) -> Result<()> {
+        let n = self.n.expect("layout known before streaming frames");
+        let sec_start: usize = self.sec_lens[..section].iter().sum();
+        let sec_end = sec_start + self.sec_lens[section];
+        for s in 0..self.shards {
+            let range = shard_range(n, self.bucket, self.shards, s);
+            let lo = range.start.max(sec_start);
+            let hi = range.end.min(sec_end);
+            let mut frame = Vec::new();
+            begin_frame_into(
+                FrameKind::Section,
+                self.round,
+                section as u16,
+                self.id as u16,
+                &mut frame,
+            );
+            frame.extend_from_slice(&ready_s.to_le_bytes());
+            if hi > lo {
+                codec::slice_elements_append(payload, lo - sec_start, hi - sec_start, &mut frame)?;
+            }
+            finish_frame(&mut frame);
+            self.up_txs[s]
+                .send(frame)
+                .map_err(|_| Error::Comm(format!("sharded-ps shard {s} hung up")))?;
+        }
+        Ok(())
+    }
 }
 
 impl WorkerExchange for ShardedPsWorker {
@@ -607,6 +824,12 @@ impl WorkerExchange for ShardedPsWorker {
     }
 
     fn exchange(&mut self, encoded: &mut Vec<u8>, mean_out: &mut Vec<f32>) -> Result<()> {
+        if self.streaming.is_some() {
+            return Err(Error::InvalidArg(
+                "this sharded-ps exchange streams sections; use push_section/finish_streamed"
+                    .into(),
+            ));
+        }
         let (n, _) = codec::peek_shape(encoded)?;
         match self.n {
             // Shards-vs-bucket-count validation lives server-side (the
@@ -661,6 +884,98 @@ impl WorkerExchange for ShardedPsWorker {
         self.round += 1;
         Ok(())
     }
+
+    fn push_section(&mut self, section: usize, payload: &[u8], ready_s: f64) -> Result<()> {
+        let Some(nsec) = self.streaming else {
+            return Err(Error::InvalidArg(
+                "this sharded-ps exchange was not built for streaming".into(),
+            ));
+        };
+        if section >= nsec {
+            return Err(Error::InvalidArg(format!(
+                "section {section} out of range ({nsec} sections)"
+            )));
+        }
+        if !ready_s.is_finite() || ready_s < 0.0 {
+            return Err(Error::InvalidArg(format!(
+                "readiness stamp must be finite and non-negative, got {ready_s}"
+            )));
+        }
+        if self.n.is_none() {
+            // Round 0: the shard cut needs the total element count, which
+            // is only known once every section has been staged — park the
+            // push; finish_streamed flushes in this order.
+            if self.buffered.iter().any(|(s, _, _)| *s == section) {
+                return Err(Error::InvalidArg(format!(
+                    "duplicate section {section} staged this round"
+                )));
+            }
+            self.buffered.push((section, payload.to_vec(), ready_s));
+            return Ok(());
+        }
+        let (len, _) = codec::peek_shape(payload)?;
+        if len != self.sec_lens[section] {
+            return Err(Error::Shape(format!(
+                "section {section} has {len} elements, round 0 had {}",
+                self.sec_lens[section]
+            )));
+        }
+        self.send_section_frames(section, payload, ready_s)
+    }
+
+    fn finish_streamed(&mut self, mean_out: &mut Vec<f32>) -> Result<()> {
+        let Some(nsec) = self.streaming else {
+            return Err(Error::InvalidArg(
+                "this sharded-ps exchange was not built for streaming".into(),
+            ));
+        };
+        if self.n.is_none() {
+            // Learn the layout from the buffered round-0 pushes, then
+            // flush them in their original (send-schedule) order.
+            if self.buffered.len() != nsec {
+                return Err(Error::InvalidArg(format!(
+                    "round 0 staged {} sections, expected {nsec}",
+                    self.buffered.len()
+                )));
+            }
+            let mut lens = vec![None::<usize>; nsec];
+            for (sec, payload, _) in &self.buffered {
+                let (len, _) = codec::peek_shape(payload)?;
+                lens[*sec] = Some(len);
+            }
+            // Every section present exactly once (duplicates were refused
+            // at push time, so all slots are filled here).
+            self.sec_lens = lens.into_iter().map(|l| l.expect("one push per section")).collect();
+            self.n = Some(self.sec_lens.iter().sum());
+            for (sec, payload, ready) in std::mem::take(&mut self.buffered) {
+                self.send_section_frames(sec, &payload, ready)?;
+            }
+        }
+        // Streaming is synchronous (K = 0): pull this round's mean.
+        let r = self.round;
+        let n = self.n.expect("layout set above");
+        mean_out.clear();
+        mean_out.resize(n, 0.0);
+        for s in 0..self.shards {
+            let bytes = self.down_rxs[s].recv().map_err(|_| {
+                Error::Comm(format!("sharded-ps shard {s} hung up before its mean"))
+            })?;
+            let f = parse_frame(&bytes)?;
+            check_mean_frame(&f, s, r, 0)?;
+            codec::decode_flat_into(f.payload, &mut self.chunk, &mut self.scratch)?;
+            let range = shard_range(n, self.bucket, self.shards, s);
+            if self.chunk.len() != range.len() {
+                return Err(Error::Shape(format!(
+                    "shard {s} mean chunk has {} elements, expected {}",
+                    self.chunk.len(),
+                    range.len()
+                )));
+            }
+            mean_out[range].copy_from_slice(&self.chunk);
+        }
+        self.round += 1;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -682,13 +997,18 @@ mod tests {
     #[test]
     fn new_rejects_degenerate_builds() {
         let spec = WireSpec::new("terngrad", 64);
-        assert!(ShardedPsCollective::new(0, 1, 0, links(), &spec, false, false).is_err());
-        assert!(ShardedPsCollective::new(2, 0, 0, links(), &spec, false, false).is_err());
-        assert!(ShardedPsCollective::new(70_000, 1, 0, links(), &spec, false, false).is_err());
+        assert!(ShardedPsCollective::new(0, 1, 0, links(), &spec, false, false, None).is_err());
+        assert!(ShardedPsCollective::new(2, 0, 0, links(), &spec, false, false, None).is_err());
+        assert!(
+            ShardedPsCollective::new(70_000, 1, 0, links(), &spec, false, false, None).is_err()
+        );
         let bad = WireSpec::new("bogus", 64);
-        assert!(ShardedPsCollective::new(2, 1, 0, links(), &bad, false, false).is_err());
-        assert!(ShardedPsCollective::new(2, 2, 1, links(), &spec, false, false).is_ok());
-        assert!(ShardedPsCollective::new(2, 2, 0, links(), &spec, true, true).is_ok());
+        assert!(ShardedPsCollective::new(2, 1, 0, links(), &bad, false, false, None).is_err());
+        assert!(ShardedPsCollective::new(2, 2, 1, links(), &spec, false, false, None).is_ok());
+        assert!(ShardedPsCollective::new(2, 2, 0, links(), &spec, true, true, None).is_ok());
+        // Streaming is synchronous-only; K ≥ 1 is refused at build time.
+        assert!(ShardedPsCollective::new(2, 2, 1, links(), &spec, false, false, Some(4)).is_err());
+        assert!(ShardedPsCollective::new(2, 2, 0, links(), &spec, false, false, Some(4)).is_ok());
     }
 
     #[test]

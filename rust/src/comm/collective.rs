@@ -36,6 +36,7 @@ use crate::tensor::rng::Rng;
 use super::async_ps::ShardedPsCollective;
 use super::hier::HierarchicalCollective;
 use super::link::{Link, LinkMap};
+use super::overlap::{OverlapEncoder, SectionMap, SIM_BACKWARD_RATE};
 use super::ps::PsCollective;
 use super::ring::RingAllReduce;
 use super::shard::StalenessStats;
@@ -159,6 +160,19 @@ pub struct ExchangeConfig {
     /// Worker *uplink* EF stays where it always was — in the trainer's
     /// worker loop (or [`run_rounds`]'s drive loop).
     pub error_feedback: bool,
+    /// Stream the exchange section by section: workers push one
+    /// [`super::shard::FrameKind::Section`] frame per overlap section the
+    /// moment its encode is staged ([`WorkerExchange::push_section`]),
+    /// instead of one flat message after backward. PS/hier/sharded-PS
+    /// reduce the frames incrementally and stay bit-identical to the
+    /// flat path; the ring runs one per-section collective (see the
+    /// equivalence contract in [`super::overlap`]). Requires a
+    /// synchronous exchange (`staleness == 0`).
+    pub streaming: bool,
+    /// Section count of the streamed round (each worker pushes exactly
+    /// this many frames per round, descending index). Only meaningful
+    /// with `streaming`.
+    pub sections: usize,
 }
 
 impl ExchangeConfig {
@@ -172,6 +186,8 @@ impl ExchangeConfig {
             links: LinkMap::uniform(link),
             quantize_downlink: false,
             error_feedback: false,
+            streaming: false,
+            sections: 1,
         }
     }
 
@@ -186,6 +202,8 @@ impl ExchangeConfig {
             links,
             quantize_downlink: false,
             error_feedback: false,
+            streaming: false,
+            sections: 1,
         }
     }
 
@@ -201,6 +219,8 @@ impl ExchangeConfig {
             links: LinkMap::uniform(link),
             quantize_downlink: false,
             error_feedback: false,
+            streaming: false,
+            sections: 1,
         }
     }
 
@@ -214,9 +234,46 @@ impl ExchangeConfig {
         self
     }
 
-    /// Validate grouping, sharding and downlink options against a worker
-    /// count.
+    /// Builder-style streaming mode: the exchange moves `sections`
+    /// section frames per worker per round instead of one flat message.
+    pub fn with_streaming(mut self, sections: usize) -> ExchangeConfig {
+        self.streaming = true;
+        self.sections = sections;
+        self
+    }
+
+    /// The streamed section count when streaming is on, `None` on the
+    /// flat exchange — the form the topology constructors take.
+    pub fn streamed_sections(&self) -> Option<usize> {
+        self.streaming.then_some(self.sections)
+    }
+
+    /// Validate grouping, sharding, downlink and streaming options
+    /// against a worker count.
     pub fn validate(&self, workers: usize) -> Result<()> {
+        if self.streaming {
+            if self.sections == 0 {
+                return Err(Error::InvalidArg(
+                    "streaming needs at least one section".into(),
+                ));
+            }
+            if self.sections > u16::MAX as usize {
+                // The frame's section index is a u16 slot.
+                return Err(Error::InvalidArg(format!(
+                    "at most {} sections fit the frame header, got {}",
+                    u16::MAX,
+                    self.sections
+                )));
+            }
+            if self.staleness != 0 {
+                return Err(Error::InvalidArg(format!(
+                    "section streaming requires a synchronous exchange; bounded \
+                     staleness (K = {}) pipelines whole rounds instead \
+                     (drop --stream-sections or set staleness 0)",
+                    self.staleness
+                )));
+            }
+        }
         if self.topology != Topology::ShardedPs {
             if self.shards != 1 {
                 return Err(Error::InvalidArg(format!(
@@ -549,22 +606,30 @@ impl GradCodec {
 /// One worker's per-round transmission trace on a topology's global
 /// synchronous step grid: `step_bytes[k]` is the bytes that worker sent
 /// in step `k` (0 = silent that step). Shared by the ring and
-/// hierarchical coordinators' critical-path accounting.
+/// hierarchical coordinators' critical-path accounting. Streamed rounds
+/// additionally carry one `(ready_s, frame_bytes)` row per pushed
+/// section frame, in send order — the coordinator replays the pipeline
+/// recurrence `start = max(ready, link_free)` from these rows (workers
+/// with no wire leg that round report `frame_bytes = 0`).
 pub(crate) struct RoundTrace {
     pub(crate) worker: usize,
     pub(crate) step_bytes: Vec<usize>,
+    pub(crate) stream: Vec<(f64, usize)>,
 }
 
-/// Collect exactly one `steps`-slot trace from each of `l` workers,
-/// validating worker ids, duplicates, and record lengths; returns the
-/// traces indexed by worker id. `what` names the topology in errors.
+/// Collect exactly one trace from each of `l` workers — `steps`
+/// step-grid slots and `stream_rows` streamed-frame rows (0 on flat
+/// rounds) — validating worker ids, duplicates, and record lengths;
+/// returns the traces indexed by worker id. `what` names the topology
+/// in errors.
 pub(crate) fn collect_traces(
     rx: &Receiver<RoundTrace>,
     l: usize,
     steps: usize,
+    stream_rows: usize,
     what: &str,
-) -> Result<Vec<Vec<usize>>> {
-    let mut traces: Vec<Option<Vec<usize>>> = (0..l).map(|_| None).collect();
+) -> Result<Vec<RoundTrace>> {
+    let mut traces: Vec<Option<RoundTrace>> = (0..l).map(|_| None).collect();
     for _ in 0..l {
         let t = rx
             .recv()
@@ -585,7 +650,14 @@ pub(crate) fn collect_traces(
                 t.step_bytes.len()
             )));
         }
-        traces[t.worker] = Some(t.step_bytes);
+        if t.stream.len() != stream_rows {
+            return Err(Error::Comm(format!(
+                "{what} worker {} sent {} stream rows, expected {stream_rows}",
+                t.worker,
+                t.stream.len()
+            )));
+        }
+        traces[t.worker] = Some(t);
     }
     Ok(traces.into_iter().map(|t| t.expect("all slots filled")).collect())
 }
@@ -619,6 +691,33 @@ pub trait WorkerExchange: Send {
     /// take the buffer), block for the exchange, and write the decoded
     /// mean gradient into `mean_out`.
     fn exchange(&mut self, encoded: &mut Vec<u8>, mean_out: &mut Vec<f32>) -> Result<()>;
+
+    /// Streamed rounds: contribute one section's standalone encoded
+    /// message (`payload`) the moment it is staged — strict descending
+    /// section order, with the section's deterministic readiness stamp
+    /// in simulated seconds since the round's backward began. The frame
+    /// hits the wire immediately; after the last section,
+    /// [`Self::finish_streamed`] completes the round. Only topologies
+    /// built with [`ExchangeConfig::with_streaming`] accept the call.
+    fn push_section(&mut self, section: usize, payload: &[u8], ready_s: f64) -> Result<()> {
+        let _ = (payload, ready_s);
+        Err(Error::InvalidArg(format!(
+            "this exchange was not built for streaming (section {section} refused); \
+             construct the topology with ExchangeConfig::with_streaming"
+        )))
+    }
+
+    /// Complete a streamed round once every section was pushed: block
+    /// for the exchange and write the round's decoded mean gradient.
+    /// Pairs with [`Self::push_section`].
+    fn finish_streamed(&mut self, mean_out: &mut Vec<f32>) -> Result<()> {
+        let _ = mean_out;
+        Err(Error::InvalidArg(
+            "this exchange was not built for streaming \
+             (construct the topology with ExchangeConfig::with_streaming)"
+                .into(),
+        ))
+    }
 }
 
 /// The two ends of a built topology: the coordinator and one worker end
@@ -632,6 +731,7 @@ pub fn build_topology(
     spec: &WireSpec,
 ) -> Result<TopologyEnds> {
     cfg.validate(workers)?;
+    let streamed = cfg.streamed_sections();
     match cfg.topology {
         Topology::Ps => {
             let (coord, ends) = PsCollective::new(
@@ -640,6 +740,7 @@ pub fn build_topology(
                 spec,
                 cfg.quantize_downlink,
                 cfg.error_feedback,
+                streamed,
             )?;
             Ok((
                 Box::new(coord),
@@ -647,7 +748,8 @@ pub fn build_topology(
             ))
         }
         Topology::Ring => {
-            let (coord, ends) = RingAllReduce::new(workers, cfg.links, spec, cfg.error_feedback)?;
+            let (coord, ends) =
+                RingAllReduce::new(workers, cfg.links, spec, cfg.error_feedback, streamed)?;
             Ok((
                 Box::new(coord),
                 ends.into_iter().map(|e| Box::new(e) as Box<dyn WorkerExchange>).collect(),
@@ -661,6 +763,7 @@ pub fn build_topology(
                 spec,
                 cfg.quantize_downlink,
                 cfg.error_feedback,
+                streamed,
             )?;
             Ok((
                 Box::new(coord),
@@ -676,6 +779,7 @@ pub fn build_topology(
                 spec,
                 cfg.quantize_downlink,
                 cfg.error_feedback,
+                streamed,
             )?;
             Ok((
                 Box::new(coord),
@@ -712,6 +816,76 @@ fn drive_worker(
         // error; a panic here would only mask it.
         if wx.exchange(&mut msg, &mut mean).is_err() {
             return;
+        }
+    }
+}
+
+/// The streamed counterpart of [`drive_worker`]: run the section-streamed
+/// overlap encoder over a synthetic equal-span layer structure
+/// (`sections` single-layer sections, readiness stamps from
+/// [`SectionMap::ready_schedule`] at [`SIM_BACKWARD_RATE`]) and push each
+/// section frame as its encode completes, then finish the round. Uplink
+/// EF settles exactly like the trainer's overlap loop: the residual is
+/// staged section-wise into the encode and updated from the assembled
+/// flat message afterwards, so the wire bytes (and the broadcast-topology
+/// means) match the flat parallel EF path bit for bit.
+fn drive_worker_streamed(
+    spec: &WireSpec,
+    error_feedback: bool,
+    sections: usize,
+    w: usize,
+    g: &[f32],
+    mut wx: Box<dyn WorkerExchange>,
+    rounds: usize,
+) {
+    let n = g.len();
+    let spans: Vec<std::ops::Range<usize>> =
+        (0..sections).map(|i| n * i / sections..n * (i + 1) / sections).collect();
+    // Construction errors close this worker's channels; the
+    // coordinator's round() surfaces the failure (run_rounds_streamed
+    // pre-validates the same construction on the driver thread).
+    let Ok(map) = SectionMap::new(&spans, sections, spec.bucket_size) else {
+        return;
+    };
+    let Ok(mut ov) = OverlapEncoder::new(spec, map) else {
+        return;
+    };
+    let Ok(mut gc) = GradCodec::new(spec) else {
+        return;
+    };
+    let ready = ov.map().ready_schedule(SIM_BACKWARD_RATE);
+    let mut ef = error_feedback.then(|| gc.error_feedback());
+    let mut rng = Rng::stream(spec.seed, 2_000 + w as u64);
+    let mut msg = Vec::new();
+    let mut deq = Vec::new();
+    let mut mean = Vec::new();
+    for _ in 0..rounds {
+        let memory = ef.as_mut().map(|e| e.residual(n));
+        let res = ov.encode_streamed(
+            memory,
+            &mut rng,
+            &mut msg,
+            &ready,
+            &mut |sec, payload, r| wx.push_section(sec, payload, r),
+            |cb| {
+                // Synthetic reverse-layer backward: frontiers descend to 0.
+                for s in spans.iter().rev() {
+                    cb(s.start, g);
+                }
+                0.0
+            },
+        );
+        if res.is_err() || wx.finish_streamed(&mut mean).is_err() {
+            return;
+        }
+        if let Some(ef) = &mut ef {
+            // m ← (g + m) − deq(own assembled message), the trainer's
+            // post-overlap settle.
+            if gc.decode_flat_into(&msg, &mut deq).is_err() {
+                return;
+            }
+            ef.compensate(g);
+            ef.update_residual(&deq);
         }
     }
 }
@@ -759,6 +933,62 @@ pub fn run_rounds(
     grads: &[Vec<f32>],
     rounds: usize,
 ) -> Result<(Vec<f32>, CommStats)> {
+    if cfg.streaming {
+        return Err(Error::InvalidArg(
+            "run_rounds drives the flat exchange; use run_rounds_streamed for a \
+             streaming ExchangeConfig"
+                .into(),
+        ));
+    }
+    run_rounds_impl(cfg, spec, grads, rounds, false)
+}
+
+/// The streamed twin of [`run_rounds`]: every worker runs the
+/// section-streamed overlap encoder ([`OverlapEncoder::encode_streamed`])
+/// over a synthetic equal-span layer structure with `cfg.sections`
+/// sections and pushes section frames into the collective as backward
+/// "produces" them, then completes the round with
+/// [`WorkerExchange::finish_streamed`]. Requires a streaming
+/// [`ExchangeConfig`] ([`ExchangeConfig::with_streaming`]) and a
+/// quantizing method (FP has no bucket grid to stream).
+///
+/// Timing contract: a streamed round's `sim_time_s` delta is measured
+/// from the round's *backward start* — it includes the wait for each
+/// section's readiness stamp, because that wait is exactly what the
+/// streaming overlap hides comm behind. Compare against
+/// `ready_last + flat round time`, not the flat round time alone (the
+/// flat exchange can only start once backward has finished).
+pub fn run_rounds_streamed(
+    cfg: &ExchangeConfig,
+    spec: &WireSpec,
+    grads: &[Vec<f32>],
+    rounds: usize,
+) -> Result<(Vec<f32>, CommStats)> {
+    if !cfg.streaming {
+        return Err(Error::InvalidArg(
+            "run_rounds_streamed needs a streaming ExchangeConfig \
+             (ExchangeConfig::with_streaming)"
+                .into(),
+        ));
+    }
+    // Surface worker-side construction errors (FP method, bucket
+    // mismatch, bad section count) on the driver thread, where they can
+    // carry their real message.
+    let n = grads.first().map_or(0, |g| g.len());
+    let spans: Vec<std::ops::Range<usize>> = (0..cfg.sections)
+        .map(|i| n * i / cfg.sections..n * (i + 1) / cfg.sections)
+        .collect();
+    OverlapEncoder::new(spec, SectionMap::new(&spans, cfg.sections, spec.bucket_size)?)?;
+    run_rounds_impl(cfg, spec, grads, rounds, true)
+}
+
+fn run_rounds_impl(
+    cfg: &ExchangeConfig,
+    spec: &WireSpec,
+    grads: &[Vec<f32>],
+    rounds: usize,
+    streamed: bool,
+) -> Result<(Vec<f32>, CommStats)> {
     let spec = match &spec.pool {
         PoolMode::Pooled => {
             spec.clone().with_pool_mode(PoolMode::Shared(PoolHandle::new(spec.threads)))
@@ -766,6 +996,7 @@ pub fn run_rounds(
         _ => spec.clone(),
     };
     let (mut coll, ends) = build_topology(cfg, grads.len(), &spec)?;
+    let sections = cfg.sections;
     let mut mean = Vec::new();
     let shared = spec.pool.shared().cloned();
     let stats = match shared {
@@ -775,7 +1006,13 @@ pub fn run_rounds(
             let coordinated: Result<Result<CommStats>> = pool.scope(|sc| {
                 for (w, wx) in ends.into_iter().enumerate() {
                     let g: &[f32] = &grads[w];
-                    sc.spawn(move || drive_worker(spec, ef, w, g, wx, rounds));
+                    sc.spawn(move || {
+                        if streamed {
+                            drive_worker_streamed(spec, ef, sections, w, g, wx, rounds)
+                        } else {
+                            drive_worker(spec, ef, w, g, wx, rounds)
+                        }
+                    });
                 }
                 let res = drive_coordinator(coll.as_mut(), &mut mean, rounds);
                 // Tear the coordinator down before the scope drains (see
@@ -790,7 +1027,13 @@ pub fn run_rounds(
                 for (w, wx) in ends.into_iter().enumerate() {
                     let g: &[f32] = &grads[w];
                     let spec = &spec;
-                    scope.spawn(move || drive_worker(spec, cfg.error_feedback, w, g, wx, rounds));
+                    scope.spawn(move || {
+                        if streamed {
+                            drive_worker_streamed(spec, cfg.error_feedback, sections, w, g, wx, rounds)
+                        } else {
+                            drive_worker(spec, cfg.error_feedback, w, g, wx, rounds)
+                        }
+                    });
                 }
                 let res = drive_coordinator(coll.as_mut(), &mut mean, rounds);
                 // Same drop-before-join convention as the pooled driver.
@@ -1103,5 +1346,240 @@ mod tests {
         let cfg = ExchangeConfig::hier(2, LinkMap::uniform(Link::ten_gbps()));
         let err = run_once(&cfg, &spec, &grads);
         assert!(err.is_err(), "mismatched gradient lengths must error");
+    }
+
+    #[test]
+    fn streaming_config_and_driver_guards() {
+        let link = Link::ten_gbps();
+        // streaming rides any synchronous topology; staleness excludes it
+        assert!(ExchangeConfig::flat(Topology::Ps, link).with_streaming(4).validate(2).is_ok());
+        assert!(ExchangeConfig::flat(Topology::Ring, link).with_streaming(2).validate(2).is_ok());
+        assert!(ExchangeConfig::sharded(2, 0, link).with_streaming(3).validate(4).is_ok());
+        assert!(
+            ExchangeConfig::sharded(2, 1, link).with_streaming(3).validate(4).is_err(),
+            "bounded staleness excludes section streaming"
+        );
+        assert!(ExchangeConfig::flat(Topology::Ps, link).with_streaming(0).validate(2).is_err());
+        // each driver refuses the other's config
+        let grads = vec![vec![0.1f32; 256]; 2];
+        let spec = WireSpec::new("terngrad", 64);
+        let streaming = ExchangeConfig::flat(Topology::Ps, link).with_streaming(2);
+        assert!(run_rounds(&streaming, &spec, &grads, 1).is_err());
+        assert!(run_rounds_streamed(&ExchangeConfig::flat(Topology::Ps, link), &spec, &grads, 1)
+            .is_err());
+        // fp has no bucket grid to stream — rejected on the driver thread
+        assert!(run_rounds_streamed(&streaming, &WireSpec::new("fp", 64), &grads, 1).is_err());
+        // non-streaming worker ends refuse the streaming calls
+        struct Dummy;
+        impl WorkerExchange for Dummy {
+            fn id(&self) -> usize {
+                0
+            }
+            fn exchange(&mut self, _: &mut Vec<u8>, _: &mut Vec<f32>) -> Result<()> {
+                Ok(())
+            }
+        }
+        let mut d = Dummy;
+        assert!(d.push_section(0, &[], 0.0).is_err());
+        assert!(d.finish_streamed(&mut Vec::new()).is_err());
+    }
+
+    /// The tentpole bit-identity contract: ps, hier (member rings and
+    /// singleton groups) and sharded-ps streamed rounds produce the same
+    /// decoded means as the flat exchange over the same gradients — for
+    /// every thread count (1 = the serial start-anywhere encoder) and
+    /// with uplink error feedback on or off.
+    #[test]
+    fn streamed_bit_identical_to_flat_on_broadcast_topologies() {
+        let link = Link::new(1e9, 0.0);
+        let n = 3072;
+        let mut rng = Rng::seed_from(31);
+        let grads: Vec<Vec<f32>> = (0..4)
+            .map(|_| {
+                let mut g = vec![0.0f32; n];
+                rng.fill_gaussian(&mut g, 1e-3);
+                g
+            })
+            .collect();
+        let cfgs = vec![
+            ExchangeConfig::flat(Topology::Ps, link),
+            ExchangeConfig::flat(Topology::Ps, link).with_downlink(true),
+            ExchangeConfig::hier(2, LinkMap::uniform(link)),
+            ExchangeConfig::hier(4, LinkMap::uniform(link)),
+            ExchangeConfig::sharded(2, 0, link),
+        ];
+        for cfg in cfgs {
+            for ef in [false, true] {
+                let cfg = cfg.clone().with_error_feedback(ef);
+                let spec = WireSpec { seed: 7, ..WireSpec::new("orq-5", 64) }.with_threads(2);
+                let (flat_mean, _) = run_rounds(&cfg, &spec, &grads, 3).unwrap();
+                for threads in [1usize, 2, 4] {
+                    let spec =
+                        WireSpec { seed: 7, ..WireSpec::new("orq-5", 64) }.with_threads(threads);
+                    let (smean, sstats) =
+                        run_rounds_streamed(&cfg.clone().with_streaming(3), &spec, &grads, 3)
+                            .unwrap();
+                    assert_eq!(
+                        smean, flat_mean,
+                        "{:?} groups={} shards={} downlink={} ef={ef} threads={threads}",
+                        cfg.topology, cfg.groups, cfg.shards, cfg.quantize_downlink
+                    );
+                    assert!(sstats.wire_bytes > 0 && sstats.messages > 0);
+                }
+            }
+        }
+    }
+
+    /// Encode worker 0's sections once through a collecting sink: the
+    /// standalone per-section message sizes (size-deterministic — they
+    /// depend only on the section lengths and the scheme) and the
+    /// readiness schedule the model checks need.
+    fn section_msgs(spec: &WireSpec, n: usize, sections: usize, g: &[f32]) -> (Vec<f64>, Vec<Vec<u8>>) {
+        let spans: Vec<std::ops::Range<usize>> =
+            (0..sections).map(|i| n * i / sections..n * (i + 1) / sections).collect();
+        let map = SectionMap::new(&spans, sections, spec.bucket_size).unwrap();
+        let ready = map.ready_schedule(SIM_BACKWARD_RATE);
+        let mut ov = OverlapEncoder::new(spec, map).unwrap();
+        let mut rng = Rng::stream(spec.seed, 2_000);
+        let mut out = Vec::new();
+        let mut msgs: Vec<Vec<u8>> = vec![Vec::new(); sections];
+        ov.encode_streamed(
+            None,
+            &mut rng,
+            &mut out,
+            &ready,
+            &mut |s, m, _| {
+                msgs[s] = m.to_vec();
+                Ok(())
+            },
+            |cb| {
+                for s in spans.iter().rev() {
+                    cb(s.start, g);
+                }
+                0.0
+            },
+        )
+        .unwrap();
+        (ready, msgs)
+    }
+
+    /// The measured/model contract of the streamed exchange: the
+    /// simulator's streamed round time (measured from backward start)
+    /// matches the closed-form `*_streamed_time` models to < 1% on
+    /// ps / sharded-ps / hier, and with more than one section it beats
+    /// "backward end + flat exchange" strictly — the overlap win the
+    /// flat path cannot collect.
+    #[test]
+    fn streamed_sim_time_matches_models_and_beats_flat() {
+        use super::super::overlap::{hier_streamed_time, ps_streamed_time, sharded_streamed_time};
+        use super::super::shard::{FRAME_HEADER_BYTES, SECTION_STAMP_BYTES};
+        let link = Link::new(1e8, 0.0);
+        let l = 3usize;
+        let n = 4096usize;
+        let mut rng = Rng::seed_from(40);
+        let grads: Vec<Vec<f32>> = (0..l)
+            .map(|_| {
+                let mut g = vec![0.0f32; n];
+                rng.fill_gaussian(&mut g, 1e-3);
+                g
+            })
+            .collect();
+        let spec = WireSpec { seed: 7, ..WireSpec::new("orq-5", 128) }.with_threads(2);
+        let frame = |m: &[u8]| FRAME_HEADER_BYTES + SECTION_STAMP_BYTES + m.len();
+
+        // -- ps, 4 sections --------------------------------------------
+        let sections = 4usize;
+        let (ready, msgs) = section_msgs(&spec, n, sections, &grads[0]);
+        let ready_send: Vec<f64> = ready.iter().rev().copied().collect();
+        let frames_send: Vec<usize> = msgs.iter().rev().map(|m| frame(m)).collect();
+        let scfg = ExchangeConfig::flat(Topology::Ps, link).with_streaming(sections);
+        let (mean, stats) = run_rounds_streamed(&scfg, &spec, &grads, 1).unwrap();
+        let mut down = Vec::new();
+        codec::encode_fp_into(&mean, &mut down);
+        let model = ps_streamed_time(&link, &ready_send, &frames_send, down.len());
+        let err = (model - stats.sim_time_s).abs() / model;
+        assert!(err < 0.01, "ps streamed model {model} vs sim {} ({err})", stats.sim_time_s);
+        let (fmean, fstats) =
+            run_rounds(&ExchangeConfig::flat(Topology::Ps, link), &spec, &grads, 1).unwrap();
+        assert_eq!(fmean, mean, "streamed ps mean ≡ flat mean");
+        let ready_last = ready.iter().copied().fold(0.0, f64::max);
+        assert!(
+            stats.sim_time_s < ready_last + fstats.sim_time_s,
+            "streamed {} must beat backward-end + flat {}",
+            stats.sim_time_s,
+            ready_last + fstats.sim_time_s
+        );
+
+        // -- sharded-ps: 2 shards, 2 sections cut at the shard boundary
+        // (each shard owns exactly one whole section; the other arrives
+        // as an empty lockstep frame) --------------------------------
+        let (ready2, msgs2) = section_msgs(&spec, n, 2, &grads[0]);
+        let scfg = ExchangeConfig::sharded(2, 0, link).with_streaming(2);
+        let (smean, sstats) = run_rounds_streamed(&scfg, &spec, &grads, 1).unwrap();
+        assert_eq!(smean, mean, "sharded streamed mean ≡ ps mean");
+        let empty = FRAME_HEADER_BYTES + SECTION_STAMP_BYTES;
+        let fb = vec![
+            vec![empty, frame(&msgs2[0])],
+            vec![frame(&msgs2[1]), empty],
+        ];
+        let half = codec::encode_fp(&smean[..n / 2]).len();
+        let db = vec![FRAME_HEADER_BYTES + half, FRAME_HEADER_BYTES + half];
+        let ready_send2: Vec<f64> = ready2.iter().rev().copied().collect();
+        let model = sharded_streamed_time(&link, &ready_send2, &fb, &db);
+        let err = (model - sstats.sim_time_s).abs() / model;
+        assert!(
+            err < 0.01,
+            "sharded streamed model {model} vs sim {} ({err})",
+            sstats.sim_time_s
+        );
+
+        // -- hier with singleton groups: the leader star is the streamed
+        // leg, the fp multicast the tail ------------------------------
+        let lm = LinkMap::new(Link::new(1e9, 0.0), link);
+        let scfg = ExchangeConfig::hier(l, lm).with_streaming(sections);
+        let (hmean, hstats) = run_rounds_streamed(&scfg, &spec, &grads, 1).unwrap();
+        assert_eq!(hmean, mean, "hier streamed mean ≡ ps mean");
+        let mut fp = Vec::new();
+        codec::encode_fp_into(&hmean, &mut fp);
+        let model = hier_streamed_time(&lm, l, l, &ready_send, &frames_send, 0, fp.len());
+        let err = (model - hstats.sim_time_s).abs() / model;
+        assert!(err < 0.01, "hier streamed model {model} vs sim {} ({err})", hstats.sim_time_s);
+    }
+
+    /// The ring equivalence contract: streamed ring bytes are a pure
+    /// function of the section schedule, so the decoded means are
+    /// identical at every thread count — `threads == 1` *is* the serial
+    /// replay — and a repeat run reproduces them exactly. With EF on,
+    /// the per-(hop, section) residuals stay deterministic too.
+    #[test]
+    fn ring_streamed_thread_invariant_and_deterministic() {
+        let link = Link::new(1e9, 0.0);
+        let n = 2048;
+        let mut rng = Rng::seed_from(17);
+        let grads: Vec<Vec<f32>> = (0..3)
+            .map(|_| {
+                let mut g = vec![0.0f32; n];
+                rng.fill_gaussian(&mut g, 1e-3);
+                g
+            })
+            .collect();
+        for ef in [false, true] {
+            let cfg = ExchangeConfig::flat(Topology::Ring, link)
+                .with_error_feedback(ef)
+                .with_streaming(2);
+            let mut reference: Option<Vec<f32>> = None;
+            for threads in [1usize, 2, 4] {
+                let spec = WireSpec { seed: 5, ..WireSpec::new("orq-5", 64) }.with_threads(threads);
+                let (mean, stats) = run_rounds_streamed(&cfg, &spec, &grads, 2).unwrap();
+                assert!(stats.sim_time_s > 0.0 && stats.wire_bytes > 0);
+                match &reference {
+                    None => reference = Some(mean),
+                    Some(r) => assert_eq!(&mean, r, "ef={ef} threads={threads}"),
+                }
+            }
+            let spec = WireSpec { seed: 5, ..WireSpec::new("orq-5", 64) };
+            let (again, _) = run_rounds_streamed(&cfg, &spec, &grads, 2).unwrap();
+            assert_eq!(Some(again), reference, "serial replay reproduces the run");
+        }
     }
 }

@@ -55,6 +55,21 @@
 //! transmitting in it (multicasts count once, the PS broadcast
 //! convention). [`hier_time`] is the closed-form model the Table 1 bench
 //! prints next to the measured rounds.
+//!
+//! **Streaming.** With `ExchangeConfig::with_streaming` the round's
+//! first wire leg goes on the wire while backward still runs. For
+//! `m > 1` each worker's hop-0 chunk slice is cut per overlap section
+//! and shipped as [`FrameKind::Section`] frames the moment the section
+//! is staged; the ring successor reassembles the flat chunk message
+//! with [`codec::concat_messages_into`] (byte-identical to the flat
+//! hop-0 slice), so hops 1…m−1, the gather, the star and the downlink
+//! run the exact flat path — the cluster mean stays bit-identical to
+//! the flat round. For `m == 1` the leaders stream whole-section frames
+//! straight up the star and the root reassembles each group's original
+//! message. The streamed leg's simulated cost replaces the flat step it
+//! supersedes: the slowest worker's pipeline recurrence `end =
+//! max(end, ready) + transfer(frame)` from the frames' in-band
+//! readiness stamps (measured from the round's backward start).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 
@@ -62,7 +77,9 @@ use super::collective::{
     collect_traces, Collective, CommStats, GradCodec, RoundTrace, WireSpec, WorkerExchange,
 };
 use super::link::{EdgeClass, LinkMap, TrafficMeter};
+use super::ps::SECTION_MSG_OFFSET;
 use super::ring::{chunk_range, ring_sub};
+use super::shard::{begin_frame_into, finish_frame, parse_frame, split_section_payload, FrameKind};
 use crate::codec;
 use crate::error::{Error, Result};
 use crate::quant::bucket::QuantizedGrad;
@@ -119,6 +136,9 @@ pub struct HierarchicalCollective {
     workers: usize,
     group_size: usize,
     links: LinkMap,
+    /// `Some(nsec)` = streamed rounds: the first wire leg arrives as
+    /// `nsec` per-worker section frames, accounted by recurrence.
+    streaming: Option<usize>,
     trace_rx: Receiver<RoundTrace>,
     mean_rx: Receiver<Vec<f32>>,
     meter_intra: TrafficMeter,
@@ -137,6 +157,7 @@ impl HierarchicalCollective {
         spec: &WireSpec,
         quantize_downlink: bool,
         error_feedback: bool,
+        streaming: Option<usize>,
     ) -> Result<(HierarchicalCollective, Vec<HierWorker>)> {
         if workers == 0 {
             return Err(Error::InvalidArg("hier needs at least 1 worker".into()));
@@ -245,6 +266,14 @@ impl HierarchicalCollective {
                 qg: QuantizedGrad::default(),
                 msg: Vec::new(),
                 step_bytes: Vec::new(),
+                streaming,
+                round: 0,
+                sec_lens: Vec::new(),
+                sec_bufs: Vec::new(),
+                sec_ready: Vec::new(),
+                sec_order: Vec::new(),
+                stream_rows: Vec::new(),
+                flat_msg: Vec::new(),
             });
         }
         Ok((
@@ -252,6 +281,7 @@ impl HierarchicalCollective {
                 workers,
                 group_size: m,
                 links,
+                streaming,
                 trace_rx,
                 mean_rx,
                 meter_intra: TrafficMeter::default(),
@@ -283,7 +313,36 @@ impl Collective for HierarchicalCollective {
     fn round(&mut self, mean_out: &mut Vec<f32>) -> Result<()> {
         let l = self.workers;
         let steps = self.group_size + 3;
-        let traces = collect_traces(&self.trace_rx, l, steps, "hier")?;
+        let traces =
+            collect_traces(&self.trace_rx, l, steps, self.streaming.unwrap_or(0), "hier")?;
+        if self.streaming.is_some() {
+            // Streamed leg: replaces the flat step it supersedes (hop 0
+            // on the intra ring for m > 1, the leader uplink on the
+            // inter star for m == 1 — the superseded step's trace entry
+            // is zero). Cost = slowest worker's pipeline recurrence over
+            // its section frames; zero-byte rows are non-senders (the
+            // root, single-worker runs) gated only on readiness.
+            let class =
+                if self.group_size > 1 { EdgeClass::Intra } else { EdgeClass::Inter };
+            let link = self.links.link(class);
+            let mut leg = 0.0f64;
+            for tr in &traces {
+                let mut end = 0.0f64;
+                for &(ready, bytes) in &tr.stream {
+                    end = end.max(ready);
+                    if bytes > 0 {
+                        end += link.transfer_time(bytes);
+                        match class {
+                            EdgeClass::Intra => &mut self.meter_intra,
+                            EdgeClass::Inter => &mut self.meter_inter,
+                        }
+                        .record_up(link, bytes);
+                    }
+                }
+                leg = leg.max(end);
+            }
+            self.sim_time_s += leg;
+        }
         // Synchronous-step critical path on the global grid: nodes
         // transmit concurrently within a step, steps serialize. A zero
         // entry means "silent this step" and contributes no latency.
@@ -291,7 +350,7 @@ impl Collective for HierarchicalCollective {
             let class = self.step_class(k);
             let mut step = 0.0f64;
             for tr in &traces {
-                let bytes = tr[k];
+                let bytes = tr.step_bytes[k];
                 if bytes == 0 {
                     continue;
                 }
@@ -376,6 +435,22 @@ pub struct HierWorker {
     qg: QuantizedGrad,
     msg: Vec<u8>,
     step_bytes: Vec<usize>,
+    /// `Some(nsec)` = streamed rounds (see the module docs).
+    streaming: Option<usize>,
+    /// Round counter stamped into / validated against section frames.
+    round: u64,
+    /// Streamed layout learned in round 0: element count per section.
+    sec_lens: Vec<usize>,
+    /// This round's staged section messages, indexed by section.
+    sec_bufs: Vec<Vec<u8>>,
+    /// Readiness stamp of each staged section.
+    sec_ready: Vec<f64>,
+    /// Sections in push (send-schedule) order.
+    sec_order: Vec<usize>,
+    /// Per-frame (readiness, frame bytes) trace rows, in send order.
+    stream_rows: Vec<(f64, usize)>,
+    /// The round's reassembled flat message (concat of all sections).
+    flat_msg: Vec<u8>,
 }
 
 impl HierWorker {
@@ -401,8 +476,11 @@ impl HierWorker {
     /// Intra reduce-scatter + gather: leaves the decoded group sum in
     /// `self.group_sum` on leaders; members return after shipping their
     /// completed chunk. For single-member groups the group sum is the
-    /// worker's own decoded gradient.
-    fn reduce_group(&mut self, encoded: &[u8], n: usize) -> Result<()> {
+    /// worker's own decoded gradient. In streamed rounds the hop-0 send
+    /// already happened as section frames and `hop0` carries the
+    /// reassembled predecessor chunk (byte-identical to the flat hop-0
+    /// message, so everything from hop 1 on is the flat path).
+    fn reduce_group(&mut self, encoded: &[u8], n: usize, hop0: Option<Vec<u8>>) -> Result<()> {
         let m = self.group_size;
         let j = self.member;
         let d = self.codec.bucket_size();
@@ -413,13 +491,25 @@ impl HierWorker {
         }
 
         // ---- reduce-scatter: m−1 hops of decode → add → requantize ----
+        let streamed = hop0.is_some();
+        let mut incoming = hop0;
         let mut cur = Vec::new();
-        let r = chunk_range(n, d, m, j);
-        codec::slice_elements_into(encoded, r.start, r.end, &mut cur)?;
+        if !streamed {
+            let r = chunk_range(n, d, m, j);
+            codec::slice_elements_into(encoded, r.start, r.end, &mut cur)?;
+        }
         for k in 0..m - 1 {
-            self.step_bytes[k] = cur.len();
-            self.ring_tx.send(cur).map_err(|_| Self::hung_up("ring successor"))?;
-            let mut msg = self.ring_rx.recv().map_err(|_| Self::hung_up("ring predecessor"))?;
+            if k > 0 || !streamed {
+                self.step_bytes[k] = cur.len();
+                self.ring_tx.send(cur).map_err(|_| Self::hung_up("ring successor"))?;
+                cur = Vec::new();
+            }
+            let mut msg = match incoming.take() {
+                Some(b) => b,
+                None => {
+                    self.ring_rx.recv().map_err(|_| Self::hung_up("ring predecessor"))?
+                }
+            };
             let c = ring_sub(j, k + 1, m);
             self.decode_chunk(&msg, c, n)?;
             let r = chunk_range(n, d, m, c);
@@ -499,9 +589,8 @@ impl HierWorker {
         res
     }
 
-    /// Root: reduce all group sums in group order (f64), write the global
-    /// mean, multicast it FP-encoded down the star.
-    fn root_reduce_and_broadcast(&mut self, n: usize, mean_out: &mut Vec<f32>) -> Result<()> {
+    /// Root: seed slot 0 with the own group sum and reset the fill map.
+    fn root_init_slots(&mut self) {
         let g_count = self.groups;
         self.slots.resize_with(g_count, Vec::new);
         self.slot_filled.clear();
@@ -509,6 +598,13 @@ impl HierWorker {
         self.slots[0].clear();
         self.slots[0].extend_from_slice(&self.group_sum);
         self.slot_filled[0] = true;
+    }
+
+    /// Root: reduce all group sums in group order (f64), write the global
+    /// mean, multicast it FP-encoded down the star.
+    fn root_reduce_and_broadcast(&mut self, n: usize, mean_out: &mut Vec<f32>) -> Result<()> {
+        let g_count = self.groups;
+        self.root_init_slots();
         if g_count > 1 {
             let rx = self.up_rx.take().expect("root holds the uplink receiver");
             let res = (|| -> Result<()> {
@@ -531,6 +627,12 @@ impl HierWorker {
             self.up_rx = Some(rx);
             res?;
         }
+        self.root_finish(n, mean_out)
+    }
+
+    /// Root tail shared by the flat and streamed paths: f64-reduce the
+    /// filled slots in group order, encode the mean once, multicast.
+    fn root_finish(&mut self, n: usize, mean_out: &mut Vec<f32>) -> Result<()> {
         self.acc.clear();
         self.acc.resize(n, 0.0);
         for slot in &self.slots {
@@ -591,12 +693,276 @@ impl HierWorker {
         let trace = RoundTrace {
             worker: self.id,
             step_bytes: std::mem::take(&mut self.step_bytes),
+            stream: std::mem::take(&mut self.stream_rows),
         };
         self.trace_tx.send(trace).map_err(|_| Self::hung_up("coordinator"))?;
         if let Some(tx) = &self.mean_tx {
             tx.send(mean.to_vec()).map_err(|_| Self::hung_up("coordinator"))?;
         }
         Ok(())
+    }
+
+    // ----------------------------------------------------------------
+    // Streaming
+    // ----------------------------------------------------------------
+
+    /// Ship one staged section onto this worker's streamed leg and record
+    /// its trace row. `m > 1`: the (section ∩ own hop-0 chunk) slice —
+    /// possibly empty, empties keep the frame count in lockstep and
+    /// concat back to nothing — on the intra ring. `m == 1`, non-root
+    /// leader: the whole section up the star. Root / single worker: no
+    /// wire leg, a zero-byte row gated only on readiness.
+    fn send_streamed_frames(&mut self, section: usize, payload: &[u8], ready_s: f64) -> Result<()> {
+        let m = self.group_size;
+        if m == 1 && (self.group == 0 || self.workers == 1) {
+            self.stream_rows.push((ready_s, 0));
+            return Ok(());
+        }
+        let mut frame = Vec::new();
+        begin_frame_into(
+            FrameKind::Section,
+            self.round,
+            section as u16,
+            self.id as u16,
+            &mut frame,
+        );
+        frame.extend_from_slice(&ready_s.to_le_bytes());
+        if m > 1 {
+            let n: usize = self.sec_lens.iter().sum();
+            let sec_start: usize = self.sec_lens[..section].iter().sum();
+            let sec_end = sec_start + self.sec_lens[section];
+            let r = chunk_range(n, self.codec.bucket_size(), m, self.member);
+            let lo = r.start.max(sec_start).min(sec_end);
+            let hi = r.end.min(sec_end).max(sec_start);
+            codec::slice_elements_append(payload, lo - sec_start, hi - sec_start, &mut frame)?;
+            finish_frame(&mut frame);
+            self.stream_rows.push((ready_s, frame.len()));
+            self.ring_tx.send(frame).map_err(|_| Self::hung_up("ring successor"))?;
+        } else {
+            frame.extend_from_slice(payload);
+            finish_frame(&mut frame);
+            self.stream_rows.push((ready_s, frame.len()));
+            self.up_tx
+                .as_ref()
+                .expect("non-root leaders hold the uplink sender")
+                .send((self.group, frame))
+                .map_err(|_| Self::hung_up("root"))?;
+        }
+        Ok(())
+    }
+
+    /// Validate an incoming section frame against this round and return
+    /// its section index (stamp checked, then discarded — timing is the
+    /// coordinator's job).
+    fn check_section_frame(&self, bytes: &[u8], nsec: usize, sender: usize) -> Result<usize> {
+        let f = parse_frame(bytes)?;
+        if f.kind != FrameKind::Section {
+            return Err(Error::Comm(format!(
+                "hier expected a section frame, got {:?}",
+                f.kind
+            )));
+        }
+        if f.round != self.round {
+            return Err(Error::Comm(format!(
+                "hier section frame for round {}, expected round {}",
+                f.round, self.round
+            )));
+        }
+        if f.sender as usize != sender {
+            return Err(Error::Comm(format!(
+                "hier section frame from worker {}, expected worker {sender}",
+                f.sender
+            )));
+        }
+        let sec = f.slot as usize;
+        if sec >= nsec {
+            return Err(Error::Comm(format!(
+                "hier section {sec} out of range ({nsec} sections)"
+            )));
+        }
+        split_section_payload(f.payload)?;
+        Ok(sec)
+    }
+
+    /// Concatenate the inner messages of per-section frames (ascending
+    /// sections, empties dropped) into one flat message — byte-identical
+    /// to slicing the sender's flat encode over the union range.
+    fn concat_section_frames(frames: &[Vec<u8>], out: &mut Vec<u8>) -> Result<()> {
+        let mut parts: Vec<&[u8]> = Vec::with_capacity(frames.len());
+        for b in frames {
+            let msg = &b[SECTION_MSG_OFFSET..];
+            let (total, _) = codec::peek_shape(msg)?;
+            if total > 0 {
+                parts.push(msg);
+            }
+        }
+        match parts.is_empty() {
+            // All-empty (a chunk grid finer than the gradient): an empty
+            // slice of any part keeps the scheme/bucket framing.
+            true => codec::slice_elements_into(
+                &frames[0][SECTION_MSG_OFFSET..],
+                0,
+                0,
+                out,
+            ),
+            false => codec::concat_messages_into(&parts, out),
+        }
+    }
+
+    /// `m > 1`: receive the predecessor's `nsec` hop-0 section frames and
+    /// reassemble the flat chunk message the flat round would have sent.
+    fn recv_hop0_sections(&mut self, nsec: usize) -> Result<Vec<u8>> {
+        let m = self.group_size;
+        let pred = self.group * m + (self.member + m - 1) % m;
+        let mut bufs: Vec<Option<Vec<u8>>> = (0..nsec).map(|_| None).collect();
+        for _ in 0..nsec {
+            let bytes = self.ring_rx.recv().map_err(|_| Self::hung_up("ring predecessor"))?;
+            let sec = self.check_section_frame(&bytes, nsec, pred)?;
+            if bufs[sec].is_some() {
+                return Err(Error::Comm(format!(
+                    "duplicate hop-0 section {sec} from worker {pred}"
+                )));
+            }
+            bufs[sec] = Some(bytes);
+        }
+        let frames: Vec<Vec<u8>> =
+            bufs.into_iter().map(|b| b.expect("one frame per section")).collect();
+        let mut out = Vec::new();
+        Self::concat_section_frames(&frames, &mut out)?;
+        Ok(out)
+    }
+
+    /// Root, `m == 1`: collect `nsec` section frames from every non-root
+    /// leader, reassemble each group's original flat message, decode into
+    /// the reduction slots (identical bytes to the flat star's verbatim
+    /// forwards, so the reduction is bit-identical).
+    fn root_collect_sections(&mut self, nsec: usize, n: usize) -> Result<()> {
+        let g_count = self.groups;
+        self.root_init_slots();
+        if g_count == 1 {
+            return Ok(());
+        }
+        let rx = self.up_rx.take().expect("root holds the uplink receiver");
+        let res = (|| -> Result<()> {
+            let mut bufs: Vec<Option<Vec<u8>>> = (0..g_count * nsec).map(|_| None).collect();
+            for _ in 0..(g_count - 1) * nsec {
+                let (g, bytes) = rx.recv().map_err(|_| Self::hung_up("group leader"))?;
+                if g == 0 || g >= g_count {
+                    return Err(Error::Comm(format!(
+                        "unexpected leader upload from group {g}"
+                    )));
+                }
+                // m == 1 ⇒ group g's leader is worker g · 1 = g.
+                let sec = self.check_section_frame(&bytes, nsec, g * self.group_size)?;
+                if bufs[g * nsec + sec].is_some() {
+                    return Err(Error::Comm(format!(
+                        "duplicate section {sec} from group {g}"
+                    )));
+                }
+                bufs[g * nsec + sec] = Some(bytes);
+            }
+            let mut cat = Vec::new();
+            for g in 1..g_count {
+                let frames: Vec<Vec<u8>> = bufs[g * nsec..(g + 1) * nsec]
+                    .iter_mut()
+                    .map(|b| b.take().expect("one frame per (group, section)"))
+                    .collect();
+                Self::concat_section_frames(&frames, &mut cat)?;
+                self.slot_filled[g] = true;
+                self.codec.decode_flat_into(&cat, &mut self.slots[g])?;
+                if self.slots[g].len() != n {
+                    return Err(Error::Shape(format!(
+                        "group {g} sum has {} elements, expected {n}",
+                        self.slots[g].len()
+                    )));
+                }
+            }
+            Ok(())
+        })();
+        self.up_rx = Some(rx);
+        res
+    }
+
+    /// The streamed round body: the flat [`Self::exchange`] with the
+    /// first wire leg replaced by the section frames already in flight.
+    fn run_streamed_round(&mut self, nsec: usize, mean_out: &mut Vec<f32>) -> Result<()> {
+        let m = self.group_size;
+        // Reassemble this worker's flat message from its staged sections
+        // (byte-identical to the flat encode) and decode the gradient.
+        {
+            let parts: Vec<&[u8]> = self.sec_bufs.iter().map(|b| b.as_slice()).collect();
+            codec::concat_messages_into(&parts, &mut self.flat_msg)?;
+        }
+        let HierWorker { codec, flat_msg, own, .. } = &mut *self;
+        codec.decode_flat_into(flat_msg, own)?;
+        let n = self.own.len();
+        mean_out.clear();
+        self.step_bytes.clear();
+        self.step_bytes.resize(m + 3, 0);
+
+        if self.workers == 1 {
+            mean_out.extend_from_slice(&self.own);
+            return self.finish_round(mean_out);
+        }
+
+        let hop0 = (m > 1).then(|| self.recv_hop0_sections(nsec)).transpose()?;
+        self.reduce_group(&[], n, hop0)?;
+
+        if self.member == 0 && self.group != 0 && m > 1 {
+            // ---- leader uplink over the slow star (flat-accounted; the
+            // m == 1 uplink was already streamed section by section) ----
+            let HierWorker { codec, up_ef, group_sum, rng, qg, msg, .. } = self;
+            match up_ef {
+                Some(ef) => codec.encode_ef_into(ef, group_sum, rng, qg, msg),
+                None => codec.encode_into(group_sum, rng, qg, msg),
+            }
+            self.step_bytes[m] = self.msg.len();
+            let bytes = std::mem::take(&mut self.msg);
+            self.up_tx
+                .as_ref()
+                .expect("non-root leaders hold the uplink sender")
+                .send((self.group, bytes))
+                .map_err(|_| Self::hung_up("root"))?;
+        }
+
+        if self.id == 0 {
+            if m == 1 {
+                self.root_collect_sections(nsec, n)?;
+                self.root_finish(n, mean_out)?;
+            } else {
+                self.root_reduce_and_broadcast(n, mean_out)?;
+            }
+        } else {
+            let rx = if self.member == 0 {
+                self.down_rx.take().expect("non-root leaders hold the star downlink")
+            } else {
+                self.bcast_rx.take().expect("members hold the group broadcast inbox")
+            };
+            let res = rx.recv().map_err(|_| {
+                Self::hung_up(if self.member == 0 { "root" } else { "group leader" })
+            });
+            if self.member == 0 {
+                self.down_rx = Some(rx);
+            } else {
+                self.bcast_rx = Some(rx);
+            }
+            let bytes = res?;
+            if self.member == 0 && !self.bcast_txs.is_empty() {
+                self.step_bytes[m + 2] = bytes.len();
+                for tx in &self.bcast_txs {
+                    tx.send(bytes.clone()).map_err(|_| Self::hung_up("group member"))?;
+                }
+            }
+            self.codec.decode_flat_into(&bytes, mean_out)?;
+        }
+        if mean_out.len() != n {
+            return Err(Error::Shape(format!(
+                "hier mean has {} elements, worker {} contributed {n}",
+                mean_out.len(),
+                self.id
+            )));
+        }
+        self.finish_round(mean_out)
     }
 }
 
@@ -606,6 +972,11 @@ impl WorkerExchange for HierWorker {
     }
 
     fn exchange(&mut self, encoded: &mut Vec<u8>, mean_out: &mut Vec<f32>) -> Result<()> {
+        if self.streaming.is_some() {
+            return Err(Error::InvalidArg(
+                "this hier exchange streams sections; use push_section/finish_streamed".into(),
+            ));
+        }
         let m = self.group_size;
         self.codec.decode_flat_into(encoded, &mut self.own)?;
         let n = self.own.len();
@@ -619,7 +990,7 @@ impl WorkerExchange for HierWorker {
             return self.finish_round(mean_out);
         }
 
-        self.reduce_group(encoded, n)?;
+        self.reduce_group(encoded, n, None)?;
 
         if self.member == 0 && self.group != 0 {
             // ---- leader uplink over the slow star ----
@@ -686,6 +1057,85 @@ impl WorkerExchange for HierWorker {
         }
         self.finish_round(mean_out)
     }
+
+    fn push_section(&mut self, section: usize, payload: &[u8], ready_s: f64) -> Result<()> {
+        let Some(nsec) = self.streaming else {
+            return Err(Error::InvalidArg(
+                "this hier exchange was not built for streaming".into(),
+            ));
+        };
+        if section >= nsec {
+            return Err(Error::InvalidArg(format!(
+                "section {section} out of range ({nsec} sections)"
+            )));
+        }
+        if !ready_s.is_finite() || ready_s < 0.0 {
+            return Err(Error::InvalidArg(format!(
+                "readiness stamp must be finite and non-negative, got {ready_s}"
+            )));
+        }
+        if self.sec_bufs.is_empty() {
+            self.sec_bufs.resize_with(nsec, Vec::new);
+            self.sec_ready.resize(nsec, 0.0);
+        }
+        if self.sec_order.contains(&section) {
+            return Err(Error::InvalidArg(format!(
+                "duplicate section {section} staged this round"
+            )));
+        }
+        self.sec_bufs[section].clear();
+        self.sec_bufs[section].extend_from_slice(payload);
+        self.sec_ready[section] = ready_s;
+        self.sec_order.push(section);
+        if !self.sec_lens.is_empty() {
+            // Layout known (round ≥ 1): put the frame on the wire now.
+            let (len, _) = codec::peek_shape(payload)?;
+            if len != self.sec_lens[section] {
+                return Err(Error::Shape(format!(
+                    "section {section} has {len} elements, round 0 had {}",
+                    self.sec_lens[section]
+                )));
+            }
+            self.send_streamed_frames(section, payload, ready_s)?;
+        }
+        Ok(())
+    }
+
+    fn finish_streamed(&mut self, mean_out: &mut Vec<f32>) -> Result<()> {
+        let Some(nsec) = self.streaming else {
+            return Err(Error::InvalidArg(
+                "this hier exchange was not built for streaming".into(),
+            ));
+        };
+        if self.sec_order.len() != nsec {
+            return Err(Error::InvalidArg(format!(
+                "round staged {} sections, expected {nsec}",
+                self.sec_order.len()
+            )));
+        }
+        if self.sec_lens.is_empty() {
+            // Round 0: learn the layout, then flush the parked frames in
+            // their send-schedule order.
+            let mut lens = Vec::with_capacity(nsec);
+            for b in &self.sec_bufs {
+                let (total, _) = codec::peek_shape(b)?;
+                lens.push(total);
+            }
+            self.sec_lens = lens;
+            let order = std::mem::take(&mut self.sec_order);
+            for &sec in &order {
+                let payload = std::mem::take(&mut self.sec_bufs[sec]);
+                let ready = self.sec_ready[sec];
+                self.send_streamed_frames(sec, &payload, ready)?;
+                self.sec_bufs[sec] = payload;
+            }
+            self.sec_order = order;
+        }
+        let res = self.run_streamed_round(nsec, mean_out);
+        self.sec_order.clear();
+        self.round += 1;
+        res
+    }
 }
 
 #[cfg(test)]
@@ -737,15 +1187,16 @@ mod tests {
     fn new_rejects_bad_grouping() {
         let lm = LinkMap::uniform(Link::ten_gbps());
         let spec = WireSpec::new("terngrad", 64);
-        assert!(HierarchicalCollective::new(0, 1, lm, &spec, false, false).is_err());
-        assert!(HierarchicalCollective::new(4, 0, lm, &spec, false, false).is_err());
-        assert!(HierarchicalCollective::new(4, 3, lm, &spec, false, false).is_err());
-        assert!(HierarchicalCollective::new(4, 2, lm, &spec, false, false).is_ok());
-        assert!(HierarchicalCollective::new(4, 4, lm, &spec, false, false).is_ok());
-        assert!(HierarchicalCollective::new(4, 1, lm, &spec, false, false).is_ok());
-        assert!(HierarchicalCollective::new(4, 2, lm, &spec, true, true).is_ok());
+        assert!(HierarchicalCollective::new(0, 1, lm, &spec, false, false, None).is_err());
+        assert!(HierarchicalCollective::new(4, 0, lm, &spec, false, false, None).is_err());
+        assert!(HierarchicalCollective::new(4, 3, lm, &spec, false, false, None).is_err());
+        assert!(HierarchicalCollective::new(4, 2, lm, &spec, false, false, None).is_ok());
+        assert!(HierarchicalCollective::new(4, 4, lm, &spec, false, false, None).is_ok());
+        assert!(HierarchicalCollective::new(4, 1, lm, &spec, false, false, None).is_ok());
+        assert!(HierarchicalCollective::new(4, 2, lm, &spec, true, true, None).is_ok());
+        assert!(HierarchicalCollective::new(4, 2, lm, &spec, false, false, Some(3)).is_ok());
         let bad = WireSpec::new("bogus", 64);
-        assert!(HierarchicalCollective::new(2, 1, lm, &bad, false, false).is_err());
+        assert!(HierarchicalCollective::new(2, 1, lm, &bad, false, false, None).is_err());
     }
 
     /// Codec-routed decodes (hop chunks, gathered chunks, leader
@@ -789,7 +1240,8 @@ mod tests {
     fn step_grid_classes() {
         let lm = LinkMap::uniform(Link::ten_gbps());
         let spec = WireSpec::new("fp", 64);
-        let (coll, _ends) = HierarchicalCollective::new(6, 2, lm, &spec, false, false).unwrap();
+        let (coll, _ends) =
+            HierarchicalCollective::new(6, 2, lm, &spec, false, false, None).unwrap();
         // m = 3: steps 0,1 = RS, 2 = gather (intra); 3,4 = star (inter);
         // 5 = group multicast (intra).
         assert_eq!(coll.step_class(0), EdgeClass::Intra);

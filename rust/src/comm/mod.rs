@@ -98,6 +98,36 @@
 //! wrappers) extend the flat `ps`/`ring`/`hier`/`sharded` models with
 //! the pipeline recurrence `end_i = max(end_{i-1}, ready_i) + comm_i`
 //! plus the exposed mean-broadcast tail.
+//!
+//! **Section streaming** (`--stream-sections`, implies `--overlap`;
+//! [`ExchangeConfig::with_streaming`]) — overlap hides *encode* latency
+//! but still ships one flat message per round; streaming puts every
+//! staged section on the wire the moment its encode completes, as a
+//! [`shard::FrameKind::Section`] frame (magic / version / kind /
+//! section slot / sender / round / payload length, plus an in-band
+//! readiness stamp), so early sections transfer while the backward tail
+//! still computes. Workers push frames via
+//! [`WorkerExchange::push_section`] in descending section order and
+//! complete the round with [`WorkerExchange::finish_streamed`]. Per
+//! topology:
+//!
+//! | topology     | streaming                                       | vs flat overlap               |
+//! |--------------|-------------------------------------------------|-------------------------------|
+//! | `ps`         | server reduces section frames incrementally     | bit-identical                 |
+//! | `sharded-ps` | per-shard section slices (stamp-only when empty); K = 0 only | bit-identical    |
+//! | `hier`       | sections stream up the intra ring / leader star | bit-identical                 |
+//! | `ring`       | one reduce-scatter + all-gather per section     | deterministic ≡ serial replay |
+//!
+//! The PS-family paths keep worker-order f64 accumulation per section,
+//! so the streamed mean is bit-identical to the flat overlap round; the
+//! ring requantizes per (hop, section) — its contract is thread-count
+//! determinism (equivalence to the serial replay of the same section
+//! schedule), proven by tests. The streamed closed-form models
+//! ([`overlap::ps_streamed_time`], [`overlap::sharded_streamed_time`],
+//! [`overlap::hier_streamed_time`], [`overlap::ring_streamed_time`])
+//! gate section `i`'s transfer at `max(ready_i, link_free)`; the
+//! executable collectives reproduce them to < 1% via the per-frame
+//! readiness stamps, measured from the round's backward start.
 
 // Non-test comm code must not `unwrap()`: dead peers, truncated frames
 // and codec failures all surface as `Err` on the coordinator. Provably
@@ -115,14 +145,15 @@ pub mod shard;
 
 pub use async_ps::{ShardedPsCollective, ShardedPsWorker};
 pub use collective::{
-    build_topology, run_once, run_rounds, Collective, CommStats, ExchangeConfig, GradCodec,
-    PoolMode, Topology, WireSpec, WorkerExchange,
+    build_topology, run_once, run_rounds, run_rounds_streamed, Collective, CommStats,
+    ExchangeConfig, GradCodec, PoolMode, Topology, WireSpec, WorkerExchange,
 };
 pub use hier::{HierWorker, HierarchicalCollective};
 pub use link::{EdgeClass, Link, LinkMap};
 pub use overlap::{
-    hier_overlap_time, overlap_round_time, ps_overlap_time, ring_overlap_time,
-    sharded_overlap_time, OverlapEncoder, Section, SectionMap,
+    hier_overlap_time, hier_streamed_time, overlap_round_time, ps_overlap_time, ps_streamed_time,
+    ring_overlap_time, ring_streamed_time, sharded_overlap_time, sharded_streamed_time,
+    OverlapEncoder, Section, SectionMap, SIM_BACKWARD_RATE,
 };
 pub use ps::{ParameterServer, PsCollective, PsWorker, WorkerHandle};
 pub use ring::{RingAllReduce, RingWorker};

@@ -37,11 +37,56 @@
 //!   degenerates to its flat model exactly, and with real section sizes
 //!   the comm stays hidden behind compute until the tail.
 //!
-//! Serial codecs (`threads == 1`) cannot overlap: the legacy encoder
-//! advances one RNG across buckets in order and cannot start
-//! mid-gradient. The trainer therefore degenerates `--overlap` to the
-//! flat path at `threads == 1` (trivially bit-identical), and
-//! [`OverlapEncoder::new`] rejects serial specs outright.
+//! # Streaming mode (`--stream-sections`)
+//!
+//! [`OverlapEncoder::encode_streamed`] pushes each section's encoded
+//! message into the collective the moment it is staged, instead of (only)
+//! assembling one flat message. On the wire a streamed section is a
+//! topology-agnostic **section frame** — the versioned
+//! [`super::shard`] frame with `kind = `[`FrameKind::Section`]
+//! [`super::shard::FrameKind::Section`], whose u16 slot carries the
+//! *section index* and whose payload is:
+//!
+//! ```text
+//! magic u32 | version u8 | kind u8 (=2) | section u16 | sender u16 |
+//! round u64 | payload_len u32 | payload:
+//!   ready_stamp  f64 LE   sim seconds since the round's backward began
+//!   message      [u8]     one standalone codec message holding the
+//!                         section's elements (or a bucket-aligned slice
+//!                         of it: shard / ring-chunk intersections)
+//! ```
+//!
+//! Sections hit the wire in *readiness order* — descending section index,
+//! because backward produces gradients in reverse layer order — and the
+//! in-band stamp is what lets the receiving coordinator replay the
+//! pipeline recurrence `start_i = max(ready_i, link_free)` with exact
+//! per-frame byte accounting (the `*_streamed_time` models below are the
+//! same recurrence in closed form). PS and sharded-PS accumulate section
+//! frames in worker order per section, so their means stay bit-identical
+//! to the flat overlap path; hier streams hop-0 chunk slices up the
+//! intra-group ring (and whole sections up the leader star when groups
+//! are singletons), reassembling flat chunk messages at the receiver
+//! ([`crate::codec::concat_messages_into`]), so it is bit-identical too.
+//!
+//! **Ring equivalence contract.** The streamed ring runs one
+//! reduce-scatter/all-gather per section with one requantization-EF site
+//! per (hop, section); its chunk grid differs from the flat ring's, so
+//! streamed ring bytes *cannot* be bit-identical to the flat exchange.
+//! The contract is instead: streamed ≡ serial replay of the same section
+//! schedule, at any thread count — the wire bytes are a pure function of
+//! the (deterministic, descending) section schedule, independent of
+//! thread count, pool mode, and the readiness stamps. Tests drive the
+//! same schedule through serial (`threads = 1`) and parallel encoders and
+//! assert identical means and parameters.
+//!
+//! Serial codecs (`threads == 1`) overlap too: the encoder's per-bucket
+//! RNG streams are start-anywhere (`Rng::stream(round_key, bucket)`), so
+//! the driver thread simply encodes each staged section inline as
+//! backward reports it. Serial and parallel overlap emit identical
+//! bytes; they differ from the *legacy* serial flat encoder (one RNG
+//! advanced across buckets), which cannot start mid-gradient — the same
+//! split that already distinguishes `GradCodec`'s serial and parallel
+//! paths.
 
 use std::ops::Range;
 
@@ -164,6 +209,107 @@ pub fn sharded_overlap_time(
 }
 
 // --------------------------------------------------------------------
+// Closed-form streamed time models
+// --------------------------------------------------------------------
+//
+// The `*_streamed_time` models are the measured counterpart of the
+// `*_overlap_time` family: they take the *actual per-section frame
+// bytes* the streaming exchange puts on the wire (section frame header +
+// readiness stamp + the section's codec message, in send order) and
+// replay the exact recurrence the coordinator computes from the in-band
+// stamps, so simulator and model agree to < 1% by construction.
+
+/// Streamed parameter-server round: every worker's section frames
+/// pipeline behind compute on its uplink (`end_i = max(end_{i-1},
+/// ready_i) + transfer(frame_i)`, sections in send order), the mean
+/// broadcast is the exposed tail. `ready_at`/`frame_bytes` are per
+/// section in send (descending-index) order.
+pub fn ps_streamed_time(
+    link: &Link,
+    ready_at: &[f64],
+    frame_bytes: &[usize],
+    down_bytes: usize,
+) -> f64 {
+    let comm: Vec<f64> = frame_bytes.iter().map(|&b| link.transfer_time(b)).collect();
+    overlap_round_time(ready_at, &comm, link.transfer_time(down_bytes))
+}
+
+/// Streamed sharded-PS round: shard `s` receives each worker's
+/// per-section chunk frames (`frame_bytes[s]`, send order) on its own
+/// star, then broadcasts its mean frame (`down_bytes[s]`); the round
+/// waits for the slowest shard.
+pub fn sharded_streamed_time(
+    link: &Link,
+    ready_at: &[f64],
+    frame_bytes: &[Vec<usize>],
+    down_bytes: &[usize],
+) -> f64 {
+    assert_eq!(frame_bytes.len(), down_bytes.len(), "one downlink per shard");
+    frame_bytes
+        .iter()
+        .zip(down_bytes)
+        .map(|(fb, &db)| {
+            let comm: Vec<f64> = fb.iter().map(|&b| link.transfer_time(b)).collect();
+            overlap_round_time(ready_at, &comm, link.transfer_time(db))
+        })
+        .fold(0.0, f64::max)
+}
+
+/// Streamed hierarchical round. With member groups (`m = l/groups > 1`)
+/// the readiness-gated leg is hop 0 of the intra reduce-scatter: each
+/// worker streams per-section slices of its own chunk (`frame_bytes`,
+/// send order), then the remaining `m − 2` hops + gather ride flat chunk
+/// messages (`≈ q_bytes/m` each), the leader star moves `q_bytes` up and
+/// `fp_bytes` down, and the groups multicast `fp_bytes`. With singleton
+/// groups (`m == 1`) the leader star itself is the streamed leg.
+pub fn hier_streamed_time(
+    links: &LinkMap,
+    l: usize,
+    groups: usize,
+    ready_at: &[f64],
+    frame_bytes: &[usize],
+    q_bytes: usize,
+    fp_bytes: usize,
+) -> f64 {
+    assert!(l > 0 && groups > 0 && l % groups == 0);
+    let m = l / groups;
+    if l == 1 {
+        return 0.0;
+    }
+    let leg = if m > 1 { &links.intra } else { &links.inter };
+    let comm: Vec<f64> = frame_bytes.iter().map(|&b| leg.transfer_time(b)).collect();
+    let mut t = overlap_round_time(ready_at, &comm, 0.0);
+    if m > 1 {
+        // m−2 remaining reduce-scatter hops + the gather, one chunk each
+        let chunk = q_bytes as f64 / m as f64;
+        t += (m - 1) as f64
+            * (links.intra.latency_s + chunk * 8.0 / links.intra.bandwidth_bps);
+        if groups > 1 {
+            t += links.inter.transfer_time(q_bytes);
+        }
+    }
+    if groups > 1 {
+        t += links.inter.transfer_time(fp_bytes);
+    }
+    if m > 1 {
+        t += links.intra.transfer_time(fp_bytes);
+    }
+    t
+}
+
+/// Streamed ring round: one reduce-scatter/all-gather per section, run
+/// in send order, each gated on its readiness stamp
+/// (`section_bytes` are the per-section encoded wire shares).
+pub fn ring_streamed_time(
+    link: &Link,
+    n: usize,
+    ready_at: &[f64],
+    section_bytes: &[usize],
+) -> f64 {
+    ring_overlap_time(link, n, ready_at, section_bytes)
+}
+
+// --------------------------------------------------------------------
 // Section bucket map
 // --------------------------------------------------------------------
 
@@ -257,6 +403,24 @@ impl SectionMap {
         &self.sections
     }
 
+    /// Deterministic per-section readiness schedule for the streaming
+    /// exchange, indexed by section id: backward produces elements in
+    /// reverse order at `rate` elements per simulated second, so section
+    /// `i` is complete — every element at or above its first owned
+    /// element produced — after `(total − elems[i].start) / rate`
+    /// seconds. Strictly decreasing in `i` while sections are non-empty,
+    /// matching the descending send order.
+    pub fn ready_schedule(&self, rate_elems_per_s: f64) -> Vec<f64> {
+        assert!(
+            rate_elems_per_s.is_finite() && rate_elems_per_s > 0.0,
+            "backward rate must be positive"
+        );
+        self.sections
+            .iter()
+            .map(|s| (self.total - s.elems.start) as f64 / rate_elems_per_s)
+            .collect()
+    }
+
     pub fn num_sections(&self) -> usize {
         self.sections.len()
     }
@@ -286,9 +450,19 @@ struct SectionArena {
     qb: QuantizedBucket,
 }
 
-/// The overlap driver: encodes sections on the worker pool while
-/// backward produces the rest of the gradient, then assembles the one
-/// flat wire message the topology exchange expects.
+/// Default simulated backward rate (elements per simulated second) the
+/// trainer feeds [`SectionMap::ready_schedule`] when streaming: the
+/// stamp source for the section frames' readiness times. The value only
+/// shapes the simulated compute/comm balance — correctness (bit
+/// identity, schedule determinism) is independent of it.
+pub const SIM_BACKWARD_RATE: f64 = 25.0e6;
+
+/// The overlap driver: encodes sections on the worker pool (or inline on
+/// the driver thread for serial specs) while backward produces the rest
+/// of the gradient, then assembles the one flat wire message the
+/// topology exchange expects — and, in streaming mode, pushes every
+/// section's standalone message into the collective the moment its
+/// encode completes.
 pub struct OverlapEncoder {
     map: SectionMap,
     bucketq: BucketQuantizer,
@@ -299,15 +473,23 @@ pub struct OverlapEncoder {
     /// `Some` = pooled section tasks (default); `None` = the legacy
     /// scoped-thread baseline (`--pool false`), one spawn per section.
     pool: Option<PoolHandle>,
+    /// `threads == 1`: encode staged sections inline on the driver
+    /// thread — same per-bucket RNG streams, same bytes, no spawns.
+    serial: bool,
     arenas: Vec<SectionArena>,
+    /// Per-section standalone message buffers (streaming mode), reused
+    /// across rounds.
+    msgs: Vec<Vec<u8>>,
     section_bytes: Vec<usize>,
 }
 
 impl OverlapEncoder {
-    /// Build the driver for a parallel quantizing spec. Rejects FP
-    /// (no bucket grid to pipeline) and serial (`threads == 1`) specs —
-    /// the serial encoder's single RNG stream advances across buckets in
-    /// order and cannot start mid-gradient.
+    /// Build the driver for a quantizing spec. Rejects FP (no bucket
+    /// grid to pipeline). Serial specs (`threads == 1`) encode staged
+    /// sections inline on the driver thread: the per-bucket RNG streams
+    /// are start-anywhere, so serial overlap emits the same bytes as the
+    /// parallel overlap/flat-parallel encode (*not* the legacy serial
+    /// flat encoder, whose single RNG stream cannot start mid-gradient).
     pub fn new(spec: &WireSpec, map: SectionMap) -> Result<OverlapEncoder> {
         let quantizer = quant::from_name(&spec.method)?;
         let levels = quantizer.num_levels();
@@ -315,13 +497,6 @@ impl OverlapEncoder {
             return Err(Error::InvalidArg(
                 "overlap needs a quantizing method; fp gradients have no bucket \
                  grid to pipeline (disable overlap or pick a quantized scheme)"
-                    .into(),
-            ));
-        }
-        if spec.threads == 1 {
-            return Err(Error::InvalidArg(
-                "overlap requires the parallel codec (threads != 1); the serial \
-                 encoder cannot start mid-gradient"
                     .into(),
             ));
         }
@@ -335,10 +510,15 @@ impl OverlapEncoder {
             Some(c) => BucketQuantizer::with_clip(spec.bucket_size, c),
             None => BucketQuantizer::new(spec.bucket_size),
         };
-        let pool = match &spec.pool {
-            PoolMode::Pooled => Some(PoolHandle::new(spec.threads)),
-            PoolMode::Shared(h) => Some(h.clone()),
-            PoolMode::Scoped => None,
+        let serial = spec.threads == 1;
+        let pool = if serial {
+            None
+        } else {
+            match &spec.pool {
+                PoolMode::Pooled => Some(PoolHandle::new(spec.threads)),
+                PoolMode::Shared(h) => Some(h.clone()),
+                PoolMode::Scoped => None,
+            }
         };
         Ok(OverlapEncoder {
             map,
@@ -348,7 +528,9 @@ impl OverlapEncoder {
             packing: spec.packing,
             levels,
             pool,
+            serial,
             arenas: Vec::new(),
+            msgs: Vec::new(),
             section_bytes: Vec::new(),
         })
     }
@@ -404,12 +586,51 @@ impl OverlapEncoder {
         let bq = &self.bucketq;
         let q = self.quantizer.as_ref();
         let mut loss = 0.0f32;
-        match &self.pool {
-            Some(pool) => pool
-                .scope(|sc| {
+        if self.serial {
+            // Start-anywhere serial overlap: encode each staged section
+            // inline on the driver thread — per-bucket RNG streams make
+            // the bytes identical to the pooled dispatch.
+            let mut next = nsec;
+            let mut on_ready = |frontier: usize, g: &[f32]| {
+                debug_assert_eq!(g.len(), n, "gradient length");
+                while next > 0 && map.sections[next - 1].elems.start >= frontier {
+                    next -= 1;
+                    let s = &map.sections[next];
+                    let a = &mut arenas[next];
+                    stage(a, g, memory, &s.elems);
+                    encode_section(bq, q, round_key, s.buckets.clone(), s.elems.start, enc, a);
+                }
+            };
+            loss = backward(&mut on_ready);
+            debug_assert_eq!(next, 0, "backward must report frontier 0");
+        } else {
+            match &self.pool {
+                Some(pool) => pool
+                    .scope(|sc| {
+                        let mut slots: Vec<Option<&mut SectionArena>> =
+                            arenas.iter_mut().map(Some).collect();
+                        // Sections ready so far form a suffix [next, nsec).
+                        let mut next = nsec;
+                        let mut on_ready = |frontier: usize, g: &[f32]| {
+                            debug_assert_eq!(g.len(), n, "gradient length");
+                            while next > 0 && map.sections[next - 1].elems.start >= frontier {
+                                next -= 1;
+                                let s = &map.sections[next];
+                                let a = slots[next].take().expect("section dispatched once");
+                                stage(a, g, memory, &s.elems);
+                                let (buckets, e0) = (s.buckets.clone(), s.elems.start);
+                                sc.spawn(move || {
+                                    encode_section(bq, q, round_key, buckets, e0, enc, a)
+                                });
+                            }
+                        };
+                        loss = backward(&mut on_ready);
+                        debug_assert_eq!(next, 0, "backward must report frontier 0");
+                    })
+                    .unwrap_or_else(|e| panic!("overlapped encode failed: {e}")),
+                None => std::thread::scope(|scope| {
                     let mut slots: Vec<Option<&mut SectionArena>> =
                         arenas.iter_mut().map(Some).collect();
-                    // Sections ready so far form a suffix [next, nsec).
                     let mut next = nsec;
                     let mut on_ready = |frontier: usize, g: &[f32]| {
                         debug_assert_eq!(g.len(), n, "gradient length");
@@ -419,35 +640,15 @@ impl OverlapEncoder {
                             let a = slots[next].take().expect("section dispatched once");
                             stage(a, g, memory, &s.elems);
                             let (buckets, e0) = (s.buckets.clone(), s.elems.start);
-                            sc.spawn(move || {
+                            scope.spawn(move || {
                                 encode_section(bq, q, round_key, buckets, e0, enc, a)
                             });
                         }
                     };
                     loss = backward(&mut on_ready);
                     debug_assert_eq!(next, 0, "backward must report frontier 0");
-                })
-                .unwrap_or_else(|e| panic!("overlapped encode failed: {e}")),
-            None => std::thread::scope(|scope| {
-                let mut slots: Vec<Option<&mut SectionArena>> =
-                    arenas.iter_mut().map(Some).collect();
-                let mut next = nsec;
-                let mut on_ready = |frontier: usize, g: &[f32]| {
-                    debug_assert_eq!(g.len(), n, "gradient length");
-                    while next > 0 && map.sections[next - 1].elems.start >= frontier {
-                        next -= 1;
-                        let s = &map.sections[next];
-                        let a = slots[next].take().expect("section dispatched once");
-                        stage(a, g, memory, &s.elems);
-                        let (buckets, e0) = (s.buckets.clone(), s.elems.start);
-                        scope.spawn(move || {
-                            encode_section(bq, q, round_key, buckets, e0, enc, a)
-                        });
-                    }
-                };
-                loss = backward(&mut on_ready);
-                debug_assert_eq!(next, 0, "backward must report frontier 0");
-            }),
+                }),
+            }
         }
         // Assemble: one header, then every section's segment in ascending
         // bucket order — the exact flat parallel wire layout.
@@ -466,6 +667,239 @@ impl OverlapEncoder {
             out.extend_from_slice(&a.seg);
         }
         loss
+    }
+
+    /// Drive one *streamed* backward+encode: like
+    /// [`encode_overlapped`](Self::encode_overlapped), but every
+    /// section's encoded payload is additionally framed as a standalone
+    /// codec message and handed to `sink(section, message, ready_s)` in
+    /// strict readiness order (descending section index) the moment its
+    /// encode completes — the trainer's sink pushes it into the
+    /// collective as a section frame
+    /// ([`WorkerExchange::push_section`](super::collective::WorkerExchange::push_section)).
+    /// `ready_at[i]` is section `i`'s deterministic readiness stamp
+    /// ([`SectionMap::ready_schedule`]); it rides in-band so the
+    /// coordinator can replay the pipeline recurrence. The flat message
+    /// is still assembled into `out` (the caller's error-feedback settle
+    /// decodes its own bytes), and the per-section messages concatenate
+    /// back to exactly those flat bytes
+    /// ([`crate::codec::concat_messages_into`]).
+    ///
+    /// The sink bytes are a pure function of the section schedule and
+    /// the RNG discipline — identical across thread counts, pool modes
+    /// and stamp values. A sink error stops further pushes and is
+    /// returned after the round's encodes drain.
+    #[allow(clippy::too_many_arguments)]
+    pub fn encode_streamed(
+        &mut self,
+        memory: Option<&[f32]>,
+        rng: &mut Rng,
+        out: &mut Vec<u8>,
+        ready_at: &[f64],
+        sink: &mut dyn FnMut(usize, &[u8], f64) -> Result<()>,
+        backward: impl FnOnce(&mut dyn FnMut(usize, &[f32])) -> f32,
+    ) -> Result<f32> {
+        let n = self.map.total;
+        let nsec = self.map.sections.len();
+        if ready_at.len() != nsec {
+            return Err(Error::InvalidArg(format!(
+                "ready schedule has {} entries for {nsec} sections",
+                ready_at.len()
+            )));
+        }
+        if let Some(m) = memory {
+            assert_eq!(m.len(), n, "EF residual length");
+        }
+        let round_key = rng.next_u64();
+        let enc = BucketEncoder::new(self.levels, self.packing);
+        while self.arenas.len() < nsec {
+            self.arenas.push(SectionArena::default());
+        }
+        while self.msgs.len() < nsec {
+            self.msgs.push(Vec::new());
+        }
+        let arenas = &mut self.arenas[..nsec];
+        let msgs = &mut self.msgs[..nsec];
+        let map = &self.map;
+        let bq = &self.bucketq;
+        let q = self.quantizer.as_ref();
+        let (levels, packing, d) = (self.levels, self.packing, self.bucketq.bucket_size);
+        let scheme = self.scheme.as_str();
+        let mut sink_err: Option<Error> = None;
+        let mut loss = 0.0f32;
+        if self.serial {
+            // Inline start-anywhere encode: stage, encode and push each
+            // section on the driver thread in readiness order.
+            let mut next = nsec;
+            let mut on_ready = |frontier: usize, g: &[f32]| {
+                debug_assert_eq!(g.len(), n, "gradient length");
+                while next > 0 && map.sections[next - 1].elems.start >= frontier {
+                    next -= 1;
+                    let s = &map.sections[next];
+                    let a = &mut arenas[next];
+                    stage(a, g, memory, &s.elems);
+                    encode_section(bq, q, round_key, s.buckets.clone(), s.elems.start, enc, a);
+                    let m = &mut msgs[next];
+                    m.clear();
+                    codec::encode_quantized_header_into(
+                        levels,
+                        scheme,
+                        packing,
+                        s.elems.len(),
+                        d,
+                        m,
+                    );
+                    m.extend_from_slice(&a.seg);
+                    if sink_err.is_none() {
+                        if let Err(e) = sink(next, m, ready_at[next]) {
+                            sink_err = Some(e);
+                        }
+                    }
+                }
+            };
+            loss = backward(&mut on_ready);
+            debug_assert_eq!(next, 0, "backward must report frontier 0");
+        } else {
+            // Pooled/scoped dispatch with a completion channel: encode
+            // tasks report back, the driver pushes completed sections in
+            // strict descending order while backward keeps running, and
+            // drains the rest after the join.
+            let (tx, rx) = std::sync::mpsc::channel::<(usize, Vec<u8>)>();
+            let mut pending: Vec<Option<Vec<u8>>> = (0..nsec).map(|_| None).collect();
+            let mut next_sink = nsec;
+            {
+                let pending = &mut pending;
+                let next_sink = &mut next_sink;
+                let sink_err = &mut sink_err;
+                match &self.pool {
+                    Some(pool) => pool
+                        .scope(|sc| {
+                            let mut slots: Vec<Option<&mut SectionArena>> =
+                                arenas.iter_mut().map(Some).collect();
+                            let mut next = nsec;
+                            let mut on_ready = |frontier: usize, g: &[f32]| {
+                                debug_assert_eq!(g.len(), n, "gradient length");
+                                while next > 0 && map.sections[next - 1].elems.start >= frontier {
+                                    next -= 1;
+                                    let idx = next;
+                                    let s = &map.sections[idx];
+                                    let a = slots[idx].take().expect("section dispatched once");
+                                    stage(a, g, memory, &s.elems);
+                                    let mut buf = std::mem::take(&mut msgs[idx]);
+                                    let (buckets, e0, len) =
+                                        (s.buckets.clone(), s.elems.start, s.elems.len());
+                                    let tx = tx.clone();
+                                    sc.spawn(move || {
+                                        encode_section(bq, q, round_key, buckets, e0, enc, a);
+                                        buf.clear();
+                                        codec::encode_quantized_header_into(
+                                            levels, scheme, packing, len, d, &mut buf,
+                                        );
+                                        buf.extend_from_slice(&a.seg);
+                                        let _ = tx.send((idx, buf));
+                                    });
+                                    while let Ok((i, b)) = rx.try_recv() {
+                                        pending[i] = Some(b);
+                                    }
+                                    while *next_sink > 0 {
+                                        let i = *next_sink - 1;
+                                        let Some(b) = pending[i].take() else { break };
+                                        *next_sink = i;
+                                        if sink_err.is_none() {
+                                            if let Err(e) = sink(i, &b, ready_at[i]) {
+                                                *sink_err = Some(e);
+                                            }
+                                        }
+                                        msgs[i] = b;
+                                    }
+                                }
+                            };
+                            loss = backward(&mut on_ready);
+                            debug_assert_eq!(next, 0, "backward must report frontier 0");
+                        })
+                        .unwrap_or_else(|e| panic!("streamed encode failed: {e}")),
+                    None => std::thread::scope(|scope| {
+                        let mut slots: Vec<Option<&mut SectionArena>> =
+                            arenas.iter_mut().map(Some).collect();
+                        let mut next = nsec;
+                        let mut on_ready = |frontier: usize, g: &[f32]| {
+                            debug_assert_eq!(g.len(), n, "gradient length");
+                            while next > 0 && map.sections[next - 1].elems.start >= frontier {
+                                next -= 1;
+                                let idx = next;
+                                let s = &map.sections[idx];
+                                let a = slots[idx].take().expect("section dispatched once");
+                                stage(a, g, memory, &s.elems);
+                                let mut buf = std::mem::take(&mut msgs[idx]);
+                                let (buckets, e0, len) =
+                                    (s.buckets.clone(), s.elems.start, s.elems.len());
+                                let tx = tx.clone();
+                                scope.spawn(move || {
+                                    encode_section(bq, q, round_key, buckets, e0, enc, a);
+                                    buf.clear();
+                                    codec::encode_quantized_header_into(
+                                        levels, scheme, packing, len, d, &mut buf,
+                                    );
+                                    buf.extend_from_slice(&a.seg);
+                                    let _ = tx.send((idx, buf));
+                                });
+                                while let Ok((i, b)) = rx.try_recv() {
+                                    pending[i] = Some(b);
+                                }
+                                while *next_sink > 0 {
+                                    let i = *next_sink - 1;
+                                    let Some(b) = pending[i].take() else { break };
+                                    *next_sink = i;
+                                    if sink_err.is_none() {
+                                        if let Err(e) = sink(i, &b, ready_at[i]) {
+                                            *sink_err = Some(e);
+                                        }
+                                    }
+                                    msgs[i] = b;
+                                }
+                            }
+                        };
+                        loss = backward(&mut on_ready);
+                        debug_assert_eq!(next, 0, "backward must report frontier 0");
+                    }),
+                }
+            }
+            // Every task has joined: drain the channel and push the
+            // remaining sections in order.
+            while let Ok((i, b)) = rx.try_recv() {
+                pending[i] = Some(b);
+            }
+            while next_sink > 0 {
+                let i = next_sink - 1;
+                let b = pending[i].take().expect("all section encodes completed");
+                next_sink = i;
+                if sink_err.is_none() {
+                    if let Err(e) = sink(i, &b, ready_at[i]) {
+                        sink_err = Some(e);
+                    }
+                }
+                msgs[i] = b;
+            }
+        }
+        // Assemble the flat message (EF settle / self-decode path).
+        out.clear();
+        codec::encode_quantized_header_into(
+            self.levels,
+            &self.scheme,
+            self.packing,
+            n,
+            self.bucketq.bucket_size,
+            out,
+        );
+        self.section_bytes.clear();
+        for a in &self.arenas[..nsec] {
+            self.section_bytes.push(a.seg.len());
+            out.extend_from_slice(&a.seg);
+        }
+        match sink_err {
+            Some(e) => Err(e),
+            None => Ok(loss),
+        }
     }
 }
 
@@ -649,15 +1083,199 @@ mod tests {
     }
 
     #[test]
-    fn overlap_encoder_rejects_fp_and_serial_specs() {
+    fn overlap_encoder_rejects_fp_and_mismatched_specs() {
         let sp = spans(&[128, 128]);
         let map = SectionMap::new(&sp, 2, 64).unwrap();
         assert!(OverlapEncoder::new(&WireSpec::new("fp", 64).with_threads(2), map.clone()).is_err());
-        assert!(OverlapEncoder::new(&WireSpec::new("terngrad", 64), map.clone()).is_err());
+        // serial specs are accepted: the start-anywhere encoder runs inline
+        assert!(OverlapEncoder::new(&WireSpec::new("terngrad", 64), map.clone()).is_ok());
         // bucket-size mismatch between map and spec
         assert!(
             OverlapEncoder::new(&WireSpec::new("terngrad", 128).with_threads(2), map).is_err()
         );
+    }
+
+    /// Satellite contract: serial (`threads = 1`) overlap encodes staged
+    /// sections inline and emits byte-identical wire bytes to the
+    /// parallel overlap (and therefore to the flat parallel encode) —
+    /// with and without an EF residual.
+    #[test]
+    fn serial_overlap_matches_parallel_bytes() {
+        let sp = spans(&[500, 300, 200, 200]);
+        let n = 1200;
+        let g: Vec<f32> = (0..n).map(|i| ((i * 17) % 101) as f32 / 101.0 - 0.5).collect();
+        let mem: Vec<f32> = (0..n).map(|i| ((i * 5) % 23) as f32 / 230.0).collect();
+        for memory in [None, Some(&mem[..])] {
+            let drive = |threads: usize| {
+                let spec = WireSpec::new("orq-5", 64).with_threads(threads);
+                let map = SectionMap::new(&sp, 3, 64).unwrap();
+                let mut ov = OverlapEncoder::new(&spec, map).unwrap();
+                let mut rng = Rng::stream(11, 3);
+                let mut msg = Vec::new();
+                ov.encode_overlapped(memory, &mut rng, &mut msg, |cb| {
+                    for l in (0..sp.len()).rev() {
+                        cb(sp[l].start, &g);
+                    }
+                    0.0
+                });
+                msg
+            };
+            let serial = drive(1);
+            let parallel = drive(2);
+            assert_eq!(serial, parallel, "ef={}", memory.is_some());
+        }
+    }
+
+    /// Streamed encode pushes every section in strict descending order
+    /// with its schedule stamp, the pushed standalone messages
+    /// concatenate back to exactly the assembled flat message, and the
+    /// sink bytes are identical across thread counts and pool modes.
+    #[test]
+    fn streamed_sink_order_stamps_and_concat() {
+        use crate::comm::collective::PoolMode;
+        let sp = spans(&[700, 500, 300, 100]);
+        let n = 1600;
+        let g: Vec<f32> = (0..n).map(|i| ((i * 31) % 113) as f32 / 113.0 - 0.5).collect();
+        let drive = |spec: &WireSpec| {
+            let map = SectionMap::new(&sp, 3, 64).unwrap();
+            let ready = map.ready_schedule(1.0e6);
+            let mut ov = OverlapEncoder::new(spec, map).unwrap();
+            let mut rng = Rng::stream(21, 1);
+            let mut flat = Vec::new();
+            let mut pushed: Vec<(usize, Vec<u8>, f64)> = Vec::new();
+            let loss = ov
+                .encode_streamed(
+                    None,
+                    &mut rng,
+                    &mut flat,
+                    &ready,
+                    &mut |sec, msg, r| {
+                        pushed.push((sec, msg.to_vec(), r));
+                        Ok(())
+                    },
+                    |cb| {
+                        for l in (0..sp.len()).rev() {
+                            cb(sp[l].start, &g);
+                        }
+                        2.5
+                    },
+                )
+                .unwrap();
+            assert_eq!(loss, 2.5);
+            (flat, pushed, ready)
+        };
+        let (flat, pushed, ready) = drive(&WireSpec::new("orq-5", 64).with_threads(2));
+        // strict descending section order, stamps straight from the schedule
+        assert_eq!(pushed.len(), 3);
+        for (k, (sec, _, r)) in pushed.iter().enumerate() {
+            assert_eq!(*sec, 2 - k, "descending send order");
+            assert_eq!(*r, ready[*sec], "schedule stamp rides with the push");
+        }
+        // ascending-order concat of the pushed messages = the flat bytes
+        let ascending: Vec<&[u8]> = pushed.iter().rev().map(|(_, m, _)| m.as_slice()).collect();
+        let mut back = Vec::new();
+        codec::concat_messages_into(&ascending, &mut back).unwrap();
+        assert_eq!(back, flat, "sections reassemble to the flat message");
+        // identical sink bytes at every thread count and pool mode
+        for spec in [
+            WireSpec::new("orq-5", 64),
+            WireSpec::new("orq-5", 64).with_threads(4),
+            WireSpec::new("orq-5", 64).with_threads(2).with_pool_mode(PoolMode::Scoped),
+        ] {
+            let (f2, p2, _) = drive(&spec);
+            assert_eq!(f2, flat, "flat bytes invariant (threads={})", spec.threads);
+            assert_eq!(p2, pushed, "sink bytes invariant (threads={})", spec.threads);
+        }
+        // a lying schedule length is rejected
+        let map = SectionMap::new(&sp, 3, 64).unwrap();
+        let mut ov = OverlapEncoder::new(&WireSpec::new("orq-5", 64).with_threads(2), map).unwrap();
+        let mut rng = Rng::stream(21, 1);
+        let mut out = Vec::new();
+        let err = ov.encode_streamed(None, &mut rng, &mut out, &[0.0], &mut |_, _, _| Ok(()), |cb| {
+            cb(0, &g);
+            0.0
+        });
+        assert!(err.is_err(), "schedule/section mismatch must be rejected");
+    }
+
+    /// A sink error (dead peer) surfaces as `Err` after the round's
+    /// encodes drain — no panic, no hang.
+    #[test]
+    fn streamed_sink_error_propagates() {
+        let sp = spans(&[600, 600]);
+        let g = vec![0.25f32; 1200];
+        let map = SectionMap::new(&sp, 2, 64).unwrap();
+        let ready = map.ready_schedule(1.0e6);
+        let mut ov = OverlapEncoder::new(&WireSpec::new("terngrad", 64).with_threads(2), map).unwrap();
+        let mut rng = Rng::stream(5, 5);
+        let mut out = Vec::new();
+        let res = ov.encode_streamed(
+            None,
+            &mut rng,
+            &mut out,
+            &ready,
+            &mut |_, _, _| Err(Error::Comm("peer hung up".into())),
+            |cb| {
+                for l in (0..sp.len()).rev() {
+                    cb(sp[l].start, &g);
+                }
+                0.0
+            },
+        );
+        assert!(matches!(res, Err(Error::Comm(_))));
+    }
+
+    #[test]
+    fn ready_schedule_matches_reverse_backward() {
+        let sp = spans(&[400, 300, 200, 100]);
+        let map = SectionMap::new(&sp, 4, 50).unwrap();
+        let ready = map.ready_schedule(1000.0);
+        assert_eq!(ready.len(), 4);
+        // the last section (produced first) is ready soonest; section 0
+        // waits for the whole 1000-element backward
+        assert_eq!(ready[0], 1.0);
+        for w in ready.windows(2) {
+            assert!(w[0] >= w[1], "descending readiness with section index");
+        }
+        // section 3 owns elements from its bucket-aligned start
+        let s3 = &map.sections()[3];
+        assert_eq!(ready[3], (map.total() - s3.elems.start) as f64 / 1000.0);
+    }
+
+    #[test]
+    fn streamed_time_models_degenerate_and_gate_on_readiness() {
+        let link = Link::new(1e9, 1e-4);
+        // all ready at 0: ps_streamed = serialized uplinks + tail, which
+        // is the overlap model over the same byte vector
+        let frames = [900usize, 600, 300];
+        let ready0 = [0.0; 3];
+        let ps = ps_streamed_time(&link, &ready0, &frames, 4000);
+        assert!((ps - ps_overlap_time(&link, &ready0, &frames, 4000)).abs() < 1e-15);
+        // compute-bound: with fast links the last-ready section's frame
+        // is the only exposed comm
+        let t = ps_streamed_time(&link, &[1e-3, 2e-3, 3e-3], &frames, 0);
+        let last = 3e-3 + link.transfer_time(frames[2]);
+        assert!((t - last).abs() < 1e-12, "t={t}");
+        // sharded: the slowest shard gates the round
+        let sh = sharded_streamed_time(
+            &link,
+            &[0.0, 0.0],
+            &[vec![100, 100], vec![4000, 4000]],
+            &[100, 4000],
+        );
+        let slow: Vec<f64> = [4000usize, 4000].iter().map(|&b| link.transfer_time(b)).collect();
+        let want = overlap_round_time(&[0.0, 0.0], &slow, link.transfer_time(4000));
+        assert!((sh - want).abs() < 1e-15);
+        // hier m==1: the leader star is the streamed leg; l==1 is free
+        let lm = LinkMap::new(Link::new(100e9, 0.0), Link::new(1e9, 1e-4));
+        assert_eq!(hier_streamed_time(&lm, 1, 1, &[0.0], &[100], 100, 400), 0.0);
+        let h = hier_streamed_time(&lm, 4, 4, &[0.0; 2], &[500, 500], 1000, 4000);
+        let comm: Vec<f64> = [500usize, 500].iter().map(|&b| lm.inter.transfer_time(b)).collect();
+        let want = overlap_round_time(&[0.0; 2], &comm, 0.0) + lm.inter.transfer_time(4000);
+        assert!((h - want).abs() < 1e-15);
+        // ring streamed = ring overlap over the same schedule
+        let r = ring_streamed_time(&link, 4, &[1e-3, 0.0], &[800, 800]);
+        assert!((r - ring_overlap_time(&link, 4, &[1e-3, 0.0], &[800, 800])).abs() < 1e-15);
     }
 
     #[test]

@@ -6,6 +6,15 @@
 //! every worker. Wall-clock never sleeps — the round's *simulated* time is
 //! `max_l(uplink_l) + broadcast` (synchronous SGD critical path).
 //!
+//! In streaming mode ([`ExchangeConfig::with_streaming`]
+//! [`super::collective::ExchangeConfig::with_streaming`]) workers push
+//! one [`FrameKind::Section`] frame per overlap section as backward
+//! stages it; the server reduces the frames incrementally — per section,
+//! in worker order, in f64 — so the mean stays bit-identical to the flat
+//! path, while the simulated uplink runs the pipeline recurrence
+//! `end = max(end, ready) + transfer(frame)` from the frames' in-band
+//! readiness stamps.
+//!
 //! [`ParameterServer`]/[`WorkerHandle`] are the raw channel star;
 //! [`PsCollective`]/[`PsWorker`] wrap them into the topology-agnostic
 //! [`Collective`]/[`WorkerExchange`] interface the trainer runs on.
@@ -14,12 +23,20 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 
 use super::collective::{Collective, CommStats, GradCodec, WireSpec, WorkerExchange};
 use super::link::{Link, LinkMap, TrafficMeter};
+use super::shard::{
+    begin_frame_into, finish_frame, parse_frame, split_section_payload, FrameKind,
+    FRAME_HEADER_BYTES, SECTION_STAMP_BYTES,
+};
 use crate::codec::{self, DecodeScratch};
 use crate::error::{Error, Result};
 use crate::quant::bucket::QuantizedGrad;
 use crate::quant::error_feedback::ErrorFeedback;
 use crate::quant::parallel::BucketPipeline;
 use crate::tensor::rng::Rng;
+
+/// Byte offset of a section frame's inner codec message: frame header,
+/// then the f64 readiness stamp, then the standalone message.
+pub(crate) const SECTION_MSG_OFFSET: usize = FRAME_HEADER_BYTES + SECTION_STAMP_BYTES;
 
 /// Message from a worker: (worker id, encoded gradient bytes).
 type Upload = (usize, Vec<u8>);
@@ -96,6 +113,74 @@ impl ParameterServer {
         Ok(slots.into_iter().map(|s| s.expect("one upload per worker")).collect())
     }
 
+    /// The streamed twin of [`Self::gather`]: collect exactly `nsec`
+    /// section frames from every worker (any cross-worker interleaving;
+    /// each worker's own frames arrive in its send order, which mpsc
+    /// preserves), validating frame kind, round, sender, section bounds,
+    /// stamps and duplicates. Advances simulated time by the slowest
+    /// worker's pipeline recurrence `end = max(end, ready) +
+    /// transfer(frame)` over that worker's frames in arrival order —
+    /// measured from the round's backward start, which is what lets a
+    /// streamed round beat "backward end + flat exchange". Returns the
+    /// raw frames indexed `worker * nsec + section`; the inner codec
+    /// message of each starts at [`SECTION_MSG_OFFSET`].
+    pub(crate) fn gather_sections(&mut self, nsec: usize, round: u64) -> Result<Vec<Vec<u8>>> {
+        let l = self.num_workers();
+        let mut slots: Vec<Option<Vec<u8>>> = (0..l * nsec).map(|_| None).collect();
+        let mut ends = vec![0.0f64; l];
+        for _ in 0..l * nsec {
+            let (id, bytes) = self
+                .uplink_rx
+                .recv()
+                .map_err(|_| Error::Comm("worker channel closed mid-round".into()))?;
+            if id >= l {
+                return Err(Error::Comm(format!("unknown worker id {id}")));
+            }
+            let (sec, ready) = {
+                let f = parse_frame(&bytes)?;
+                if f.kind != FrameKind::Section {
+                    return Err(Error::Comm(format!(
+                        "expected a section frame from worker {id}, got {:?}",
+                        f.kind
+                    )));
+                }
+                if f.round != round {
+                    return Err(Error::Comm(format!(
+                        "section frame for round {} from worker {id}, expected round {round}",
+                        f.round
+                    )));
+                }
+                if f.sender as usize != id {
+                    return Err(Error::Comm(format!(
+                        "frame sender {} does not match channel id {id}",
+                        f.sender
+                    )));
+                }
+                let sec = f.slot as usize;
+                if sec >= nsec {
+                    return Err(Error::Comm(format!(
+                        "section {sec} out of range ({nsec} sections)"
+                    )));
+                }
+                let (ready, _msg) = split_section_payload(f.payload)?;
+                (sec, ready)
+            };
+            if slots[id * nsec + sec].is_some() {
+                return Err(Error::Comm(format!(
+                    "duplicate section {sec} from worker {id}"
+                )));
+            }
+            ends[id] = ends[id].max(ready) + self.link.transfer_time(bytes.len());
+            self.meter.record_up(&self.link, bytes.len());
+            slots[id * nsec + sec] = Some(bytes);
+        }
+        self.sim_time_s += ends.iter().copied().fold(0.0, f64::max);
+        Ok(slots
+            .into_iter()
+            .map(|s| s.expect("one frame per (worker, section)"))
+            .collect())
+    }
+
     /// Broadcast one message to every worker. Advances simulated time by a
     /// single transfer (tree/multicast assumption, same as the paper's
     /// "broadcast" step).
@@ -149,6 +234,11 @@ pub struct PsCollective {
     qg: QuantizedGrad,
     dscratch: DecodeScratch,
     pipeline: Option<BucketPipeline>,
+    /// `Some(nsec)` = streamed rounds: expect `nsec` section frames per
+    /// worker instead of one flat upload.
+    streaming: Option<usize>,
+    /// Round counter, validated against every section frame's round field.
+    round: u64,
 }
 
 impl PsCollective {
@@ -161,6 +251,7 @@ impl PsCollective {
         spec: &WireSpec,
         quantize_downlink: bool,
         error_feedback: bool,
+        streaming: Option<usize>,
     ) -> Result<(PsCollective, Vec<PsWorker>)> {
         if workers == 0 {
             // Same contract as RingAllReduce::new — Err, not the raw
@@ -173,7 +264,12 @@ impl PsCollective {
         let (server, handles) = ParameterServer::new(workers, links.inter);
         let ends = handles
             .into_iter()
-            .map(|handle| PsWorker { handle, scratch: DecodeScratch::default() })
+            .map(|handle| PsWorker {
+                handle,
+                scratch: DecodeScratch::default(),
+                streaming,
+                round: 0,
+            })
             .collect();
         Ok((
             PsCollective {
@@ -190,9 +286,46 @@ impl PsCollective {
                 // Same construction rule as the worker codecs: pooled by
                 // default (spec.pool), scoped as the retained baseline.
                 pipeline: spec.build_pipeline(),
+                streaming,
+                round: 0,
             },
             ends,
         ))
+    }
+
+    /// Reduce one streamed round's section frames: sections ascending,
+    /// workers in id order within each section, summed in f64 — the same
+    /// per-element accumulation order as the flat path, so the mean is
+    /// bit-identical to it. Section lengths come from the frames' own
+    /// codec headers and must agree across workers.
+    fn reduce_sections(&mut self, frames: &[Vec<u8>], l: usize, nsec: usize) -> Result<()> {
+        self.acc.clear();
+        let mut offset = 0usize;
+        for sec in 0..nsec {
+            let mut sec_len: Option<usize> = None;
+            for w in 0..l {
+                let msg = &frames[w * nsec + sec][SECTION_MSG_OFFSET..];
+                codec::decode_flat_into(msg, &mut self.flat, &mut self.dscratch)?;
+                match sec_len {
+                    None => {
+                        sec_len = Some(self.flat.len());
+                        self.acc.resize(offset + self.flat.len(), 0.0);
+                    }
+                    Some(n) if n != self.flat.len() => {
+                        return Err(Error::Shape(format!(
+                            "worker {w} sent {} elements for section {sec}, expected {n}",
+                            self.flat.len()
+                        )))
+                    }
+                    Some(_) => {}
+                }
+                for (a, v) in self.acc[offset..].iter_mut().zip(&self.flat) {
+                    *a += *v as f64;
+                }
+            }
+            offset += sec_len.unwrap_or(0);
+        }
+        Ok(())
     }
 }
 
@@ -202,35 +335,45 @@ impl Collective for PsCollective {
     }
 
     fn round(&mut self, mean_out: &mut Vec<f32>) -> Result<()> {
-        let uploads = self.server.gather()?;
-        match &mut self.pipeline {
-            Some(pipe) => pipe.decode_reduce_into(&uploads, &mut self.acc)?,
+        let l = self.server.num_workers();
+        match self.streaming {
+            Some(nsec) => {
+                let frames = self.server.gather_sections(nsec, self.round)?;
+                self.reduce_sections(&frames, l, nsec)?;
+                self.round += 1;
+            }
             None => {
-                // Serial baseline: decode each upload, add element-wise.
-                self.acc.clear();
-                let mut expect: Option<usize> = None;
-                for u in &uploads {
-                    codec::decode_flat_into(u, &mut self.flat, &mut self.dscratch)?;
-                    match expect {
-                        None => {
-                            expect = Some(self.flat.len());
-                            self.acc.resize(self.flat.len(), 0.0);
+                let uploads = self.server.gather()?;
+                match &mut self.pipeline {
+                    Some(pipe) => pipe.decode_reduce_into(&uploads, &mut self.acc)?,
+                    None => {
+                        // Serial baseline: decode each upload, add element-wise.
+                        self.acc.clear();
+                        let mut expect: Option<usize> = None;
+                        for u in &uploads {
+                            codec::decode_flat_into(u, &mut self.flat, &mut self.dscratch)?;
+                            match expect {
+                                None => {
+                                    expect = Some(self.flat.len());
+                                    self.acc.resize(self.flat.len(), 0.0);
+                                }
+                                Some(n) if n != self.flat.len() => {
+                                    return Err(Error::Shape(format!(
+                                        "worker gradient has {} elements, expected {n}",
+                                        self.flat.len()
+                                    )))
+                                }
+                                Some(_) => {}
+                            }
+                            for (a, v) in self.acc.iter_mut().zip(&self.flat) {
+                                *a += *v as f64;
+                            }
                         }
-                        Some(n) if n != self.flat.len() => {
-                            return Err(Error::Shape(format!(
-                                "worker gradient has {} elements, expected {n}",
-                                self.flat.len()
-                            )))
-                        }
-                        Some(_) => {}
-                    }
-                    for (a, v) in self.acc.iter_mut().zip(&self.flat) {
-                        *a += *v as f64;
                     }
                 }
             }
         }
-        let inv = 1.0 / uploads.len() as f64;
+        let inv = 1.0 / l as f64;
         mean_out.clear();
         mean_out.extend(self.acc.iter().map(|a| (*a * inv) as f32));
         if self.quantize_downlink && !self.codec.is_fp() && !mean_out.is_empty() {
@@ -277,10 +420,14 @@ impl Collective for PsCollective {
 }
 
 /// Worker end of [`PsCollective`]: upload, block for the broadcast,
-/// decode it through a reused scratch.
+/// decode it through a reused scratch. In streaming mode the flat
+/// [`WorkerExchange::exchange`] is refused and uploads go through
+/// [`WorkerExchange::push_section`] as [`FrameKind::Section`] frames.
 pub struct PsWorker {
     handle: WorkerHandle,
     scratch: DecodeScratch,
+    streaming: Option<usize>,
+    round: u64,
 }
 
 impl WorkerExchange for PsWorker {
@@ -289,6 +436,11 @@ impl WorkerExchange for PsWorker {
     }
 
     fn exchange(&mut self, encoded: &mut Vec<u8>, mean_out: &mut Vec<f32>) -> Result<()> {
+        if self.streaming.is_some() {
+            return Err(Error::InvalidArg(
+                "this PS exchange streams sections; use push_section/finish_streamed".into(),
+            ));
+        }
         self.handle.send_grad(std::mem::take(encoded))?;
         let bcast = self.handle.recv_broadcast()?;
         codec::decode_flat_into(&bcast, mean_out, &mut self.scratch)?;
@@ -296,6 +448,49 @@ impl WorkerExchange for PsWorker {
         // buffer (the upload Vec was handed to the channel above) — keeps
         // the PS round free of full-gradient reallocations, like the ring.
         *encoded = bcast;
+        Ok(())
+    }
+
+    fn push_section(&mut self, section: usize, payload: &[u8], ready_s: f64) -> Result<()> {
+        let Some(nsec) = self.streaming else {
+            return Err(Error::InvalidArg(
+                "this PS exchange was not built for streaming".into(),
+            ));
+        };
+        if section >= nsec {
+            return Err(Error::InvalidArg(format!(
+                "section {section} out of range ({nsec} sections)"
+            )));
+        }
+        if !ready_s.is_finite() || ready_s < 0.0 {
+            return Err(Error::InvalidArg(format!(
+                "readiness stamp must be finite and non-negative, got {ready_s}"
+            )));
+        }
+        let mut buf =
+            Vec::with_capacity(FRAME_HEADER_BYTES + SECTION_STAMP_BYTES + payload.len());
+        begin_frame_into(
+            FrameKind::Section,
+            self.round,
+            section as u16,
+            self.handle.id as u16,
+            &mut buf,
+        );
+        buf.extend_from_slice(&ready_s.to_le_bytes());
+        buf.extend_from_slice(payload);
+        finish_frame(&mut buf);
+        self.handle.send_grad(buf)
+    }
+
+    fn finish_streamed(&mut self, mean_out: &mut Vec<f32>) -> Result<()> {
+        if self.streaming.is_none() {
+            return Err(Error::InvalidArg(
+                "this PS exchange was not built for streaming".into(),
+            ));
+        }
+        let bcast = self.handle.recv_broadcast()?;
+        codec::decode_flat_into(&bcast, mean_out, &mut self.scratch)?;
+        self.round += 1;
         Ok(())
     }
 }
@@ -369,5 +564,66 @@ mod tests {
         let (mut srv, workers) = ParameterServer::new(1, Link::ten_gbps());
         drop(workers);
         assert!(srv.gather().is_err());
+    }
+
+    /// Build a raw section frame: header, f64 readiness stamp, message.
+    fn section_frame(kind: FrameKind, round: u64, sec: u16, sender: u16, ready: f64, msg_len: usize) -> Vec<u8> {
+        let mut payload = ready.to_le_bytes().to_vec();
+        payload.extend(std::iter::repeat(0xA5u8).take(msg_len));
+        let mut out = Vec::new();
+        super::super::shard::encode_frame_into(kind, round, sec, sender, &payload, &mut out);
+        out
+    }
+
+    #[test]
+    fn gather_sections_validates_frames() {
+        // Malformed frames: each case needs a fresh star since the gather
+        // consumes the channel.
+        let bad = [
+            // Wrong kind.
+            section_frame(FrameKind::Upload, 0, 0, 0, 0.0, 4),
+            // Wrong round.
+            section_frame(FrameKind::Section, 7, 0, 0, 0.0, 4),
+            // Sender does not match channel id.
+            section_frame(FrameKind::Section, 0, 0, 1, 0.0, 4),
+            // Section out of range (1 section expected).
+            section_frame(FrameKind::Section, 0, 1, 0, 0.0, 4),
+            // Non-finite readiness stamp.
+            section_frame(FrameKind::Section, 0, 0, 0, f64::NAN, 4),
+        ];
+        for frame in bad {
+            let (mut srv, workers) = ParameterServer::new(1, Link::ten_gbps());
+            workers[0].send_grad(frame).unwrap();
+            assert!(srv.gather_sections(1, 0).is_err());
+        }
+
+        // Duplicate section.
+        let (mut srv, workers) = ParameterServer::new(1, Link::ten_gbps());
+        workers[0].send_grad(section_frame(FrameKind::Section, 0, 0, 0, 0.0, 4)).unwrap();
+        workers[0].send_grad(section_frame(FrameKind::Section, 0, 0, 0, 0.0, 4)).unwrap();
+        assert!(srv.gather_sections(2, 0).is_err());
+    }
+
+    #[test]
+    fn gather_sections_sim_time_is_pipeline_recurrence() {
+        let link = Link::new(8e6, 0.0); // 1 MB/s
+        let (mut srv, workers) = ParameterServer::new(2, link);
+        // Worker 0 streams two small frames gated on readiness: the second
+        // frame's stamp dominates. Frame bytes = 30 + msg, so msg_len 970
+        // makes each transfer exactly 1 ms.
+        workers[0].send_grad(section_frame(FrameKind::Section, 0, 1, 0, 0.5, 970)).unwrap();
+        workers[0].send_grad(section_frame(FrameKind::Section, 0, 0, 0, 1.0, 970)).unwrap();
+        // Worker 1 is ready immediately but transfer-bound: 0.5 s per frame.
+        workers[1].send_grad(section_frame(FrameKind::Section, 0, 1, 1, 0.0, 499_970)).unwrap();
+        workers[1].send_grad(section_frame(FrameKind::Section, 0, 0, 1, 0.0, 499_970)).unwrap();
+        let frames = srv.gather_sections(2, 0).unwrap();
+        assert_eq!(frames.len(), 4);
+        // Frames come back indexed worker*nsec+section regardless of send
+        // order; the inner message starts at SECTION_MSG_OFFSET.
+        assert_eq!(frames[0].len(), SECTION_MSG_OFFSET + 970);
+        assert_eq!(frames[3].len(), SECTION_MSG_OFFSET + 499_970);
+        // Worker 0: max(0+0, 0.5)+0.001 = 0.501; max(0.501, 1.0)+0.001 = 1.001.
+        // Worker 1: 0.5 + 0.5 = 1.0. Round = slowest worker = 1.001 s.
+        assert!((srv.sim_time_s - 1.001).abs() < 1e-9, "got {}", srv.sim_time_s);
     }
 }

@@ -49,6 +49,25 @@
 //! `2·(L−1)` steps. Workers report per-step byte traces to the
 //! coordinator, which does the max/sum — the coordinator itself moves no
 //! gradient data (there is no server in a ring).
+//!
+//! **Streaming.** With `ExchangeConfig::with_streaming` each staged
+//! overlap section runs its *own* complete reduce-scatter + all-gather
+//! the moment [`WorkerExchange::push_section`] delivers it — sections
+//! execute serially in the deterministic descending send schedule, so
+//! the blocking per-hop recvs stay in lockstep across the ring. The
+//! first hop of every section is a [`FrameKind::Section`]-framed slice
+//! of the section message (the receiver validates round, sender and
+//! section index — a diverged schedule errors instead of deadlocking);
+//! later hops are the usual raw requantized chunks. Every (hop,
+//! section) requantization site keeps its own error-feedback residual.
+//! A streamed ring round is NOT bit-identical to the flat round (each
+//! section is reduced on its own chunk grid with more requantization
+//! sites); its contract is determinism — the streamed mean is a pure
+//! function of the section schedule, identical for any worker thread
+//! count, and `threads == 1` *is* the serial replay of the same
+//! schedule. Simulated time: section i's hops cannot start before the
+//! slowest worker has staged it (`max_w ready`), then the usual
+//! max-transfer-per-step sum over its `2·(L−1)` steps.
 
 use std::ops::Range;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -57,6 +76,8 @@ use super::collective::{
     collect_traces, Collective, CommStats, GradCodec, RoundTrace, WireSpec, WorkerExchange,
 };
 use super::link::{Link, LinkMap, TrafficMeter};
+use super::ps::SECTION_MSG_OFFSET;
+use super::shard::{begin_frame_into, finish_frame, parse_frame, split_section_payload, FrameKind};
 use crate::codec;
 use crate::error::{Error, Result};
 use crate::quant::bucket::QuantizedGrad;
@@ -122,25 +143,47 @@ pub struct RingAllReduce {
     mean_rx: Receiver<Vec<f32>>,
     meter: TrafficMeter,
     sim_time_s: f64,
+    /// `Some(sections)` when the ring was built for section streaming.
+    streaming: Option<usize>,
 }
 
 impl RingAllReduce {
     /// Build the ring: edge `w → (w+1) mod L` for every worker. Ring
     /// edges connect distinct single-worker groups, so the ring uses the
-    /// *inter* link of the per-edge-class map.
+    /// *inter* link of the per-edge-class map. With `streaming =
+    /// Some(sections)` the ends only accept the
+    /// `push_section`/`finish_streamed` protocol (one reduce-scatter +
+    /// all-gather per section, per-(hop, section) EF residuals).
     pub fn new(
         workers: usize,
         links: LinkMap,
         spec: &WireSpec,
         error_feedback: bool,
+        streaming: Option<usize>,
     ) -> Result<(RingAllReduce, Vec<RingWorker>)> {
         let link = links.inter;
         if workers == 0 {
             return Err(Error::InvalidArg("ring needs at least 1 worker".into()));
         }
+        if let Some(nsec) = streaming {
+            if nsec == 0 || nsec > u16::MAX as usize {
+                return Err(Error::InvalidArg(format!(
+                    "ring streaming needs 1..={} sections, got {nsec}",
+                    u16::MAX
+                )));
+            }
+        }
         // Validate the spec up front (quantizer name) before spawning ends.
         let probe = GradCodec::new(spec)?;
-        let hops_ef = if error_feedback && !probe.is_fp() { workers.saturating_sub(1) } else { 0 };
+        // One residual per requantization site. Flat rounds have one site
+        // per reduce-scatter hop position; streamed rounds run a full
+        // reduce-scatter per section, so each (hop, section) pair is its
+        // own site (indexed `k * sections + section`).
+        let hops_ef = if error_feedback && !probe.is_fp() {
+            workers.saturating_sub(1) * streaming.unwrap_or(1)
+        } else {
+            0
+        };
         let (trace_tx, trace_rx) = channel::<RoundTrace>();
         let (mean_tx, mean_rx) = channel::<Vec<f32>>();
         let mut txs: Vec<Option<Sender<Vec<u8>>>> = Vec::with_capacity(workers);
@@ -153,9 +196,6 @@ impl RingAllReduce {
         let mut ends = Vec::with_capacity(workers);
         for w in 0..workers {
             let codec = GradCodec::new(spec)?;
-            // One residual per reduce-scatter hop position: hop k always
-            // requantizes the same chunk index on this worker, and each hop
-            // compensates a different partial sum.
             let hop_ef = (0..hops_ef).map(|_| codec.error_feedback()).collect();
             ends.push(RingWorker {
                 id: w,
@@ -171,6 +211,11 @@ impl RingAllReduce {
                 chunk: Vec::new(),
                 qg: QuantizedGrad::default(),
                 step_bytes: Vec::new(),
+                streaming,
+                round: 0,
+                sec_means: Vec::new(),
+                sec_done: Vec::new(),
+                stream_rows: Vec::new(),
             });
         }
         Ok((
@@ -181,6 +226,7 @@ impl RingAllReduce {
                 mean_rx,
                 meter: TrafficMeter::default(),
                 sim_time_s: 0.0,
+                streaming,
             },
             ends,
         ))
@@ -195,23 +241,57 @@ impl Collective for RingAllReduce {
     fn round(&mut self, mean_out: &mut Vec<f32>) -> Result<()> {
         let l = self.workers;
         let hops = if l > 1 { 2 * (l - 1) } else { 0 };
-        let traces = collect_traces(&self.trace_rx, l, hops, "ring")?;
-        // Synchronous-step critical path: all nodes transmit concurrently
-        // within a step, steps serialize.
-        for k in 0..hops {
-            let mut step = 0.0f64;
-            for tr in &traces {
-                let bytes = tr[k];
-                step = step.max(self.link.transfer_time(bytes));
-                // Reduce-scatter hops move data toward the aggregated
-                // chunks (up); all-gather hops distribute them back (down).
-                if k < l - 1 {
-                    self.meter.record_up(&self.link, bytes);
-                } else {
-                    self.meter.record_down(&self.link, bytes);
+        match self.streaming {
+            None => {
+                let traces = collect_traces(&self.trace_rx, l, hops, 0, "ring")?;
+                // Synchronous-step critical path: all nodes transmit
+                // concurrently within a step, steps serialize.
+                for k in 0..hops {
+                    let mut step = 0.0f64;
+                    for tr in &traces {
+                        let bytes = tr.step_bytes[k];
+                        step = step.max(self.link.transfer_time(bytes));
+                        // Reduce-scatter hops move data toward the
+                        // aggregated chunks (up); all-gather hops
+                        // distribute them back (down).
+                        if k < l - 1 {
+                            self.meter.record_up(&self.link, bytes);
+                        } else {
+                            self.meter.record_down(&self.link, bytes);
+                        }
+                    }
+                    self.sim_time_s += step;
                 }
             }
-            self.sim_time_s += step;
+            Some(nsec) => {
+                // One full reduce-scatter + all-gather per section, in push
+                // order: section i's first hop cannot start before the
+                // slowest worker has staged it (stream row i's ready
+                // stamp), then its `2·(L−1)` steps pay the usual
+                // max-transfer critical path. Stream rows carry readiness
+                // only — every wire byte is in `step_bytes`.
+                let traces = collect_traces(&self.trace_rx, l, nsec * hops, nsec, "ring")?;
+                let mut t = 0.0f64;
+                for i in 0..nsec {
+                    let gate =
+                        traces.iter().map(|tr| tr.stream[i].0).fold(0.0f64, f64::max);
+                    t = t.max(gate);
+                    for k in 0..hops {
+                        let mut step = 0.0f64;
+                        for tr in &traces {
+                            let bytes = tr.step_bytes[i * hops + k];
+                            step = step.max(self.link.transfer_time(bytes));
+                            if k < l - 1 {
+                                self.meter.record_up(&self.link, bytes);
+                            } else {
+                                self.meter.record_down(&self.link, bytes);
+                            }
+                        }
+                        t += step;
+                    }
+                }
+                self.sim_time_s += t;
+            }
         }
         let mean = self
             .mean_rx
@@ -248,15 +328,28 @@ pub struct RingWorker {
     trace_tx: Sender<RoundTrace>,
     mean_tx: Option<Sender<Vec<f32>>>,
     codec: GradCodec,
-    /// Per-hop error-feedback residuals (`hop_ef[k]` compensates the
-    /// reduce-scatter hop-`k` requantization); empty when EF is off or
-    /// the codec is FP.
+    /// Per-site error-feedback residuals; empty when EF is off or the
+    /// codec is FP. Flat rounds: `hop_ef[k]` compensates the
+    /// reduce-scatter hop-`k` requantization. Streamed rounds:
+    /// `hop_ef[k * sections + section]` — each (hop, section) pair is a
+    /// distinct requantization site.
     hop_ef: Vec<ErrorFeedback>,
     rng: Rng,
     own: Vec<f32>,
     chunk: Vec<f32>,
     qg: QuantizedGrad,
     step_bytes: Vec<usize>,
+    /// `Some(sections)` when built for streaming.
+    streaming: Option<usize>,
+    round: u64,
+    /// Per-section decoded means, concatenated at `finish_streamed`.
+    sec_means: Vec<Vec<f32>>,
+    /// Which sections have been pushed this round (duplicate guard).
+    sec_done: Vec<bool>,
+    /// `(ready, 0)` per pushed section, in push order; the readiness
+    /// gates the coordinator's per-section timing (bytes live in
+    /// `step_bytes`).
+    stream_rows: Vec<(f64, usize)>,
 }
 
 impl RingWorker {
@@ -290,10 +383,48 @@ impl RingWorker {
         Ok(())
     }
 
+    /// Validate a hop-0 section frame from the ring predecessor: kind,
+    /// round, sender, section slot and ready stamp. All workers run the
+    /// same deterministic section schedule; this check turns a diverged
+    /// schedule into an error at the first hop instead of a deadlock or
+    /// a silently corrupt reduction.
+    fn check_section_frame(&self, bytes: &[u8], section: usize, nsec: usize) -> Result<()> {
+        let f = parse_frame(bytes)?;
+        if f.kind != FrameKind::Section {
+            return Err(Error::Comm(format!(
+                "ring hop-0 frame has kind {:?}, want Section",
+                f.kind
+            )));
+        }
+        if f.round != self.round {
+            return Err(Error::Comm(format!(
+                "ring section frame from round {}, want round {}",
+                f.round, self.round
+            )));
+        }
+        let pred = (self.id + self.workers - 1) % self.workers;
+        if f.sender as usize != pred {
+            return Err(Error::Comm(format!(
+                "ring section frame from worker {}, want predecessor {pred}",
+                f.sender
+            )));
+        }
+        if f.slot as usize != section {
+            return Err(Error::Comm(format!(
+                "ring section schedule diverged: predecessor sent section {} while this \
+                 worker is on section {section} (of {nsec})",
+                f.slot
+            )));
+        }
+        split_section_payload(f.payload)?;
+        Ok(())
+    }
+
     fn finish_round(&mut self, mean: &[f32]) -> Result<()> {
         let trace = RoundTrace {
             worker: self.id,
             step_bytes: std::mem::take(&mut self.step_bytes),
+            stream: std::mem::take(&mut self.stream_rows),
         };
         self.trace_tx
             .send(trace)
@@ -312,6 +443,11 @@ impl WorkerExchange for RingWorker {
     }
 
     fn exchange(&mut self, encoded: &mut Vec<u8>, mean_out: &mut Vec<f32>) -> Result<()> {
+        if self.streaming.is_some() {
+            return Err(Error::InvalidArg(
+                "this ring was built for streaming; use push_section/finish_streamed".into(),
+            ));
+        }
         let l = self.workers;
         let w = self.id;
         let d = self.codec.bucket_size();
@@ -382,6 +518,155 @@ impl WorkerExchange for RingWorker {
         for v in mean_out.iter_mut() {
             *v *= inv;
         }
+        self.finish_round(mean_out)
+    }
+
+    /// Run section `section`'s complete reduce-scatter + all-gather right
+    /// now. All workers push the same deterministic section schedule, so
+    /// the blocking per-hop recvs stay in lockstep; the first hop is
+    /// Section-framed and validated so a diverged schedule errors instead
+    /// of deadlocking.
+    fn push_section(&mut self, section: usize, payload: &[u8], ready_s: f64) -> Result<()> {
+        let Some(nsec) = self.streaming else {
+            return Err(Error::InvalidArg(
+                "this ring was not built for streaming; rebuild with ExchangeConfig::with_streaming".into(),
+            ));
+        };
+        if section >= nsec {
+            return Err(Error::InvalidArg(format!(
+                "section {section} out of range (sections={nsec})"
+            )));
+        }
+        if !ready_s.is_finite() || ready_s < 0.0 {
+            return Err(Error::InvalidArg(format!(
+                "bad ready stamp {ready_s} for section {section}"
+            )));
+        }
+        if self.sec_means.is_empty() {
+            self.sec_means = vec![Vec::new(); nsec];
+            self.sec_done = vec![false; nsec];
+        }
+        if self.sec_done[section] {
+            return Err(Error::InvalidArg(format!(
+                "section {section} pushed twice in round {}",
+                self.round
+            )));
+        }
+        self.sec_done[section] = true;
+        self.stream_rows.push((ready_s, 0));
+
+        let l = self.workers;
+        let w = self.id;
+        let d = self.codec.bucket_size();
+        // This worker's contribution to the section, decoded once.
+        {
+            let RingWorker { codec, own, .. } = self;
+            codec.decode_flat_into(payload, own)?;
+        }
+        let sn = self.own.len();
+        let mut sec_mean = std::mem::take(&mut self.sec_means[section]);
+        sec_mean.clear();
+        if l == 1 {
+            sec_mean.extend_from_slice(&self.own);
+            self.sec_means[section] = sec_mean;
+            return Ok(());
+        }
+        sec_mean.resize(sn, 0.0);
+
+        // ---- reduce-scatter over the section's own chunk grid ----
+        // Hop 0 ships a Section-framed byte slice of the section message;
+        // later hops are raw requantized chunks, as in the flat round.
+        let mut cur = Vec::new();
+        let r = chunk_range(sn, d, l, w);
+        begin_frame_into(FrameKind::Section, self.round, section as u16, w as u16, &mut cur);
+        cur.extend_from_slice(&ready_s.to_le_bytes());
+        codec::slice_elements_append(payload, r.start, r.end, &mut cur)?;
+        finish_frame(&mut cur);
+        for k in 0..l - 1 {
+            self.send(cur)?;
+            let mut msg = self.recv()?;
+            let body = if k == 0 {
+                self.check_section_frame(&msg, section, nsec)?;
+                SECTION_MSG_OFFSET
+            } else {
+                0
+            };
+            let c = ring_sub(w, k + 1, l);
+            {
+                let RingWorker { codec, chunk, .. } = self;
+                codec.decode_flat_into(&msg[body..], chunk)?;
+            }
+            let r = chunk_range(sn, d, l, c);
+            if self.chunk.len() != r.len() {
+                return Err(Error::Comm(format!(
+                    "ring section {section} chunk {c} decoded to {} elements, expected {}",
+                    self.chunk.len(),
+                    r.len()
+                )));
+            }
+            for (a, v) in self.chunk.iter_mut().zip(&self.own[r]) {
+                *a += *v;
+            }
+            // Requantize the partial sum, recycling the received buffer.
+            // Each (hop, section) pair keeps its own EF residual.
+            match self.hop_ef.get_mut(k * nsec + section) {
+                Some(ef) => {
+                    self.codec.encode_ef_into(ef, &self.chunk, &mut self.rng, &mut self.qg, &mut msg)
+                }
+                None => self.codec.encode_into(&self.chunk, &mut self.rng, &mut self.qg, &mut msg),
+            }
+            cur = msg;
+        }
+
+        // `cur` is the complete encoded section sum of chunk (w+1) mod L.
+        let c0 = (w + 1) % l;
+        self.decode_chunk(&cur, c0, sn)?;
+        let r0 = chunk_range(sn, d, l, c0);
+        sec_mean[r0].copy_from_slice(&self.chunk);
+
+        // ---- all-gather: forwarding only, no requantization ----
+        for k in 0..l - 1 {
+            self.send(cur)?;
+            let msg = self.recv()?;
+            let c = ring_sub(w, k, l);
+            self.decode_chunk(&msg, c, sn)?;
+            let r = chunk_range(sn, d, l, c);
+            sec_mean[r].copy_from_slice(&self.chunk);
+            cur = msg;
+        }
+
+        let inv = 1.0 / l as f32;
+        for v in sec_mean.iter_mut() {
+            *v *= inv;
+        }
+        self.sec_means[section] = sec_mean;
+        Ok(())
+    }
+
+    fn finish_streamed(&mut self, mean_out: &mut Vec<f32>) -> Result<()> {
+        let Some(nsec) = self.streaming else {
+            return Err(Error::InvalidArg(
+                "this ring was not built for streaming; rebuild with ExchangeConfig::with_streaming".into(),
+            ));
+        };
+        if self.sec_means.is_empty() {
+            self.sec_means = vec![Vec::new(); nsec];
+            self.sec_done = vec![false; nsec];
+        }
+        if let Some(missing) = self.sec_done.iter().position(|done| !done) {
+            return Err(Error::InvalidArg(format!(
+                "finish_streamed before section {missing} was pushed in round {}",
+                self.round
+            )));
+        }
+        mean_out.clear();
+        for sec in &self.sec_means {
+            mean_out.extend_from_slice(sec);
+        }
+        for done in self.sec_done.iter_mut() {
+            *done = false;
+        }
+        self.round += 1;
         self.finish_round(mean_out)
     }
 }

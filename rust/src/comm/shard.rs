@@ -13,16 +13,20 @@
 //! element range. Ranges are contiguous and increasing, so shard chunks
 //! reassemble by concatenation in shard order.
 //!
-//! **Versioned frames.** Every sharded-ps message (worker→shard upload,
-//! shard→worker mean broadcast) wraps its codec payload in a fixed
-//! [`FRAME_HEADER_BYTES`]-byte frame carrying the round number, the shard
-//! id and the sender id. The round field is what makes bounded staleness
-//! *checkable*: a worker at round `r` with window `K` refuses any mean
-//! frame older than `r − K` (and, in the deterministic schedule, any
-//! frame that is not exactly `r − K`). Parsing is fully validated —
-//! truncated headers, bad magic/version/kind bytes and payload-length
-//! lies all return `Err`, never panic (same contract as
-//! [`crate::codec`]).
+//! **Versioned frames.** Every framed message wraps its codec payload in
+//! a fixed [`FRAME_HEADER_BYTES`]-byte frame carrying the round number, a
+//! kind-dependent **slot** and the sender id. The frame is
+//! topology-agnostic: for sharded-ps uploads/means the slot is the shard
+//! id; for the streaming exchange ([`super::overlap`]) the slot is the
+//! *section* index of a [`FrameKind::Section`] frame, whose payload is an
+//! 8-byte little-endian `f64` readiness stamp followed by one standalone
+//! codec message holding that section's elements. The round field is what
+//! makes bounded staleness *checkable*: a worker at round `r` with window
+//! `K` refuses any mean frame older than `r − K` (and, in the
+//! deterministic schedule, any frame that is not exactly `r − K`).
+//! Parsing is fully validated — truncated headers, bad
+//! magic/version/kind bytes and payload-length lies all return `Err`,
+//! never panic (same contract as [`crate::codec`]).
 //!
 //! **Staleness accounting.** [`StalenessStats`] is the per-round
 //! applied-version age histogram kept by the coordinator inside
@@ -68,11 +72,13 @@ pub fn shard_range(total: usize, bucket: usize, shards: usize, i: usize) -> Rang
 pub const FRAME_MAGIC: u32 = 0x4651_524F;
 /// Versioned-frame wire version.
 pub const FRAME_VERSION: u8 = 1;
-/// Fixed frame header size: magic u32, version u8, kind u8, shard u16,
+/// Fixed frame header size: magic u32, version u8, kind u8, slot u16,
 /// sender u16, round u64, payload_len u32.
 pub const FRAME_HEADER_BYTES: usize = 4 + 1 + 1 + 2 + 2 + 8 + 4;
 
-/// What a sharded-ps frame carries.
+/// What a versioned frame carries. The u16 slot field is kind-dependent:
+/// a shard id for [`FrameKind::Upload`]/[`FrameKind::Mean`], a section
+/// index for [`FrameKind::Section`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FrameKind {
     /// Worker → shard: one encoded gradient chunk.
@@ -82,6 +88,13 @@ pub enum FrameKind {
     /// `quantize_downlink` (the frame is kind-agnostic about the inner
     /// codec payload).
     Mean,
+    /// Streaming exchange: one gradient *section*, pushed onto the wire
+    /// the moment backward finishes it. The payload is an 8-byte LE
+    /// `f64` readiness stamp (sim seconds since the round's backward
+    /// started) followed by one standalone codec message — or a
+    /// bucket-aligned slice of one, when the receiver partitions the
+    /// section further (shard/chunk intersections).
+    Section,
 }
 
 impl FrameKind {
@@ -89,6 +102,7 @@ impl FrameKind {
         match self {
             FrameKind::Upload => 0,
             FrameKind::Mean => 1,
+            FrameKind::Section => 2,
         }
     }
 
@@ -96,6 +110,7 @@ impl FrameKind {
         match b {
             0 => Ok(FrameKind::Upload),
             1 => Ok(FrameKind::Mean),
+            2 => Ok(FrameKind::Section),
             other => Err(Error::Codec(format!("unknown frame kind {other}"))),
         }
     }
@@ -106,7 +121,7 @@ impl FrameKind {
 #[derive(Debug)]
 pub struct Frame<'a> {
     pub kind: FrameKind,
-    pub shard: u16,
+    pub slot: u16,
     pub sender: u16,
     pub round: u64,
     pub payload: &'a [u8],
@@ -116,7 +131,7 @@ pub struct Frame<'a> {
 pub fn encode_frame_into(
     kind: FrameKind,
     round: u64,
-    shard: u16,
+    slot: u16,
     sender: u16,
     payload: &[u8],
     out: &mut Vec<u8>,
@@ -126,7 +141,7 @@ pub fn encode_frame_into(
     out.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
     out.push(FRAME_VERSION);
     out.push(kind.byte());
-    out.extend_from_slice(&shard.to_le_bytes());
+    out.extend_from_slice(&slot.to_le_bytes());
     out.extend_from_slice(&sender.to_le_bytes());
     out.extend_from_slice(&round.to_le_bytes());
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
@@ -137,8 +152,8 @@ pub fn encode_frame_into(
 /// length. Append the payload bytes directly behind it (e.g.
 /// [`crate::codec::slice_elements_append`] — one copy, no intermediate
 /// buffer), then call [`finish_frame`] to patch the length in.
-pub fn begin_frame_into(kind: FrameKind, round: u64, shard: u16, sender: u16, out: &mut Vec<u8>) {
-    encode_frame_into(kind, round, shard, sender, &[], out);
+pub fn begin_frame_into(kind: FrameKind, round: u64, slot: u16, sender: u16, out: &mut Vec<u8>) {
+    encode_frame_into(kind, round, slot, sender, &[], out);
 }
 
 /// Patch the payload length of a frame started with [`begin_frame_into`]
@@ -169,7 +184,7 @@ pub fn parse_frame(bytes: &[u8]) -> Result<Frame<'_>> {
         return Err(Error::Codec(format!("unsupported frame version {version}")));
     }
     let kind = FrameKind::from_byte(bytes[5])?;
-    let shard = u16::from_le_bytes(bytes[6..8].try_into().expect("2-byte slice"));
+    let slot = u16::from_le_bytes(bytes[6..8].try_into().expect("2-byte slice"));
     let sender = u16::from_le_bytes(bytes[8..10].try_into().expect("2-byte slice"));
     let round = u64::from_le_bytes(bytes[10..18].try_into().expect("8-byte slice"));
     let payload_len = u32::from_le_bytes(bytes[18..22].try_into().expect("4-byte slice")) as usize;
@@ -180,7 +195,28 @@ pub fn parse_frame(bytes: &[u8]) -> Result<Frame<'_>> {
             payload.len()
         )));
     }
-    Ok(Frame { kind, shard, sender, round, payload })
+    Ok(Frame { kind, slot, sender, round, payload })
+}
+
+/// Prefix bytes of a [`FrameKind::Section`] payload: the `f64` readiness
+/// stamp that rides in front of the section's codec message.
+pub const SECTION_STAMP_BYTES: usize = 8;
+
+/// Split a parsed [`FrameKind::Section`] payload into its readiness
+/// stamp and the inner codec message bytes. The stamp must be finite and
+/// non-negative (sim seconds since the round's backward started).
+pub fn split_section_payload(payload: &[u8]) -> Result<(f64, &[u8])> {
+    if payload.len() < SECTION_STAMP_BYTES {
+        return Err(Error::Codec(format!(
+            "section payload is {} bytes, stamp needs {SECTION_STAMP_BYTES}",
+            payload.len()
+        )));
+    }
+    let stamp = f64::from_le_bytes(payload[..SECTION_STAMP_BYTES].try_into().expect("8-byte slice"));
+    if !stamp.is_finite() || stamp < 0.0 {
+        return Err(Error::Codec(format!("bad section readiness stamp {stamp}")));
+    }
+    Ok((stamp, &payload[SECTION_STAMP_BYTES..]))
 }
 
 // --------------------------------------------------------------------
@@ -312,7 +348,7 @@ mod tests {
         assert_eq!(bytes.len(), FRAME_HEADER_BYTES + payload.len());
         let f = parse_frame(&bytes).unwrap();
         assert_eq!(f.kind, FrameKind::Upload);
-        assert_eq!(f.shard, 3);
+        assert_eq!(f.slot, 3);
         assert_eq!(f.sender, 17);
         assert_eq!(f.round, 42);
         assert_eq!(f.payload, &payload);
@@ -324,15 +360,59 @@ mod tests {
         assert!(f.payload.is_empty());
     }
 
+    /// Section frames (slot = section index, payload = stamp + inner
+    /// message) round-trip, and the stamp splitter validates its prefix.
+    #[test]
+    fn section_frame_roundtrip_and_stamp_split() {
+        let inner = [0xA0u8, 0xA1, 0xA2];
+        let mut payload = 0.125f64.to_le_bytes().to_vec();
+        payload.extend_from_slice(&inner);
+        let mut bytes = Vec::new();
+        encode_frame_into(FrameKind::Section, 7, 5, 2, &payload, &mut bytes);
+        let f = parse_frame(&bytes).unwrap();
+        assert_eq!(f.kind, FrameKind::Section);
+        assert_eq!(f.slot, 5, "slot carries the section index");
+        assert_eq!(f.sender, 2);
+        let (stamp, msg) = split_section_payload(f.payload).unwrap();
+        assert_eq!(stamp, 0.125);
+        assert_eq!(msg, &inner);
+        // a stamp-only payload splits to an empty message
+        let (stamp, msg) = split_section_payload(&0.0f64.to_le_bytes()).unwrap();
+        assert_eq!(stamp, 0.0);
+        assert!(msg.is_empty());
+    }
+
+    /// Malformed section payloads are `Err`, never panic: every stamp
+    /// truncation point and non-physical stamp values.
+    #[test]
+    fn malformed_section_payloads_rejected() {
+        for n in 0..SECTION_STAMP_BYTES {
+            let short = vec![0u8; n];
+            assert!(split_section_payload(&short).is_err(), "stamp prefix {n} must not split");
+        }
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -1.0] {
+            assert!(split_section_payload(&bad.to_le_bytes()).is_err(), "stamp {bad} rejected");
+        }
+    }
+
     /// Malformed versioned frames are rejected with `Err`, never panic:
     /// every truncation point, corrupted magic/version/kind bytes, and
-    /// payload-length lies in both directions.
+    /// payload-length lies in both directions — exercised for both a
+    /// mean frame and a section frame.
     #[test]
     fn malformed_frames_rejected() {
+        let mut section = Vec::new();
+        {
+            let mut payload = 0.5f64.to_le_bytes().to_vec();
+            payload.extend_from_slice(&[9, 9]);
+            encode_frame_into(FrameKind::Section, 3, 0, 1, &payload, &mut section);
+        }
         let mut bytes = Vec::new();
         encode_frame_into(FrameKind::Mean, 9, 1, 2, &[1, 2, 3, 4], &mut bytes);
-        for n in 0..bytes.len() {
-            assert!(parse_frame(&bytes[..n]).is_err(), "prefix {n} must not parse");
+        for frame in [&bytes, &section] {
+            for n in 0..frame.len() {
+                assert!(parse_frame(&frame[..n]).is_err(), "prefix {n} must not parse");
+            }
         }
         // bad magic
         let mut b = bytes.clone();
@@ -342,9 +422,9 @@ mod tests {
         let mut b = bytes.clone();
         b[4] = 99;
         assert!(parse_frame(&b).is_err());
-        // unknown kind
+        // unknown kind (2 became Section; 3 is the first free byte)
         let mut b = bytes.clone();
-        b[5] = 2;
+        b[5] = 3;
         assert!(parse_frame(&b).is_err());
         // payload-length lies: claims more and less than present
         let mut b = bytes.clone();

@@ -284,9 +284,22 @@ pub struct TrainConfig {
     pub overlap: bool,
     /// Overlap section count (`sections = N`, `--sections N`): contiguous
     /// layer groups, balanced to within one layer, cut on the codec's
-    /// bucket grid. Must not exceed the model's layer count when overlap
-    /// is on.
-    pub sections: usize,
+    /// bucket grid. Must not exceed the model's layer count. `None`
+    /// means "not set" ([`Self::effective_sections`] supplies the
+    /// default); setting it without `overlap` is a config error — the
+    /// knob would otherwise be silently ignored.
+    pub sections: Option<usize>,
+    /// Stream the exchange section by section
+    /// (`stream_sections = true`, `--stream-sections`; implies
+    /// `overlap`): each staged overlap section is pushed into the
+    /// collective as a standalone section frame the moment its encode
+    /// completes, so early sections ride the link while the backward
+    /// tail still computes. ps/hier/sharded-ps stay bit-identical to
+    /// the flat overlap exchange; the ring runs one
+    /// reduce-scatter/all-gather per section (deterministic, equivalent
+    /// to its serial replay, but not bit-identical to flat). Requires a
+    /// synchronous exchange (`staleness = 0`).
+    pub stream_sections: bool,
     /// Per-edge-class simulated link model (`intra_bandwidth`,
     /// `intra_latency`, `inter_bandwidth`, `inter_latency`).
     pub links: LinkConfig,
@@ -320,7 +333,8 @@ impl Default for TrainConfig {
             threads: 1,
             pool: true,
             overlap: false,
-            sections: 4,
+            sections: None,
+            stream_sections: false,
             links: LinkConfig::default(),
         }
     }
@@ -364,7 +378,12 @@ impl TrainConfig {
         set!(shards, as_i64, "shards");
         set!(staleness, as_i64, "staleness");
         set!(threads, as_i64, "threads");
-        set!(sections, as_i64, "sections");
+        if let Some(v) = get("sections") {
+            let s = v
+                .as_i64()
+                .ok_or_else(|| Error::Config("bad type for sections".into()))?;
+            c.sections = Some(s as usize);
+        }
         macro_rules! set_link {
             ($field:ident, $name:expr) => {
                 if let Some(v) = get($name) {
@@ -395,6 +414,16 @@ impl TrainConfig {
             c.overlap = v
                 .as_bool()
                 .ok_or_else(|| Error::Config("overlap must be a bool".into()))?;
+        }
+        if let Some(v) = get("stream_sections") {
+            c.stream_sections = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("stream_sections must be a bool".into()))?;
+            // Streaming is an overlap mode: the flag implies overlap so
+            // users don't have to pass both.
+            if c.stream_sections {
+                c.overlap = true;
+            }
         }
         if let Some(v) = get("topology") {
             c.topology = Topology::parse(
@@ -538,12 +567,34 @@ impl TrainConfig {
                     .into(),
             ));
         }
-        // Catches negative config values too (the `threads` hardening,
-        // applied to the overlap knob).
-        if self.sections == 0 || self.sections > 1024 {
+        if let Some(s) = self.sections {
+            // Catches negative config values too (the `threads`
+            // hardening, applied to the overlap knob).
+            if s == 0 || s > 1024 {
+                return Err(Error::Config(format!("sections ({s}) must be in [1, 1024]")));
+            }
+            if !self.overlap {
+                return Err(Error::Config(format!(
+                    "sections ({s}) only shapes the overlapped encode and would be \
+                     silently ignored without it — add overlap = true (--overlap) \
+                     or stream_sections = true (--stream-sections), or drop sections"
+                )));
+            }
+        }
+        if self.stream_sections && !self.overlap {
+            return Err(Error::Config(
+                "stream_sections is an overlap mode and implies overlap = true; \
+                 a config with stream_sections set but overlap cleared is \
+                 contradictory"
+                    .into(),
+            ));
+        }
+        if self.stream_sections && self.staleness != 0 {
             return Err(Error::Config(format!(
-                "sections ({}) must be in [1, 1024]",
-                self.sections
+                "stream_sections needs a synchronous exchange: the streamed round \
+                 reduces section frames of the current round only, but staleness \
+                 ({}) lets workers run ahead (drop one of the two)",
+                self.staleness
             )));
         }
         if self.overlap && self.method == "fp" {
@@ -556,6 +607,12 @@ impl TrainConfig {
         }
         self.links.validate()?;
         Ok(())
+    }
+
+    /// The overlap section count actually in force: the configured
+    /// value, or 4 (the historical default) when `sections` is unset.
+    pub fn effective_sections(&self) -> usize {
+        self.sections.unwrap_or(4)
     }
 
     /// The simulated per-edge-class link map for this run.
@@ -725,26 +782,85 @@ mod tests {
     fn overlap_keys_parse_and_validate() {
         let d = TrainConfig::default();
         assert!(!d.overlap, "flat exchange is the default");
-        assert_eq!(d.sections, 4);
+        assert_eq!(d.sections, None);
+        assert_eq!(d.effective_sections(), 4);
         let c = TrainConfig::from_map(
             &parse("[train]\nmethod = \"orq-5\"\noverlap = true\nsections = 8\nthreads = 4")
                 .unwrap(),
         )
         .unwrap();
         assert!(c.overlap);
-        assert_eq!(c.sections, 8);
+        assert_eq!(c.sections, Some(8));
+        assert_eq!(c.effective_sections(), 8);
         // wrong value types are errors, not silent defaults
         assert!(TrainConfig::from_map(&parse("[train]\noverlap = 1").unwrap()).is_err());
         // sections = 0 and wrapped negatives are rejected
-        assert!(TrainConfig::from_map(&parse("[train]\nsections = 0").unwrap()).is_err());
-        assert!(TrainConfig::from_map(&parse("[train]\nsections = -2").unwrap()).is_err());
+        let overlapped = "[train]\nmethod = \"orq-5\"\noverlap = true\n";
+        assert!(TrainConfig::from_map(
+            &parse(&format!("{overlapped}sections = 0")).unwrap()
+        )
+        .is_err());
+        assert!(TrainConfig::from_map(
+            &parse(&format!("{overlapped}sections = -2")).unwrap()
+        )
+        .is_err());
+        // sections without overlap was silently ignored before PR 8 —
+        // now it is an actionable config error
+        let err =
+            TrainConfig::from_map(&parse("[train]\nsections = 4").unwrap()).unwrap_err();
+        assert!(err.to_string().contains("silently ignored"), "{err}");
+        assert!(err.to_string().contains("--overlap"), "{err}");
         // overlap needs a quantizing method: fp has no bucket grid
         let bad = parse("[train]\nmethod = \"fp\"\noverlap = true").unwrap();
         let err = TrainConfig::from_map(&bad).unwrap_err();
         assert!(err.to_string().contains("quantizing method"), "{err}");
-        // overlap at threads = 1 is allowed — it degenerates to flat
+        // overlap at threads = 1 is allowed — the serial start-anywhere
+        // encoder stages sections inline on the driver thread
         let c = TrainConfig { method: "terngrad".into(), overlap: true, ..TrainConfig::default() };
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn stream_sections_key_parses_and_validates() {
+        assert!(!TrainConfig::default().stream_sections, "flat exchange is the default");
+        // the flag implies overlap, so users pass it alone
+        let c = TrainConfig::from_map(
+            &parse("[train]\nmethod = \"orq-5\"\nstream_sections = true\nsections = 2")
+                .unwrap(),
+        )
+        .unwrap();
+        assert!(c.stream_sections);
+        assert!(c.overlap, "stream_sections must imply overlap");
+        assert_eq!(c.sections, Some(2));
+        // wrong value types are errors, not silent defaults
+        assert!(TrainConfig::from_map(&parse("[train]\nstream_sections = 1").unwrap()).is_err());
+        // fp has no bucket grid to stream (via the implied overlap)
+        let bad = parse("[train]\nmethod = \"fp\"\nstream_sections = true").unwrap();
+        assert!(TrainConfig::from_map(&bad).is_err());
+        // streaming reduces current-round frames only: staleness rejects
+        let bad = parse(
+            "[train]\nworkers = 2\nbatch = 64\nmethod = \"orq-3\"\n\
+             topology = \"sharded-ps\"\nshards = 2\nstaleness = 1\n\
+             stream_sections = true",
+        )
+        .unwrap();
+        let err = TrainConfig::from_map(&bad).unwrap_err();
+        assert!(err.to_string().contains("synchronous"), "{err}");
+        // ...but synchronous sharded-ps streams fine
+        let ok = parse(
+            "[train]\nworkers = 2\nbatch = 64\nmethod = \"orq-3\"\n\
+             topology = \"sharded-ps\"\nshards = 2\nstream_sections = true",
+        )
+        .unwrap();
+        assert!(TrainConfig::from_map(&ok).is_ok());
+        // direct construction with the implication broken is rejected
+        let c = TrainConfig {
+            method: "terngrad".into(),
+            stream_sections: true,
+            overlap: false,
+            ..TrainConfig::default()
+        };
+        assert!(c.validate().is_err());
     }
 
     #[test]

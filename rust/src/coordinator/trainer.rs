@@ -37,18 +37,33 @@
 //! per-thread solver arenas amortize across *rounds*, not just buckets.
 //!
 //! With `TrainConfig::overlap` (`--overlap [--sections N]`, quantizing
-//! methods with a parallel codec) each worker drives its backward
-//! through [`crate::comm::overlap::OverlapEncoder`]: the model-section
-//! bucket map seeded from [`Backend::layer_spans`] hands every completed
+//! methods) each worker drives its backward through
+//! [`crate::comm::overlap::OverlapEncoder`]: the model-section bucket
+//! map seeded from [`Backend::layer_spans`] hands every completed
 //! section to the worker pool for quantize+encode while the backward
-//! tail is still running ([`Backend::loss_grad_sections`]). The
-//! assembled wire message is byte-identical to the flat post-backward
-//! encode, so overlapped runs train to bit-identical parameters on
-//! every topology, thread count, and error-feedback setting; under EF
-//! the sections stage `g + m` and the residual settles after backward
-//! (decode own message → `m ← (g + m) − deq`). At `threads == 1` the
-//! flag degenerates to the flat path — the serial encoder's single RNG
-//! stream cannot start mid-gradient.
+//! tail is still running ([`Backend::loss_grad_sections`]); at
+//! `threads == 1` a start-anywhere serial encoder stages the same
+//! sections inline on the driver thread under the identical per-bucket
+//! RNG discipline. The assembled wire message is byte-identical to the
+//! flat *parallel* encode, so overlapped runs train to bit-identical
+//! parameters on every topology and error-feedback setting, invariant
+//! across thread counts (serial overlap matches parallel overlap, not
+//! the legacy single-stream serial encode); under EF the sections stage
+//! `g + m` and the residual settles after backward (decode own message
+//! → `m ← (g + m) − deq`).
+//!
+//! With `TrainConfig::stream_sections` (`--stream-sections`, implies
+//! `--overlap`) the exchange itself streams: every staged section is
+//! pushed into the collective as a standalone
+//! [`crate::comm::shard::FrameKind::Section`] frame the moment its
+//! encode completes ([`crate::comm::WorkerExchange::push_section`]), so
+//! early sections ride the link while the backward tail still computes
+//! and the simulated round time shows comm hidden behind compute.
+//! ps/hier/sharded-ps reduce section frames in worker order and train
+//! bit-identically to the flat overlap exchange; the ring runs one
+//! reduce-scatter/all-gather per section — deterministic and
+//! thread-count invariant (`threads == 1` *is* the serial replay of the
+//! same section schedule), but not bit-identical to the flat ring.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 
@@ -56,7 +71,7 @@ use crate::codec::{self, Packing};
 use crate::comm::link::{Link, LinkMap};
 use crate::comm::{
     build_topology, CommStats, ExchangeConfig, GradCodec, OverlapEncoder, PoolMode, SectionMap,
-    Topology, WireSpec,
+    Topology, WireSpec, SIM_BACKWARD_RATE,
 };
 use crate::quant::pool::PoolHandle;
 use crate::config::TrainConfig;
@@ -170,6 +185,8 @@ impl<'a> Trainer<'a> {
             // ring/hier, server-side downlink with quantize_downlink).
             // The workers' own uplink EF lives in the loop below.
             error_feedback: cfg.error_feedback,
+            streaming: cfg.stream_sections,
+            sections: cfg.effective_sections(),
         };
         let mut server_backend = make_backend(l);
         let param_count = server_backend.param_count();
@@ -191,11 +208,11 @@ impl<'a> Trainer<'a> {
             // Fail early with an actionable message: the worker-side
             // section map would reject this too, but inside a thread.
             let layers = server_backend.layer_spans().len();
-            if cfg.sections > layers {
+            if cfg.effective_sections() > layers {
                 return Err(Error::Config(format!(
                     "sections ({}) exceeds the model's layer count ({layers}); every \
                      overlap section needs at least one layer — reduce sections",
-                    cfg.sections
+                    cfg.effective_sections()
                 )));
             }
         }
@@ -246,20 +263,32 @@ impl<'a> Trainer<'a> {
                     // tracks this worker's own uplink — the exchanged
                     // mean (quantized downlink or not) never feeds it.
                     let mut ef = cfg.error_feedback.then(|| gc.error_feedback());
-                    // Overlapped backward+encode (quantizing methods,
-                    // parallel codec): sections of the gradient hit the
-                    // worker pool as backward completes them. threads == 1
-                    // degenerates to the flat path — the serial encoder
-                    // cannot start mid-gradient — which is bit-identical
-                    // by construction.
-                    let mut overlap = if cfg.overlap && cfg.threads != 1 && !gc.is_fp() {
-                        let map =
-                            SectionMap::new(&backend.layer_spans(), cfg.sections, cfg.bucket_size)
-                                .expect("checked before spawn");
+                    // Overlapped backward+encode (quantizing methods):
+                    // sections of the gradient hit the worker pool as
+                    // backward completes them; at threads == 1 the
+                    // start-anywhere serial encoder stages the same
+                    // sections inline on the driver thread (identical
+                    // bytes — the per-bucket RNG discipline is
+                    // thread-count invariant).
+                    let mut overlap = if cfg.overlap && !gc.is_fp() {
+                        let map = SectionMap::new(
+                            &backend.layer_spans(),
+                            cfg.effective_sections(),
+                            cfg.bucket_size,
+                        )
+                        .expect("checked before spawn");
                         Some(OverlapEncoder::new(&spec, map).expect("checked before spawn"))
                     } else {
                         None
                     };
+                    // Streamed rounds gate each section frame at its
+                    // deterministic readiness stamp — the same schedule
+                    // on every worker, so the stamps ride in-band and the
+                    // coordinator replays the pipeline recurrence.
+                    let ready_at = overlap
+                        .as_ref()
+                        .filter(|_| cfg.stream_sections)
+                        .map(|ov| ov.map().ready_schedule(SIM_BACKWARD_RATE));
                     let per_worker_batch = cfg.batch / cfg.workers;
                     for t in 0..cfg.steps {
                         let batch = ds.worker_batch(w, cfg.workers, per_worker_batch, &mut rng_data);
@@ -267,9 +296,40 @@ impl<'a> Trainer<'a> {
                             Some(ov) => {
                                 let n = grad.len();
                                 let memory = ef.as_mut().map(|e| e.residual(n));
-                                ov.encode_overlapped(memory, &mut rng_q, &mut msg, |cb| {
-                                    backend.loss_grad_sections(&params, &batch, &mut grad, cb)
-                                })
+                                match &ready_at {
+                                    Some(ready) => {
+                                        // Push every staged section into
+                                        // the collective immediately; the
+                                        // flat message still assembles
+                                        // into `msg` for the EF settle
+                                        // and the fidelity figures.
+                                        let streamed = ov.encode_streamed(
+                                            memory,
+                                            &mut rng_q,
+                                            &mut msg,
+                                            ready,
+                                            &mut |sec, payload, r| wx.push_section(sec, payload, r),
+                                            |cb| {
+                                                backend.loss_grad_sections(
+                                                    &params, &batch, &mut grad, cb,
+                                                )
+                                            },
+                                        );
+                                        match streamed {
+                                            Ok(loss) => loss,
+                                            // coordinator gone; it
+                                            // reports the error
+                                            Err(_) => return,
+                                        }
+                                    }
+                                    None => {
+                                        ov.encode_overlapped(memory, &mut rng_q, &mut msg, |cb| {
+                                            backend.loss_grad_sections(
+                                                &params, &batch, &mut grad, cb,
+                                            )
+                                        })
+                                    }
+                                }
                             }
                             None => {
                                 let loss = backend.loss_grad(&params, &batch, &mut grad);
@@ -330,7 +390,14 @@ impl<'a> Trainer<'a> {
                         {
                             return; // coordinator gone; it reports the error
                         }
-                        if wx.exchange(&mut msg, &mut mean).is_err() {
+                        let exchanged = if ready_at.is_some() {
+                            // Sections are already on the wire; block for
+                            // the round's decoded mean.
+                            wx.finish_streamed(&mut mean)
+                        } else {
+                            wx.exchange(&mut msg, &mut mean)
+                        };
+                        if exchanged.is_err() {
                             return; // ditto — avoid deadlocking the scope
                         }
                         opt.step(&mut params, &mean, schedule.lr_at(t));
@@ -521,7 +588,8 @@ mod tests {
             threads: 1,
             pool: true,
             overlap: false,
-            sections: 2,
+            sections: None,
+            stream_sections: false,
             links: LinkConfig::default(),
         }
     }
@@ -960,33 +1028,44 @@ mod tests {
         }
     }
 
+    fn run_ov_cfg(
+        ds: &ClassDataset,
+        topology: Topology,
+        threads: usize,
+        overlap: bool,
+        stream: bool,
+        ef: bool,
+    ) -> TrainOutput {
+        let mut cfg = tiny_cfg(if ef { "bingrad-b" } else { "orq-3" }, 2);
+        cfg.topology = topology;
+        match topology {
+            Topology::Hier => cfg.groups = 2,
+            Topology::ShardedPs => cfg.shards = 2,
+            _ => {}
+        }
+        cfg.error_feedback = ef;
+        cfg.threads = threads;
+        cfg.overlap = overlap;
+        cfg.stream_sections = stream;
+        if overlap {
+            cfg.sections = Some(2); // the tiny 2-layer MLP's maximum
+        }
+        let factory = native_backend_factory(&cfg.model).unwrap();
+        Trainer::new(cfg, ds).unwrap().run(factory).unwrap()
+    }
+
     /// The overlap tentpole guarantee: backward/encode overlap trains
     /// bit-identically to the flat post-backward exchange — same trained
-    /// parameters and wire bytes — on every topology and thread count
-    /// (1 degenerates to flat), with and without error feedback.
+    /// parameters and wire bytes — on every topology and parallel thread
+    /// count, with and without error feedback.
     #[test]
     fn overlap_bit_identical_to_flat_exchange_all_topologies() {
         let ds = tiny_ds();
-        let run_ov = |topology: Topology, threads: usize, overlap: bool, ef: bool| {
-            let mut cfg = tiny_cfg(if ef { "bingrad-b" } else { "orq-3" }, 2);
-            cfg.topology = topology;
-            match topology {
-                Topology::Hier => cfg.groups = 2,
-                Topology::ShardedPs => cfg.shards = 2,
-                _ => {}
-            }
-            cfg.error_feedback = ef;
-            cfg.threads = threads;
-            cfg.overlap = overlap;
-            cfg.sections = 2; // the tiny 2-layer MLP's maximum
-            let factory = native_backend_factory(&cfg.model).unwrap();
-            Trainer::new(cfg, &ds).unwrap().run(factory).unwrap()
-        };
         for topology in [Topology::Ps, Topology::Ring, Topology::Hier, Topology::ShardedPs] {
-            for threads in [1usize, 2, 4] {
+            for threads in [2usize, 4] {
                 for ef in [false, true] {
-                    let flat = run_ov(topology, threads, false, ef);
-                    let over = run_ov(topology, threads, true, ef);
+                    let flat = run_ov_cfg(&ds, topology, threads, false, false, ef);
+                    let over = run_ov_cfg(&ds, topology, threads, true, false, ef);
                     assert_eq!(
                         flat.params, over.params,
                         "{topology:?} threads={threads} ef={ef}: overlap changed training"
@@ -1000,6 +1079,81 @@ mod tests {
         }
     }
 
+    /// Serial overlap (PR 8 satellite): at threads = 1 the
+    /// start-anywhere encoder stages sections inline instead of
+    /// degenerating to the flat path. Its bytes follow the parallel
+    /// per-bucket RNG discipline, so the run matches the *parallel*
+    /// flat/overlap runs bit for bit — overlap is thread-count invariant
+    /// all the way down to one thread.
+    #[test]
+    fn serial_overlap_matches_parallel_overlap() {
+        let ds = tiny_ds();
+        for topology in [Topology::Ps, Topology::Ring, Topology::Hier, Topology::ShardedPs] {
+            let serial = run_ov_cfg(&ds, topology, 1, true, false, false);
+            let parallel = run_ov_cfg(&ds, topology, 2, true, false, false);
+            let flat2 = run_ov_cfg(&ds, topology, 2, false, false, false);
+            assert_eq!(
+                serial.params, parallel.params,
+                "{topology:?}: serial overlap diverged from parallel overlap"
+            );
+            assert_eq!(
+                parallel.params, flat2.params,
+                "{topology:?}: overlap diverged from the parallel flat exchange"
+            );
+            assert_eq!(serial.summary.total_wire_bytes, parallel.summary.total_wire_bytes);
+        }
+        // error feedback composes with the serial overlap path too
+        let a = run_ov_cfg(&ds, Topology::Ps, 1, true, false, true);
+        let b = run_ov_cfg(&ds, Topology::Ps, 2, true, false, true);
+        assert_eq!(a.params, b.params, "EF serial overlap must match parallel");
+        assert!(a.summary.test_top1 > 0.5, "top1={}", a.summary.test_top1);
+    }
+
+    /// The streaming tentpole at the trainer level: `--stream-sections`
+    /// trains bit-identically to the flat overlap exchange on the
+    /// PS-family topologies (worker-order f64 accumulation per section),
+    /// for serial and parallel codecs, with and without error feedback.
+    #[test]
+    fn streamed_training_bit_identical_on_ps_family() {
+        let ds = tiny_ds();
+        for topology in [Topology::Ps, Topology::Hier, Topology::ShardedPs] {
+            for threads in [1usize, 2] {
+                for ef in [false, true] {
+                    let over = run_ov_cfg(&ds, topology, threads, true, false, ef);
+                    let st = run_ov_cfg(&ds, topology, threads, true, true, ef);
+                    assert_eq!(
+                        over.params, st.params,
+                        "{topology:?} threads={threads} ef={ef}: streaming changed training"
+                    );
+                    assert!(st.comm.sim_time_s > 0.0, "{topology:?}: no simulated time");
+                }
+            }
+        }
+    }
+
+    /// Ring streaming: one reduce-scatter/all-gather per section is not
+    /// bit-identical to the flat ring (section-local chunk grids, more
+    /// requantization sites), but it is deterministic, thread-count
+    /// invariant (threads = 1 *is* the serial replay of the schedule),
+    /// and it still learns.
+    #[test]
+    fn streamed_ring_training_thread_invariant_and_learns() {
+        let ds = tiny_ds();
+        let serial = run_ov_cfg(&ds, Topology::Ring, 1, true, true, false);
+        let t2 = run_ov_cfg(&ds, Topology::Ring, 2, true, true, false);
+        let t4 = run_ov_cfg(&ds, Topology::Ring, 4, true, true, false);
+        assert_eq!(serial.params, t2.params, "streamed ring diverged from its serial replay");
+        assert_eq!(t2.params, t4.params, "streamed ring must be thread-count invariant");
+        let again = run_ov_cfg(&ds, Topology::Ring, 2, true, true, false);
+        assert_eq!(t2.params, again.params, "streamed ring runs must stay reproducible");
+        assert!(serial.summary.test_top1 > 0.5, "top1={}", serial.summary.test_top1);
+        // per-(hop, section) EF composes and stays invariant too
+        let ef1 = run_ov_cfg(&ds, Topology::Ring, 1, true, true, true);
+        let ef2 = run_ov_cfg(&ds, Topology::Ring, 2, true, true, true);
+        assert_eq!(ef1.params, ef2.params, "streamed ring EF must be thread-count invariant");
+        assert!(ef1.summary.test_top1 > 0.5, "EF top1={}", ef1.summary.test_top1);
+    }
+
     /// Overlapped runs still learn and report sane figures (not just
     /// match a baseline).
     #[test]
@@ -1008,28 +1162,41 @@ mod tests {
         let mut cfg = tiny_cfg("orq-5", 2);
         cfg.threads = 2;
         cfg.overlap = true;
+        cfg.sections = Some(2);
         let factory = native_backend_factory(&cfg.model).unwrap();
         let out = Trainer::new(cfg, &ds).unwrap().run(factory).unwrap();
         assert!(out.summary.test_top1 > 0.6, "top1={}", out.summary.test_top1);
         assert!(out.summary.mean_quant_rel_mse > 0.0);
     }
 
-    /// The overlap negative space: sections = 0 and overlap-on-fp die in
-    /// config validation; more sections than model layers dies in the
-    /// trainer's pre-spawn check with an actionable message.
+    /// The overlap negative space: sections = 0, sections without
+    /// overlap, and overlap-on-fp die in config validation; more
+    /// sections than model layers dies in the trainer's pre-spawn check
+    /// with an actionable message.
     #[test]
     fn overlap_rejects_bad_shapes() {
         let ds = tiny_ds();
         let mut cfg = tiny_cfg("orq-3", 2);
         cfg.overlap = true;
-        cfg.sections = 0;
+        cfg.sections = Some(0);
         assert!(Trainer::new(cfg, &ds).is_err(), "sections = 0");
+        let mut cfg = tiny_cfg("orq-3", 2);
+        cfg.sections = Some(2); // no overlap: silently-ignored knob is an error
+        assert!(Trainer::new(cfg, &ds).is_err(), "sections without overlap");
         let mut cfg = tiny_cfg("fp", 2);
         cfg.overlap = true;
         assert!(Trainer::new(cfg, &ds).is_err(), "overlap on fp");
         let mut cfg = tiny_cfg("orq-3", 2);
         cfg.overlap = true;
-        cfg.sections = 3; // mlp:16-32-8 has 2 layers
+        cfg.sections = Some(3); // mlp:16-32-8 has 2 layers
+        let factory = native_backend_factory(&cfg.model).unwrap();
+        let err = Trainer::new(cfg, &ds).unwrap().run(factory).unwrap_err();
+        assert!(err.to_string().contains("layer count"), "{err}");
+        // streaming inherits the same pre-spawn check via the implied
+        // overlap (default 4 sections > 2 layers)
+        let mut cfg = tiny_cfg("orq-3", 2);
+        cfg.overlap = true;
+        cfg.stream_sections = true;
         let factory = native_backend_factory(&cfg.model).unwrap();
         let err = Trainer::new(cfg, &ds).unwrap().run(factory).unwrap_err();
         assert!(err.to_string().contains("layer count"), "{err}");

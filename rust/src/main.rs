@@ -70,7 +70,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         "config", "model", "method", "workers", "steps", "batch", "dataset", "bucket",
         "clip", "backend", "artifacts", "out", "seed", "lr", "eval-every", "topology",
         "groups", "shards", "staleness", "error-feedback", "quantize-downlink",
-        "threads", "pool", "overlap", "sections",
+        "threads", "pool", "overlap", "sections", "stream-sections",
         "intra-bandwidth", "intra-latency", "inter-bandwidth", "inter-latency",
     ])?;
     let mut cfg = match args.get("config") {
@@ -143,7 +143,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.overlap = true;
     }
     if let Some(s) = args.get_parse::<usize>("sections")? {
-        cfg.sections = s;
+        cfg.sections = Some(s);
+    }
+    if args.flag("stream-sections") {
+        cfg.stream_sections = true;
+        cfg.overlap = true; // same implication as `stream_sections = true` in a config file
     }
     if let Some(b) = args.get_parse::<f64>("intra-bandwidth")? {
         cfg.links.intra_bandwidth = b;

@@ -236,6 +236,70 @@ fn pool_key_validates_and_cli_spelling_parses() {
     assert!(a.get_parse::<bool>("pool").is_err());
 }
 
+/// `sections` is an overlap knob: set without `--overlap` (or the
+/// streaming flag that implies it) it would silently do nothing, so the
+/// config layer rejects the combination with the fix spelled out.
+#[test]
+fn sections_without_overlap_rejected_with_actionable_error() {
+    let base = "[train]\nworkers = 2\nbatch = 64\nmethod = \"terngrad\"\n";
+    let err = cfg_from(&format!("{base}sections = 2")).unwrap_err();
+    assert!(err.to_string().contains("silently ignored"), "{err}");
+    assert!(err.to_string().contains("--overlap"), "{err}");
+    // the fix the message names works, through either spelling
+    assert!(cfg_from(&format!("{base}sections = 2\noverlap = true")).is_ok());
+    assert!(cfg_from(&format!("{base}sections = 2\nstream_sections = true")).is_ok());
+    // CLI: --sections without --overlap hits the same validate wall
+    let a = args("train --method terngrad --sections 2");
+    assert_eq!(a.get_parse::<usize>("sections").unwrap(), Some(2));
+    let mut cfg = orq::config::TrainConfig {
+        workers: 2,
+        batch: 64,
+        method: "terngrad".into(),
+        ..Default::default()
+    };
+    cfg.sections = a.get_parse::<usize>("sections").unwrap();
+    let err = cfg.validate().unwrap_err();
+    assert!(err.to_string().contains("--overlap"), "{err}");
+}
+
+/// The streaming flag's CLI spelling and its config-layer contract:
+/// `stream_sections` implies `overlap`, needs a synchronous exchange,
+/// and the broken direct construction (streaming without overlap) is
+/// rejected rather than silently un-streamed.
+#[test]
+fn stream_sections_cli_and_config_contract() {
+    // bare flag, guarded by the train allowlist
+    let a = args("train --method terngrad --stream-sections");
+    assert!(a.flag("stream-sections"));
+    assert!(a.check_known(&["method", "stream-sections"]).is_ok());
+    let a = args("train --stream-sectionss");
+    assert!(a.check_known(&["stream-sections"]).is_err());
+    // config spelling implies overlap
+    let c = cfg_from(
+        "[train]\nworkers = 2\nbatch = 64\nmethod = \"terngrad\"\nstream_sections = true",
+    )
+    .unwrap();
+    assert!(c.stream_sections && c.overlap);
+    // a staleness window would reorder section frames across rounds —
+    // streaming is synchronous-only, and the message says so
+    let err = cfg_from(
+        "[train]\nworkers = 2\nbatch = 64\nmethod = \"terngrad\"\n\
+         topology = \"sharded-ps\"\nshards = 2\nstaleness = 1\nstream_sections = true",
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("synchronous"), "{err}");
+    // direct construction that breaks the implication is a typed error
+    let mut c = orq::config::TrainConfig {
+        workers: 2,
+        batch: 64,
+        method: "terngrad".into(),
+        ..Default::default()
+    };
+    c.stream_sections = true;
+    c.overlap = false;
+    assert!(c.validate().is_err());
+}
+
 #[test]
 fn cli_parser_rejects_malformed_input() {
     // bare operand after the subcommand

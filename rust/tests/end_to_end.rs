@@ -46,7 +46,8 @@ fn cfg(method: &str) -> TrainConfig {
         threads: 1,
         pool: true,
         overlap: false,
-        sections: 4,
+        sections: None,
+        stream_sections: false,
         links: orq::config::LinkConfig::default(),
     }
 }
