@@ -15,6 +15,9 @@
 //!
 //! `--threads N` runs the parallel codec per node (the big-bucket rows
 //! shard well); `--pool false` reverts to per-round scoped threads.
+//! `--trace FILE` records the final (largest-bucket, last-method) run at
+//! `fine` level and writes the Chrome trace + metrics JSON pair — the
+//! CI smoke job uploads these as artifacts.
 
 use orq::bench::print_rows;
 use orq::cli::Args;
@@ -27,6 +30,7 @@ fn main() -> orq::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     args.check_known(&[
         "steps", "topology", "workers", "groups", "shards", "staleness", "threads", "pool",
+        "trace",
     ])?;
     let steps = args.get_parse::<usize>("steps")?.unwrap_or(250);
     let topology = args.get_parse::<Topology>("topology")?.unwrap_or_default();
@@ -45,14 +49,21 @@ fn main() -> orq::Result<()> {
     let staleness = args.get_parse::<usize>("staleness")?.unwrap_or(0);
     let threads = args.get_parse::<usize>("threads")?.unwrap_or(1);
     let pool = args.get_parse::<bool>("pool")?.unwrap_or(true);
+    let trace_path = args.get("trace").map(str::to_string);
 
     let ds = ClassDataset::generate(DatasetSpec::cifar10_like(64));
     let buckets = [128usize, 512, 2048, 8192, 32768];
+    let methods = ["terngrad", "orq-3"];
     let mut rows = Vec::new();
-    for method in ["terngrad", "orq-3"] {
+    for method in methods {
         let mut row = vec![method.to_string()];
         let mut last_shard_bytes: Option<Vec<u64>> = None;
         for &d in &buckets {
+            // Trace exactly one run per invocation (the last sweep cell)
+            // so the artifact stays small and deterministic in shape.
+            let traced = trace_path.is_some()
+                && method == *methods.last().unwrap()
+                && d == *buckets.last().unwrap();
             let cfg = TrainConfig {
                 model: "mlp:64-192-192-10".into(),
                 dataset: "cifar10".into(),
@@ -70,11 +81,27 @@ fn main() -> orq::Result<()> {
                 staleness,
                 threads,
                 pool,
+                trace_level: if traced {
+                    orq::obs::TraceLevel::Fine
+                } else {
+                    orq::obs::TraceLevel::Off
+                },
                 ..TrainConfig::default()
             };
             let factory = native_backend_factory(&cfg.model)?;
             let out = Trainer::new(cfg, &ds)?.run(factory)?;
             row.push(format!("{:.2}", out.summary.test_top1 * 100.0));
+            if traced {
+                let path = trace_path.as_deref().expect("traced implies a path");
+                let obs = out.obs.as_ref().expect("traced runs carry events");
+                std::fs::write(path, orq::obs::chrome_trace_json(&obs.events).dump())?;
+                let mjson = orq::obs::metrics_json(&out.series, &obs.registry);
+                std::fs::write(format!("{path}.metrics.json"), mjson.dump())?;
+                println!(
+                    "{method}: traced d={d} run → {path} ({} events)",
+                    obs.events.len()
+                );
+            }
             last_shard_bytes = out.shard_bytes;
         }
         rows.push(row);

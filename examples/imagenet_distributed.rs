@@ -74,7 +74,9 @@ fn main() -> orq::Result<()> {
         threads,
         pool,
         overlap: false,
-        sections: 4,
+        sections: None,
+        stream_sections: false,
+        trace_level: orq::obs::TraceLevel::Off,
         links: orq::config::LinkConfig::default(),
     };
     println!(

@@ -277,6 +277,7 @@ pub mod suite {
             overlap: false,
             sections: None,
             stream_sections: false,
+            trace_level: crate::obs::TraceLevel::Off,
             links: crate::config::LinkConfig::default(),
         }
     }

@@ -29,7 +29,7 @@
 //! (`path: "scalar"`, `quant::random_round_reference`), with
 //! `speedup.round_twopass = scalar / two-pass`.
 //!
-//! `BENCH_exchange.json` (v6): `{ schema: "orq.perfbench.exchange/v6",
+//! `BENCH_exchange.json` (v7): `{ schema: "orq.perfbench.exchange/v7",
 //! mode, elements, workers, threads, bucket_size, quantize: [{method,
 //! path: "serial"|"parallel"|"parallel-scoped", mean_s, melem_s}],
 //! rounds: [{topology, path, mean_s, wire_bytes, sim_time_s, shards,
@@ -40,9 +40,10 @@
 //! quantized_ef: {wire_bytes_up, wire_bytes_down, mean_s, sim_time_s}},
 //! streaming: {topology, sections, ready_last_s, flat_round_sim,
 //! streamed_round_sim, flat_s, streamed_s, ps_model_err_pct, timeline:
-//! [{section, ready_t, link_start_t, done_t}]}, speedup:
+//! [{section, ready_t, link_start_t, done_t}]}, obs: {topology, path,
+//! untraced_s, traced_s, events_per_round, wire_bytes}, speedup:
 //! {quantize_encode, ps_round, pooled_round, overlap_round,
-//! downlink_compression, streamed_round} }`. v3 preserved every v2 field (which
+//! downlink_compression, streamed_round, obs_overhead} }`. v3 preserved every v2 field (which
 //! preserved every v1 field) and added: the `path: "parallel-scoped"`
 //! quantize and ps-round entries — the retained PR 3/4 per-round
 //! `std::thread::scope` execution, measured in the same run as the
@@ -82,7 +83,13 @@
 //! starts at backward start and includes every readiness wait, so the
 //! fair flat baseline is backward end plus the flat round). The CI
 //! floor gates it at 0.9: it catches streaming regressing the round,
-//! not runner noise.
+//! not runner noise. v7 adds the `obs` section (the PR 9 tentpole): the
+//! same pooled-parallel ps round untraced (the disabled
+//! `obs::TraceRecorder` — one relaxed atomic load per site) vs fully
+//! traced at `fine` level (phase spans, collective-interior hops, pool
+//! queue-wait counters), with wire bytes asserted identical across the
+//! two runs. `speedup.obs_overhead = untraced / traced` and the CI
+//! floor gates it at 0.95 — a fully traced round may cost at most ~5%.
 //!
 //! `--smoke` runs small sizes, then re-parses both artifacts and asserts
 //! the schema plus monotone sanity (sizes and rates positive, fixed-width
@@ -540,6 +547,7 @@ fn bench_exchange(
     let (downlink, downlink_compression) =
         bench_downlink(bench, workers, bucket, method, &grads)?;
     let (streaming, streamed_round) = bench_streaming(bench, workers, bucket, method, &grads)?;
+    let (obs, obs_overhead) = bench_obs_overhead(bench, workers, threads, bucket, method, &grads)?;
 
     let speedup = obj(vec![
         ("quantize_encode", Json::Num(qe[0] / qe[1].max(1e-12))),
@@ -561,19 +569,25 @@ fn bench_exchange(
         // starts at backward start), so the CI floor catches streaming
         // regressing the round, not runner noise.
         ("streamed_round", Json::Num(streamed_round)),
+        // untraced / fine-traced pooled ps round — the PR 9 observability
+        // contract the CI floor gates (a fully traced round may cost at
+        // most ~5%; a miss means recording leaked onto the disabled fast
+        // path or the traced path grew a hot-loop allocation).
+        ("obs_overhead", Json::Num(obs_overhead)),
     ]);
     println!(
         "exchange speedups ({threads} threads): quantize+encode ×{:.2} (serial/pooled), \
          ps round ×{:.2} (serial/pooled), ps round ×{:.2} (scoped/pooled), \
          backward+encode ×{overlap_round:.2} (flat/overlapped), \
          downlink bytes ×{downlink_compression:.2} (fp/quantized broadcast), \
-         streamed round ×{streamed_round:.2} (backward-end+flat / streamed, simulated)",
+         streamed round ×{streamed_round:.2} (backward-end+flat / streamed, simulated), \
+         obs overhead ×{obs_overhead:.2} (untraced/traced)",
         qe[0] / qe[1].max(1e-12),
         ps_round[0] / ps_round[1].max(1e-12),
         ps_round[2] / ps_round[1].max(1e-12)
     );
     Ok(obj(vec![
-        ("schema", Json::Str("orq.perfbench.exchange/v6".into())),
+        ("schema", Json::Str("orq.perfbench.exchange/v7".into())),
         ("mode", Json::Str(mode.into())),
         ("elements", Json::Num(n as f64)),
         ("workers", Json::Num(workers as f64)),
@@ -585,8 +599,94 @@ fn bench_exchange(
         ("overlap", overlap),
         ("downlink", downlink),
         ("streaming", streaming),
+        ("obs", obs),
         ("speedup", speedup),
     ]))
+}
+
+/// Tracing overhead (the PR 9 observability contract): the same
+/// pooled-parallel ps round with the recorder disabled (one relaxed
+/// atomic load per call site — the shipping default) vs recording at
+/// `fine` level (worker phase spans, ps gather/uplink interior spans,
+/// pool queue-wait counters and task spans). Wire bytes are asserted
+/// identical across the two runs outside the timers — tracing must be
+/// invisible in the results, not just cheap. The traced recorder is
+/// drained after the measurement so the figure includes buffering but
+/// not export.
+///
+/// Returns the `obs` JSON section and the untraced/traced round-time
+/// ratio (`speedup.obs_overhead`, CI floor 0.95: a fully traced round
+/// may cost at most ~5%).
+fn bench_obs_overhead(
+    bench: &Bench,
+    workers: usize,
+    threads: usize,
+    bucket: usize,
+    method: &str,
+    grads: &[Vec<f32>],
+) -> Result<(Json, f64)> {
+    use orq::obs::{TraceLevel, TraceRecorder};
+
+    let cfg = ExchangeConfig::flat(Topology::Ps, Link::ten_gbps());
+    let mut rows = Vec::new();
+    let mut mean_s = [0.0f64; 2];
+    let mut wire = [0u64; 2];
+    let mut events_per_round = 0.0f64;
+    for (i, traced) in [false, true].into_iter().enumerate() {
+        let recorder = if traced {
+            TraceRecorder::new(TraceLevel::Fine)
+        } else {
+            TraceRecorder::off()
+        };
+        let spec = WireSpec { seed: 7, ..WireSpec::new(method, bucket) }
+            .with_threads(threads)
+            .with_pool_mode(PoolMode::Shared(PoolHandle::with_recorder(
+                threads,
+                recorder.clone(),
+            )))
+            .with_recorder(recorder.clone());
+        // one validated round outside the timer: stats for the
+        // bit-identity observable, and an exact per-round event count
+        let (_, stats) = run_rounds(&cfg, &spec, grads, 1)?;
+        wire[i] = stats.wire_bytes;
+        if traced {
+            events_per_round = recorder.drain().len() as f64;
+        }
+        let label = if traced { "ps round pooled traced-fine" } else { "ps round pooled untraced" };
+        let m = bench.measure(label, None, || {
+            let out = run_rounds(&cfg, &spec, grads, 1).expect("validated above");
+            std::hint::black_box(out.1.wire_bytes);
+        });
+        if traced {
+            // free the buffered iterations; export cost is not the figure
+            drop(recorder.drain());
+        }
+        mean_s[i] = m.mean_s;
+        rows.push(m);
+    }
+    assert_eq!(
+        wire[0], wire[1],
+        "tracing changed the wire bytes — the recorder must be invisible in results"
+    );
+    print_table(
+        &format!("Tracing overhead — ps, {workers} workers, {method}, d={bucket}, t={threads}"),
+        &rows,
+    );
+    let ratio = mean_s[0] / mean_s[1].max(1e-12);
+    println!(
+        "obs overhead: untraced {:.3e}s vs traced {:.3e}s per round \
+         (×{ratio:.3}, {:.0} events/round)",
+        mean_s[0], mean_s[1], events_per_round
+    );
+    let section = obj(vec![
+        ("topology", Json::Str("ps".into())),
+        ("path", Json::Str("parallel".into())),
+        ("untraced_s", Json::Num(mean_s[0])),
+        ("traced_s", Json::Num(mean_s[1])),
+        ("events_per_round", Json::Num(events_per_round)),
+        ("wire_bytes", Json::Num(wire[0] as f64)),
+    ]);
+    Ok((section, ratio))
 }
 
 /// Section-framed streaming (the PR 8 tentpole figure): the same ps
@@ -1090,7 +1190,7 @@ fn validate_codec(j: &Json) -> Result<()> {
 
 fn validate_exchange(j: &Json) -> Result<()> {
     let j = &Json::parse(&j.dump())?;
-    if j.req("schema")?.as_str() != Some("orq.perfbench.exchange/v6") {
+    if j.req("schema")?.as_str() != Some("orq.perfbench.exchange/v7") {
         return Err(fail("bad exchange schema tag".into()));
     }
     for key in ["mode", "elements", "workers", "threads", "bucket_size"] {
@@ -1270,6 +1370,21 @@ fn validate_exchange(j: &Json) -> Result<()> {
         }
         prev_done = done;
     }
+    // v7: the obs section measures the same pooled ps round untraced vs
+    // fine-traced; a traced round must actually record something, and
+    // both figures must be real timings.
+    let ob = j.req("obs")?;
+    ob.req("topology")?;
+    ob.req("path")?;
+    for key in ["untraced_s", "traced_s", "wire_bytes"] {
+        let v = req_f64(ob, key)?;
+        if !v.is_finite() || v <= 0.0 {
+            return Err(fail(format!("obs {key} = {v}")));
+        }
+    }
+    if req_f64(ob, "events_per_round")? < 1.0 {
+        return Err(fail("obs events_per_round < 1 — the traced round recorded nothing".into()));
+    }
     let sp = j.req("speedup")?;
     for key in [
         "quantize_encode",
@@ -1278,6 +1393,7 @@ fn validate_exchange(j: &Json) -> Result<()> {
         "overlap_round",
         "downlink_compression",
         "streamed_round",
+        "obs_overhead",
     ] {
         let v = req_f64(sp, key)?;
         if !v.is_finite() || v <= 0.0 {

@@ -95,6 +95,7 @@ USAGE:
             [--quantize-downlink] [--threads N]
             [--pool true|false] [--overlap] [--sections N]
             [--stream-sections] [--backend native|pjrt]
+            [--trace FILE] [--trace-level off|round|fine]
             [--intra-bandwidth BPS] [--intra-latency S]
             [--inter-bandwidth BPS] [--inter-latency S]
             [--artifacts DIR] [--out DIR] [--seed N]
@@ -140,6 +141,15 @@ STREAMING: --stream-sections (implies --overlap) pushes each staged section
        bit-identical to the flat overlap run; ring runs one
        reduce-scatter/all-gather per section (deterministic, equivalent to
        its serial replay). Requires --staleness 0
+TRACING: --trace FILE records the run and writes a Chrome trace-event JSON
+       (load it in chrome://tracing or Perfetto; one row per worker, server
+       shard and pool thread, on both the wall clock and the simulated link
+       clock) plus FILE.metrics.json (per-round series, named counters, and
+       the measured-vs-model drift section — < 1% on every topology).
+       --trace-level picks the detail: round (phase spans per training
+       round), fine (adds collective-interior hops, pool queue waits and
+       streamed-section instants; the --trace default). Tracing off costs
+       one branch per site; results are bit-identical traced or not
 ";
 
 #[cfg(test)]

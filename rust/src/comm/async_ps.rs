@@ -83,7 +83,7 @@ use super::link::{Link, LinkMap, TrafficMeter};
 use super::ps::SECTION_MSG_OFFSET;
 use super::shard::{
     begin_frame_into, encode_frame_into, finish_frame, parse_frame, shard_range,
-    split_section_payload, Frame, FrameKind, StalenessStats,
+    sharded_time, split_section_payload, Frame, FrameKind, StalenessStats,
 };
 use crate::codec::{self, DecodeScratch};
 use crate::error::{Error, Result};
@@ -212,6 +212,7 @@ struct ShardServer {
     mean: Vec<f32>,
     payload: Vec<u8>,
     scratch: DecodeScratch,
+    recorder: crate::obs::TraceRecorder,
 }
 
 impl ShardServer {
@@ -371,17 +372,25 @@ impl ShardServer {
     /// shutdown); `Err` = protocol violation to report.
     fn serve_round(&mut self) -> Result<bool> {
         let r = self.round;
+        // Each shard runs in its own thread, so wall-clock spans on its
+        // own track are race-free; the gather span includes the blocking
+        // wait for the slowest worker's upload.
+        let fine = self.recorder.is_fine();
+        let track = crate::obs::Track::Shard(self.shard as u16);
         let mut up_bytes = Vec::with_capacity(self.workers);
         let mut stream = Vec::new();
-        match self.streaming {
-            Some(nsec) => match self.gather_sections(nsec, r, &mut up_bytes, &mut stream)? {
-                true => {}
-                false => return Ok(false),
-            },
-            None => match self.gather_flat(r, &mut up_bytes)? {
-                true => {}
-                false => return Ok(false),
-            },
+        if fine {
+            self.recorder.begin(track, "shard_gather");
+        }
+        let gathered = match self.streaming {
+            Some(nsec) => self.gather_sections(nsec, r, &mut up_bytes, &mut stream),
+            None => self.gather_flat(r, &mut up_bytes),
+        };
+        if fine {
+            self.recorder.end(track, "shard_gather");
+        }
+        if !gathered? {
+            return Ok(false);
         }
         // An empty chunk means the bucket grid is cut finer than it has
         // buckets (shards > ⌈n / d⌉) — reject with the actionable error
@@ -397,6 +406,9 @@ impl ShardServer {
             )));
         }
         let inv = 1.0 / self.workers as f64;
+        if fine {
+            self.recorder.begin(track, "shard_reduce");
+        }
         self.mean.clear();
         self.mean.extend(self.acc.iter().map(|a| (*a * inv) as f32));
         // Encode the chunk mean once; workers and the coordinator decode
@@ -430,10 +442,20 @@ impl ShardServer {
             &self.payload,
             &mut frame,
         );
+        if fine {
+            self.recorder.end(track, "shard_reduce");
+            self.recorder.begin(track, "shard_broadcast");
+        }
         for tx in &self.downlinks {
             if tx.send(frame.clone()).is_err() {
+                if fine {
+                    self.recorder.end(track, "shard_broadcast");
+                }
                 return Ok(false);
             }
+        }
+        if fine {
+            self.recorder.end(track, "shard_broadcast");
         }
         if self.record_tx.send(ShardRecord::Round { round: r, up_bytes, stream, frame }).is_err()
         {
@@ -463,6 +485,13 @@ pub struct ShardedPsCollective {
     round: u64,
     /// K = 0 critical path: Σ_rounds max_shards (slowest uplink + bcast).
     sim_sync_s: f64,
+    /// K = 0 closed-form model: Σ_rounds [`sharded_time`] on the round's
+    /// observed byte totals (mean chunk vs slowest chunk — a genuine but
+    /// small error when the bucket grid splits raggedly across shards).
+    /// Streamed rounds mirror the recurrence, so their drift measures
+    /// accounting consistency. For K ≥ 1 the reported sim time *is* the
+    /// `async_time` closed form, so model and sim coincide by definition.
+    model_sync_s: f64,
     /// K ≥ 1 critical path: per-shard cumulative bandwidth-only busy time
     /// (latency is paid per staleness window, see `stats`).
     shard_bw_s: Vec<f64>,
@@ -582,6 +611,7 @@ impl ShardedPsCollective {
                 mean: Vec::new(),
                 payload: Vec::new(),
                 scratch: DecodeScratch::default(),
+                recorder: spec.recorder.clone(),
             };
             // Detached on purpose: the loop exits as soon as any of its
             // channels disconnects, so no join (which could deadlock a
@@ -617,6 +647,7 @@ impl ShardedPsCollective {
                 buffered: Vec::new(),
                 chunk: Vec::new(),
                 scratch: DecodeScratch::default(),
+                recorder: spec.recorder.clone(),
             })
             .collect();
         Ok((
@@ -630,6 +661,7 @@ impl ShardedPsCollective {
                 meter: TrafficMeter::default(),
                 round: 0,
                 sim_sync_s: 0.0,
+                model_sync_s: 0.0,
                 shard_bw_s: vec![0.0; shards],
                 per_shard_bytes: vec![0; shards],
                 staleness_stats: StalenessStats::default(),
@@ -654,6 +686,8 @@ impl Collective for ShardedPsCollective {
         let mut assembled = self.pool.pop().unwrap_or_default();
         assembled.clear();
         let mut round_time = 0.0f64;
+        let mut round_up_bytes = 0u64;
+        let mut round_down_bytes = 0u64;
         for s in 0..self.shards {
             let rec = self.record_rxs[s].recv().map_err(|_| {
                 Error::Comm(format!("sharded-ps shard {s} died mid-round"))
@@ -674,6 +708,7 @@ impl Collective for ShardedPsCollective {
             for &b in &up_bytes {
                 self.meter.record_up(&self.link, b);
                 self.per_shard_bytes[s] += b as u64;
+                round_up_bytes += b as u64;
                 up_max = up_max.max(self.link.transfer_time(b));
                 up_bw_max = up_bw_max.max(bw_time(&self.link, b));
             }
@@ -701,6 +736,7 @@ impl Collective for ShardedPsCollective {
             // convention).
             self.meter.record_down(&self.link, frame.len());
             self.per_shard_bytes[s] += frame.len() as u64;
+            round_down_bytes += frame.len() as u64;
             round_time = round_time.max(up_max + self.link.transfer_time(frame.len()));
             self.shard_bw_s[s] += up_bw_max + bw_time(&self.link, frame.len());
             // Decode the same broadcast bytes the workers decode; shard
@@ -711,6 +747,15 @@ impl Collective for ShardedPsCollective {
             assembled.extend_from_slice(&self.chunk);
         }
         self.sim_sync_s += round_time;
+        if self.streaming.is_some() {
+            self.model_sync_s += round_time;
+        } else {
+            // Per-worker upload (the model's `up_bytes` is one worker's
+            // full quantized gradient, sliced evenly across shards).
+            let up = (round_up_bytes / self.workers as u64) as usize;
+            self.model_sync_s +=
+                sharded_time(&self.link, self.workers, self.shards, up, round_down_bytes as usize);
+        }
         self.ready.push_back(assembled);
         mean_out.clear();
         if t >= self.staleness {
@@ -730,15 +775,17 @@ impl Collective for ShardedPsCollective {
     }
 
     fn stats(&self) -> CommStats {
-        let sim_time_s = if self.staleness == 0 {
-            self.sim_sync_s
+        let (sim_time_s, model_time_s) = if self.staleness == 0 {
+            (self.sim_sync_s, self.model_sync_s)
         } else {
             // Pipelined: shards serve rounds back-to-back (bandwidth paid
             // in full on the slowest shard), latency once per window —
-            // the async_time model with measured per-frame bytes.
+            // the async_time model with measured per-frame bytes. The sim
+            // time *is* the closed form here, so the model coincides.
             let bw = self.shard_bw_s.iter().cloned().fold(0.0, f64::max);
             let barriers = self.round.div_ceil(self.staleness + 1);
-            bw + barriers as f64 * 2.0 * self.link.latency_s
+            let t = bw + barriers as f64 * 2.0 * self.link.latency_s;
+            (t, t)
         };
         CommStats {
             wire_bytes: self.meter.total_bytes(),
@@ -747,6 +794,7 @@ impl Collective for ShardedPsCollective {
             wire_bytes_up: self.meter.bytes_up,
             wire_bytes_down: self.meter.bytes_down,
             sim_time_s,
+            model_time_s,
             messages: self.meter.messages,
             staleness: self.staleness_stats,
         }
@@ -783,6 +831,7 @@ pub struct ShardedPsWorker {
     buffered: Vec<(usize, Vec<u8>, f64)>,
     chunk: Vec<f32>,
     scratch: DecodeScratch,
+    recorder: crate::obs::TraceRecorder,
 }
 
 impl ShardedPsWorker {
@@ -863,10 +912,21 @@ impl WorkerExchange for ShardedPsWorker {
         mean_out.clear();
         mean_out.resize(n, 0.0);
         if r >= self.staleness {
+            let fine = self.recorder.is_fine();
+            let wait_from = fine.then(|| self.recorder.now_us());
             for s in 0..self.shards {
                 let bytes = self.down_rxs[s].recv().map_err(|_| {
                     Error::Comm(format!("sharded-ps shard {s} hung up before its mean"))
                 })?;
+                if let Some(from) = wait_from.filter(|_| s == 0) {
+                    // Wall time this worker blocked on the first (and so
+                    // the gating) mean frame of its staleness window.
+                    self.recorder.counter(
+                        crate::obs::Track::Worker(self.id as u16),
+                        "staleness_wait_us",
+                        (self.recorder.now_us() - from) as f64,
+                    );
+                }
                 let f = parse_frame(&bytes)?;
                 check_mean_frame(&f, s, r, self.staleness)?;
                 codec::decode_flat_into(f.payload, &mut self.chunk, &mut self.scratch)?;
@@ -956,10 +1016,19 @@ impl WorkerExchange for ShardedPsWorker {
         let n = self.n.expect("layout set above");
         mean_out.clear();
         mean_out.resize(n, 0.0);
+        let fine = self.recorder.is_fine();
+        let wait_from = fine.then(|| self.recorder.now_us());
         for s in 0..self.shards {
             let bytes = self.down_rxs[s].recv().map_err(|_| {
                 Error::Comm(format!("sharded-ps shard {s} hung up before its mean"))
             })?;
+            if let Some(from) = wait_from.filter(|_| s == 0) {
+                self.recorder.counter(
+                    crate::obs::Track::Worker(self.id as u16),
+                    "staleness_wait_us",
+                    (self.recorder.now_us() - from) as f64,
+                );
+            }
             let f = parse_frame(&bytes)?;
             check_mean_frame(&f, s, r, 0)?;
             codec::decode_flat_into(f.payload, &mut self.chunk, &mut self.scratch)?;

@@ -118,6 +118,13 @@ pub struct CommStats {
     /// component.
     pub wire_bytes_down: u64,
     pub sim_time_s: f64,
+    /// What the closed-form time model (`ps_time`/`allreduce_time`/
+    /// `hier_time`/`sharded_time`/the streamed recurrences) predicts for
+    /// the same rounds, accumulated alongside [`sim_time_s`]
+    /// (Self::sim_time_s). The obs metrics artifact reports the
+    /// per-round difference as the model-drift section; the <1%
+    /// invariant the tests assert becomes observable in every run.
+    pub model_time_s: f64,
     pub messages: u64,
     /// Per-round applied-version age accounting. All-zero for the
     /// synchronous topologies; populated by [`Topology::ShardedPs`]
@@ -404,6 +411,12 @@ pub struct WireSpec {
     /// the legacy scoped-thread baseline. Wire bytes and decoded means
     /// are bit-identical across all three.
     pub pool: PoolMode,
+    /// Span recorder every node built from this spec writes into
+    /// (coordinator phases, collective interiors, sharded-PS shard
+    /// threads). Defaults to a disabled recorder, whose calls cost one
+    /// atomic load; tracing never touches any RNG stream, so wire bytes
+    /// stay bit-identical with it on or off.
+    pub recorder: crate::obs::TraceRecorder,
 }
 
 impl WireSpec {
@@ -416,6 +429,7 @@ impl WireSpec {
             seed: 0,
             threads: 1,
             pool: PoolMode::default(),
+            recorder: crate::obs::TraceRecorder::off(),
         }
     }
 
@@ -428,6 +442,13 @@ impl WireSpec {
     /// Builder-style execution mode override (see [`PoolMode`]).
     pub fn with_pool_mode(mut self, pool: PoolMode) -> WireSpec {
         self.pool = pool;
+        self
+    }
+
+    /// Builder-style span-recorder override: every node built from this
+    /// spec traces into `recorder` (see [`crate::obs`]).
+    pub fn with_recorder(mut self, recorder: crate::obs::TraceRecorder) -> WireSpec {
+        self.recorder = recorder;
         self
     }
 
@@ -615,6 +636,10 @@ pub(crate) struct RoundTrace {
     pub(crate) worker: usize,
     pub(crate) step_bytes: Vec<usize>,
     pub(crate) stream: Vec<(f64, usize)>,
+    /// The worker's flat encoded message size this round (0 on streamed
+    /// rounds) — what the closed-form `allreduce_time`/`hier_time`
+    /// models take as the message size for drift accounting.
+    pub(crate) msg_bytes: usize,
 }
 
 /// Collect exactly one trace from each of `l` workers — `steps`

@@ -144,6 +144,14 @@ pub struct HierarchicalCollective {
     meter_intra: TrafficMeter,
     meter_inter: TrafficMeter,
     sim_time_s: f64,
+    /// Closed-form [`hier_time`] accumulated per flat round for the obs
+    /// drift section (the model prices the intra phase at `quant/m`
+    /// chunks without per-chunk headers, so a small genuine error is
+    /// expected). Streamed rounds mirror the executable recurrence —
+    /// the streamed model *is* that recurrence (`hier_streamed_time`),
+    /// so their drift measures accounting consistency.
+    model_time_s: f64,
+    recorder: crate::obs::TraceRecorder,
 }
 
 impl HierarchicalCollective {
@@ -274,6 +282,7 @@ impl HierarchicalCollective {
                 sec_order: Vec::new(),
                 stream_rows: Vec::new(),
                 flat_msg: Vec::new(),
+                last_msg_bytes: 0,
             });
         }
         Ok((
@@ -287,6 +296,8 @@ impl HierarchicalCollective {
                 meter_intra: TrafficMeter::default(),
                 meter_inter: TrafficMeter::default(),
                 sim_time_s: 0.0,
+                model_time_s: 0.0,
+                recorder: spec.recorder.clone(),
             },
             ends,
         ))
@@ -315,6 +326,8 @@ impl Collective for HierarchicalCollective {
         let steps = self.group_size + 3;
         let traces =
             collect_traces(&self.trace_rx, l, steps, self.streaming.unwrap_or(0), "hier")?;
+        let fine = self.recorder.is_fine();
+        let sim_before = self.sim_time_s;
         if self.streaming.is_some() {
             // Streamed leg: replaces the flat step it supersedes (hop 0
             // on the intra ring for m > 1, the leader uplink on the
@@ -341,6 +354,11 @@ impl Collective for HierarchicalCollective {
                 }
                 leg = leg.max(end);
             }
+            if fine && leg > 0.0 {
+                let t = crate::obs::Track::Coordinator;
+                self.recorder.begin_sim(t, "hier_stream_leg", self.sim_time_s);
+                self.recorder.end_sim(t, "hier_stream_leg", self.sim_time_s + leg);
+            }
             self.sim_time_s += leg;
         }
         // Synchronous-step critical path on the global grid: nodes
@@ -366,7 +384,40 @@ impl Collective for HierarchicalCollective {
                     meter.record_down(self.links.link(class), bytes);
                 }
             }
+            if fine && step > 0.0 {
+                let m = self.group_size;
+                let name = if k + 1 < m {
+                    "hier_rs_hop"
+                } else if k + 1 == m {
+                    "hier_gather"
+                } else if k == m {
+                    "hier_uplink"
+                } else if k == m + 1 {
+                    "hier_root_multicast"
+                } else {
+                    "hier_group_multicast"
+                };
+                let t = crate::obs::Track::Coordinator;
+                self.recorder.begin_sim(t, name, self.sim_time_s);
+                self.recorder.end_sim(t, name, self.sim_time_s + step);
+            }
             self.sim_time_s += step;
+        }
+        if self.streaming.is_some() {
+            // The streamed closed form *is* the executable recurrence
+            // (`hier_streamed_time` mirrors this loop), so the model here
+            // is the measured increment: the drift section then checks
+            // accounting consistency rather than a re-derivation.
+            self.model_time_s += self.sim_time_s - sim_before;
+        } else {
+            let m = self.group_size;
+            let quant = traces.iter().map(|tr| tr.msg_bytes).max().unwrap_or(0);
+            let down = traces
+                .iter()
+                .map(|tr| tr.step_bytes[m + 1].max(tr.step_bytes[m + 2]))
+                .max()
+                .unwrap_or(0);
+            self.model_time_s += hier_time(&self.links, l, self.workers / m, quant, down);
         }
         let mean = self
             .mean_rx
@@ -385,6 +436,7 @@ impl Collective for HierarchicalCollective {
             wire_bytes_up: self.meter_intra.bytes_up + self.meter_inter.bytes_up,
             wire_bytes_down: self.meter_intra.bytes_down + self.meter_inter.bytes_down,
             sim_time_s: self.sim_time_s,
+            model_time_s: self.model_time_s,
             messages: self.meter_intra.messages + self.meter_inter.messages,
             staleness: Default::default(),
         }
@@ -451,6 +503,9 @@ pub struct HierWorker {
     stream_rows: Vec<(f64, usize)>,
     /// The round's reassembled flat message (concat of all sections).
     flat_msg: Vec<u8>,
+    /// Encoded upload size of the current flat round (0 when streamed) —
+    /// the `quant_bytes` input of the coordinator's [`hier_time`] model.
+    last_msg_bytes: usize,
 }
 
 impl HierWorker {
@@ -694,6 +749,7 @@ impl HierWorker {
             worker: self.id,
             step_bytes: std::mem::take(&mut self.step_bytes),
             stream: std::mem::take(&mut self.stream_rows),
+            msg_bytes: std::mem::take(&mut self.last_msg_bytes),
         };
         self.trace_tx.send(trace).map_err(|_| Self::hung_up("coordinator"))?;
         if let Some(tx) = &self.mean_tx {
@@ -983,6 +1039,7 @@ impl WorkerExchange for HierWorker {
         mean_out.clear();
         self.step_bytes.clear();
         self.step_bytes.resize(m + 3, 0);
+        self.last_msg_bytes = encoded.len();
 
         if self.workers == 1 {
             // Nothing to exchange: the mean of one contribution is itself.

@@ -128,6 +128,21 @@
 //! gate section `i`'s transfer at `max(ready_i, link_free)`; the
 //! executable collectives reproduce them to < 1% via the per-frame
 //! readiness stamps, measured from the round's backward start.
+//!
+//! **Observability** ([`crate::obs`], `--trace out.json --trace-level
+//! fine`) — every collective carries the [`WireSpec::recorder`]
+//! ([`crate::obs::TraceRecorder`]): coordinators emit simulated-clock
+//! spans for their interior steps (PS gather/reduce, ring RS/AG hops,
+//! hier legs and multicast steps), sharded-PS shard threads emit
+//! wall-clock gather/reduce/broadcast spans on their own tracks, workers
+//! get streamed-section readiness/link-start/done instants and
+//! staleness-wait counters, and the [`OverlapEncoder`] stamps section
+//! staging/push instants. Each collective also accumulates its
+//! closed-form model time per round into [`CommStats::model_time_s`] so
+//! the metrics export can report measured-vs-model drift (< 1% by
+//! contract). Tracing off is one relaxed atomic load per call site and
+//! zero allocations — wire bytes and trained parameters are bit-identical
+//! with tracing on or off.
 
 // Non-test comm code must not `unwrap()`: dead peers, truncated frames
 // and codec failures all surface as `Err` on the coordinator. Provably

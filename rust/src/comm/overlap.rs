@@ -481,6 +481,12 @@ pub struct OverlapEncoder {
     /// across rounds.
     msgs: Vec<Vec<u8>>,
     section_bytes: Vec<usize>,
+    /// Trace recorder (from the wire spec) + the track staging instants
+    /// land on — [`set_track`](Self::set_track) points it at the owning
+    /// worker's row. Instants rather than spans: staging happens on the
+    /// backward thread inside the trainer's own phase spans.
+    recorder: crate::obs::TraceRecorder,
+    track: crate::obs::Track,
 }
 
 impl OverlapEncoder {
@@ -532,7 +538,14 @@ impl OverlapEncoder {
             arenas: Vec::new(),
             msgs: Vec::new(),
             section_bytes: Vec::new(),
+            recorder: spec.recorder.clone(),
+            track: crate::obs::Track::Driver,
         })
+    }
+
+    /// Point the staging instants at the owning worker's trace row.
+    pub fn set_track(&mut self, track: crate::obs::Track) {
+        self.track = track;
     }
 
     pub fn map(&self) -> &SectionMap {
@@ -585,6 +598,8 @@ impl OverlapEncoder {
         let map = &self.map;
         let bq = &self.bucketq;
         let q = self.quantizer.as_ref();
+        let (rec, track) = (self.recorder.clone(), self.track);
+        let fine = rec.is_fine();
         let mut loss = 0.0f32;
         if self.serial {
             // Start-anywhere serial overlap: encode each staged section
@@ -598,6 +613,9 @@ impl OverlapEncoder {
                     let s = &map.sections[next];
                     let a = &mut arenas[next];
                     stage(a, g, memory, &s.elems);
+                    if fine {
+                        rec.instant(track, "section_staged");
+                    }
                     encode_section(bq, q, round_key, s.buckets.clone(), s.elems.start, enc, a);
                 }
             };
@@ -618,6 +636,9 @@ impl OverlapEncoder {
                                 let s = &map.sections[next];
                                 let a = slots[next].take().expect("section dispatched once");
                                 stage(a, g, memory, &s.elems);
+                                if fine {
+                                    rec.instant(track, "section_staged");
+                                }
                                 let (buckets, e0) = (s.buckets.clone(), s.elems.start);
                                 sc.spawn(move || {
                                     encode_section(bq, q, round_key, buckets, e0, enc, a)
@@ -639,6 +660,9 @@ impl OverlapEncoder {
                             let s = &map.sections[next];
                             let a = slots[next].take().expect("section dispatched once");
                             stage(a, g, memory, &s.elems);
+                            if fine {
+                                rec.instant(track, "section_staged");
+                            }
                             let (buckets, e0) = (s.buckets.clone(), s.elems.start);
                             scope.spawn(move || {
                                 encode_section(bq, q, round_key, buckets, e0, enc, a)
@@ -725,6 +749,8 @@ impl OverlapEncoder {
         let q = self.quantizer.as_ref();
         let (levels, packing, d) = (self.levels, self.packing, self.bucketq.bucket_size);
         let scheme = self.scheme.as_str();
+        let (rec, track) = (self.recorder.clone(), self.track);
+        let fine = rec.is_fine();
         let mut sink_err: Option<Error> = None;
         let mut loss = 0.0f32;
         if self.serial {
@@ -738,6 +764,9 @@ impl OverlapEncoder {
                     let s = &map.sections[next];
                     let a = &mut arenas[next];
                     stage(a, g, memory, &s.elems);
+                    if fine {
+                        rec.instant(track, "section_staged");
+                    }
                     encode_section(bq, q, round_key, s.buckets.clone(), s.elems.start, enc, a);
                     let m = &mut msgs[next];
                     m.clear();
@@ -751,6 +780,9 @@ impl OverlapEncoder {
                     );
                     m.extend_from_slice(&a.seg);
                     if sink_err.is_none() {
+                        if fine {
+                            rec.instant_sim(track, "section_push", ready_at[next]);
+                        }
                         if let Err(e) = sink(next, m, ready_at[next]) {
                             sink_err = Some(e);
                         }
@@ -785,6 +817,9 @@ impl OverlapEncoder {
                                     let s = &map.sections[idx];
                                     let a = slots[idx].take().expect("section dispatched once");
                                     stage(a, g, memory, &s.elems);
+                                    if fine {
+                                        rec.instant(track, "section_staged");
+                                    }
                                     let mut buf = std::mem::take(&mut msgs[idx]);
                                     let (buckets, e0, len) =
                                         (s.buckets.clone(), s.elems.start, s.elems.len());
@@ -806,6 +841,9 @@ impl OverlapEncoder {
                                         let Some(b) = pending[i].take() else { break };
                                         *next_sink = i;
                                         if sink_err.is_none() {
+                                            if fine {
+                                                rec.instant_sim(track, "section_push", ready_at[i]);
+                                            }
                                             if let Err(e) = sink(i, &b, ready_at[i]) {
                                                 *sink_err = Some(e);
                                             }
@@ -830,6 +868,9 @@ impl OverlapEncoder {
                                 let s = &map.sections[idx];
                                 let a = slots[idx].take().expect("section dispatched once");
                                 stage(a, g, memory, &s.elems);
+                                if fine {
+                                    rec.instant(track, "section_staged");
+                                }
                                 let mut buf = std::mem::take(&mut msgs[idx]);
                                 let (buckets, e0, len) =
                                     (s.buckets.clone(), s.elems.start, s.elems.len());
@@ -851,6 +892,9 @@ impl OverlapEncoder {
                                     let Some(b) = pending[i].take() else { break };
                                     *next_sink = i;
                                     if sink_err.is_none() {
+                                        if fine {
+                                            rec.instant_sim(track, "section_push", ready_at[i]);
+                                        }
                                         if let Err(e) = sink(i, &b, ready_at[i]) {
                                             *sink_err = Some(e);
                                         }
@@ -874,6 +918,9 @@ impl OverlapEncoder {
                 let b = pending[i].take().expect("all section encodes completed");
                 next_sink = i;
                 if sink_err.is_none() {
+                    if fine {
+                        rec.instant_sim(track, "section_push", ready_at[i]);
+                    }
                     if let Err(e) = sink(i, &b, ready_at[i]) {
                         sink_err = Some(e);
                     }

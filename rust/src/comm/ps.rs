@@ -29,6 +29,7 @@ use super::shard::{
 };
 use crate::codec::{self, DecodeScratch};
 use crate::error::{Error, Result};
+use crate::obs::{TraceRecorder as Recorder, Track};
 use crate::quant::bucket::QuantizedGrad;
 use crate::quant::error_feedback::ErrorFeedback;
 use crate::quant::parallel::BucketPipeline;
@@ -49,6 +50,12 @@ pub struct ParameterServer {
     pub meter: TrafficMeter,
     /// Simulated seconds spent in communication so far.
     pub sim_time_s: f64,
+    /// The gather leg of the most recent round (slowest uplink on flat
+    /// rounds, slowest worker's pipeline recurrence on streamed ones) —
+    /// what the drift accounting compares against the closed-form model.
+    pub(crate) last_gather_s: f64,
+    /// Span recorder ([`crate::obs`]); disabled by default.
+    pub(crate) recorder: Recorder,
 }
 
 /// A worker's end of the topology.
@@ -77,6 +84,8 @@ impl ParameterServer {
                 downlinks,
                 meter: TrafficMeter::default(),
                 sim_time_s: 0.0,
+                last_gather_s: 0.0,
+                recorder: Recorder::off(),
             },
             handles,
         )
@@ -90,6 +99,7 @@ impl ParameterServer {
     /// Advances simulated time by the slowest uplink (synchronous barrier).
     pub fn gather(&mut self) -> Result<Vec<Vec<u8>>> {
         let n = self.num_workers();
+        let base = self.sim_time_s;
         let mut slots: Vec<Option<Vec<u8>>> = (0..n).map(|_| None).collect();
         let mut max_uplink = 0.0f64;
         for _ in 0..n {
@@ -103,10 +113,17 @@ impl ParameterServer {
             if slots[id].is_some() {
                 return Err(Error::Comm(format!("duplicate upload from worker {id}")));
             }
-            max_uplink = max_uplink.max(self.link.transfer_time(bytes.len()));
+            let t = self.link.transfer_time(bytes.len());
+            max_uplink = max_uplink.max(t);
+            if self.recorder.is_fine() {
+                let w = Track::Worker(id as u16);
+                self.recorder.begin_sim(w, "uplink", base);
+                self.recorder.end_sim(w, "uplink", base + t);
+            }
             self.meter.record_up(&self.link, bytes.len());
             slots[id] = Some(bytes);
         }
+        self.last_gather_s = max_uplink;
         self.sim_time_s += max_uplink;
         // Infallible: the loop above filled all n slots (duplicates and
         // unknown ids were rejected), so every slot is Some.
@@ -126,6 +143,7 @@ impl ParameterServer {
     /// message of each starts at [`SECTION_MSG_OFFSET`].
     pub(crate) fn gather_sections(&mut self, nsec: usize, round: u64) -> Result<Vec<Vec<u8>>> {
         let l = self.num_workers();
+        let base = self.sim_time_s;
         let mut slots: Vec<Option<Vec<u8>>> = (0..l * nsec).map(|_| None).collect();
         let mut ends = vec![0.0f64; l];
         for _ in 0..l * nsec {
@@ -170,11 +188,21 @@ impl ParameterServer {
                     "duplicate section {sec} from worker {id}"
                 )));
             }
-            ends[id] = ends[id].max(ready) + self.link.transfer_time(bytes.len());
+            let start = ends[id].max(ready);
+            ends[id] = start + self.link.transfer_time(bytes.len());
+            if self.recorder.is_fine() {
+                // Instants, not spans: the sending worker thread may be
+                // recording on its own track concurrently.
+                let w = Track::Worker(id as u16);
+                self.recorder.instant_sim(w, "section_ready", base + ready);
+                self.recorder.instant_sim(w, "section_link_start", base + start);
+                self.recorder.instant_sim(w, "section_link_done", base + ends[id]);
+            }
             self.meter.record_up(&self.link, bytes.len());
             slots[id * nsec + sec] = Some(bytes);
         }
-        self.sim_time_s += ends.iter().copied().fold(0.0, f64::max);
+        self.last_gather_s = ends.iter().copied().fold(0.0, f64::max);
+        self.sim_time_s += self.last_gather_s;
         Ok(slots
             .into_iter()
             .map(|s| s.expect("one frame per (worker, section)"))
@@ -190,7 +218,12 @@ impl ParameterServer {
                 .map_err(|_| Error::Comm("worker hung up before broadcast".into()))?;
         }
         self.meter.record_down(&self.link, bytes.len());
-        self.sim_time_s += self.link.transfer_time(bytes.len());
+        let t = self.link.transfer_time(bytes.len());
+        if self.recorder.is_fine() {
+            self.recorder.begin_sim(Track::Coordinator, "broadcast", self.sim_time_s);
+            self.recorder.end_sim(Track::Coordinator, "broadcast", self.sim_time_s + t);
+        }
+        self.sim_time_s += t;
         Ok(())
     }
 }
@@ -239,6 +272,10 @@ pub struct PsCollective {
     streaming: Option<usize>,
     /// Round counter, validated against every section frame's round field.
     round: u64,
+    recorder: Recorder,
+    /// Closed-form model prediction accumulated alongside the simulated
+    /// time (see [`CommStats::model_time_s`]).
+    model_time_s: f64,
 }
 
 impl PsCollective {
@@ -261,7 +298,8 @@ impl PsCollective {
         let codec = GradCodec::new(spec)?;
         let down_ef = (error_feedback && quantize_downlink && !codec.is_fp())
             .then(|| codec.error_feedback());
-        let (server, handles) = ParameterServer::new(workers, links.inter);
+        let (mut server, handles) = ParameterServer::new(workers, links.inter);
+        server.recorder = spec.recorder.clone();
         let ends = handles
             .into_iter()
             .map(|handle| PsWorker {
@@ -288,6 +326,8 @@ impl PsCollective {
                 pipeline: spec.build_pipeline(),
                 streaming,
                 round: 0,
+                recorder: spec.recorder.clone(),
+                model_time_s: 0.0,
             },
             ends,
         ))
@@ -336,14 +376,47 @@ impl Collective for PsCollective {
 
     fn round(&mut self, mean_out: &mut Vec<f32>) -> Result<()> {
         let l = self.server.num_workers();
+        let rec = self.recorder.clone();
+        let fine = rec.is_fine();
+        // Flat rounds feed the closed-form star model the slowest upload;
+        // streamed rounds replay the pipeline recurrence, which *is* the
+        // streamed model, so the gather leg transfers over verbatim.
+        let mut model_up = 0.0f64;
         match self.streaming {
             Some(nsec) => {
-                let frames = self.server.gather_sections(nsec, self.round)?;
-                self.reduce_sections(&frames, l, nsec)?;
+                if fine {
+                    rec.begin(Track::Coordinator, "ps_gather");
+                }
+                let frames = self.server.gather_sections(nsec, self.round);
+                if fine {
+                    rec.end(Track::Coordinator, "ps_gather");
+                }
+                let frames = frames?;
+                model_up = self.server.last_gather_s;
+                if fine {
+                    rec.begin(Track::Coordinator, "ps_reduce");
+                }
+                let red = self.reduce_sections(&frames, l, nsec);
+                if fine {
+                    rec.end(Track::Coordinator, "ps_reduce");
+                }
+                red?;
                 self.round += 1;
             }
             None => {
-                let uploads = self.server.gather()?;
+                if fine {
+                    rec.begin(Track::Coordinator, "ps_gather");
+                }
+                let uploads = self.server.gather();
+                if fine {
+                    rec.end(Track::Coordinator, "ps_gather");
+                }
+                let uploads = uploads?;
+                let max_up = uploads.iter().map(Vec::len).max().unwrap_or(0);
+                model_up = super::ring::ps_time(&self.server.link, l, max_up, 0);
+                if fine {
+                    rec.begin(Track::Coordinator, "ps_reduce");
+                }
                 match &mut self.pipeline {
                     Some(pipe) => pipe.decode_reduce_into(&uploads, &mut self.acc)?,
                     None => {
@@ -370,6 +443,9 @@ impl Collective for PsCollective {
                             }
                         }
                     }
+                }
+                if fine {
+                    rec.end(Track::Coordinator, "ps_reduce");
                 }
             }
         }
@@ -402,6 +478,7 @@ impl Collective for PsCollective {
             codec::encode_fp_into(mean_out, &mut self.msg);
             self.server.broadcast(&self.msg)?;
         }
+        self.model_time_s += model_up + self.server.link.transfer_time(self.msg.len());
         Ok(())
     }
 
@@ -413,6 +490,7 @@ impl Collective for PsCollective {
             wire_bytes_up: self.server.meter.bytes_up,
             wire_bytes_down: self.server.meter.bytes_down,
             sim_time_s: self.server.sim_time_s,
+            model_time_s: self.model_time_s,
             messages: self.server.meter.messages,
             staleness: Default::default(),
         }

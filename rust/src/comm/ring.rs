@@ -143,8 +143,14 @@ pub struct RingAllReduce {
     mean_rx: Receiver<Vec<f32>>,
     meter: TrafficMeter,
     sim_time_s: f64,
+    /// Closed-form [`allreduce_time`] accumulated per round for the
+    /// obs drift section — the flat model ignores per-chunk headers and
+    /// bucket-grid rounding, so (unlike the star) the ring reports a
+    /// small *genuine* model error.
+    model_time_s: f64,
     /// `Some(sections)` when the ring was built for section streaming.
     streaming: Option<usize>,
+    recorder: crate::obs::TraceRecorder,
 }
 
 impl RingAllReduce {
@@ -216,6 +222,7 @@ impl RingAllReduce {
                 sec_means: Vec::new(),
                 sec_done: Vec::new(),
                 stream_rows: Vec::new(),
+                last_msg_bytes: 0,
             });
         }
         Ok((
@@ -226,7 +233,9 @@ impl RingAllReduce {
                 mean_rx,
                 meter: TrafficMeter::default(),
                 sim_time_s: 0.0,
+                model_time_s: 0.0,
                 streaming,
+                recorder: spec.recorder.clone(),
             },
             ends,
         ))
@@ -244,6 +253,7 @@ impl Collective for RingAllReduce {
         match self.streaming {
             None => {
                 let traces = collect_traces(&self.trace_rx, l, hops, 0, "ring")?;
+                let fine = self.recorder.is_fine();
                 // Synchronous-step critical path: all nodes transmit
                 // concurrently within a step, steps serialize.
                 for k in 0..hops {
@@ -260,8 +270,18 @@ impl Collective for RingAllReduce {
                             self.meter.record_down(&self.link, bytes);
                         }
                     }
+                    if fine {
+                        let name = if k < l - 1 { "rs_hop" } else { "ag_hop" };
+                        let c = crate::obs::Track::Coordinator;
+                        self.recorder.begin_sim(c, name, self.sim_time_s);
+                        self.recorder.end_sim(c, name, self.sim_time_s + step);
+                    }
                     self.sim_time_s += step;
                 }
+                // Model the round as one all-reduce of the largest flat
+                // message — the Table 1 closed form.
+                let msg = traces.iter().map(|tr| tr.msg_bytes).max().unwrap_or(0);
+                self.model_time_s += allreduce_time(&self.link, l, msg);
             }
             Some(nsec) => {
                 // One full reduce-scatter + all-gather per section, in push
@@ -271,11 +291,19 @@ impl Collective for RingAllReduce {
                 // max-transfer critical path. Stream rows carry readiness
                 // only — every wire byte is in `step_bytes`.
                 let traces = collect_traces(&self.trace_rx, l, nsec * hops, nsec, "ring")?;
+                let fine = self.recorder.is_fine();
+                let base = self.sim_time_s;
                 let mut t = 0.0f64;
+                let mut tm = 0.0f64;
                 for i in 0..nsec {
                     let gate =
                         traces.iter().map(|tr| tr.stream[i].0).fold(0.0f64, f64::max);
                     t = t.max(gate);
+                    if fine {
+                        let c = crate::obs::Track::Coordinator;
+                        self.recorder.instant_sim(c, "section_ready", base + gate);
+                        self.recorder.begin_sim(c, "section_collective", base + t);
+                    }
                     for k in 0..hops {
                         let mut step = 0.0f64;
                         for tr in &traces {
@@ -289,8 +317,18 @@ impl Collective for RingAllReduce {
                         }
                         t += step;
                     }
+                    if fine {
+                        let c = crate::obs::Track::Coordinator;
+                        self.recorder.end_sim(c, "section_collective", base + t);
+                    }
+                    // Streamed model: the section's all-reduce of its
+                    // largest payload, gated on the slowest stage.
+                    let sec_msg =
+                        traces.iter().map(|tr| tr.stream[i].1).max().unwrap_or(0);
+                    tm = tm.max(gate) + allreduce_time(&self.link, l, sec_msg);
                 }
                 self.sim_time_s += t;
+                self.model_time_s += tm;
             }
         }
         let mean = self
@@ -310,6 +348,7 @@ impl Collective for RingAllReduce {
             wire_bytes_up: self.meter.bytes_up,
             wire_bytes_down: self.meter.bytes_down,
             sim_time_s: self.sim_time_s,
+            model_time_s: self.model_time_s,
             messages: self.meter.messages,
             staleness: Default::default(),
         }
@@ -346,10 +385,14 @@ pub struct RingWorker {
     sec_means: Vec<Vec<f32>>,
     /// Which sections have been pushed this round (duplicate guard).
     sec_done: Vec<bool>,
-    /// `(ready, 0)` per pushed section, in push order; the readiness
-    /// gates the coordinator's per-section timing (bytes live in
-    /// `step_bytes`).
+    /// `(ready, payload_bytes)` per pushed section, in push order; the
+    /// readiness gates the coordinator's per-section timing and the
+    /// payload size feeds the per-section model (every wire byte still
+    /// lives in `step_bytes`).
     stream_rows: Vec<(f64, usize)>,
+    /// The flat round's encoded message size, reported in the round
+    /// trace for the coordinator's closed-form model (0 when streamed).
+    last_msg_bytes: usize,
 }
 
 impl RingWorker {
@@ -425,6 +468,7 @@ impl RingWorker {
             worker: self.id,
             step_bytes: std::mem::take(&mut self.step_bytes),
             stream: std::mem::take(&mut self.stream_rows),
+            msg_bytes: std::mem::take(&mut self.last_msg_bytes),
         };
         self.trace_tx
             .send(trace)
@@ -461,6 +505,7 @@ impl WorkerExchange for RingWorker {
         let n = self.own.len();
         mean_out.clear();
         self.step_bytes.clear();
+        self.last_msg_bytes = encoded.len();
         if l == 1 {
             // Nothing to exchange: the mean of one contribution is itself.
             mean_out.extend_from_slice(&self.own);
@@ -553,7 +598,7 @@ impl WorkerExchange for RingWorker {
             )));
         }
         self.sec_done[section] = true;
-        self.stream_rows.push((ready_s, 0));
+        self.stream_rows.push((ready_s, payload.len()));
 
         let l = self.workers;
         let w = self.id;

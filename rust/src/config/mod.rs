@@ -300,6 +300,14 @@ pub struct TrainConfig {
     /// to its serial replay, but not bit-identical to flat). Requires a
     /// synchronous exchange (`staleness = 0`).
     pub stream_sections: bool,
+    /// Run-wide tracing level (`trace_level = "off" | "round" | "fine"`,
+    /// `--trace-level`): `off` (default) records nothing and leaves the
+    /// hot path at one relaxed atomic load per site; `round` records the
+    /// coordinator/worker phase spans per training round; `fine` adds
+    /// collective-interior spans, pool queue-wait counters and streamed
+    /// section instants. Wire bytes and trained parameters are
+    /// bit-identical at every level.
+    pub trace_level: crate::obs::TraceLevel,
     /// Per-edge-class simulated link model (`intra_bandwidth`,
     /// `intra_latency`, `inter_bandwidth`, `inter_latency`).
     pub links: LinkConfig,
@@ -335,6 +343,7 @@ impl Default for TrainConfig {
             overlap: false,
             sections: None,
             stream_sections: false,
+            trace_level: crate::obs::TraceLevel::Off,
             links: LinkConfig::default(),
         }
     }
@@ -424,6 +433,13 @@ impl TrainConfig {
             if c.stream_sections {
                 c.overlap = true;
             }
+        }
+        if let Some(v) = get("trace_level") {
+            c.trace_level = v
+                .as_str()
+                .ok_or_else(|| Error::Config("trace_level must be a string".into()))?
+                .parse()
+                .map_err(|e: crate::error::Error| Error::Config(e.to_string()))?;
         }
         if let Some(v) = get("topology") {
             c.topology = Topology::parse(

@@ -82,6 +82,7 @@ use crate::error::{Error, Result};
 use crate::metrics::series::SeriesLogger;
 use crate::metrics::{RunSummary, StepMetrics};
 use crate::model::{topk_accuracy, Backend};
+use crate::obs::{MetricsRegistry, TraceRecorder, Track};
 use crate::quant;
 use crate::quant::bucket::QuantizedGrad;
 use crate::tensor::rng::Rng;
@@ -106,6 +107,23 @@ pub struct TrainOutput {
     /// Exact wire bytes through each server shard (sharded-ps runs;
     /// `None` on the other topologies).
     pub shard_bytes: Option<Vec<u64>>,
+    /// Tracing artifacts — the drained span/counter events and the
+    /// named-metrics registry. `None` unless
+    /// [`TrainConfig::trace_level`] enabled the recorder. Drained after
+    /// every thread (workers, shard servers, pool) has quiesced, so all
+    /// spans are closed.
+    pub obs: Option<ObsReport>,
+}
+
+/// The observability payload of a traced run: feed
+/// [`ObsReport::events`] to [`crate::obs::chrome_trace_json`] and the
+/// registry (with the series) to [`crate::obs::metrics_json`].
+pub struct ObsReport {
+    /// All recorded events in global record order.
+    pub events: Vec<crate::obs::Event>,
+    /// Run-wide named counters/gauges (rounds, wire bytes, max staleness
+    /// age, setup/train wall seconds).
+    pub registry: MetricsRegistry,
 }
 
 /// The coordinator.
@@ -154,6 +172,14 @@ impl<'a> Trainer<'a> {
             cfg.lr_decay_steps.clone(),
             cfg.lr_decay,
         );
+        // One recorder for the whole run: the WireSpec carries it into
+        // every collective end, the pool hands it to its threads, and
+        // the worker closures stamp their phase spans through clones.
+        // `trace_level = off` (the default) leaves it disabled — one
+        // relaxed atomic load per call site, zero allocations, and
+        // bit-identical training either way.
+        let recorder = TraceRecorder::new(cfg.trace_level);
+        let registry = MetricsRegistry::new();
         // One persistent worker pool for the whole run (cfg.pool, the
         // default): every worker's codec, the sharded-PS reduce loops and
         // the parallel decode shards share its threads, so spawn costs
@@ -161,7 +187,7 @@ impl<'a> Trainer<'a> {
         // steps. `pool = false` keeps the legacy per-round scoped
         // threads (bit-identical results either way).
         let pool_mode = if cfg.pool {
-            PoolMode::Shared(PoolHandle::new(cfg.threads))
+            PoolMode::Shared(PoolHandle::with_recorder(cfg.threads, recorder.clone()))
         } else {
             PoolMode::Scoped
         };
@@ -173,6 +199,7 @@ impl<'a> Trainer<'a> {
             seed: cfg.seed,
             threads: cfg.threads,
             pool: pool_mode,
+            recorder: recorder.clone(),
         };
         let xcfg = ExchangeConfig {
             topology: cfg.topology,
@@ -227,6 +254,8 @@ impl<'a> Trainer<'a> {
         let mut server_params = server_backend.init_params(&mut Rng::seed_from(cfg.seed));
         let mut server_opt = SgdMomentum::new(param_count, cfg.momentum, cfg.weight_decay);
         let mut series = SeriesLogger::new();
+        // Sharded-PS runs carry the applied-mean age alongside each step.
+        series.staleness_column = cfg.topology == Topology::ShardedPs;
         let mut out: Result<TrainOutput> = Err(Error::Comm("trainer did not run".into()));
 
         std::thread::scope(|scope| {
@@ -238,7 +267,14 @@ impl<'a> Trainer<'a> {
                 let report_tx = report_tx.clone();
                 let make = &make_backend;
                 let schedule = schedule.clone();
+                let rec = recorder.clone();
                 scope.spawn(move || {
+                    // Every phase span this worker emits lands on its own
+                    // track — only this thread writes spans there, so
+                    // nesting is race-free by construction. (Collectives
+                    // only put *instants* on worker tracks.)
+                    let track = Track::Worker(w as u16);
+                    let on = rec.is_enabled();
                     let mut backend = make(w);
                     // One encoder per worker, built from the same WireSpec
                     // the collective uses — a single quantize+encode path
@@ -277,7 +313,10 @@ impl<'a> Trainer<'a> {
                             cfg.bucket_size,
                         )
                         .expect("checked before spawn");
-                        Some(OverlapEncoder::new(&spec, map).expect("checked before spawn"))
+                        let mut ov =
+                            OverlapEncoder::new(&spec, map).expect("checked before spawn");
+                        ov.set_track(track);
+                        Some(ov)
                     } else {
                         None
                     };
@@ -292,6 +331,15 @@ impl<'a> Trainer<'a> {
                     let per_worker_batch = cfg.batch / cfg.workers;
                     for t in 0..cfg.steps {
                         let batch = ds.worker_batch(w, cfg.workers, per_worker_batch, &mut rng_data);
+                        // Overlapped rounds interleave backward with
+                        // staging/encode on purpose — one fused span;
+                        // flat rounds split backward from the encode.
+                        if on {
+                            rec.begin(
+                                track,
+                                if overlap.is_some() { "backward_encode" } else { "backward" },
+                            );
+                        }
                         let loss = match &mut overlap {
                             Some(ov) => {
                                 let n = grad.len();
@@ -333,6 +381,10 @@ impl<'a> Trainer<'a> {
                             }
                             None => {
                                 let loss = backend.loss_grad(&params, &batch, &mut grad);
+                                if on {
+                                    rec.end(track, "backward");
+                                    rec.begin(track, "quantize_encode");
+                                }
                                 match &mut ef {
                                     Some(ef) => {
                                         gc.encode_ef_into(ef, &grad, &mut rng_q, &mut qg, &mut msg)
@@ -342,16 +394,28 @@ impl<'a> Trainer<'a> {
                                 loss
                             }
                         };
+                        if on {
+                            rec.end(
+                                track,
+                                if overlap.is_some() { "backward_encode" } else { "quantize_encode" },
+                            );
+                        }
                         if overlap.is_some() {
                             // Settle the overlapped round: decode our own
                             // message (exact dequantization of the
                             // transmitted signal) for the figures, and with
                             // EF the residual update m ← (g + m) − deq.
+                            if on {
+                                rec.begin(track, "ef_settle");
+                            }
                             gc.decode_flat_into(&msg, &mut deq)
                                 .expect("own encoding always decodes");
                             if let Some(ef) = &mut ef {
                                 ef.compensate(&grad);
                                 ef.update_residual(&deq);
+                            }
+                            if on {
+                                rec.end(track, "ef_settle");
                             }
                         }
                         // With EF the figures measure Q(g + m) against the
@@ -390,6 +454,9 @@ impl<'a> Trainer<'a> {
                         {
                             return; // coordinator gone; it reports the error
                         }
+                        if on {
+                            rec.begin(track, "exchange");
+                        }
                         let exchanged = if ready_at.is_some() {
                             // Sections are already on the wire; block for
                             // the round's decoded mean.
@@ -397,10 +464,19 @@ impl<'a> Trainer<'a> {
                         } else {
                             wx.exchange(&mut msg, &mut mean)
                         };
+                        if on {
+                            rec.end(track, "exchange");
+                        }
                         if exchanged.is_err() {
                             return; // ditto — avoid deadlocking the scope
                         }
+                        if on {
+                            rec.begin(track, "apply");
+                        }
                         opt.step(&mut params, &mean, schedule.lr_at(t));
+                        if on {
+                            rec.end(track, "apply");
+                        }
                     }
                 });
             }
@@ -408,9 +484,15 @@ impl<'a> Trainer<'a> {
 
             // ---------------- coordinator ----------------
             let run_server = || -> Result<TrainOutput> {
+                let on = recorder.is_enabled();
+                let ctrack = Track::Coordinator;
                 let mut mean: Vec<f32> = Vec::with_capacity(param_count);
                 for t in 0..cfg.steps {
                     let before = coll.stats();
+                    if on {
+                        recorder.counter(ctrack, "round_index", t as f64);
+                        recorder.begin(ctrack, "round");
+                    }
                     coll.round(&mut mean)?;
                     if mean.len() != param_count {
                         return Err(Error::Shape(format!(
@@ -418,8 +500,15 @@ impl<'a> Trainer<'a> {
                             mean.len()
                         )));
                     }
+                    if on {
+                        recorder.end(ctrack, "round");
+                        recorder.begin(ctrack, "apply");
+                    }
                     // the coordinator applies the identical decoded mean
                     server_opt.step(&mut server_params, &mean, schedule.lr_at(t));
+                    if on {
+                        recorder.end(ctrack, "apply");
+                    }
 
                     // drain the L reports for this step
                     let mut loss = 0.0;
@@ -442,8 +531,22 @@ impl<'a> Trainer<'a> {
                         quant_rel_mse: rel * inv,
                         quant_cosine: cos * inv,
                         wire_bytes: after.wire_bytes - before.wire_bytes,
+                        wire_bytes_up: after.wire_bytes_up - before.wire_bytes_up,
+                        wire_bytes_down: after.wire_bytes_down - before.wire_bytes_down,
                         comm_time_s: after.sim_time_s - before.sim_time_s,
+                        comm_model_time_s: after.model_time_s - before.model_time_s,
+                        staleness_max_age: after.staleness.max_age,
                     });
+                    if on {
+                        registry.add("rounds", 1.0);
+                        registry.add(
+                            "wire_bytes_total",
+                            (after.wire_bytes - before.wire_bytes) as f64,
+                        );
+                        registry.add("sim_time_s", after.sim_time_s - before.sim_time_s);
+                        registry.add("model_time_s", after.model_time_s - before.model_time_s);
+                        registry.set_max("staleness_max_age", after.staleness.max_age as f64);
+                    }
 
                     if cfg.eval_every > 0 && (t + 1) % cfg.eval_every == 0 {
                         let (t1, t5) =
@@ -482,6 +585,7 @@ impl<'a> Trainer<'a> {
                     params: server_params,
                     comm: coll.stats(),
                     shard_bytes: coll.shard_bytes(),
+                    obs: None,
                 })
             };
             out = run_server();
@@ -490,7 +594,15 @@ impl<'a> Trainer<'a> {
             // channels and exit instead of deadlocking the scope.
             drop(coll);
         });
-        // Move the fields back out: run_server consumed them via closure.
+        // The scope joined every worker (and dropping the collective
+        // stopped the shard servers), so all spans are closed — drain
+        // the trace only now.
+        if let Ok(o) = &mut out {
+            if recorder.is_enabled() {
+                registry.set("workers", l as f64);
+                o.obs = Some(ObsReport { events: recorder.drain(), registry });
+            }
+        }
         out
     }
 }
@@ -590,6 +702,7 @@ mod tests {
             overlap: false,
             sections: None,
             stream_sections: false,
+            trace_level: crate::obs::TraceLevel::Off,
             links: LinkConfig::default(),
         }
     }

@@ -36,6 +36,7 @@ pub mod data;
 pub mod error;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod tensor;

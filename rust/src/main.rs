@@ -71,8 +71,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         "clip", "backend", "artifacts", "out", "seed", "lr", "eval-every", "topology",
         "groups", "shards", "staleness", "error-feedback", "quantize-downlink",
         "threads", "pool", "overlap", "sections", "stream-sections",
+        "trace", "trace-level",
         "intra-bandwidth", "intra-latency", "inter-bandwidth", "inter-latency",
     ])?;
+    let setup_start = std::time::Instant::now();
     let mut cfg = match args.get("config") {
         Some(path) => TrainConfig::load(path)?,
         None => TrainConfig::default(),
@@ -161,6 +163,21 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(l) = args.get_parse::<f64>("inter-latency")? {
         cfg.links.inter_latency = l;
     }
+    // --trace PATH writes a Chrome trace + metrics JSON after the run;
+    // it defaults the level to `fine` so the artifact is useful without
+    // a second flag. --trace-level alone just arms the recorder (the
+    // spans still reach TrainOutput::obs for programmatic use).
+    let trace_path = args.get("trace").map(str::to_string);
+    if let Some(lv) = args.get("trace-level") {
+        cfg.trace_level = lv.parse()?;
+    } else if trace_path.is_some() {
+        cfg.trace_level = orq::obs::TraceLevel::Fine;
+    }
+    if trace_path.is_some() && cfg.trace_level == orq::obs::TraceLevel::Off {
+        return Err(Error::Config(
+            "--trace with --trace-level off would record nothing".into(),
+        ));
+    }
     cfg.validate()?;
 
     let ds = dataset_for(&cfg)?;
@@ -183,6 +200,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.bucket_size,
         topo
     );
+    // Setup (config + dataset synthesis) and the train loop are timed
+    // separately: dataset generation used to dominate short runs and
+    // silently inflate any single end-to-end number.
+    let setup_s = setup_start.elapsed().as_secs_f64();
+    let train_start = std::time::Instant::now();
     let out = match backend_kind {
         "native" => {
             let factory = native_backend_factory(&cfg.model)?;
@@ -196,6 +218,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         other => return Err(Error::InvalidArg(format!("unknown backend {other:?}"))),
     };
+    let train_s = train_start.elapsed().as_secs_f64();
 
     let s = &out.summary;
     println!("\nmethod      : {}", s.method);
@@ -206,6 +229,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!("wire bytes  : {}", fmt::bytes(s.total_wire_bytes));
     println!("comm time   : {} (simulated @10Gbps)", fmt::duration(s.total_comm_time_s));
     println!("compression : ×{:.1}", s.compression_ratio);
+    println!("setup time  : {} (wall)", fmt::duration(setup_s));
+    println!("train loop  : {} (wall)", fmt::duration(train_s));
     if let Some(sb) = &out.shard_bytes {
         let parts: Vec<String> = sb.iter().map(|b| fmt::bytes(*b)).collect();
         println!("shard bytes : [{}]", parts.join(", "));
@@ -223,6 +248,24 @@ fn cmd_train(args: &Args) -> Result<()> {
         out.series.write_csv(&format!("{dir}/{}_{}_series.csv", s.model, s.method))?;
         out.series.write_eval_csv(&format!("{dir}/{}_{}_eval.csv", s.model, s.method))?;
         println!("series written to {dir}/");
+    }
+    if let Some(path) = &trace_path {
+        let obs = out.obs.as_ref().ok_or_else(|| {
+            Error::Comm("tracing was armed but the run produced no events".into())
+        })?;
+        obs.registry.set("setup_wall_s", setup_s);
+        obs.registry.set("train_wall_s", train_s);
+        std::fs::write(path, orq::obs::chrome_trace_json(&obs.events).dump())?;
+        let metrics_path = match path.strip_suffix(".json") {
+            Some(stem) => format!("{stem}.metrics.json"),
+            None => format!("{path}.metrics.json"),
+        };
+        let mjson = orq::obs::metrics_json(&out.series, &obs.registry);
+        std::fs::write(&metrics_path, mjson.dump())?;
+        println!(
+            "trace written to {path} ({} events; metrics to {metrics_path})",
+            obs.events.len()
+        );
     }
     Ok(())
 }

@@ -18,8 +18,18 @@ pub struct StepMetrics {
     pub quant_cosine: f64,
     /// Exact wire bytes sent this step (all uplinks + broadcast).
     pub wire_bytes: u64,
+    /// Uplink share of [`wire_bytes`](Self::wire_bytes) (worker → server / peer sends).
+    pub wire_bytes_up: u64,
+    /// Downlink share of [`wire_bytes`](Self::wire_bytes) (broadcast / mean frames).
+    pub wire_bytes_down: u64,
     /// Simulated communication seconds this step.
     pub comm_time_s: f64,
+    /// Closed-form model prediction for this step's communication
+    /// seconds (the `*_time` formulas; see the obs model-drift section).
+    pub comm_model_time_s: f64,
+    /// Maximum gradient age applied this step (sharded-PS staleness;
+    /// 0 on synchronous topologies).
+    pub staleness_max_age: u64,
 }
 
 /// End-of-run summary — one table row.

@@ -10,6 +10,8 @@ pub struct SeriesLogger {
     pub steps: Vec<StepMetrics>,
     /// Sparse eval points: (step, top1, top5).
     pub evals: Vec<(usize, f64, f64)>,
+    /// Emit the `staleness_max_age` CSV column (sharded-PS runs).
+    pub staleness_column: bool,
 }
 
 impl SeriesLogger {
@@ -55,19 +57,33 @@ impl SeriesLogger {
     }
 
     pub fn write_csv(&self, path: &str) -> Result<()> {
-        let mut w = CsvWriter::create(
-            path,
-            &["step", "train_loss", "quant_rel_mse", "quant_cosine", "wire_bytes", "comm_time_s"],
-        )?;
+        let mut headers = vec![
+            "step",
+            "train_loss",
+            "quant_rel_mse",
+            "quant_cosine",
+            "wire_bytes_up",
+            "wire_bytes_down",
+            "comm_time_s",
+        ];
+        if self.staleness_column {
+            headers.push("staleness_max_age");
+        }
+        let mut w = CsvWriter::create(path, &headers)?;
         for m in &self.steps {
-            w.row(&[
+            let mut row = vec![
                 m.step as f64,
                 m.train_loss,
                 m.quant_rel_mse,
                 m.quant_cosine,
-                m.wire_bytes as f64,
+                m.wire_bytes_up as f64,
+                m.wire_bytes_down as f64,
                 m.comm_time_s,
-            ])?;
+            ];
+            if self.staleness_column {
+                row.push(m.staleness_max_age as f64);
+            }
+            w.row(&row)?;
         }
         w.flush()
     }
@@ -119,7 +135,27 @@ mod tests {
         s.write_eval_csv(dir.join("eval.csv").to_str().unwrap()).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.starts_with("step,train_loss"));
+        let header = text.lines().next().unwrap();
+        assert!(header.contains("wire_bytes_up,wire_bytes_down"));
+        assert!(!header.contains("staleness_max_age"));
         assert_eq!(text.lines().count(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_staleness_column_on_sharded_runs() {
+        let dir = std::env::temp_dir().join("orq_series_staleness_test");
+        let path = dir.join("series.csv");
+        let mut s = SeriesLogger::new();
+        s.staleness_column = true;
+        s.push(StepMetrics { step: 0, staleness_max_age: 3, ..Default::default() });
+        s.write_csv(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let header = text.lines().next().unwrap();
+        assert!(header.ends_with("staleness_max_age"), "{header}");
+        let row = text.lines().nth(1).unwrap();
+        assert_eq!(header.split(',').count(), row.split(',').count());
+        assert!(row.ends_with('3'), "{row}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,241 @@
+//! Trace export and validation: Chrome trace-event JSON and span
+//! well-formedness checks.
+//!
+//! The export follows the Chrome trace-event *JSON object format*
+//! (`{"traceEvents": [...]}` — loads in `chrome://tracing` and
+//! Perfetto). Two processes render the recorder's two clocks:
+//!
+//! * **pid 1, "wall clock"** — every event, `ts` = wall microseconds
+//!   since the recorder was constructed;
+//! * **pid 2, "simulated link clock"** — only events carrying a finite
+//!   [`Event::sim_s`] stamp, `ts` = simulated seconds × 10⁶, so the
+//!   link-model timeline the `*_time` closed forms predict can be
+//!   inspected next to the real one.
+//!
+//! Within each process there is one row per [`Track`]: the coordinator,
+//! each worker, each sharded-PS shard, each pool thread and the driver,
+//! named through `M`-phase `thread_name`/`process_name` metadata.
+
+use std::collections::BTreeMap;
+
+use super::recorder::{Event, Phase, Track};
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Schema tag written into the trace artifact (Chrome ignores unknown
+/// top-level keys; the obs tests pin it).
+pub const TRACE_SCHEMA: &str = "orq.trace/v1";
+
+const WALL_PID: u64 = 1;
+const SIM_PID: u64 = 2;
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn meta_event(pid: u64, tid: u64, name: &str, value: &str) -> Json {
+    obj(vec![
+        ("name", Json::Str(name.into())),
+        ("ph", Json::Str("M".into())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", obj(vec![("name", Json::Str(value.into()))])),
+    ])
+}
+
+fn trace_event(e: &Event, pid: u64, ts_us: f64) -> Json {
+    let ph = match e.phase {
+        Phase::Begin => "B",
+        Phase::End => "E",
+        Phase::Instant => "i",
+        Phase::Counter => "C",
+    };
+    let mut pairs = vec![
+        ("name", Json::Str(e.name.into())),
+        ("cat", Json::Str(e.track.kind().into())),
+        ("ph", Json::Str(ph.into())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(e.track.tid() as f64)),
+        ("ts", Json::Num(ts_us)),
+    ];
+    match e.phase {
+        Phase::Counter => pairs.push(("args", obj(vec![("value", Json::Num(e.value))]))),
+        // thread-scoped instants render as a tick on their own row
+        Phase::Instant => pairs.push(("s", Json::Str("t".into()))),
+        _ => {}
+    }
+    obj(pairs)
+}
+
+/// Render recorded events as Chrome trace-event JSON. Events should be
+/// in record order (what [`TraceRecorder::drain`](super::TraceRecorder::drain)
+/// returns); rows and both clock processes are set up via metadata
+/// events, so the artifact opens with readable names.
+pub fn chrome_trace_json(events: &[Event]) -> Json {
+    let mut rows = Vec::new();
+    rows.push(meta_event(WALL_PID, 0, "process_name", "wall clock"));
+    rows.push(meta_event(SIM_PID, 0, "process_name", "simulated link clock"));
+    // one thread_name per distinct track, on both processes
+    let mut seen: BTreeMap<u64, Track> = BTreeMap::new();
+    for e in events {
+        seen.entry(e.track.tid()).or_insert(e.track);
+    }
+    for (tid, track) in &seen {
+        rows.push(meta_event(WALL_PID, *tid, "thread_name", &track.label()));
+        rows.push(meta_event(SIM_PID, *tid, "thread_name", &track.label()));
+    }
+    for e in events {
+        rows.push(trace_event(e, WALL_PID, e.wall_us as f64));
+        if e.sim_s.is_finite() {
+            rows.push(trace_event(e, SIM_PID, e.sim_s * 1e6));
+        }
+    }
+    obj(vec![
+        ("schema", Json::Str(TRACE_SCHEMA.into())),
+        ("displayTimeUnit", Json::Str("ms".into())),
+        ("traceEvents", Json::Arr(rows)),
+    ])
+}
+
+/// Span well-formedness: on every track, each [`Phase::End`] must close
+/// the innermost open [`Phase::Begin`] of the same name, and no span may
+/// be left open at the end. Instants and counters are unconstrained.
+/// The recorder's per-track discipline (a thread only begins/ends spans
+/// on its own track) makes cross-thread interleave corruption show up
+/// here as a name mismatch.
+pub fn validate_spans(events: &[Event]) -> Result<()> {
+    let mut stacks: BTreeMap<u64, (Track, Vec<&'static str>)> = BTreeMap::new();
+    for e in events {
+        let entry = stacks.entry(e.track.tid()).or_insert_with(|| (e.track, Vec::new()));
+        match e.phase {
+            Phase::Begin => entry.1.push(e.name),
+            Phase::End => match entry.1.pop() {
+                Some(open) if open == e.name => {}
+                Some(open) => {
+                    return Err(Error::InvalidArg(format!(
+                        "span nesting violated on {}: end of {:?} closes open span {:?}",
+                        e.track.label(),
+                        e.name,
+                        open
+                    )))
+                }
+                None => {
+                    return Err(Error::InvalidArg(format!(
+                        "span nesting violated on {}: end of {:?} with no open span",
+                        e.track.label(),
+                        e.name
+                    )))
+                }
+            },
+            Phase::Instant | Phase::Counter => {}
+        }
+    }
+    for (_, (track, stack)) in stacks {
+        if let Some(open) = stack.last() {
+            return Err(Error::InvalidArg(format!(
+                "span {:?} on {} never ended",
+                open,
+                track.label()
+            )));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{TraceLevel, TraceRecorder};
+
+    fn sample_events() -> Vec<Event> {
+        let rec = TraceRecorder::new(TraceLevel::Fine);
+        rec.begin(Track::Driver, "setup");
+        rec.end(Track::Driver, "setup");
+        rec.begin(Track::Coordinator, "round");
+        rec.begin_sim(Track::Worker(0), "uplink", 0.0);
+        rec.instant_sim(Track::Worker(0), "section_ready", 0.125);
+        rec.end_sim(Track::Worker(0), "uplink", 0.5);
+        rec.counter(Track::Shard(2), "queue_wait_us", 12.0);
+        rec.begin(Track::Pool(1), "task");
+        rec.end(Track::Pool(1), "task");
+        rec.end(Track::Coordinator, "round");
+        rec.drain()
+    }
+
+    #[test]
+    fn export_roundtrips_and_carries_both_clocks() {
+        let events = sample_events();
+        let j = chrome_trace_json(&events);
+        // the artifact round-trips through the repo's own parser
+        let j = Json::parse(&j.dump()).unwrap();
+        assert_eq!(j.req("schema").unwrap().as_str(), Some(TRACE_SCHEMA));
+        let rows = j.req("traceEvents").unwrap().as_arr().unwrap();
+        // every row has the Chrome required keys
+        for r in rows {
+            for key in ["name", "ph", "pid", "tid"] {
+                assert!(r.get(key).is_some(), "missing {key} in {}", r.dump());
+            }
+        }
+        // sim-stamped events render on both pids, wall-only on one
+        let count = |name: &str, pid: f64| {
+            rows.iter()
+                .filter(|r| {
+                    r.get("name").and_then(Json::as_str) == Some(name)
+                        && r.get("pid").and_then(Json::as_f64) == Some(pid)
+                })
+                .count()
+        };
+        assert_eq!(count("uplink", 1.0), 2);
+        assert_eq!(count("uplink", 2.0), 2);
+        assert_eq!(count("round", 1.0), 2);
+        assert_eq!(count("round", 2.0), 0);
+        // counters carry their value in args
+        let c = rows
+            .iter()
+            .find(|r| r.get("name").and_then(Json::as_str) == Some("queue_wait_us"))
+            .unwrap();
+        assert_eq!(c.req("args").unwrap().req("value").unwrap().as_f64(), Some(12.0));
+        // distinct rows for driver/coordinator/worker/shard/pool
+        let mut tids: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.get("ph").and_then(Json::as_str) != Some("M"))
+            .filter_map(|r| r.get("tid").and_then(Json::as_f64))
+            .collect();
+        tids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        tids.dedup();
+        assert_eq!(tids.len(), 5, "driver, coordinator, worker 0, shard 2, pool 1");
+    }
+
+    #[test]
+    fn validate_spans_accepts_well_formed() {
+        validate_spans(&sample_events()).unwrap();
+        validate_spans(&[]).unwrap();
+    }
+
+    #[test]
+    fn validate_spans_rejects_corruption() {
+        let rec = TraceRecorder::new(TraceLevel::Round);
+        rec.begin(Track::Worker(0), "backward");
+        // interleaved close of a span that was never opened on this track
+        rec.end(Track::Worker(0), "encode");
+        let err = validate_spans(&rec.drain()).unwrap_err();
+        assert!(err.to_string().contains("nesting"), "{err}");
+
+        let rec = TraceRecorder::new(TraceLevel::Round);
+        rec.end(Track::Coordinator, "round");
+        assert!(validate_spans(&rec.drain()).is_err(), "end with no begin");
+
+        let rec = TraceRecorder::new(TraceLevel::Round);
+        rec.begin(Track::Coordinator, "round");
+        let err = validate_spans(&rec.drain()).unwrap_err();
+        assert!(err.to_string().contains("never ended"), "{err}");
+
+        // same names on different tracks never cross-corrupt
+        let rec = TraceRecorder::new(TraceLevel::Round);
+        rec.begin(Track::Worker(0), "backward");
+        rec.begin(Track::Worker(1), "backward");
+        rec.end(Track::Worker(1), "backward");
+        rec.end(Track::Worker(0), "backward");
+        validate_spans(&rec.drain()).unwrap();
+    }
+}

@@ -1,0 +1,416 @@
+//! The sharded span recorder: [`TraceRecorder`] and its event model.
+//!
+//! ## Design
+//!
+//! A [`TraceRecorder`] is a cheaply-cloneable handle (`Arc` inside) that
+//! every instrumented component — trainer, worker pool, collectives —
+//! holds a clone of. Recording appends a fixed-size [`Event`] to one of
+//! a small set of mutex-guarded buffers selected by hashing the calling
+//! thread's id, so concurrent workers almost never contend on the same
+//! lock and no event ever crosses a thread boundary while hot. The
+//! buffers are merged and sorted by a global sequence number at
+//! [`TraceRecorder::drain`] time (end of run — never on the hot path).
+//!
+//! ## Overhead argument
+//!
+//! The disabled fast path is one relaxed atomic load and a branch:
+//! every recording method checks `enabled` before touching the clock,
+//! the sequence counter or a buffer, so a run with tracing off performs
+//! zero allocations and zero lock acquisitions on behalf of the
+//! recorder. Event payloads are `Copy` (names are `&'static str`), so
+//! the enabled path is one `Instant::elapsed`, two atomic ops and an
+//! amortized `Vec` push under an almost-always-uncontended mutex. The
+//! `obs_overhead` perfbench row gates the enabled cost in CI.
+//!
+//! ## Clock semantics
+//!
+//! Every event carries *wall* microseconds since the recorder's
+//! construction (`wall_us` — real elapsed time, what a profiler wants).
+//! Events stamped through the `*_sim` methods additionally carry a
+//! position on the **simulated link clock** (`sim_s` — seconds on the
+//! [`Link`](crate::comm::link::Link) model's clock, the one the
+//! `*_time` closed-form models predict). The Chrome export renders the
+//! two clocks as two processes, so a span can be inspected on either
+//! timeline. `sim_s` is `NAN` when an event has no simulated position.
+
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+
+/// How much the recorder captures. Parsed from `--trace-level` /
+/// `trace_level = "..."`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TraceLevel {
+    /// Recording disabled: every recorder call is one atomic load.
+    #[default]
+    Off,
+    /// Round-phase spans only (backward, encode, exchange, apply, …).
+    Round,
+    /// Everything: per-hop, per-section, per-shard and pool-task events
+    /// on top of the round phases.
+    Fine,
+}
+
+impl std::str::FromStr for TraceLevel {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<TraceLevel> {
+        match s {
+            "off" => Ok(TraceLevel::Off),
+            "round" => Ok(TraceLevel::Round),
+            "fine" => Ok(TraceLevel::Fine),
+            other => Err(Error::InvalidArg(format!(
+                "unknown trace level {other:?} (expected off | round | fine)"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for TraceLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            TraceLevel::Off => "off",
+            TraceLevel::Round => "round",
+            TraceLevel::Fine => "fine",
+        })
+    }
+}
+
+/// Which timeline row an event belongs to. One row per worker, shard
+/// and pool thread, plus the coordinator and the driver (main thread).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Track {
+    /// The coordinator / server replica thread.
+    Coordinator,
+    /// Exchange worker `w`.
+    Worker(u16),
+    /// Sharded-PS server shard `s`.
+    Shard(u16),
+    /// Worker-pool thread `i` (the `orq-pool-{i}` spawn index).
+    Pool(u16),
+    /// The driving thread outside the training loop (setup, teardown).
+    Driver,
+}
+
+impl Track {
+    /// Stable Chrome-trace thread id for this track. Workers, shards and
+    /// pool threads get disjoint ranges so rows never collide.
+    pub fn tid(self) -> u64 {
+        match self {
+            Track::Coordinator => 0,
+            Track::Worker(w) => 1 + w as u64,
+            Track::Shard(s) => 100_001 + s as u64,
+            Track::Pool(i) => 200_001 + i as u64,
+            Track::Driver => 999_999,
+        }
+    }
+
+    /// Track-kind name, used as the Chrome event category and in the
+    /// per-row thread names.
+    pub fn kind(self) -> &'static str {
+        match self {
+            Track::Coordinator => "coordinator",
+            Track::Worker(_) => "worker",
+            Track::Shard(_) => "shard",
+            Track::Pool(_) => "pool",
+            Track::Driver => "driver",
+        }
+    }
+
+    /// Human-readable row label (`worker 3`, `shard 0`, …).
+    pub fn label(self) -> String {
+        match self {
+            Track::Coordinator => "coordinator".into(),
+            Track::Worker(w) => format!("worker {w}"),
+            Track::Shard(s) => format!("shard {s}"),
+            Track::Pool(i) => format!("pool {i}"),
+            Track::Driver => "driver".into(),
+        }
+    }
+}
+
+/// Event kind, mirroring the Chrome trace-event phases the export emits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Span start (`ph: "B"`). Must be closed by a matching [`Phase::End`]
+    /// on the same track ([`validate_spans`](super::export::validate_spans)).
+    Begin,
+    /// Span end (`ph: "E"`).
+    End,
+    /// Point event (`ph: "i"`), e.g. a section becoming ready.
+    Instant,
+    /// Counter sample (`ph: "C"`) carrying [`Event::value`].
+    Counter,
+}
+
+/// One recorded trace event. Fixed-size and `Copy`: names are static
+/// strings, so recording never allocates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    /// Static event name (span or counter name).
+    pub name: &'static str,
+    /// Timeline row.
+    pub track: Track,
+    pub phase: Phase,
+    /// Wall-clock microseconds since the recorder was constructed.
+    pub wall_us: u64,
+    /// Global record order (drain sorts by this — wall clocks of
+    /// different threads may tie at microsecond resolution).
+    pub seq: u64,
+    /// Position on the simulated link clock in seconds, `NAN` when the
+    /// event has no simulated-clock position.
+    pub sim_s: f64,
+    /// Counter value ([`Phase::Counter`] only; 0 otherwise).
+    pub value: f64,
+}
+
+/// Buffer shard count: enough that concurrent workers hash to distinct
+/// locks with high probability, small enough that drain stays trivial.
+const BUFFER_SHARDS: usize = 16;
+
+#[derive(Debug)]
+struct Inner {
+    enabled: AtomicBool,
+    level: TraceLevel,
+    epoch: Instant,
+    seq: AtomicU64,
+    buffers: Vec<Mutex<Vec<Event>>>,
+}
+
+/// The run-wide span recorder. Clone freely — all clones share one
+/// event store. See the module docs for the design and the disabled
+/// fast-path argument.
+#[derive(Debug, Clone)]
+pub struct TraceRecorder(Arc<Inner>);
+
+impl TraceRecorder {
+    /// Build a recorder at `level`. `TraceLevel::Off` yields the
+    /// zero-cost disabled recorder (same as [`TraceRecorder::off`]).
+    pub fn new(level: TraceLevel) -> TraceRecorder {
+        TraceRecorder(Arc::new(Inner {
+            enabled: AtomicBool::new(level != TraceLevel::Off),
+            level,
+            epoch: Instant::now(),
+            seq: AtomicU64::new(0),
+            buffers: (0..BUFFER_SHARDS).map(|_| Mutex::new(Vec::new())).collect(),
+        }))
+    }
+
+    /// The disabled recorder: one atomic load per call, no allocations.
+    pub fn off() -> TraceRecorder {
+        TraceRecorder::new(TraceLevel::Off)
+    }
+
+    /// Whether recording is on (one relaxed load — the fast-path check).
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.0.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Whether fine-grained (per-hop / per-task) events should record.
+    #[inline]
+    pub fn is_fine(&self) -> bool {
+        self.is_enabled() && self.0.level == TraceLevel::Fine
+    }
+
+    /// The level this recorder was constructed at.
+    pub fn level(&self) -> TraceLevel {
+        self.0.level
+    }
+
+    /// Wall-clock microseconds since construction. Works whether or not
+    /// recording is enabled (the trainer's setup/train split uses it on
+    /// disabled recorders too).
+    pub fn now_us(&self) -> u64 {
+        self.0.epoch.elapsed().as_micros() as u64
+    }
+
+    #[inline]
+    fn record(&self, name: &'static str, track: Track, phase: Phase, sim_s: f64, value: f64) {
+        if !self.is_enabled() {
+            return;
+        }
+        let ev = Event {
+            name,
+            track,
+            phase,
+            wall_us: self.now_us(),
+            seq: self.0.seq.fetch_add(1, Ordering::Relaxed),
+            sim_s,
+            value,
+        };
+        let mut h = DefaultHasher::new();
+        std::thread::current().id().hash(&mut h);
+        let slot = (h.finish() as usize) % BUFFER_SHARDS;
+        // The registry holds no cross-event invariant, so a poisoned
+        // lock (a panicked recording thread) is safe to recover.
+        let mut buf = self.0.buffers[slot].lock().unwrap_or_else(|p| p.into_inner());
+        buf.push(ev);
+    }
+
+    /// Open a span on `track` (wall clock only).
+    #[inline]
+    pub fn begin(&self, track: Track, name: &'static str) {
+        self.record(name, track, Phase::Begin, f64::NAN, 0.0);
+    }
+
+    /// Close the innermost span named `name` on `track`.
+    #[inline]
+    pub fn end(&self, track: Track, name: &'static str) {
+        self.record(name, track, Phase::End, f64::NAN, 0.0);
+    }
+
+    /// Point event on `track` (wall clock only).
+    #[inline]
+    pub fn instant(&self, track: Track, name: &'static str) {
+        self.record(name, track, Phase::Instant, f64::NAN, 0.0);
+    }
+
+    /// Counter sample on `track` (wall clock only).
+    #[inline]
+    pub fn counter(&self, track: Track, name: &'static str, value: f64) {
+        self.record(name, track, Phase::Counter, f64::NAN, value);
+    }
+
+    /// [`Self::begin`] with a simulated-clock position. Pair with
+    /// [`Self::end_sim`] so the sim-clock timeline stays well-formed.
+    #[inline]
+    pub fn begin_sim(&self, track: Track, name: &'static str, sim_s: f64) {
+        self.record(name, track, Phase::Begin, sim_s, 0.0);
+    }
+
+    /// [`Self::end`] with a simulated-clock position.
+    #[inline]
+    pub fn end_sim(&self, track: Track, name: &'static str, sim_s: f64) {
+        self.record(name, track, Phase::End, sim_s, 0.0);
+    }
+
+    /// [`Self::instant`] with a simulated-clock position (e.g. a section
+    /// readiness stamp).
+    #[inline]
+    pub fn instant_sim(&self, track: Track, name: &'static str, sim_s: f64) {
+        self.record(name, track, Phase::Instant, sim_s, 0.0);
+    }
+
+    /// [`Self::counter`] with a simulated-clock position.
+    #[inline]
+    pub fn counter_sim(&self, track: Track, name: &'static str, sim_s: f64, value: f64) {
+        self.record(name, track, Phase::Counter, sim_s, value);
+    }
+
+    /// Take every recorded event, merged across buffers and sorted by
+    /// record order. Not a hot-path operation (end of run / of test).
+    pub fn drain(&self) -> Vec<Event> {
+        let mut out = Vec::new();
+        for buf in &self.0.buffers {
+            let mut b = buf.lock().unwrap_or_else(|p| p.into_inner());
+            out.append(&mut b);
+        }
+        out.sort_by_key(|e| e.seq);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let rec = TraceRecorder::off();
+        assert!(!rec.is_enabled());
+        assert!(!rec.is_fine());
+        rec.begin(Track::Coordinator, "round");
+        rec.end(Track::Coordinator, "round");
+        rec.counter(Track::Worker(0), "bytes", 17.0);
+        rec.instant_sim(Track::Worker(0), "ready", 0.5);
+        assert!(rec.drain().is_empty(), "disabled recorder must stay empty");
+        // the wall clock still runs (the setup/train split needs it)
+        let t = rec.now_us();
+        assert!(rec.now_us() >= t);
+    }
+
+    #[test]
+    fn levels_parse_display_and_gate() {
+        for (s, lv) in [
+            ("off", TraceLevel::Off),
+            ("round", TraceLevel::Round),
+            ("fine", TraceLevel::Fine),
+        ] {
+            assert_eq!(s.parse::<TraceLevel>().unwrap(), lv);
+            assert_eq!(lv.to_string(), s);
+        }
+        assert!("verbose".parse::<TraceLevel>().is_err());
+        assert_eq!(TraceLevel::default(), TraceLevel::Off);
+        assert!(TraceRecorder::new(TraceLevel::Round).is_enabled());
+        assert!(!TraceRecorder::new(TraceLevel::Round).is_fine());
+        assert!(TraceRecorder::new(TraceLevel::Fine).is_fine());
+    }
+
+    #[test]
+    fn events_drain_in_record_order_across_threads() {
+        let rec = TraceRecorder::new(TraceLevel::Fine);
+        rec.begin(Track::Coordinator, "round");
+        std::thread::scope(|s| {
+            for w in 0..4u16 {
+                let rec = rec.clone();
+                s.spawn(move || {
+                    rec.begin(Track::Worker(w), "backward");
+                    rec.counter(Track::Worker(w), "bytes", w as f64);
+                    rec.end(Track::Worker(w), "backward");
+                });
+            }
+        });
+        rec.end(Track::Coordinator, "round");
+        let evs = rec.drain();
+        assert_eq!(evs.len(), 2 + 4 * 3);
+        // seq is strictly increasing after the merge sort
+        for pair in evs.windows(2) {
+            assert!(pair[0].seq < pair[1].seq);
+            assert!(pair[0].wall_us <= pair[1].wall_us || pair[0].seq < pair[1].seq);
+        }
+        // a second drain is empty (events are taken, not copied)
+        assert!(rec.drain().is_empty());
+    }
+
+    #[test]
+    fn sim_stamps_ride_along() {
+        let rec = TraceRecorder::new(TraceLevel::Round);
+        rec.begin_sim(Track::Coordinator, "exchange", 0.0);
+        rec.instant_sim(Track::Worker(1), "section_ready", 0.25);
+        rec.end_sim(Track::Coordinator, "exchange", 1.5);
+        let evs = rec.drain();
+        assert_eq!(evs[0].sim_s, 0.0);
+        assert_eq!(evs[1].sim_s, 0.25);
+        assert_eq!(evs[1].track, Track::Worker(1));
+        assert_eq!(evs[2].sim_s, 1.5);
+        // wall-only events carry NAN
+        rec.begin(Track::Driver, "setup");
+        assert!(rec.drain()[0].sim_s.is_nan());
+    }
+
+    #[test]
+    fn track_ids_are_disjoint() {
+        let tracks = [
+            Track::Coordinator,
+            Track::Worker(0),
+            Track::Worker(65_535),
+            Track::Shard(0),
+            Track::Shard(65_535),
+            Track::Pool(0),
+            Track::Pool(65_535),
+            Track::Driver,
+        ];
+        for (i, a) in tracks.iter().enumerate() {
+            for b in &tracks[i + 1..] {
+                assert_ne!(a.tid(), b.tid(), "{a:?} vs {b:?}");
+            }
+        }
+        assert_eq!(Track::Worker(3).label(), "worker 3");
+        assert_eq!(Track::Shard(1).kind(), "shard");
+    }
+}

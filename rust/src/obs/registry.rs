@@ -1,0 +1,225 @@
+//! Named counters/gauges aggregated at round end, and the per-round
+//! metrics JSON artifact with its model-drift section.
+//!
+//! [`MetricsRegistry`] is a thread-safe map of named `f64` values:
+//! `add` accumulates (counter semantics), `set` overwrites (gauge
+//! semantics). The trainer threads a clone through the round loop so
+//! workers, collectives and the pool can all contribute without
+//! plumbing dedicated channels; `BTreeMap` keys keep the JSON output
+//! deterministically ordered.
+//!
+//! [`metrics_json`] renders the per-round series plus a **model-drift
+//! section**: measured simulated communication seconds vs the
+//! closed-form `*_time`/`*_overlap_time`/`*_streamed_time` models, per
+//! round and in aggregate. The repo's <1% model-vs-sim invariant —
+//! until now only asserted inside the test suite — becomes an
+//! observable in every run's artifact.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::SeriesLogger;
+use crate::util::json::Json;
+
+/// Schema tag written into the metrics artifact.
+pub const METRICS_SCHEMA: &str = "orq.metrics/v1";
+
+/// Denominator floor for relative error so all-zero rounds report 0.
+const DRIFT_TINY: f64 = 1e-12;
+
+/// Thread-safe registry of named counters and gauges.
+///
+/// Cloning shares the underlying map ([`Arc`]); a poisoned lock is
+/// recovered rather than propagated so a panicking worker cannot take
+/// the metrics artifact down with it.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry(Arc<Mutex<BTreeMap<String, f64>>>);
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, f64>> {
+        self.0.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Counter semantics: accumulate `v` onto `name` (starts at 0).
+    pub fn add(&self, name: &str, v: f64) {
+        let mut m = self.lock();
+        *m.entry(name.to_string()).or_insert(0.0) += v;
+    }
+
+    /// Gauge semantics: overwrite `name` with `v`.
+    pub fn set(&self, name: &str, v: f64) {
+        self.lock().insert(name.to_string(), v);
+    }
+
+    /// Gauge semantics keeping the maximum observed value.
+    pub fn set_max(&self, name: &str, v: f64) {
+        let mut m = self.lock();
+        let e = m.entry(name.to_string()).or_insert(f64::NEG_INFINITY);
+        if v > *e {
+            *e = v;
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.lock().get(name).copied()
+    }
+
+    /// Point-in-time copy of every (name, value) pair.
+    pub fn snapshot(&self) -> BTreeMap<String, f64> {
+        self.lock().clone()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(self.snapshot().into_iter().map(|(k, v)| (k, Json::Num(v))).collect())
+    }
+}
+
+fn drift_rel_err(measured: f64, model: f64) -> f64 {
+    if measured.abs() < DRIFT_TINY && model.abs() < DRIFT_TINY {
+        0.0
+    } else {
+        (measured - model).abs() / model.abs().max(DRIFT_TINY)
+    }
+}
+
+/// Render the per-round metrics artifact: the step series (with the
+/// up/down wire split and sharded-PS staleness column), the registry
+/// snapshot, and the model-drift section comparing measured simulated
+/// communication time against the closed-form models per round.
+pub fn metrics_json(series: &SeriesLogger, registry: &MetricsRegistry) -> Json {
+    let mut rounds = Vec::with_capacity(series.steps.len());
+    let mut drift_rows = Vec::with_capacity(series.steps.len());
+    let mut total_measured = 0.0;
+    let mut total_model = 0.0;
+    let mut max_rel_err = 0.0_f64;
+    for m in &series.steps {
+        let mut row = BTreeMap::new();
+        row.insert("step".to_string(), Json::Num(m.step as f64));
+        row.insert("train_loss".to_string(), Json::Num(m.train_loss));
+        row.insert("wire_bytes_up".to_string(), Json::Num(m.wire_bytes_up as f64));
+        row.insert("wire_bytes_down".to_string(), Json::Num(m.wire_bytes_down as f64));
+        row.insert("comm_time_s".to_string(), Json::Num(m.comm_time_s));
+        row.insert("comm_model_time_s".to_string(), Json::Num(m.comm_model_time_s));
+        row.insert("staleness_max_age".to_string(), Json::Num(m.staleness_max_age as f64));
+        rounds.push(Json::Obj(row));
+
+        let rel = drift_rel_err(m.comm_time_s, m.comm_model_time_s);
+        max_rel_err = max_rel_err.max(rel);
+        total_measured += m.comm_time_s;
+        total_model += m.comm_model_time_s;
+        let mut d = BTreeMap::new();
+        d.insert("step".to_string(), Json::Num(m.step as f64));
+        d.insert("measured_s".to_string(), Json::Num(m.comm_time_s));
+        d.insert("model_s".to_string(), Json::Num(m.comm_model_time_s));
+        d.insert("rel_err".to_string(), Json::Num(rel));
+        drift_rows.push(Json::Obj(d));
+    }
+    let mut drift = BTreeMap::new();
+    drift.insert("per_round".to_string(), Json::Arr(drift_rows));
+    drift.insert("total_measured_s".to_string(), Json::Num(total_measured));
+    drift.insert("total_model_s".to_string(), Json::Num(total_model));
+    drift.insert("max_rel_err".to_string(), Json::Num(max_rel_err));
+
+    let mut top = BTreeMap::new();
+    top.insert("schema".to_string(), Json::Str(METRICS_SCHEMA.into()));
+    top.insert("rounds".to_string(), Json::Arr(rounds));
+    top.insert("registry".to_string(), registry.to_json());
+    top.insert("model_drift".to_string(), Json::Obj(drift));
+    Json::Obj(top)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::StepMetrics;
+
+    #[test]
+    fn registry_counters_and_gauges() {
+        let r = MetricsRegistry::new();
+        r.add("bytes", 10.0);
+        r.add("bytes", 5.0);
+        r.set("threads", 4.0);
+        r.set("threads", 2.0);
+        r.set_max("age", 1.0);
+        r.set_max("age", 3.0);
+        r.set_max("age", 2.0);
+        assert_eq!(r.get("bytes"), Some(15.0));
+        assert_eq!(r.get("threads"), Some(2.0));
+        assert_eq!(r.get("age"), Some(3.0));
+        assert_eq!(r.get("missing"), None);
+        // clones share state
+        let r2 = r.clone();
+        r2.add("bytes", 1.0);
+        assert_eq!(r.get("bytes"), Some(16.0));
+        assert_eq!(r.snapshot().len(), 3);
+    }
+
+    #[test]
+    fn registry_shared_across_threads() {
+        let r = MetricsRegistry::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let r = r.clone();
+                s.spawn(move || {
+                    for _ in 0..100 {
+                        r.add("n", 1.0);
+                    }
+                });
+            }
+        });
+        assert_eq!(r.get("n"), Some(400.0));
+    }
+
+    #[test]
+    fn metrics_json_reports_drift() {
+        let mut series = SeriesLogger::new();
+        series.push(StepMetrics {
+            step: 0,
+            train_loss: 1.5,
+            wire_bytes_up: 100,
+            wire_bytes_down: 40,
+            comm_time_s: 1.0,
+            comm_model_time_s: 1.0,
+            ..Default::default()
+        });
+        series.push(StepMetrics {
+            step: 1,
+            comm_time_s: 1.01,
+            comm_model_time_s: 1.0,
+            staleness_max_age: 2,
+            ..Default::default()
+        });
+        let reg = MetricsRegistry::new();
+        reg.set("workers", 4.0);
+        let j = metrics_json(&series, &reg);
+        let j = Json::parse(&j.dump()).unwrap();
+        assert_eq!(j.req("schema").unwrap().as_str(), Some(METRICS_SCHEMA));
+        let rounds = j.req("rounds").unwrap().as_arr().unwrap();
+        assert_eq!(rounds.len(), 2);
+        assert_eq!(rounds[0].req("wire_bytes_up").unwrap().as_f64(), Some(100.0));
+        assert_eq!(rounds[1].req("staleness_max_age").unwrap().as_f64(), Some(2.0));
+        let drift = j.req("model_drift").unwrap();
+        assert_eq!(drift.req("per_round").unwrap().as_arr().unwrap().len(), 2);
+        let max_err = drift.req("max_rel_err").unwrap().as_f64().unwrap();
+        assert!((max_err - 0.01).abs() < 1e-12, "{max_err}");
+        assert_eq!(drift.req("total_model_s").unwrap().as_f64(), Some(2.0));
+        assert_eq!(
+            j.req("registry").unwrap().req("workers").unwrap().as_f64(),
+            Some(4.0)
+        );
+    }
+
+    #[test]
+    fn zero_rounds_report_zero_drift() {
+        let mut series = SeriesLogger::new();
+        series.push(StepMetrics::default());
+        let j = metrics_json(&series, &MetricsRegistry::new());
+        let max_err =
+            j.req("model_drift").unwrap().req("max_rel_err").unwrap().as_f64().unwrap();
+        assert_eq!(max_err, 0.0);
+    }
+}

@@ -115,6 +115,9 @@ pub fn auto_threads() -> usize {
 struct Job {
     task: Box<dyn FnOnce() + Send + 'static>,
     done: Sender<bool>,
+    /// Dispatch wall stamp (µs, recorder clock); 0 when tracing is off.
+    /// The worker reports `now − enqueued_us` as its queue-wait counter.
+    enqueued_us: u64,
 }
 
 /// Message to a parked worker.
@@ -138,6 +141,11 @@ struct Registry {
 pub struct WorkerPool {
     threads: usize,
     registry: Arc<Mutex<Registry>>,
+    /// Trace recorder cloned into every worker thread: queue-wait
+    /// counters and task-run spans land on `Track::Pool(index)`, where
+    /// `index` is the thread's spawn ordinal (the `orq-pool-{index}`
+    /// name). Defaults to off — one relaxed atomic load per job.
+    recorder: crate::obs::TraceRecorder,
 }
 
 /// Lock helper: the registry holds no user invariants a panicked task
@@ -147,7 +155,14 @@ fn lock(reg: &Mutex<Registry>) -> MutexGuard<'_, Registry> {
     reg.lock().unwrap_or_else(|p| p.into_inner())
 }
 
-fn worker_loop(rx: Receiver<Msg>, my_tx: Sender<Msg>, registry: Arc<Mutex<Registry>>) {
+fn worker_loop(
+    rx: Receiver<Msg>,
+    my_tx: Sender<Msg>,
+    registry: Arc<Mutex<Registry>>,
+    recorder: crate::obs::TraceRecorder,
+    index: u16,
+) {
+    let track = crate::obs::Track::Pool(index);
     loop {
         let msg = match rx.recv() {
             Ok(m) => m,
@@ -155,8 +170,19 @@ fn worker_loop(rx: Receiver<Msg>, my_tx: Sender<Msg>, registry: Arc<Mutex<Regist
         };
         match msg {
             Msg::Exit => return,
-            Msg::Job(Job { task, done }) => {
+            Msg::Job(Job { task, done, enqueued_us }) => {
+                let fine = recorder.is_fine();
+                if fine {
+                    if enqueued_us > 0 {
+                        let waited = recorder.now_us().saturating_sub(enqueued_us);
+                        recorder.counter(track, "queue_wait_us", waited as f64);
+                    }
+                    recorder.begin(track, "pool_task");
+                }
                 let ok = catch_unwind(AssertUnwindSafe(task)).is_ok();
+                if fine {
+                    recorder.end(track, "pool_task");
+                }
                 // Re-register BEFORE reporting completion: when a scope's
                 // drain returns, every worker it used is already back in
                 // the idle registry, so the caller's next round
@@ -185,6 +211,12 @@ impl WorkerPool {
     /// sharding *target* reported by [`Self::threads`], capped at 256
     /// like the pipeline's. No threads are spawned until work arrives.
     pub fn new(threads: usize) -> WorkerPool {
+        Self::with_recorder(threads, crate::obs::TraceRecorder::off())
+    }
+
+    /// Like [`Self::new`], with a trace recorder the workers report
+    /// queue-wait counters and task-run spans through.
+    pub fn with_recorder(threads: usize, recorder: crate::obs::TraceRecorder) -> WorkerPool {
         let t = if threads == 0 { auto_threads() } else { threads };
         WorkerPool {
             threads: t.clamp(1, 256),
@@ -194,6 +226,7 @@ impl WorkerPool {
                 closed: false,
                 spawned: 0,
             })),
+            recorder,
         }
     }
 
@@ -212,6 +245,9 @@ impl WorkerPool {
     /// the OS refuses a needed thread spawn (the job is dropped unrun,
     /// which the caller's drain observes through the done channel).
     fn dispatch(&self, mut job: Job) -> Result<()> {
+        if self.recorder.is_fine() {
+            job.enqueued_us = self.recorder.now_us();
+        }
         loop {
             let idle = {
                 let mut reg = lock(&self.registry);
@@ -232,11 +268,13 @@ impl WorkerPool {
                     let (tx, rx) = channel::<Msg>();
                     let registry = Arc::clone(&self.registry);
                     let my_tx = tx.clone();
+                    let recorder = self.recorder.clone();
                     let mut reg = lock(&self.registry);
                     let name = format!("orq-pool-{}", reg.spawned);
+                    let index = reg.spawned.min(u16::MAX as usize) as u16;
                     let handle = std::thread::Builder::new()
                         .name(name)
-                        .spawn(move || worker_loop(rx, my_tx, registry))?;
+                        .spawn(move || worker_loop(rx, my_tx, registry, recorder, index))?;
                     reg.spawned += 1;
                     reg.handles.push(handle);
                     drop(reg);
@@ -284,7 +322,7 @@ impl WorkerPool {
     /// last [`PoolHandle`] drops, or the final join will wait for it.
     pub fn spawn_detached(&self, f: impl FnOnce() + Send + 'static) -> Result<()> {
         let (done_tx, _) = channel::<bool>();
-        self.dispatch(Job { task: Box::new(f), done: done_tx })
+        self.dispatch(Job { task: Box::new(f), done: done_tx, enqueued_us: 0 })
     }
 }
 
@@ -336,7 +374,7 @@ impl<'env> PoolScope<'_, 'env> {
                 Box<dyn FnOnce() + Send + 'static>,
             >(boxed)
         };
-        match self.pool.dispatch(Job { task: boxed, done: self.done_tx.clone() }) {
+        match self.pool.dispatch(Job { task: boxed, done: self.done_tx.clone(), enqueued_us: 0 }) {
             Ok(()) => self.state.submitted.set(self.state.submitted.get() + 1),
             Err(_) => self.state.lost.set(true),
         }
@@ -381,6 +419,11 @@ impl PoolHandle {
     /// Build a pool behind a shareable handle (`threads == 0` = auto).
     pub fn new(threads: usize) -> PoolHandle {
         PoolHandle(Arc::new(WorkerPool::new(threads)))
+    }
+
+    /// Build a traced pool behind a shareable handle.
+    pub fn with_recorder(threads: usize, recorder: crate::obs::TraceRecorder) -> PoolHandle {
+        PoolHandle(Arc::new(WorkerPool::with_recorder(threads, recorder)))
     }
 }
 

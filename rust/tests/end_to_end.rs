@@ -48,6 +48,7 @@ fn cfg(method: &str) -> TrainConfig {
         overlap: false,
         sections: None,
         stream_sections: false,
+        trace_level: orq::obs::TraceLevel::Off,
         links: orq::config::LinkConfig::default(),
     }
 }

@@ -1,0 +1,226 @@
+//! Observability integration tests: tracing must be invisible in
+//! results (bit-identical params and wire bytes on every topology,
+//! thread count and error-feedback setting), the exported artifact must
+//! be well-formed Chrome trace JSON with one row per worker / shard /
+//! pool thread, and the metrics artifact's model-drift section must
+//! hold the repo's <1% model-vs-simulator invariant on every topology.
+
+use orq::comm::Topology;
+use orq::config::TrainConfig;
+use orq::coordinator::trainer::{native_backend_factory, Trainer, TrainOutput};
+use orq::data::synth::{ClassDataset, DatasetSpec};
+use orq::obs::{chrome_trace_json, metrics_json, validate_spans, TraceLevel};
+use orq::util::json::Json;
+
+fn ds(in_dim: usize, classes: usize) -> ClassDataset {
+    ClassDataset::generate(DatasetSpec {
+        in_dim,
+        classes,
+        train_n: 512,
+        test_n: 128,
+        margin: 3.0,
+        noise: 1.0,
+        label_noise: 0.02,
+        seed: 31,
+    })
+}
+
+/// Small but real config: every topology below reshapes it.
+fn cfg(topology: Topology) -> TrainConfig {
+    TrainConfig {
+        model: "mlp:16-32-8".into(),
+        dataset: "test".into(),
+        method: "terngrad".into(),
+        workers: 2,
+        batch: 32,
+        steps: 20,
+        lr: 0.05,
+        eval_every: 0,
+        bucket_size: 64,
+        seed: 9,
+        topology,
+        groups: 1,
+        shards: 1,
+        ..TrainConfig::default()
+    }
+}
+
+fn shape(mut c: TrainConfig, topology: Topology) -> TrainConfig {
+    match topology {
+        Topology::Hier => {
+            c.workers = 4;
+            c.groups = 2;
+        }
+        Topology::ShardedPs => {
+            c.shards = 2;
+        }
+        _ => {}
+    }
+    c
+}
+
+fn run(c: TrainConfig, data: &ClassDataset) -> TrainOutput {
+    let factory = native_backend_factory(&c.model).unwrap();
+    Trainer::new(c, data).unwrap().run(factory).unwrap()
+}
+
+/// Tracing must be invisible in results: parameters and wire bytes are
+/// bit-identical with the recorder off vs at `fine`, across every
+/// topology × thread count × error-feedback setting.
+#[test]
+fn tracing_is_bit_identical() {
+    let data = ds(16, 8);
+    for topology in [Topology::Ps, Topology::Ring, Topology::Hier, Topology::ShardedPs] {
+        for threads in [1usize, 2] {
+            for ef in [false, true] {
+                let mut base = shape(cfg(topology), topology);
+                base.threads = threads;
+                base.error_feedback = ef;
+                let mut traced = base.clone();
+                traced.trace_level = TraceLevel::Fine;
+                let off = run(base, &data);
+                let on = run(traced, &data);
+                let tag = format!("{topology} threads={threads} ef={ef}");
+                assert!(off.obs.is_none(), "{tag}: untraced run carried events");
+                let obs = on.obs.as_ref().unwrap_or_else(|| panic!("{tag}: no obs"));
+                assert!(!obs.events.is_empty(), "{tag}: traced run recorded nothing");
+                validate_spans(&obs.events).unwrap_or_else(|e| panic!("{tag}: {e}"));
+                assert_eq!(
+                    off.comm.wire_bytes, on.comm.wire_bytes,
+                    "{tag}: tracing changed the wire bytes"
+                );
+                assert_eq!(
+                    off.comm.wire_bytes_up, on.comm.wire_bytes_up,
+                    "{tag}: tracing changed the uplink bytes"
+                );
+                let a: Vec<u32> = off.params.iter().map(|p| p.to_bits()).collect();
+                let b: Vec<u32> = on.params.iter().map(|p| p.to_bits()).collect();
+                assert_eq!(a, b, "{tag}: tracing changed the trained parameters");
+            }
+        }
+    }
+}
+
+/// The acceptance scenario: a 4-worker sharded-PS *streamed* run traced
+/// at `fine` exports valid Chrome trace JSON with distinct worker,
+/// shard and pool rows, well-nested spans, and a matching metrics
+/// artifact.
+#[test]
+fn sharded_streamed_trace_exports_chrome_json() {
+    let data = ds(16, 8);
+    let mut c = shape(cfg(Topology::ShardedPs), Topology::ShardedPs);
+    c.workers = 4;
+    c.method = "orq-3".into();
+    c.threads = 2;
+    c.overlap = true;
+    c.stream_sections = true;
+    c.steps = 8;
+    c.trace_level = TraceLevel::Fine;
+    let out = run(c, &data);
+    let obs = out.obs.as_ref().expect("traced run must carry events");
+    validate_spans(&obs.events).unwrap();
+
+    // distinct rows for all four workers, both shards and the pool
+    let mut worker_tids = std::collections::BTreeSet::new();
+    let mut shard_tids = std::collections::BTreeSet::new();
+    let mut pool_tids = std::collections::BTreeSet::new();
+    for e in &obs.events {
+        match e.track.kind() {
+            "worker" => {
+                worker_tids.insert(e.track.tid());
+            }
+            "shard" => {
+                shard_tids.insert(e.track.tid());
+            }
+            "pool" => {
+                pool_tids.insert(e.track.tid());
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(worker_tids.len(), 4, "one row per worker");
+    assert_eq!(shard_tids.len(), 2, "one row per server shard");
+    assert!(!pool_tids.is_empty(), "pool threads must appear at fine level");
+
+    // the artifact round-trips through the repo's own JSON parser and
+    // keeps the Chrome required keys on every row
+    let dumped = chrome_trace_json(&obs.events).dump();
+    let j = Json::parse(&dumped).unwrap();
+    assert_eq!(j.req("schema").unwrap().as_str(), Some(orq::obs::TRACE_SCHEMA));
+    let rows = j.req("traceEvents").unwrap().as_arr().unwrap();
+    assert!(rows.len() > obs.events.len(), "metadata rows + events");
+    for r in rows {
+        for key in ["name", "ph", "pid", "tid"] {
+            assert!(r.get(key).is_some(), "missing {key} in {}", r.dump());
+        }
+    }
+
+    // metrics artifact: schema, one round per step, registry totals
+    // agreeing with the run's own accounting
+    let m = Json::parse(&metrics_json(&out.series, &obs.registry).dump()).unwrap();
+    assert_eq!(m.req("schema").unwrap().as_str(), Some(orq::obs::METRICS_SCHEMA));
+    assert_eq!(m.req("rounds").unwrap().as_arr().unwrap().len(), 8);
+    let reg = m.req("registry").unwrap();
+    assert_eq!(reg.req("rounds").unwrap().as_f64(), Some(8.0));
+    assert_eq!(reg.req("workers").unwrap().as_f64(), Some(4.0));
+    assert_eq!(
+        reg.req("wire_bytes_total").unwrap().as_f64(),
+        Some(out.comm.wire_bytes as f64),
+        "registry wire total must match CommStats"
+    );
+}
+
+/// `round` level is a strict subset of `fine`: same identical results,
+/// fewer events (no collective-interior hops or pool counters).
+#[test]
+fn round_level_records_less_than_fine() {
+    let data = ds(16, 8);
+    let mut fine = shape(cfg(Topology::Ps), Topology::Ps);
+    fine.trace_level = TraceLevel::Fine;
+    let mut round = fine.clone();
+    round.trace_level = TraceLevel::Round;
+    let f = run(fine, &data);
+    let r = run(round, &data);
+    let (fe, re) = (f.obs.unwrap().events, r.obs.unwrap().events);
+    assert!(!re.is_empty(), "round level must still record phase spans");
+    assert!(
+        re.len() < fe.len(),
+        "round ({}) must record fewer events than fine ({})",
+        re.len(),
+        fe.len()
+    );
+    validate_spans(&re).unwrap();
+    let a: Vec<u32> = f.params.iter().map(|p| p.to_bits()).collect();
+    let b: Vec<u32> = r.params.iter().map(|p| p.to_bits()).collect();
+    assert_eq!(a, b, "trace level must not change training");
+}
+
+/// The model-drift section must report < 1% on every topology: the
+/// measured simulated communication time tracks the closed-form models
+/// round by round. Buckets divide the layers evenly here so the ring's
+/// chunk model sees no ragged tail.
+#[test]
+fn model_drift_below_one_percent_everywhere() {
+    let data = ds(256, 8);
+    for topology in [Topology::Ps, Topology::Ring, Topology::Hier, Topology::ShardedPs] {
+        let mut c = shape(cfg(topology), topology);
+        c.model = "mlp:256-256-8".into();
+        c.bucket_size = 512;
+        c.steps = 6;
+        if topology == Topology::Hier {
+            c.workers = 2; // 2 groups of 1: leader star, no intra ring
+        }
+        c.trace_level = TraceLevel::Round;
+        let out = run(c, &data);
+        let obs = out.obs.as_ref().unwrap();
+        let m = metrics_json(&out.series, &obs.registry);
+        let drift = m.req("model_drift").unwrap();
+        let max_err = drift.req("max_rel_err").unwrap().as_f64().unwrap();
+        assert!(
+            max_err < 0.01,
+            "{topology}: model drift {max_err:.4} ≥ 1% (measured {} vs model {})",
+            drift.req("total_measured_s").unwrap().as_f64().unwrap(),
+            drift.req("total_model_s").unwrap().as_f64().unwrap()
+        );
+    }
+}
