@@ -16,8 +16,11 @@
 //! `--threads N` runs the parallel codec per node (the big-bucket rows
 //! shard well); `--pool false` reverts to per-round scoped threads.
 //! `--trace FILE` records the final (largest-bucket, last-method) run at
-//! `fine` level and writes the Chrome trace + metrics JSON pair — the
-//! CI smoke job uploads these as artifacts.
+//! `fine` level and writes the Chrome trace + metrics JSON pair plus a
+//! per-step `FILE.series.csv` — the CI smoke job uploads these as
+//! artifacts, and the CI determinism job runs the sweep twice with the
+//! same seed and requires the series CSV and the metrics model-drift
+//! section to match byte-for-byte.
 
 use orq::bench::print_rows;
 use orq::cli::Args;
@@ -97,6 +100,10 @@ fn main() -> orq::Result<()> {
                 std::fs::write(path, orq::obs::chrome_trace_json(&obs.events).dump())?;
                 let mjson = orq::obs::metrics_json(&out.series, &obs.registry);
                 std::fs::write(format!("{path}.metrics.json"), mjson.dump())?;
+                // Per-step series CSV: the CI determinism job runs this
+                // example twice with identical seeds and compares the two
+                // files byte-for-byte.
+                out.series.write_csv(&format!("{path}.series.csv"))?;
                 println!(
                     "{method}: traced d={d} run → {path} ({} events)",
                     obs.events.len()

@@ -76,6 +76,8 @@ fn main() -> orq::Result<()> {
         overlap: false,
         sections: None,
         stream_sections: false,
+        byte_budget: None,
+        budget_schedule: None,
         trace_level: orq::obs::TraceLevel::Off,
         links: orq::config::LinkConfig::default(),
     };

@@ -277,6 +277,8 @@ pub mod suite {
             overlap: false,
             sections: None,
             stream_sections: false,
+            byte_budget: None,
+            budget_schedule: None,
             trace_level: crate::obs::TraceLevel::Off,
             links: crate::config::LinkConfig::default(),
         }

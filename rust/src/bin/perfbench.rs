@@ -29,7 +29,7 @@
 //! (`path: "scalar"`, `quant::random_round_reference`), with
 //! `speedup.round_twopass = scalar / two-pass`.
 //!
-//! `BENCH_exchange.json` (v7): `{ schema: "orq.perfbench.exchange/v7",
+//! `BENCH_exchange.json` (v8): `{ schema: "orq.perfbench.exchange/v8",
 //! mode, elements, workers, threads, bucket_size, quantize: [{method,
 //! path: "serial"|"parallel"|"parallel-scoped", mean_s, melem_s}],
 //! rounds: [{topology, path, mean_s, wire_bytes, sim_time_s, shards,
@@ -41,9 +41,12 @@
 //! streaming: {topology, sections, ready_last_s, flat_round_sim,
 //! streamed_round_sim, flat_s, streamed_s, ps_model_err_pct, timeline:
 //! [{section, ready_t, link_start_t, done_t}]}, obs: {topology, path,
-//! untraced_s, traced_s, events_per_round, wire_bytes}, speedup:
+//! untraced_s, traced_s, events_per_round, wire_bytes}, budget:
+//! {method, elements, fixed_wire_bytes, fixed_variance, points:
+//! [{budget_bytes, wire_bytes, variance}]}, speedup:
 //! {quantize_encode, ps_round, pooled_round, overlap_round,
-//! downlink_compression, streamed_round, obs_overhead} }`. v3 preserved every v2 field (which
+//! downlink_compression, streamed_round, obs_overhead, budget_bytes}
+//! }`. v3 preserved every v2 field (which
 //! preserved every v1 field) and added: the `path: "parallel-scoped"`
 //! quantize and ps-round entries — the retained PR 3/4 per-round
 //! `std::thread::scope` execution, measured in the same run as the
@@ -90,6 +93,18 @@
 //! queue-wait counters), with wire bytes asserted identical across the
 //! two runs. `speedup.obs_overhead = untraced / traced` and the CI
 //! floor gates it at 0.95 — a fully traced round may cost at most ~5%.
+//! v8 adds the `budget` section (the PR 10 tentpole): the
+//! accuracy-vs-bytes Pareto of the adaptive byte budget
+//! (`quant::budget::allocate_widths`) against the fixed-width codec on
+//! the same gradient — one point per budget (a rising fraction of the
+//! fixed wire bytes), each reporting the actual wire bytes spent
+//! (headers and width table included, asserted ≤ the budget) and the
+//! total quantization variance `‖g − decode(encode(g))‖²`. The points
+//! must be Pareto-monotone: spend non-decreasing and variance
+//! non-increasing in the budget. `speedup.budget_bytes = fixed wire
+//! bytes / budgeted wire bytes at the 60% point` is deterministic codec
+//! accounting the CI floor gates at 1.3 — it catches the allocator
+//! silently falling back to fixed widths, not runner noise.
 //!
 //! `--smoke` runs small sizes, then re-parses both artifacts and asserts
 //! the schema plus monotone sanity (sizes and rates positive, fixed-width
@@ -548,6 +563,7 @@ fn bench_exchange(
         bench_downlink(bench, workers, bucket, method, &grads)?;
     let (streaming, streamed_round) = bench_streaming(bench, workers, bucket, method, &grads)?;
     let (obs, obs_overhead) = bench_obs_overhead(bench, workers, threads, bucket, method, &grads)?;
+    let (budget_section, budget_bytes_ratio) = bench_budget_pareto(n, bucket, method)?;
 
     let speedup = obj(vec![
         ("quantize_encode", Json::Num(qe[0] / qe[1].max(1e-12))),
@@ -574,6 +590,11 @@ fn bench_exchange(
         // most ~5%; a miss means recording leaked onto the disabled fast
         // path or the traced path grew a hot-loop allocation).
         ("obs_overhead", Json::Num(obs_overhead)),
+        // fixed wire bytes / budgeted wire bytes at the 60% budget
+        // point — deterministic codec accounting (the PR 10 tentpole
+        // figure), so the CI floor catches the byte-budget allocator
+        // silently falling back to fixed widths.
+        ("budget_bytes", Json::Num(budget_bytes_ratio)),
     ]);
     println!(
         "exchange speedups ({threads} threads): quantize+encode ×{:.2} (serial/pooled), \
@@ -587,7 +608,7 @@ fn bench_exchange(
         ps_round[2] / ps_round[1].max(1e-12)
     );
     Ok(obj(vec![
-        ("schema", Json::Str("orq.perfbench.exchange/v7".into())),
+        ("schema", Json::Str("orq.perfbench.exchange/v8".into())),
         ("mode", Json::Str(mode.into())),
         ("elements", Json::Num(n as f64)),
         ("workers", Json::Num(workers as f64)),
@@ -600,8 +621,83 @@ fn bench_exchange(
         ("downlink", downlink),
         ("streaming", streaming),
         ("obs", obs),
+        ("budget", budget_section),
         ("speedup", speedup),
     ]))
+}
+
+/// Accuracy-vs-bytes Pareto under the adaptive byte budget (the PR 10
+/// tentpole figure): encode the same gradient with the fixed-width
+/// codec and with `--byte-budget` at a rising fraction of the fixed
+/// wire bytes. Every figure is deterministic codec accounting — actual
+/// message bytes (header and in-band width table included, asserted ≤
+/// the budget) and the total quantization variance
+/// `‖g − decode(encode(g))‖²` of the bytes that would hit the wire —
+/// so the CI floor catches the allocator silently falling back to
+/// fixed widths, not runner noise.
+///
+/// Returns the `budget` JSON section and `fixed wire bytes / budgeted
+/// wire bytes` at the 60% point (`speedup.budget_bytes`).
+fn bench_budget_pareto(n: usize, bucket: usize, method: &str) -> Result<(Json, f64)> {
+    use orq::codec::Packing;
+    use orq::quant::budget;
+
+    // The budget re-spends bit widths per bucket, so it needs a
+    // parameterizable scheme; fall back to orq-8 if the bench method is
+    // fixed-level (the section is about the allocator, not the method).
+    let method = if budget::parse_family(method).is_some() { method } else { "orq-8" };
+    let g = gaussian(n, 23);
+    let spec = WireSpec { seed: 11, ..WireSpec::new(method, bucket) };
+    let measure = |byte_budget: Option<usize>| -> Result<(usize, f64)> {
+        let mut gc = GradCodec::new(&spec)?;
+        if let Some(b) = byte_budget {
+            gc.set_budget(b, None)?;
+        }
+        let mut rng = Rng::seed_from(13);
+        let mut qg = QuantizedGrad::default();
+        let mut msg = Vec::new();
+        gc.encode_into(&g, &mut rng, &mut qg, &mut msg);
+        let mut deq = Vec::new();
+        gc.decode_flat_into(&msg, &mut deq)?;
+        let variance: f64 =
+            g.iter().zip(&deq).map(|(&x, &y)| ((x - y) as f64).powi(2)).sum();
+        Ok((msg.len(), variance))
+    };
+    let (fixed_bytes, fixed_var) = measure(None)?;
+    // Budgets below the all-2 floor cannot be honored — clamp so every
+    // point is a real spend target (the trainer rejects such budgets).
+    let floor = budget::min_message_bytes(n, bucket, Packing::BaseS, method);
+    let fracs = [0.40, 0.60, 0.75, 0.90, 1.00];
+    let mut points = Vec::new();
+    let mut ratio_at_60 = 0.0f64;
+    for f in fracs {
+        let b = ((fixed_bytes as f64 * f) as usize).max(floor);
+        let (bytes, var) = measure(Some(b))?;
+        assert!(
+            bytes <= b,
+            "budgeted encode spent {bytes} bytes over the {b}-byte budget"
+        );
+        if f == 0.60 {
+            ratio_at_60 = fixed_bytes as f64 / bytes.max(1) as f64;
+        }
+        points.push(obj(vec![
+            ("budget_bytes", Json::Num(b as f64)),
+            ("wire_bytes", Json::Num(bytes as f64)),
+            ("variance", Json::Num(var)),
+        ]));
+    }
+    println!(
+        "budget pareto ({method}, {n} elements): fixed {fixed_bytes} B / var {fixed_var:.3e}; \
+         60% budget spends ×{ratio_at_60:.2} fewer bytes"
+    );
+    let section = obj(vec![
+        ("method", Json::Str(method.to_string())),
+        ("elements", Json::Num(n as f64)),
+        ("fixed_wire_bytes", Json::Num(fixed_bytes as f64)),
+        ("fixed_variance", Json::Num(fixed_var)),
+        ("points", Json::Arr(points)),
+    ]);
+    Ok((section, ratio_at_60))
 }
 
 /// Tracing overhead (the PR 9 observability contract): the same
@@ -1190,7 +1286,7 @@ fn validate_codec(j: &Json) -> Result<()> {
 
 fn validate_exchange(j: &Json) -> Result<()> {
     let j = &Json::parse(&j.dump())?;
-    if j.req("schema")?.as_str() != Some("orq.perfbench.exchange/v7") {
+    if j.req("schema")?.as_str() != Some("orq.perfbench.exchange/v8") {
         return Err(fail("bad exchange schema tag".into()));
     }
     for key in ["mode", "elements", "workers", "threads", "bucket_size"] {
@@ -1385,6 +1481,48 @@ fn validate_exchange(j: &Json) -> Result<()> {
     if req_f64(ob, "events_per_round")? < 1.0 {
         return Err(fail("obs events_per_round < 1 — the traced round recorded nothing".into()));
     }
+    // v8: the budget section's accuracy-vs-bytes points must be a real
+    // Pareto front — spend never above its budget and monotone
+    // non-decreasing in the budget, variance monotone non-increasing.
+    let bg = j.req("budget")?;
+    bg.req("method")?;
+    let fixed_bytes = req_f64(bg, "fixed_wire_bytes")?;
+    let fixed_var = req_f64(bg, "fixed_variance")?;
+    if fixed_bytes <= 0.0 || !fixed_var.is_finite() || fixed_var < 0.0 {
+        return Err(fail("bad budget fixed-width baseline figures".into()));
+    }
+    let points = bg
+        .req("points")?
+        .as_arr()
+        .ok_or_else(|| fail("budget points is not an array".into()))?;
+    if points.len() < 3 {
+        return Err(fail("budget pareto needs at least 3 points".into()));
+    }
+    let mut prev_budget = 0.0f64;
+    let mut prev_bytes = 0.0f64;
+    let mut prev_var = f64::INFINITY;
+    for p in points {
+        let (b, bytes, var) = (
+            req_f64(p, "budget_bytes")?,
+            req_f64(p, "wire_bytes")?,
+            req_f64(p, "variance")?,
+        );
+        if bytes <= 0.0 || !var.is_finite() || var < 0.0 {
+            return Err(fail(format!("bad budget point {}", p.dump())));
+        }
+        if bytes > b {
+            return Err(fail(format!(
+                "budget point overspent: {bytes} wire bytes over the {b}-byte budget"
+            )));
+        }
+        if b < prev_budget || bytes < prev_bytes || var > prev_var {
+            return Err(fail(format!(
+                "budget pareto is not monotone at {}",
+                p.dump()
+            )));
+        }
+        (prev_budget, prev_bytes, prev_var) = (b, bytes, var);
+    }
     let sp = j.req("speedup")?;
     for key in [
         "quantize_encode",
@@ -1394,6 +1532,7 @@ fn validate_exchange(j: &Json) -> Result<()> {
         "downlink_compression",
         "streamed_round",
         "obs_overhead",
+        "budget_bytes",
     ] {
         let v = req_f64(sp, key)?;
         if !v.is_finite() || v <= 0.0 {

@@ -94,7 +94,8 @@ USAGE:
             [--shards S] [--staleness K] [--error-feedback]
             [--quantize-downlink] [--threads N]
             [--pool true|false] [--overlap] [--sections N]
-            [--stream-sections] [--backend native|pjrt]
+            [--stream-sections] [--byte-budget BYTES]
+            [--budget-schedule coarse-to-fine] [--backend native|pjrt]
             [--trace FILE] [--trace-level off|round|fine]
             [--intra-bandwidth BPS] [--intra-latency S]
             [--inter-bandwidth BPS] [--inter-latency S]
@@ -141,6 +142,19 @@ STREAMING: --stream-sections (implies --overlap) pushes each staged section
        bit-identical to the flat overlap run; ring runs one
        reduce-scatter/all-gather per section (deterministic, equivalent to
        its serial replay). Requires --staleness 0
+BUDGET: --byte-budget BYTES caps every worker's per-round uplink — headers,
+       frames and width tables included. Each round the allocator re-spends
+       the method's bit width per bucket (water-filling on per-bucket
+       gradient statistics from the previous round's decoded mean,
+       deterministic tie-breaking) to minimize total quantization variance
+       under the cap; the chosen widths ride in-band in the wire header so
+       every hop decodes them from the frame, never assumes them. Needs a
+       parameterizable method (orq-S, qsgd-S, linear-S); composes with
+       --error-feedback, --overlap/--stream-sections and every topology.
+       --budget-schedule coarse-to-fine spends half the budget at round 0
+       and ramps linearly to the full budget by round 64 (never exceeding
+       the cap). Without --byte-budget the wire bytes are bit-identical to
+       the fixed-width codec
 TRACING: --trace FILE records the run and writes a Chrome trace-event JSON
        (load it in chrome://tracing or Perfetto; one row per worker, server
        shard and pool thread, on both the wall clock and the simulated link

@@ -4,16 +4,28 @@
 //! ```text
 //! magic      u32   0x3151_524F ("ORQ1")
 //! version    u8    1
-//! flags      u8    bit0 = raw FP32 payload, bit1 = base-s packing
-//! s          u8    number of levels (0 for FP)
+//! flags      u8    bit0 = raw FP32 payload, bit1 = base-s packing,
+//!                  bit2 = per-bucket width table present
+//! s          u8    number of levels (0 for FP; with a width table, the
+//!                  maximum width in the table)
 //! name_len   u8    scheme name length
 //! bucket     u32   bucket size d
 //! total      u64   total element count
 //! name       [u8]  scheme name (ASCII)
+//! widths     [u8]  (bit2 only) ceil(total/bucket) level counts, one per
+//!                  bucket, each in 2..=s with max == s
 //! payload:
 //!   FP   : total × f32
-//!   else : per bucket — s × f32 level table, then packed indices
+//!   else : per bucket — sᵢ × f32 level table, then packed indices
 //! ```
+//! The width table is how adaptive byte-budget allocation travels
+//! in-band (`quant::budget`): each bucket carries its own level count
+//! sᵢ, so a decoder never assumes a run-wide width. It is validated
+//! like every other header field — entries outside `2..=s`, a maximum
+//! that disagrees with the header `s`, a table on an FP or empty
+//! message, or a payload that does not sum to exactly
+//! Σ [`per_bucket_bytes`]`(lenᵢ, sᵢ)` all return `Err`. Messages
+//! without bit2 are byte-identical to the PR 9 wire format.
 //! The per-bucket f32 level table is exactly the "sending floating-point
 //! to represent quantization levels" overhead the paper discusses for
 //! bucket-size selection (Table 3).
@@ -47,6 +59,7 @@ const MAGIC: u32 = 0x3151_524F;
 const VERSION: u8 = 1;
 const FLAG_FP: u8 = 1;
 const FLAG_BASE_S: u8 = 2;
+const FLAG_WIDTHS: u8 = 4;
 
 /// Index packing strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -192,6 +205,9 @@ struct Wire<'a> {
     bucket: usize,
     total: usize,
     scheme: &'a str,
+    /// Per-bucket level counts when the message carries a width table
+    /// (`FLAG_WIDTHS`); `None` on uniform-width messages.
+    widths: Option<&'a [u8]>,
     payload: &'a [u8],
 }
 
@@ -228,10 +244,6 @@ fn parse(bytes: &[u8]) -> Result<Wire<'_>> {
     let scheme = std::str::from_utf8(name_bytes)
         .map_err(|_| Error::Codec("non-utf8 scheme name".into()))?;
 
-    // Guard against length lies in corrupted headers: the exact payload
-    // size is computable up front — reject before any allocation sized by
-    // attacker-controlled fields (found by the byte-corruption fuzz test).
-    let remaining = bytes.len() - r.pos;
     // Every encoder frames bucket ≥ 1 (FP uses len.max(1)), so a zero
     // here is corruption; rejecting it for FP too keeps the parallel
     // decode's bucket-grid sharding from degenerating to empty ranges.
@@ -239,6 +251,10 @@ fn parse(bytes: &[u8]) -> Result<Wire<'_>> {
         return Err(Error::Codec("bucket size 0".into()));
     }
     if flags & FLAG_FP != 0 {
+        if flags & FLAG_WIDTHS != 0 {
+            return Err(Error::Codec("width table on an FP message".into()));
+        }
+        let remaining = bytes.len() - r.pos;
         let need = total
             .checked_mul(4)
             .ok_or_else(|| Error::Codec("total overflows".into()))?;
@@ -247,11 +263,43 @@ fn parse(bytes: &[u8]) -> Result<Wire<'_>> {
                 "fp payload is {remaining} bytes, header claims {need}"
             )));
         }
-        return Ok(Wire { flags, s, bucket, total, scheme, payload: &bytes[r.pos..] });
+        return Ok(Wire { flags, s, bucket, total, scheme, widths: None, payload: &bytes[r.pos..] });
     }
     if s < 2 {
         return Err(Error::Codec(format!("quantized message with s={s}")));
     }
+    let widths = if flags & FLAG_WIDTHS != 0 {
+        // The table length is ceil(total/bucket); empty slices drop the
+        // flag, so a table on a zero-element message is corruption.
+        if total == 0 {
+            return Err(Error::Codec("width table on an empty message".into()));
+        }
+        let n_buckets = total.div_ceil(bucket);
+        // `take` bounds the table against the actual bytes, so a lying
+        // `total` cannot make us index past the end (or overflow `pos`).
+        let table = r.take(n_buckets)?;
+        let mut max = 0u8;
+        for (i, &w) in table.iter().enumerate() {
+            if (w as usize) < 2 || (w as usize) > s {
+                return Err(Error::Codec(format!(
+                    "width table entry {i} is {w}, outside 2..={s}"
+                )));
+            }
+            max = max.max(w);
+        }
+        if max as usize != s {
+            return Err(Error::Codec(format!(
+                "width table maximum {max} disagrees with header s={s}"
+            )));
+        }
+        Some(table)
+    } else {
+        None
+    };
+    // Guard against length lies in corrupted headers: the exact payload
+    // size is computable up front — reject before any allocation sized by
+    // attacker-controlled fields (found by the byte-corruption fuzz test).
+    let remaining = bytes.len() - r.pos;
     let packing = if flags & FLAG_BASE_S != 0 { Packing::BaseS } else { Packing::Fixed };
     // Coarse bound first: ≥1 bit per element, so total can never exceed
     // 8× the payload bytes — rejects absurd headers before the exact
@@ -261,15 +309,27 @@ fn parse(bytes: &[u8]) -> Result<Wire<'_>> {
             "header claims {total} elements for a {remaining}-byte payload"
         )));
     }
-    let expected = wire_size(total, bucket, s, packing, scheme)
-        .checked_sub(r.pos)
-        .ok_or_else(|| Error::Codec("header size underflow".into()))?;
+    let expected = match widths {
+        None => wire_size(total, bucket, s, packing, scheme)
+            .checked_sub(r.pos)
+            .ok_or_else(|| Error::Codec("header size underflow".into()))?,
+        Some(table) => {
+            let mut sum = 0usize;
+            for (i, &w) in table.iter().enumerate() {
+                let len = if i + 1 == table.len() { tail_len(total, bucket) } else { bucket };
+                sum = sum
+                    .checked_add(per_bucket_bytes(len, w as usize, packing))
+                    .ok_or_else(|| Error::Codec("width payload size overflows".into()))?;
+            }
+            sum
+        }
+    };
     if expected != remaining {
         return Err(Error::Codec(format!(
             "payload is {remaining} bytes, header claims {expected}"
         )));
     }
-    Ok(Wire { flags, s, bucket, total, scheme, payload: &bytes[r.pos..] })
+    Ok(Wire { flags, s, bucket, total, scheme, widths, payload: &bytes[r.pos..] })
 }
 
 /// Length of the final (possibly ragged) bucket.
@@ -292,14 +352,21 @@ pub fn decode(bytes: &[u8]) -> Result<Decoded> {
         }
         return Ok(Decoded::Fp(out));
     }
-    let s = w.s;
     let radix = match w.packing() {
-        Packing::BaseS => Some(bitpack::Radix::new(s)),
+        Packing::BaseS => Some(bitpack::Radix::new(w.s)),
         Packing::Fixed => None,
     };
     let n_buckets = w.total.div_ceil(w.bucket);
     let mut buckets = Vec::with_capacity(n_buckets);
     for bi in 0..n_buckets {
+        // With a width table each bucket has its own level count (and
+        // its own radix); without one, every bucket shares the header s.
+        let s = w.widths.map(|t| t[bi] as usize).unwrap_or(w.s);
+        let radix_b = match (&radix, w.widths) {
+            (Some(_), Some(_)) => Some(bitpack::Radix::new(s)),
+            (Some(rx), None) => Some(*rx),
+            (None, _) => None,
+        };
         let len = if bi + 1 == n_buckets { tail_len(w.total, w.bucket) } else { w.bucket };
         let mut levels = Vec::with_capacity(s);
         for _ in 0..s {
@@ -308,7 +375,7 @@ pub fn decode(bytes: &[u8]) -> Result<Decoded> {
         let payload_len = packed_len(len, s, w.packing());
         let payload = r.take(payload_len)?;
         let mut indices = Vec::new();
-        match &radix {
+        match &radix_b {
             Some(rx) => rx.unpack_into(payload, len, &mut indices)?,
             None => bitpack::unpack_fixed_into(payload, len, bits_for(s), &mut indices)?,
         }
@@ -407,6 +474,9 @@ fn decode_bucket_run(
     out: &mut [f32],
     scratch: &mut DecodeScratch,
 ) -> Result<()> {
+    if w.widths.is_some() {
+        return decode_bucket_run_widths(w, b0, b1, out, scratch);
+    }
     let s = w.s;
     let radix = match w.packing() {
         Packing::BaseS => Some(bitpack::Radix::new(s)),
@@ -436,6 +506,62 @@ fn decode_bucket_run(
         match &radix {
             Some(r) => r.unpack_into(packed, len, &mut scratch.indices)?,
             None => bitpack::unpack_fixed_into(packed, len, bits, &mut scratch.indices)?,
+        }
+        for &i in &scratch.indices {
+            let lv = scratch
+                .levels
+                .get(i as usize)
+                .ok_or_else(|| Error::Codec("index out of level range".into()))?;
+            out[outpos] = *lv;
+            outpos += 1;
+        }
+    }
+    debug_assert_eq!(outpos, out.len());
+    Ok(())
+}
+
+/// [`decode_bucket_run`] for width-table messages: each bucket carries
+/// its own level count, so byte offsets are prefix sums over the table
+/// and the unpacker is rebuilt per bucket. `parse()` validated the table
+/// entries and the exact payload length, so the offset reads cannot run
+/// past the end.
+fn decode_bucket_run_widths(
+    w: &Wire<'_>,
+    b0: usize,
+    b1: usize,
+    out: &mut [f32],
+    scratch: &mut DecodeScratch,
+) -> Result<()> {
+    let table = w.widths.expect("caller checked widths");
+    let packing = w.packing();
+    let n_buckets = w.total.div_ceil(w.bucket);
+    let tail = tail_len(w.total, w.bucket);
+    let blen = |bi: usize| if bi + 1 == n_buckets { tail } else { w.bucket };
+    let mut pos = 0usize;
+    for (bi, &wd) in table.iter().enumerate().take(b0) {
+        pos += per_bucket_bytes(blen(bi), wd as usize, packing);
+    }
+    let mut outpos = 0usize;
+    for bi in b0..b1 {
+        let s = table[bi] as usize;
+        let len = blen(bi);
+        scratch.levels.clear();
+        for _ in 0..s {
+            scratch
+                .levels
+                .push(f32::from_le_bytes(w.payload[pos..pos + 4].try_into().unwrap()));
+            pos += 4;
+        }
+        let payload_len = packed_len(len, s, packing);
+        let packed = &w.payload[pos..pos + payload_len];
+        pos += payload_len;
+        match packing {
+            Packing::BaseS => {
+                bitpack::Radix::new(s).unpack_into(packed, len, &mut scratch.indices)?
+            }
+            Packing::Fixed => {
+                bitpack::unpack_fixed_into(packed, len, bits_for(s), &mut scratch.indices)?
+            }
         }
         for &i in &scratch.indices {
             let lv = scratch
@@ -494,6 +620,39 @@ pub fn slice_elements_append(bytes: &[u8], e0: usize, e1: usize, out: &mut Vec<u
             "slice {e0}..{e1} not aligned to bucket size {d}"
         )));
     }
+    if let Some(table) = w.widths {
+        // Width-table slice: byte offsets are prefix sums over the table,
+        // the sub-table rides along, and the slice's header s is the
+        // sub-table maximum (the invariant parse() enforces). An empty
+        // slice has no buckets to describe, so it drops the flag.
+        if n == 0 {
+            write_header(out, w.flags & !FLAG_WIDTHS, w.s as u8, w.scheme, 0, d as u32);
+            return Ok(());
+        }
+        let n_buckets = w.total.div_ceil(d);
+        let tail = tail_len(w.total, d);
+        let packing = w.packing();
+        let (b0, b1) = (e0 / d, e1.div_ceil(d));
+        let mut off = [0usize; 2];
+        let mut pos = 0usize;
+        for (bi, &wd) in table.iter().enumerate() {
+            if bi == b0 {
+                off[0] = pos;
+            }
+            if bi == b1 {
+                break;
+            }
+            let len = if bi + 1 == n_buckets { tail } else { d };
+            pos += per_bucket_bytes(len, wd as usize, packing);
+        }
+        off[1] = if b1 == n_buckets { w.payload.len() } else { pos };
+        let sub = &table[b0..b1];
+        let s_sub = sub.iter().copied().max().expect("non-empty slice");
+        write_header(out, w.flags, s_sub, w.scheme, n as u64, d as u32);
+        out.extend_from_slice(sub);
+        out.extend_from_slice(&w.payload[off[0]..off[1]]);
+        return Ok(());
+    }
     let pb_full = per_bucket_bytes(d, w.s, w.packing());
     let offset = |e: usize| -> usize {
         if e == w.total {
@@ -523,10 +682,29 @@ pub fn concat_messages_into(parts: &[&[u8]], out: &mut Vec<u8>) -> Result<()> {
         Some(p) => parse(p)?,
         None => return Err(Error::Codec("concat of zero messages".into())),
     };
+    // Width-table mode: empty slices drop the widths flag (they have no
+    // buckets to describe), so flags are compared modulo that bit and
+    // only non-empty parts must carry a table. The reassembled header s
+    // is the maximum over the concatenated table — each part's own s was
+    // its sub-table maximum, so this reproduces the flat encode exactly.
+    let widths_mode = {
+        let mut any = false;
+        for p in parts.iter() {
+            if parse(p)?.widths.is_some() {
+                any = true;
+                break;
+            }
+        }
+        any
+    };
+    let base_flags = first.flags & !FLAG_WIDTHS;
+    let mut cat_widths: Vec<u8> = Vec::new();
     let mut total = 0usize;
     for (i, p) in parts.iter().enumerate() {
         let w = parse(p)?;
-        if w.scheme != first.scheme || w.flags != first.flags || w.s != first.s {
+        let flags_cmp = if widths_mode { w.flags & !FLAG_WIDTHS } else { w.flags };
+        let s_agrees = if widths_mode { true } else { w.s == first.s };
+        if w.scheme != first.scheme || flags_cmp != base_flags || !s_agrees {
             return Err(Error::Codec(format!(
                 "concat part {i} disagrees on scheme/flags/levels with part 0"
             )));
@@ -546,12 +724,30 @@ pub fn concat_messages_into(parts: &[&[u8]], out: &mut Vec<u8>) -> Result<()> {
                 )));
             }
         }
+        if widths_mode && w.total > 0 {
+            match w.widths {
+                Some(t) => cat_widths.extend_from_slice(t),
+                None => {
+                    return Err(Error::Codec(format!(
+                        "concat part {i} has no width table but part(s) do"
+                    )))
+                }
+            }
+        }
         total += w.total;
     }
-    // FP slices carry their own length as the framing bucket size, so the
-    // reassembled header re-derives it the way `encode_fp_into` does.
-    let bucket = if first.is_fp() { total.max(1) } else { first.bucket };
-    write_header(out, first.flags, first.s as u8, first.scheme, total as u64, bucket as u32);
+    if widths_mode {
+        let s_out = cat_widths.iter().copied().max().unwrap_or(first.s as u8);
+        let flags = base_flags | if cat_widths.is_empty() { 0 } else { FLAG_WIDTHS };
+        write_header(out, flags, s_out, first.scheme, total as u64, first.bucket as u32);
+        out.extend_from_slice(&cat_widths);
+    } else {
+        // FP slices carry their own length as the framing bucket size, so
+        // the reassembled header re-derives it the way `encode_fp_into`
+        // does.
+        let bucket = if first.is_fp() { total.max(1) } else { first.bucket };
+        write_header(out, first.flags, first.s as u8, first.scheme, total as u64, bucket as u32);
+    }
     for p in parts {
         let w = parse(p)?;
         out.extend_from_slice(w.payload);
@@ -567,15 +763,24 @@ fn packed_len(len: usize, s: usize, packing: Packing) -> usize {
     }
 }
 
-/// On-wire bytes of one bucket: level table + packed indices.
-fn per_bucket_bytes(len: usize, s: usize, packing: Packing) -> usize {
+/// On-wire bytes of one bucket of `len` elements at `s` levels: level
+/// table + packed indices. The cost model the byte-budget allocator
+/// (`quant::budget`) optimizes against — public so spend accounting and
+/// the codec can never disagree.
+pub fn per_bucket_bytes(len: usize, s: usize, packing: Packing) -> usize {
     s * 4 + packed_len(len, s, packing)
+}
+
+/// Header bytes of a message with scheme `scheme` (everything before the
+/// optional width table and the payload).
+pub fn header_bytes(scheme: &str) -> usize {
+    4 + 1 + 1 + 1 + 1 + 4 + 8 + scheme.len()
 }
 
 /// Exact wire size in bytes without materializing the message (closed
 /// form — O(1), also used as the decoder's pre-allocation validator).
 pub fn wire_size(total: usize, bucket: usize, s: usize, packing: Packing, scheme: &str) -> usize {
-    let hdr = 4 + 1 + 1 + 1 + 1 + 4 + 8 + scheme.len();
+    let hdr = header_bytes(scheme);
     if s == 0 {
         return hdr + total * 4;
     }
@@ -585,6 +790,94 @@ pub fn wire_size(total: usize, bucket: usize, s: usize, packing: Packing, scheme
     }
     hdr + (n_buckets - 1) * per_bucket_bytes(bucket, s, packing)
         + per_bucket_bytes(tail_len(total, bucket), s, packing)
+}
+
+/// Exact wire size of a width-table message: header + one table byte per
+/// bucket + per-bucket payloads at each bucket's own width. The budget
+/// allocator's spend accounting — by construction it can never disagree
+/// with what [`encode_widths_into`] emits.
+pub fn wire_size_widths(
+    total: usize,
+    bucket: usize,
+    widths: &[u8],
+    packing: Packing,
+    scheme: &str,
+) -> usize {
+    debug_assert_eq!(widths.len(), total.div_ceil(bucket.max(1)));
+    let mut size = header_bytes(scheme) + widths.len();
+    for (bi, &w) in widths.iter().enumerate() {
+        let len = if bi + 1 == widths.len() { tail_len(total, bucket) } else { bucket };
+        size += per_bucket_bytes(len, w as usize, packing);
+    }
+    size
+}
+
+/// The in-band per-bucket width table of an encoded message, if it
+/// carries one (`None` on uniform-width and FP messages). Fully
+/// validates the message first — the entry point hops use to *read* the
+/// widths they must re-encode at, never assuming them.
+pub fn message_widths(bytes: &[u8]) -> Result<Option<&[u8]>> {
+    Ok(parse(bytes)?.widths)
+}
+
+/// Copy the width table of `bytes` (if any) into a reusable scratch
+/// buffer, returning whether one was present. Borrow-friendly form of
+/// [`message_widths`] for hops that decode a message and re-encode into
+/// the same buffer.
+pub fn capture_widths(bytes: &[u8], scratch: &mut Vec<u8>) -> Result<bool> {
+    scratch.clear();
+    match parse(bytes)?.widths {
+        Some(t) => {
+            scratch.extend_from_slice(t);
+            Ok(true)
+        }
+        None => Ok(false),
+    }
+}
+
+/// Append the wire header + width table of a per-bucket-width message
+/// (the adaptive-budget twin of [`encode_quantized_header_into`]): the
+/// header `s` is the table maximum, per the format invariant. Shards or
+/// sections then append bucket payloads at each bucket's own width.
+pub fn encode_quantized_header_widths_into(
+    widths: &[u8],
+    scheme: &str,
+    packing: Packing,
+    total: usize,
+    bucket: usize,
+    out: &mut Vec<u8>,
+) {
+    debug_assert!(!widths.is_empty(), "width tables describe at least one bucket");
+    debug_assert_eq!(widths.len(), total.div_ceil(bucket.max(1)));
+    let s = widths.iter().copied().max().unwrap_or(0);
+    let flags =
+        FLAG_WIDTHS | if packing == Packing::BaseS { FLAG_BASE_S } else { 0 };
+    write_header(out, flags, s, scheme, total as u64, bucket as u32);
+    out.extend_from_slice(widths);
+}
+
+/// Encode a quantized gradient whose buckets carry per-bucket level
+/// counts (`b.levels.len()` is bucket `b`'s width) as a width-table
+/// message into a reused buffer (cleared first).
+pub fn encode_widths_into(
+    qg: &QuantizedGrad,
+    scheme: &str,
+    packing: Packing,
+    out: &mut Vec<u8>,
+) {
+    out.clear();
+    let widths: Vec<u8> = qg.buckets.iter().map(|b| b.levels.len() as u8).collect();
+    encode_quantized_header_widths_into(
+        &widths,
+        scheme,
+        packing,
+        qg.total_len,
+        qg.bucket_size,
+        out,
+    );
+    for b in &qg.buckets {
+        BucketEncoder::new(b.levels.len(), packing).encode_bucket_into(b, out);
+    }
 }
 
 /// Compression ratio vs 32-bit FP for a gradient of `total` elements.
@@ -623,7 +916,9 @@ struct Reader<'a> {
 
 impl<'a> Reader<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.bytes.len() {
+        // saturating: `n` can be header-derived (e.g. a lying width-table
+        // length), so the bound check must not overflow before it rejects
+        if n > self.bytes.len().saturating_sub(self.pos) {
             return Err(Error::Codec(format!(
                 "truncated message: need {n} bytes at offset {}",
                 self.pos
@@ -905,5 +1200,176 @@ mod tests {
         assert_eq!(buf, encode(&qg, "terngrad", Packing::BaseS));
         encode_fp_into(&g, &mut buf);
         assert_eq!(buf, encode_fp(&g));
+    }
+
+    /// A deterministic variable-width quantized gradient: bucket `bi`
+    /// gets `widths[bi]` levels with synthetic level values and cycling
+    /// indices — enough structure for byte-exact roundtrip checks.
+    fn widths_grad(total: usize, d: usize, widths: &[u8]) -> QuantizedGrad {
+        assert_eq!(widths.len(), total.div_ceil(d));
+        let buckets = widths
+            .iter()
+            .enumerate()
+            .map(|(bi, &w)| {
+                let len = if bi + 1 == widths.len() { tail_len(total, d) } else { d };
+                let levels: Vec<f32> =
+                    (0..w).map(|l| (bi + 1) as f32 * 0.25 + l as f32).collect();
+                let indices: Vec<u8> = (0..len).map(|j| (j % w as usize) as u8).collect();
+                QuantizedBucket { levels, indices }
+            })
+            .collect();
+        QuantizedGrad { bucket_size: d, total_len: total, buckets }
+    }
+
+    #[test]
+    fn widths_roundtrip_both_packings() {
+        // ragged tail (1000 % 128 = 104), widths spanning 2..=7
+        let qg = widths_grad(1000, 128, &[3, 2, 7, 4, 2, 5, 6, 2]);
+        let want = qg.dequantize();
+        let mut scratch = DecodeScratch::default();
+        for packing in [Packing::Fixed, Packing::BaseS] {
+            let mut bytes = Vec::new();
+            encode_widths_into(&qg, "orq-7", packing, &mut bytes);
+            assert_eq!(
+                bytes.len(),
+                wire_size_widths(1000, 128, &[3, 2, 7, 4, 2, 5, 6, 2], packing, "orq-7"),
+                "{packing:?} closed-form size"
+            );
+            assert_eq!(
+                message_widths(&bytes).unwrap(),
+                Some(&[3u8, 2, 7, 4, 2, 5, 6, 2][..]),
+                "{packing:?} table readback"
+            );
+            // materializing and flat decode agree with the source grad
+            match decode(&bytes).unwrap() {
+                Decoded::Quantized { grad, scheme } => {
+                    assert_eq!(scheme, "orq-7");
+                    assert_eq!(grad.dequantize(), want, "{packing:?}");
+                }
+                _ => panic!("expected quantized"),
+            }
+            let mut flat = Vec::new();
+            decode_flat_into(&bytes, &mut flat, &mut scratch).unwrap();
+            assert_eq!(flat, want, "{packing:?} flat");
+            // header s must be the table maximum
+            assert_eq!(bytes[6], 7, "{packing:?} header s");
+        }
+    }
+
+    /// Mirror of `flat_decode_rejects_what_decode_rejects` for width
+    /// messages: every truncation point must fail, as must corrupt table
+    /// entries (out of range, max disagreeing with header s), a widths
+    /// flag on FP or empty messages, and slicing stays grid-aligned.
+    #[test]
+    fn widths_fuzz_every_truncation_and_corruption() {
+        let qg = widths_grad(600, 128, &[2, 5, 3, 4, 2]);
+        let mut scratch = DecodeScratch::default();
+        let mut flat = Vec::new();
+        for packing in [Packing::Fixed, Packing::BaseS] {
+            let mut bytes = Vec::new();
+            encode_widths_into(&qg, "qsgd-5", packing, &mut bytes);
+            for n in 0..bytes.len() {
+                assert!(
+                    decode_flat_into(&bytes[..n], &mut flat, &mut scratch).is_err(),
+                    "{packing:?} prefix {n} must not decode"
+                );
+                assert!(decode(&bytes[..n]).is_err(), "{packing:?} prefix {n}");
+            }
+            assert!(decode_flat_into(&bytes, &mut flat, &mut scratch).is_ok());
+            let table_at = header_bytes("qsgd-5");
+            // entry below 2
+            let mut bad = bytes.clone();
+            bad[table_at] = 1;
+            assert!(decode(&bad).is_err(), "{packing:?} width 1 rejected");
+            // entry above header s (payload length also disagrees)
+            let mut bad = bytes.clone();
+            bad[table_at + 2] = 6;
+            assert!(decode(&bad).is_err(), "{packing:?} width > s rejected");
+            // max(table) < header s
+            let mut bad = bytes.clone();
+            bad[table_at + 1] = 4; // drop the only 5 → max 4 ≠ s 5
+            assert!(decode(&bad).is_err(), "{packing:?} max ≠ s rejected");
+        }
+        // widths flag on an FP message
+        let mut fp = encode_fp(&sample_grad(8, 20));
+        fp[5] |= FLAG_WIDTHS;
+        assert!(decode(&fp).is_err(), "FP + widths rejected");
+        // widths flag on an empty quantized message
+        let mut empty = Vec::new();
+        write_header(&mut empty, FLAG_WIDTHS, 2, "terngrad", 0, 128);
+        assert!(decode(&empty).is_err(), "empty + widths rejected");
+    }
+
+    /// Slicing a width message keeps the sub-table (header s = sub-max),
+    /// empty slices drop the flag, and concat inverts the slicing — the
+    /// identity the overlap/streaming paths rely on under a budget.
+    #[test]
+    fn widths_slice_and_concat_invert() {
+        let table = [3u8, 2, 7, 4, 2, 5, 6, 2];
+        let qg = widths_grad(1000, 128, &table);
+        let full = qg.dequantize();
+        for packing in [Packing::Fixed, Packing::BaseS] {
+            let mut bytes = Vec::new();
+            encode_widths_into(&qg, "orq-7", packing, &mut bytes);
+            let mut out = Vec::new();
+            for (e0, e1) in [(0usize, 256usize), (256, 1000), (1000, 1000), (0, 1000)] {
+                slice_elements_into(&bytes, e0, e1, &mut out).unwrap();
+                let dec = decode(&out).unwrap();
+                assert_eq!(dec.to_flat(), &full[e0..e1], "{packing:?} {e0}..{e1}");
+                if e0 < e1 {
+                    let sub = &table[e0 / 128..e1.div_ceil(128)];
+                    assert_eq!(
+                        message_widths(&out).unwrap(),
+                        Some(sub),
+                        "{packing:?} {e0}..{e1} sub-table"
+                    );
+                    assert_eq!(out[6], *sub.iter().max().unwrap(), "{packing:?} slice s");
+                } else {
+                    assert_eq!(message_widths(&out).unwrap(), None, "empty drops flag");
+                }
+            }
+            assert!(slice_elements_into(&bytes, 64, 256, &mut out).is_err());
+            // slice into pieces (+ an empty piece) and concat back
+            let cuts = [0usize, 256, 512, 1000];
+            let mut parts = Vec::new();
+            for w in cuts.windows(2) {
+                let mut p = Vec::new();
+                slice_elements_into(&bytes, w[0], w[1], &mut p).unwrap();
+                parts.push(p);
+            }
+            let mut empty = Vec::new();
+            slice_elements_into(&bytes, 512, 512, &mut empty).unwrap();
+            let views =
+                [parts[0].as_slice(), parts[1].as_slice(), empty.as_slice(), parts[2].as_slice()];
+            let mut back = Vec::new();
+            concat_messages_into(&views, &mut back).unwrap();
+            assert_eq!(back, bytes, "{packing:?} concat ∘ slice = id with widths");
+            // a widths part cannot concat with a non-widths part
+            let plain = {
+                let g = sample_grad(128, 21);
+                let q = from_name("orq-7").unwrap();
+                let pg =
+                    BucketQuantizer::new(128).quantize(&g, q.as_ref(), &mut Rng::seed_from(22));
+                encode(&pg, "orq-7", packing)
+            };
+            let views = [parts[0].as_slice(), plain.as_slice()];
+            assert!(concat_messages_into(&views, &mut back).is_err(), "{packing:?} mixed");
+        }
+    }
+
+    /// `capture_widths` copies the table through a scratch buffer (and
+    /// clears stale contents when there is none).
+    #[test]
+    fn capture_widths_scratch() {
+        let qg = widths_grad(256, 128, &[2, 4]);
+        let mut bytes = Vec::new();
+        encode_widths_into(&qg, "orq-4", Packing::BaseS, &mut bytes);
+        let mut scratch = vec![9u8; 3];
+        assert!(capture_widths(&bytes, &mut scratch).unwrap());
+        assert_eq!(scratch, vec![2, 4]);
+        let fp = encode_fp(&[1.0, 2.0]);
+        assert!(!capture_widths(&fp, &mut scratch).unwrap());
+        assert!(scratch.is_empty());
+        assert!(capture_widths(&bytes[..10], &mut scratch).is_err());
     }
 }

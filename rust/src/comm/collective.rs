@@ -27,6 +27,7 @@ use std::sync::mpsc::Receiver;
 use crate::codec::{self, Packing};
 use crate::error::{Error, Result};
 use crate::quant::bucket::{BucketQuantizer, QuantizedGrad};
+use crate::quant::budget::{self, BudgetSchedule};
 use crate::quant::error_feedback::ErrorFeedback;
 use crate::quant::parallel::BucketPipeline;
 use crate::quant::pool::PoolHandle;
@@ -468,6 +469,35 @@ impl WireSpec {
     }
 }
 
+/// Per-codec adaptive-budget state (see [`crate::quant::budget`]): the
+/// per-round allocator inputs plus the width table currently in force.
+/// Widths for round `t + 1` are derived from round `t`'s *decoded mean*
+/// — a value every node holds bit-identically — so all nodes compute the
+/// identical table with zero extra coordination (round 0 uses uniform
+/// statistics through the same allocator). The table still travels
+/// in-band on every message; receiving hops re-encode at the widths they
+/// *decode* from the frame ([`GradCodec::encode_matched_into`]), never
+/// at the ones they would derive.
+struct BudgetState {
+    /// Allocator byte budget per full-gradient uplink stream — the
+    /// configured `byte_budget` minus the topology's framing overhead
+    /// ([`super::shard::budget_frame_overhead`]), subtracted up front so
+    /// the wire spend including all headers stays ≤ the configured value.
+    budget_bytes: usize,
+    schedule: Option<BudgetSchedule>,
+    /// Widths range over `2..=s_max` — the configured method's level
+    /// count is the ceiling.
+    s_max: usize,
+    /// Current round's width table (empty until first use; recomputed by
+    /// [`GradCodec::observe_mean`] after every round).
+    widths: Vec<u8>,
+    /// Rounds observed so far — drives the [`budget::scheduled_budget`]
+    /// ramp.
+    round: u64,
+    /// Per-bucket second-moment scratch.
+    stats: Vec<f64>,
+}
+
 /// A [`WireSpec`] instantiated into a working encoder: quantizer + bucket
 /// splitter + packing (+ optional parallel pipeline). Owned per node so
 /// encoding is lock-free.
@@ -479,6 +509,17 @@ pub struct GradCodec {
     is_fp: bool,
     pipeline: Option<BucketPipeline>,
     dscratch: codec::DecodeScratch,
+    /// Per-width quantizer bank (`bank[s - 2]` is the s-level instance of
+    /// this codec's scheme family), built lazily the first time a width
+    /// table is encoded — by the budget path or by a hop matching an
+    /// incoming table ([`Self::encode_matched_into`]).
+    bank: Vec<Box<dyn Quantizer>>,
+    budget: Option<BudgetState>,
+    /// Serial width-encode scratch (the parallel path uses the
+    /// pipeline's shard arenas instead).
+    wqb: crate::quant::QuantizedBucket,
+    wclip: Vec<f32>,
+    wdeq: Vec<f32>,
 }
 
 impl GradCodec {
@@ -498,7 +539,120 @@ impl GradCodec {
             is_fp,
             pipeline,
             dscratch: codec::DecodeScratch::default(),
+            bank: Vec::new(),
+            budget: None,
+            wqb: crate::quant::QuantizedBucket::default(),
+            wclip: Vec::new(),
+            wdeq: Vec::new(),
         })
+    }
+
+    /// The parameterizable scheme family of `method` (`orq-S`, `qsgd-S`,
+    /// `linear-S` → `Some((family, s))`) — the methods whose level count
+    /// the budget allocator may vary per bucket.
+    fn parse_family(method: &str) -> Option<(&str, usize)> {
+        budget::parse_family(method)
+    }
+
+    /// Grow the per-width quantizer bank to cover widths `2..=s_max`.
+    fn ensure_bank(&mut self, s_max: usize) -> Result<()> {
+        let (family, _) = Self::parse_family(&self.method).ok_or_else(|| {
+            Error::Config(format!(
+                "per-bucket width tables need a parameterizable scheme \
+                 (orq-S, qsgd-S or linear-S), got {:?}",
+                self.method
+            ))
+        })?;
+        while self.bank.len() + 2 <= s_max {
+            let s = self.bank.len() + 2;
+            self.bank.push(quant::from_name(&format!("{family}-{s}"))?);
+        }
+        Ok(())
+    }
+
+    /// Arm the adaptive byte budget: every full-gradient encode from this
+    /// codec then carries a per-bucket width table chosen by
+    /// [`budget::allocate_widths`] so its wire size (headers included)
+    /// never exceeds `budget_bytes`. The configured method's level count
+    /// caps the per-bucket widths. Errs on `fp` and on the fixed-level
+    /// schemes (terngrad, signsgd, bingrad-*) whose width cannot vary.
+    pub fn set_budget(
+        &mut self,
+        budget_bytes: usize,
+        schedule: Option<BudgetSchedule>,
+    ) -> Result<()> {
+        let (_, s_max) = Self::parse_family(&self.method).ok_or_else(|| {
+            Error::Config(format!(
+                "--byte-budget needs a parameterizable scheme \
+                 (orq-S, qsgd-S or linear-S), got {:?}",
+                self.method
+            ))
+        })?;
+        self.ensure_bank(s_max)?;
+        self.budget = Some(BudgetState {
+            budget_bytes,
+            schedule,
+            s_max,
+            widths: Vec::new(),
+            round: 0,
+            stats: Vec::new(),
+        });
+        Ok(())
+    }
+
+    /// Whether the adaptive byte budget is armed.
+    pub fn has_budget(&self) -> bool {
+        self.budget.is_some()
+    }
+
+    /// Feed the round's decoded mean gradient back into the allocator:
+    /// per-bucket second moments of the mean become next round's
+    /// statistics, and the width table is recomputed at the next round's
+    /// scheduled budget. The mean is bit-identical on every node, so
+    /// every node transitions to the identical table. No-op without a
+    /// budget.
+    pub fn observe_mean(&mut self, mean: &[f32]) {
+        let Some(state) = &mut self.budget else { return };
+        let d = self.bucketq.bucket_size;
+        let nb = mean.len().div_ceil(d.max(1));
+        state.stats.clear();
+        state.stats.resize(nb, 0.0);
+        for (i, &v) in mean.iter().enumerate() {
+            let v = if v.is_finite() { v as f64 } else { 0.0 };
+            state.stats[i / d] += v * v;
+        }
+        state.round += 1;
+        let b = budget::scheduled_budget(state.budget_bytes, state.schedule, state.round);
+        state.widths = budget::allocate_widths(
+            &state.stats,
+            mean.len(),
+            d,
+            state.s_max,
+            b,
+            self.packing,
+            &self.method,
+        );
+    }
+
+    /// The width table in force for the coming round's encode of an
+    /// `n`-element gradient, computing the round-0 table (uniform
+    /// statistics) on first use. `None` when no budget is armed.
+    pub fn round_widths(&mut self, n: usize) -> Option<&[u8]> {
+        let Some(state) = &mut self.budget else { return None };
+        let nb = n.div_ceil(self.bucketq.bucket_size.max(1));
+        if state.widths.len() != nb {
+            let b = budget::scheduled_budget(state.budget_bytes, state.schedule, state.round);
+            state.widths = budget::allocate_widths(
+                &vec![1.0; nb],
+                n,
+                self.bucketq.bucket_size,
+                state.s_max,
+                b,
+                self.packing,
+                &self.method,
+            );
+        }
+        Some(&state.widths)
     }
 
     /// Whether this codec runs the parallel bucket pipeline.
@@ -533,6 +687,30 @@ impl GradCodec {
             codec::encode_fp_into(g, msg);
             return;
         }
+        if self.budget.is_some() {
+            // Budgeted full-gradient encode: per-bucket widths in-band.
+            let widths = self.take_round_widths(g.len());
+            self.encode_widths(&widths, g, rng, msg);
+            self.untake_round_widths(widths);
+            return;
+        }
+        self.encode_plain_into(g, rng, qg, msg);
+    }
+
+    /// The fixed-width (legacy) encode — bit-identical to the
+    /// pre-budget codec regardless of any armed budget. Hops route here
+    /// via [`Self::encode_matched_into`]`(None, ..)`.
+    fn encode_plain_into(
+        &mut self,
+        g: &[f32],
+        rng: &mut Rng,
+        qg: &mut QuantizedGrad,
+        msg: &mut Vec<u8>,
+    ) {
+        if self.is_fp || g.is_empty() {
+            codec::encode_fp_into(g, msg);
+            return;
+        }
         match &mut self.pipeline {
             None => {
                 self.bucketq.quantize_into(g, self.quantizer.as_ref(), rng, qg);
@@ -553,6 +731,167 @@ impl GradCodec {
         }
     }
 
+    /// Move the current round's width table out of the budget state so a
+    /// `&mut self` encode can borrow it (restored by
+    /// [`Self::untake_round_widths`] — allocation-free swap).
+    fn take_round_widths(&mut self, n: usize) -> Vec<u8> {
+        self.round_widths(n);
+        self.budget.as_mut().map(|s| std::mem::take(&mut s.widths)).unwrap_or_default()
+    }
+
+    fn untake_round_widths(&mut self, widths: Vec<u8>) {
+        if let Some(state) = &mut self.budget {
+            state.widths = widths;
+        }
+    }
+
+    /// Width-table encode core. Both the budget path and the matched-hop
+    /// path land here: one round key from `rng` with per-bucket derived
+    /// streams (the pipeline discipline) in *both* execution modes, so
+    /// budgeted wire bytes are invariant across thread counts — serial
+    /// budgeted runs intentionally trade the legacy advancing-stream
+    /// bytes for that invariance (without a budget nothing changes).
+    fn encode_widths(&mut self, widths: &[u8], g: &[f32], rng: &mut Rng, msg: &mut Vec<u8>) {
+        debug_assert!(!g.is_empty(), "width tables describe at least one bucket");
+        let round_key = rng.next_u64();
+        match &mut self.pipeline {
+            Some(pipe) => pipe.encode_widths_into(
+                &self.bucketq,
+                &self.bank,
+                widths,
+                g,
+                round_key,
+                &self.method,
+                self.packing,
+                msg,
+            ),
+            None => {
+                msg.clear();
+                codec::encode_quantized_header_widths_into(
+                    widths,
+                    &self.method,
+                    self.packing,
+                    g.len(),
+                    self.bucketq.bucket_size,
+                    msg,
+                );
+                let d = self.bucketq.bucket_size;
+                for (bi, &w) in widths.iter().enumerate() {
+                    let lo = bi * d;
+                    let hi = (lo + d).min(g.len());
+                    let q = self.bank[w as usize - 2].as_ref();
+                    self.bucketq.quantize_bucket_stream(
+                        &g[lo..hi],
+                        bi,
+                        q,
+                        round_key,
+                        &mut self.wclip,
+                        &mut self.wqb,
+                    );
+                    codec::BucketEncoder::new(w as usize, self.packing)
+                        .encode_bucket_into(&self.wqb, msg);
+                }
+            }
+        }
+    }
+
+    /// Encode `g` at the widths of a *received* message: `Some(table)`
+    /// re-encodes each bucket at the table's width (the hop sites of the
+    /// ring and hierarchy, which must requantize at the widths they
+    /// decoded — [`codec::capture_widths`] — never at widths they would
+    /// derive themselves); `None` is exactly the legacy fixed-width
+    /// encode. Errs if the table length does not match `g`'s bucket grid
+    /// or the scheme cannot vary its level count.
+    pub fn encode_matched_into(
+        &mut self,
+        widths: Option<&[u8]>,
+        g: &[f32],
+        rng: &mut Rng,
+        qg: &mut QuantizedGrad,
+        msg: &mut Vec<u8>,
+    ) -> Result<()> {
+        let Some(table) = widths else {
+            self.encode_plain_into(g, rng, qg, msg);
+            return Ok(());
+        };
+        let nb = g.len().div_ceil(self.bucketq.bucket_size.max(1));
+        if table.len() != nb || nb == 0 {
+            return Err(Error::Comm(format!(
+                "width table has {} entries but the gradient has {nb} buckets",
+                table.len()
+            )));
+        }
+        let s_max = table.iter().copied().max().unwrap_or(2).max(2) as usize;
+        self.ensure_bank(s_max)?;
+        self.encode_widths(table, g, rng, msg);
+        Ok(())
+    }
+
+    /// Error-feedback twin of [`Self::encode_matched_into`].
+    pub fn encode_matched_ef_into(
+        &mut self,
+        widths: Option<&[u8]>,
+        ef: &mut ErrorFeedback,
+        g: &[f32],
+        rng: &mut Rng,
+        qg: &mut QuantizedGrad,
+        msg: &mut Vec<u8>,
+    ) -> Result<()> {
+        let Some(table) = widths else {
+            self.encode_plain_ef_into(ef, g, rng, qg, msg);
+            return Ok(());
+        };
+        let nb = g.len().div_ceil(self.bucketq.bucket_size.max(1));
+        if table.len() != nb || nb == 0 {
+            return Err(Error::Comm(format!(
+                "width table has {} entries but the gradient has {nb} buckets",
+                table.len()
+            )));
+        }
+        let s_max = table.iter().copied().max().unwrap_or(2).max(2) as usize;
+        self.ensure_bank(s_max)?;
+        self.encode_widths_ef(table, ef, g, rng, msg);
+        Ok(())
+    }
+
+    /// Width-table error-feedback core: quantize the compensated signal
+    /// `g + m` at the given widths, recover the residual through the
+    /// width-aware decode of the message just written.
+    fn encode_widths_ef(
+        &mut self,
+        widths: &[u8],
+        ef: &mut ErrorFeedback,
+        g: &[f32],
+        rng: &mut Rng,
+        msg: &mut Vec<u8>,
+    ) {
+        if let Some(pipe) = &mut self.pipeline {
+            let round_key = rng.next_u64();
+            pipe.encode_widths_ef_into(
+                &self.bucketq,
+                &self.bank,
+                widths,
+                ef,
+                g,
+                round_key,
+                &self.method,
+                self.packing,
+                msg,
+            );
+            return;
+        }
+        {
+            // `comp` borrows `ef`, which is disjoint from `self`.
+            let comp = ef.compensate(g);
+            self.encode_widths(widths, comp, rng, msg);
+        }
+        let mut deq = std::mem::take(&mut self.wdeq);
+        codec::decode_flat_into(msg, &mut deq, &mut self.dscratch)
+            .expect("own encoding always decodes");
+        ef.update_residual(&deq);
+        self.wdeq = deq;
+    }
+
     /// Build error-feedback state matching this codec's bucket/clip
     /// configuration. Works for serial and parallel codecs alike: the
     /// serial path updates the residual from the materialized
@@ -571,6 +910,24 @@ impl GradCodec {
     /// thread count) and recover the residual by decoding their own
     /// message.
     pub fn encode_ef_into(
+        &mut self,
+        ef: &mut ErrorFeedback,
+        g: &[f32],
+        rng: &mut Rng,
+        qg: &mut QuantizedGrad,
+        msg: &mut Vec<u8>,
+    ) {
+        if self.budget.is_some() && !g.is_empty() {
+            let widths = self.take_round_widths(g.len());
+            self.encode_widths_ef(&widths, ef, g, rng, msg);
+            self.untake_round_widths(widths);
+            return;
+        }
+        self.encode_plain_ef_into(ef, g, rng, qg, msg);
+    }
+
+    /// The fixed-width (legacy) error-feedback encode.
+    fn encode_plain_ef_into(
         &mut self,
         ef: &mut ErrorFeedback,
         g: &[f32],
@@ -609,7 +966,13 @@ impl GradCodec {
     /// [`QuantizedGrad`] instead. Lets the trainer measure quantization
     /// error without decoding the same message twice.
     pub fn ef_dequant(&self) -> Option<&[f32]> {
-        self.pipeline.as_ref().map(|p| p.ef_dequant())
+        match &self.pipeline {
+            Some(p) => Some(p.ef_dequant()),
+            // Serial budgeted EF also recovers the residual through the
+            // wire decode (no QuantizedGrad is materialized).
+            None if self.budget.is_some() => Some(&self.wdeq),
+            None => None,
+        }
     }
 
     /// Decode a wire message into a flat f32 buffer, using the parallel

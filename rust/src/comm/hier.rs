@@ -283,6 +283,9 @@ impl HierarchicalCollective {
                 stream_rows: Vec::new(),
                 flat_msg: Vec::new(),
                 last_msg_bytes: 0,
+                wscratch: Vec::new(),
+                wfull: Vec::new(),
+                wfull_has: false,
             });
         }
         Ok((
@@ -506,6 +509,17 @@ pub struct HierWorker {
     /// Encoded upload size of the current flat round (0 when streamed) —
     /// the `quant_bytes` input of the coordinator's [`hier_time`] model.
     last_msg_bytes: usize,
+    /// Width table captured from the latest incoming intra-ring hop
+    /// message (budgeted rounds): the widths its requantization — and,
+    /// after the final hop, the member→leader gather encode — must
+    /// reproduce. Read from the frame, never derived locally.
+    wscratch: Vec<u8>,
+    /// Full-gradient width table captured from this worker's own encoded
+    /// upload (`wfull_has` = one was present): every worker carries the
+    /// identical table on budgeted rounds, and the leader's star uplink
+    /// re-encodes the whole group sum at exactly these widths.
+    wfull: Vec<u8>,
+    wfull_has: bool,
 }
 
 impl HierWorker {
@@ -553,6 +567,7 @@ impl HierWorker {
             let r = chunk_range(n, d, m, j);
             codec::slice_elements_into(encoded, r.start, r.end, &mut cur)?;
         }
+        let mut last_has_w = false;
         for k in 0..m - 1 {
             if k > 0 || !streamed {
                 self.step_bytes[k] = cur.len();
@@ -567,6 +582,10 @@ impl HierWorker {
             };
             let c = ring_sub(j, k + 1, m);
             self.decode_chunk(&msg, c, n)?;
+            // Capture the incoming in-band width table (budgeted rounds):
+            // this hop's requantization — and, after the final hop, the
+            // gather encode of this same chunk — must reproduce it.
+            last_has_w = codec::capture_widths(&msg, &mut self.wscratch)?;
             let r = chunk_range(n, d, m, c);
             for (a, v) in self.chunk.iter_mut().zip(&self.own[r]) {
                 *a += *v;
@@ -576,17 +595,23 @@ impl HierWorker {
                 // the received buffer (hop-k residual compensates what the
                 // previous round's hop-k encode dropped). The final sum is
                 // requantized below for the gather instead.
+                let widths = last_has_w.then_some(&self.wscratch[..]);
                 match self.hop_ef.get_mut(k) {
-                    Some(ef) => self.codec.encode_ef_into(
+                    Some(ef) => self.codec.encode_matched_ef_into(
+                        widths,
                         ef,
                         &self.chunk,
                         &mut self.rng,
                         &mut self.qg,
                         &mut msg,
-                    ),
-                    None => {
-                        self.codec.encode_into(&self.chunk, &mut self.rng, &mut self.qg, &mut msg)
-                    }
+                    )?,
+                    None => self.codec.encode_matched_into(
+                        widths,
+                        &self.chunk,
+                        &mut self.rng,
+                        &mut self.qg,
+                        &mut msg,
+                    )?,
                 }
                 cur = msg;
             } else {
@@ -596,18 +621,26 @@ impl HierWorker {
         // `self.chunk` now holds the complete group sum of chunk (j+1)%m.
         let c_own = (j + 1) % m;
         if j != 0 {
-            // ---- gather: ship the completed chunk to the leader ----
+            // ---- gather: ship the completed chunk to the leader, at the
+            // widths of the final hop's incoming message (that message
+            // covered exactly this chunk) ----
+            let widths = last_has_w.then_some(&self.wscratch[..]);
             match &mut self.gather_ef {
-                Some(ef) => self.codec.encode_ef_into(
+                Some(ef) => self.codec.encode_matched_ef_into(
+                    widths,
                     ef,
                     &self.chunk,
                     &mut self.rng,
                     &mut self.qg,
                     &mut self.msg,
-                ),
-                None => {
-                    self.codec.encode_into(&self.chunk, &mut self.rng, &mut self.qg, &mut self.msg)
-                }
+                )?,
+                None => self.codec.encode_matched_into(
+                    widths,
+                    &self.chunk,
+                    &mut self.rng,
+                    &mut self.qg,
+                    &mut self.msg,
+                )?,
             }
             self.step_bytes[m - 1] = self.msg.len();
             let bytes = std::mem::take(&mut self.msg);
@@ -951,6 +984,7 @@ impl HierWorker {
         }
         let HierWorker { codec, flat_msg, own, .. } = &mut *self;
         codec.decode_flat_into(flat_msg, own)?;
+        self.wfull_has = codec::capture_widths(&self.flat_msg, &mut self.wfull)?;
         let n = self.own.len();
         mean_out.clear();
         self.step_bytes.clear();
@@ -967,10 +1001,11 @@ impl HierWorker {
         if self.member == 0 && self.group != 0 && m > 1 {
             // ---- leader uplink over the slow star (flat-accounted; the
             // m == 1 uplink was already streamed section by section) ----
-            let HierWorker { codec, up_ef, group_sum, rng, qg, msg, .. } = self;
+            let HierWorker { codec, up_ef, group_sum, rng, qg, msg, wfull, wfull_has, .. } = self;
+            let widths = (*wfull_has).then_some(&wfull[..]);
             match up_ef {
-                Some(ef) => codec.encode_ef_into(ef, group_sum, rng, qg, msg),
-                None => codec.encode_into(group_sum, rng, qg, msg),
+                Some(ef) => codec.encode_matched_ef_into(widths, ef, group_sum, rng, qg, msg)?,
+                None => codec.encode_matched_into(widths, group_sum, rng, qg, msg)?,
             }
             self.step_bytes[m] = self.msg.len();
             let bytes = std::mem::take(&mut self.msg);
@@ -1035,6 +1070,10 @@ impl WorkerExchange for HierWorker {
         }
         let m = self.group_size;
         self.codec.decode_flat_into(encoded, &mut self.own)?;
+        // Budgeted rounds: remember the full-gradient width table for the
+        // leader's star uplink re-encode (identical on every worker, and
+        // still read from an encoded frame — this worker's own upload).
+        self.wfull_has = codec::capture_widths(encoded, &mut self.wfull)?;
         let n = self.own.len();
         mean_out.clear();
         self.step_bytes.clear();
@@ -1058,10 +1097,12 @@ impl WorkerExchange for HierWorker {
                 self.msg.clear();
                 self.msg.append(encoded);
             } else {
-                let HierWorker { codec, up_ef, group_sum, rng, qg, msg, .. } = self;
+                let HierWorker { codec, up_ef, group_sum, rng, qg, msg, wfull, wfull_has, .. } =
+                    self;
+                let widths = (*wfull_has).then_some(&wfull[..]);
                 match up_ef {
-                    Some(ef) => codec.encode_ef_into(ef, group_sum, rng, qg, msg),
-                    None => codec.encode_into(group_sum, rng, qg, msg),
+                    Some(ef) => codec.encode_matched_ef_into(widths, ef, group_sum, rng, qg, msg)?,
+                    None => codec.encode_matched_into(widths, group_sum, rng, qg, msg)?,
                 }
             }
             self.step_bytes[m] = self.msg.len();

@@ -129,6 +129,28 @@
 //! executable collectives reproduce them to < 1% via the per-frame
 //! readiness stamps, measured from the round's backward start.
 //!
+//! **In-band per-bucket widths / byte budgets** (`--byte-budget BYTES
+//! [--budget-schedule coarse-to-fine]`) — the byte-budget allocator
+//! ([`crate::quant::budget::allocate_widths`]) re-spends the method's
+//! bit width per bucket each round, minimizing total quantization
+//! variance subject to the configured per-round uplink byte cap
+//! (headers and frames included — the trainer pre-subtracts
+//! [`budget_frame_overhead`]). The chosen widths are **never assumed by
+//! a receiver**: the encoding side writes the per-bucket width table
+//! into the wire header (`FLAG_WIDTHS`,
+//! [`crate::codec::encode_quantized_header_widths_into`]), every
+//! decoder reads and validates it like any other header field
+//! (malformed tables are `Err`, not guesses), and every
+//! requantize-and-forward hop (ring chunks, hier intra-ring and leader
+//! star uplinks) re-encodes at the widths it *captured from the
+//! incoming frame* ([`crate::codec::capture_widths`] →
+//! [`GradCodec::encode_matched_into`](collective::GradCodec::encode_matched_into)).
+//! Bucket-aligned slices carry the matching sub-table and concatenation
+//! reproduces the flat table exactly, so shard slices, ring chunks and
+//! streamed section frames all stay self-describing. Without a budget
+//! the header carries the scheme's fixed `s` and the wire bytes are
+//! bit-identical to the pre-budget codec.
+//!
 //! **Observability** ([`crate::obs`], `--trace out.json --trace-level
 //! fine`) — every collective carries the [`WireSpec::recorder`]
 //! ([`crate::obs::TraceRecorder`]): coordinators emit simulated-clock
@@ -172,4 +194,4 @@ pub use overlap::{
 };
 pub use ps::{ParameterServer, PsCollective, PsWorker, WorkerHandle};
 pub use ring::{RingAllReduce, RingWorker};
-pub use shard::StalenessStats;
+pub use shard::{budget_frame_overhead, StalenessStats};

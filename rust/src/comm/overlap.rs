@@ -476,6 +476,17 @@ pub struct OverlapEncoder {
     /// `threads == 1`: encode staged sections inline on the driver
     /// thread — same per-bucket RNG streams, same bytes, no spawns.
     serial: bool,
+    /// Per-bucket bit widths for the current round
+    /// ([`set_widths`](Self::set_widths)) — the byte-budget allocator's
+    /// table. Empty/off ⇒ every bucket encodes at the scheme's fixed
+    /// `levels` and the wire bytes are bit-identical to the pre-budget
+    /// encoder.
+    widths: Vec<u8>,
+    widths_on: bool,
+    /// Quantizer bank indexed by `width - 2`, lazily grown to the
+    /// largest width any installed table requests. Only parameterizable
+    /// families (`orq-S`/`qsgd-S`/`linear-S`) can populate it.
+    bank: Vec<Box<dyn Quantizer>>,
     arenas: Vec<SectionArena>,
     /// Per-section standalone message buffers (streaming mode), reused
     /// across rounds.
@@ -535,6 +546,9 @@ impl OverlapEncoder {
             levels,
             pool,
             serial,
+            widths: Vec::new(),
+            widths_on: false,
+            bank: Vec::new(),
             arenas: Vec::new(),
             msgs: Vec::new(),
             section_bytes: Vec::new(),
@@ -546,6 +560,49 @@ impl OverlapEncoder {
     /// Point the staging instants at the owning worker's trace row.
     pub fn set_track(&mut self, track: crate::obs::Track) {
         self.track = track;
+    }
+
+    /// Install this round's per-bucket width table (the byte-budget
+    /// allocator's output, [`crate::quant::budget::allocate_widths`]) —
+    /// or `None` to restore the fixed-width encode. The table must hold
+    /// one entry per bucket of the full gradient; every entry picks that
+    /// bucket's level count, and the assembled flat message (and each
+    /// streamed section message) carries the table in-band exactly like
+    /// [`super::collective::GradCodec`]'s budgeted path, so downstream
+    /// hops decode the widths from the frame rather than assuming them.
+    pub fn set_widths(&mut self, widths: Option<&[u8]>) -> Result<()> {
+        let Some(table) = widths else {
+            self.widths_on = false;
+            return Ok(());
+        };
+        let nb = self.map.total.div_ceil(self.map.bucket_size.max(1));
+        if table.len() != nb || nb == 0 {
+            if nb == 0 {
+                // Nothing to encode; the plain path already handles it.
+                self.widths_on = false;
+                return Ok(());
+            }
+            return Err(Error::Comm(format!(
+                "width table has {} entries but the section map covers {nb} buckets",
+                table.len()
+            )));
+        }
+        let s_max = table.iter().copied().max().unwrap_or(2).max(2) as usize;
+        let (family, _) = crate::quant::budget::parse_family(&self.scheme).ok_or_else(|| {
+            Error::Config(format!(
+                "per-bucket width tables need a parameterizable scheme \
+                 (orq-S / qsgd-S / linear-S), not '{}'",
+                self.scheme
+            ))
+        })?;
+        while self.bank.len() + 2 <= s_max {
+            let s = self.bank.len() + 2;
+            self.bank.push(quant::from_name(&format!("{family}-{s}"))?);
+        }
+        self.widths.clear();
+        self.widths.extend_from_slice(table);
+        self.widths_on = true;
+        Ok(())
     }
 
     pub fn map(&self) -> &SectionMap {
@@ -598,6 +655,12 @@ impl OverlapEncoder {
         let map = &self.map;
         let bq = &self.bucketq;
         let q = self.quantizer.as_ref();
+        let packing = self.packing;
+        let wt: Option<(&[u8], &[Box<dyn Quantizer>])> = if self.widths_on {
+            Some((&self.widths[..], &self.bank[..]))
+        } else {
+            None
+        };
         let (rec, track) = (self.recorder.clone(), self.track);
         let fine = rec.is_fine();
         let mut loss = 0.0f32;
@@ -616,7 +679,17 @@ impl OverlapEncoder {
                     if fine {
                         rec.instant(track, "section_staged");
                     }
-                    encode_section(bq, q, round_key, s.buckets.clone(), s.elems.start, enc, a);
+                    encode_section(
+                        bq,
+                        q,
+                        wt,
+                        round_key,
+                        s.buckets.clone(),
+                        s.elems.start,
+                        enc,
+                        packing,
+                        a,
+                    );
                 }
             };
             loss = backward(&mut on_ready);
@@ -641,7 +714,9 @@ impl OverlapEncoder {
                                 }
                                 let (buckets, e0) = (s.buckets.clone(), s.elems.start);
                                 sc.spawn(move || {
-                                    encode_section(bq, q, round_key, buckets, e0, enc, a)
+                                    encode_section(
+                                        bq, q, wt, round_key, buckets, e0, enc, packing, a,
+                                    )
                                 });
                             }
                         };
@@ -665,7 +740,7 @@ impl OverlapEncoder {
                             }
                             let (buckets, e0) = (s.buckets.clone(), s.elems.start);
                             scope.spawn(move || {
-                                encode_section(bq, q, round_key, buckets, e0, enc, a)
+                                encode_section(bq, q, wt, round_key, buckets, e0, enc, packing, a)
                             });
                         }
                     };
@@ -675,16 +750,29 @@ impl OverlapEncoder {
             }
         }
         // Assemble: one header, then every section's segment in ascending
-        // bucket order — the exact flat parallel wire layout.
+        // bucket order — the exact flat parallel wire layout. With a
+        // width table armed the header carries the table in-band
+        // (FLAG_WIDTHS), matching `GradCodec`'s budgeted encode.
         out.clear();
-        codec::encode_quantized_header_into(
-            self.levels,
-            &self.scheme,
-            self.packing,
-            n,
-            self.bucketq.bucket_size,
-            out,
-        );
+        if self.widths_on {
+            codec::encode_quantized_header_widths_into(
+                &self.widths,
+                &self.scheme,
+                self.packing,
+                n,
+                self.bucketq.bucket_size,
+                out,
+            );
+        } else {
+            codec::encode_quantized_header_into(
+                self.levels,
+                &self.scheme,
+                self.packing,
+                n,
+                self.bucketq.bucket_size,
+                out,
+            );
+        }
         self.section_bytes.clear();
         for a in &self.arenas[..nsec] {
             self.section_bytes.push(a.seg.len());
@@ -749,6 +837,11 @@ impl OverlapEncoder {
         let q = self.quantizer.as_ref();
         let (levels, packing, d) = (self.levels, self.packing, self.bucketq.bucket_size);
         let scheme = self.scheme.as_str();
+        let wt: Option<(&[u8], &[Box<dyn Quantizer>])> = if self.widths_on {
+            Some((&self.widths[..], &self.bank[..]))
+        } else {
+            None
+        };
         let (rec, track) = (self.recorder.clone(), self.track);
         let fine = rec.is_fine();
         let mut sink_err: Option<Error> = None;
@@ -767,17 +860,44 @@ impl OverlapEncoder {
                     if fine {
                         rec.instant(track, "section_staged");
                     }
-                    encode_section(bq, q, round_key, s.buckets.clone(), s.elems.start, enc, a);
+                    encode_section(
+                        bq,
+                        q,
+                        wt,
+                        round_key,
+                        s.buckets.clone(),
+                        s.elems.start,
+                        enc,
+                        packing,
+                        a,
+                    );
                     let m = &mut msgs[next];
                     m.clear();
-                    codec::encode_quantized_header_into(
-                        levels,
-                        scheme,
-                        packing,
-                        s.elems.len(),
-                        d,
-                        m,
-                    );
+                    // Each standalone section message carries its own
+                    // sub-table slice (header `s` = sub-table max), so
+                    // concatenation reproduces the flat budgeted bytes.
+                    // Empty sections fall back to the uniform header —
+                    // the format forbids width tables on zero elements.
+                    match wt {
+                        Some((table, _)) if !s.buckets.is_empty() => {
+                            codec::encode_quantized_header_widths_into(
+                                &table[s.buckets.clone()],
+                                scheme,
+                                packing,
+                                s.elems.len(),
+                                d,
+                                m,
+                            )
+                        }
+                        _ => codec::encode_quantized_header_into(
+                            levels,
+                            scheme,
+                            packing,
+                            s.elems.len(),
+                            d,
+                            m,
+                        ),
+                    }
                     m.extend_from_slice(&a.seg);
                     if sink_err.is_none() {
                         if fine {
@@ -825,11 +945,33 @@ impl OverlapEncoder {
                                         (s.buckets.clone(), s.elems.start, s.elems.len());
                                     let tx = tx.clone();
                                     sc.spawn(move || {
-                                        encode_section(bq, q, round_key, buckets, e0, enc, a);
-                                        buf.clear();
-                                        codec::encode_quantized_header_into(
-                                            levels, scheme, packing, len, d, &mut buf,
+                                        encode_section(
+                                            bq,
+                                            q,
+                                            wt,
+                                            round_key,
+                                            buckets.clone(),
+                                            e0,
+                                            enc,
+                                            packing,
+                                            a,
                                         );
+                                        buf.clear();
+                                        match wt {
+                                            Some((table, _)) if !buckets.is_empty() => {
+                                                codec::encode_quantized_header_widths_into(
+                                                    &table[buckets],
+                                                    scheme,
+                                                    packing,
+                                                    len,
+                                                    d,
+                                                    &mut buf,
+                                                )
+                                            }
+                                            _ => codec::encode_quantized_header_into(
+                                                levels, scheme, packing, len, d, &mut buf,
+                                            ),
+                                        }
                                         buf.extend_from_slice(&a.seg);
                                         let _ = tx.send((idx, buf));
                                     });
@@ -876,11 +1018,33 @@ impl OverlapEncoder {
                                     (s.buckets.clone(), s.elems.start, s.elems.len());
                                 let tx = tx.clone();
                                 scope.spawn(move || {
-                                    encode_section(bq, q, round_key, buckets, e0, enc, a);
-                                    buf.clear();
-                                    codec::encode_quantized_header_into(
-                                        levels, scheme, packing, len, d, &mut buf,
+                                    encode_section(
+                                        bq,
+                                        q,
+                                        wt,
+                                        round_key,
+                                        buckets.clone(),
+                                        e0,
+                                        enc,
+                                        packing,
+                                        a,
                                     );
+                                    buf.clear();
+                                    match wt {
+                                        Some((table, _)) if !buckets.is_empty() => {
+                                            codec::encode_quantized_header_widths_into(
+                                                &table[buckets],
+                                                scheme,
+                                                packing,
+                                                len,
+                                                d,
+                                                &mut buf,
+                                            )
+                                        }
+                                        _ => codec::encode_quantized_header_into(
+                                            levels, scheme, packing, len, d, &mut buf,
+                                        ),
+                                    }
                                     buf.extend_from_slice(&a.seg);
                                     let _ = tx.send((idx, buf));
                                 });
@@ -930,14 +1094,25 @@ impl OverlapEncoder {
         }
         // Assemble the flat message (EF settle / self-decode path).
         out.clear();
-        codec::encode_quantized_header_into(
-            self.levels,
-            &self.scheme,
-            self.packing,
-            n,
-            self.bucketq.bucket_size,
-            out,
-        );
+        if self.widths_on {
+            codec::encode_quantized_header_widths_into(
+                &self.widths,
+                &self.scheme,
+                self.packing,
+                n,
+                self.bucketq.bucket_size,
+                out,
+            );
+        } else {
+            codec::encode_quantized_header_into(
+                self.levels,
+                &self.scheme,
+                self.packing,
+                n,
+                self.bucketq.bucket_size,
+                out,
+            );
+        }
         self.section_bytes.clear();
         for a in &self.arenas[..nsec] {
             self.section_bytes.push(a.seg.len());
@@ -969,14 +1144,21 @@ fn stage(a: &mut SectionArena, g: &[f32], memory: Option<&[f32]>, elems: &Range<
 /// Quantize and serialize one section's run of buckets into its segment
 /// buffer. `buckets` are global grid indices — the RNG stream of bucket
 /// `bi` is `Rng::stream(round_key, bi)` exactly as in the flat parallel
-/// encode, which is what makes the assembled bytes identical.
+/// encode, which is what makes the assembled bytes identical. `wt`
+/// carries the round's per-bucket width table plus the quantizer bank
+/// (indexed `width - 2`) when a byte budget is armed: each bucket then
+/// quantizes at its own level count on the same per-bucket stream, so
+/// budgeted bytes are thread-count invariant too.
+#[allow(clippy::too_many_arguments)]
 fn encode_section(
     bq: &BucketQuantizer,
     q: &dyn Quantizer,
+    wt: Option<(&[u8], &[Box<dyn Quantizer>])>,
     round_key: u64,
     buckets: Range<usize>,
     elems_start: usize,
     enc: BucketEncoder,
+    packing: Packing,
     a: &mut SectionArena,
 ) {
     a.seg.clear();
@@ -984,8 +1166,19 @@ fn encode_section(
     for bi in buckets {
         let lo = bi * d - elems_start;
         let hi = (lo + d).min(a.gbuf.len());
-        bq.quantize_bucket_stream(&a.gbuf[lo..hi], bi, q, round_key, &mut a.clip, &mut a.qb);
-        enc.encode_bucket_into(&a.qb, &mut a.seg);
+        match wt {
+            Some((table, bank)) => {
+                let w = table[bi] as usize;
+                let qw = bank[w - 2].as_ref();
+                bq.quantize_bucket_stream(&a.gbuf[lo..hi], bi, qw, round_key, &mut a.clip, &mut a.qb);
+                debug_assert_eq!(a.qb.levels.len(), w, "bank quantizer width");
+                BucketEncoder::new(w, packing).encode_bucket_into(&a.qb, &mut a.seg);
+            }
+            None => {
+                bq.quantize_bucket_stream(&a.gbuf[lo..hi], bi, q, round_key, &mut a.clip, &mut a.qb);
+                enc.encode_bucket_into(&a.qb, &mut a.seg);
+            }
+        }
     }
 }
 

@@ -223,6 +223,7 @@ impl RingAllReduce {
                 sec_done: Vec::new(),
                 stream_rows: Vec::new(),
                 last_msg_bytes: 0,
+                wscratch: Vec::new(),
             });
         }
         Ok((
@@ -393,6 +394,10 @@ pub struct RingWorker {
     /// The flat round's encoded message size, reported in the round
     /// trace for the coordinator's closed-form model (0 when streamed).
     last_msg_bytes: usize,
+    /// Width table captured from the incoming hop message (budgeted
+    /// rounds) — the widths the requantization must reproduce, read from
+    /// the frame, never derived locally.
+    wscratch: Vec<u8>,
 }
 
 impl RingWorker {
@@ -530,12 +535,26 @@ impl WorkerExchange for RingWorker {
             // Requantize the partial (or, on the last hop, final) sum for
             // transmission, recycling the received buffer. With EF on, the
             // hop's residual compensates what round t−1's hop-k encode
-            // dropped.
+            // dropped. Budgeted rounds requantize at the widths decoded
+            // from the incoming message's in-band table.
+            let has_w = codec::capture_widths(&msg, &mut self.wscratch)?;
+            let widths = has_w.then_some(&self.wscratch[..]);
             match self.hop_ef.get_mut(k) {
-                Some(ef) => {
-                    self.codec.encode_ef_into(ef, &self.chunk, &mut self.rng, &mut self.qg, &mut msg)
-                }
-                None => self.codec.encode_into(&self.chunk, &mut self.rng, &mut self.qg, &mut msg),
+                Some(ef) => self.codec.encode_matched_ef_into(
+                    widths,
+                    ef,
+                    &self.chunk,
+                    &mut self.rng,
+                    &mut self.qg,
+                    &mut msg,
+                )?,
+                None => self.codec.encode_matched_into(
+                    widths,
+                    &self.chunk,
+                    &mut self.rng,
+                    &mut self.qg,
+                    &mut msg,
+                )?,
             }
             cur = msg;
         }
@@ -653,12 +672,26 @@ impl WorkerExchange for RingWorker {
                 *a += *v;
             }
             // Requantize the partial sum, recycling the received buffer.
-            // Each (hop, section) pair keeps its own EF residual.
+            // Each (hop, section) pair keeps its own EF residual; on
+            // budgeted rounds the widths come from the incoming frame.
+            let has_w = codec::capture_widths(&msg[body..], &mut self.wscratch)?;
+            let widths = has_w.then_some(&self.wscratch[..]);
             match self.hop_ef.get_mut(k * nsec + section) {
-                Some(ef) => {
-                    self.codec.encode_ef_into(ef, &self.chunk, &mut self.rng, &mut self.qg, &mut msg)
-                }
-                None => self.codec.encode_into(&self.chunk, &mut self.rng, &mut self.qg, &mut msg),
+                Some(ef) => self.codec.encode_matched_ef_into(
+                    widths,
+                    ef,
+                    &self.chunk,
+                    &mut self.rng,
+                    &mut self.qg,
+                    &mut msg,
+                )?,
+                None => self.codec.encode_matched_into(
+                    widths,
+                    &self.chunk,
+                    &mut self.rng,
+                    &mut self.qg,
+                    &mut msg,
+                )?,
             }
             cur = msg;
         }

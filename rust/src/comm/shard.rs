@@ -220,6 +220,71 @@ pub fn split_section_payload(payload: &[u8]) -> Result<(f64, &[u8])> {
 }
 
 // --------------------------------------------------------------------
+// Byte-budget framing overhead
+// --------------------------------------------------------------------
+
+/// Upper bound on the *framing* bytes a single full-gradient uplink
+/// stream pays beyond one flat codec message, for the given topology and
+/// streaming mode — the amount the trainer subtracts from `byte_budget`
+/// before handing the remainder to the width allocator
+/// ([`crate::quant::budget::allocate_widths`]), so the wire spend
+/// *including every header* stays ≤ the configured budget.
+///
+/// A width-table message that is cut into `k` bucket-aligned pieces
+/// (shard slices, ring chunks, streamed section frames) repeats the
+/// codec header `k − 1` extra times; the per-bucket width sub-tables
+/// concatenate to exactly the flat table, so they cost nothing extra.
+/// Framed pieces additionally pay the versioned frame header and — for
+/// [`FrameKind::Section`] — the readiness stamp. Pieces per stream:
+///
+/// * `ps` — flat: 1; streamed: one section frame per section;
+/// * `sharded-ps` — one slice per shard, ×sections when streamed;
+/// * `ring` — one requantized chunk per reduce-scatter hop
+///   (`workers − 1`), ×sections when streamed;
+/// * `hier` — intra-ring hops (`m − 1` for group size `m = workers /
+///   groups`) plus the member→leader gather and the leader's star
+///   uplink, ×sections for the hop-0 frames when streamed.
+///
+/// The bound is conservative (some hops ship fewer bytes than the full
+/// stream share); budgeted runs may therefore undershoot, never
+/// overshoot.
+pub fn budget_frame_overhead(
+    topology: super::Topology,
+    workers: usize,
+    groups: usize,
+    shards: usize,
+    sections: Option<usize>,
+    scheme: &str,
+) -> usize {
+    use super::Topology;
+    let hdr = crate::codec::header_bytes(scheme);
+    let streamed = sections.is_some();
+    let nsec = sections.unwrap_or(1).max(1);
+    // Charge every counted frame the stamped size even where the stamp
+    // is absent (sharded Upload frames) — conservative by design.
+    let frame = FRAME_HEADER_BYTES + SECTION_STAMP_BYTES;
+    let (pieces, frames) = match topology {
+        Topology::Ps => (nsec, if streamed { nsec } else { 0 }),
+        Topology::ShardedPs => {
+            let k = nsec * shards.max(1);
+            (k, k)
+        }
+        Topology::Ring => {
+            let hops = workers.saturating_sub(1).max(1);
+            (nsec * hops, if streamed { nsec } else { 0 })
+        }
+        Topology::Hier => {
+            let m = (workers / groups.max(1)).max(1);
+            // hop-0 pieces (sections when streamed) + remaining intra
+            // hops + member→leader gather + leader star uplink
+            let hop0 = if streamed { nsec } else { 1 };
+            (hop0 + m.saturating_sub(2) + 2, if streamed { nsec } else { 0 })
+        }
+    };
+    pieces.saturating_sub(1) * hdr + frames * frame
+}
+
+// --------------------------------------------------------------------
 // Staleness accounting
 // --------------------------------------------------------------------
 
@@ -322,6 +387,39 @@ pub fn async_time(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// The budget overhead bound: exact hand-computed values for the flat
+    /// cases and the streamed ≥ flat / more-pieces-costs-more shape.
+    #[test]
+    fn budget_overhead_bound_shapes() {
+        use super::super::Topology;
+        let hdr = crate::codec::header_bytes("orq-8"); // 20 + 5
+        let frame = FRAME_HEADER_BYTES + SECTION_STAMP_BYTES;
+        // flat PS: one message, no extra framing at all
+        assert_eq!(budget_frame_overhead(Topology::Ps, 8, 1, 1, None, "orq-8"), 0);
+        // flat ring with L workers: L − 1 pieces
+        assert_eq!(
+            budget_frame_overhead(Topology::Ring, 4, 1, 1, None, "orq-8"),
+            2 * hdr
+        );
+        // flat sharded-ps: S framed slices
+        assert_eq!(
+            budget_frame_overhead(Topology::ShardedPs, 8, 1, 3, None, "orq-8"),
+            2 * hdr + 3 * frame
+        );
+        // flat hier, 8 workers in 2 groups (m = 4): 1 + 2 + 2 pieces
+        assert_eq!(
+            budget_frame_overhead(Topology::Hier, 8, 2, 1, None, "orq-8"),
+            4 * hdr
+        );
+        for topo in [Topology::Ps, Topology::Ring, Topology::Hier, Topology::ShardedPs] {
+            let flat = budget_frame_overhead(topo, 8, 2, 2, None, "orq-8");
+            let streamed = budget_frame_overhead(topo, 8, 2, 2, Some(4), "orq-8");
+            assert!(streamed >= flat, "{topo}: streaming adds framing, never removes it");
+            let more = budget_frame_overhead(topo, 8, 2, 2, Some(8), "orq-8");
+            assert!(more >= streamed, "{topo}: more sections, more framing");
+        }
+    }
 
     #[test]
     fn shard_ranges_cover_and_align() {

@@ -300,6 +300,24 @@ pub struct TrainConfig {
     /// to its serial replay, but not bit-identical to flat). Requires a
     /// synchronous exchange (`staleness = 0`).
     pub stream_sections: bool,
+    /// Per-round uplink byte budget (`byte_budget = BYTES`,
+    /// `--byte-budget BYTES`): every worker's full-gradient uplink —
+    /// all headers and frames included — must fit in this many bytes
+    /// per round. The budget allocator
+    /// ([`crate::quant::budget::allocate_widths`]) re-spends the
+    /// method's bit width per bucket each round, minimizing total
+    /// quantization variance; the chosen widths ride in-band in the
+    /// wire header so every hop decodes them from the frame. Needs a
+    /// parameterizable method (`orq-S` / `qsgd-S` / `linear-S`).
+    /// `None` = fixed-width (bit-identical to the pre-budget encoder).
+    pub byte_budget: Option<u64>,
+    /// Budget ramp schedule (`budget_schedule = "coarse-to-fine"`,
+    /// `--budget-schedule coarse-to-fine`): spend half the budget in
+    /// round 0 and ramp linearly to the full budget by round
+    /// [`crate::quant::budget::COARSE_TO_FINE_RAMP`]. Requires
+    /// `byte_budget`; the per-round spend never exceeds the configured
+    /// budget.
+    pub budget_schedule: Option<String>,
     /// Run-wide tracing level (`trace_level = "off" | "round" | "fine"`,
     /// `--trace-level`): `off` (default) records nothing and leaves the
     /// hot path at one relaxed atomic load per site; `round` records the
@@ -343,6 +361,8 @@ impl Default for TrainConfig {
             overlap: false,
             sections: None,
             stream_sections: false,
+            byte_budget: None,
+            budget_schedule: None,
             trace_level: crate::obs::TraceLevel::Off,
             links: LinkConfig::default(),
         }
@@ -392,6 +412,24 @@ impl TrainConfig {
                 .as_i64()
                 .ok_or_else(|| Error::Config("bad type for sections".into()))?;
             c.sections = Some(s as usize);
+        }
+        if let Some(v) = get("byte_budget") {
+            let b = v
+                .as_i64()
+                .ok_or_else(|| Error::Config("bad type for byte_budget".into()))?;
+            // Bounds-check before the u64 cast: a negative budget would
+            // wrap to an absurd byte count and silently disable the cap.
+            if b <= 0 {
+                return Err(Error::Config(format!("byte_budget ({b}) must be >= 1")));
+            }
+            c.byte_budget = Some(b as u64);
+        }
+        if let Some(v) = get("budget_schedule") {
+            c.budget_schedule = Some(
+                v.as_str()
+                    .ok_or_else(|| Error::Config("budget_schedule must be a string".into()))?
+                    .to_string(),
+            );
         }
         macro_rules! set_link {
             ($field:ident, $name:expr) => {
@@ -612,6 +650,30 @@ impl TrainConfig {
                  ({}) lets workers run ahead (drop one of the two)",
                 self.staleness
             )));
+        }
+        if let Some(b) = self.byte_budget {
+            if b == 0 {
+                return Err(Error::Config("byte_budget must be >= 1".into()));
+            }
+            if crate::quant::budget::parse_family(&self.method).is_none() {
+                return Err(Error::Config(format!(
+                    "byte_budget re-spends the method's bit width per bucket; \
+                     method = \"{}\" cannot vary its level count (pick a \
+                     parameterizable scheme: orq-S, qsgd-S or linear-S)",
+                    self.method
+                )));
+            }
+        }
+        if let Some(s) = &self.budget_schedule {
+            crate::quant::budget::BudgetSchedule::parse(s)?;
+            if self.byte_budget.is_none() {
+                return Err(Error::Config(
+                    "budget_schedule shapes the byte-budget ramp and would be \
+                     silently ignored without a budget — add byte_budget = BYTES \
+                     (--byte-budget) or drop it"
+                        .into(),
+                ));
+            }
         }
         if self.overlap && self.method == "fp" {
             return Err(Error::Config(
@@ -877,6 +939,66 @@ mod tests {
             ..TrainConfig::default()
         };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn byte_budget_keys_parse_and_validate() {
+        let d = TrainConfig::default();
+        assert_eq!(d.byte_budget, None, "fixed-width is the default");
+        assert_eq!(d.budget_schedule, None);
+        let c = TrainConfig::from_map(
+            &parse(
+                "[train]\nmethod = \"orq-8\"\nbyte_budget = 4096\n\
+                 budget_schedule = \"coarse-to-fine\"",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.byte_budget, Some(4096));
+        assert_eq!(c.budget_schedule.as_deref(), Some("coarse-to-fine"));
+        let rejects = |toml: &str| TrainConfig::from_map(&parse(toml).unwrap()).is_err();
+        // wrong value types are errors, not silent defaults
+        assert!(rejects("[train]\nmethod = \"orq-8\"\nbyte_budget = \"lots\""));
+        assert!(rejects("[train]\nmethod = \"orq-8\"\nbudget_schedule = 3"));
+        // zero and wrapped negatives are rejected before the u64 cast
+        assert!(rejects("[train]\nmethod = \"orq-8\"\nbyte_budget = 0"));
+        assert!(rejects("[train]\nmethod = \"orq-8\"\nbyte_budget = -4096"));
+        // the budget re-spends bit widths: fixed-level schemes reject
+        let err = TrainConfig::from_map(
+            &parse("[train]\nmethod = \"terngrad\"\nbyte_budget = 4096").unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("parameterizable"), "{err}");
+        let err = TrainConfig::from_map(
+            &parse("[train]\nmethod = \"fp\"\nbyte_budget = 4096").unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("orq-S"), "{err}");
+        // a schedule without a budget would be silently ignored — reject
+        let err = TrainConfig::from_map(
+            &parse("[train]\nmethod = \"orq-8\"\nbudget_schedule = \"coarse-to-fine\"")
+                .unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("byte_budget"), "{err}");
+        // unknown schedule names name the supported set
+        let err = TrainConfig::from_map(
+            &parse(
+                "[train]\nmethod = \"orq-8\"\nbyte_budget = 4096\n\
+                 budget_schedule = \"fine-to-coarse\"",
+            )
+            .unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("coarse-to-fine"), "{err}");
+        // budgets compose with EF, overlap and every topology at the
+        // config layer — spot-check the overlap + streaming combination
+        let ok = parse(
+            "[train]\nworkers = 2\nbatch = 64\nmethod = \"qsgd-8\"\n\
+             byte_budget = 8192\nstream_sections = true\nthreads = 2",
+        )
+        .unwrap();
+        assert!(TrainConfig::from_map(&ok).is_ok());
     }
 
     #[test]

@@ -70,8 +70,8 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use crate::codec::{self, Packing};
 use crate::comm::link::{Link, LinkMap};
 use crate::comm::{
-    build_topology, CommStats, ExchangeConfig, GradCodec, OverlapEncoder, PoolMode, SectionMap,
-    Topology, WireSpec, SIM_BACKWARD_RATE,
+    budget_frame_overhead, build_topology, CommStats, ExchangeConfig, GradCodec, OverlapEncoder,
+    PoolMode, SectionMap, Topology, WireSpec, SIM_BACKWARD_RATE,
 };
 use crate::quant::pool::PoolHandle;
 use crate::config::TrainConfig;
@@ -243,6 +243,39 @@ impl<'a> Trainer<'a> {
                 )));
             }
         }
+        // The framing overhead a budgeted uplink pays beyond one flat
+        // codec message on this topology (repeated headers on shard
+        // slices / ring chunks / hier hops, section frames when
+        // streaming). The allocator sees the budget net of this bound,
+        // so the wire spend *including every header* stays ≤ the cap.
+        let budget_overhead = budget_frame_overhead(
+            cfg.topology,
+            l,
+            cfg.groups,
+            cfg.shards,
+            cfg.stream_sections.then(|| cfg.effective_sections()),
+            &cfg.method,
+        );
+        if let Some(b) = cfg.byte_budget {
+            // Fail early with an actionable message: the cheapest
+            // possible round (every bucket at 2 levels) must fit.
+            let floor = quant::budget::min_message_bytes(
+                param_count,
+                cfg.bucket_size,
+                Packing::BaseS,
+                &cfg.method,
+            );
+            if (b as usize) < floor + budget_overhead {
+                return Err(Error::Config(format!(
+                    "byte_budget ({b}) cannot cover the cheapest possible round: \
+                     {param_count} params at bucket_size {} need {floor} bytes even \
+                     at the 2-level floor, plus {budget_overhead} framing bytes on \
+                     this topology — raise --byte-budget to at least {}",
+                    cfg.bucket_size,
+                    floor + budget_overhead
+                )));
+            }
+        }
         let (mut coll, worker_ends) = build_topology(&xcfg, l, &spec)?;
         let (report_tx, report_rx): (Sender<WorkerReport>, Receiver<WorkerReport>) = channel();
         if classes < self.ds.spec.classes {
@@ -280,6 +313,20 @@ impl<'a> Trainer<'a> {
                     // the collective uses — a single quantize+encode path
                     // (parallel across buckets when cfg.threads != 1).
                     let mut gc = GradCodec::new(&spec).expect("validated");
+                    // Arm the adaptive byte budget: per-round width
+                    // tables minimize quantization variance under the
+                    // configured uplink cap net of framing overhead
+                    // (validated against the 2-level floor above).
+                    if let Some(b) = cfg.byte_budget {
+                        let sched = cfg
+                            .budget_schedule
+                            .as_deref()
+                            .map(quant::budget::BudgetSchedule::parse)
+                            .transpose()
+                            .expect("validated");
+                        gc.set_budget(b as usize - budget_overhead, sched)
+                            .expect("validated");
+                    }
                     let mut params = backend.init_params(&mut Rng::seed_from(cfg.seed));
                     let mut opt =
                         SgdMomentum::new(params.len(), cfg.momentum, cfg.weight_decay);
@@ -343,6 +390,12 @@ impl<'a> Trainer<'a> {
                         let loss = match &mut overlap {
                             Some(ov) => {
                                 let n = grad.len();
+                                // Hand the round's width table (if a
+                                // budget is armed) to the overlap
+                                // encoder; `None` keeps the fixed-width
+                                // encode bit-identical to PR 9.
+                                ov.set_widths(gc.round_widths(n))
+                                    .expect("table matches the bucket grid");
                                 let memory = ef.as_mut().map(|e| e.residual(n));
                                 match &ready_at {
                                     Some(ready) => {
@@ -428,15 +481,16 @@ impl<'a> Trainer<'a> {
                             // the same numbers as the flat branches below.
                             let e = quant::error::measure_flat(&grad, &deq);
                             (e.rel_mse, e.cosine)
-                        } else if gc.is_parallel() {
-                            // The pipeline never materializes `qg`;
-                            // measure via the wire bytes instead
+                        } else if gc.is_parallel() || gc.has_budget() {
+                            // The pipeline — and the serial budgeted
+                            // encode — never materialize `qg`; measure
+                            // via the wire bytes instead
                             // (decode(encode(g)) == dequantize exactly).
-                            // With EF the pipeline already decoded its
+                            // With EF the codec already decoded its
                             // own message for the residual — reuse that
                             // buffer instead of decoding twice.
                             let e = if ef.is_some() {
-                                let d = gc.ef_dequant().expect("parallel codec has a pipeline");
+                                let d = gc.ef_dequant().expect("EF codec keeps its dequant");
                                 quant::error::measure_flat(&grad, d)
                             } else {
                                 gc.decode_flat_into(&msg, &mut deq)
@@ -470,6 +524,12 @@ impl<'a> Trainer<'a> {
                         if exchanged.is_err() {
                             return; // ditto — avoid deadlocking the scope
                         }
+                        // Feed the decoded mean back into the budget
+                        // allocator: the mean is bit-identical on every
+                        // node, so every node derives the identical
+                        // width table for the next round with zero
+                        // coordination (a no-op without a budget).
+                        gc.observe_mean(&mean);
                         if on {
                             rec.begin(track, "apply");
                         }
@@ -702,6 +762,8 @@ mod tests {
             overlap: false,
             sections: None,
             stream_sections: false,
+            byte_budget: None,
+            budget_schedule: None,
             trace_level: crate::obs::TraceLevel::Off,
             links: LinkConfig::default(),
         }

@@ -71,6 +71,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         "clip", "backend", "artifacts", "out", "seed", "lr", "eval-every", "topology",
         "groups", "shards", "staleness", "error-feedback", "quantize-downlink",
         "threads", "pool", "overlap", "sections", "stream-sections",
+        "byte-budget", "budget-schedule",
         "trace", "trace-level",
         "intra-bandwidth", "intra-latency", "inter-bandwidth", "inter-latency",
     ])?;
@@ -150,6 +151,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     if args.flag("stream-sections") {
         cfg.stream_sections = true;
         cfg.overlap = true; // same implication as `stream_sections = true` in a config file
+    }
+    if let Some(b) = args.get_parse::<u64>("byte-budget")? {
+        if b == 0 {
+            return Err(Error::Config("--byte-budget must be >= 1".into()));
+        }
+        cfg.byte_budget = Some(b);
+    }
+    if let Some(s) = args.get("budget-schedule") {
+        cfg.budget_schedule = Some(s.to_string());
     }
     if let Some(b) = args.get_parse::<f64>("intra-bandwidth")? {
         cfg.links.intra_bandwidth = b;

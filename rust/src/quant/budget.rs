@@ -1,0 +1,330 @@
+//! Adaptive per-round bit allocation under a byte budget.
+//!
+//! The paper's level solvers recompute optimal *levels* per bucket each
+//! round, but the *width* (level count s) is static for the whole run.
+//! DQ-SGD and ALQ/AMQ (PAPERS.md) show the rate itself should be
+//! dynamic: given per-bucket second-moment statistics, choose each
+//! bucket's width to minimize total quantization variance subject to a
+//! per-round uplink byte budget.
+//!
+//! For an s-level quantizer over a bucket with second moment
+//! `E = Σ v²`, the rounding variance scales like `E / (s − 1)²` (the
+//! uniform-grid bound of paper Eq. (7); exact constants differ per
+//! scheme but the *ratio* between widths is what drives allocation).
+//! [`allocate_widths`] therefore runs a greedy water-filling ascent:
+//! start every bucket at the 2-level floor, repeatedly upgrade the
+//! bucket with the best variance-reduction-per-byte, stop when the
+//! budget is spent. Ties break by `f64::total_cmp` on the gain and then
+//! by *lower bucket index first* — fully deterministic, so every node
+//! (and every thread count) derives the identical table from identical
+//! statistics.
+//!
+//! The byte costs come straight from the codec's cost model
+//! ([`codec::per_bucket_bytes`], [`codec::wire_size_widths`]), with the
+//! message header and the in-band width table itself counted — the
+//! budget is respected *exactly*, headers included. The chosen widths
+//! travel in-band as the codec's width table
+//! ([`codec::encode_quantized_header_widths_into`]), so downstream
+//! decoders and re-encoding hops read them from the frame instead of
+//! re-deriving them.
+//!
+//! [`scheduled_budget`] implements the optional `coarse-to-fine`
+//! schedule: rounds start at half the configured budget and ramp
+//! linearly to the full budget by round [`COARSE_TO_FINE_RAMP`] (coarse
+//! early when gradients are large and noisy, fine late — the DQ-SGD
+//! trajectory).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::codec::{self, Packing};
+use crate::error::{Error, Result};
+
+/// Minimum per-bucket width: 2 levels (1 bit + table) is the coarsest
+/// representable quantized bucket.
+pub const MIN_WIDTH: usize = 2;
+
+/// Rounds over which the `coarse-to-fine` schedule ramps from half to
+/// the full budget.
+pub const COARSE_TO_FINE_RAMP: u64 = 64;
+
+/// Time-varying budget schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BudgetSchedule {
+    /// Half the budget at round 0, linear ramp to the full budget by
+    /// round [`COARSE_TO_FINE_RAMP`], constant after.
+    CoarseToFine,
+}
+
+impl BudgetSchedule {
+    pub fn parse(name: &str) -> Result<BudgetSchedule> {
+        match name {
+            "coarse-to-fine" => Ok(BudgetSchedule::CoarseToFine),
+            _ => Err(Error::Config(format!(
+                "unknown budget schedule {name:?} (supported: coarse-to-fine)"
+            ))),
+        }
+    }
+}
+
+/// The budget in effect at `round` under an optional schedule. Never
+/// exceeds `budget`, so scheduled rounds still respect the configured
+/// ceiling.
+pub fn scheduled_budget(budget: usize, schedule: Option<BudgetSchedule>, round: u64) -> usize {
+    match schedule {
+        None => budget,
+        Some(BudgetSchedule::CoarseToFine) => {
+            let half = budget / 2;
+            let t = round.min(COARSE_TO_FINE_RAMP);
+            half + ((budget - half) as u64 * t / COARSE_TO_FINE_RAMP) as usize
+        }
+    }
+}
+
+/// The parameterizable scheme family of `method` — `orq-S`, `qsgd-S` or
+/// `linear-S` → `Some((family, s))`, anything else (fixed-level schemes,
+/// `fp`) → `None`. Only these families can vary their per-bucket level
+/// count, so only they support a byte budget or width-table re-encodes.
+pub fn parse_family(method: &str) -> Option<(&str, usize)> {
+    let (family, s) = method.rsplit_once('-')?;
+    if !matches!(family, "orq" | "qsgd" | "linear") {
+        return None;
+    }
+    s.parse::<usize>().ok().filter(|s| (2..=255).contains(s)).map(|s| (family, s))
+}
+
+/// Wire bytes of the *smallest* width message for a gradient of `total`
+/// elements: every bucket at the 2-level floor, header and width table
+/// included. Budgets below this are unsatisfiable — config validation
+/// rejects them with this figure in the message.
+pub fn min_message_bytes(total: usize, bucket: usize, packing: Packing, scheme: &str) -> usize {
+    let widths = vec![MIN_WIDTH as u8; total.div_ceil(bucket.max(1))];
+    codec::wire_size_widths(total, bucket, &widths, packing, scheme)
+}
+
+/// One pending upgrade in the greedy ascent: bucket `idx` from width `w`
+/// to `w + 1`, buying `gain` variance reduction per byte. Max-heap
+/// ordered by gain, ties to the lower bucket index — deterministic.
+struct Upgrade {
+    gain: f64,
+    idx: usize,
+    w: usize,
+    delta: usize,
+}
+
+impl Ord for Upgrade {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.gain.total_cmp(&other.gain).then_with(|| other.idx.cmp(&self.idx))
+    }
+}
+impl PartialOrd for Upgrade {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl PartialEq for Upgrade {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Upgrade {}
+
+/// Variance model `E / (s − 1)²` for a bucket with second moment `e`.
+fn var_at(e: f64, s: usize) -> f64 {
+    e / (((s - 1) * (s - 1)) as f64)
+}
+
+/// Choose per-bucket widths for a gradient of `total` elements in
+/// buckets of `bucket`, minimizing Σ statsᵢ/(sᵢ−1)² subject to
+/// `wire_size_widths(..) ≤ budget_bytes` with widths in
+/// `[`[`MIN_WIDTH`]`, s_max]`.
+///
+/// `stats[i]` is bucket i's second moment (Σ v² over its elements) —
+/// any deterministic, node-identical statistic works; the trainer feeds
+/// the previous round's *decoded mean* so every node derives the same
+/// table with zero extra coordination (round 0 uses uniform statistics).
+///
+/// Greedy water-filling: all buckets start at the [`MIN_WIDTH`] floor;
+/// each step upgrades the affordable bucket with the highest variance
+/// reduction per byte (ties → lower index). Unaffordable upgrades are
+/// skipped, not terminal: a cheaper upgrade elsewhere may still fit.
+/// If even the floor exceeds the budget the floor table is returned —
+/// callers validate against [`min_message_bytes`] up front.
+pub fn allocate_widths(
+    stats: &[f64],
+    total: usize,
+    bucket: usize,
+    s_max: usize,
+    budget_bytes: usize,
+    packing: Packing,
+    scheme: &str,
+) -> Vec<u8> {
+    let nb = total.div_ceil(bucket.max(1));
+    debug_assert_eq!(stats.len(), nb, "one statistic per bucket");
+    debug_assert!((MIN_WIDTH..=255).contains(&s_max));
+    let mut widths = vec![MIN_WIDTH as u8; nb];
+    if nb == 0 || s_max == MIN_WIDTH {
+        return widths;
+    }
+    let blen =
+        |bi: usize| if bi + 1 == nb { codec_tail_len(total, bucket) } else { bucket };
+    let mut spent = min_message_bytes(total, bucket, packing, scheme);
+    let upgrade = |idx: usize, w: usize| -> Upgrade {
+        let e = stats.get(idx).copied().unwrap_or(0.0).max(0.0);
+        let delta = codec::per_bucket_bytes(blen(idx), w + 1, packing)
+            - codec::per_bucket_bytes(blen(idx), w, packing);
+        // Δbytes ≥ 4 (one more f32 level) so the division is safe.
+        Upgrade { gain: (var_at(e, w) - var_at(e, w + 1)) / delta as f64, idx, w, delta }
+    };
+    let mut heap: BinaryHeap<Upgrade> = (0..nb).map(|i| upgrade(i, MIN_WIDTH)).collect();
+    while let Some(u) = heap.pop() {
+        if spent + u.delta <= budget_bytes {
+            spent += u.delta;
+            widths[u.idx] = (u.w + 1) as u8;
+            if u.w + 1 < s_max {
+                heap.push(upgrade(u.idx, u.w + 1));
+            }
+        }
+        // else: skip — later (cheaper) candidates may still fit.
+    }
+    debug_assert_eq!(spent, codec::wire_size_widths(total, bucket, &widths, packing, scheme));
+    widths
+}
+
+/// Length of the final (possibly ragged) bucket — mirrors the codec's
+/// tail rule so the byte accounting agrees bucket for bucket.
+fn codec_tail_len(total: usize, bucket: usize) -> usize {
+    if total % bucket == 0 {
+        bucket
+    } else {
+        total % bucket
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden values on hand-computed statistics (Fixed packing so the
+    /// byte deltas are easy to verify by hand).
+    ///
+    /// 3 buckets of 4 elements, scheme "orq-4" (5-byte name, header 25).
+    /// per_bucket_bytes(4, s, Fixed) = 4s + ceil(4·bits(s)/8):
+    ///   s=2 → 9, s=3 → 13, s=4 → 17  (Δ = 4 each step).
+    /// Base cost = header 25 + table 3 + 3×9 = 55.
+    /// stats = [9, 1, 0]; gain(w→w+1) = stats·(1/(w−1)² − 1/w²)/Δ:
+    ///   2→3: stats·0.75/4;  3→4: stats·(1/4 − 1/9)/4.
+    /// Upgrade order: b0→3 (1.6875), b0→4 (0.3125), b1→3 (0.1875),
+    /// b1→4, b2→3, b2→4 (zero-gain ties, lower index first).
+    #[test]
+    fn golden_allocation_hand_computed() {
+        let stats = [9.0, 1.0, 0.0];
+        let p = Packing::Fixed;
+        assert_eq!(min_message_bytes(12, 4, p, "orq-4"), 55);
+        // exactly the floor: no upgrades fit
+        assert_eq!(allocate_widths(&stats, 12, 4, 4, 55, p, "orq-4"), vec![2, 2, 2]);
+        // +4: one upgrade — the high-energy bucket
+        assert_eq!(allocate_widths(&stats, 12, 4, 4, 59, p, "orq-4"), vec![3, 2, 2]);
+        // +8: b0 climbs to 4 before b1 leaves the floor
+        assert_eq!(allocate_widths(&stats, 12, 4, 4, 63, p, "orq-4"), vec![4, 2, 2]);
+        // +12: then b1
+        assert_eq!(allocate_widths(&stats, 12, 4, 4, 67, p, "orq-4"), vec![4, 3, 2]);
+        // unconstrained: everything at s_max
+        assert_eq!(allocate_widths(&stats, 12, 4, 4, 10_000, p, "orq-4"), vec![4, 4, 4]);
+        // below the floor: floor returned (caller validates)
+        assert_eq!(allocate_widths(&stats, 12, 4, 4, 10, p, "orq-4"), vec![2, 2, 2]);
+        // slack smaller than any Δ is left unspent
+        assert_eq!(allocate_widths(&stats, 12, 4, 4, 58, p, "orq-4"), vec![2, 2, 2]);
+    }
+
+    /// Zero-gain ties (all-zero stats) must break toward lower bucket
+    /// indices, and identical inputs must always produce identical
+    /// tables — the determinism the cross-node contract rests on.
+    #[test]
+    fn deterministic_tie_breaking() {
+        let stats = [0.0; 4];
+        let p = Packing::Fixed;
+        let floor = min_message_bytes(16, 4, p, "orq-4");
+        // room for exactly two upgrades → buckets 0 and 1
+        let w = allocate_widths(&stats, 16, 4, 4, floor + 8, p, "orq-4");
+        assert_eq!(w, vec![3, 3, 2, 2]);
+        for _ in 0..10 {
+            assert_eq!(allocate_widths(&stats, 16, 4, 4, floor + 8, p, "orq-4"), w);
+        }
+        // NaN statistics must not poison the ordering (total_cmp sorts
+        // them deterministically; max(0.0) floors them out)
+        let w = allocate_widths(&[f64::NAN, 1.0, 0.0, 0.0], 16, 4, 4, floor + 8, p, "orq-4");
+        assert_eq!(w.len(), 4);
+        assert_eq!(w.iter().map(|&x| x as usize).sum::<usize>(), 2 * 4 + 2);
+    }
+
+    /// The allocator's spend equals the codec's closed-form size for the
+    /// chosen table and never exceeds the budget, across packings,
+    /// ragged tails, and budgets from the floor to beyond saturation.
+    #[test]
+    fn spend_never_exceeds_budget() {
+        let stats: Vec<f64> = (0..9).map(|i| ((i * 37) % 11) as f64).collect();
+        for packing in [Packing::Fixed, Packing::BaseS] {
+            let floor = min_message_bytes(1100, 128, packing, "qsgd-8");
+            let max = {
+                let w = vec![8u8; 9];
+                codec::wire_size_widths(1100, 128, &w, packing, "qsgd-8")
+            };
+            for budget in
+                [floor, floor + 1, floor + 13, (floor + max) / 2, max - 1, max, max + 100]
+            {
+                let w = allocate_widths(&stats, 1100, 128, 8, budget, packing, "qsgd-8");
+                let spend = codec::wire_size_widths(1100, 128, &w, packing, "qsgd-8");
+                assert!(
+                    spend <= budget,
+                    "{packing:?} budget {budget}: spent {spend}"
+                );
+                assert!(w.iter().all(|&x| (2..=8).contains(&x)), "{packing:?}");
+                if budget >= max {
+                    assert_eq!(w, vec![8u8; 9], "{packing:?} saturates at s_max");
+                }
+            }
+        }
+    }
+
+    /// More budget can only help: total modeled variance is
+    /// non-increasing and spend non-decreasing in the budget — the
+    /// monotonicity perfbench's Pareto section asserts end-to-end.
+    #[test]
+    fn variance_monotone_in_budget() {
+        let stats: Vec<f64> = (0..16).map(|i| (1.0 + i as f64).powi(2)).collect();
+        let p = Packing::BaseS;
+        let total = 16 * 64;
+        let var = |w: &[u8]| -> f64 {
+            w.iter().zip(&stats).map(|(&s, &e)| var_at(e, s as usize)).sum()
+        };
+        let floor = min_message_bytes(total, 64, p, "orq-16");
+        let mut last_var = f64::INFINITY;
+        let mut last_spend = 0usize;
+        for step in 0..12 {
+            let budget = floor + step * 40;
+            let w = allocate_widths(&stats, total, 64, 16, budget, p, "orq-16");
+            let v = var(&w);
+            let spend = codec::wire_size_widths(total, 64, &w, p, "orq-16");
+            assert!(v <= last_var, "variance rose with budget at step {step}");
+            assert!(spend >= last_spend, "spend shrank with budget at step {step}");
+            last_var = v;
+            last_spend = spend;
+        }
+    }
+
+    #[test]
+    fn schedule_ramps_half_to_full() {
+        assert_eq!(scheduled_budget(1000, None, 0), 1000);
+        let s = Some(BudgetSchedule::CoarseToFine);
+        assert_eq!(scheduled_budget(1000, s, 0), 500);
+        assert_eq!(scheduled_budget(1000, s, COARSE_TO_FINE_RAMP / 2), 750);
+        assert_eq!(scheduled_budget(1000, s, COARSE_TO_FINE_RAMP), 1000);
+        assert_eq!(scheduled_budget(1000, s, COARSE_TO_FINE_RAMP * 10), 1000);
+        for t in 0..200 {
+            assert!(scheduled_budget(777, s, t) <= 777, "never exceeds the ceiling");
+        }
+        assert!(BudgetSchedule::parse("coarse-to-fine").is_ok());
+        assert!(BudgetSchedule::parse("fine-to-coarse").is_err());
+    }
+}

@@ -35,6 +35,7 @@
 
 pub mod bingrad;
 pub mod bucket;
+pub mod budget;
 pub mod clip;
 pub mod error;
 pub mod error_feedback;

@@ -223,6 +223,104 @@ impl BucketPipeline {
         }
     }
 
+    /// Width-table twin of [`Self::encode_into`] for the adaptive byte
+    /// budget: bucket `bi` is quantized by `bank[widths[bi] - 2]` (the
+    /// per-width quantizer bank, indexed `s − 2`) and serialized at its
+    /// own level count behind a [`codec::encode_quantized_header_widths_into`]
+    /// header. The shard grid, per-bucket RNG streams, and segment
+    /// concatenation are identical to the uniform path, so the wire
+    /// bytes stay invariant across thread counts and execution modes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn encode_widths_into(
+        &mut self,
+        bq: &BucketQuantizer,
+        bank: &[Box<dyn Quantizer>],
+        widths: &[u8],
+        g: &[f32],
+        round_key: u64,
+        scheme: &str,
+        packing: Packing,
+        out: &mut Vec<u8>,
+    ) {
+        let nb = bq.num_buckets(g.len());
+        debug_assert_eq!(widths.len(), nb, "one width per bucket");
+        out.clear();
+        if nb == 0 {
+            // An empty gradient cannot carry a width table (the format
+            // forbids it); emit the uniform floor-width framing instead.
+            codec::encode_quantized_header_into(2, scheme, packing, 0, bq.bucket_size, out);
+            return;
+        }
+        codec::encode_quantized_header_widths_into(
+            widths,
+            scheme,
+            packing,
+            g.len(),
+            bq.bucket_size,
+            out,
+        );
+        let k = self.threads.min(nb);
+        self.ensure_shards(k);
+        if k == 1 {
+            let shard = &mut self.shards[0];
+            encode_widths_shard(bq, bank, widths, g, round_key, 0..nb, packing, shard);
+            out.extend_from_slice(&shard.seg);
+            return;
+        }
+        let shards = &mut self.shards[..k];
+        match &self.pool {
+            Some(pool) => pool
+                .scope(|sc| {
+                    for (i, shard) in shards.iter_mut().enumerate() {
+                        let range = shard_range(nb, k, i);
+                        sc.spawn(move || {
+                            encode_widths_shard(
+                                bq, bank, widths, g, round_key, range, packing, shard,
+                            )
+                        });
+                    }
+                })
+                .unwrap_or_else(|e| panic!("parallel width encode failed: {e}")),
+            None => thread::scope(|scope| {
+                for (i, shard) in shards.iter_mut().enumerate() {
+                    let range = shard_range(nb, k, i);
+                    scope.spawn(move || {
+                        encode_widths_shard(bq, bank, widths, g, round_key, range, packing, shard)
+                    });
+                }
+            }),
+        }
+        for shard in &self.shards[..k] {
+            out.extend_from_slice(&shard.seg);
+        }
+    }
+
+    /// Error-feedback twin of [`Self::encode_widths_into`]: quantize the
+    /// compensated signal `g + m` at the budgeted per-bucket widths and
+    /// recover the residual through the width-aware wire decode.
+    #[allow(clippy::too_many_arguments)]
+    pub fn encode_widths_ef_into(
+        &mut self,
+        bq: &BucketQuantizer,
+        bank: &[Box<dyn Quantizer>],
+        widths: &[u8],
+        ef: &mut ErrorFeedback,
+        g: &[f32],
+        round_key: u64,
+        scheme: &str,
+        packing: Packing,
+        out: &mut Vec<u8>,
+    ) {
+        {
+            let comp = ef.compensate(g);
+            self.encode_widths_into(bq, bank, widths, comp, round_key, scheme, packing, out);
+        }
+        let mut deq = std::mem::take(&mut self.ef_deq);
+        self.decode_flat_into(out, &mut deq).expect("own encoding always decodes");
+        ef.update_residual(&deq);
+        self.ef_deq = deq;
+    }
+
     /// The error-feedback twin of [`Self::encode_into`]: quantize and
     /// encode the compensated signal `g + m` (sharded exactly like the
     /// plain path, so the wire bytes stay thread-count invariant), then
@@ -427,6 +525,32 @@ fn encode_shard(
         let hi = (lo + d).min(g.len());
         bq.quantize_bucket_stream(&g[lo..hi], bi, q, round_key, &mut shard.clip, &mut shard.qb);
         enc.encode_bucket_into(&shard.qb, &mut shard.seg);
+    }
+}
+
+/// Width-table variant of [`encode_shard`]: each bucket picks its
+/// quantizer out of the per-width bank and its own [`BucketEncoder`].
+#[allow(clippy::too_many_arguments)]
+fn encode_widths_shard(
+    bq: &BucketQuantizer,
+    bank: &[Box<dyn Quantizer>],
+    widths: &[u8],
+    g: &[f32],
+    round_key: u64,
+    buckets: Range<usize>,
+    packing: Packing,
+    shard: &mut Shard,
+) {
+    shard.seg.clear();
+    let d = bq.bucket_size;
+    for bi in buckets {
+        let lo = bi * d;
+        let hi = (lo + d).min(g.len());
+        let w = widths[bi] as usize;
+        let q = bank[w - 2].as_ref();
+        bq.quantize_bucket_stream(&g[lo..hi], bi, q, round_key, &mut shard.clip, &mut shard.qb);
+        debug_assert_eq!(shard.qb.levels.len(), w, "bank[{w} - 2] must be a {w}-level scheme");
+        BucketEncoder::new(w, packing).encode_bucket_into(&shard.qb, &mut shard.seg);
     }
 }
 
@@ -677,6 +801,100 @@ mod tests {
                         assert_eq!(&r1, w1, "threads={threads} pooled={pooled}");
                         assert_eq!(&r2, w2, "threads={threads} pooled={pooled}");
                     }
+                }
+            }
+        }
+    }
+
+    /// Width-table encode: bit-identical across thread counts and
+    /// execution modes, and equal to the serial per-bucket reference
+    /// (quantize each bucket with its width's bank entry, then
+    /// [`codec::encode_widths_into`]).
+    #[test]
+    fn width_encode_bit_identical_across_threads_and_modes() {
+        let shared = PoolHandle::new(3);
+        for (n, d) in [(1500usize, 256usize), (255, 64), (100, 128)] {
+            let g = sample(n, n as u64 + 1);
+            let bq = BucketQuantizer::new(d);
+            let nb = bq.num_buckets(n);
+            let bank: Vec<Box<dyn Quantizer>> =
+                (2..=6).map(|s| from_name(&format!("orq-{s}")).unwrap()).collect();
+            let widths: Vec<u8> = (0..nb).map(|bi| 2 + (bi % 5) as u8).collect();
+            // serial reference through the allocating bucket API
+            let mut qg = QuantizedGrad {
+                bucket_size: d,
+                total_len: n,
+                buckets: Vec::new(),
+            };
+            let (mut clip, mut qb) = (Vec::new(), QuantizedBucket::default());
+            for (bi, &w) in widths.iter().enumerate() {
+                let lo = bi * d;
+                let hi = (lo + d).min(n);
+                let q = bank[w as usize - 2].as_ref();
+                bq.quantize_bucket_stream(&g[lo..hi], bi, q, 7, &mut clip, &mut qb);
+                qg.buckets.push(qb.clone());
+            }
+            for packing in [Packing::Fixed, Packing::BaseS] {
+                let mut want = Vec::new();
+                codec::encode_widths_into(&qg, "orq-6", packing, &mut want);
+                for threads in [1usize, 2, 3, 8] {
+                    for mut pipe in [
+                        BucketPipeline::new(threads),
+                        BucketPipeline::with_pool(threads, shared.clone()),
+                        BucketPipeline::scoped(threads),
+                    ] {
+                        let mut got = Vec::new();
+                        pipe.encode_widths_into(
+                            &bq, &bank, &widths, &g, 7, "orq-6", packing, &mut got,
+                        );
+                        assert_eq!(
+                            got, want,
+                            "n={n} d={d} {packing:?} threads={threads} pooled={}",
+                            pipe.is_pooled()
+                        );
+                        // and it round-trips through the width-aware decode
+                        let mut flat = Vec::new();
+                        pipe.decode_flat_into(&got, &mut flat).unwrap();
+                        assert_eq!(flat.len(), n);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Width-table error feedback: round 1 (zero residual) matches the
+    /// plain width encode, round 2 carries the residual, and both are
+    /// thread-count invariant.
+    #[test]
+    fn width_ef_matches_plain_on_first_round_and_is_invariant() {
+        let g = sample(1600, 17);
+        let bq = BucketQuantizer::new(256);
+        let nb = bq.num_buckets(g.len());
+        let bank: Vec<Box<dyn Quantizer>> =
+            (2..=4).map(|s| from_name(&format!("qsgd-{s}")).unwrap()).collect();
+        let widths: Vec<u8> = (0..nb).map(|bi| 2 + (bi % 3) as u8).collect();
+        let ps = Packing::BaseS;
+        let mut reference: Option<(Vec<u8>, Vec<u8>)> = None;
+        for threads in [1usize, 2, 3, 8] {
+            let mut pipe = BucketPipeline::new(threads);
+            let mut ef = ErrorFeedback::new(bq.clone());
+            let mut r1 = Vec::new();
+            pipe.encode_widths_ef_into(
+                &bq, &bank, &widths, &mut ef, &g, 1, "qsgd-4", ps, &mut r1,
+            );
+            let mut plain = Vec::new();
+            pipe.encode_widths_into(&bq, &bank, &widths, &g, 1, "qsgd-4", ps, &mut plain);
+            assert_eq!(r1, plain, "round 1 has zero residual (threads={threads})");
+            let mut r2 = Vec::new();
+            pipe.encode_widths_ef_into(
+                &bq, &bank, &widths, &mut ef, &g, 2, "qsgd-4", ps, &mut r2,
+            );
+            assert_ne!(r2, plain, "round 2 must quantize g + m");
+            match &reference {
+                None => reference = Some((r1, r2)),
+                Some((w1, w2)) => {
+                    assert_eq!(&r1, w1, "threads={threads}");
+                    assert_eq!(&r2, w2, "threads={threads}");
                 }
             }
         }

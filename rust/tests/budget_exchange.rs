@@ -1,0 +1,187 @@
+//! End-to-end byte-budget properties: with `byte_budget` set, every
+//! worker's per-round uplink — headers, frames and in-band width tables
+//! included — must stay within the budget on every topology, at every
+//! thread count, with and without error feedback, while the hop
+//! decoders read the widths from the frames themselves (a guessed
+//! width would fail the decode and the run). Without a budget the wire
+//! bytes must match the fixed-width closed form exactly.
+
+use orq::codec::{wire_size, wire_size_widths, Packing};
+use orq::comm::{budget_frame_overhead, Topology};
+use orq::config::TrainConfig;
+use orq::coordinator::trainer::{native_backend_factory, Trainer};
+use orq::data::synth::{ClassDataset, DatasetSpec};
+use orq::model::Backend;
+use orq::quant::budget::min_message_bytes;
+
+const MODEL: &str = "mlp:32-64-64-16";
+const METHOD: &str = "orq-5";
+const S_MAX: usize = 5;
+const BUCKET: usize = 256;
+
+fn ds() -> ClassDataset {
+    ClassDataset::generate(DatasetSpec {
+        in_dim: 32,
+        classes: 16,
+        train_n: 512,
+        test_n: 128,
+        margin: 3.0,
+        noise: 1.0,
+        label_noise: 0.02,
+        seed: 33,
+    })
+}
+
+fn cfg(topology: Topology) -> TrainConfig {
+    let (workers, groups, shards) = match topology {
+        Topology::Ps => (2, 1, 1),
+        Topology::Ring => (3, 1, 1),
+        Topology::Hier => (4, 2, 1),
+        Topology::ShardedPs => (2, 1, 2),
+    };
+    TrainConfig {
+        model: MODEL.into(),
+        dataset: "test".into(),
+        method: METHOD.into(),
+        workers,
+        groups,
+        shards,
+        batch: 32,
+        steps: 8,
+        lr: 0.05,
+        lr_decay_steps: vec![],
+        bucket_size: BUCKET,
+        seed: 11,
+        eval_every: 0,
+        topology,
+        ..TrainConfig::default()
+    }
+}
+
+fn param_count() -> usize {
+    native_backend_factory(MODEL).unwrap()(0).param_count()
+}
+
+/// A budget ~60% of the way from the all-width-2 floor to the full
+/// fixed-width cost, plus the topology's exact frame/header overhead —
+/// always accepted by the trainer, always forcing a real allocation.
+fn mid_budget(c: &TrainConfig, sections: Option<usize>) -> u64 {
+    let n = param_count();
+    let nb = n.div_ceil(c.bucket_size);
+    let full =
+        wire_size_widths(n, c.bucket_size, &vec![S_MAX as u8; nb], Packing::BaseS, METHOD);
+    let floor = min_message_bytes(n, c.bucket_size, Packing::BaseS, METHOD);
+    let overhead =
+        budget_frame_overhead(c.topology, c.workers, c.groups, c.shards, sections, METHOD);
+    (overhead + floor + (full - floor) * 3 / 5) as u64
+}
+
+/// Full-gradient uplink streams per round: every worker sends (at most)
+/// one budgeted gradient's worth of uplink traffic; on hier the group
+/// leaders additionally uplink the group mean to the root.
+fn uplink_streams(c: &TrainConfig) -> u64 {
+    match c.topology {
+        Topology::Hier => (c.workers + c.groups) as u64,
+        _ => c.workers as u64,
+    }
+}
+
+fn assert_budget_held(c: TrainConfig, data: &ClassDataset, label: &str) {
+    let b = c.byte_budget.expect("budget set");
+    let streams = uplink_streams(&c);
+    let factory = native_backend_factory(&c.model).unwrap();
+    let out = Trainer::new(c, data).unwrap().run(factory).unwrap();
+    for m in &out.series.steps {
+        assert!(m.wire_bytes_up > 0, "{label} step {}: no uplink bytes", m.step);
+        assert!(
+            m.wire_bytes_up <= streams * b,
+            "{label} step {}: uplink {} exceeds {streams} streams x budget {b}",
+            m.step,
+            m.wire_bytes_up
+        );
+    }
+    assert!(out.series.final_loss().is_finite(), "{label}: loss diverged");
+}
+
+/// The budget cap holds on every topology x thread count x error
+/// feedback: per-step uplink bytes (headers and width tables included)
+/// never exceed streams x budget.
+#[test]
+fn budget_bounds_uplink_on_every_topology() {
+    let data = ds();
+    for topology in [Topology::Ps, Topology::Ring, Topology::Hier, Topology::ShardedPs] {
+        for threads in [1usize, 2] {
+            for ef in [false, true] {
+                let mut c = cfg(topology);
+                c.threads = threads;
+                c.error_feedback = ef;
+                c.byte_budget = Some(mid_budget(&c, None));
+                let label = format!("{topology:?} threads={threads} ef={ef}");
+                assert_budget_held(c, &data, &label);
+            }
+        }
+    }
+}
+
+/// The cap composes with section streaming (frames and per-section
+/// sub-table headers all count against the budget) and with the
+/// coarse-to-fine schedule (which only ever spends less).
+#[test]
+fn budget_composes_with_streamed_sections_and_schedule() {
+    let data = ds();
+    for topology in [Topology::Ps, Topology::Ring, Topology::ShardedPs] {
+        let mut c = cfg(topology);
+        c.threads = 2;
+        c.overlap = true;
+        c.stream_sections = true;
+        c.sections = Some(2);
+        c.byte_budget = Some(mid_budget(&c, Some(2)));
+        c.budget_schedule = Some("coarse-to-fine".into());
+        let label = format!("{topology:?} streamed");
+        assert_budget_held(c, &data, &label);
+    }
+}
+
+/// Without a budget the uplink is the legacy fixed-width message — no
+/// width table, byte-exact against the closed-form wire size.
+#[test]
+fn no_budget_is_fixed_width() {
+    let data = ds();
+    let c = cfg(Topology::Ps);
+    let per_msg = wire_size(param_count(), BUCKET, S_MAX, Packing::BaseS, METHOD) as u64;
+    let workers = c.workers as u64;
+    let factory = native_backend_factory(&c.model).unwrap();
+    let out = Trainer::new(c, &data).unwrap().run(factory).unwrap();
+    for m in &out.series.steps {
+        assert_eq!(
+            m.wire_bytes_up,
+            workers * per_msg,
+            "step {}: fixed-width uplink must match the closed form",
+            m.step
+        );
+    }
+}
+
+/// A budget at (or above) the full fixed-width cost plus the table
+/// bytes upgrades every bucket to s_max — spending is capped by the
+/// budget yet loses nothing to the fixed-width run's volume.
+#[test]
+fn generous_budget_saturates_at_full_width() {
+    let data = ds();
+    let mut c = cfg(Topology::Ps);
+    let n = param_count();
+    let nb = n.div_ceil(BUCKET);
+    let full = wire_size_widths(n, BUCKET, &vec![S_MAX as u8; nb], Packing::BaseS, METHOD);
+    c.byte_budget = Some(2 * full as u64);
+    let workers = c.workers as u64;
+    let factory = native_backend_factory(&c.model).unwrap();
+    let out = Trainer::new(c, &data).unwrap().run(factory).unwrap();
+    for m in &out.series.steps {
+        assert_eq!(
+            m.wire_bytes_up,
+            workers * full as u64,
+            "step {}: a generous budget must saturate every bucket at s_max",
+            m.step
+        );
+    }
+}

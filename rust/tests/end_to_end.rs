@@ -48,6 +48,8 @@ fn cfg(method: &str) -> TrainConfig {
         overlap: false,
         sections: None,
         stream_sections: false,
+        byte_budget: None,
+        budget_schedule: None,
         trace_level: orq::obs::TraceLevel::Off,
         links: orq::config::LinkConfig::default(),
     }
